@@ -1,0 +1,63 @@
+//! Tour of the LPF collectives library (paper §6 mentions an LPF-based
+//! collectives library as one of the higher-level interfaces LPF is
+//! expressive enough to host).
+//!
+//! Run: `cargo run --release --example collectives_tour`
+
+use lpf::collectives::Coll;
+use lpf::core::{Args, SYNC_DEFAULT};
+use lpf::ctx::{exec, Platform, Root};
+
+fn main() {
+    let p = 4;
+    let root = Root::new(Platform::shared()).with_max_procs(p);
+    exec(
+        &root,
+        p,
+        |ctx, _| {
+            ctx.resize_memory_register(8).unwrap();
+            ctx.resize_message_queue(8 * ctx.p() as usize).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let coll = Coll::new(ctx, 1024).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let me = ctx.pid();
+
+            // broadcast
+            let mut data = if me == 0 { [314u64, 159] } else { [0; 2] };
+            coll.broadcast(ctx, 0, &mut data).unwrap();
+            assert_eq!(data, [314, 159]);
+
+            // allgather
+            let mut all = [0u32; 4];
+            coll.allgather(ctx, &[me * me], &mut all).unwrap();
+            assert_eq!(all, [0, 1, 4, 9]);
+
+            // allreduce (sum) and scan (prefix sum)
+            let mut sum = [0u64];
+            coll.allreduce(ctx, &[me as u64 + 1], &mut sum, |a, b| a + b).unwrap();
+            assert_eq!(sum[0], 10);
+            let mut pfx = [0u64];
+            coll.scan(ctx, &[me as u64 + 1], &mut pfx, |a, b| a + b).unwrap();
+            assert_eq!(pfx[0], (1..=me as u64 + 1).sum());
+
+            // alltoall (transpose)
+            let send: Vec<u32> = (0..4).map(|k| me * 10 + k).collect();
+            let mut recv = [0u32; 4];
+            coll.alltoall(ctx, &send, &mut recv).unwrap();
+            assert_eq!(recv.to_vec(), (0..4).map(|k| k * 10 + me).collect::<Vec<_>>());
+
+            if me == 0 {
+                println!("broadcast / allgather / allreduce / scan / alltoall: all OK on p={}", ctx.p());
+                let m = ctx.probe();
+                println!(
+                    "probe: p={} g={:.1} ns/word l={:.1} µs (word=8B)",
+                    m.p,
+                    m.at_word(8).g_ns,
+                    m.at_word(8).l_ns / 1e3
+                );
+            }
+        },
+        Args::none(),
+    )
+    .unwrap();
+}

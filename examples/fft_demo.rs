@@ -1,0 +1,108 @@
+//! The immortal FFT demo (paper §4.2): the Inda–Bisseling BSP FFT through
+//! the BSPlib-on-LPF layer, with process-local compute on PJRT artifacts
+//! when available (`make artifacts`), and verification against the serial
+//! oracle plus a comparison against both Fig.-3 baselines.
+//!
+//! Run: `cargo run --release --example fft_demo -- [log2_n] [p]`
+
+use lpf::bsplib::Bsp;
+use lpf::core::Args;
+use lpf::ctx::{exec, Platform, Root};
+use lpf::fft::baseline::{PortableFft, VendorFft};
+use lpf::fft::bsp::{Backend, BspFft};
+use lpf::fft::plan::FftPlan;
+use lpf::fft::local;
+use lpf::runtime::Runtime;
+use lpf::util::rng::XorShift64;
+use std::time::Instant;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let k: u32 = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let p: u32 = argv.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let n = 1usize << k;
+    println!("immortal BSP FFT: n = 2^{k} = {n}, p = {p}");
+
+    let runtime = Runtime::global().ok();
+    let backend = match &runtime {
+        Some(rt) => {
+            println!("backend: PJRT artifacts ({} in manifest)", rt.manifest().len());
+            Backend::Artifacts(rt.clone())
+        }
+        None => {
+            println!("backend: native (run `make artifacts` for the PJRT path)");
+            Backend::Native
+        }
+    };
+
+    // global input
+    let mut rng = XorShift64::new(2026);
+    let g_re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+    let g_im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+
+    // distributed immortal FFT
+    let root = Root::new(Platform::shared()).with_max_procs(p);
+    let (g_re2, g_im2) = (g_re.clone(), g_im.clone());
+    let t = Instant::now();
+    let outs = exec(
+        &root,
+        p,
+        move |ctx, _| {
+            let r = ctx.pid();
+            let pp = ctx.p();
+            let m = n / pp as usize;
+            let mut bsp = Bsp::begin(ctx, 8, 4 * pp as usize + 8).unwrap();
+            bsp.sync().unwrap();
+            let fft = BspFft::new(&mut bsp, n, backend.clone()).unwrap();
+            bsp.sync().unwrap();
+            let re: Vec<f32> = (0..m).map(|j| g_re2[r as usize + pp as usize * j]).collect();
+            let im: Vec<f32> = (0..m).map(|j| g_im2[r as usize + pp as usize * j]).collect();
+            let t = Instant::now();
+            let (o_re, o_im) = fft.run(&mut bsp, &re, &im).unwrap();
+            let secs = t.elapsed().as_secs_f64();
+            let blk = m / pp as usize;
+            let mut placed = vec![(0usize, 0f32, 0f32); m];
+            for k2 in 0..blk {
+                for k1 in 0..pp as usize {
+                    placed[k2 * pp as usize + k1] = (
+                        fft.global_index(k2, k1),
+                        o_re[k2 * pp as usize + k1],
+                        o_im[k2 * pp as usize + k1],
+                    );
+                }
+            }
+            bsp.end().unwrap();
+            (placed, secs)
+        },
+        Args::none(),
+    )
+    .unwrap();
+    let wall = t.elapsed().as_secs_f64();
+
+    // verify against the serial oracle
+    let plan = FftPlan::new(n).unwrap();
+    let (want_re, want_im) = local::fft(&plan, &g_re, &g_im).unwrap();
+    let mut max_err = 0f32;
+    for (placed, _) in &outs {
+        for &(gidx, re, im) in placed {
+            max_err = max_err.max((re - want_re[gidx]).abs()).max((im - want_im[gidx]).abs());
+        }
+    }
+    let inner_secs = outs.iter().map(|(_, s)| *s).fold(0.0, f64::max);
+    println!("BSP FFT: {:.3} ms (incl. spawn {:.3} ms), max |err| = {max_err:.2e}", inner_secs * 1e3, wall * 1e3);
+    assert!(max_err < 1e-2 * (n as f32).sqrt(), "verification failed");
+
+    // baselines
+    if let Some(rt) = &runtime {
+        let v = VendorFft::new(n, rt.clone());
+        let _ = v.run(g_re.clone(), g_im.clone()).unwrap();
+        let t = Instant::now();
+        let _ = v.run(g_re.clone(), g_im.clone()).unwrap();
+        println!("vendor-proxy (fused XLA FFT): {:.3} ms", t.elapsed().as_secs_f64() * 1e3);
+    }
+    let f = PortableFft::new(n).unwrap();
+    let t = Instant::now();
+    let _ = f.run(&g_re, &g_im).unwrap();
+    println!("portable-proxy (rust radix-2): {:.3} ms", t.elapsed().as_secs_f64() * 1e3);
+    println!("OK");
+}

@@ -1,0 +1,85 @@
+//! Quickstart: the paper's Algorithm 1 + Algorithm 2 in Rust.
+//!
+//! A sequential `main` launches an SPMD function with `exec` (Algorithm 1),
+//! which bootstraps buffers, distributes a matrix size from the root,
+//! broadcasts errors with CRCW write-conflict resolution, and returns an
+//! error code through the args/output mechanism (Algorithm 2).
+//!
+//! Run: `cargo run --release --example quickstart -- 1000 500`
+
+use lpf::core::{Args, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::ctx::{exec, Context, Platform, Root};
+
+const OK: u32 = 0;
+const ILLEGAL_INPUT: u32 = 1;
+
+/// Algorithm 2: the 'hello world' SPMD function.
+fn spmd(ctx: &mut Context, args: Args) -> u32 {
+    let p = ctx.p();
+    let s = ctx.pid();
+
+    // allocate and activate LPF buffers
+    ctx.resize_memory_register(3).unwrap();
+    ctx.resize_message_queue(2 * p as usize).unwrap();
+    ctx.sync(SYNC_DEFAULT).unwrap();
+
+    // register memory areas for communication
+    let s_lerr = ctx.register_local(4).unwrap();
+    let s_gerr = ctx.register_global(4).unwrap();
+    let s_mdim = ctx.register_global(8).unwrap();
+
+    // root seeds the matrix size from args; everyone else fetches it
+    if s == 0 && args.input.len() == 8 {
+        ctx.write_slot(s_mdim, 0, &args.input).unwrap();
+    }
+    if s != 0 {
+        ctx.get(0, s_mdim, 0, s_mdim, 0, 8, MSG_DEFAULT).unwrap();
+    }
+    ctx.sync(SYNC_DEFAULT).unwrap();
+
+    // compute the local matrix size
+    let mut mdim = [0u32; 2];
+    ctx.read_typed(s_mdim, 0, &mut mdim).unwrap();
+    let m_local = (mdim[0] as i64 + p as i64 - s as i64 - 1) / p as i64;
+    let n = mdim[1] as i64;
+    let lerr = if m_local <= 0 || n <= 0 { ILLEGAL_INPUT } else { OK };
+    ctx.write_typed(s_lerr, 0, &[lerr]).unwrap();
+
+    // broadcast errors using CRCW write-conflict resolution: every
+    // erroring process puts its code into everyone's gerr — no buffer
+    // needed, any winner is an error code (paper §2.1)
+    if lerr != OK {
+        for k in 0..p {
+            ctx.put(s_lerr, 0, k, s_gerr, 0, 4, MSG_DEFAULT).unwrap();
+        }
+    }
+    ctx.sync(SYNC_DEFAULT).unwrap();
+    let mut gerr = [OK];
+    ctx.read_typed(s_gerr, 0, &mut gerr).unwrap();
+
+    if gerr[0] == OK {
+        println!("pid {s}/{p}: my block is {m_local} x {n} — building matrix...");
+    }
+
+    // clean up & return the error code
+    ctx.deregister(s_lerr).unwrap();
+    ctx.deregister(s_gerr).unwrap();
+    ctx.deregister(s_mdim).unwrap();
+    gerr[0]
+}
+
+/// Algorithm 1: sequential main calling lpf_exec.
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let rows: u32 = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(1000);
+    let cols: u32 = argv.get(2).and_then(|s| s.parse().ok()).unwrap_or(500);
+    let mut input = Vec::new();
+    input.extend_from_slice(&rows.to_le_bytes());
+    input.extend_from_slice(&cols.to_le_bytes());
+
+    let root = Root::new(Platform::shared()); // LPF_ROOT
+    let outs = exec(&root, lpf::core::MAX_P, spmd, Args::input(input)).unwrap();
+    let out = outs[0];
+    println!("exit code: {out}");
+    std::process::exit(out as i32);
+}

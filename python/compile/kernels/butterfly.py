@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: the radix-2 FFT butterfly stage.
+
+This is the compute hot-spot of the immortal BSP FFT (Inda--Bisseling,
+paper SS4.2): for one decimation-in-time stage, paired complex values
+``(a, b)`` and per-column twiddles ``w`` produce ``(a + w*b, a - w*b)``.
+
+Complex numbers travel as separate re/im f32 planes (PJRT-friendly, and
+the layout a TPU VPU wants). The stage operates on arrays shaped
+``[k, m]``: ``k`` butterfly blocks of ``m`` columns; ``w`` has shape
+``[m]`` and broadcasts over blocks.
+
+TPU adaptation note (DESIGN.md SSHardware-Adaptation): the kernel is
+FMA-bound (6 flops / 6 loads per lane) -- a VPU kernel, not an MXU one.
+The BlockSpec tiles ``k`` so one (block, m)-slab of all six operand
+planes fits VMEM; interpret=True is mandatory on this CPU-only build.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step: keeps the six f32 operand slabs + two outputs well
+# under a TPU core's ~16 MiB VMEM for any m <= 2^15 while giving the
+# pipeline enough grid steps to overlap HBM streaming.
+BLOCK_ROWS = 8
+
+
+def _butterfly_kernel(a_re_ref, a_im_ref, b_re_ref, b_im_ref, w_re_ref, w_im_ref,
+                      x_re_ref, x_im_ref, y_re_ref, y_im_ref):
+    """One grid step: butterflies for a [block, m] slab."""
+    a_re = a_re_ref[...]
+    a_im = a_im_ref[...]
+    b_re = b_re_ref[...]
+    b_im = b_im_ref[...]
+    w_re = w_re_ref[...]
+    w_im = w_im_ref[...]
+    # t = w * b (complex)
+    t_re = w_re * b_re - w_im * b_im
+    t_im = w_re * b_im + w_im * b_re
+    x_re_ref[...] = a_re + t_re
+    x_im_ref[...] = a_im + t_im
+    y_re_ref[...] = a_re - t_re
+    y_im_ref[...] = a_im - t_im
+
+
+@partial(jax.jit, static_argnames=())
+def butterfly_stage(a_re, a_im, b_re, b_im, w_re, w_im):
+    """Apply one radix-2 DIT stage.
+
+    Args:
+      a_re, a_im, b_re, b_im: ``[k, m]`` f32 — paired inputs.
+      w_re, w_im: ``[m]`` f32 — stage twiddles (broadcast over ``k``).
+
+    Returns:
+      ``(x_re, x_im, y_re, y_im)``: ``a + w*b`` and ``a - w*b``.
+    """
+    k, m = a_re.shape
+    block = min(BLOCK_ROWS, k)
+    grid = (k // block,) if k % block == 0 else None
+    if grid is None:
+        # ragged row count: single whole-array step (still a Pallas call so
+        # the hot path is uniform)
+        block, grid = k, (1,)
+    row_spec = pl.BlockSpec((block, m), lambda i: (i, 0))
+    w_spec = pl.BlockSpec((m,), lambda i: (0,))
+    out_shape = jax.ShapeDtypeStruct((k, m), jnp.float32)
+    return pl.pallas_call(
+        _butterfly_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec, row_spec, w_spec, w_spec],
+        out_specs=[row_spec, row_spec, row_spec, row_spec],
+        out_shape=[out_shape, out_shape, out_shape, out_shape],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a_re, a_im, b_re, b_im, w_re, w_im)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every L1 kernel and L2 graph.
+
+These are the correctness ground truth: pytest (with hypothesis sweeps)
+asserts the Pallas kernels and the composed models match these within
+f32 tolerance. Nothing here is ever lowered to an artifact.
+"""
+
+import jax.numpy as jnp
+
+
+def butterfly_ref(a_re, a_im, b_re, b_im, w_re, w_im):
+    """Complex (a + w*b, a - w*b) on separate planes."""
+    a = a_re + 1j * a_im
+    b = b_re + 1j * b_im
+    w = (w_re + 1j * w_im)[None, :]
+    x = a + w * b
+    y = a - w * b
+    return (
+        jnp.real(x).astype(jnp.float32),
+        jnp.imag(x).astype(jnp.float32),
+        jnp.real(y).astype(jnp.float32),
+        jnp.imag(y).astype(jnp.float32),
+    )
+
+
+def fft_ref(re, im):
+    """Full complex FFT via jnp.fft (the oracle for local_fft)."""
+    z = jnp.fft.fft(re + 1j * im)
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def edge_multiply_ref(vals, x_gathered):
+    return (vals * x_gathered).astype(jnp.float32)
+
+
+def spmv_ref(vals, rows, cols, x, n):
+    """y = A x for COO (rows, cols, vals), dense oracle."""
+    y = jnp.zeros((n,), jnp.float32)
+    return y.at[rows].add(vals * x[cols])
+
+
+def rank_update_ref(y, r_old, alpha, base):
+    r_new = alpha * y + base
+    return r_new.astype(jnp.float32), jnp.abs(r_new - r_old).astype(jnp.float32)
+
+
+def cmul_ref(a_re, a_im, b_re, b_im):
+    """Elementwise complex multiply on separate planes."""
+    z = (a_re + 1j * a_im) * (b_re + 1j * b_im)
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)

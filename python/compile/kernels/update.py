@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: the PageRank rank-update.
+
+``r_new = alpha * y + (alpha * dangle + (1 - alpha)) / n`` followed by the
+L1 residual contribution ``|r_new - r_old|`` — the elementwise tail of
+every PageRank iteration (paper SS4.3; the LPF PageRank handles dangling
+nodes and convergence, unlike the pure-Spark baseline).
+
+The scalar pieces (alpha, dangle mass) ride in as a [2] parameter vector
+so a single artifact serves every iteration.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _update_kernel(y_ref, r_old_ref, params_ref, r_new_ref, absdiff_ref):
+    alpha = params_ref[0]
+    base = params_ref[1]  # (alpha * dangle + (1 - alpha)) / n, prescaled
+    r_new = alpha * y_ref[...] + base
+    r_new_ref[...] = r_new
+    absdiff_ref[...] = jnp.abs(r_new - r_old_ref[...])
+
+
+@partial(jax.jit, static_argnames=())
+def rank_update(y, r_old, params):
+    """PageRank update + residual terms.
+
+    Args:
+      y: ``[n]`` f32 — the SpMV result.
+      r_old: ``[n]`` f32 — previous ranks.
+      params: ``[2]`` f32 — ``(alpha, base)`` with
+        ``base = (alpha * dangle_mass + 1 - alpha) / n_global``.
+
+    Returns:
+      ``(r_new, absdiff)`` both ``[n]`` f32.
+    """
+    (n,) = y.shape
+    block = min(BLOCK, n)
+    if n % block != 0:
+        block = n
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    pspec = pl.BlockSpec((2,), lambda i: (0,))
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=(n // block,),
+        in_specs=[spec, spec, pspec],
+        out_specs=[spec, spec],
+        out_shape=[out, out],
+        interpret=True,
+    )(y, r_old, params)

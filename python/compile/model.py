@@ -1,0 +1,155 @@
+"""L2: the JAX compute graphs executed from the Rust request path.
+
+Each function here is shape-specialised, lowered once by ``aot.py`` to an
+HLO-text artifact, and executed via PJRT from ``rust/src/runtime``. They
+call the L1 Pallas kernels so kernel and graph lower into one module.
+
+Graphs (paper mapping):
+  * ``local_fft``   — the process-local FFT inside the immortal BSP FFT
+                      (Inda–Bisseling; paper §4.2). Iterative radix-2 DIT
+                      over re/im planes; the bit-reverse permutation and
+                      the per-stage twiddles are runtime inputs so one
+                      artifact per size serves every process and stage.
+  * ``cmul``        — elementwise complex multiply: the extra twiddle
+                      pass after the BSP FFT's global redistribution
+                      (the paper notes this costs an extra vector pass).
+  * ``fft_full``    — whole-vector FFT through XLA's native FFT op: the
+                      "vendor library" baseline standing in for MKL/FFTW.
+  * ``spmv``        — local y = A·x piece of the GraphBLAS PageRank
+                      (gather + Pallas edge-multiply + segment-sum).
+  * ``pr_update``   — PageRank rank update + L1-residual terms.
+
+The table builders (`fft_tables`) are mirrored in Rust
+(`fft::plan`); tests assert the two agree through the artifacts.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.butterfly import butterfly_stage
+from .kernels.spmv import edge_multiply
+from .kernels.update import rank_update
+
+
+# --------------------------------------------------------------------- FFT
+
+def fft_tables(n: int):
+    """Bit-reverse permutation and concatenated stage twiddles for size n.
+
+    Returns (perm[n] int32, tw_re[n-1] f32, tw_im[n-1] f32) where stage
+    s ∈ [0, log2 n) reads its 2^s twiddles at offset 2^s − 1.
+    """
+    assert n & (n - 1) == 0 and n >= 2, "n must be a power of two"
+    bits = n.bit_length() - 1
+    idx = np.arange(n, dtype=np.uint32)
+    rev = np.zeros(n, dtype=np.uint32)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    tw_re = np.empty(n - 1, dtype=np.float32)
+    tw_im = np.empty(n - 1, dtype=np.float32)
+    off = 0
+    for s in range(bits):
+        m = 1 << s
+        k = np.arange(m)
+        w = np.exp(-2j * np.pi * k / (2 * m))
+        tw_re[off:off + m] = w.real
+        tw_im[off:off + m] = w.imag
+        off += m
+    return rev.astype(np.int32), tw_re, tw_im
+
+
+def local_fft(re, im, perm, tw_re, tw_im):
+    """Iterative radix-2 DIT FFT on separate f32 planes.
+
+    Args:
+      re, im: [n] input planes.
+      perm:   [n] int32 bit-reverse permutation (from ``fft_tables``).
+      tw_re, tw_im: [n−1] concatenated stage twiddles.
+    Returns:
+      (re, im) of the DFT, matching ``jnp.fft.fft``.
+    """
+    n = re.shape[0]
+    bits = n.bit_length() - 1
+    re = jnp.take(re, perm)
+    im = jnp.take(im, perm)
+    for s in range(bits):
+        m = 1 << s           # half butterfly span
+        k = n // (2 * m)     # number of blocks
+        w_re = jax.lax.dynamic_slice(tw_re, (m - 1,), (m,))
+        w_im = jax.lax.dynamic_slice(tw_im, (m - 1,), (m,))
+        a_re = re.reshape(k, 2, m)[:, 0, :]
+        a_im = im.reshape(k, 2, m)[:, 0, :]
+        b_re = re.reshape(k, 2, m)[:, 1, :]
+        b_im = im.reshape(k, 2, m)[:, 1, :]
+        x_re, x_im, y_re, y_im = butterfly_stage(a_re, a_im, b_re, b_im, w_re, w_im)
+        re = jnp.stack([x_re, y_re], axis=1).reshape(n)
+        im = jnp.stack([x_im, y_im], axis=1).reshape(n)
+    return re, im
+
+
+def local_fft_twiddle(re, im, perm, tw_re, tw_im, btw_re, btw_im):
+    """Fused step 1+2 of the BSP FFT: local FFT then the redistribution
+    twiddle — one artifact per size halves the PJRT round trips and lets
+    XLA fuse the final stage with the twiddle multiply (§Perf)."""
+    re, im = local_fft(re, im, perm, tw_re, tw_im)
+    return cmul(re, im, btw_re, btw_im)
+
+
+def cmul(a_re, a_im, b_re, b_im):
+    """Elementwise complex multiply (twiddle pass), via the edge-multiply
+    kernel to keep all hot elementwise work on the Pallas path."""
+    re = edge_multiply(a_re, b_re) - edge_multiply(a_im, b_im)
+    im = edge_multiply(a_re, b_im) + edge_multiply(a_im, b_re)
+    return re, im
+
+
+def fft_full(re, im):
+    """Vendor-proxy baseline: whole-vector FFT via XLA's native FFT op."""
+    z = jnp.fft.fft(jax.lax.complex(re, im))
+    return jnp.real(z), jnp.imag(z)
+
+
+# ---------------------------------------------------------------- PageRank
+
+def spmv(vals, cols, rows, x):
+    """Square local SpMV: y = Σ_e vals[e]·x[cols[e]] grouped by rows[e].
+
+    Shapes: vals/cols/rows [nnz] (padding entries carry val 0), x [n].
+    Returns y [n].
+    """
+    return spmv_out(vals, cols, rows, x, x.shape[0])
+
+
+def spmv_out(vals, cols, rows, x, n_out):
+    """Rectangular local SpMV for a row-block partition: x is the full
+    (gathered) input vector [n_in]; rows index the local block [0, n_out).
+    Padding entries must carry val 0 and any in-range row."""
+    xg = jnp.take(x, cols)
+    prod = edge_multiply(vals, xg)
+    return jax.ops.segment_sum(prod, rows, num_segments=n_out)
+
+
+def pr_step(vals, cols, rows, x, r_old, params):
+    """Fused PageRank iteration tail: local SpMV + rank update + residual
+    in ONE artifact — one PJRT call per iteration instead of two (§Perf).
+
+    Edges arrive pre-sorted by destination row (rust
+    `graphblas::partition`), letting XLA use the sorted-scatter path.
+    (A cumsum+gather formulation was tried and reverted: xla_extension
+    0.5.1 lowers cumsum to an O(n·w) reduce-window on CPU — 800× slower.
+    See EXPERIMENTS.md §Perf, L2 iterations 3–4.)
+
+    The dangling-mass `base` rides in `params[1]`, computed (and
+    allreduced) by the Rust side *before* this call since it depends only
+    on the gathered x."""
+    y = spmv_out(vals, cols, rows, x, r_old.shape[0])
+    return pr_update(y, r_old, params)
+
+
+def pr_update(y, r_old, params):
+    """Rank update + residual: see kernels.update. Returns (r_new, resid)
+    with resid a [1] vector (sum of |Δ|) so outputs stay tensor-shaped."""
+    r_new, absdiff = rank_update(y, r_old, params)
+    return r_new, jnp.sum(absdiff, keepdims=True)

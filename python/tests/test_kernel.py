@@ -1,0 +1,105 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; these are the core correctness
+signal for everything the Rust runtime later executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.butterfly import butterfly_stage
+from compile.kernels.spmv import edge_multiply
+from compile.kernels.update import rank_update
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def arrays(rng, *shape):
+    return rng.standard_normal(shape).astype(F32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    logk=st.integers(min_value=0, max_value=6),
+    logm=st.integers(min_value=0, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_butterfly_matches_ref(logk, logm, seed):
+    k, m = 1 << logk, 1 << logm
+    rng = np.random.default_rng(seed)
+    a_re, a_im, b_re, b_im = (arrays(rng, k, m) for _ in range(4))
+    w_re, w_im = arrays(rng, m), arrays(rng, m)
+    got = butterfly_stage(*map(jnp.asarray, (a_re, a_im, b_re, b_im, w_re, w_im)))
+    want = ref.butterfly_ref(a_re, a_im, b_re, b_im, w_re, w_im)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+
+def test_butterfly_ragged_rows():
+    # k not a multiple of the block size exercises the single-step path
+    k, m = 13, 8
+    rng = np.random.default_rng(0)
+    a_re, a_im, b_re, b_im = (arrays(rng, k, m) for _ in range(4))
+    w_re, w_im = arrays(rng, m), arrays(rng, m)
+    got = butterfly_stage(*map(jnp.asarray, (a_re, a_im, b_re, b_im, w_re, w_im)))
+    want = ref.butterfly_ref(a_re, a_im, b_re, b_im, w_re, w_im)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    lognnz=st.integers(min_value=0, max_value=14),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_edge_multiply_matches_ref(lognnz, seed):
+    nnz = 1 << lognnz
+    rng = np.random.default_rng(seed)
+    vals, xg = arrays(rng, nnz), arrays(rng, nnz)
+    got = edge_multiply(jnp.asarray(vals), jnp.asarray(xg))
+    np.testing.assert_allclose(
+        np.asarray(got), ref.edge_multiply_ref(vals, xg), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_edge_multiply_ragged():
+    rng = np.random.default_rng(1)
+    nnz = 4097  # not a multiple of BLOCK
+    vals, xg = arrays(rng, nnz), arrays(rng, nnz)
+    got = edge_multiply(jnp.asarray(vals), jnp.asarray(xg))
+    np.testing.assert_allclose(np.asarray(got), vals * xg, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    logn=st.integers(min_value=0, max_value=13),
+    alpha=st.floats(min_value=0.0, max_value=1.0, width=32),
+    base=st.floats(min_value=-1.0, max_value=1.0, width=32),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_rank_update_matches_ref(logn, alpha, base, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    y, r_old = arrays(rng, n), arrays(rng, n)
+    params = np.array([alpha, base], F32)
+    r_new, absdiff = rank_update(jnp.asarray(y), jnp.asarray(r_old), jnp.asarray(params))
+    want_r, want_d = ref.rank_update_ref(y, r_old, F32(alpha), F32(base))
+    np.testing.assert_allclose(np.asarray(r_new), np.asarray(want_r), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(absdiff), np.asarray(want_d), rtol=1e-5, atol=1e-6)
+
+
+def test_butterfly_zero_twiddle_passthrough():
+    # w = 1 + 0i: outputs are (a+b, a-b) exactly
+    k, m = 4, 4
+    rng = np.random.default_rng(2)
+    a_re, a_im, b_re, b_im = (arrays(rng, k, m) for _ in range(4))
+    w_re, w_im = np.ones(m, F32), np.zeros(m, F32)
+    x_re, x_im, y_re, y_im = butterfly_stage(
+        *map(jnp.asarray, (a_re, a_im, b_re, b_im, w_re, w_im))
+    )
+    np.testing.assert_allclose(np.asarray(x_re), a_re + b_re, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y_im), a_im - b_im, rtol=1e-6)

@@ -1,0 +1,27 @@
+//! Ablation (paper §3.1): flat vs dissemination (hierarchical-class)
+//! barrier — the auto-tuned choice the paper takes from Nishtala.
+//! Reports wall-clock per episode and the critical-path rounds.
+use lpf::barrier::{AutoBarrier, Barrier, DisseminationBarrier, FlatBarrier};
+use lpf::benchkit::Table;
+
+fn main() {
+    let iters = 2000;
+    let mut t = Table::new(&["p", "flat (µs)", "dissemination (µs)", "flat rounds", "diss rounds", "auto picks"]);
+    for p in [2u32, 4, 8, 16] {
+        let (auto, t_flat, t_diss) = AutoBarrier::calibrate(p, iters);
+        let pick = match auto {
+            AutoBarrier::Flat(_) => "flat",
+            AutoBarrier::Dissemination(_) => "dissemination",
+        };
+        t.row(vec![
+            p.to_string(),
+            format!("{:.2}", t_flat * 1e6),
+            format!("{:.2}", t_diss * 1e6),
+            FlatBarrier::new(p).critical_rounds().to_string(),
+            DisseminationBarrier::new(p).critical_rounds().to_string(),
+            pick.into(),
+        ]);
+    }
+    println!("Ablation — barrier algorithm ({iters} episodes each)");
+    println!("{}", t.render());
+}

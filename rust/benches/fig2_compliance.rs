@@ -1,0 +1,10 @@
+//! Regenerates the paper's Fig. 2: n messages round-robin to p processes
+//! across four transport personalities; prints the time-vs-n series and
+//! the compliance verdict (log-log slope). Simulated time; the mechanisms
+//! (matching queues, progress engines) are executed for real.
+use lpf::experiments::{run_fig2, Fig2Config};
+
+fn main() {
+    let cfg = Fig2Config::default_sweep();
+    run_fig2(&cfg).expect("fig2");
+}

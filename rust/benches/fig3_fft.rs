@@ -1,0 +1,13 @@
+//! Regenerates the paper's Fig. 3: the immortal BSP FFT (BSPlib-on-LPF,
+//! local compute through PJRT artifacts) vs the vendor-proxy (fused XLA
+//! FFT) and portable-proxy (plan-cached Rust radix-2) baselines.
+use lpf::experiments::{run_fig3, Fig3Config};
+
+fn main() {
+    let mut cfg = Fig3Config::default_sweep();
+    if std::env::var("LPF_FAST").is_ok() {
+        cfg.ks = (10..=13).collect();
+        cfg.reps = 3;
+    }
+    run_fig3(&cfg).expect("fig3");
+}

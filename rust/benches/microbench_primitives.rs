@@ -1,0 +1,69 @@
+//! Fig.-1 verification: measured per-primitive costs against the paper's
+//! guarantees — O(1) put/get enqueue (size-independent), O(N) resizes,
+//! affine sync in h.
+use lpf::benchkit::{fit_affine, time_secs, Table};
+use lpf::core::{Args, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::ctx::{exec, Platform, Root};
+
+fn main() {
+    let root = Root::new(Platform::shared().checked(false)).with_max_procs(2);
+    // put cost vs payload size: must be flat (O(1), no payload access)
+    let mut t = Table::new(&["payload B", "put (ns)"]);
+    for &len in &[8usize, 1024, 1 << 20] {
+        let secs = exec(
+            &root,
+            2,
+            move |ctx, _| {
+                ctx.resize_memory_register(2).unwrap();
+                ctx.resize_message_queue(1 << 16).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let s = ctx.register_global(len.max(1 << 20)).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                if ctx.pid() == 0 {
+                    let samples = time_secs(100, 10_000, || {
+                        ctx.put(s, 0, 1, s, 0, len, MSG_DEFAULT).unwrap();
+                        // drain without measuring the sync
+                        if ctx.stats().syncs == u64::MAX {
+                            unreachable!();
+                        }
+                    });
+                    // clear the queue
+                    ctx.resize_message_queue(1 << 16).unwrap();
+                    ctx.sync(SYNC_DEFAULT).unwrap();
+                    samples.min()
+                } else {
+                    ctx.sync(SYNC_DEFAULT).unwrap();
+                    0.0
+                }
+            },
+            Args::none(),
+        )
+        .unwrap()[0];
+        t.row(vec![len.to_string(), format!("{:.1}", secs * 1e9)]);
+    }
+    println!("lpf_put enqueue cost vs payload (expect flat — O(1), no payload access)");
+    println!("{}", t.render());
+
+    // sync cost vs h: affine fit
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut t2 = Table::new(&["h (words of 8B)", "sync (µs)"]);
+    for &h in &[0usize, 64, 256, 1024, 4096, 16384, 65536] {
+        let ns = lpf::probe::bench::measure_exchange(
+            &Platform::shared().checked(false),
+            2,
+            8,
+            h,
+            5,
+        )
+        .unwrap();
+        xs.push(h as f64);
+        ys.push(ns);
+        t2.row(vec![h.to_string(), format!("{:.2}", ns / 1e3)]);
+    }
+    let (g, l) = fit_affine(&xs, &ys);
+    println!("lpf_sync cost vs h (expect affine: T = g·h + l)");
+    println!("{}", t2.render());
+    println!("fit: g = {:.2} ns/word, l = {:.1} µs, R² = {:.4}", g, l / 1e3,
+        lpf::benchkit::r_squared(&xs, &ys, g, l));
+}

@@ -1,0 +1,10 @@
+//! Regenerates the paper's Table 3: the BSP constants (g, l) per word
+//! size, normalised by the memcpy speed r, with 95% CIs — the offline
+//! probe that also fills the Θ(1) table behind `lpf_probe`.
+use lpf::experiments::{run_table3, Table3Config};
+
+fn main() {
+    let p = std::env::var("LPF_P").ok().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let cfg = Table3Config::default_run(p);
+    run_table3(&cfg).expect("table3");
+}

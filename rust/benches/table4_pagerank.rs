@@ -1,0 +1,13 @@
+//! Regenerates the paper's Table 4: pure-Spark vs LPF-accelerated-Spark
+//! PageRank on sparksim, for a cage-like and two R-MAT graphs; prints the
+//! same row structure (n=1 / n=10 / n=n_eps / s-per-iteration).
+use lpf::experiments::{run_table4, Table4Config};
+
+fn main() {
+    let mut cfg = Table4Config::default_run();
+    if std::env::var("LPF_FAST").is_ok() {
+        cfg.graphs.truncate(2);
+        cfg.max_iters = 30;
+    }
+    run_table4(&cfg).expect("table4");
+}

@@ -1,0 +1,341 @@
+//! Process barriers.
+//!
+//! The paper's shared-memory `lpf_sync` brackets its phases with two
+//! barriers and uses an *auto-tuned hierarchical* barrier ("hierar.",
+//! Table 1, citing Nishtala's autotuning work) which is `O(log p)` time and
+//! `O(p)` memory, against the naive flat barrier's `O(p)` time.
+//!
+//! Three implementations, one trait:
+//! * [`FlatBarrier`] — centralised counter + condvar. `O(p)` wake chain.
+//! * [`DisseminationBarrier`] — ⌈log₂ p⌉ rounds of pairwise flags; this is
+//!   the classic hierarchical-class barrier that scales as `O(log p)`.
+//! * [`AutoBarrier`] — picks between the two by a quick online calibration,
+//!   mirroring the auto-tuning the paper cites.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::core::Pid;
+
+/// A reusable barrier for a fixed set of `p` participants.
+pub trait Barrier: Send + Sync {
+    /// Block until all `p` processes have called `wait` for this episode.
+    fn wait(&self, pid: Pid);
+    /// Number of participants.
+    fn parties(&self) -> u32;
+    /// Asymptotic latency class, for `probe`'s ℓ accounting: number of
+    /// dependent communication rounds on the critical path.
+    fn critical_rounds(&self) -> u32;
+    /// Like [`wait`](Barrier::wait), but returns `false` (instead of
+    /// blocking forever) once `abort` becomes true. After an aborted wait
+    /// the barrier episode is corrupt; the context is fatally dead anyway —
+    /// this exists exactly so peers of an aborted process observe
+    /// `PeerAborted` at their next collective, as the paper prescribes
+    /// (§2.1), rather than deadlock.
+    fn wait_abortable(&self, pid: Pid, abort: &AtomicBool) -> bool {
+        if abort.load(Ordering::Acquire) {
+            return false;
+        }
+        self.wait(pid);
+        true
+    }
+}
+
+/// Centralised sense-reversing barrier (counter + condvar).
+pub struct FlatBarrier {
+    p: u32,
+    state: Mutex<(u32, u64)>, // (arrived, episode)
+    cv: Condvar,
+}
+
+impl FlatBarrier {
+    /// Barrier for `p` participants.
+    pub fn new(p: u32) -> Self {
+        assert!(p > 0);
+        FlatBarrier { p, state: Mutex::new((0, 0)), cv: Condvar::new() }
+    }
+}
+
+impl Barrier for FlatBarrier {
+    fn wait(&self, _pid: Pid) {
+        let mut st = self.state.lock().expect("barrier poisoned");
+        let episode = st.1;
+        st.0 += 1;
+        if st.0 == self.p {
+            st.0 = 0;
+            st.1 += 1;
+            self.cv.notify_all();
+        } else {
+            while st.1 == episode {
+                st = self.cv.wait(st).expect("barrier poisoned");
+            }
+        }
+    }
+    fn parties(&self) -> u32 {
+        self.p
+    }
+    fn critical_rounds(&self) -> u32 {
+        // one gather + one broadcast through a single cell: O(p) chain
+        self.p
+    }
+    fn wait_abortable(&self, _pid: Pid, abort: &AtomicBool) -> bool {
+        let mut st = self.state.lock().expect("barrier poisoned");
+        let episode = st.1;
+        st.0 += 1;
+        if st.0 == self.p {
+            st.0 = 0;
+            st.1 += 1;
+            self.cv.notify_all();
+            return true;
+        }
+        while st.1 == episode {
+            if abort.load(Ordering::Acquire) {
+                return false;
+            }
+            let (g, _timeout) = self
+                .cv
+                .wait_timeout(st, Duration::from_millis(5))
+                .expect("barrier poisoned");
+            st = g;
+        }
+        true
+    }
+}
+
+/// Dissemination barrier: ⌈log₂ p⌉ rounds; round `r` signals
+/// `(pid + 2^r) mod p` and waits for `(pid − 2^r) mod p`.
+///
+/// Flags are sense-reversed per episode parity so the structure is reusable
+/// without resets. Waiting spins briefly then yields — appropriate both for
+/// real multicore and for the single-core CI container this repo runs in.
+pub struct DisseminationBarrier {
+    p: u32,
+    rounds: u32,
+    /// flags[parity][round][pid]
+    flags: Vec<Vec<Vec<AtomicBool>>>,
+    episode: Vec<AtomicU32>, // per-pid episode counter (cache-line padded)
+}
+
+/// Pad to avoid false sharing of per-pid episode counters — the exact
+/// failure mode the paper warns about for naive shared-memory backends (§3).
+const PAD: usize = 8; // 8 × u32 on its own line region
+
+impl DisseminationBarrier {
+    /// Barrier for `p` participants.
+    pub fn new(p: u32) -> Self {
+        assert!(p > 0);
+        let rounds = 32 - (p - 1).leading_zeros().min(31);
+        let rounds = if p == 1 { 0 } else { rounds };
+        let mk_round_flags = || -> Vec<Vec<AtomicBool>> {
+            (0..rounds).map(|_| (0..p).map(|_| AtomicBool::new(false)).collect()).collect()
+        };
+        DisseminationBarrier {
+            p,
+            rounds,
+            flags: vec![mk_round_flags(), mk_round_flags()],
+            episode: (0..p as usize * PAD).map(|_| AtomicU32::new(0)).collect(),
+        }
+    }
+}
+
+impl Barrier for DisseminationBarrier {
+    fn wait(&self, pid: Pid) {
+        if self.p == 1 {
+            return;
+        }
+        let ep = self.episode[pid as usize * PAD].fetch_add(1, Ordering::AcqRel);
+        let parity = (ep & 1) as usize;
+        let sense = ep & 2 == 0; // flips every reuse of the parity plane
+        for r in 0..self.rounds {
+            let peer = (pid + (1 << r)) % self.p;
+            self.flags[parity][r as usize][peer as usize].store(sense, Ordering::Release);
+            let mine = &self.flags[parity][r as usize][pid as usize];
+            let mut spins = 0u32;
+            while mine.load(Ordering::Acquire) != sense {
+                spins += 1;
+                if spins > 64 {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+    fn parties(&self) -> u32 {
+        self.p
+    }
+    fn critical_rounds(&self) -> u32 {
+        self.rounds
+    }
+    fn wait_abortable(&self, pid: Pid, abort: &AtomicBool) -> bool {
+        if self.p == 1 {
+            return !abort.load(Ordering::Acquire);
+        }
+        let ep = self.episode[pid as usize * PAD].fetch_add(1, Ordering::AcqRel);
+        let parity = (ep & 1) as usize;
+        let sense = ep & 2 == 0;
+        for r in 0..self.rounds {
+            let peer = (pid + (1 << r)) % self.p;
+            self.flags[parity][r as usize][peer as usize].store(sense, Ordering::Release);
+            let mine = &self.flags[parity][r as usize][pid as usize];
+            let mut spins = 0u32;
+            while mine.load(Ordering::Acquire) != sense {
+                spins += 1;
+                if spins > 64 {
+                    if abort.load(Ordering::Acquire) {
+                        return false;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Auto-tuned barrier: calibrates flat vs dissemination at construction and
+/// delegates to the winner (paper: "auto-tuned hierarchical barrier").
+pub enum AutoBarrier {
+    Flat(FlatBarrier),
+    Dissemination(DisseminationBarrier),
+}
+
+impl AutoBarrier {
+    /// Heuristic + optional calibration. Small `p` favours the flat barrier
+    /// (fewer atomics); larger `p` the `O(log p)` dissemination structure.
+    /// The crossover default (8) matches what calibration finds on this
+    /// container; `calibrate` re-measures it.
+    pub fn new(p: u32) -> Self {
+        if p <= 8 {
+            AutoBarrier::Flat(FlatBarrier::new(p))
+        } else {
+            AutoBarrier::Dissemination(DisseminationBarrier::new(p))
+        }
+    }
+
+    /// Measure both variants with `iters` episodes of `p` threads and pick
+    /// the faster. Used by the ablation bench; `new` uses the cached
+    /// heuristic so context creation stays O(p).
+    pub fn calibrate(p: u32, iters: u32) -> (Self, f64, f64) {
+        use std::sync::Arc;
+        fn time_it(b: Arc<dyn Barrier>, p: u32, iters: u32) -> f64 {
+            let start = std::time::Instant::now();
+            std::thread::scope(|s| {
+                for pid in 0..p {
+                    let b = b.clone();
+                    s.spawn(move || {
+                        for _ in 0..iters {
+                            b.wait(pid);
+                        }
+                    });
+                }
+            });
+            start.elapsed().as_secs_f64() / iters as f64
+        }
+        let t_flat = time_it(Arc::new(FlatBarrier::new(p)), p, iters);
+        let t_diss = time_it(Arc::new(DisseminationBarrier::new(p)), p, iters);
+        let chosen = if t_flat <= t_diss {
+            AutoBarrier::Flat(FlatBarrier::new(p))
+        } else {
+            AutoBarrier::Dissemination(DisseminationBarrier::new(p))
+        };
+        (chosen, t_flat, t_diss)
+    }
+}
+
+impl Barrier for AutoBarrier {
+    fn wait(&self, pid: Pid) {
+        match self {
+            AutoBarrier::Flat(b) => b.wait(pid),
+            AutoBarrier::Dissemination(b) => b.wait(pid),
+        }
+    }
+    fn parties(&self) -> u32 {
+        match self {
+            AutoBarrier::Flat(b) => b.parties(),
+            AutoBarrier::Dissemination(b) => b.parties(),
+        }
+    }
+    fn critical_rounds(&self) -> u32 {
+        match self {
+            AutoBarrier::Flat(b) => b.critical_rounds(),
+            AutoBarrier::Dissemination(b) => b.critical_rounds(),
+        }
+    }
+    fn wait_abortable(&self, pid: Pid, abort: &AtomicBool) -> bool {
+        match self {
+            AutoBarrier::Flat(b) => b.wait_abortable(pid, abort),
+            AutoBarrier::Dissemination(b) => b.wait_abortable(pid, abort),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    /// Generic stress: no process may enter episode e+1 before all entered e.
+    fn stress(b: Arc<dyn Barrier>, p: u32, episodes: usize) {
+        let counter = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for pid in 0..p {
+                let b = b.clone();
+                let counter = counter.clone();
+                s.spawn(move || {
+                    for e in 0..episodes {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                        b.wait(pid);
+                        let seen = counter.load(Ordering::SeqCst);
+                        assert!(
+                            seen >= (e + 1) * p as usize,
+                            "pid {pid} passed episode {e} early: {seen}"
+                        );
+                        b.wait(pid);
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), episodes * p as usize);
+    }
+
+    #[test]
+    fn flat_barrier_correct() {
+        for p in [1, 2, 3, 5, 8] {
+            stress(Arc::new(FlatBarrier::new(p)), p, 20);
+        }
+    }
+
+    #[test]
+    fn dissemination_barrier_correct() {
+        for p in [1, 2, 3, 4, 7, 16] {
+            stress(Arc::new(DisseminationBarrier::new(p)), p, 20);
+        }
+    }
+
+    #[test]
+    fn auto_barrier_correct_both_regimes() {
+        stress(Arc::new(AutoBarrier::new(4)), 4, 10);
+        stress(Arc::new(AutoBarrier::new(12)), 12, 10);
+    }
+
+    #[test]
+    fn dissemination_rounds_are_log_p() {
+        assert_eq!(DisseminationBarrier::new(1).critical_rounds(), 0);
+        assert_eq!(DisseminationBarrier::new(2).critical_rounds(), 1);
+        assert_eq!(DisseminationBarrier::new(8).critical_rounds(), 3);
+        assert_eq!(DisseminationBarrier::new(9).critical_rounds(), 4);
+        assert_eq!(DisseminationBarrier::new(16).critical_rounds(), 4);
+    }
+
+    #[test]
+    fn flat_rounds_are_p() {
+        assert_eq!(FlatBarrier::new(16).critical_rounds(), 16);
+    }
+
+    #[test]
+    fn auto_picks_by_size() {
+        assert!(matches!(AutoBarrier::new(2), AutoBarrier::Flat(_)));
+        assert!(matches!(AutoBarrier::new(32), AutoBarrier::Dissemination(_)));
+    }
+}

@@ -1,0 +1,244 @@
+//! benchkit: the in-repo measurement harness.
+//!
+//! The offline crate registry has no `criterion`; this module provides
+//! what the paper's evaluation needs instead: warmup+repeat timing,
+//! mean / 95% confidence intervals (Table 3 reports ±95% CIs), affine
+//! least-squares fits (`T(h) = g·h + ℓ`), and aligned table printing for
+//! the paper-style outputs.
+
+use std::time::Instant;
+
+/// A set of measurements (seconds or any unit).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    /// Raw values in collection order.
+    pub values: Vec<f64>,
+}
+
+impl Samples {
+    /// Wrap raw values.
+    pub fn from(values: Vec<f64>) -> Samples {
+        Samples { values }
+    }
+
+    /// Arithmetic mean.
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    /// Sample standard deviation.
+    pub fn std(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// Half-width of the 95% confidence interval of the mean (normal
+    /// approximation — the paper's Table 3 samples are large).
+    pub fn ci95(&self) -> f64 {
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        1.96 * self.std() / (self.values.len() as f64).sqrt()
+    }
+
+    /// Minimum.
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Median (of a copy).
+    pub fn median(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.values.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+}
+
+/// Time `f` (seconds per call): `warmup` unmeasured calls, then `iters`
+/// measured ones.
+pub fn time_secs(warmup: u32, iters: u32, mut f: impl FnMut()) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut values = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        values.push(t.elapsed().as_secs_f64());
+    }
+    Samples { values }
+}
+
+/// Least-squares affine fit `y ≈ slope·x + intercept`.
+pub fn fit_affine(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-30 {
+        return (0.0, sy / n);
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    (slope, intercept)
+}
+
+/// Coefficient of determination for an affine fit — the Fig. 2 compliance
+/// check ("we expect an affine relation").
+pub fn r_squared(xs: &[f64], ys: &[f64], slope: f64, intercept: f64) -> f64 {
+    let mean_y = ys.iter().sum::<f64>() / ys.len() as f64;
+    let ss_tot: f64 = ys.iter().map(|y| (y - mean_y) * (y - mean_y)).sum();
+    let ss_res: f64 =
+        xs.iter().zip(ys).map(|(x, y)| (y - (slope * x + intercept)).powi(2)).sum();
+    if ss_tot == 0.0 {
+        return 1.0;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Growth exponent estimate: slope of log(y) vs log(x) over the tail —
+/// ≈1 for affine/compliant, ≈2 for the superlinear transports of Fig. 2.
+pub fn growth_exponent(xs: &[f64], ys: &[f64]) -> f64 {
+    let pairs: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(&x, &y)| x > 0.0 && y > 0.0)
+        .map(|(&x, &y)| (x.ln(), y.ln()))
+        .collect();
+    let lx: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let ly: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+    fit_affine(&lx, &ly).0
+}
+
+/// Aligned plain-text table (paper-style output).
+#[derive(Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Table with the given column headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header count).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(c, s)| format!("{:>w$}", s, w = widths[c]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a nanosecond quantity human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.1} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Samples::from(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!(s.std() > 1.0 && s.std() < 1.4);
+        assert!(s.ci95() > 0.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.median(), 3.0);
+    }
+
+    #[test]
+    fn affine_fit_recovers_line() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.5 * x + 42.0).collect();
+        let (g, l) = fit_affine(&xs, &ys);
+        assert!((g - 3.5).abs() < 1e-9);
+        assert!((l - 42.0).abs() < 1e-6);
+        assert!((r_squared(&xs, &ys, g, l) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn growth_exponent_detects_superlinearity() {
+        let xs: Vec<f64> = (1..50).map(|i| i as f64).collect();
+        let lin: Vec<f64> = xs.iter().map(|x| 7.0 * x + 3.0).collect();
+        let quad: Vec<f64> = xs.iter().map(|x| 0.5 * x * x).collect();
+        assert!(growth_exponent(&xs, &lin) < 1.3);
+        assert!(growth_exponent(&xs, &quad) > 1.8);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn time_secs_measures() {
+        let s = time_secs(1, 3, || std::thread::sleep(std::time::Duration::from_micros(100)));
+        assert_eq!(s.values.len(), 3);
+        assert!(s.mean() >= 50e-6);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12e3).ends_with("µs"));
+        assert!(fmt_ns(12e6).ends_with("ms"));
+        assert!(fmt_ns(12e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,336 @@
+//! BSPlib compatibility layer on top of LPF.
+//!
+//! The paper runs the immortal HPBSP FFT "on LPF by use of a BSPlib layer
+//! on top of LPF; this layer enables the use of a large body of BSP
+//! algorithms originally written for BSPlib" (§4.2) — and cites the layer
+//! as evidence of LPF's expressiveness. This module reproduces that layer:
+//! the classic BSPlib primitives (Hill et al., paper ref. [9]) with their
+//! *buffered* semantics implemented over LPF's unbuffered RDMA.
+//!
+//! | BSPlib            | here                                  |
+//! |-------------------|---------------------------------------|
+//! | `bsp_begin/end`   | constructing [`Bsp`] inside an SPMD fn |
+//! | `bsp_pid/nprocs`  | [`Bsp::pid`], [`Bsp::nprocs`]          |
+//! | `bsp_push_reg`    | [`Bsp::push_reg`] (collective)         |
+//! | `bsp_pop_reg`     | [`Bsp::pop_reg`] (collective)          |
+//! | `bsp_put`         | [`Bsp::put`] (buffered at call time)   |
+//! | `bsp_hpput`       | [`Bsp::hpput`] (unbuffered)            |
+//! | `bsp_get`         | [`Bsp::get`]                           |
+//! | `bsp_sync`        | [`Bsp::sync`]                          |
+//! | `bsp_time`        | [`Bsp::time`]                          |
+//!
+//! BSPlib's `bsp_put` snapshots the source *at call time*; we stage the
+//! payload into a registered staging slot and issue the LPF put from
+//! there, which is exactly how BSPlib-over-RDMA implementations (and the
+//! paper's layer) realise buffered puts.
+
+use std::time::Instant;
+
+use crate::core::{LpfError, Memslot, Result, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::ctx::{pod_bytes, Context, Pod};
+
+/// A BSPlib registration handle (`bsp_push_reg` result): identifies "the
+/// same" memory area across all processes by registration order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BspReg {
+    slot: Memslot,
+    len: usize,
+}
+
+/// Default staging capacity for buffered puts, bytes.
+const STAGING_DEFAULT: usize = 1 << 20;
+
+/// The BSPlib façade over an LPF context.
+pub struct Bsp<'a> {
+    ctx: &'a mut Context,
+    staging: Memslot,
+    staging_used: usize,
+    staging_cap: usize,
+    regs: Vec<BspReg>,
+    started: Instant,
+}
+
+impl<'a> Bsp<'a> {
+    /// `bsp_begin`: wrap an LPF context. Collective; reserves LPF capacity
+    /// (slots + message queue) and a staging slot, costing one superstep.
+    pub fn begin(ctx: &'a mut Context, max_regs: usize, max_msgs: usize) -> Result<Bsp<'a>> {
+        Self::begin_with_staging(ctx, max_regs, max_msgs, STAGING_DEFAULT)
+    }
+
+    /// `bsp_begin` with an explicit staging capacity for buffered puts.
+    pub fn begin_with_staging(
+        ctx: &'a mut Context,
+        max_regs: usize,
+        max_msgs: usize,
+        staging_cap: usize,
+    ) -> Result<Bsp<'a>> {
+        ctx.resize_memory_register(max_regs + 1)?;
+        ctx.resize_message_queue(max_msgs)?;
+        ctx.sync(SYNC_DEFAULT)?;
+        let staging = ctx.register_global(staging_cap)?;
+        Ok(Bsp {
+            ctx,
+            staging,
+            staging_used: 0,
+            staging_cap,
+            regs: Vec::new(),
+            started: Instant::now(),
+        })
+    }
+
+    /// `bsp_pid`.
+    pub fn pid(&self) -> u32 {
+        self.ctx.pid()
+    }
+
+    /// `bsp_nprocs`.
+    pub fn nprocs(&self) -> u32 {
+        self.ctx.p()
+    }
+
+    /// `bsp_time`: seconds since `begin` on this process.
+    pub fn time(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// `bsp_push_reg`: collectively register an area of `len` bytes.
+    /// Usable for communication after the next [`sync`](Bsp::sync), as in
+    /// BSPlib.
+    pub fn push_reg(&mut self, len: usize) -> Result<BspReg> {
+        let slot = self.ctx.register_global(len)?;
+        let reg = BspReg { slot, len };
+        self.regs.push(reg);
+        Ok(reg)
+    }
+
+    /// `bsp_pop_reg`.
+    pub fn pop_reg(&mut self, reg: BspReg) -> Result<()> {
+        match self.regs.iter().rposition(|r| *r == reg) {
+            Some(i) => {
+                self.regs.remove(i);
+                self.ctx.deregister(reg.slot)
+            }
+            None => Err(LpfError::Illegal("pop_reg of unknown registration".into())),
+        }
+    }
+
+    /// Write into this process's window of a registration (local access).
+    pub fn write_local<T: Pod>(&mut self, reg: BspReg, byte_off: usize, data: &[T]) -> Result<()> {
+        self.ctx.write_slot(reg.slot, byte_off, pod_bytes(data))
+    }
+
+    /// Read from this process's window of a registration (local access).
+    pub fn read_local<T: Pod>(&self, reg: BspReg, byte_off: usize, out: &mut [T]) -> Result<()> {
+        self.ctx.read_typed::<u8>(reg.slot, 0, &mut [])?; // slot validity
+        let len = std::mem::size_of_val(out);
+        let mut bytes = vec![0u8; len];
+        self.ctx.read_slot(reg.slot, byte_off, &mut bytes)?;
+        // SAFETY: Pod target.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, len);
+        }
+        Ok(())
+    }
+
+    /// `bsp_put`: **buffered** — `data` is snapshotted now into the staging
+    /// area; delivery happens at the next sync. Mitigable error when the
+    /// staging area is full (BSPlib would abort; LPF's error model lets us
+    /// do better).
+    pub fn put<T: Pod>(
+        &mut self,
+        dst_pid: u32,
+        data: &[T],
+        dst: BspReg,
+        dst_byte_off: usize,
+    ) -> Result<()> {
+        let len = std::mem::size_of_val(data);
+        if self.staging_used + len > self.staging_cap {
+            return Err(LpfError::OutOfMemory(format!(
+                "bsp_put staging full ({} of {} B)",
+                self.staging_used, self.staging_cap
+            )));
+        }
+        let off = self.staging_used;
+        self.ctx.write_slot(self.staging, off, pod_bytes(data))?;
+        self.ctx.put(self.staging, off, dst_pid, dst.slot, dst_byte_off, len, MSG_DEFAULT)?;
+        self.staging_used += len;
+        Ok(())
+    }
+
+    /// `bsp_hpput`: unbuffered high-performance put straight from a
+    /// registration window (the caller must not touch the source until the
+    /// next sync — BSPlib's own rule, which is also LPF's).
+    pub fn hpput(
+        &mut self,
+        dst_pid: u32,
+        src: BspReg,
+        src_byte_off: usize,
+        dst: BspReg,
+        dst_byte_off: usize,
+        len: usize,
+    ) -> Result<()> {
+        self.ctx.put(src.slot, src_byte_off, dst_pid, dst.slot, dst_byte_off, len, MSG_DEFAULT)
+    }
+
+    /// `bsp_get`: fetch from a remote registration window into ours.
+    pub fn get(
+        &mut self,
+        src_pid: u32,
+        src: BspReg,
+        src_byte_off: usize,
+        dst: BspReg,
+        dst_byte_off: usize,
+        len: usize,
+    ) -> Result<()> {
+        self.ctx.get(src_pid, src.slot, src_byte_off, dst.slot, dst_byte_off, len, MSG_DEFAULT)
+    }
+
+    /// `bsp_sync`: end the superstep; all queued communication completes
+    /// and the staging area resets.
+    pub fn sync(&mut self) -> Result<()> {
+        self.ctx.sync(SYNC_DEFAULT)?;
+        self.staging_used = 0;
+        Ok(())
+    }
+
+    /// `bsp_end`: release resources (registrations + staging).
+    pub fn end(mut self) -> Result<()> {
+        let regs: Vec<BspReg> = self.regs.drain(..).collect();
+        for r in regs {
+            self.ctx.deregister(r.slot)?;
+        }
+        self.ctx.deregister(self.staging)
+    }
+
+    /// Escape hatch to the underlying LPF context (LPF interoperates with
+    /// itself, too).
+    pub fn lpf(&mut self) -> &mut Context {
+        self.ctx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Args;
+    use crate::ctx::{exec, Platform, Root};
+
+    fn run(p: u32, f: impl Fn(&mut Bsp) + Sync) {
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(p);
+        exec(
+            &root,
+            p,
+            move |ctx, _| {
+                let mut bsp = Bsp::begin(ctx, 8, 64).unwrap();
+                bsp.sync().unwrap(); // activate registrations
+                f(&mut bsp);
+                bsp.end().unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn buffered_put_snapshots_at_call_time() {
+        run(2, |bsp| {
+            let dst = bsp.push_reg(8).unwrap();
+            bsp.sync().unwrap();
+            let mut v = [41u64];
+            bsp.put((bsp.pid() + 1) % 2, &v, dst, 0).unwrap();
+            // mutate AFTER the put: BSPlib semantics say the snapshot (41)
+            // must be delivered, not 99
+            v[0] = 99;
+            bsp.sync().unwrap();
+            let mut got = [0u64];
+            bsp.read_local(dst, 0, &mut got).unwrap();
+            assert_eq!(got[0], 41, "buffered put must snapshot at call time");
+        });
+    }
+
+    #[test]
+    fn hpput_and_get_roundtrip() {
+        run(4, |bsp| {
+            let src = bsp.push_reg(8).unwrap();
+            let dst = bsp.push_reg(8 * 4).unwrap();
+            bsp.sync().unwrap();
+            bsp.write_local(src, 0, &[bsp.pid() as u64 + 100]).unwrap();
+            // everyone hp-puts its value into slot pid of everyone's dst
+            for k in 0..bsp.nprocs() {
+                bsp.hpput(k, src, 0, dst, bsp.pid() as usize * 8, 8).unwrap();
+            }
+            bsp.sync().unwrap();
+            let mut all = [0u64; 4];
+            bsp.read_local(dst, 0, &mut all).unwrap();
+            assert_eq!(all, [100, 101, 102, 103]);
+            // now get neighbour's src back
+            let peer = (bsp.pid() + 1) % bsp.nprocs();
+            let tmp = bsp.push_reg(8).unwrap();
+            bsp.sync().unwrap();
+            bsp.get(peer, src, 0, tmp, 0, 8).unwrap();
+            bsp.sync().unwrap();
+            let mut got = [0u64];
+            bsp.read_local(tmp, 0, &mut got).unwrap();
+            assert_eq!(got[0], peer as u64 + 100);
+        });
+    }
+
+    #[test]
+    fn staging_resets_each_superstep() {
+        run(2, |bsp| {
+            let dst = bsp.push_reg(64).unwrap();
+            bsp.sync().unwrap();
+            for round in 0..3u64 {
+                let data = [round; 4];
+                bsp.put((bsp.pid() + 1) % 2, &data, dst, 0).unwrap();
+                bsp.sync().unwrap();
+                let mut got = [0u64; 4];
+                bsp.read_local(dst, 0, &mut got).unwrap();
+                assert_eq!(got, [round; 4]);
+            }
+        });
+    }
+
+    #[test]
+    fn staging_overflow_is_mitigable() {
+        let root = Root::new(Platform::shared()).with_max_procs(2);
+        exec(
+            &root,
+            2,
+            |ctx, _| {
+                let mut bsp = Bsp::begin_with_staging(ctx, 4, 16, 16).unwrap();
+                bsp.sync().unwrap();
+                let dst = bsp.push_reg(64).unwrap();
+                bsp.sync().unwrap();
+                bsp.put(0, &[1u64, 2], dst, 0).unwrap(); // 16 B: fills staging
+                let err = bsp.put(0, &[3u64], dst, 16).unwrap_err();
+                assert!(err.is_mitigable());
+                bsp.sync().unwrap(); // frees staging
+                bsp.put(0, &[3u64], dst, 16).unwrap();
+                bsp.sync().unwrap();
+                bsp.end().unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn pop_reg_frees_slot() {
+        run(2, |bsp| {
+            let r = bsp.push_reg(8).unwrap();
+            bsp.sync().unwrap();
+            bsp.pop_reg(r).unwrap();
+            assert!(bsp.pop_reg(r).is_err());
+        });
+    }
+
+    #[test]
+    fn time_advances() {
+        run(1, |bsp| {
+            let t0 = bsp.time();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            assert!(bsp.time() > t0);
+        });
+    }
+}

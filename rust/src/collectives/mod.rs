@@ -1,0 +1,475 @@
+//! A collectives library on raw LPF.
+//!
+//! The paper's experiments "made use of an LPF-based collectives library"
+//! (§6) to demonstrate that LPF is expressive enough for higher-level
+//! interfaces. This module provides the classic set — broadcast, reduce,
+//! allreduce, gather, allgather, scatter, alltoall, scan — as BSP
+//! algorithms with documented `(h, supersteps)` costs, parametrised on the
+//! machine via `probe` where a trade-off exists (one-phase vs two-phase
+//! broadcast).
+//!
+//! All collectives operate on a [`Coll`] workspace that pre-registers its
+//! communication slots once (registration is not free — paper Fig. 1), so
+//! the per-call hot path is pure put/sync.
+
+use crate::core::{LpfError, Result, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::ctx::{pod_bytes, Context, Pod};
+
+/// Pre-registered workspace for collectives over elements of up to
+/// `max_bytes` per process.
+pub struct Coll {
+    /// Scratch able to hold one contribution from every process.
+    gather_slot: crate::core::Memslot,
+    /// Scratch holding this process's outgoing block.
+    send_slot: crate::core::Memslot,
+    max_bytes: usize,
+}
+
+impl Coll {
+    /// Collective constructor: registers workspace slots (2 global slots;
+    /// callers must have capacity for them) sized for per-process payloads
+    /// of `max_bytes`. Costs one superstep to activate queue capacity.
+    pub fn new(ctx: &mut Context, max_bytes: usize) -> Result<Coll> {
+        let p = ctx.p() as usize;
+        let send_slot = ctx.register_global(max_bytes)?;
+        let gather_slot = ctx.register_global(max_bytes * p)?;
+        Ok(Coll { gather_slot, send_slot, max_bytes })
+    }
+
+    /// Free the workspace slots.
+    pub fn free(self, ctx: &mut Context) -> Result<()> {
+        ctx.deregister(self.send_slot)?;
+        ctx.deregister(self.gather_slot)
+    }
+
+    fn check_len(&self, bytes: usize) -> Result<()> {
+        if bytes > self.max_bytes {
+            return Err(LpfError::Illegal(format!(
+                "payload of {bytes} B exceeds collectives workspace of {} B",
+                self.max_bytes
+            )));
+        }
+        Ok(())
+    }
+
+    /// Broadcast `data` from `root` into every process's `out`.
+    ///
+    /// Cost: one superstep of `h = (p−1)·len` at the root (one-phase), or
+    /// two supersteps of `h ≈ len + p·(len/p)` (two-phase scatter+allgather,
+    /// Van de Geijn) — chosen by the `probe`d machine: two-phase wins when
+    /// `g·len·(p−2)/p > ℓ`.
+    pub fn broadcast<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        root: u32,
+        data: &mut [T],
+    ) -> Result<()> {
+        let len = std::mem::size_of_val(data);
+        self.check_len(len)?;
+        let p = ctx.p();
+        if p == 1 {
+            return Ok(());
+        }
+        let machine = ctx.probe();
+        let params = machine.at_word(8);
+        let two_phase_wins =
+            params.g_ns * len as f64 * (p as f64 - 2.0) / p as f64 > params.l_ns && len >= p as usize;
+        if ctx.pid() == root {
+            ctx.write_slot(self.send_slot, 0, pod_bytes(data))?;
+        }
+        if !two_phase_wins {
+            // one-phase: root puts the whole payload to everyone
+            if ctx.pid() == root {
+                for k in 0..p {
+                    if k != root {
+                        ctx.put(self.send_slot, 0, k, self.gather_slot, 0, len, MSG_DEFAULT)?;
+                    }
+                }
+            }
+            ctx.sync(SYNC_DEFAULT)?;
+            if ctx.pid() != root {
+                self.read_back(ctx, self.gather_slot, 0, data)?;
+            }
+            return Ok(());
+        }
+        // two-phase: scatter blocks, then allgather them
+        let block = len.div_ceil(p as usize);
+        if ctx.pid() == root {
+            for k in 0..p {
+                let off = k as usize * block;
+                let blen = block.min(len.saturating_sub(off));
+                if blen > 0 && k != root {
+                    ctx.put(self.send_slot, off, k, self.gather_slot, off, blen, MSG_DEFAULT)?;
+                }
+            }
+        }
+        ctx.sync(SYNC_DEFAULT)?;
+        if ctx.pid() == root {
+            // root already has all blocks in send_slot; copy to gather_slot
+            let mut tmp = vec![0u8; len];
+            ctx.read_slot(self.send_slot, 0, &mut tmp)?;
+            ctx.write_slot(self.gather_slot, 0, &tmp)?;
+        }
+        // allgather: each process broadcasts its block
+        let my_off = ctx.pid() as usize * block;
+        let my_len = block.min(len.saturating_sub(my_off));
+        if my_len > 0 {
+            for k in 0..p {
+                if k != ctx.pid() {
+                    ctx.put(
+                        self.gather_slot,
+                        my_off,
+                        k,
+                        self.gather_slot,
+                        my_off,
+                        my_len,
+                        MSG_DEFAULT,
+                    )?;
+                }
+            }
+        }
+        ctx.sync(SYNC_DEFAULT)?;
+        self.read_back(ctx, self.gather_slot, 0, data)?;
+        Ok(())
+    }
+
+    fn read_back<T: Pod>(
+        &self,
+        ctx: &Context,
+        slot: crate::core::Memslot,
+        off: usize,
+        out: &mut [T],
+    ) -> Result<()> {
+        let len = std::mem::size_of_val(out);
+        ctx.with_slot(slot, |bytes| {
+            // SAFETY: Pod target, length checked by caller contracts.
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    bytes[off..off + len].as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    len,
+                );
+            }
+        })
+    }
+
+    /// Allgather: every process contributes `mine`; `out` (length `p·len`)
+    /// receives all contributions ordered by pid. One superstep,
+    /// `h = (p−1)·len`.
+    pub fn allgather<T: Pod>(&self, ctx: &mut Context, mine: &[T], out: &mut [T]) -> Result<()> {
+        let len = std::mem::size_of_val(mine);
+        self.check_len(len)?;
+        if out.len() != mine.len() * ctx.p() as usize {
+            return Err(LpfError::Illegal("allgather out must be p×len".into()));
+        }
+        let my_off = ctx.pid() as usize * len;
+        ctx.write_slot(self.send_slot, 0, pod_bytes(mine))?;
+        ctx.write_slot(self.gather_slot, my_off, pod_bytes(mine))?;
+        for k in 0..ctx.p() {
+            if k != ctx.pid() {
+                ctx.put(self.send_slot, 0, k, self.gather_slot, my_off, len, MSG_DEFAULT)?;
+            }
+        }
+        ctx.sync(SYNC_DEFAULT)?;
+        self.read_back(ctx, self.gather_slot, 0, out)
+    }
+
+    /// Gather to `root` only. One superstep, `h = (p−1)·len` at the root.
+    pub fn gather<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        root: u32,
+        mine: &[T],
+        out: &mut [T],
+    ) -> Result<()> {
+        let len = std::mem::size_of_val(mine);
+        self.check_len(len)?;
+        let my_off = ctx.pid() as usize * len;
+        if ctx.pid() == root {
+            ctx.write_slot(self.gather_slot, my_off, pod_bytes(mine))?;
+        } else {
+            ctx.write_slot(self.send_slot, 0, pod_bytes(mine))?;
+            ctx.put(self.send_slot, 0, root, self.gather_slot, my_off, len, MSG_DEFAULT)?;
+        }
+        ctx.sync(SYNC_DEFAULT)?;
+        if ctx.pid() == root {
+            if out.len() != mine.len() * ctx.p() as usize {
+                return Err(LpfError::Illegal("gather out must be p×len at root".into()));
+            }
+            self.read_back(ctx, self.gather_slot, 0, out)?;
+        }
+        Ok(())
+    }
+
+    /// Scatter from `root`: block `k` of `data` (at root) lands in every
+    /// process `k`'s `out`. One superstep, `h = (p−1)·len` at the root.
+    pub fn scatter<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        root: u32,
+        data: &[T],
+        out: &mut [T],
+    ) -> Result<()> {
+        let len = std::mem::size_of_val(out);
+        self.check_len(len)?;
+        if ctx.pid() == root {
+            if data.len() != out.len() * ctx.p() as usize {
+                return Err(LpfError::Illegal("scatter data must be p×len at root".into()));
+            }
+            ctx.write_slot(self.gather_slot, 0, pod_bytes(data))?;
+            for k in 0..ctx.p() {
+                if k != root {
+                    ctx.put(
+                        self.gather_slot,
+                        k as usize * len,
+                        k,
+                        self.send_slot,
+                        0,
+                        len,
+                        MSG_DEFAULT,
+                    )?;
+                }
+            }
+        }
+        ctx.sync(SYNC_DEFAULT)?;
+        if ctx.pid() == root {
+            self.read_back(ctx, self.gather_slot, root as usize * len, out)?;
+        } else {
+            self.read_back(ctx, self.send_slot, 0, out)?;
+        }
+        Ok(())
+    }
+
+    /// All-to-all: block `k` of `send` goes to process `k`; `recv[k]`
+    /// receives process `k`'s block for me. One superstep, `h = (p−1)·len`.
+    pub fn alltoall<T: Pod>(&self, ctx: &mut Context, send: &[T], recv: &mut [T]) -> Result<()> {
+        let p = ctx.p() as usize;
+        if send.len() != recv.len() || send.len() % p != 0 {
+            return Err(LpfError::Illegal("alltoall buffers must be p×block".into()));
+        }
+        let block = std::mem::size_of_val(send) / p;
+        self.check_len(block * p)?;
+        ctx.write_slot(self.send_slot, 0, pod_bytes(send))?;
+        let me = ctx.pid() as usize;
+        for k in 0..p {
+            if k == me {
+                continue;
+            }
+            ctx.put(
+                self.send_slot,
+                k * block,
+                k as u32,
+                self.gather_slot,
+                me * block,
+                block,
+                MSG_DEFAULT,
+            )?;
+        }
+        ctx.sync(SYNC_DEFAULT)?;
+        // self block
+        ctx.with_slot(self.send_slot, |_| ())?;
+        let mut self_block = vec![0u8; block];
+        ctx.read_slot(self.send_slot, me * block, &mut self_block)?;
+        ctx.write_slot(self.gather_slot, me * block, &self_block)?;
+        self.read_back(ctx, self.gather_slot, 0, recv)
+    }
+
+    /// Reduce every process's `mine` with `op` into `root`'s `out`.
+    /// One superstep (direct gather) + local fold: `h = (p−1)·len`.
+    pub fn reduce<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        root: u32,
+        mine: &[T],
+        out: &mut [T],
+        op: impl Fn(T, T) -> T,
+    ) -> Result<()> {
+        let p = ctx.p() as usize;
+        let mut all = vec![mine[0]; mine.len() * p];
+        self.gather(ctx, root, mine, if ctx.pid() == root { &mut all } else { &mut [] })?;
+        if ctx.pid() == root {
+            out.copy_from_slice(&all[..mine.len()]);
+            for k in 1..p {
+                for (o, v) in out.iter_mut().zip(&all[k * mine.len()..(k + 1) * mine.len()]) {
+                    *o = op(*o, *v);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Allreduce: like [`reduce`](Coll::reduce) but every process gets the
+    /// result. One superstep (allgather) + local fold.
+    pub fn allreduce<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        mine: &[T],
+        out: &mut [T],
+        op: impl Fn(T, T) -> T,
+    ) -> Result<()> {
+        let p = ctx.p() as usize;
+        let mut all = vec![mine[0]; mine.len() * p];
+        self.allgather(ctx, mine, &mut all)?;
+        out.copy_from_slice(&all[..mine.len()]);
+        for k in 1..p {
+            for (o, v) in out.iter_mut().zip(&all[k * mine.len()..(k + 1) * mine.len()]) {
+                *o = op(*o, *v);
+            }
+        }
+        Ok(())
+    }
+
+    /// Inclusive prefix scan: `out = op(mine_0, …, mine_pid)` elementwise.
+    /// One superstep (allgather) + local fold over the prefix.
+    pub fn scan<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        mine: &[T],
+        out: &mut [T],
+        op: impl Fn(T, T) -> T,
+    ) -> Result<()> {
+        let p = ctx.p() as usize;
+        let mut all = vec![mine[0]; mine.len() * p];
+        self.allgather(ctx, mine, &mut all)?;
+        out.copy_from_slice(&all[..mine.len()]);
+        for k in 1..=ctx.pid() as usize {
+            for (o, v) in out.iter_mut().zip(&all[k * mine.len()..(k + 1) * mine.len()]) {
+                *o = op(*o, *v);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Args;
+    use crate::ctx::{exec, Platform, Root};
+
+    fn with_coll(p: u32, max_bytes: usize, f: impl Fn(&mut Context, &Coll) + Sync) {
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(p);
+        exec(
+            &root,
+            p,
+            move |ctx, _| {
+                ctx.resize_memory_register(8).unwrap();
+                ctx.resize_message_queue(4 * ctx.p() as usize).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let coll = Coll::new(ctx, max_bytes).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                f(ctx, &coll);
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn broadcast_small_one_phase() {
+        with_coll(4, 64, |ctx, coll| {
+            let mut data = if ctx.pid() == 2 { [7u64, 8, 9] } else { [0u64; 3] };
+            coll.broadcast(ctx, 2, &mut data).unwrap();
+            assert_eq!(data, [7, 8, 9]);
+        });
+    }
+
+    #[test]
+    fn broadcast_large_two_phase() {
+        with_coll(4, 1 << 16, |ctx, coll| {
+            let n = 8192usize;
+            let mut data: Vec<u32> =
+                if ctx.pid() == 0 { (0..n as u32).collect() } else { vec![0; n] };
+            coll.broadcast(ctx, 0, &mut data).unwrap();
+            assert!(data.iter().enumerate().all(|(i, &v)| v == i as u32));
+        });
+    }
+
+    #[test]
+    fn allgather_orders_by_pid() {
+        with_coll(4, 16, |ctx, coll| {
+            let mine = [ctx.pid() as u64 * 10];
+            let mut out = [0u64; 4];
+            coll.allgather(ctx, &mine, &mut out).unwrap();
+            assert_eq!(out, [0, 10, 20, 30]);
+        });
+    }
+
+    #[test]
+    fn gather_only_root_sees_all() {
+        with_coll(3, 16, |ctx, coll| {
+            let mine = [ctx.pid() as f64 + 0.5];
+            let mut out = [0f64; 3];
+            coll.gather(ctx, 1, &mine, &mut out).unwrap();
+            if ctx.pid() == 1 {
+                assert_eq!(out, [0.5, 1.5, 2.5]);
+            } else {
+                assert_eq!(out, [0.0; 3]);
+            }
+        });
+    }
+
+    #[test]
+    fn scatter_blocks_land_by_pid() {
+        with_coll(4, 64, |ctx, coll| {
+            let data: Vec<u32> = if ctx.pid() == 0 { (0..8).collect() } else { vec![] };
+            let mut out = [0u32; 2];
+            coll.scatter(ctx, 0, &data, &mut out).unwrap();
+            assert_eq!(out, [2 * ctx.pid(), 2 * ctx.pid() + 1]);
+        });
+    }
+
+    #[test]
+    fn alltoall_transposes() {
+        with_coll(4, 64, |ctx, coll| {
+            let me = ctx.pid();
+            let send: Vec<u32> = (0..4).map(|k| me * 100 + k).collect();
+            let mut recv = [0u32; 4];
+            coll.alltoall(ctx, &send, &mut recv).unwrap();
+            let expect: Vec<u32> = (0..4).map(|k| k * 100 + me).collect();
+            assert_eq!(recv.to_vec(), expect);
+        });
+    }
+
+    #[test]
+    fn allreduce_sums() {
+        with_coll(4, 32, |ctx, coll| {
+            let mine = [ctx.pid() as u64 + 1, 1];
+            let mut out = [0u64; 2];
+            coll.allreduce(ctx, &mine, &mut out, |a, b| a + b).unwrap();
+            assert_eq!(out, [1 + 2 + 3 + 4, 4]);
+        });
+    }
+
+    #[test]
+    fn reduce_max_at_root() {
+        with_coll(4, 16, |ctx, coll| {
+            let mine = [(ctx.pid() as i64 - 2).abs()];
+            let mut out = [0i64];
+            coll.reduce(ctx, 0, &mine, &mut out, i64::max).unwrap();
+            if ctx.pid() == 0 {
+                assert_eq!(out[0], 2);
+            }
+        });
+    }
+
+    #[test]
+    fn scan_inclusive_prefix() {
+        with_coll(4, 16, |ctx, coll| {
+            let mine = [ctx.pid() as u64 + 1];
+            let mut out = [0u64];
+            coll.scan(ctx, &mine, &mut out, |a, b| a + b).unwrap();
+            let expect: u64 = (1..=ctx.pid() as u64 + 1).sum();
+            assert_eq!(out[0], expect);
+        });
+    }
+
+    #[test]
+    fn oversize_payload_rejected() {
+        with_coll(2, 8, |ctx, coll| {
+            let mut data = [0u64; 4]; // 32 B > 8 B workspace
+            let err = coll.broadcast(ctx, 0, &mut data).unwrap_err();
+            assert!(matches!(err, LpfError::Illegal(_)));
+        });
+    }
+}

@@ -1,0 +1,82 @@
+//! LPF error model.
+//!
+//! The paper (§2.1) distinguishes *user-mitigable* errors — such as
+//! out-of-memory conditions, which are guaranteed to have no side effects —
+//! from *fatal* errors. LPF maintains only **local** error state; a global
+//! state would require costly periodic inter-process interaction. Only
+//! `lpf_sync`, `lpf_exec`, `lpf_hook` and `lpf_rehook` may fail fatally due
+//! to *remote* errors, at the latest when attempting to communicate with an
+//! aborted LPF process.
+
+use thiserror::Error;
+
+/// Errors returned by LPF primitives.
+///
+/// Mitigable errors (`OutOfMemory`, `SlotCapacity`, `QueueCapacity`) are
+/// guaranteed to leave the context unchanged: the offending operation is not
+/// partially applied and the program may retry after raising capacities.
+#[derive(Debug, Clone, PartialEq, Eq, Error)]
+pub enum LpfError {
+    /// Heap memory for buffers could not be reserved. Mitigable.
+    #[error("out of memory: {0}")]
+    OutOfMemory(String),
+    /// The memory-slot register is full; raise it with
+    /// [`resize_memory_register`](crate::ctx::Context::resize_memory_register).
+    /// Mitigable, no side effects.
+    #[error("memory register full: capacity {capacity}, in use {in_use}")]
+    SlotCapacity { capacity: usize, in_use: usize },
+    /// The message queue is full; raise it with
+    /// [`resize_message_queue`](crate::ctx::Context::resize_message_queue).
+    /// Mitigable, no side effects.
+    #[error("message queue full: capacity {capacity} messages")]
+    QueueCapacity { capacity: usize },
+    /// An argument violated a documented precondition (e.g. out-of-range
+    /// offset, unknown slot, write overlapping a read). These indicate
+    /// program bugs; LPF detects what it can cheaply and in checked builds.
+    #[error("illegal argument: {0}")]
+    Illegal(String),
+    /// A peer process aborted; the context is unusable. Fatal. Observed only
+    /// by `sync`, `exec`, `hook`, and `rehook`, as the paper prescribes.
+    #[error("fatal: peer {pid} aborted the context")]
+    PeerAborted { pid: u32 },
+    /// Unrecoverable internal failure (transport torn down, poisoned state).
+    #[error("fatal: {0}")]
+    Fatal(String),
+}
+
+impl LpfError {
+    /// True for errors the paper classifies as user-mitigable: the call had
+    /// no side effects and the program may continue in the same context.
+    pub fn is_mitigable(&self) -> bool {
+        matches!(
+            self,
+            LpfError::OutOfMemory(_)
+                | LpfError::SlotCapacity { .. }
+                | LpfError::QueueCapacity { .. }
+        )
+    }
+}
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, LpfError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mitigable_classification_matches_paper() {
+        assert!(LpfError::OutOfMemory("x".into()).is_mitigable());
+        assert!(LpfError::SlotCapacity { capacity: 1, in_use: 1 }.is_mitigable());
+        assert!(LpfError::QueueCapacity { capacity: 0 }.is_mitigable());
+        assert!(!LpfError::PeerAborted { pid: 3 }.is_mitigable());
+        assert!(!LpfError::Fatal("x".into()).is_mitigable());
+        assert!(!LpfError::Illegal("x".into()).is_mitigable());
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let e = LpfError::SlotCapacity { capacity: 4, in_use: 4 };
+        assert!(e.to_string().contains("capacity 4"));
+    }
+}

@@ -1,0 +1,109 @@
+//! BSP machine parameters, as returned by `lpf_probe`.
+//!
+//! The paper (§2.2) requires `lpf_probe` to run in Ω(1); implementations may
+//! use an offline benchmark to fill a Θ(1) lookup table (as we do — see
+//! [`crate::probe`]), or benchmark online at arbitrary cost.
+
+/// The BSP triple for one word size: `T(h) = g·h + ℓ`.
+///
+/// Units follow the paper's Table 3: `g` is in time-units per *word* (the
+/// word size `w` in bytes is part of the record), `ℓ` in time-units.
+/// Internally we keep nanoseconds; the Table-3 printer normalises by the
+/// measured memcpy speed `r`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BspParams {
+    /// Word size in bytes this record was measured at.
+    pub word_bytes: usize,
+    /// Per-word throughput cost, ns/word.
+    pub g_ns: f64,
+    /// Latency / synchronisation cost, ns.
+    pub l_ns: f64,
+}
+
+/// Everything `lpf_probe` reports about the machine underneath a context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineParams {
+    /// Number of processes in the probed context.
+    pub p: u32,
+    /// Upper bound on processes a fresh `exec` could obtain.
+    pub free_p: u32,
+    /// `(g, ℓ)` per word size, ascending by `word_bytes`. Non-empty.
+    pub params: Vec<BspParams>,
+    /// Measured memcpy speed `r` in ns/byte (Table 3 normaliser).
+    pub r_ns_per_byte: f64,
+}
+
+impl MachineParams {
+    /// Fallback used before any offline probe data exists: conservative
+    /// constants so algorithm parametrisation still functions.
+    pub fn conservative(p: u32) -> Self {
+        MachineParams {
+            p,
+            free_p: p,
+            params: vec![BspParams { word_bytes: 8, g_ns: 10.0, l_ns: 10_000.0 }],
+            r_ns_per_byte: 1.0,
+        }
+    }
+
+    /// `(g, ℓ)` in ns for a message granularity of `word_bytes`, picking the
+    /// closest measured word size at or below the request (Θ(1)–Θ(#records)
+    /// with #records a small constant — table lookup, per the paper).
+    pub fn at_word(&self, word_bytes: usize) -> BspParams {
+        let mut best = self.params[0];
+        for rec in &self.params {
+            if rec.word_bytes <= word_bytes {
+                best = *rec;
+            }
+        }
+        best
+    }
+
+    /// Predicted time in ns to execute an `h`-relation of `h` words of size
+    /// `word_bytes`: the model-compliance contract `T(h) = g·h + ℓ`.
+    pub fn h_relation_ns(&self, h: usize, word_bytes: usize) -> f64 {
+        let BspParams { g_ns, l_ns, .. } = self.at_word(word_bytes);
+        g_ns * h as f64 + l_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mp() -> MachineParams {
+        MachineParams {
+            p: 4,
+            free_p: 4,
+            params: vec![
+                BspParams { word_bytes: 8, g_ns: 100.0, l_ns: 5000.0 },
+                BspParams { word_bytes: 1024, g_ns: 10.0, l_ns: 5000.0 },
+            ],
+            r_ns_per_byte: 0.8,
+        }
+    }
+
+    #[test]
+    fn at_word_picks_floor_record() {
+        assert_eq!(mp().at_word(8).g_ns, 100.0);
+        assert_eq!(mp().at_word(512).g_ns, 100.0);
+        assert_eq!(mp().at_word(1024).g_ns, 10.0);
+        assert_eq!(mp().at_word(1 << 20).g_ns, 10.0);
+    }
+
+    #[test]
+    fn h_relation_is_affine() {
+        let m = mp();
+        let t0 = m.h_relation_ns(0, 8);
+        let t1 = m.h_relation_ns(1, 8);
+        let t2 = m.h_relation_ns(2, 8);
+        assert_eq!(t0, 5000.0);
+        assert!((t2 - t1 - (t1 - t0)).abs() < 1e-9, "affine in h");
+    }
+
+    #[test]
+    fn conservative_is_usable() {
+        let m = MachineParams::conservative(3);
+        assert_eq!(m.p, 3);
+        assert!(m.h_relation_ns(10, 8) > 0.0);
+    }
+}

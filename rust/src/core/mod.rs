@@ -1,0 +1,130 @@
+//! Core LPF types: process ids, memory-slot handles, SPMD arguments, and
+//! machine parameters (the BSP triple `(p, g, ℓ)` exposed by `lpf_probe`).
+
+pub mod error;
+pub mod machine;
+
+pub use error::{LpfError, Result};
+pub use machine::MachineParams;
+
+/// Process identifier within a context: `0 <= s < p`, as in the paper.
+pub type Pid = u32;
+
+/// Maximum parallelism request for [`exec`](crate::ctx::exec): "use all
+/// available processes". Mirrors `LPF_MAX_P`.
+pub const MAX_P: Pid = Pid::MAX;
+
+/// Which register a slot lives in.
+///
+/// `lpf_register_local` creates slots only ever referred to by the local
+/// process; `lpf_register_global` is collective and produces slots whose ids
+/// align across all processes of the context, so they can name *remote*
+/// memory in `put`/`get`. Keeping the two id spaces separate lets local
+/// registrations proceed without any collective coordination (O(1), paper
+/// Fig. 1) while preserving global id alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SlotKind {
+    /// Registered via `register_local`; valid only on the owning process.
+    Local,
+    /// Registered via the collective `register_global`; the same id denotes
+    /// the "same" (per-process) area on every process.
+    Global,
+}
+
+/// A memory-slot handle (`lpf_memslot_t`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Memslot {
+    pub(crate) kind: SlotKind,
+    pub(crate) index: u32,
+    /// Epoch guard: slots from a deregistered generation are rejected in
+    /// checked builds.
+    pub(crate) gen: u32,
+}
+
+impl Memslot {
+    /// Which register this slot lives in.
+    pub fn kind(&self) -> SlotKind {
+        self.kind
+    }
+    /// Index within its register (diagnostic; stable until deregistered).
+    pub fn index(&self) -> u32 {
+        self.index
+    }
+}
+
+/// SPMD arguments (`lpf_args_t`): an input broadcast to every process and a
+/// per-process output collected by `exec`/`hook`/`rehook`.
+///
+/// The C API passes raw byte buffers plus an optional symbol table; in Rust
+/// we use owned bytes. Typed wrappers live in [`crate::ctx`].
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Input payload, broadcast to all processes (may be empty, cf.
+    /// `LPF_NO_ARGS`).
+    pub input: Vec<u8>,
+}
+
+impl Args {
+    /// No arguments — mirrors `LPF_NO_ARGS`.
+    pub const fn none() -> Self {
+        Args { input: Vec::new() }
+    }
+
+    /// Wrap an input payload.
+    pub fn input(bytes: impl Into<Vec<u8>>) -> Self {
+        Args { input: bytes.into() }
+    }
+}
+
+/// Attributes to `put`/`get` (`lpf_msg_attr_t`). The core defines only the
+/// default; extensions may relax guarantees (paper §2.1).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MsgAttr {
+    /// Promise that this message does not overlap any other write. An
+    /// implementation may then skip conflict resolution for it.
+    pub no_conflict: bool,
+}
+
+/// `LPF_MSG_DEFAULT`.
+pub const MSG_DEFAULT: MsgAttr = MsgAttr { no_conflict: false };
+
+/// Attributes to `sync` (`lpf_sync_attr_t`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SyncAttr {
+    /// Caller asserts the whole superstep is free of write conflicts;
+    /// the engine may skip the conflict-resolution phase, lowering the
+    /// effective `g` (paper §2.1 names exactly this optimisation).
+    pub assume_no_conflicts: bool,
+}
+
+/// `LPF_SYNC_DEFAULT`.
+pub const SYNC_DEFAULT: SyncAttr = SyncAttr { assume_no_conflicts: false };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_none_is_empty() {
+        assert!(Args::none().input.is_empty());
+    }
+
+    #[test]
+    fn args_input_roundtrip() {
+        let a = Args::input(vec![1u8, 2, 3]);
+        assert_eq!(a.input, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn memslot_accessors() {
+        let m = Memslot { kind: SlotKind::Global, index: 7, gen: 0 };
+        assert_eq!(m.kind(), SlotKind::Global);
+        assert_eq!(m.index(), 7);
+    }
+
+    #[test]
+    fn default_attrs_are_strict() {
+        assert!(!MSG_DEFAULT.no_conflict);
+        assert!(!SYNC_DEFAULT.assume_no_conflicts);
+    }
+}

@@ -1,0 +1,299 @@
+//! `lpf_hook` and the `lpf_init_t` rendezvous — LPF's interoperability
+//! mechanism (paper §2.3, Algorithm 3, and the Spark integration of §4.3).
+//!
+//! The paper's distributed implementations create an `lpf_init_t` over
+//! TCP/IP: every process calls `lpf_mpi_initialize_over_tcp(hostname, port,
+//! timeout, pid, nprocs, &init)` where one peer is the master, then calls
+//! `lpf_hook(init, spmd, args)` any number of times. We reproduce this
+//! 1:1 for threads of arbitrary host frameworks (sparksim workers in the
+//! Table-4 experiment): the "master hostname:port" string keys a global
+//! rendezvous; `pid`/`nprocs` are supplied by the host framework exactly as
+//! Spark workers derive them from a broadcast hostname array.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::{run_spmd, Context, ContextGroup, Platform};
+use crate::core::{Args, LpfError, Pid, Result};
+
+/// Shared rendezvous state for one master address.
+struct Rendezvous {
+    nprocs: Pid,
+    platform: Platform,
+    state: Mutex<RendezvousState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct RendezvousState {
+    /// Group for each hook epoch; entries retired once all procs leave.
+    groups: HashMap<u64, (Arc<ContextGroup>, Pid)>,
+    /// Processes that ever arrived (monotonic — a fast peer finalising
+    /// must not make a slow peer miss the rendezvous).
+    arrived: Pid,
+    /// Processes currently holding the init (registry cleanup).
+    registered: Pid,
+}
+
+/// `lpf_init_t`: one process's handle for hooking into a context shared
+/// with `nprocs − 1` peers. Not `Send`: like the paper's object it belongs
+/// to the process that created it.
+pub struct Init {
+    rendezvous: Arc<Rendezvous>,
+    pid: Pid,
+    nprocs: Pid,
+    epoch: AtomicU32,
+    finalized: bool,
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Arc<Rendezvous>>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, Arc<Rendezvous>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+impl Init {
+    /// The analogue of `lpf_mpi_initialize_over_tcp`: rendezvous `nprocs`
+    /// processes on the master address `master` (any unique string — the
+    /// paper uses `hostname:port`). Blocks until all peers arrived or
+    /// `timeout` elapses. `platform` must agree across peers (the first
+    /// arrival's platform wins; mismatches are reported).
+    pub fn over_master(
+        master: &str,
+        pid: Pid,
+        nprocs: Pid,
+        timeout: Duration,
+        platform: Platform,
+    ) -> Result<Init> {
+        if nprocs == 0 || pid >= nprocs {
+            return Err(LpfError::Illegal(format!("pid {pid} not in 0..{nprocs}")));
+        }
+        let rv = {
+            let mut reg = registry().lock().unwrap();
+            reg.entry(master.to_string())
+                .or_insert_with(|| {
+                    Arc::new(Rendezvous {
+                        nprocs,
+                        platform: platform.clone(),
+                        state: Mutex::new(RendezvousState::default()),
+                        cv: Condvar::new(),
+                    })
+                })
+                .clone()
+        };
+        if rv.nprocs != nprocs {
+            return Err(LpfError::Illegal(format!(
+                "master {master}: peer expects {} processes, this one {nprocs}",
+                rv.nprocs
+            )));
+        }
+        // Wait until all peers registered (the TCP accept loop analogue).
+        let deadline = Instant::now() + timeout;
+        let mut st = rv.state.lock().unwrap();
+        st.arrived += 1;
+        st.registered += 1;
+        rv.cv.notify_all();
+        while st.arrived < nprocs {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                let missing = nprocs - st.arrived;
+                st.arrived -= 1;
+                st.registered -= 1;
+                return Err(LpfError::Fatal(format!(
+                    "initialize_over_tcp timed out waiting for {missing} of {nprocs} peers"
+                )));
+            }
+            let (g, _) = rv.cv.wait_timeout(st, left.min(Duration::from_millis(20))).unwrap();
+            st = g;
+        }
+        rv.cv.notify_all();
+        drop(st);
+        Ok(Init {
+            rendezvous: rv,
+            pid,
+            nprocs,
+            epoch: AtomicU32::new(0),
+            finalized: false,
+        })
+    }
+
+    /// This process's id within the hooked context.
+    pub fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    /// Number of processes the context will have.
+    pub fn nprocs(&self) -> Pid {
+        self.nprocs
+    }
+
+    /// `lpf_mpi_finalize`: release the init. The registry entry is removed
+    /// when the last peer finalises, so the master address can be reused.
+    pub fn finalize(mut self) {
+        self.do_finalize();
+    }
+
+    fn do_finalize(&mut self) {
+        if self.finalized {
+            return;
+        }
+        self.finalized = true;
+        let mut reg = registry().lock().unwrap();
+        let mut st = self.rendezvous.state.lock().unwrap();
+        st.registered -= 1;
+        if st.registered == 0 {
+            // last one out: retire the master address
+            reg.retain(|_, v| !Arc::ptr_eq(v, &self.rendezvous));
+        }
+    }
+}
+
+impl Drop for Init {
+    fn drop(&mut self) {
+        self.do_finalize();
+    }
+}
+
+/// `lpf_hook`: enter an SPMD context from existing processes. May be called
+/// any number of times while the `Init` is valid (paper §2.3); each call is
+/// collective over all `nprocs` peers and builds a pristine context.
+pub fn hook<O, F>(init: &Init, spmd: F, args: Args) -> Result<O>
+where
+    F: Fn(&mut Context, Args) -> O,
+{
+    if init.finalized {
+        return Err(LpfError::Illegal("hook on finalized init".into()));
+    }
+    let epoch = init.epoch.fetch_add(1, Ordering::SeqCst) as u64;
+    let rv = &init.rendezvous;
+    // First arrival of this epoch creates the group; all wait for it.
+    let group = {
+        let mut st = rv.state.lock().unwrap();
+        let entry = st.groups.entry(epoch).or_insert_with(|| {
+            (ContextGroup::new(rv.platform.clone(), rv.nprocs), 0)
+        });
+        entry.1 += 1;
+        let g = entry.0.clone();
+        if entry.1 == rv.nprocs {
+            st.groups.remove(&epoch); // everyone has a handle
+        }
+        rv.cv.notify_all();
+        g
+    };
+    run_spmd(group, init.pid, &spmd, args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{MSG_DEFAULT, SYNC_DEFAULT};
+
+    /// Simulate a host framework: n worker threads, each creating its own
+    /// Init over the same master and hooking an LPF context — the paper's
+    /// Algorithm 3 shape.
+    #[test]
+    fn hook_joins_foreign_threads() {
+        let n: Pid = 4;
+        let outs: Vec<u32> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|pid| {
+                    s.spawn(move || {
+                        let init = Init::over_master(
+                            "master-a:9001",
+                            pid,
+                            n,
+                            Duration::from_secs(120),
+                            Platform::shared().checked(true),
+                        )
+                        .unwrap();
+                        let out = hook(
+                            &init,
+                            |ctx, _| {
+                                // allgather of pids via puts (distinct
+                                // source and destination slots, as in the
+                                // paper's Algorithm 2)
+                                ctx.resize_memory_register(2).unwrap();
+                                ctx.resize_message_queue(ctx.p() as usize).unwrap();
+                                ctx.sync(SYNC_DEFAULT).unwrap();
+                                let mine = ctx.register_global(4).unwrap();
+                                let all = ctx.register_global(4 * ctx.p() as usize).unwrap();
+                                ctx.write_typed(mine, 0, &[ctx.pid()]).unwrap();
+                                for k in 0..ctx.p() {
+                                    ctx.put(
+                                        mine,
+                                        0,
+                                        k,
+                                        all,
+                                        ctx.pid() as usize * 4,
+                                        4,
+                                        MSG_DEFAULT,
+                                    )
+                                    .unwrap();
+                                }
+                                ctx.sync(SYNC_DEFAULT).unwrap();
+                                let mut pids = vec![0u32; ctx.p() as usize];
+                                ctx.read_typed(all, 0, &mut pids).unwrap();
+                                pids.iter().sum::<u32>()
+                            },
+                            Args::none(),
+                        )
+                        .unwrap();
+                        init.finalize();
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(outs.iter().all(|&x| x == 0 + 1 + 2 + 3));
+    }
+
+    #[test]
+    fn hook_multiple_times_same_init() {
+        let n: Pid = 2;
+        std::thread::scope(|s| {
+            for pid in 0..n {
+                s.spawn(move || {
+                    let init = Init::over_master(
+                        "master-b:9002",
+                        pid,
+                        n,
+                        Duration::from_secs(120),
+                        Platform::shared(),
+                    )
+                    .unwrap();
+                    for round in 0..3u32 {
+                        let out =
+                            hook(&init, |ctx, _| ctx.pid() + 100, Args::none()).unwrap();
+                        assert_eq!(out, pid + 100, "round {round}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn init_timeout_when_peers_missing() {
+        let res = Init::over_master(
+            "master-lonely:9003",
+            0,
+            2,
+            Duration::from_millis(50),
+            Platform::shared(),
+        );
+        assert!(matches!(res, Err(LpfError::Fatal(_))));
+    }
+
+    #[test]
+    fn init_rejects_bad_pid() {
+        let res = Init::over_master(
+            "master-bad:9004",
+            5,
+            2,
+            Duration::from_millis(10),
+            Platform::shared(),
+        );
+        assert!(matches!(res, Err(LpfError::Illegal(_))));
+    }
+}

@@ -1,0 +1,632 @@
+//! Contexts and the twelve LPF primitives (paper §2, Fig. 1).
+//!
+//! | paper                        | here                                   |
+//! |------------------------------|----------------------------------------|
+//! | `lpf_exec`                   | [`exec`]                               |
+//! | `lpf_hook`                   | [`hook`] + [`Init`]                    |
+//! | `lpf_rehook`                 | [`Context::rehook`]                    |
+//! | `lpf_register_local`         | [`Context::register_local`]            |
+//! | `lpf_register_global`        | [`Context::register_global`]           |
+//! | `lpf_deregister`             | [`Context::deregister`]                |
+//! | `lpf_put`                    | [`Context::put`]                       |
+//! | `lpf_get`                    | [`Context::get`]                       |
+//! | `lpf_sync`                   | [`Context::sync`]                      |
+//! | `lpf_probe`                  | [`Context::probe`]                     |
+//! | `lpf_resize_memory_register` | [`Context::resize_memory_register`]    |
+//! | `lpf_resize_message_queue`   | [`Context::resize_message_queue`]      |
+//!
+//! SPMD functions are Rust closures `Fn(&mut Context, Args) -> O`; `exec`
+//! spawns new processes (threads), `hook` enters a context from *existing*
+//! processes (the interoperability mechanism of §2.3/§4.3), and `rehook`
+//! temporarily replaces an active context with a pristine one (library
+//! encapsulation).
+
+mod init;
+mod platform;
+
+pub use init::{hook, Init};
+pub use platform::Platform;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+
+use crate::core::{Args, LpfError, MachineParams, Memslot, MsgAttr, Pid, Result, SyncAttr};
+use crate::fabric::Fabric;
+use crate::memory::SlotStorage;
+use crate::probe::ProbeTable;
+use crate::queue::{GetReq, MsgQueue, PutReq};
+
+/// State shared by the `p` processes of one context.
+pub(crate) struct ContextGroup {
+    pub(crate) fabric: Arc<dyn Fabric>,
+    pub(crate) platform: Platform,
+    /// Slot used by `rehook` to hand the pristine child group to peers.
+    child: Mutex<Option<Arc<ContextGroup>>>,
+    probe: Arc<ProbeTable>,
+}
+
+impl ContextGroup {
+    pub(crate) fn new(platform: Platform, p: Pid) -> Arc<Self> {
+        Arc::new(ContextGroup {
+            fabric: platform.make_fabric(p),
+            platform,
+            child: Mutex::new(None),
+            probe: ProbeTable::global(),
+        })
+    }
+}
+
+/// The LPF run-time state handed to an SPMD function (`lpf_t`).
+///
+/// Not `Send`/`Sync`: a context belongs to exactly one process, and a
+/// process is active in at most one context at a time (paper §2.1 —
+/// contexts put on hold by `exec`/`rehook` are represented by `&mut`
+/// reborrow exclusivity).
+pub struct Context {
+    pid: Pid,
+    p: Pid,
+    group: Arc<ContextGroup>,
+    queue: MsgQueue,
+    /// Set when the SPMD function completes normally; `Drop` otherwise
+    /// marks the process aborted so peers fail fatally instead of hanging.
+    clean: bool,
+}
+
+impl Context {
+    pub(crate) fn new(group: Arc<ContextGroup>, pid: Pid) -> Self {
+        let p = group.fabric.p();
+        Context { pid, p, group, queue: MsgQueue::new(), clean: false }
+    }
+
+    /// This process's id `s ∈ {0, …, p−1}`.
+    pub fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    /// Number of processes `p` in this context.
+    pub fn p(&self) -> Pid {
+        self.p
+    }
+
+    // ---------------------------------------------------------- registration
+
+    /// `lpf_register_local`: O(1) amortised; the slot is visible only to
+    /// this process. Storage is owned by the register (zero-initialised).
+    pub fn register_local(&mut self, len: usize) -> Result<Memslot> {
+        let storage = SlotStorage::new(len)?;
+        self.group.fabric.register_of(self.pid).with_mut(|r| r.register_local(storage))
+    }
+
+    /// `lpf_register_global`: collective; ids align across processes when
+    /// every process performs the same sequence of global (de)registrations
+    /// — the LPF contract. Takes effect for communication at the next
+    /// `sync`, exactly as in the paper's Algorithm 2.
+    pub fn register_global(&mut self, len: usize) -> Result<Memslot> {
+        let storage = SlotStorage::new(len)?;
+        self.group.fabric.register_of(self.pid).with_mut(|r| r.register_global(storage))
+    }
+
+    /// `lpf_deregister`: O(1); frees the slot for reuse.
+    pub fn deregister(&mut self, slot: Memslot) -> Result<()> {
+        self.group.fabric.register_of(self.pid).with_mut(|r| r.deregister(slot))
+    }
+
+    /// `lpf_resize_memory_register`: O(N); active after the next `sync`.
+    pub fn resize_memory_register(&mut self, max_slots: usize) -> Result<()> {
+        self.group.fabric.register_of(self.pid).with_mut(|r| r.resize(max_slots))
+    }
+
+    /// `lpf_resize_message_queue`: O(N); active after the next `sync`.
+    pub fn resize_message_queue(&mut self, max_msgs: usize) -> Result<()> {
+        self.queue.resize(max_msgs)
+    }
+
+    // ---------------------------------------------------------- slot access
+
+    /// Read bytes from one of this process's slots (outside communication).
+    pub fn read_slot(&self, slot: Memslot, off: usize, out: &mut [u8]) -> Result<()> {
+        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        if off + out.len() > st.len() {
+            return Err(LpfError::Illegal(format!(
+                "read {off}+{} beyond slot of {}",
+                out.len(),
+                st.len()
+            )));
+        }
+        // SAFETY: superstep discipline — no communication in flight.
+        out.copy_from_slice(unsafe { &st.bytes()[off..off + out.len()] });
+        Ok(())
+    }
+
+    /// Write bytes into one of this process's slots (outside communication).
+    pub fn write_slot(&mut self, slot: Memslot, off: usize, data: &[u8]) -> Result<()> {
+        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        if off + data.len() > st.len() {
+            return Err(LpfError::Illegal(format!(
+                "write {off}+{} beyond slot of {}",
+                data.len(),
+                st.len()
+            )));
+        }
+        // SAFETY: superstep discipline; this process owns the slot.
+        unsafe { st.bytes_mut()[off..off + data.len()].copy_from_slice(data) };
+        Ok(())
+    }
+
+    /// Closure access to a slot's bytes (owner, outside communication).
+    pub fn with_slot_mut<T>(&mut self, slot: Memslot, f: impl FnOnce(&mut [u8]) -> T) -> Result<T> {
+        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        // SAFETY: superstep discipline; this process owns the slot.
+        Ok(f(unsafe { st.bytes_mut() }))
+    }
+
+    /// Closure read access to a slot's bytes.
+    pub fn with_slot<T>(&self, slot: Memslot, f: impl FnOnce(&[u8]) -> T) -> Result<T> {
+        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        // SAFETY: superstep discipline.
+        Ok(f(unsafe { st.bytes() }))
+    }
+
+    /// Typed write helper: `data` as little-endian machine words.
+    pub fn write_typed<T: Pod>(&mut self, slot: Memslot, elem_off: usize, data: &[T]) -> Result<()> {
+        self.write_slot(slot, elem_off * size_of::<T>(), pod_bytes(data))
+    }
+
+    /// Typed read helper.
+    pub fn read_typed<T: Pod>(&self, slot: Memslot, elem_off: usize, out: &mut [T]) -> Result<()> {
+        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        let off = elem_off * size_of::<T>();
+        let len = size_of_val(out);
+        if off + len > st.len() {
+            return Err(LpfError::Illegal("typed read beyond slot".into()));
+        }
+        // SAFETY: superstep discipline + Pod invariant.
+        unsafe {
+            let src = &st.bytes()[off..off + len];
+            std::ptr::copy_nonoverlapping(src.as_ptr(), out.as_mut_ptr() as *mut u8, len);
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------- communication
+
+    /// `lpf_put`: O(1), touches no payload; copy `len` bytes from local
+    /// `(src_slot, src_off)` to `(dst_pid, dst_slot, dst_off)`. Completed
+    /// only by the next `sync`.
+    pub fn put(
+        &mut self,
+        src_slot: Memslot,
+        src_off: usize,
+        dst_pid: Pid,
+        dst_slot: Memslot,
+        dst_off: usize,
+        len: usize,
+        attr: MsgAttr,
+    ) -> Result<()> {
+        if dst_pid >= self.p {
+            return Err(LpfError::Illegal(format!("dst pid {dst_pid} out of range {}", self.p)));
+        }
+        self.queue.push_put(PutReq { src_slot, src_off, dst_pid, dst_slot, dst_off, len, attr })
+    }
+
+    /// `lpf_get`: O(1), touches no payload; copy `len` bytes from
+    /// `(src_pid, src_slot, src_off)` into local `(dst_slot, dst_off)`.
+    pub fn get(
+        &mut self,
+        src_pid: Pid,
+        src_slot: Memslot,
+        src_off: usize,
+        dst_slot: Memslot,
+        dst_off: usize,
+        len: usize,
+        attr: MsgAttr,
+    ) -> Result<()> {
+        if src_pid >= self.p {
+            return Err(LpfError::Illegal(format!("src pid {src_pid} out of range {}", self.p)));
+        }
+        self.queue.push_get(GetReq { src_pid, src_slot, src_off, dst_slot, dst_off, len, attr })
+    }
+
+    /// `lpf_sync`: execute the queued h-relation; `hg + ℓ` (paper §2.2).
+    /// The only fence: all puts/gets issued before it are visible after it.
+    pub fn sync(&mut self, attr: SyncAttr) -> Result<()> {
+        let reqs = self.queue.drain();
+        let res = self.group.fabric.sync(self.pid, reqs, attr);
+        // Capacities become active "after a fence provided each call
+        // completed successfully" (paper §2.2) — even a failed h-relation
+        // leaves capacities consistent because activation is local.
+        self.queue.activate_pending();
+        self.group.fabric.register_of(self.pid).with_mut(|r| r.activate_pending());
+        res
+    }
+
+    /// `lpf_probe`: Θ(1) lookup of the machine parameters underneath this
+    /// context (offline-benchmarked table, falling back to conservative
+    /// constants — paper §2.2 allows both).
+    pub fn probe(&self) -> MachineParams {
+        self.group.probe.lookup(self.group.fabric.name(), self.p)
+    }
+
+    /// `lpf_rehook`: temporarily replace this context with a pristine one
+    /// running `spmd`; this context is on hold meanwhile (paper §2.1:
+    /// "simplifies writing libraries").
+    pub fn rehook<O, F>(&mut self, spmd: F, args: Args) -> Result<O>
+    where
+        F: Fn(&mut Context, Args) -> O,
+    {
+        let fabric = &self.group.fabric;
+        fabric.barrier(self.pid)?;
+        if self.pid == 0 {
+            let child = ContextGroup::new(self.group.platform.clone(), self.p);
+            *self.group.child.lock().unwrap() = Some(child);
+        }
+        fabric.barrier(self.pid)?;
+        let child = self
+            .group
+            .child
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| LpfError::Fatal("rehook: child group missing".into()))?;
+        fabric.barrier(self.pid)?;
+        if self.pid == 0 {
+            *self.group.child.lock().unwrap() = None;
+        }
+        run_spmd(child, self.pid, &spmd, args)
+    }
+
+    /// Transport statistics (diagnostics; not part of the paper API).
+    pub fn stats(&self) -> crate::fabric::SyncStats {
+        self.group.fabric.stats(self.pid)
+    }
+
+    /// Simulated time for netsim-backed fabrics (None on real backends).
+    pub fn sim_time_ns(&self) -> Option<f64> {
+        self.group.fabric.sim_time_ns(self.pid)
+    }
+
+    /// Backend name ("shared", "msg", "rdma", "hybrid").
+    pub fn backend(&self) -> &'static str {
+        self.group.fabric.name()
+    }
+}
+
+impl Drop for Context {
+    fn drop(&mut self) {
+        if !self.clean {
+            // SPMD function unwound or returned early through `?`: mark the
+            // context aborted so peers observe PeerAborted (paper §2.1's
+            // natural error propagation without deadlocks).
+            self.group.fabric.abort(self.pid);
+        }
+    }
+}
+
+/// Run one process's SPMD body with abort-on-panic semantics.
+pub(crate) fn run_spmd<O, F>(group: Arc<ContextGroup>, pid: Pid, spmd: &F, args: Args) -> Result<O>
+where
+    F: Fn(&mut Context, Args) -> O,
+{
+    let mut ctx = Context::new(group, pid);
+    let out = catch_unwind(AssertUnwindSafe(|| spmd(&mut ctx, args)));
+    match out {
+        Ok(o) => {
+            ctx.clean = true;
+            drop(ctx);
+            Ok(o)
+        }
+        Err(_) => {
+            drop(ctx); // marks abort
+            Err(LpfError::Fatal(format!("SPMD function panicked on pid {pid}")))
+        }
+    }
+}
+
+/// The sequential "root" context (`LPF_ROOT`): configuration from which
+/// parallel contexts are launched.
+#[derive(Debug, Clone)]
+pub struct Root {
+    platform: Platform,
+    max_procs: Pid,
+}
+
+impl Root {
+    /// Root over the given platform with a default process budget.
+    pub fn new(platform: Platform) -> Self {
+        let max = std::thread::available_parallelism().map(|n| n.get() as Pid).unwrap_or(1);
+        // Oversubscription is meaningful for LPF (BSP processes are logical);
+        // default budget mirrors the paper's testbeds scaled to this host.
+        Root { platform, max_procs: max.max(8) }
+    }
+
+    /// Cap the number of processes `exec(MAX_P)` may create.
+    pub fn with_max_procs(mut self, p: Pid) -> Self {
+        self.max_procs = p.max(1);
+        self
+    }
+
+    /// The platform this root launches onto.
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+}
+
+impl Default for Root {
+    /// `LPF_ROOT`: the shared-memory platform, checked in debug builds.
+    fn default() -> Self {
+        Root::new(Platform::default())
+    }
+}
+
+/// `lpf_exec`: run `spmd` on `min(max_p, root budget)` new processes.
+/// Returns every process's output (index = pid). Cost O(Ng + ℓ) with N the
+/// argument size (one broadcast) plus process spawn.
+pub fn exec<O, F>(root: &Root, max_p: Pid, spmd: F, args: Args) -> Result<Vec<O>>
+where
+    F: Fn(&mut Context, Args) -> O + Sync,
+    O: Send,
+{
+    let p = max_p.min(root.max_procs).max(1);
+    let group = ContextGroup::new(root.platform.clone(), p);
+    let mut outs: Vec<Result<O>> = Vec::with_capacity(p as usize);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(p as usize);
+        for pid in 0..p {
+            let group = group.clone();
+            let spmd = &spmd;
+            let args = args.clone();
+            handles.push(s.spawn(move || run_spmd(group, pid, spmd, args)));
+        }
+        for h in handles {
+            outs.push(h.join().unwrap_or_else(|_| {
+                Err(LpfError::Fatal("SPMD thread terminated abnormally".into()))
+            }));
+        }
+    });
+    outs.into_iter().collect()
+}
+
+// ---------------------------------------------------------------- Pod bytes
+
+/// Plain-old-data marker for typed slot access.
+///
+/// # Safety
+/// Implementors must be valid for any bit pattern and contain no padding.
+pub unsafe trait Pod: Copy + 'static {}
+unsafe impl Pod for u8 {}
+unsafe impl Pod for i8 {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for i16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for usize {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+
+/// Reinterpret a Pod slice as bytes.
+pub fn pod_bytes<T: Pod>(data: &[T]) -> &[u8] {
+    // SAFETY: Pod guarantees no padding and all bit patterns valid.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, size_of_val(data)) }
+}
+
+use std::mem::{size_of, size_of_val};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{MSG_DEFAULT, SYNC_DEFAULT};
+
+    fn root() -> Root {
+        Root::new(Platform::shared().checked(true)).with_max_procs(8)
+    }
+
+    #[test]
+    fn exec_spawns_requested_processes() {
+        let outs = exec(&root(), 4, |ctx, _| (ctx.pid(), ctx.p()), Args::none()).unwrap();
+        assert_eq!(outs, vec![(0, 4), (1, 4), (2, 4), (3, 4)]);
+    }
+
+    #[test]
+    fn exec_caps_at_root_budget() {
+        let outs = exec(&root(), crate::core::MAX_P, |ctx, _| ctx.p(), Args::none()).unwrap();
+        assert_eq!(outs.len(), 8);
+    }
+
+    #[test]
+    fn args_are_broadcast() {
+        let outs = exec(
+            &root(),
+            3,
+            |_, args| args.input.clone(),
+            Args::input(vec![42u8, 7]),
+        )
+        .unwrap();
+        assert!(outs.iter().all(|o| o == &vec![42, 7]));
+    }
+
+    /// The paper's Algorithm-2 pattern: resize, sync, register, get, sync.
+    #[test]
+    fn algorithm2_bootstrap_pattern() {
+        let outs = exec(
+            &root(),
+            4,
+            |ctx, args| {
+                ctx.resize_memory_register(3).unwrap();
+                ctx.resize_message_queue(2 * ctx.p() as usize).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let mdim = ctx.register_global(8).unwrap();
+                if ctx.pid() == 0 {
+                    ctx.write_typed::<u32>(mdim, 0, &[u32::from_le_bytes(args.input[0..4].try_into().unwrap()), 77]).unwrap();
+                }
+                // everyone fetches the matrix size from root
+                if ctx.pid() != 0 {
+                    ctx.get(0, mdim, 0, mdim, 0, 8, MSG_DEFAULT).unwrap();
+                }
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let mut dims = [0u32; 2];
+                ctx.read_typed(mdim, 0, &mut dims).unwrap();
+                ctx.deregister(mdim).unwrap();
+                dims
+            },
+            Args::input(1000u32.to_le_bytes().to_vec()),
+        )
+        .unwrap();
+        assert!(outs.iter().all(|&d| d == [1000, 77]));
+    }
+
+    #[test]
+    fn crcw_error_broadcast_pattern() {
+        // Algorithm 2's error broadcast: erroring pid puts its code to all.
+        let outs = exec(
+            &root(),
+            4,
+            |ctx, _| {
+                ctx.resize_memory_register(2).unwrap();
+                ctx.resize_message_queue(2 * ctx.p() as usize).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let lerr = ctx.register_local(4).unwrap();
+                let gerr = ctx.register_global(4).unwrap();
+                let my_err: u32 = if ctx.pid() == 2 { 13 } else { 0 };
+                ctx.write_typed(lerr, 0, &[my_err]).unwrap();
+                if my_err != 0 {
+                    for k in 0..ctx.p() {
+                        ctx.put(lerr, 0, k, gerr, 0, 4, MSG_DEFAULT).unwrap();
+                    }
+                }
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let mut g = [0u32];
+                ctx.read_typed(gerr, 0, &mut g).unwrap();
+                g[0]
+            },
+            Args::none(),
+        )
+        .unwrap();
+        assert_eq!(outs, vec![13, 13, 13, 13]);
+    }
+
+    #[test]
+    fn queue_capacity_error_is_mitigable_mid_superstep() {
+        exec(
+            &root(),
+            2,
+            |ctx, _| {
+                ctx.resize_memory_register(1).unwrap();
+                ctx.resize_message_queue(1).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                // src range [0,4) and dst range [4,8) are disjoint: legal
+                let s = ctx.register_global(8).unwrap();
+                ctx.put(s, 0, (ctx.pid() + 1) % 2, s, 4, 4, MSG_DEFAULT).unwrap();
+                let err = ctx.put(s, 0, 0, s, 4, 4, MSG_DEFAULT).unwrap_err();
+                assert!(err.is_mitigable());
+                // mitigate: raise the capacity, sync, retry
+                ctx.resize_message_queue(8).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                ctx.put(s, 0, 0, s, 4, 4, MSG_DEFAULT).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn panic_in_one_process_is_fatal_for_all() {
+        let res = exec(
+            &root(),
+            3,
+            |ctx, _| {
+                if ctx.pid() == 1 {
+                    panic!("boom");
+                }
+                // peers block in a sync and must get PeerAborted, not hang
+                ctx.resize_message_queue(1).unwrap();
+                match ctx.sync(SYNC_DEFAULT) {
+                    Err(LpfError::PeerAborted { .. }) => (),
+                    other => panic!("expected PeerAborted, got {other:?}"),
+                }
+            },
+            Args::none(),
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn rehook_runs_pristine_nested_context() {
+        let outs = exec(
+            &root(),
+            4,
+            |ctx, _| {
+                ctx.resize_memory_register(1).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let outer_slot = ctx.register_global(4).unwrap();
+                let inner = ctx
+                    .rehook(
+                        |inner_ctx, _| {
+                            // pristine: fresh capacities (default zero)
+                            assert!(inner_ctx.register_global(4).is_err());
+                            inner_ctx.resize_memory_register(1).unwrap();
+                            inner_ctx.sync(SYNC_DEFAULT).unwrap();
+                            let s = inner_ctx.register_global(1).unwrap();
+                            inner_ctx.deregister(s).unwrap();
+                            inner_ctx.pid() * 10
+                        },
+                        Args::none(),
+                    )
+                    .unwrap();
+                // outer context resumes intact
+                ctx.deregister(outer_slot).unwrap();
+                inner
+            },
+            Args::none(),
+        )
+        .unwrap();
+        assert_eq!(outs, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn probe_returns_params_for_backend() {
+        exec(
+            &root(),
+            2,
+            |ctx, _| {
+                let m = ctx.probe();
+                assert_eq!(m.p, 2);
+                assert!(!m.params.is_empty());
+                assert!(m.h_relation_ns(100, 8) > 0.0);
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn nested_exec_spawns_fresh_processes() {
+        let outs = exec(
+            &root(),
+            2,
+            |ctx, _| {
+                if ctx.pid() == 0 {
+                    let inner_root = Root::new(Platform::shared()).with_max_procs(2);
+                    let inner =
+                        exec(&inner_root, 2, |c, _| c.p(), Args::none()).unwrap();
+                    inner.len() as u32
+                } else {
+                    0
+                }
+            },
+            Args::none(),
+        )
+        .unwrap();
+        assert_eq!(outs[0], 2);
+    }
+
+    #[test]
+    fn pod_bytes_roundtrip() {
+        let v = [1.5f64, -2.25];
+        let b = pod_bytes(&v);
+        assert_eq!(b.len(), 16);
+        assert_eq!(f64::from_le_bytes(b[0..8].try_into().unwrap()), 1.5);
+    }
+}

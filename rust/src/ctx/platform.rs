@@ -1,0 +1,92 @@
+//! Platform selection: which of the paper's four LPF implementations a
+//! context runs on (§3), plus their simulation parameters.
+
+use std::sync::Arc;
+
+use crate::core::Pid;
+use crate::fabric::shared::SharedFabric;
+use crate::fabric::Fabric;
+use crate::netsim::Personality;
+
+/// Which fabric `exec`/`hook` build a context on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Platform {
+    /// Cache-coherent shared memory (the paper's Pthreads implementation).
+    /// Real threads, real memcpy — wall-clock measurements are genuine.
+    Shared { checked: bool },
+    /// Distributed memory over two-sided message passing (the paper's MPI
+    /// implementation), on the simulated NIC with the given personality.
+    Msg { personality: Personality, checked: bool },
+    /// Distributed memory over one-sided RDMA (the paper's ibverbs
+    /// implementation), on the simulated NIC.
+    Rdma { personality: Personality, checked: bool },
+    /// Clusters of multicores: intra-node shared + inter-node distributed
+    /// (the paper's hybrid implementation). `q` = processes per node.
+    Hybrid { q: Pid, personality: Personality, checked: bool },
+}
+
+impl Platform {
+    /// Shared-memory platform, unchecked (release defaults).
+    pub fn shared() -> Self {
+        Platform::Shared { checked: cfg!(debug_assertions) }
+    }
+
+    /// Message-passing platform with the default (compliant) personality.
+    pub fn msg() -> Self {
+        Platform::Msg { personality: Personality::ibverbs(), checked: false }
+    }
+
+    /// RDMA platform with the ibverbs personality.
+    pub fn rdma() -> Self {
+        Platform::Rdma { personality: Personality::ibverbs(), checked: false }
+    }
+
+    /// Hybrid platform with `q` processes per simulated node.
+    pub fn hybrid(q: Pid) -> Self {
+        Platform::Hybrid { q, personality: Personality::ibverbs(), checked: false }
+    }
+
+    /// Toggle per-superstep legality checking.
+    pub fn checked(mut self, on: bool) -> Self {
+        match &mut self {
+            Platform::Shared { checked }
+            | Platform::Msg { checked, .. }
+            | Platform::Rdma { checked, .. }
+            | Platform::Hybrid { checked, .. } => *checked = on,
+        }
+        self
+    }
+
+    /// Override the NIC personality (no-op for `Shared`).
+    pub fn with_personality(mut self, p: Personality) -> Self {
+        match &mut self {
+            Platform::Shared { .. } => {}
+            Platform::Msg { personality, .. }
+            | Platform::Rdma { personality, .. }
+            | Platform::Hybrid { personality, .. } => *personality = p,
+        }
+        self
+    }
+
+    /// Instantiate the fabric for `p` processes.
+    pub(crate) fn make_fabric(&self, p: Pid) -> Arc<dyn Fabric> {
+        match self {
+            Platform::Shared { checked } => SharedFabric::new(p, *checked),
+            Platform::Msg { personality, checked } => {
+                crate::fabric::msg::MsgFabric::new(p, personality.clone(), *checked)
+            }
+            Platform::Rdma { personality, checked } => {
+                crate::fabric::rdma::RdmaFabric::new(p, personality.clone(), *checked)
+            }
+            Platform::Hybrid { q, personality, checked } => {
+                crate::fabric::hybrid::HybridFabric::new(p, *q, personality.clone(), *checked)
+            }
+        }
+    }
+}
+
+impl Default for Platform {
+    fn default() -> Self {
+        Platform::shared()
+    }
+}

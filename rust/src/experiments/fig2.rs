@@ -1,0 +1,187 @@
+//! Fig. 2: "time needed to send n messages round-robin to p processes"
+//! per transport. The paper's point: native ibverbs is affine (compliant);
+//! some MPI transports are superlinear (non-compliant). Here the curves
+//! come from the executed transport mechanics on the simulated NIC
+//! (matching queues, progress engines — see `netsim`), reported in
+//! simulated milliseconds.
+
+use crate::benchkit::{growth_exponent, Table};
+use crate::core::{Args, Result, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::ctx::{exec, Context, Platform, Root};
+use crate::netsim::{Personality, WireMode};
+
+/// Configuration for the Fig. 2 sweep.
+#[derive(Debug, Clone)]
+pub struct Fig2Config {
+    /// Processes (the paper used 4 Infiniband servers).
+    pub p: u32,
+    /// Message payload (the paper sends 4 kB messages).
+    pub msg_bytes: usize,
+    /// Message counts to sweep.
+    pub n_values: Vec<usize>,
+    /// Transports.
+    pub personalities: Vec<Personality>,
+}
+
+impl Fig2Config {
+    /// Paper-shaped defaults scaled to this container.
+    pub fn default_sweep() -> Fig2Config {
+        Fig2Config {
+            p: 4,
+            msg_bytes: 4096,
+            n_values: vec![64, 128, 256, 512, 1024, 2048, 4096],
+            personalities: Personality::fig2_set(),
+        }
+    }
+}
+
+/// One curve: a transport's simulated time per message count.
+#[derive(Debug, Clone)]
+pub struct Fig2Curve {
+    pub transport: &'static str,
+    /// (n messages, simulated seconds).
+    pub points: Vec<(usize, f64)>,
+    /// log-log slope over the sweep: ≈1 compliant, ≫1 superlinear.
+    pub exponent: f64,
+}
+
+/// Simulated time to send `n` messages of `msg_bytes` round-robin to the
+/// other processes and complete one superstep, on the given transport.
+pub fn round_robin_time(
+    personality: &Personality,
+    p: u32,
+    n: usize,
+    msg_bytes: usize,
+) -> Result<f64> {
+    let platform = match personality.mode {
+        WireMode::OneSided => Platform::rdma().with_personality(personality.clone()),
+        WireMode::TwoSided => {
+            // the paper's message-matching measurements use plain two-sided
+            // transports; direct meta keeps the focus on the data path
+            Platform::Msg { personality: personality.clone(), checked: false }
+        }
+    };
+    let root = Root::new(platform).with_max_procs(p);
+    let outs = exec(
+        &root,
+        p,
+        move |ctx: &mut Context, _| -> Result<f64> {
+            let p = ctx.p();
+            ctx.resize_memory_register(2)?;
+            ctx.resize_message_queue(2 * n + 2 * p as usize)?;
+            ctx.sync(SYNC_DEFAULT)?;
+            let src = ctx.register_global(msg_bytes)?;
+            // every sender writes its own n slots round-robin at receivers;
+            // disjoint landing zones per (sender, message): a sender sends
+            // at most ceil(n / (p−1)) messages to any single receiver
+            let rows = n.div_ceil((p as usize - 1).max(1)) + 1;
+            let dst = ctx.register_global(msg_bytes * rows * p as usize)?;
+            ctx.sync(SYNC_DEFAULT)?;
+            let before = ctx.sim_time_ns().unwrap_or(0.0);
+            let peers = p - 1;
+            if peers > 0 {
+                for i in 0..n {
+                    let d = {
+                        // round-robin over the other processes
+                        let k = (i as u32) % peers;
+                        if k >= ctx.pid() {
+                            k + 1
+                        } else {
+                            k
+                        }
+                    };
+                    let slot_idx = (i / peers as usize) * p as usize + ctx.pid() as usize;
+                    ctx.put(src, 0, d, dst, slot_idx * msg_bytes, msg_bytes, MSG_DEFAULT)?;
+                }
+            }
+            ctx.sync(SYNC_DEFAULT)?;
+            Ok(ctx.sim_time_ns().unwrap_or(0.0) - before)
+        },
+        Args::none(),
+    )?;
+    let per: Result<Vec<f64>> = outs.into_iter().collect();
+    Ok(per?.iter().copied().fold(0.0, f64::max) / 1e9)
+}
+
+/// Run the full sweep and print the figure data.
+pub fn run_fig2(cfg: &Fig2Config) -> Result<Vec<Fig2Curve>> {
+    let mut curves = Vec::new();
+    for pers in &cfg.personalities {
+        let mut points = Vec::new();
+        for &n in &cfg.n_values {
+            let t = round_robin_time(pers, cfg.p, n, cfg.msg_bytes)?;
+            points.push((n, t));
+        }
+        let xs: Vec<f64> = points.iter().map(|&(n, _)| n as f64).collect();
+        let ys: Vec<f64> = points.iter().map(|&(_, t)| t).collect();
+        curves.push(Fig2Curve {
+            transport: pers.name,
+            points,
+            exponent: growth_exponent(&xs, &ys),
+        });
+    }
+    // print the paper-style series
+    let mut headers: Vec<String> = vec!["n msgs".into()];
+    headers.extend(curves.iter().map(|c| format!("{} (ms)", c.transport)));
+    let mut t = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for (i, &n) in cfg.n_values.iter().enumerate() {
+        let mut row = vec![n.to_string()];
+        for c in &curves {
+            row.push(format!("{:.4}", c.points[i].1 * 1e3));
+        }
+        t.row(row);
+    }
+    println!("Fig. 2 — {} B messages round-robin to p={} processes (simulated)", cfg.msg_bytes, cfg.p);
+    println!("{}", t.render());
+    let mut e = Table::new(&["transport", "log-log slope", "verdict"]);
+    for c in &curves {
+        let verdict = if c.exponent < 1.25 { "model-compliant (affine)" } else { "NON-COMPLIANT (superlinear)" };
+        e.row(vec![c.transport.into(), format!("{:.2}", c.exponent), verdict.into()]);
+    }
+    println!("{}", e.render());
+    Ok(curves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ibverbs_is_affine_and_matching_is_superlinear() {
+        let cfg = Fig2Config {
+            p: 4,
+            msg_bytes: 4096,
+            n_values: vec![64, 128, 256, 512, 1024],
+            personalities: vec![
+                Personality::ibverbs(),
+                Personality::mpi_message_passing(),
+                Personality::mpi_rdma_scanning(),
+            ],
+        };
+        let curves = run_fig2(&cfg).unwrap();
+        let ib = &curves[0];
+        let msg = &curves[1];
+        let mva = &curves[2];
+        assert!(ib.exponent < 1.2, "ibverbs slope {:.2}", ib.exponent);
+        assert!(msg.exponent > 1.3, "mpi-msg slope {:.2}", msg.exponent);
+        assert!(mva.exponent > 1.3, "mpi-rdma-scan slope {:.2}", mva.exponent);
+        // monotone increasing in n
+        for c in &curves {
+            for w in c.points.windows(2) {
+                assert!(w[1].1 >= w[0].1, "{} not monotone", c.transport);
+            }
+        }
+    }
+
+    #[test]
+    fn compliant_rdma_variant_stays_affine() {
+        let cfg = Fig2Config {
+            p: 4,
+            msg_bytes: 4096,
+            n_values: vec![64, 256, 1024],
+            personalities: vec![Personality::mpi_rdma_compliant()],
+        };
+        let curves = run_fig2(&cfg).unwrap();
+        assert!(curves[0].exponent < 1.2);
+    }
+}

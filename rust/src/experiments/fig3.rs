@@ -1,0 +1,155 @@
+//! Fig. 3: the immortal BSP FFT vs the vendor-proxy and portable-proxy
+//! baselines, mean seconds per transform over vector lengths `n = 2^k`.
+//!
+//! Paper series → ours:
+//! * HPBSP (BSPlib-on-LPF, MKL local FFTs) → `BSP-FFT` (BSPlib-on-LPF,
+//!   PJRT-artifact local FFTs; falls back to native Rust local compute
+//!   when artifacts are absent).
+//! * Intel MKL → `vendor-proxy` (whole-vector fused XLA FFT artifact).
+//! * FFTW → `portable-proxy` (plan-cached iterative Rust radix-2).
+
+use std::sync::Arc;
+
+use crate::benchkit::{time_secs, Table};
+use crate::bsplib::Bsp;
+use crate::core::{Args, Result};
+use crate::ctx::{exec, Platform, Root};
+use crate::fft::baseline::{PortableFft, VendorFft};
+use crate::fft::bsp::{Backend, BspFft};
+use crate::runtime::Runtime;
+use crate::util::rng::XorShift64;
+
+/// Configuration for the Fig. 3 sweep.
+#[derive(Debug, Clone)]
+pub struct Fig3Config {
+    /// log2 sizes to sweep (paper: 14..=30; container-scaled default).
+    pub ks: Vec<u32>,
+    /// Processes for the BSP FFT.
+    pub p: u32,
+    /// Transforms averaged per point (paper: 200).
+    pub reps: u32,
+    /// Use PJRT artifacts when available.
+    pub use_artifacts: bool,
+}
+
+impl Fig3Config {
+    /// Container-scaled defaults.
+    pub fn default_sweep() -> Fig3Config {
+        Fig3Config { ks: (10..=16).collect(), p: 4, reps: 5, use_artifacts: true }
+    }
+}
+
+/// One size's measurements (mean seconds per transform).
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub k: u32,
+    pub n: usize,
+    pub bsp_fft: f64,
+    pub vendor: Option<f64>,
+    pub portable: f64,
+}
+
+fn random_planes(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = XorShift64::new(seed);
+    let re = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+    let im = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+    (re, im)
+}
+
+/// Mean seconds per distributed BSP FFT at size `n` on `p` processes.
+pub fn bsp_fft_secs(n: usize, p: u32, reps: u32, backend: Backend) -> Result<f64> {
+    let root = Root::new(Platform::shared().checked(false)).with_max_procs(p);
+    let outs = exec(
+        &root,
+        p,
+        move |ctx, _| -> Result<f64> {
+            let m = n / ctx.p() as usize;
+            let mut bsp = Bsp::begin_with_staging(ctx, 8, 4 * ctx.p() as usize + 8, 64)?;
+            bsp.sync()?;
+            let fft = BspFft::new(&mut bsp, n, backend.clone())?;
+            bsp.sync()?;
+            let (re, im) = random_planes(m, 0xF17 + n as u64);
+            // warm (compiles artifacts on first use)
+            let _ = fft.run(&mut bsp, &re, &im)?;
+            let samples = time_secs(0, reps, || {
+                fft.run(&mut bsp, &re, &im).expect("fft run");
+            });
+            bsp.end()?;
+            Ok(samples.mean())
+        },
+        Args::none(),
+    )?;
+    let per: Result<Vec<f64>> = outs.into_iter().collect();
+    // the transform is done when the slowest process is done
+    Ok(per?.iter().copied().fold(0.0, f64::max))
+}
+
+/// Run the sweep and print the figure data.
+pub fn run_fig3(cfg: &Fig3Config) -> Result<Vec<Fig3Row>> {
+    let runtime: Option<Arc<Runtime>> =
+        if cfg.use_artifacts { Runtime::global().ok() } else { None };
+    if cfg.use_artifacts && runtime.is_none() {
+        eprintln!("fig3: artifacts not found — run `make artifacts`; using native compute");
+    }
+    let mut rows = Vec::new();
+    for &k in &cfg.ks {
+        let n = 1usize << k;
+        let backend = match &runtime {
+            Some(rt) => Backend::Artifacts(rt.clone()),
+            None => Backend::Native,
+        };
+        let bsp_fft = bsp_fft_secs(n, cfg.p, cfg.reps, backend)?;
+        let vendor = match &runtime {
+            Some(rt) => {
+                let v = VendorFft::new(n, rt.clone());
+                let (re, im) = random_planes(n, 0xBEEF + n as u64);
+                let _ = v.run(re.clone(), im.clone())?; // compile
+                let s = time_secs(0, cfg.reps, || {
+                    v.run(re.clone(), im.clone()).expect("vendor fft");
+                });
+                Some(s.mean())
+            }
+            None => None,
+        };
+        let portable = {
+            let f = PortableFft::new(n)?;
+            let (re, im) = random_planes(n, 0xCAFE + n as u64);
+            let s = time_secs(1, cfg.reps, || {
+                f.run(&re, &im).expect("portable fft");
+            });
+            s.mean()
+        };
+        rows.push(Fig3Row { k, n, bsp_fft, vendor, portable });
+    }
+    let mut t = Table::new(&["k", "n", "BSP-FFT (ms)", "vendor-proxy (ms)", "BSP/vendor", "portable-proxy (ms)", "BSP/portable"]);
+    for r in &rows {
+        t.row(vec![
+            r.k.to_string(),
+            r.n.to_string(),
+            format!("{:.3}", r.bsp_fft * 1e3),
+            r.vendor.map_or("-".into(), |v| format!("{:.3}", v * 1e3)),
+            r.vendor.map_or("-".into(), |v| format!("{:.2}", r.bsp_fft / v)),
+            format!("{:.3}", r.portable * 1e3),
+            format!("{:.2}", r.bsp_fft / r.portable),
+        ]);
+    }
+    println!("Fig. 3 — mean time per FFT, p = {}, {} reps", cfg.p, cfg.reps);
+    println!("{}", t.render());
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_native_sweep_runs() {
+        let cfg = Fig3Config { ks: vec![8, 10], p: 4, reps: 2, use_artifacts: false };
+        let rows = run_fig3(&cfg).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.bsp_fft > 0.0 && r.portable > 0.0);
+            assert!(r.vendor.is_none());
+        }
+    }
+}

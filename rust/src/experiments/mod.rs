@@ -1,0 +1,14 @@
+//! Experiment harnesses regenerating every table and figure of the paper's
+//! evaluation (§3.2, §4.1–§4.3). Each returns structured rows *and* prints
+//! the paper-style output; the `benches/` targets and the `lpf` CLI both
+//! call into here. EXPERIMENTS.md records paper-vs-measured.
+
+pub mod fig2;
+pub mod fig3;
+pub mod table3;
+pub mod table4;
+
+pub use fig2::{run_fig2, Fig2Config};
+pub use fig3::{run_fig3, Fig3Config};
+pub use table3::{run_table3, Table3Config};
+pub use table4::{run_table4, Table4Config};

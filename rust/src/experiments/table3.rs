@@ -1,0 +1,122 @@
+//! Table 3: the system constants `g` and `ℓ`, normalised by the memcpy
+//! speed `r`, at word sizes 8 B, 64 B, 1 kB and 1 MB.
+//!
+//! The paper measures the Pthreads backend on BigIvy and the hybrid-RB
+//! backend on Sandy-8/Ivy-6. Here: the shared backend in **wall-clock**
+//! (real threads, real memcpy) and the hybrid backend in simulated time.
+
+use crate::benchkit::Table;
+use crate::core::Result;
+use crate::ctx::Platform;
+use crate::probe::bench::{run_offline_probe, ProbeConfig, ProbeRow};
+use crate::probe::ProbeTable;
+
+/// Configuration for the Table-3 harness.
+#[derive(Debug, Clone)]
+pub struct Table3Config {
+    /// Backends to measure, with display labels.
+    pub backends: Vec<(&'static str, Platform)>,
+    /// Probe configuration (p, word sizes, volume, sampling).
+    pub probe: ProbeConfig,
+    /// Persist results into `artifacts/probe.table` for Θ(1) `lpf_probe`.
+    pub save: bool,
+}
+
+impl Table3Config {
+    /// Paper-shaped defaults scaled to this container: the Pthreads row
+    /// (wall-clock) and the Hybrid-RB row (simulated).
+    pub fn default_run(p: u32) -> Table3Config {
+        Table3Config {
+            backends: vec![
+                ("Pthreads", Platform::shared().checked(false)),
+                ("Hybrid-RB", Platform::hybrid(2)),
+            ],
+            probe: ProbeConfig::quick(p),
+            save: true,
+        }
+    }
+}
+
+/// One backend's Table-3 block.
+#[derive(Debug)]
+pub struct Table3Block {
+    pub label: &'static str,
+    pub p: u32,
+    pub r_ns_per_byte: f64,
+    pub rows: Vec<ProbeRow>,
+}
+
+/// Run the offline probe per backend, print the Table-3 layout, persist
+/// the probe table.
+pub fn run_table3(cfg: &Table3Config) -> Result<Vec<Table3Block>> {
+    let table = ProbeTable::global();
+    let mut blocks = Vec::new();
+    for (label, platform) in &cfg.backends {
+        let (rows, r) = run_offline_probe(platform, &cfg.probe, &table)?;
+        blocks.push(Table3Block { label, p: cfg.probe.p, r_ns_per_byte: r, rows });
+    }
+    if cfg.save {
+        let _ = table.save(std::path::Path::new(crate::probe::DEFAULT_TABLE_PATH));
+    }
+    // paper layout: one row group per machine/backend
+    let mut t = Table::new(&["backend", "p", "w (B)", "r (ns/B)", "g (×r·w)", "±", "l (words)", "±"]);
+    for b in &blocks {
+        for row in &b.rows {
+            // normalisations from the paper: g relative to memcpy of one
+            // word; ℓ in words of this size.
+            let g_norm = row.g_ns / (b.r_ns_per_byte * row.word_bytes as f64);
+            let g_ci = row.g_ci / (b.r_ns_per_byte * row.word_bytes as f64);
+            let l_words = row.l_ns / (b.r_ns_per_byte * row.word_bytes as f64)
+                / (row.g_ns / (b.r_ns_per_byte * row.word_bytes as f64)).max(1e-12);
+            // ℓ in words = l_ns / g_ns (time of one word at this size)
+            let l_words = if row.g_ns > 0.0 { row.l_ns / row.g_ns } else { l_words };
+            let l_ci = if row.g_ns > 0.0 { row.l_ci / row.g_ns } else { 0.0 };
+            t.row(vec![
+                b.label.to_string(),
+                b.p.to_string(),
+                row.word_bytes.to_string(),
+                format!("{:.3}", b.r_ns_per_byte),
+                format!("{:.3}", g_norm),
+                format!("{:.3}", g_ci),
+                format!("{:.1}", l_words),
+                format!("{:.1}", l_ci),
+            ]);
+        }
+    }
+    println!("Table 3 — system constants g, l normalised w.r.t. r (memcpy)");
+    println!("{}", t.render());
+    Ok(blocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_runs_and_g_decreases_with_word_size() {
+        let cfg = Table3Config {
+            backends: vec![("Pthreads", Platform::shared().checked(false))],
+            probe: ProbeConfig {
+                p: 2,
+                word_sizes: vec![8, 1024],
+                max_bytes: 1 << 18,
+                reps: 1,
+                samples: 2,
+            },
+            save: false,
+        };
+        let blocks = run_table3(&cfg).unwrap();
+        assert_eq!(blocks.len(), 1);
+        let rows = &blocks[0].rows;
+        assert_eq!(rows.len(), 2);
+        // normalised g (per word of size w) improves with bigger words:
+        // g_ns scales sublinearly in w. Wide tolerance: this is wall-clock
+        // on a time-sliced single core shared with the whole test suite.
+        let g8 = rows[0].g_ns / 8.0;
+        let g1k = rows[1].g_ns / 1024.0;
+        assert!(
+            g1k <= g8 * 8.0,
+            "per-byte cost should not explode with word size: {g8} vs {g1k}"
+        );
+    }
+}

@@ -1,0 +1,232 @@
+//! Table 4: pure-Spark vs LPF-accelerated-Spark PageRank.
+//!
+//! Paper columns: graph size, `n_ε` (iterations to ε = 10⁻⁷), end-to-end
+//! seconds at n = 1, n = 10, n = n_ε, and seconds/iteration — for both
+//! engines. Graphs: cage15 / uk-2002 / clueweb12 → substituted by a
+//! banded cage-like graph and two R-MAT scale-free graphs at RAM scale
+//! (DESIGN.md §2).
+
+use std::time::Instant;
+
+use crate::benchkit::Table;
+use crate::core::Result;
+use crate::graphblas::Compute;
+use crate::graphgen::{cage_like, rmat, Coo, RmatConfig};
+use crate::runtime::Runtime;
+use crate::sparksim::pagerank::{accelerated_pagerank, pure_spark_pagerank};
+use crate::sparksim::Spark;
+
+/// One graph's configuration.
+#[derive(Debug, Clone)]
+pub struct GraphCase {
+    pub name: &'static str,
+    pub graph: Coo,
+}
+
+/// Configuration for the Table-4 harness.
+pub struct Table4Config {
+    pub graphs: Vec<GraphCase>,
+    /// Worker threads (the paper used Ivy-10's workers).
+    pub workers: usize,
+    /// RDD partitions for pure Spark (paper: 1500–4500; container-scaled).
+    pub partitions: usize,
+    /// Convergence tolerance for the LPF PageRank (paper: 1e-7).
+    pub eps: f32,
+    /// Hard iteration caps to keep the pure-Spark side bounded.
+    pub max_iters: u32,
+    /// Use PJRT artifacts for the accelerated side when available.
+    pub use_artifacts: bool,
+}
+
+impl Table4Config {
+    /// Paper-shaped defaults scaled to this container: one cage-like and
+    /// two scale-free graphs of increasing size.
+    pub fn default_run() -> Table4Config {
+        Table4Config {
+            graphs: vec![
+                GraphCase { name: "cage-like", graph: cage_like(1 << 13, 4, 15) },
+                GraphCase { name: "rmat-14", graph: rmat(&RmatConfig::new(14, 8, 1)) },
+                GraphCase { name: "rmat-15", graph: rmat(&RmatConfig::new(15, 8, 2)) },
+            ],
+            workers: 4,
+            partitions: 16,
+            eps: 1e-7,
+            max_iters: 60,
+            // headline numbers use native local compute: on this
+            // container's xla_extension-0.5.1 CPU backend the artifact
+            // SpMV is scatter-bound (~15× a native loop; EXPERIMENTS.md
+            // §Perf) — the LPF communication layer under test is
+            // identical either way, and the artifact path is covered by
+            // tests/apps_e2e.rs and the E2E example.
+            use_artifacts: false,
+        }
+    }
+}
+
+/// One Table-4 row.
+#[derive(Debug)]
+pub struct Table4Row {
+    pub name: &'static str,
+    pub n_vertices: usize,
+    pub nnz: usize,
+    pub n_eps: u32,
+    /// Pure Spark end-to-end seconds at n = 1, 10, n_ε.
+    pub pure_secs: [f64; 3],
+    pub pure_s_per_iter: f64,
+    /// Accelerated end-to-end seconds at n = 1, 10, n_ε.
+    pub acc_secs: [f64; 3],
+    pub acc_s_per_iter: f64,
+}
+
+/// Run the comparison and print the paper's table layout.
+pub fn run_table4(cfg: &Table4Config) -> Result<Vec<Table4Row>> {
+    let runtime = if cfg.use_artifacts { Runtime::global().ok() } else { None };
+    if cfg.use_artifacts && runtime.is_none() {
+        eprintln!("table4: artifacts not found — accelerated side uses native compute");
+    }
+    let mut rows = Vec::new();
+    for case in &cfg.graphs {
+        let g = &case.graph;
+        // pad to the actual worst block (dst-degree skew!), preferring the
+        // aot-built artifact shape when the blocks fit it
+        let rows_per = g.n.div_ceil(cfg.workers);
+        let mut per_block = vec![0usize; cfg.workers];
+        for &(_, d) in &g.edges {
+            per_block[(d as usize) / rows_per] += 1;
+        }
+        let max_block = per_block.iter().copied().max().unwrap_or(0);
+        // aot builds pads of 8n/p and 16n/p; pick the smallest that fits
+        let nnz_pad = [8 * g.n / cfg.workers, 16 * g.n / cfg.workers]
+            .into_iter()
+            .find(|&pad| max_block <= pad)
+            .unwrap_or_else(|| max_block.next_power_of_two());
+        // artifact shapes exist only for the aot-built configurations;
+        // fall back to native when the padded shape is missing.
+        let compute = match &runtime {
+            Some(rt) => {
+                let name = format!(
+                    "spmv_{}_{}_{}",
+                    nnz_pad,
+                    g.n,
+                    g.n.div_ceil(cfg.workers)
+                );
+                if rt.manifest().get(&name).is_some() {
+                    Compute::Artifacts(rt.clone())
+                } else {
+                    Compute::Native
+                }
+            }
+            None => Compute::Native,
+        };
+
+        // --- accelerated side: n_ε first (defines the row), then n=1, 10.
+        let acc_run = |max_iters: u32, eps: f32, tag: &str| -> Result<(f64, u32)> {
+            let sc = Spark::new(cfg.workers, cfg.partitions);
+            let t = Instant::now();
+            let out = accelerated_pagerank(
+                &sc,
+                g,
+                compute.clone(),
+                0.85,
+                eps,
+                max_iters,
+                nnz_pad,
+                tag,
+            )?;
+            Ok((t.elapsed().as_secs_f64(), out.iters))
+        };
+        let (acc_eps_t, n_eps) = acc_run(cfg.max_iters, cfg.eps, "t4-eps")?;
+        let (acc_1_t, _) = acc_run(1, 0.0, "t4-one")?;
+        let (acc_10_t, _) = acc_run(10.min(cfg.max_iters), 0.0, "t4-ten")?;
+        // paper's s/it definition: (T(n_ε) − T(1)) / (n_ε − 1), rounded up
+        let acc_s_per_iter = if n_eps > 1 {
+            (acc_eps_t - acc_1_t) / (n_eps - 1) as f64
+        } else {
+            acc_eps_t
+        };
+
+        // --- pure Spark side (canonical: no convergence check; run the
+        // same iteration counts for the time columns).
+        let pure_run = |iters: u32| -> f64 {
+            let sc = Spark::new(cfg.workers, cfg.partitions);
+            let t = Instant::now();
+            let _ = pure_spark_pagerank(&sc, &g.edges, iters, 10);
+            t.elapsed().as_secs_f64()
+        };
+        let pure_1_t = pure_run(1);
+        let pure_10_t = pure_run(10);
+        let pure_eps_t = pure_run(n_eps);
+        let pure_s_per_iter =
+            if n_eps > 1 { (pure_eps_t - pure_1_t) / (n_eps - 1) as f64 } else { pure_eps_t };
+
+        rows.push(Table4Row {
+            name: case.name,
+            n_vertices: g.n,
+            nnz: g.edges.len(),
+            n_eps,
+            pure_secs: [pure_1_t, pure_10_t, pure_eps_t],
+            pure_s_per_iter,
+            acc_secs: [acc_1_t, acc_10_t, acc_eps_t],
+            acc_s_per_iter,
+        });
+    }
+    let mut t = Table::new(&[
+        "graph", "n", "nnz", "n_eps", "pure n=1", "n=10", "n=n_eps", "s/it",
+        "acc n=1", "n=10", "n=n_eps", "s/it", "speedup/it",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.name.into(),
+            r.n_vertices.to_string(),
+            r.nnz.to_string(),
+            r.n_eps.to_string(),
+            format!("{:.2}", r.pure_secs[0]),
+            format!("{:.2}", r.pure_secs[1]),
+            format!("{:.2}", r.pure_secs[2]),
+            format!("{:.3}", r.pure_s_per_iter),
+            format!("{:.2}", r.acc_secs[0]),
+            format!("{:.2}", r.acc_secs[1]),
+            format!("{:.2}", r.acc_secs[2]),
+            format!("{:.3}", r.acc_s_per_iter),
+            format!("{:.0}x", r.pure_s_per_iter / r.acc_s_per_iter.max(1e-9)),
+        ]);
+    }
+    println!(
+        "Table 4 — pure vs LPF-accelerated PageRank on sparksim, {} workers, eps = {:.0e}",
+        cfg.workers, cfg.eps
+    );
+    println!("{}", t.render());
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_small_case_shows_acceleration() {
+        let cfg = Table4Config {
+            graphs: vec![GraphCase {
+                name: "rmat-10",
+                graph: rmat(&RmatConfig::new(10, 8, 5)),
+            }],
+            workers: 2,
+            partitions: 4,
+            eps: 1e-6,
+            max_iters: 30,
+            use_artifacts: false,
+        };
+        let rows = run_table4(&cfg).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.n_eps > 2, "should take several iterations");
+        assert!(r.acc_s_per_iter > 0.0 && r.pure_s_per_iter > 0.0);
+        // who-wins: LPF per-iteration must beat the shuffle-based engine
+        assert!(
+            r.pure_s_per_iter > r.acc_s_per_iter,
+            "pure {} vs acc {}",
+            r.pure_s_per_iter,
+            r.acc_s_per_iter
+        );
+    }
+}

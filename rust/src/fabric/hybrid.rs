@@ -1,0 +1,30 @@
+//! The hybrid LPF implementation (paper §3, Table 1 row "Hybrid RB"):
+//! clusters of networked multicores. Intra-node communication takes the
+//! shared-memory (memcpy-cost) path, inter-node the distributed NIC path;
+//! each memory registration conceptually exists on both levels, and a
+//! put/get decides locally from the remote pid which route to take —
+//! reproduced here by the per-pair personality selection inside
+//! [`NetFabric`]. `g = O(q + log(p/q))`, `ℓ = O(log p)`.
+
+use std::sync::Arc;
+
+use super::net::{MetaAlgo, NetFabric, Topology};
+use crate::core::Pid;
+use crate::netsim::Personality;
+
+/// Hybrid fabric: `q` processes per simulated node.
+pub struct HybridFabric;
+
+impl HybridFabric {
+    /// Build with `q` processes per node over the given NIC personality.
+    pub fn new(p: Pid, q: Pid, personality: Personality, checked: bool) -> Arc<NetFabric> {
+        NetFabric::with_config(
+            p,
+            "hybrid",
+            personality,
+            Topology::clustered(q),
+            MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+            checked,
+        )
+    }
+}

@@ -1,0 +1,213 @@
+//! Transport fabrics: what `lpf_sync` runs on.
+//!
+//! The paper implements LPF four times (§3): cache-coherent shared memory
+//! (Pthreads), distributed memory over RDMA (ibverbs), distributed memory
+//! over message passing (MPI), and a hybrid of the shared-memory engine with
+//! a distributed one. All four share the same 4-phase sync strategy:
+//!
+//! 1. barrier + first meta-data exchange (tell destinations what arrives);
+//! 2. destination-side write-conflict resolution + second meta-data exchange
+//!    (tell sources which byte ranges to send, overlap-free);
+//! 3. the data exchange proper;
+//! 4. final barrier.
+//!
+//! This module defines the [`Fabric`] trait those backends implement, plus
+//! the wire-level descriptor types. Backends: [`shared`], [`msg`], [`rdma`],
+//! [`hybrid`].
+
+pub mod hybrid;
+pub mod msg;
+pub mod net;
+pub mod rdma;
+pub mod shared;
+
+use std::sync::Arc;
+
+use crate::core::{Memslot, MsgAttr, Pid, Result, SyncAttr};
+use crate::memory::SharedRegister;
+use crate::queue::Request;
+
+/// A put descriptor on the wire (first meta-data exchange), in destination
+/// coordinates plus enough source information for the return trip.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PutMeta {
+    pub src_pid: Pid,
+    /// Sequence number within the source's queue (CRCW order component).
+    pub seq: u32,
+    pub src_slot: Memslot,
+    pub src_off: usize,
+    pub dst_slot: Memslot,
+    pub dst_off: usize,
+    pub len: usize,
+    pub attr: MsgAttr,
+}
+
+/// A get descriptor routed to the *source* process (which will serve it by
+/// sending data back — §3's strategy turns gets into source-side sends).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GetMeta {
+    /// The process that issued the get and will receive the data.
+    pub requester: Pid,
+    /// The process that owns the source memory and serves the get.
+    pub server: Pid,
+    pub seq: u32,
+    /// Slot/offset in the *source* (serving) process.
+    pub src_slot: Memslot,
+    pub src_off: usize,
+    /// Destination slot/offset at the requester.
+    pub dst_slot: Memslot,
+    pub dst_off: usize,
+    pub len: usize,
+    pub attr: MsgAttr,
+}
+
+/// Statistics a fabric keeps per process, read by benches and `probe`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SyncStats {
+    /// Supersteps completed.
+    pub syncs: u64,
+    /// Payload bytes this process sent (post-trim).
+    pub bytes_out: u64,
+    /// Payload bytes this process received (post-trim).
+    pub bytes_in: u64,
+    /// Messages this process sent (meta + data), transport-level.
+    pub msgs_out: u64,
+}
+
+/// A communication fabric connecting the `p` processes of one context.
+///
+/// Registers for *all* pids live in the fabric so that any backend can
+/// resolve destination slots; slot bytes themselves follow the superstep
+/// discipline documented in [`crate::memory`].
+pub trait Fabric: Send + Sync {
+    /// Number of processes.
+    fn p(&self) -> Pid;
+
+    /// The slot register of process `pid`.
+    fn register_of(&self, pid: Pid) -> &Arc<SharedRegister>;
+
+    /// Execute one superstep for `pid` with its drained request queue.
+    /// Collective: blocks until the h-relation involving `pid` completed.
+    fn sync(&self, pid: Pid, reqs: Vec<Request>, attr: SyncAttr) -> Result<()>;
+
+    /// A plain collective barrier (used by collective registration).
+    fn barrier(&self, pid: Pid) -> Result<()>;
+
+    /// Mark `pid` as aborted (SPMD function exited abnormally); peers then
+    /// fail fatally at their next collective, as the paper specifies.
+    fn abort(&self, pid: Pid);
+
+    /// Simulated time in ns for `pid`, if this fabric runs on the network
+    /// simulator (`None` for the real shared-memory backend).
+    fn sim_time_ns(&self, pid: Pid) -> Option<f64>;
+
+    /// Per-process transport statistics.
+    fn stats(&self, pid: Pid) -> SyncStats;
+
+    /// Human-readable backend name (probe/table output).
+    fn name(&self) -> &'static str;
+}
+
+/// Split a drained request queue into wire descriptors: puts grouped by
+/// destination pid, gets grouped by *source* pid (they are served there).
+/// Sequence numbers preserve queue order for deterministic CRCW resolution.
+pub fn split_requests(
+    me: Pid,
+    reqs: &[Request],
+) -> (Vec<Vec<PutMeta>>, Vec<Vec<GetMeta>>) {
+    let mut puts: Vec<Vec<PutMeta>> = Vec::new();
+    let mut gets: Vec<Vec<GetMeta>> = Vec::new();
+    for (seq, r) in reqs.iter().enumerate() {
+        match r {
+            Request::Put(p) => {
+                let need = p.dst_pid as usize + 1;
+                if puts.len() < need {
+                    puts.resize_with(need, Vec::new);
+                }
+                puts[p.dst_pid as usize].push(PutMeta {
+                    src_pid: me,
+                    seq: seq as u32,
+                    src_slot: p.src_slot,
+                    src_off: p.src_off,
+                    dst_slot: p.dst_slot,
+                    dst_off: p.dst_off,
+                    len: p.len,
+                    attr: p.attr,
+                });
+            }
+            Request::Get(g) => {
+                let need = g.src_pid as usize + 1;
+                if gets.len() < need {
+                    gets.resize_with(need, Vec::new);
+                }
+                gets[g.src_pid as usize].push(GetMeta {
+                    requester: me,
+                    server: g.src_pid,
+                    seq: seq as u32,
+                    src_slot: g.src_slot,
+                    src_off: g.src_off,
+                    dst_slot: g.dst_slot,
+                    dst_off: g.dst_off,
+                    len: g.len,
+                    attr: g.attr,
+                });
+            }
+        }
+    }
+    (puts, gets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{SlotKind, MSG_DEFAULT};
+    use crate::queue::{GetReq, PutReq};
+
+    fn slot(i: u32) -> Memslot {
+        Memslot { kind: SlotKind::Global, index: i, gen: 1 }
+    }
+
+    #[test]
+    fn split_groups_puts_by_destination_and_gets_by_source() {
+        let reqs = vec![
+            Request::Put(PutReq {
+                src_slot: slot(0),
+                src_off: 0,
+                dst_pid: 2,
+                dst_slot: slot(1),
+                dst_off: 8,
+                len: 4,
+                attr: MSG_DEFAULT,
+            }),
+            Request::Get(GetReq {
+                src_pid: 1,
+                src_slot: slot(1),
+                src_off: 0,
+                dst_slot: slot(0),
+                dst_off: 0,
+                len: 2,
+                attr: MSG_DEFAULT,
+            }),
+            Request::Put(PutReq {
+                src_slot: slot(0),
+                src_off: 4,
+                dst_pid: 2,
+                dst_slot: slot(1),
+                dst_off: 12,
+                len: 4,
+                attr: MSG_DEFAULT,
+            }),
+        ];
+        let (puts, gets) = split_requests(0, &reqs);
+        assert_eq!(puts.len(), 3);
+        assert!(puts[0].is_empty() && puts[1].is_empty());
+        assert_eq!(puts[2].len(), 2);
+        // queue order preserved as sequence numbers
+        assert_eq!(puts[2][0].seq, 0);
+        assert_eq!(puts[2][1].seq, 2);
+        assert_eq!(gets.len(), 2);
+        assert_eq!(gets[1].len(), 1);
+        assert_eq!(gets[1][0].requester, 0);
+        assert_eq!(gets[1][0].seq, 1);
+    }
+}

@@ -1,0 +1,38 @@
+//! The message-passing LPF implementation (paper §3, Table 1 row "Mesg.
+//! RB"): two-sided sends with receiver-side matching, randomised-Bruck
+//! meta-data exchange. `g = O(log p)`, `ℓ = O(log p)`.
+
+use std::sync::Arc;
+
+use super::net::{MetaAlgo, NetFabric, Topology};
+use crate::core::Pid;
+use crate::netsim::Personality;
+
+/// Message-passing fabric.
+pub struct MsgFabric;
+
+impl MsgFabric {
+    /// Build over the simulated NIC with the given personality.
+    pub fn new(p: Pid, personality: Personality, checked: bool) -> Arc<NetFabric> {
+        NetFabric::with_config(
+            p,
+            "msg",
+            personality,
+            Topology::distributed(),
+            MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+            checked,
+        )
+    }
+
+    /// Variant with a direct meta-data exchange (ablation).
+    pub fn with_direct_meta(p: Pid, personality: Personality, checked: bool) -> Arc<NetFabric> {
+        NetFabric::with_config(
+            p,
+            "msg-direct",
+            personality,
+            Topology::distributed(),
+            MetaAlgo::Direct,
+            checked,
+        )
+    }
+}

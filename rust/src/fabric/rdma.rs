@@ -1,0 +1,39 @@
+//! The RDMA LPF implementation (paper §3, Table 1 row "RDMA Direct"):
+//! one-sided remote writes, direct all-to-all meta-data exchange.
+//! `g = O(1)`, `ℓ = O(p)`. The paper's experiments use the native-ibverbs
+//! flavour of this backend (its Fig. 2 baseline).
+
+use std::sync::Arc;
+
+use super::net::{MetaAlgo, NetFabric, Topology};
+use crate::core::Pid;
+use crate::netsim::Personality;
+
+/// RDMA (one-sided) fabric.
+pub struct RdmaFabric;
+
+impl RdmaFabric {
+    /// Build over the simulated NIC with the given personality.
+    pub fn new(p: Pid, personality: Personality, checked: bool) -> Arc<NetFabric> {
+        NetFabric::with_config(
+            p,
+            "rdma",
+            personality,
+            Topology::distributed(),
+            MetaAlgo::Direct,
+            checked,
+        )
+    }
+
+    /// Variant with the randomised-Bruck meta exchange (ablation).
+    pub fn with_bruck_meta(p: Pid, personality: Personality, checked: bool) -> Arc<NetFabric> {
+        NetFabric::with_config(
+            p,
+            "rdma-rb",
+            personality,
+            Topology::distributed(),
+            MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+            checked,
+        )
+    }
+}

@@ -1,0 +1,75 @@
+//! Fig. 3 baselines.
+//!
+//! The paper compares the immortal HPBSP FFT against Intel MKL and FFTW.
+//! Neither exists in this container, so per the substitution rule we build
+//! the closest equivalents with the same comparison structure:
+//!
+//! * [`VendorFft`] — MKL proxy: the whole vector through XLA's natively
+//!   fused FFT op (one `fft_full_n` artifact), i.e. "a vendor-optimised
+//!   monolithic library call".
+//! * [`PortableFft`] — FFTW proxy: the decent portable implementation
+//!   (`fft::local`, plan-cached).
+
+use std::sync::Arc;
+
+use super::local;
+use super::plan::FftPlan;
+use crate::core::Result;
+use crate::runtime::{Runtime, Tensor};
+
+/// MKL-proxy baseline: one fused XLA FFT call for the whole vector.
+pub struct VendorFft {
+    n: usize,
+    rt: Arc<Runtime>,
+}
+
+impl VendorFft {
+    /// Requires artifact `fft_full_{n}`.
+    pub fn new(n: usize, rt: Arc<Runtime>) -> VendorFft {
+        VendorFft { n, rt }
+    }
+
+    /// Artifact name (for warming).
+    pub fn artifact_name(&self) -> String {
+        format!("fft_full_{}", self.n)
+    }
+
+    /// Transform split planes.
+    pub fn run(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = self.rt.run(&self.artifact_name(), vec![Tensor::F32(re), Tensor::F32(im)])?;
+        let mut it = out.into_iter();
+        Ok((it.next().unwrap().into_f32()?, it.next().unwrap().into_f32()?))
+    }
+}
+
+/// FFTW-proxy baseline: plan-cached portable Rust FFT.
+pub struct PortableFft {
+    plan: FftPlan,
+}
+
+impl PortableFft {
+    /// Build the plan for size `n`.
+    pub fn new(n: usize) -> Result<PortableFft> {
+        Ok(PortableFft { plan: FftPlan::new(n)? })
+    }
+
+    /// Transform split planes.
+    pub fn run(&self, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        local::fft(&self.plan, re, im)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_matches_impulse() {
+        let f = PortableFft::new(16).unwrap();
+        let mut re = vec![0f32; 16];
+        re[0] = 1.0;
+        let (or, oi) = f.run(&re, &vec![0f32; 16]).unwrap();
+        assert!(or.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        assert!(oi.iter().all(|&x| x.abs() < 1e-6));
+    }
+}

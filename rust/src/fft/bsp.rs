@@ -1,0 +1,382 @@
+//! The immortal BSP FFT (Inda–Bisseling) over LPF, through the BSPlib
+//! layer — the paper's §4.2 experiment.
+//!
+//! Four-step structure for global size `n = p·m`, process `r` owning the
+//! cyclic slice `x[r::p]`:
+//!
+//! 1. **local FFT** of length `m` (PJRT artifact `fft_local_m`, i.e. the
+//!    Pallas butterfly path; or the native Rust FFT as fallback);
+//! 2. **twiddle** by `exp(−2πi·r·k2/n)` (artifact `cmul_m`);
+//! 3. **redistribution**: block `r′` of every process's row travels to
+//!    process `r′` — the all-to-all h-relation of `h = m` words per
+//!    process that makes this algorithm communication-bound (the paper's
+//!    focus), done with `bsp_hpput`s and one `bsp_sync`;
+//! 4. **length-p FFTs** over the gathered rows (artifact `fft_batch`).
+//!
+//! Output layout: process `r′` holds `X[k2 + m·k1]` for its block of
+//! `k2 ∈ [r′·m/p, (r′+1)·m/p)` and all `k1` — row-major `[m/p][p]`.
+//! (The paper notes vendor libraries expose no "unordered time-shifted"
+//! FFTs; like HPBSP we keep the natural distributed layout and pay the
+//! extra twiddle pass inside step 2.)
+
+use std::sync::Arc;
+
+use super::local;
+use super::plan::FftPlan;
+use crate::bsplib::{Bsp, BspReg};
+use crate::core::{LpfError, Result};
+use crate::runtime::{Runtime, Tensor};
+
+/// Where process-local compute runs.
+#[derive(Clone)]
+pub enum Backend {
+    /// PJRT artifacts (the three-layer path; requires `make artifacts`).
+    Artifacts(Arc<Runtime>),
+    /// Pure-Rust compute (fallback + ablation baseline).
+    Native,
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Artifacts(_) => write!(f, "Artifacts"),
+            Backend::Native => write!(f, "Native"),
+        }
+    }
+}
+
+/// Per-process state for repeated BSP FFTs of one size.
+pub struct BspFft {
+    /// Global transform size.
+    pub n_global: usize,
+    p: u32,
+    r: u32,
+    /// Local length `n_global / p`.
+    pub m: usize,
+    plan_local: FftPlan,
+    plan_p: Option<FftPlan>,
+    tw_re: Vec<f32>,
+    tw_im: Vec<f32>,
+    backend: Backend,
+    /// Fused fft+twiddle artifact available with tables bound server-side
+    /// (skips per-run conversion of perm + 2 twiddle tables — §Perf).
+    fused_key: Option<String>,
+    /// Registered communication windows (src row, dst matrix), reused
+    /// across runs: `[re | im]` planes of `m` f32 each.
+    src_reg: BspReg,
+    dst_reg: BspReg,
+}
+
+impl BspFft {
+    /// Collective constructor: registers the communication windows
+    /// (costs one superstep via `bsp.sync` by the caller afterwards).
+    pub fn new(bsp: &mut Bsp, n_global: usize, backend: Backend) -> Result<BspFft> {
+        let p = bsp.nprocs();
+        let r = bsp.pid();
+        if n_global % (p as usize) != 0 {
+            return Err(LpfError::Illegal(format!("n={n_global} not divisible by p={p}")));
+        }
+        let m = n_global / p as usize;
+        if m % (p as usize) != 0 {
+            return Err(LpfError::Illegal(format!("m={m} not divisible by p={p}")));
+        }
+        let plan_local = FftPlan::new(m)?;
+        let plan_p = if p >= 2 { Some(FftPlan::new(p as usize)?) } else { None };
+        let (tw_re, tw_im) = plan_local.bsp_twiddles(r, p);
+        let src_reg = bsp.push_reg(8 * m)?;
+        let dst_reg = bsp.push_reg(8 * m)?;
+        // bind the static tables server-side when the fused artifact exists
+        let fused_key = match &backend {
+            Backend::Artifacts(rt) if rt.manifest().get(&format!("fft_tw_local_{m}")).is_some() => {
+                let key = format!("m{m}-r{r}");
+                rt.bind(
+                    &format!("fft_tw_local_{m}"),
+                    &key,
+                    vec![
+                        (2, crate::runtime::Tensor::I32(plan_local.perm.clone())),
+                        (3, crate::runtime::Tensor::F32(plan_local.tw_re.clone())),
+                        (4, crate::runtime::Tensor::F32(plan_local.tw_im.clone())),
+                        (5, crate::runtime::Tensor::F32(tw_re.clone())),
+                        (6, crate::runtime::Tensor::F32(tw_im.clone())),
+                    ],
+                )?;
+                Some(key)
+            }
+            _ => None,
+        };
+        Ok(BspFft {
+            n_global,
+            p,
+            r,
+            m,
+            plan_local,
+            plan_p,
+            tw_re,
+            tw_im,
+            backend,
+            fused_key,
+            src_reg,
+            dst_reg,
+        })
+    }
+
+    /// Artifact names this size needs (for `Runtime::warm`).
+    pub fn artifact_names(&self) -> Vec<String> {
+        vec![
+            format!("fft_local_{}", self.m),
+            format!("cmul_{}", self.m),
+            format!("fft_batch_{}x{}", self.m / self.p as usize, self.p),
+        ]
+    }
+
+    fn local_fft(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>)> {
+        match &self.backend {
+            Backend::Artifacts(rt) => {
+                let out = rt.run(
+                    &format!("fft_local_{}", self.m),
+                    vec![
+                        Tensor::F32(re),
+                        Tensor::F32(im),
+                        Tensor::I32(self.plan_local.perm.clone()),
+                        Tensor::F32(self.plan_local.tw_re.clone()),
+                        Tensor::F32(self.plan_local.tw_im.clone()),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                Ok((
+                    it.next().unwrap().into_f32()?,
+                    it.next().unwrap().into_f32()?,
+                ))
+            }
+            Backend::Native => {
+                let mut re = re;
+                let mut im = im;
+                local::fft_in_place(&self.plan_local, &mut re, &mut im)?;
+                Ok((re, im))
+            }
+        }
+    }
+
+    fn twiddle(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>)> {
+        match &self.backend {
+            Backend::Artifacts(rt) => {
+                let out = rt.run(
+                    &format!("cmul_{}", self.m),
+                    vec![
+                        Tensor::F32(re),
+                        Tensor::F32(im),
+                        Tensor::F32(self.tw_re.clone()),
+                        Tensor::F32(self.tw_im.clone()),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                Ok((
+                    it.next().unwrap().into_f32()?,
+                    it.next().unwrap().into_f32()?,
+                ))
+            }
+            Backend::Native => {
+                let mut ore = re;
+                let mut oim = im;
+                for k in 0..self.m {
+                    let (ar, ai) = (ore[k], oim[k]);
+                    let (br, bi) = (self.tw_re[k], self.tw_im[k]);
+                    ore[k] = ar * br - ai * bi;
+                    oim[k] = ar * bi + ai * br;
+                }
+                Ok((ore, oim))
+            }
+        }
+    }
+
+    fn batch_fft_p(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>)> {
+        let p = self.p as usize;
+        let rows = self.m / p;
+        match &self.backend {
+            Backend::Artifacts(rt) => {
+                let out = rt.run(
+                    &format!("fft_batch_{rows}x{p}"),
+                    vec![Tensor::F32(re), Tensor::F32(im)],
+                )?;
+                let mut it = out.into_iter();
+                Ok((
+                    it.next().unwrap().into_f32()?,
+                    it.next().unwrap().into_f32()?,
+                ))
+            }
+            Backend::Native => {
+                let plan = self.plan_p.as_ref().expect("p >= 2");
+                let mut re = re;
+                let mut im = im;
+                for row in 0..rows {
+                    let s = row * p;
+                    local::fft_in_place(plan, &mut re[s..s + p], &mut im[s..s + p])?;
+                }
+                Ok((re, im))
+            }
+        }
+    }
+
+    /// Run one distributed FFT. `re`/`im` hold this process's cyclic slice
+    /// (`x[r::p]`, length `m`); the result is this process's `[m/p][p]`
+    /// output block (see module docs for the global layout).
+    ///
+    /// BSP cost: local compute + one full `h = m`-relation + one sync.
+    pub fn run(&self, bsp: &mut Bsp, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        if re.len() != self.m || im.len() != self.m {
+            return Err(LpfError::Illegal(format!("input must be m={} per plane", self.m)));
+        }
+        let p = self.p as usize;
+        let blk = self.m / p;
+        // steps 1–2: local FFT + twiddle (fused single call when bound)
+        let (re2, im2) = match (&self.backend, &self.fused_key) {
+            (Backend::Artifacts(rt), Some(key)) => {
+                let out = rt.run_bound(
+                    &format!("fft_tw_local_{}", self.m),
+                    key,
+                    vec![Tensor::F32(re.to_vec()), Tensor::F32(im.to_vec())],
+                )?;
+                let mut it = out.into_iter();
+                (it.next().unwrap().into_f32()?, it.next().unwrap().into_f32()?)
+            }
+            _ => {
+                let (re1, im1) = self.local_fft(re.to_vec(), im.to_vec())?;
+                self.twiddle(re1, im1)?
+            }
+        };
+        // stage into the registered source window: [re | im]
+        bsp.write_local(self.src_reg, 0, &re2)?;
+        bsp.write_local(self.src_reg, 4 * self.m, &im2)?;
+        // step 3: redistribute — block r′ → process r′, landing at row r
+        for dst in 0..self.p {
+            let src_off = dst as usize * blk * 4;
+            let dst_off = self.r as usize * blk * 4;
+            bsp.hpput(dst, self.src_reg, src_off, self.dst_reg, dst_off, blk * 4)?;
+            bsp.hpput(
+                dst,
+                self.src_reg,
+                4 * self.m + src_off,
+                self.dst_reg,
+                4 * self.m + dst_off,
+                blk * 4,
+            )?;
+        }
+        bsp.sync()?;
+        // gather [p][blk] rows, transpose to [blk][p]
+        let mut rows_re = vec![0f32; self.m];
+        let mut rows_im = vec![0f32; self.m];
+        bsp.read_local(self.dst_reg, 0, &mut rows_re)?;
+        bsp.read_local(self.dst_reg, 4 * self.m, &mut rows_im)?;
+        let mut t_re = vec![0f32; self.m];
+        let mut t_im = vec![0f32; self.m];
+        for j1 in 0..p {
+            for k2 in 0..blk {
+                t_re[k2 * p + j1] = rows_re[j1 * blk + k2];
+                t_im[k2 * p + j1] = rows_im[j1 * blk + k2];
+            }
+        }
+        // step 4: length-p FFTs
+        self.batch_fft_p(t_re, t_im)
+    }
+
+    /// Where `out[local]` lives in the global spectrum: process `r` row
+    /// `k2_local`, column `k1` → global index `(r·m/p + k2_local) + m·k1`.
+    pub fn global_index(&self, k2_local: usize, k1: usize) -> usize {
+        (self.r as usize * (self.m / self.p as usize) + k2_local) + self.m * k1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Args;
+    use crate::ctx::{exec, Platform, Root};
+    use crate::util::rng::XorShift64;
+
+    /// Distributed BSP FFT (native backend) vs single-node rust FFT.
+    #[test]
+    fn bsp_fft_matches_serial() {
+        let p: u32 = 4;
+        let n: usize = 256;
+        // global input
+        let mut rng = XorShift64::new(42);
+        let g_re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        let g_im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        let plan = FftPlan::new(n).unwrap();
+        let (want_re, want_im) = local::fft(&plan, &g_re, &g_im).unwrap();
+
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(p);
+        let g_re2 = g_re.clone();
+        let g_im2 = g_im.clone();
+        let outs = exec(
+            &root,
+            p,
+            move |ctx, _| {
+                let r = ctx.pid();
+                let pp = ctx.p();
+                let mut bsp = Bsp::begin(ctx, 8, 8 * pp as usize).unwrap();
+                bsp.sync().unwrap();
+                let fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+                bsp.sync().unwrap(); // activate the fft's registrations
+                // my cyclic slice
+                let m = n / pp as usize;
+                let re: Vec<f32> = (0..m).map(|j| g_re2[r as usize + pp as usize * j]).collect();
+                let im: Vec<f32> = (0..m).map(|j| g_im2[r as usize + pp as usize * j]).collect();
+                let (o_re, o_im) = fft.run(&mut bsp, &re, &im).unwrap();
+                // map to global indices
+                let blk = m / pp as usize;
+                let mut triples = Vec::new();
+                for k2 in 0..blk {
+                    for k1 in 0..pp as usize {
+                        triples.push((
+                            fft.global_index(k2, k1),
+                            o_re[k2 * pp as usize + k1],
+                            o_im[k2 * pp as usize + k1],
+                        ));
+                    }
+                }
+                bsp.end().unwrap();
+                triples
+            },
+            Args::none(),
+        )
+        .unwrap();
+
+        let mut got_re = vec![0f32; n];
+        let mut got_im = vec![0f32; n];
+        for triples in outs {
+            for (gidx, re, im) in triples {
+                got_re[gidx] = re;
+                got_im[gidx] = im;
+            }
+        }
+        let tol = 1e-3 * (n as f32).sqrt();
+        for k in 0..n {
+            assert!(
+                (got_re[k] - want_re[k]).abs() < tol,
+                "re[{k}]: {} vs {}",
+                got_re[k],
+                want_re[k]
+            );
+            assert!((got_im[k] - want_im[k]).abs() < tol, "im[{k}]");
+        }
+    }
+
+    #[test]
+    fn rejects_indivisible_sizes() {
+        let root = Root::new(Platform::shared()).with_max_procs(4);
+        exec(
+            &root,
+            4,
+            |ctx, _| {
+                let mut bsp = Bsp::begin(ctx, 8, 8).unwrap();
+                bsp.sync().unwrap();
+                assert!(BspFft::new(&mut bsp, 100, Backend::Native).is_err());
+                // m = 8/4 = 2 not divisible by 4:
+                assert!(BspFft::new(&mut bsp, 8, Backend::Native).is_err());
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+}

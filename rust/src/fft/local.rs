@@ -1,0 +1,145 @@
+//! Pure-Rust iterative radix-2 FFT.
+//!
+//! Plays two roles: the "portable library" baseline of Fig. 3 (the role
+//! FFTW plays in the paper — a correct, decent, but not vendor-tuned
+//! implementation), and the oracle integration tests compare the artifact
+//! path against.
+
+use super::plan::FftPlan;
+use crate::core::Result;
+
+/// In-place complex FFT over split planes using a prebuilt plan.
+pub fn fft_in_place(plan: &FftPlan, re: &mut [f32], im: &mut [f32]) -> Result<()> {
+    assert_eq!(re.len(), plan.n);
+    assert_eq!(im.len(), plan.n);
+    let n = plan.n;
+    // bit-reverse permutation (cycle-safe: swap only when i < j)
+    for i in 0..n {
+        let j = plan.perm[i] as usize;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut m = 1usize;
+    let mut off = 0usize;
+    while m < n {
+        let span = 2 * m;
+        for base in (0..n).step_by(span) {
+            for k in 0..m {
+                let (wr, wi) = (plan.tw_re[off + k], plan.tw_im[off + k]);
+                let (br, bi) = (re[base + m + k], im[base + m + k]);
+                let tr = wr * br - wi * bi;
+                let ti = wr * bi + wi * br;
+                let (ar, ai) = (re[base + k], im[base + k]);
+                re[base + k] = ar + tr;
+                im[base + k] = ai + ti;
+                re[base + m + k] = ar - tr;
+                im[base + m + k] = ai - ti;
+            }
+        }
+        off += m;
+        m = span;
+    }
+    Ok(())
+}
+
+/// Convenience: allocate-and-transform.
+pub fn fft(plan: &FftPlan, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut r = re.to_vec();
+    let mut i = im.to_vec();
+    fft_in_place(plan, &mut r, &mut i)?;
+    Ok((r, i))
+}
+
+/// Naive O(n²) DFT — the ultimate oracle for small sizes.
+pub fn dft_naive(re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = re.len();
+    let mut or = vec![0f32; n];
+    let mut oi = vec![0f32; n];
+    for k in 0..n {
+        let (mut sr, mut si) = (0f64, 0f64);
+        for j in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * (k * j % n) as f64 / n as f64;
+            let (c, s) = (ang.cos(), ang.sin());
+            sr += re[j] as f64 * c - im[j] as f64 * s;
+            si += re[j] as f64 * s + im[j] as f64 * c;
+        }
+        or[k] = sr as f32;
+        oi[k] = si as f32;
+    }
+    (or, oi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64;
+
+    fn rand_planes(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift64::new(seed);
+        let re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        let im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        (re, im)
+    }
+
+    #[test]
+    fn impulse_gives_twiddle_row() {
+        let n = 64;
+        let plan = FftPlan::new(n).unwrap();
+        let mut re = vec![0f32; n];
+        let im = vec![0f32; n];
+        re[1] = 1.0;
+        let (or, oi) = fft(&plan, &re, &im).unwrap();
+        for k in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            assert!((or[k] as f64 - ang.cos()).abs() < 1e-5, "re[{k}]");
+            assert!((oi[k] as f64 - ang.sin()).abs() < 1e-5, "im[{k}]");
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        for n in [2usize, 4, 8, 32, 128] {
+            let plan = FftPlan::new(n).unwrap();
+            let (re, im) = rand_planes(n, n as u64);
+            let (fr, fi) = fft(&plan, &re, &im).unwrap();
+            let (dr, di) = dft_naive(&re, &im);
+            for k in 0..n {
+                assert!((fr[k] - dr[k]).abs() < 1e-3, "n={n} re[{k}]: {} vs {}", fr[k], dr[k]);
+                assert!((fi[k] - di[k]).abs() < 1e-3, "n={n} im[{k}]");
+            }
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 256;
+        let plan = FftPlan::new(n).unwrap();
+        let (a_re, a_im) = rand_planes(n, 1);
+        let (b_re, b_im) = rand_planes(n, 2);
+        let sum_re: Vec<f32> = a_re.iter().zip(&b_re).map(|(x, y)| x + y).collect();
+        let sum_im: Vec<f32> = a_im.iter().zip(&b_im).map(|(x, y)| x + y).collect();
+        let (fa_re, fa_im) = fft(&plan, &a_re, &a_im).unwrap();
+        let (fb_re, fb_im) = fft(&plan, &b_re, &b_im).unwrap();
+        let (fs_re, fs_im) = fft(&plan, &sum_re, &sum_im).unwrap();
+        for k in 0..n {
+            assert!((fs_re[k] - fa_re[k] - fb_re[k]).abs() < 1e-3);
+            assert!((fs_im[k] - fa_im[k] - fb_im[k]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let n = 1024;
+        let plan = FftPlan::new(n).unwrap();
+        let (re, im) = rand_planes(n, 7);
+        let (fr, fi) = fft(&plan, &re, &im).unwrap();
+        let e_in: f64 = re.iter().zip(&im).map(|(r, i)| (r * r + i * i) as f64).sum();
+        let e_out: f64 = fr.iter().zip(&fi).map(|(r, i)| (r * r + i * i) as f64).sum();
+        assert!(
+            ((e_out / n as f64) - e_in).abs() / e_in < 1e-4,
+            "Parseval: {e_out} / {n} vs {e_in}"
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! The immortal FFT (paper §4.2) and its baselines.
+//!
+//! * [`plan`] — per-size tables (bit-reverse permutation, stage twiddles,
+//!   redistribution twiddles) shared by every process; mirrors
+//!   `python/compile/model.fft_tables` bit-for-bit (pinned by tests).
+//! * [`local`] — a pure-Rust iterative radix-2 FFT: the "portable library"
+//!   baseline (FFTW proxy) and the oracle for integration tests.
+//! * [`bsp`] — the Inda–Bisseling BSP FFT over LPF, with process-local
+//!   compute executed through PJRT artifacts (the paper's HPBSP FFT ran
+//!   its local FFTs through FFTW/MKL; ours run through the Pallas-built
+//!   XLA artifacts). Runs through the BSPlib layer, as the paper's did.
+//! * [`baseline`] — the "vendor library" baseline: one fused XLA FFT
+//!   artifact for the whole vector (MKL proxy).
+
+pub mod baseline;
+pub mod bsp;
+pub mod local;
+pub mod plan;
+
+pub use bsp::BspFft;
+pub use plan::FftPlan;
+
+/// Split interleaved complex `(re, im)` planes from a complex slice.
+pub fn split_planes(z: &[(f32, f32)]) -> (Vec<f32>, Vec<f32>) {
+    (z.iter().map(|c| c.0).collect(), z.iter().map(|c| c.1).collect())
+}
+
+/// Interleave planes back into complex pairs.
+pub fn join_planes(re: &[f32], im: &[f32]) -> Vec<(f32, f32)> {
+    re.iter().zip(im).map(|(&r, &i)| (r, i)).collect()
+}

@@ -1,0 +1,112 @@
+//! FFT tables, computed natively (no Python at run time).
+//!
+//! Layout contract (pinned against `model.fft_tables` by python tests and
+//! by the cross-checking integration test):
+//! * `perm[i]` — bit-reverse of `i` over `log2 n` bits;
+//! * `tw_re/tw_im[2^s − 1 .. 2^{s+1} − 1]` — stage-`s` twiddles
+//!   `exp(−iπk/2^s)`, `k ∈ [0, 2^s)`.
+
+use crate::core::{LpfError, Result};
+
+/// Immutable tables for one FFT size (and optionally one BSP split).
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    /// Transform size (power of two).
+    pub n: usize,
+    /// Bit-reverse permutation, `[n]`.
+    pub perm: Vec<i32>,
+    /// Concatenated stage twiddles, `[n − 1]` each plane.
+    pub tw_re: Vec<f32>,
+    pub tw_im: Vec<f32>,
+}
+
+impl FftPlan {
+    /// Build the tables for size `n` (power of two, ≥ 2).
+    pub fn new(n: usize) -> Result<FftPlan> {
+        if n < 2 || n & (n - 1) != 0 {
+            return Err(LpfError::Illegal(format!("FFT size {n} is not a power of two ≥ 2")));
+        }
+        let bits = n.trailing_zeros();
+        let mut perm = vec![0i32; n];
+        for (i, q) in perm.iter_mut().enumerate() {
+            let mut r = 0usize;
+            for b in 0..bits {
+                r |= ((i >> b) & 1) << (bits - 1 - b);
+            }
+            *q = r as i32;
+        }
+        let mut tw_re = vec![0f32; n - 1];
+        let mut tw_im = vec![0f32; n - 1];
+        let mut off = 0usize;
+        let mut m = 1usize;
+        while m < n {
+            for k in 0..m {
+                let ang = -std::f64::consts::PI * k as f64 / m as f64;
+                tw_re[off + k] = ang.cos() as f32;
+                tw_im[off + k] = ang.sin() as f32;
+            }
+            off += m;
+            m <<= 1;
+        }
+        Ok(FftPlan { n, perm, tw_re, tw_im })
+    }
+
+    /// The BSP redistribution twiddles for process `r` of `p` over global
+    /// size `n_global = n·p`: `w[k2] = exp(−2πi·r·k2 / n_global)`,
+    /// `k2 ∈ [0, n)` (paper's extra twiddle pass after the local FFTs).
+    pub fn bsp_twiddles(&self, r: u32, p: u32) -> (Vec<f32>, Vec<f32>) {
+        let n_global = self.n * p as usize;
+        let mut re = vec![0f32; self.n];
+        let mut im = vec![0f32; self.n];
+        for k2 in 0..self.n {
+            let ang = -2.0 * std::f64::consts::PI * r as f64 * k2 as f64 / n_global as f64;
+            re[k2] = ang.cos() as f32;
+            im[k2] = ang.sin() as f32;
+        }
+        (re, im)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perm_matches_python_contract_for_8() {
+        let p = FftPlan::new(8).unwrap();
+        assert_eq!(p.perm, vec![0, 4, 2, 6, 1, 5, 3, 7]);
+    }
+
+    #[test]
+    fn twiddle_layout_matches_python_contract() {
+        let p = FftPlan::new(8).unwrap();
+        // stage 0: w=1 ; stage 1: 1, -i ; stage 2: 1, w8, -i, w8^3
+        assert!((p.tw_re[0] - 1.0).abs() < 1e-7);
+        assert!((p.tw_re[1] - 1.0).abs() < 1e-7 && p.tw_im[1].abs() < 1e-7);
+        assert!(p.tw_re[2].abs() < 1e-7 && (p.tw_im[2] + 1.0).abs() < 1e-7);
+        let s = 1.0 / 2f32.sqrt();
+        assert!((p.tw_re[4] - s).abs() < 1e-6 && (p.tw_im[4] + s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        assert!(FftPlan::new(0).is_err());
+        assert!(FftPlan::new(1).is_err());
+        assert!(FftPlan::new(12).is_err());
+    }
+
+    #[test]
+    fn bsp_twiddles_unit_magnitude_and_phase() {
+        let p = FftPlan::new(16).unwrap();
+        let (re, im) = p.bsp_twiddles(3, 4);
+        assert_eq!(re.len(), 16);
+        for k in 0..16 {
+            let mag = (re[k] * re[k] + im[k] * im[k]).sqrt();
+            assert!((mag - 1.0).abs() < 1e-6);
+        }
+        // r=0 must be all ones
+        let (re0, im0) = p.bsp_twiddles(0, 4);
+        assert!(re0.iter().all(|&x| (x - 1.0).abs() < 1e-7));
+        assert!(im0.iter().all(|&x| x.abs() < 1e-7));
+    }
+}

@@ -1,0 +1,504 @@
+//! GraphBLAS-lite: the distributed sparse-linear-algebra substrate under
+//! the LPF PageRank (paper §4.3 uses "a hybrid LPF/OpenMP C++
+//! implementation" of GraphBLAS; this is its Rust+LPF+artifacts analogue).
+//!
+//! Data model: 1-D row-block partition of a square `n×n` matrix over `p`
+//! processes. Each process stores its row block in COO, column indices
+//! global, padded to a fixed `nnz_pad` so one PJRT SpMV artifact serves
+//! every process (`spmv_{nnz}_{n}_{rows}`); the input vector is
+//! replicated per iteration by an LPF allgather (BSP cost `h = n/p` out,
+//! `n − n/p` in — the canonical 1-D SpMV exchange).
+
+use std::sync::Arc;
+
+use crate::collectives::Coll;
+use crate::core::{LpfError, Result};
+use crate::ctx::Context;
+use crate::graphgen::Coo;
+use crate::runtime::{Runtime, Tensor};
+
+/// One process's row block, artifact-ready.
+#[derive(Debug, Clone)]
+pub struct LocalBlock {
+    /// Global size.
+    pub n: usize,
+    /// Rows `[row_begin, row_end)` of the global matrix.
+    pub row_begin: usize,
+    pub row_end: usize,
+    /// Padded COO: `vals[e] = 1/outdeg(col[e])` (PageRank normalisation:
+    /// the matrix is the column-stochastic link matrix restricted to this
+    /// row block), padding entries have `val = 0`.
+    pub vals: Vec<f32>,
+    /// Global column index per entry (the source vertex).
+    pub cols: Vec<i32>,
+    /// Local row index per entry (`global row − row_begin`).
+    pub rows: Vec<i32>,
+    /// Real (unpadded) entry count.
+    pub nnz: usize,
+    /// Per-local-row [start, end) offsets into the row-sorted entry
+    /// arrays (padding entries sort to the end and belong to no row).
+    pub row_starts: Vec<i32>,
+    pub row_ends: Vec<i32>,
+    /// Global column indices that are dangling (out-degree 0) — tracked
+    /// once here so the PageRank iteration can fold their mass.
+    pub local_dangling: Vec<u32>,
+}
+
+impl LocalBlock {
+    /// Number of local rows.
+    pub fn rows_len(&self) -> usize {
+        self.row_end - self.row_begin
+    }
+
+    /// Artifact name serving this block.
+    pub fn artifact_name(&self) -> String {
+        format!("spmv_{}_{}_{}", self.vals.len(), self.n, self.rows_len())
+    }
+
+    /// Server-side binding key for this block's static structure.
+    pub fn binding_key(&self) -> String {
+        format!("rows{}-{}", self.row_begin, self.row_end)
+    }
+
+    /// Fused one-call-per-iteration artifact (SpMV + update, §Perf).
+    pub fn step_artifact_name(&self) -> String {
+        format!("pr_step_{}_{}_{}", self.vals.len(), self.n, self.rows_len())
+    }
+}
+
+/// Partition a graph into `p` row blocks for PageRank: entry `(d, s)` of
+/// the column-stochastic matrix `A[d][s] = 1/outdeg(s)` for each edge
+/// `s → d`. Every block is padded to `nnz_pad` entries (must fit).
+pub fn partition(coo: &Coo, p: u32, nnz_pad: usize) -> Result<Vec<LocalBlock>> {
+    let n = coo.n;
+    let p = p as usize;
+    let rows_per = n.div_ceil(p);
+    let degs = coo.out_degrees();
+    let dangling: Vec<u32> =
+        (0..n as u32).filter(|&v| degs[v as usize] == 0).collect();
+    let mut blocks: Vec<LocalBlock> = (0..p)
+        .map(|r| {
+            let row_begin = (r * rows_per).min(n);
+            let row_end = ((r + 1) * rows_per).min(n);
+            LocalBlock {
+                n,
+                row_begin,
+                row_end,
+                vals: Vec::new(),
+                cols: Vec::new(),
+                rows: Vec::new(),
+                nnz: 0,
+                row_starts: Vec::new(),
+                row_ends: Vec::new(),
+                local_dangling: dangling
+                    .iter()
+                    .copied()
+                    .filter(|&v| (v as usize) >= row_begin && (v as usize) < row_end)
+                    .collect(),
+            }
+        })
+        .collect();
+    for &(s, d) in &coo.edges {
+        let r = (d as usize) / rows_per;
+        let b = &mut blocks[r];
+        b.vals.push(1.0 / degs[s as usize] as f32);
+        b.cols.push(s as i32);
+        b.rows.push((d as usize - b.row_begin) as i32);
+        b.nnz += 1;
+    }
+    for b in &mut blocks {
+        if b.nnz > nnz_pad {
+            return Err(LpfError::Illegal(format!(
+                "block rows [{}, {}) has {} entries > pad {}",
+                b.row_begin, b.row_end, b.nnz, nnz_pad
+            )));
+        }
+        // sort entries by local row (stable, counting-sort style via
+        // permutation) so the artifact's scatter-free cumsum SpMV works;
+        // padding entries carry val 0 and sort to the very end
+        let mut order: Vec<usize> = (0..b.nnz).collect();
+        order.sort_by_key(|&e| b.rows[e]);
+        let vals: Vec<f32> = order.iter().map(|&e| b.vals[e]).collect();
+        let cols: Vec<i32> = order.iter().map(|&e| b.cols[e]).collect();
+        let rows: Vec<i32> = order.iter().map(|&e| b.rows[e]).collect();
+        b.vals = vals;
+        b.cols = cols;
+        b.rows = rows;
+        b.vals.resize(nnz_pad, 0.0);
+        b.cols.resize(nnz_pad, 0);
+        b.rows.resize(nnz_pad, (b.rows_len() as i32 - 1).max(0));
+        // [start, end) per local row over the sorted prefix
+        let rows_len = b.rows_len();
+        b.row_starts = vec![0; rows_len];
+        b.row_ends = vec![0; rows_len];
+        let mut e = 0usize;
+        for row in 0..rows_len {
+            b.row_starts[row] = e as i32;
+            while e < b.nnz && b.rows[e] as usize == row {
+                e += 1;
+            }
+            b.row_ends[row] = e as i32;
+        }
+    }
+    Ok(blocks)
+}
+
+/// Where local SpMV/update compute runs (mirrors `fft::bsp::Backend`).
+#[derive(Clone)]
+pub enum Compute {
+    /// PJRT artifacts (needs `spmv_*`/`pr_update_*` built for the shapes).
+    Artifacts(Arc<Runtime>),
+    /// Pure-Rust loops.
+    Native,
+}
+
+impl Compute {
+    /// Bind the block's static structure (vals/cols/rows) server-side so
+    /// per-iteration calls send only the dynamic vectors (§Perf: the
+    /// structure tables are ~3× the size of x and never change). Returns
+    /// true when the fused one-call `pr_step` artifact is available.
+    pub fn bind_block(&self, block: &LocalBlock) -> Result<bool> {
+        match self {
+            Compute::Artifacts(rt) => {
+                let structure = vec![
+                    (0, Tensor::F32(block.vals.clone())),
+                    (1, Tensor::I32(block.cols.clone())),
+                    (2, Tensor::I32(block.rows.clone())),
+                ];
+                rt.bind(&block.artifact_name(), &block.binding_key(), structure.clone())?;
+                // entries are row-sorted (partition): both artifacts get
+                // XLA's sorted-scatter path
+                if rt.manifest().get(&block.step_artifact_name()).is_some() {
+                    rt.bind(&block.step_artifact_name(), &block.binding_key(), structure)?;
+                    return Ok(true);
+                }
+                Ok(false)
+            }
+            Compute::Native => Ok(false),
+        }
+    }
+
+    /// Fused full iteration tail: `(r_new, Σ|Δ|)` from the gathered x in
+    /// one artifact call. Requires `bind_block` to have returned true.
+    pub fn step_bound(
+        &self,
+        block: &LocalBlock,
+        x: &[f32],
+        r_old: &[f32],
+        alpha: f32,
+        base: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        match self {
+            Compute::Artifacts(rt) => {
+                let out = rt.run_bound(
+                    &block.step_artifact_name(),
+                    &block.binding_key(),
+                    vec![
+                        Tensor::F32(x.to_vec()),
+                        Tensor::F32(r_old.to_vec()),
+                        Tensor::F32(vec![alpha, base]),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                let r_new = it.next().unwrap().into_f32()?;
+                let resid = it.next().unwrap().into_f32()?[0];
+                Ok((r_new, resid))
+            }
+            Compute::Native => {
+                let y = self.spmv(block, x)?;
+                self.update(&y, r_old, alpha, base)
+            }
+        }
+    }
+
+    /// `y = A_block · x` with a previously bound structure.
+    pub fn spmv_bound(&self, block: &LocalBlock, x: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            Compute::Artifacts(rt) => {
+                let out = rt.run_bound(
+                    &block.artifact_name(),
+                    &block.binding_key(),
+                    vec![Tensor::F32(x.to_vec())],
+                )?;
+                out.into_iter().next().unwrap().into_f32()
+            }
+            Compute::Native => self.spmv(block, x),
+        }
+    }
+
+    /// `y = A_block · x` (x replicated full vector).
+    pub fn spmv(&self, block: &LocalBlock, x: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            Compute::Artifacts(rt) => {
+                let out = rt.run(
+                    &block.artifact_name(),
+                    vec![
+                        Tensor::F32(block.vals.clone()),
+                        Tensor::I32(block.cols.clone()),
+                        Tensor::I32(block.rows.clone()),
+                        Tensor::F32(x.to_vec()),
+                    ],
+                )?;
+                out.into_iter().next().unwrap().into_f32()
+            }
+            Compute::Native => {
+                // entries are row-sorted: accumulate per row, no scatter
+                let mut y = vec![0f32; block.rows_len()];
+                for (row, yv) in y.iter_mut().enumerate() {
+                    let (s, e) =
+                        (block.row_starts[row] as usize, block.row_ends[row] as usize);
+                    let mut acc = 0f32;
+                    for k in s..e {
+                        acc += block.vals[k] * x[block.cols[k] as usize];
+                    }
+                    *yv = acc;
+                }
+                Ok(y)
+            }
+        }
+    }
+
+    /// `(r_new, Σ|Δ|)` for `r_new = alpha·y + base`.
+    pub fn update(
+        &self,
+        y: &[f32],
+        r_old: &[f32],
+        alpha: f32,
+        base: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        match self {
+            Compute::Artifacts(rt) => {
+                let out = rt.run(
+                    &format!("pr_update_{}", y.len()),
+                    vec![
+                        Tensor::F32(y.to_vec()),
+                        Tensor::F32(r_old.to_vec()),
+                        Tensor::F32(vec![alpha, base]),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                let r_new = it.next().unwrap().into_f32()?;
+                let resid = it.next().unwrap().into_f32()?[0];
+                Ok((r_new, resid))
+            }
+            Compute::Native => {
+                let mut r_new = vec![0f32; y.len()];
+                let mut resid = 0f32;
+                for i in 0..y.len() {
+                    r_new[i] = alpha * y[i] + base;
+                    resid += (r_new[i] - r_old[i]).abs();
+                }
+                Ok((r_new, resid))
+            }
+        }
+    }
+}
+
+/// Distributed PageRank state over one LPF context.
+pub struct DistPageRank {
+    pub block: LocalBlock,
+    pub compute: Compute,
+    pub alpha: f32,
+    coll: Coll,
+    rows_per: usize,
+    /// Fused one-call iteration path available (see `Compute::bind_block`).
+    fused: bool,
+}
+
+/// Result of a PageRank run.
+#[derive(Debug, Clone)]
+pub struct PrOutcome {
+    /// This process's rank block.
+    pub ranks: Vec<f32>,
+    /// Iterations executed.
+    pub iters: u32,
+    /// Final L1 residual.
+    pub residual: f32,
+}
+
+impl DistPageRank {
+    /// Collective constructor. Registers collective workspace for the
+    /// replicated vector (`4·n` bytes per process; the paper's clueweb12
+    /// run shows the real implementation streams this — at our scale
+    /// replication is the honest BSP formulation).
+    pub fn new(ctx: &mut Context, block: LocalBlock, compute: Compute, alpha: f32) -> Result<Self> {
+        let n = block.n;
+        let p = ctx.p() as usize;
+        let rows_per = n.div_ceil(p);
+        let coll = Coll::new(ctx, 4 * rows_per.max(2))?;
+        let fused = compute.bind_block(&block)?;
+        Ok(DistPageRank { block, compute, alpha, coll, rows_per, fused })
+    }
+
+    /// Run power iteration until the global L1 residual falls below `eps`
+    /// or `max_iters` is hit. BSP cost per iteration: one allgather
+    /// (`h = n`), local SpMV + update, one allreduce (`h = 2p` words).
+    pub fn run(&mut self, ctx: &mut Context, eps: f32, max_iters: u32) -> Result<PrOutcome> {
+        let n = self.block.n;
+        let p = ctx.p() as usize;
+        let rows = self.block.rows_len();
+        // rank blocks are rows_per-sized for the allgather; trailing block
+        // may be shorter — pad to rows_per.
+        let mut r_local = vec![1.0f32 / n as f32; rows];
+        let mut x_full_padded = vec![0f32; self.rows_per * p];
+        let mut iters = 0;
+        let mut residual = f32::INFINITY;
+        while iters < max_iters && residual > eps {
+            // allgather ranks into the replicated vector
+            let mut mine = vec![0f32; self.rows_per];
+            mine[..rows].copy_from_slice(&r_local);
+            self.coll.allgather(ctx, &mine, &mut x_full_padded)?;
+            let x_full = &x_full_padded[..n];
+            // dangling mass: Σ r[v] over dangling v (local slice) + allreduce
+            // dangling mass depends only on the gathered x: allreduce it
+            // BEFORE local compute so the whole iteration tail is one
+            // fused artifact call (§Perf)
+            let local_dangle: f32 = self
+                .block
+                .local_dangling
+                .iter()
+                .map(|&v| x_full[v as usize])
+                .sum();
+            let mut dangle_global = [0f32];
+            self.coll.allreduce(ctx, &[local_dangle], &mut dangle_global, |a, b| a + b)?;
+            let base = (1.0 - self.alpha) / n as f32
+                + self.alpha * dangle_global[0] / n as f32;
+            let (r_new, local_resid) = if self.fused {
+                self.compute.step_bound(&self.block, x_full, &r_local, self.alpha, base)?
+            } else {
+                let y = self.compute.spmv_bound(&self.block, x_full)?;
+                self.compute.update(&y, &r_local, self.alpha, base)?
+            };
+            let mut resid_global = [0f32];
+            self.coll.allreduce(ctx, &[local_resid], &mut resid_global, |a, b| a + b)?;
+            residual = resid_global[0];
+            r_local = r_new;
+            iters += 1;
+        }
+        Ok(PrOutcome { ranks: r_local, iters, residual })
+    }
+}
+
+/// Serial dense PageRank oracle (tests): same semantics, O(n²) memory-free
+/// edge iteration.
+pub fn pagerank_serial(coo: &Coo, alpha: f32, eps: f32, max_iters: u32) -> (Vec<f32>, u32) {
+    let n = coo.n;
+    let degs = coo.out_degrees();
+    let mut r = vec![1.0f32 / n as f32; n];
+    for it in 1..=max_iters {
+        let dangle: f32 = (0..n).filter(|&v| degs[v] == 0).map(|v| r[v]).sum();
+        let mut y = vec![0f32; n];
+        for &(s, d) in &coo.edges {
+            y[d as usize] += r[s as usize] / degs[s as usize] as f32;
+        }
+        let base = (1.0 - alpha) / n as f32 + alpha * dangle / n as f32;
+        let mut resid = 0f32;
+        for v in 0..n {
+            let nv = alpha * y[v] + base;
+            resid += (nv - r[v]).abs();
+            r[v] = nv;
+        }
+        if resid <= eps {
+            return (r, it);
+        }
+    }
+    (r, max_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Args, SYNC_DEFAULT};
+    use crate::ctx::{exec, Platform, Root};
+    use crate::graphgen::{cage_like, rmat, RmatConfig};
+
+    fn run_distributed(coo: &Coo, p: u32, eps: f32, iters: u32) -> (Vec<f32>, u32) {
+        let nnz_pad = (coo.edges.len() / p as usize + coo.n).next_power_of_two();
+        let blocks = partition(coo, p, nnz_pad).unwrap();
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(p);
+        let outs = exec(
+            &root,
+            p,
+            move |ctx, _| {
+                ctx.resize_memory_register(8).unwrap();
+                ctx.resize_message_queue(8 * ctx.p() as usize).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let block = blocks[ctx.pid() as usize].clone();
+                let mut pr =
+                    DistPageRank::new(ctx, block, Compute::Native, 0.85).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let out = pr.run(ctx, eps, iters).unwrap();
+                (out.ranks, out.iters)
+            },
+            Args::none(),
+        )
+        .unwrap();
+        let iters = outs[0].1;
+        let mut ranks = Vec::new();
+        for (blk, _) in outs {
+            ranks.extend(blk);
+        }
+        (ranks, iters)
+    }
+
+    #[test]
+    fn partition_is_padded_and_normalised() {
+        let g = cage_like(64, 2, 5);
+        let blocks = partition(&g, 4, 256).unwrap();
+        assert_eq!(blocks.len(), 4);
+        for b in &blocks {
+            assert_eq!(b.vals.len(), 256);
+            assert!(b.vals[b.nnz..].iter().all(|&v| v == 0.0));
+        }
+        // column sums of the full matrix are 1 for non-dangling vertices
+        let degs = g.out_degrees();
+        let mut colsum = vec![0f64; g.n];
+        for b in &blocks {
+            for e in 0..b.nnz {
+                colsum[b.cols[e] as usize] += b.vals[e] as f64;
+            }
+        }
+        for v in 0..g.n {
+            if degs[v] > 0 {
+                assert!((colsum[v] - 1.0).abs() < 1e-5, "col {v}: {}", colsum[v]);
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_matches_serial_on_cage_like() {
+        let g = cage_like(128, 3, 11);
+        let (want, want_iters) = pagerank_serial(&g, 0.85, 1e-6, 100);
+        let (got, got_iters) = run_distributed(&g, 4, 1e-6, 100);
+        assert_eq!(got.len(), want.len());
+        assert!((got_iters as i64 - want_iters as i64).abs() <= 1);
+        for v in 0..g.n {
+            assert!((got[v] - want[v]).abs() < 1e-5, "rank[{v}]: {} vs {}", got[v], want[v]);
+        }
+    }
+
+    #[test]
+    fn distributed_matches_serial_on_rmat_with_dangling() {
+        let g = rmat(&RmatConfig::new(7, 6, 3));
+        assert!(g.dangling_count() > 0, "test needs dangling vertices");
+        let (want, _) = pagerank_serial(&g, 0.85, 1e-7, 60);
+        let (got, _) = run_distributed(&g, 4, 1e-7, 60);
+        for v in 0..g.n {
+            assert!((got[v] - want[v]).abs() < 1e-5, "rank[{v}]");
+        }
+    }
+
+    #[test]
+    fn ranks_sum_to_one() {
+        let g = rmat(&RmatConfig::new(6, 8, 13));
+        let (got, _) = run_distributed(&g, 2, 1e-7, 80);
+        let sum: f32 = got.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "Σranks = {sum}");
+    }
+
+    #[test]
+    fn partition_rejects_overflow() {
+        let g = cage_like(64, 4, 5);
+        assert!(partition(&g, 2, 8).is_err());
+    }
+}

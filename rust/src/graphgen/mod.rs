@@ -1,0 +1,251 @@
+//! Graph generators and MatrixMarket I/O.
+//!
+//! The paper's Table 4 uses cage15, uk-2002 and clueweb12 "all in
+//! uncompressed MatrixMarket format". Those need up to 786 GB; per the
+//! substitution rule we generate structurally similar graphs at RAM scale:
+//! R-MAT/Kronecker scale-free graphs (web-crawl-like skew, the stress case
+//! for shuffles) and banded "cage-like" matrices (DNA electrophoresis
+//! graphs are near-banded with small bandwidth), and we keep the
+//! MatrixMarket interchange so the pipeline matches the paper's.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::core::{LpfError, Result};
+use crate::util::rng::XorShift64;
+
+/// A directed graph / sparse matrix in COO form with unit weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    /// Number of vertices (rows == cols == n).
+    pub n: usize,
+    /// Edges as (src, dst); may contain no duplicates (generators dedup).
+    pub edges: Vec<(u32, u32)>,
+}
+
+impl Coo {
+    /// Out-degree per vertex.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.n];
+        for &(s, _) in &self.edges {
+            d[s as usize] += 1;
+        }
+        d
+    }
+
+    /// Number of dangling vertices (out-degree zero) — the paper's LPF
+    /// PageRank handles these where pure Spark does not.
+    pub fn dangling_count(&self) -> usize {
+        self.out_degrees().iter().filter(|&&d| d == 0).count()
+    }
+}
+
+/// R-MAT (Kronecker) generator with the classic (a, b, c, d) quadrant
+/// probabilities; defaults mirror Graph500: (0.57, 0.19, 0.19, 0.05).
+pub struct RmatConfig {
+    pub scale: u32,
+    pub edge_factor: usize,
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub seed: u64,
+}
+
+impl RmatConfig {
+    /// Graph500-style defaults for `2^scale` vertices.
+    pub fn new(scale: u32, edge_factor: usize, seed: u64) -> Self {
+        RmatConfig { scale, edge_factor, a: 0.57, b: 0.19, c: 0.19, seed }
+    }
+}
+
+/// Generate an R-MAT graph: `2^scale` vertices, ~`edge_factor · n` edges
+/// (deduplicated, self-loops removed).
+pub fn rmat(cfg: &RmatConfig) -> Coo {
+    let n = 1usize << cfg.scale;
+    let target = cfg.edge_factor * n;
+    let mut rng = XorShift64::new(cfg.seed);
+    let mut edges = Vec::with_capacity(target);
+    for _ in 0..target {
+        let (mut lo_s, mut lo_d) = (0u32, 0u32);
+        let mut span = n as u32;
+        while span > 1 {
+            span /= 2;
+            let r = rng.unit_f64();
+            // noise per level keeps the fractal from being too regular
+            let (a, b, c) = (cfg.a, cfg.b, cfg.c);
+            if r < a {
+                // top-left
+            } else if r < a + b {
+                lo_d += span;
+            } else if r < a + b + c {
+                lo_s += span;
+            } else {
+                lo_s += span;
+                lo_d += span;
+            }
+        }
+        if lo_s != lo_d {
+            edges.push((lo_s, lo_d));
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    // deterministic shuffle so partitions are not degree-sorted
+    let mut rng2 = XorShift64::new(cfg.seed ^ 0xD1CE);
+    rng2.shuffle(&mut edges);
+    Coo { n, edges }
+}
+
+/// Banded "cage-like" matrix: vertex i links to i±1..=band (wrapping),
+/// similar in structure to the cage DNA-electrophoresis matrices
+/// (near-banded, low skew, no dangling nodes).
+pub fn cage_like(n: usize, band: usize, seed: u64) -> Coo {
+    let mut rng = XorShift64::new(seed);
+    let mut edges = Vec::with_capacity(n * band);
+    for i in 0..n as u32 {
+        for b in 1..=band {
+            // keep most band edges, drop some randomly for irregularity
+            if rng.unit_f64() < 0.9 {
+                edges.push((i, (i + b as u32) % n as u32));
+            }
+            if rng.unit_f64() < 0.5 {
+                edges.push((i, (i + n as u32 - b as u32) % n as u32));
+            }
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    let mut rng2 = XorShift64::new(seed ^ 0xCA6E);
+    rng2.shuffle(&mut edges);
+    Coo { n, edges }
+}
+
+/// Write a COO graph as a MatrixMarket coordinate pattern file (1-based,
+/// as the format requires).
+pub fn write_matrix_market(coo: &Coo, path: &Path) -> Result<()> {
+    let io_err = |e: std::io::Error| LpfError::Fatal(format!("mmio write: {e}"));
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(io_err)?;
+    }
+    let f = std::fs::File::create(path).map_err(io_err)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate pattern general").map_err(io_err)?;
+    writeln!(w, "{} {} {}", coo.n, coo.n, coo.edges.len()).map_err(io_err)?;
+    for &(s, d) in &coo.edges {
+        writeln!(w, "{} {}", s + 1, d + 1).map_err(io_err)?;
+    }
+    Ok(())
+}
+
+/// Read a MatrixMarket coordinate file (pattern or real; weights dropped —
+/// PageRank normalises anyway).
+pub fn read_matrix_market(path: &Path) -> Result<Coo> {
+    let io_err = |e: std::io::Error| LpfError::Fatal(format!("mmio read: {e}"));
+    let f = std::fs::File::open(path).map_err(io_err)?;
+    let reader = std::io::BufReader::new(f);
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| LpfError::Fatal("empty MatrixMarket file".into()))?
+        .map_err(io_err)?;
+    if !header.starts_with("%%MatrixMarket matrix coordinate") {
+        return Err(LpfError::Fatal(format!("not a coordinate MatrixMarket file: {header}")));
+    }
+    let mut dims: Option<(usize, usize)> = None;
+    let mut edges = Vec::new();
+    for line in lines {
+        let line = line.map_err(io_err)?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match dims {
+            None => {
+                let r: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(|| {
+                    LpfError::Fatal("bad MatrixMarket size line".into())
+                })?;
+                let c: usize = it.next().and_then(|s| s.parse().ok()).ok_or_else(|| {
+                    LpfError::Fatal("bad MatrixMarket size line".into())
+                })?;
+                dims = Some((r, c));
+            }
+            Some(_) => {
+                let s: u32 = it.next().and_then(|x| x.parse().ok()).ok_or_else(|| {
+                    LpfError::Fatal("bad MatrixMarket entry".into())
+                })?;
+                let d: u32 = it.next().and_then(|x| x.parse().ok()).ok_or_else(|| {
+                    LpfError::Fatal("bad MatrixMarket entry".into())
+                })?;
+                edges.push((s - 1, d - 1));
+            }
+        }
+    }
+    let (r, c) = dims.ok_or_else(|| LpfError::Fatal("MatrixMarket file has no size line".into()))?;
+    Ok(Coo { n: r.max(c), edges })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_is_deterministic_and_skewed() {
+        let cfg = RmatConfig::new(10, 8, 7);
+        let g1 = rmat(&cfg);
+        let g2 = rmat(&cfg);
+        assert_eq!(g1, g2);
+        assert_eq!(g1.n, 1024);
+        assert!(g1.edges.len() > 4 * g1.n, "dedup keeps most edges");
+        // scale-free skew: max out-degree far above mean
+        let degs = g1.out_degrees();
+        let max = *degs.iter().max().unwrap() as f64;
+        let mean = g1.edges.len() as f64 / g1.n as f64;
+        assert!(max > 5.0 * mean, "max {max} vs mean {mean}");
+        // R-MAT leaves some dangling vertices — PageRank must handle them
+        assert!(g1.dangling_count() > 0);
+    }
+
+    #[test]
+    fn rmat_has_no_self_loops_or_dups() {
+        let g = rmat(&RmatConfig::new(8, 8, 3));
+        let mut seen = std::collections::HashSet::new();
+        for &(s, d) in &g.edges {
+            assert_ne!(s, d);
+            assert!(seen.insert((s, d)), "duplicate edge ({s},{d})");
+        }
+    }
+
+    #[test]
+    fn cage_like_is_low_skew_no_dangling() {
+        let g = cage_like(512, 4, 1);
+        assert_eq!(g.dangling_count(), 0);
+        let degs = g.out_degrees();
+        let max = *degs.iter().max().unwrap() as f64;
+        let mean = g.edges.len() as f64 / g.n as f64;
+        assert!(max < 3.0 * mean, "banded: low skew");
+    }
+
+    #[test]
+    fn matrix_market_roundtrip() {
+        let g = rmat(&RmatConfig::new(6, 4, 9));
+        let path = std::env::temp_dir().join("lpf_mm_test.mtx");
+        write_matrix_market(&g, &path).unwrap();
+        let g2 = read_matrix_market(&path).unwrap();
+        assert_eq!(g.n, g2.n);
+        let mut a = g.edges.clone();
+        let mut b = g2.edges.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn matrix_market_rejects_garbage() {
+        let path = std::env::temp_dir().join("lpf_mm_bad.mtx");
+        std::fs::write(&path, "hello\n1 2 3\n").unwrap();
+        assert!(read_matrix_market(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

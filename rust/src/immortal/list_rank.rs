@@ -1,0 +1,152 @@
+//! Pointer-jumping list ranking over LPF.
+//!
+//! The paper names list ranking (§3.2) as one of the "irregular
+//! computations" whose communication pattern — many small random-target
+//! messages — demands the model-compliant small-message behaviour that
+//! Fig. 2 tests. Each of the `⌈log₂ n⌉` supersteps performs an `h = n/p`
+//! relation of fine-grained gets: the classic Wyllie pointer-jumping.
+//!
+//! Input: a linked list as a successor array distributed block-wise
+//! (`NIL` terminates). Output: each node's distance to the end of the
+//! list.
+
+use crate::core::{Result, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::ctx::Context;
+
+/// Terminator marker in successor arrays.
+pub const NIL: u64 = u64::MAX;
+
+/// Rank a distributed linked list.
+///
+/// `succ_local` holds the successors of nodes `[me·b, me·b + b)` where
+/// `b = ceil(n/p)` (global node ids; `NIL` for the tail). Returns each
+/// local node's number of links to the tail.
+///
+/// Capacity needs: 4 registered slots and `4·b` queued messages.
+pub fn list_rank(ctx: &mut Context, n: usize, succ_local: &[u64]) -> Result<Vec<u64>> {
+    let p = ctx.p() as usize;
+    let b = n.div_ceil(p);
+    let me = ctx.pid() as usize;
+    debug_assert!(succ_local.len() <= b);
+
+    // registered state: successor and rank arrays, plus fetch buffers
+    let succ_slot = ctx.register_global(8 * b)?;
+    let rank_slot = ctx.register_global(8 * b)?;
+    let fetch_succ = ctx.register_local(8 * b)?;
+    let fetch_rank = ctx.register_local(8 * b)?;
+    ctx.sync(SYNC_DEFAULT)?;
+
+    let mut succ = vec![NIL; b];
+    succ[..succ_local.len()].copy_from_slice(succ_local);
+    let mut rank: Vec<u64> = succ.iter().map(|&s| u64::from(s != NIL)).collect();
+    ctx.write_typed(succ_slot, 0, &succ)?;
+    ctx.write_typed(rank_slot, 0, &rank)?;
+    ctx.sync(SYNC_DEFAULT)?; // all state published
+
+    let rounds = if n <= 1 { 0 } else { 64 - (n as u64 - 1).leading_zeros() };
+    for _ in 0..rounds {
+        // fetch succ[succ[i]] and rank[succ[i]] for every live node
+        for i in 0..b {
+            if succ[i] != NIL {
+                let owner = (succ[i] as usize / b) as u32;
+                let off = 8 * (succ[i] as usize % b);
+                ctx.get(owner, succ_slot, off, fetch_succ, 8 * i, 8, MSG_DEFAULT)?;
+                ctx.get(owner, rank_slot, off, fetch_rank, 8 * i, 8, MSG_DEFAULT)?;
+            }
+        }
+        ctx.sync(SYNC_DEFAULT)?;
+        let mut got_succ = vec![NIL; b];
+        let mut got_rank = vec![0u64; b];
+        ctx.read_typed(fetch_succ, 0, &mut got_succ)?;
+        ctx.read_typed(fetch_rank, 0, &mut got_rank)?;
+        for i in 0..b {
+            if succ[i] != NIL {
+                rank[i] += got_rank[i];
+                succ[i] = got_succ[i];
+            }
+        }
+        // publish the jumped state for the next round; writes must not
+        // overlap this round's reads, so publish into the *next* epoch by
+        // rewriting our own slots locally after the sync (local writes,
+        // then a sync so peers observe them)
+        ctx.write_typed(succ_slot, 0, &succ)?;
+        ctx.write_typed(rank_slot, 0, &rank)?;
+        ctx.sync(SYNC_DEFAULT)?;
+    }
+
+    ctx.deregister(succ_slot)?;
+    ctx.deregister(rank_slot)?;
+    ctx.deregister(fetch_succ)?;
+    ctx.deregister(fetch_rank)?;
+    Ok(rank[..succ_local.len()].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Args;
+    use crate::ctx::{exec, Platform, Root};
+    use crate::util::rng::XorShift64;
+
+    /// Build a random list over n nodes; returns (succ array, rank oracle).
+    fn random_list(n: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
+        let mut order: Vec<u64> = (0..n as u64).collect();
+        let mut rng = XorShift64::new(seed);
+        rng.shuffle(&mut order);
+        let mut succ = vec![NIL; n];
+        for w in order.windows(2) {
+            succ[w[0] as usize] = w[1];
+        }
+        let mut rank = vec![0u64; n];
+        for (dist, &node) in order.iter().rev().enumerate() {
+            rank[node as usize] = dist as u64;
+        }
+        (succ, rank)
+    }
+
+    fn run_case(p: u32, n: usize, seed: u64) {
+        let (succ, want) = random_list(n, seed);
+        let succ2 = succ.clone();
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(p);
+        let outs = exec(
+            &root,
+            p,
+            move |ctx, _| {
+                let b = n.div_ceil(ctx.p() as usize);
+                let me = ctx.pid() as usize;
+                ctx.resize_memory_register(8).unwrap();
+                ctx.resize_message_queue(4 * b + 8).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let lo = (me * b).min(n);
+                let hi = ((me + 1) * b).min(n);
+                list_rank(ctx, n, &succ2[lo..hi]).unwrap()
+            },
+            Args::none(),
+        )
+        .unwrap();
+        let got: Vec<u64> = outs.into_iter().flatten().collect();
+        assert_eq!(got, want, "p={p} n={n}");
+    }
+
+    #[test]
+    fn ranks_small_lists() {
+        run_case(2, 8, 3);
+        run_case(4, 16, 4);
+    }
+
+    #[test]
+    fn ranks_uneven_blocks() {
+        run_case(4, 37, 9); // n not divisible by p
+        run_case(3, 100, 10);
+    }
+
+    #[test]
+    fn ranks_larger_list() {
+        run_case(4, 1024, 42);
+    }
+
+    #[test]
+    fn single_node_list() {
+        run_case(2, 1, 5);
+    }
+}

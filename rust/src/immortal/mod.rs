@@ -1,0 +1,20 @@
+//! Immortal algorithms on LPF.
+//!
+//! The paper's thesis (§1): algorithms proven optimal in the BSP model,
+//! implemented once against a model-compliant layer, remain valid on any
+//! machine — they parametrise on `lpf_probe`'s `(p, g, ℓ)` instead of
+//! hard-coding machine behaviour. Besides the FFT (crate::fft) this
+//! module carries two more classics, both exercising that pattern:
+//!
+//! * [`sort`] — parallel sample sort (regular sampling, Shi & Schaeffer):
+//!   one superstep of splitter agreement, one all-to-all of data;
+//!   `O(n/p · log n)` local work, `h ≈ 2n/p`, O(1) supersteps.
+//! * [`list_rank`] — pointer-jumping list ranking: the irregular-
+//!   communication workload the paper names next to the FFT (§3.2);
+//!   `⌈log₂ n⌉` supersteps of `h = n/p` gets.
+
+pub mod list_rank;
+pub mod sort;
+
+pub use list_rank::list_rank;
+pub use sort::sample_sort;

@@ -1,0 +1,196 @@
+//! Parallel sample sort over LPF (regular sampling).
+//!
+//! BSP cost: local sort `O((n/p)·log(n/p))` + splitter allgather
+//! (`h = p²` keys) + one data total-exchange (`h ≤ 2n/p` with regular
+//! sampling's balance guarantee) + local merge. Three supersteps total —
+//! independent of the machine, as an immortal algorithm must be; the
+//! *choice* of sample rate could consult `probe` (we keep the classic
+//! `p` samples per process).
+
+use crate::collectives::Coll;
+use crate::core::{LpfError, Result, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::ctx::Context;
+
+/// Sort the union of every process's `mine` slice; returns this process's
+/// sorted partition (concatenating partitions by pid yields the global
+/// sorted order). Keys are `u64`.
+///
+/// Capacity needs: 4 registered slots and `2p` queued messages beyond
+/// what the caller uses, plus a `Coll` workspace of `8·p²` bytes.
+pub fn sample_sort(ctx: &mut Context, mine: &[u64]) -> Result<Vec<u64>> {
+    let p = ctx.p() as usize;
+    let me = ctx.pid() as usize;
+    if p == 1 {
+        let mut v = mine.to_vec();
+        v.sort_unstable();
+        return Ok(v);
+    }
+
+    // ---- superstep 1: local sort + regular samples, allgather samples
+    let mut local = mine.to_vec();
+    local.sort_unstable();
+    let coll = Coll::new(ctx, 8 * p * p)?;
+    ctx.sync(SYNC_DEFAULT)?;
+    let mut samples = vec![u64::MAX; p];
+    for (k, s) in samples.iter_mut().enumerate() {
+        if !local.is_empty() {
+            *s = local[k * local.len() / p];
+        }
+    }
+    let mut all_samples = vec![0u64; p * p];
+    coll.allgather(ctx, &samples, &mut all_samples)?;
+    all_samples.sort_unstable();
+    // splitters: every p-th sample
+    let splitters: Vec<u64> = (1..p).map(|k| all_samples[k * p]).collect();
+
+    // ---- superstep 2: exchange partition sizes
+    // destination of a key = index of first splitter greater than it
+    let mut parts: Vec<Vec<u64>> = vec![Vec::new(); p];
+    for &key in &local {
+        let dst = splitters.partition_point(|&s| s <= key);
+        parts[dst].push(key);
+    }
+    let sizes: Vec<u64> = parts.iter().map(|v| v.len() as u64).collect();
+    let mut incoming_sizes = vec![0u64; p];
+    // alltoall of one u64 per pair
+    let mut recv = vec![0u64; p];
+    coll.alltoall(ctx, &sizes, &mut recv)?;
+    incoming_sizes.copy_from_slice(&recv);
+    let total_in: usize = incoming_sizes.iter().map(|&s| s as usize).sum();
+
+    // ---- superstep 3: the data total-exchange
+    let out_bytes: usize = 8 * local.len().max(1);
+    let in_bytes: usize = 8 * total_in.max(1);
+    let send_slot = ctx.register_local(out_bytes)?;
+    let recv_slot = ctx.register_global(in_bytes)?;
+    ctx.sync(SYNC_DEFAULT)?; // activate registration collectively
+    // pack parts contiguously; put each part at the receiver's offset,
+    // which is the prefix sum of what the receiver hears from pids < me.
+    // Receivers told us their incoming sizes implicitly: we know sizes we
+    // send; the receiver-side offset needs sizes from ALL senders to that
+    // receiver — allgather the full size matrix row we produced:
+    let mut size_matrix = vec![0u64; p * p]; // [sender][receiver]
+    coll.allgather(ctx, &sizes, &mut size_matrix)?;
+    let mut flat: Vec<u64> = Vec::with_capacity(local.len());
+    let mut my_off = 0usize;
+    for (dst, part) in parts.iter().enumerate() {
+        if !part.is_empty() {
+            ctx.write_typed(send_slot, my_off, part)?;
+            // offset at dst: Σ over senders < me of size_matrix[s][dst]
+            let dst_off: u64 = (0..me).map(|s| size_matrix[s * p + dst]).sum();
+            ctx.put(
+                send_slot,
+                8 * my_off,
+                dst as u32,
+                recv_slot,
+                8 * dst_off as usize,
+                8 * part.len(),
+                MSG_DEFAULT,
+            )?;
+            my_off += part.len();
+        }
+        flat.extend(part);
+    }
+    ctx.sync(SYNC_DEFAULT)?;
+    let mut received = vec![0u64; total_in];
+    ctx.read_typed(recv_slot, 0, &mut received)?;
+    received.sort_unstable(); // merge of p sorted runs; sort is simplest
+    ctx.deregister(send_slot)?;
+    ctx.deregister(recv_slot)?;
+    coll.free(ctx)?;
+    ctx.sync(SYNC_DEFAULT)?;
+    Ok(received)
+}
+
+/// Check a distributed sort result: partitions sorted, boundaries ordered,
+/// multiset preserved (helper for tests and examples).
+pub fn verify_sorted(parts: &[Vec<u64>], input: &[u64]) -> Result<()> {
+    let mut all: Vec<u64> = parts.iter().flatten().copied().collect();
+    for w in all.windows(2) {
+        if w[0] > w[1] {
+            return Err(LpfError::Illegal("output not globally sorted".into()));
+        }
+    }
+    let mut sorted_in = input.to_vec();
+    sorted_in.sort_unstable();
+    all.sort_unstable();
+    if all != sorted_in {
+        return Err(LpfError::Illegal("output is not a permutation of input".into()));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Args;
+    use crate::ctx::{exec, Platform, Root};
+    use crate::util::rng::XorShift64;
+
+    fn run_sort(p: u32, n_per: usize, seed: u64) {
+        let mut rng = XorShift64::new(seed);
+        let global: Vec<u64> = (0..n_per * p as usize).map(|_| rng.next_u64() >> 16).collect();
+        let g2 = global.clone();
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(p);
+        let outs = exec(
+            &root,
+            p,
+            move |ctx, _| {
+                ctx.resize_memory_register(8).unwrap();
+                ctx.resize_message_queue(8 * ctx.p() as usize).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let me = ctx.pid() as usize;
+                let mine = &g2[me * n_per..(me + 1) * n_per];
+                sample_sort(ctx, mine).unwrap()
+            },
+            Args::none(),
+        )
+        .unwrap();
+        verify_sorted(&outs, &global).unwrap();
+    }
+
+    #[test]
+    fn sorts_uniform_keys() {
+        run_sort(4, 500, 1);
+    }
+
+    #[test]
+    fn sorts_across_p_values() {
+        for p in [1, 2, 3, 5] {
+            run_sort(p, 200, p as u64 + 10);
+        }
+    }
+
+    #[test]
+    fn sorts_skewed_keys() {
+        // many duplicates + clustered values stress splitter balance
+        let p = 4u32;
+        let n_per = 300usize;
+        let mut rng = XorShift64::new(77);
+        let global: Vec<u64> =
+            (0..n_per * p as usize).map(|_| rng.below(7) * 1000).collect();
+        let g2 = global.clone();
+        let root = Root::new(Platform::shared()).with_max_procs(p);
+        let outs = exec(
+            &root,
+            p,
+            move |ctx, _| {
+                ctx.resize_memory_register(8).unwrap();
+                ctx.resize_message_queue(8 * ctx.p() as usize).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let me = ctx.pid() as usize;
+                sample_sort(ctx, &g2[me * n_per..(me + 1) * n_per]).unwrap()
+            },
+            Args::none(),
+        )
+        .unwrap();
+        verify_sorted(&outs, &global).unwrap();
+    }
+
+    #[test]
+    fn verify_catches_bad_outputs() {
+        assert!(verify_sorted(&[vec![2, 1]], &[1, 2]).is_err());
+        assert!(verify_sorted(&[vec![1, 2]], &[1, 3]).is_err());
+        assert!(verify_sorted(&[vec![1], vec![2]], &[2, 1]).is_ok());
+    }
+}

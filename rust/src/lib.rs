@@ -1,0 +1,38 @@
+//! # LPF — Lightweight Parallel Foundations
+//!
+//! A reproduction of *"Lightweight Parallel Foundations: a model-compliant
+//! communication layer"* (Suijlen & Yzelman, 2019) as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for the paper-vs-measured record.
+//!
+//! The crate exposes the paper's twelve primitives on the [`ctx::Context`]
+//! type, four fabrics ([`fabric`]), a collectives library ([`collectives`]),
+//! a BSPlib compatibility layer ([`bsplib`]), and the two evaluation
+//! applications (FFT, PageRank) plus the sparksim Big-Data substrate.
+
+pub mod barrier;
+pub mod benchkit;
+pub mod bsplib;
+pub mod collectives;
+pub mod core;
+pub mod ctx;
+pub mod experiments;
+pub mod fabric;
+pub mod fft;
+pub mod graphblas;
+pub mod immortal;
+pub mod graphgen;
+pub mod memory;
+pub mod netsim;
+pub mod probe;
+pub mod queue;
+pub mod runtime;
+pub mod sparksim;
+pub mod sync;
+pub mod util;
+
+pub use crate::core::{
+    Args, LpfError, MachineParams, Memslot, MsgAttr, Pid, Result, SyncAttr, MAX_P, MSG_DEFAULT,
+    SYNC_DEFAULT,
+};
+pub use crate::ctx::{exec, hook, Context, Init, Platform, Root};

@@ -1,0 +1,94 @@
+//! The `lpf` CLI: launcher for the reproduction's experiments and demos.
+//!
+//! ```text
+//! lpf probe   [p]        offline probe: fill artifacts/probe.table
+//! lpf fig2               Fig. 2  — transport compliance curves
+//! lpf table3  [p]        Table 3 — system constants g, l
+//! lpf fig3    [--fast]   Fig. 3  — immortal FFT vs baselines
+//! lpf table4  [--fast]   Table 4 — pure vs accelerated PageRank
+//! lpf demo               quick smoke of the twelve primitives
+//! ```
+
+use lpf::core::{Args, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::ctx::{exec, Platform, Root};
+use lpf::experiments::{
+    run_fig2, run_fig3, run_table3, run_table4, Fig2Config, Fig3Config, Table3Config,
+    Table4Config,
+};
+use lpf::probe::bench::ProbeConfig;
+
+fn demo() {
+    let root = Root::new(Platform::shared());
+    let outs = exec(
+        &root,
+        4,
+        |ctx, _| {
+            ctx.resize_memory_register(2).unwrap();
+            ctx.resize_message_queue(2 * ctx.p() as usize).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let mine = ctx.register_global(8).unwrap();
+            let all = ctx.register_global(8 * ctx.p() as usize).unwrap();
+            ctx.write_typed(mine, 0, &[ctx.pid() as u64 * 100]).unwrap();
+            for k in 0..ctx.p() {
+                ctx.put(mine, 0, k, all, 8 * ctx.pid() as usize, 8, MSG_DEFAULT).unwrap();
+            }
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let mut v = vec![0u64; ctx.p() as usize];
+            ctx.read_typed(all, 0, &mut v).unwrap();
+            v.iter().sum::<u64>()
+        },
+        Args::none(),
+    )
+    .unwrap();
+    println!("allgather-sum on 4 processes: {:?} (expect [600; 4])", outs);
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let cmd = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let fast = argv.iter().any(|a| a == "--fast");
+    let arg_num = |i: usize, default: u32| -> u32 {
+        argv.get(i).and_then(|s| s.parse().ok()).unwrap_or(default)
+    };
+    match cmd {
+        "probe" => {
+            let p = arg_num(2, 4);
+            let cfg = Table3Config {
+                probe: ProbeConfig::quick(p),
+                ..Table3Config::default_run(p)
+            };
+            run_table3(&cfg).expect("probe");
+            println!("probe table saved to artifacts/probe.table");
+        }
+        "fig2" => {
+            run_fig2(&Fig2Config::default_sweep()).expect("fig2");
+        }
+        "table3" => {
+            run_table3(&Table3Config::default_run(arg_num(2, 4))).expect("table3");
+        }
+        "fig3" => {
+            let mut cfg = Fig3Config::default_sweep();
+            if fast {
+                cfg.ks = (10..=13).collect();
+                cfg.reps = 3;
+            }
+            run_fig3(&cfg).expect("fig3");
+        }
+        "table4" => {
+            let mut cfg = Table4Config::default_run();
+            if fast {
+                cfg.graphs.truncate(1);
+                cfg.max_iters = 30;
+            }
+            run_table4(&cfg).expect("table4");
+        }
+        "demo" => demo(),
+        _ => {
+            println!(
+                "lpf — Lightweight Parallel Foundations reproduction\n\
+                 usage: lpf <probe|fig2|table3|fig3|table4|demo> [args] [--fast]\n\
+                 see DESIGN.md / EXPERIMENTS.md"
+            );
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! Registered memory: slot storage and the per-process slot register.
+//!
+//! LPF communicates exclusively between *registered* memory areas
+//! (`lpf_register_local` / `lpf_register_global`, paper §2.1). The register
+//! has a user-controlled capacity (`lpf_resize_memory_register`): highly
+//! scalable implementations reserve heap memory **linear** in the number of
+//! reserved slots (paper §2.2), which this implementation honours — all
+//! bookkeeping here is `O(capacity)`.
+//!
+//! # Safety discipline (BSP superstep rule)
+//!
+//! Slot bytes live in [`SlotStorage`], which is shared across the processes
+//! of a context (threads). Soundness follows the paper's own rule: *"Memory
+//! that is the target or source of communication may not be used by non-LPF
+//! statements"* between the `put`/`get` and the completing `sync`. The sync
+//! engine's two barriers delimit the only window in which remote processes
+//! touch a storage, and within that window the destination-side conflict
+//! resolution serialises writers. Checked builds additionally verify
+//! read/write overlap legality per superstep (see [`crate::sync::conflict`]).
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::core::{LpfError, Memslot, Result, SlotKind};
+
+/// Fixed-size byte storage backing one memory slot.
+///
+/// Interior-mutable: see the module-level safety discipline.
+pub struct SlotStorage {
+    data: UnsafeCell<Box<[u8]>>,
+    len: usize,
+}
+
+// SAFETY: access is serialised by the sync-engine phases (module docs).
+unsafe impl Sync for SlotStorage {}
+unsafe impl Send for SlotStorage {}
+
+impl SlotStorage {
+    /// Allocate zeroed storage of `len` bytes.
+    pub fn new(len: usize) -> Result<Arc<Self>> {
+        // A real out-of-memory aborts in Rust; we model the paper's
+        // mitigable out-of-memory by rejecting absurd requests up front.
+        if len > isize::MAX as usize / 2 {
+            return Err(LpfError::OutOfMemory(format!("slot of {len} bytes")));
+        }
+        Ok(Arc::new(SlotStorage {
+            data: UnsafeCell::new(vec![0u8; len].into_boxed_slice()),
+            len,
+        }))
+    }
+
+    /// Length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if zero-length.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Immutable view of the bytes.
+    ///
+    /// # Safety
+    /// Caller must hold the superstep discipline: no concurrent writer to
+    /// the addressed range (sync-engine phases guarantee this).
+    pub unsafe fn bytes(&self) -> &[u8] {
+        &*self.data.get()
+    }
+
+    /// Mutable view of the bytes.
+    ///
+    /// # Safety
+    /// Caller must be the unique writer of the addressed range within the
+    /// current sync phase (destination-side execution guarantees this).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn bytes_mut(&self) -> &mut [u8] {
+        &mut *self.data.get()
+    }
+}
+
+impl std::fmt::Debug for SlotStorage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SlotStorage({} B)", self.len())
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    storage: Arc<SlotStorage>,
+    gen: u32,
+}
+
+/// One process's slot register: two id spaces (local / global) so that
+/// `register_local` needs no collective coordination while `register_global`
+/// ids still align across processes (both are allocated in collective call
+/// order, which LPF requires to be identical on every process).
+#[derive(Debug)]
+pub struct Register {
+    local: Vec<Option<Entry>>,
+    global: Vec<Option<Entry>>,
+    local_free: Vec<u32>,
+    global_free: Vec<u32>,
+    /// Active capacity: max number of simultaneously registered slots.
+    capacity: usize,
+    /// Capacity requested via `resize_memory_register`, activated by the
+    /// next `sync` (paper §2.2: "buffer sizes become active after a fence").
+    pending_capacity: usize,
+    in_use: usize,
+    gen_counter: AtomicU32,
+}
+
+/// Default slot capacity before any `resize_memory_register` call. The paper
+/// leaves the initial capacity implementation-defined; we match the real
+/// LPF's conservative default of zero usable slots *after* the mandatory
+/// first resize, but allow a small number so toy programs work out of the box.
+pub const DEFAULT_SLOT_CAPACITY: usize = 0;
+
+impl Register {
+    /// Empty register with the default capacity.
+    pub fn new() -> Self {
+        Register {
+            local: Vec::new(),
+            global: Vec::new(),
+            local_free: Vec::new(),
+            global_free: Vec::new(),
+            capacity: DEFAULT_SLOT_CAPACITY,
+            pending_capacity: DEFAULT_SLOT_CAPACITY,
+            in_use: 0,
+            gen_counter: AtomicU32::new(1),
+        }
+    }
+
+    /// `lpf_resize_memory_register`: O(N) in the requested capacity, takes
+    /// effect at the next sync. Never shrinks below the number of slots in
+    /// use at activation time.
+    pub fn resize(&mut self, capacity: usize) -> Result<()> {
+        if capacity > u32::MAX as usize {
+            return Err(LpfError::OutOfMemory(format!("{capacity} slots")));
+        }
+        self.pending_capacity = capacity;
+        // O(N) reservation up front, so activation at the fence is O(1) and
+        // registration stays amortised O(1).
+        let want = capacity.saturating_sub(self.local.len().max(self.global.len()));
+        self.local.reserve(want);
+        self.global.reserve(want);
+        Ok(())
+    }
+
+    /// Activate pending capacity (called by the sync engine at the fence).
+    pub fn activate_pending(&mut self) {
+        self.capacity = self.pending_capacity.max(self.in_use);
+    }
+
+    /// Number of slots currently registered.
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Active capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn alloc(&mut self, kind: SlotKind, storage: Arc<SlotStorage>) -> Result<Memslot> {
+        if self.in_use >= self.capacity {
+            return Err(LpfError::SlotCapacity { capacity: self.capacity, in_use: self.in_use });
+        }
+        let gen = self.gen_counter.fetch_add(1, Ordering::Relaxed);
+        let (table, free) = match kind {
+            SlotKind::Local => (&mut self.local, &mut self.local_free),
+            SlotKind::Global => (&mut self.global, &mut self.global_free),
+        };
+        let index = match free.pop() {
+            Some(i) => {
+                table[i as usize] = Some(Entry { storage, gen });
+                i
+            }
+            None => {
+                table.push(Some(Entry { storage, gen }));
+                (table.len() - 1) as u32
+            }
+        };
+        self.in_use += 1;
+        Ok(Memslot { kind, index, gen })
+    }
+
+    /// Register `storage` in the local id space.
+    pub fn register_local(&mut self, storage: Arc<SlotStorage>) -> Result<Memslot> {
+        self.alloc(SlotKind::Local, storage)
+    }
+
+    /// Register `storage` in the global id space. The *collective* nature is
+    /// enforced by the context layer; the register itself only guarantees
+    /// deterministic index assignment given identical call order.
+    pub fn register_global(&mut self, storage: Arc<SlotStorage>) -> Result<Memslot> {
+        self.alloc(SlotKind::Global, storage)
+    }
+
+    /// `lpf_deregister`: O(1).
+    pub fn deregister(&mut self, slot: Memslot) -> Result<()> {
+        let (table, free) = match slot.kind {
+            SlotKind::Local => (&mut self.local, &mut self.local_free),
+            SlotKind::Global => (&mut self.global, &mut self.global_free),
+        };
+        match table.get_mut(slot.index as usize) {
+            Some(entry @ Some(_)) if entry.as_ref().unwrap().gen == slot.gen => {
+                *entry = None;
+                free.push(slot.index);
+                self.in_use -= 1;
+                Ok(())
+            }
+            _ => Err(LpfError::Illegal(format!("deregister of unknown slot {slot:?}"))),
+        }
+    }
+
+    /// Resolve a slot to its storage. O(1).
+    pub fn resolve(&self, slot: Memslot) -> Result<Arc<SlotStorage>> {
+        let table = match slot.kind {
+            SlotKind::Local => &self.local,
+            SlotKind::Global => &self.global,
+        };
+        match table.get(slot.index as usize) {
+            Some(Some(entry)) if entry.gen == slot.gen => Ok(entry.storage.clone()),
+            _ => Err(LpfError::Illegal(format!("unknown slot {slot:?}"))),
+        }
+    }
+}
+
+impl Default for Register {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Shareable register: the owner mutates between syncs; remote processes
+/// resolve slots during the sync data phase. The `RwLock` protects only the
+/// *table*; slot bytes follow the superstep discipline.
+#[derive(Debug)]
+pub struct SharedRegister {
+    inner: RwLock<Register>,
+}
+
+impl SharedRegister {
+    /// Fresh empty register.
+    pub fn new() -> Arc<Self> {
+        Arc::new(SharedRegister { inner: RwLock::new(Register::new()) })
+    }
+
+    /// Owner-side mutable access.
+    pub fn with_mut<T>(&self, f: impl FnOnce(&mut Register) -> T) -> T {
+        f(&mut self.inner.write().expect("register poisoned"))
+    }
+
+    /// Reader access (any process, during the data phase).
+    pub fn with<T>(&self, f: impl FnOnce(&Register) -> T) -> T {
+        f(&self.inner.read().expect("register poisoned"))
+    }
+
+    /// Convenience: resolve a slot.
+    pub fn resolve(&self, slot: Memslot) -> Result<Arc<SlotStorage>> {
+        self.with(|r| r.resolve(slot))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg_with_capacity(n: usize) -> Register {
+        let mut r = Register::new();
+        r.resize(n).unwrap();
+        r.activate_pending();
+        r
+    }
+
+    #[test]
+    fn capacity_enforced_and_mitigable() {
+        let mut r = reg_with_capacity(1);
+        let s = SlotStorage::new(8).unwrap();
+        let a = r.register_local(s.clone()).unwrap();
+        let err = r.register_local(s.clone()).unwrap_err();
+        assert!(err.is_mitigable());
+        // no side effects: the failed call did not consume a slot
+        assert_eq!(r.in_use(), 1);
+        r.deregister(a).unwrap();
+        assert_eq!(r.in_use(), 0);
+        r.register_local(s).unwrap();
+    }
+
+    #[test]
+    fn pending_capacity_activates_at_fence() {
+        let mut r = Register::new();
+        let s = SlotStorage::new(4).unwrap();
+        assert!(r.register_local(s.clone()).is_err(), "default capacity is 0");
+        r.resize(2).unwrap();
+        assert!(r.register_local(s.clone()).is_err(), "not active until fence");
+        r.activate_pending();
+        r.register_local(s).unwrap();
+    }
+
+    #[test]
+    fn local_and_global_id_spaces_are_independent() {
+        let mut r = reg_with_capacity(4);
+        let s = SlotStorage::new(1).unwrap();
+        let l0 = r.register_local(s.clone()).unwrap();
+        let g0 = r.register_global(s.clone()).unwrap();
+        assert_eq!(l0.index(), 0);
+        assert_eq!(g0.index(), 0);
+        assert_ne!(l0, g0);
+        assert_eq!(l0.kind(), SlotKind::Local);
+        assert_eq!(g0.kind(), SlotKind::Global);
+    }
+
+    #[test]
+    fn stale_handle_rejected_after_deregister() {
+        let mut r = reg_with_capacity(2);
+        let s = SlotStorage::new(1).unwrap();
+        let a = r.register_global(s.clone()).unwrap();
+        r.deregister(a).unwrap();
+        assert!(r.resolve(a).is_err());
+        // index is recycled but generation differs
+        let b = r.register_global(s).unwrap();
+        assert_eq!(a.index(), b.index());
+        assert!(r.resolve(a).is_err());
+        assert!(r.resolve(b).is_ok());
+    }
+
+    #[test]
+    fn deterministic_global_indices_under_same_call_order() {
+        let mk = || {
+            let mut r = reg_with_capacity(8);
+            let s = SlotStorage::new(1).unwrap();
+            let a = r.register_global(s.clone()).unwrap();
+            let _b = r.register_global(s.clone()).unwrap();
+            r.deregister(a).unwrap();
+            let c = r.register_global(s.clone()).unwrap();
+            (a.index(), c.index())
+        };
+        let (a1, c1) = mk();
+        let (a2, c2) = mk();
+        assert_eq!(a1, a2);
+        assert_eq!(c1, c2, "free-list reuse is deterministic");
+    }
+
+    #[test]
+    fn storage_len_and_zeroing() {
+        let s = SlotStorage::new(16).unwrap();
+        assert_eq!(s.len(), 16);
+        assert!(!s.is_empty());
+        unsafe {
+            assert!(s.bytes().iter().all(|&b| b == 0));
+            s.bytes_mut()[3] = 7;
+            assert_eq!(s.bytes()[3], 7);
+        }
+    }
+
+    #[test]
+    fn shared_register_read_write() {
+        let sr = SharedRegister::new();
+        sr.with_mut(|r| {
+            r.resize(1).unwrap();
+            r.activate_pending();
+        });
+        let slot = sr.with_mut(|r| r.register_global(SlotStorage::new(4).unwrap())).unwrap();
+        assert_eq!(sr.resolve(slot).unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,242 @@
+//! The offline probe benchmark (paper §4.1): measure `g` and `ℓ` with
+//! total-exchange h-relations, fill the Θ(1) table behind `lpf_probe`,
+//! and produce the rows of Table 3.
+//!
+//! Estimators, exactly as the paper defines them:
+//! * `g = (T(n_max) − T(2p)) / (n_max − 2p)` — asymptotic per-word cost;
+//! * `ℓ = max{ T(0), 2·T(p) − T(2p) }` — fixed cost, shielded against the
+//!   "sensitive to small deviations" problem by sampling repeatedly;
+//! * both normalised by `r`, the measured memcpy speed, for the table.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::benchkit::Samples;
+use crate::core::machine::BspParams;
+use crate::core::{Args, Result, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::ctx::{exec, Context, Platform, Root};
+use crate::probe::ProbeTable;
+
+/// Configuration for one probe run.
+#[derive(Debug, Clone)]
+pub struct ProbeConfig {
+    /// Processes.
+    pub p: u32,
+    /// Word sizes to measure (Table 3 uses 8, 64, 1024, 1 MiB).
+    pub word_sizes: Vec<usize>,
+    /// Maximum per-process h-relation volume in bytes ("at least four
+    /// times the cache" in the paper; scaled to this container).
+    pub max_bytes: usize,
+    /// Timed repetitions per measurement point.
+    pub reps: u32,
+    /// Samples per point (outer loop; Table 3's CIs come from these).
+    pub samples: u32,
+}
+
+impl ProbeConfig {
+    /// Container-scaled defaults.
+    pub fn quick(p: u32) -> ProbeConfig {
+        ProbeConfig {
+            p,
+            word_sizes: vec![8, 64, 1024, 1 << 20],
+            max_bytes: 4 << 20,
+            reps: 3,
+            samples: 5,
+        }
+    }
+}
+
+/// Measure the mean time (ns) of a total-exchange where every process
+/// sends and receives `h` words of `word_bytes` each. Uses wall-clock on
+/// real fabrics and the simulated clock on netsim fabrics.
+pub fn measure_exchange(
+    platform: &Platform,
+    p: u32,
+    word_bytes: usize,
+    h: usize,
+    reps: u32,
+) -> Result<f64> {
+    let root = Root::new(platform.clone()).with_max_procs(p);
+    let outs = exec(
+        &root,
+        p,
+        move |ctx: &mut Context, _| -> Result<f64> {
+            let p = ctx.p();
+            let bytes = h * word_bytes;
+            ctx.resize_memory_register(2)?;
+            ctx.resize_message_queue(2 * (h + p as usize))?;
+            ctx.sync(SYNC_DEFAULT)?;
+            let src = ctx.register_global(bytes.max(1))?;
+            let dst = ctx.register_global(bytes.max(1))?;
+            ctx.sync(SYNC_DEFAULT)?;
+            // balanced total exchange: my h words split evenly over peers
+            let issue = |ctx: &mut Context| -> Result<()> {
+                if p == 1 || h == 0 {
+                    return Ok(());
+                }
+                let peers = p - 1;
+                let per_peer = h / peers as usize;
+                let rem = h % peers as usize;
+                let mut off = 0usize;
+                let mut k = 0u32;
+                for d in 0..p {
+                    if d == ctx.pid() {
+                        continue;
+                    }
+                    let words = per_peer + usize::from((k as usize) < rem);
+                    k += 1;
+                    if words == 0 {
+                        continue;
+                    }
+                    ctx.put(src, off, d, dst, off, words * word_bytes, MSG_DEFAULT)?;
+                    off += words * word_bytes;
+                }
+                Ok(())
+            };
+            // warm + settle
+            issue(ctx)?;
+            ctx.sync(SYNC_DEFAULT)?;
+            let sim_before = ctx.sim_time_ns();
+            let wall = Instant::now();
+            for _ in 0..reps {
+                issue(ctx)?;
+                ctx.sync(SYNC_DEFAULT)?;
+            }
+            let ns = match (sim_before, ctx.sim_time_ns()) {
+                (Some(b), Some(a)) => (a - b) / reps as f64,
+                _ => wall.elapsed().as_nanos() as f64 / reps as f64,
+            };
+            Ok(ns)
+        },
+        Args::none(),
+    )?;
+    let per_pid: Result<Vec<f64>> = outs.into_iter().collect();
+    let per_pid = per_pid?;
+    // BSP time of the h-relation = the slowest process
+    Ok(per_pid.iter().copied().fold(0.0, f64::max))
+}
+
+/// Measured memcpy speed in ns/byte (Table 3's normaliser `r`).
+pub fn measure_memcpy_r(bytes: usize, reps: u32) -> f64 {
+    let src = vec![7u8; bytes];
+    let mut dst = vec![0u8; bytes];
+    // warm
+    dst.copy_from_slice(&src);
+    let t = Instant::now();
+    for _ in 0..reps {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&dst);
+    }
+    t.elapsed().as_nanos() as f64 / (reps as f64 * bytes as f64)
+}
+
+/// One Table-3 row: `(g, ℓ)` for a word size, with confidence intervals.
+#[derive(Debug, Clone)]
+pub struct ProbeRow {
+    pub word_bytes: usize,
+    pub g_ns: f64,
+    pub g_ci: f64,
+    pub l_ns: f64,
+    pub l_ci: f64,
+}
+
+/// Run the full offline probe for one platform; records the rows into
+/// `table` (keyed by the backend name) and returns them with the measured
+/// memcpy speed `r` (ns/byte).
+pub fn run_offline_probe(
+    platform: &Platform,
+    cfg: &ProbeConfig,
+    table: &Arc<ProbeTable>,
+) -> Result<(Vec<ProbeRow>, f64)> {
+    let backend = platform.make_fabric(1).name();
+    let r = measure_memcpy_r(cfg.max_bytes.min(8 << 20), 5);
+    let p = cfg.p;
+    let mut rows = Vec::new();
+    for &w in &cfg.word_sizes {
+        let n_max = (cfg.max_bytes / w).max(4 * p as usize);
+        let mut gs = Vec::new();
+        let mut ls = Vec::new();
+        for _ in 0..cfg.samples {
+            let t0 = measure_exchange(platform, p, w, 0, cfg.reps)?;
+            let tp = measure_exchange(platform, p, w, p as usize, cfg.reps)?;
+            let t2p = measure_exchange(platform, p, w, 2 * p as usize, cfg.reps)?;
+            let tmax = measure_exchange(platform, p, w, n_max, cfg.reps)?;
+            let g = (tmax - t2p) / (n_max - 2 * p as usize) as f64;
+            let l = f64::max(t0, 2.0 * tp - t2p);
+            gs.push(g.max(0.0));
+            ls.push(l.max(0.0));
+        }
+        let gs = Samples::from(gs);
+        let ls = Samples::from(ls);
+        let row = ProbeRow {
+            word_bytes: w,
+            g_ns: gs.mean(),
+            g_ci: gs.ci95(),
+            l_ns: ls.mean(),
+            l_ci: ls.ci95(),
+        };
+        table.record(
+            backend,
+            p,
+            BspParams { word_bytes: w, g_ns: row.g_ns, l_ns: row.l_ns },
+            r,
+        );
+        rows.push(row);
+    }
+    Ok((rows, r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memcpy_r_is_sane() {
+        let r = measure_memcpy_r(1 << 20, 3);
+        assert!(r > 0.001 && r < 100.0, "r = {r} ns/byte");
+    }
+
+    #[test]
+    fn exchange_time_grows_with_h() {
+        // medians over several attempts: wall-clock on a single core that
+        // is concurrently running the rest of the suite is noisy
+        let plat = Platform::shared().checked(false);
+        let med = |h: usize| {
+            let mut v: Vec<f64> =
+                (0..5).map(|_| measure_exchange(&plat, 2, 8, h, 2).unwrap()).collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[2]
+        };
+        let t_small = med(16);
+        let t_large = med(1 << 18);
+        assert!(t_large > t_small, "{t_large} vs {t_small}");
+    }
+
+    #[test]
+    fn sim_fabric_reports_sim_time() {
+        let plat = Platform::rdma();
+        let t = measure_exchange(&plat, 4, 8, 256, 1).unwrap();
+        let t2 = measure_exchange(&plat, 4, 8, 256, 1).unwrap();
+        assert!(t > 0.0);
+        assert_eq!(t, t2, "netsim must be deterministic");
+    }
+
+    #[test]
+    fn offline_probe_fills_table() {
+        let table = Arc::new(ProbeTable::default());
+        let cfg = ProbeConfig {
+            p: 2,
+            word_sizes: vec![8, 1024],
+            max_bytes: 1 << 16,
+            reps: 1,
+            samples: 2,
+        };
+        let (rows, r) =
+            run_offline_probe(&Platform::shared().checked(false), &cfg, &table).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(r > 0.0);
+        let m = table.lookup("shared", 2);
+        assert_eq!(m.params.len(), 2);
+        assert!(m.h_relation_ns(100, 8) > 0.0);
+    }
+}

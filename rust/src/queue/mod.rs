@@ -1,0 +1,225 @@
+//! The per-process RDMA request queue.
+//!
+//! `lpf_put` / `lpf_get` are O(1) and touch **no payload data** (paper Fig. 1
+//! and §3: "our common implementation strategy delays execution of all
+//! communication requests until the lpf_sync"). They only append a
+//! descriptor here; the sync engine drains the queue.
+//!
+//! `lpf_resize_message_queue(n)` bounds how many requests this process "can
+//! queue or be subject to" (paper §2.2): `n` caps outgoing requests at
+//! enqueue time, and the sync engine checks the incoming count against the
+//! destination's cap in checked builds.
+
+use crate::core::{LpfError, Memslot, MsgAttr, Pid, Result};
+
+/// A queued `lpf_put`: copy `len` bytes from local `(src_slot, src_off)` to
+/// remote `(dst_pid, dst_slot, dst_off)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PutReq {
+    pub src_slot: Memslot,
+    pub src_off: usize,
+    pub dst_pid: Pid,
+    pub dst_slot: Memslot,
+    pub dst_off: usize,
+    pub len: usize,
+    pub attr: MsgAttr,
+}
+
+/// A queued `lpf_get`: copy `len` bytes from remote `(src_pid, src_slot,
+/// src_off)` into local `(dst_slot, dst_off)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GetReq {
+    pub src_pid: Pid,
+    pub src_slot: Memslot,
+    pub src_off: usize,
+    pub dst_slot: Memslot,
+    pub dst_off: usize,
+    pub len: usize,
+    pub attr: MsgAttr,
+}
+
+/// A queued communication request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    Put(PutReq),
+    Get(GetReq),
+}
+
+impl Request {
+    /// Payload length in bytes.
+    pub fn len(&self) -> usize {
+        match self {
+            Request::Put(p) => p.len,
+            Request::Get(g) => g.len,
+        }
+    }
+
+    /// True if the payload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Default message-queue capacity before any resize: zero, forcing programs
+/// to size their queues explicitly — exactly the discipline the paper's
+/// Algorithm 2 demonstrates (`lpf_resize_message_queue(ctx, 2*p)`).
+pub const DEFAULT_QUEUE_CAPACITY: usize = 0;
+
+/// The per-process request queue with capacity discipline.
+#[derive(Debug)]
+pub struct MsgQueue {
+    reqs: Vec<Request>,
+    capacity: usize,
+    pending_capacity: usize,
+}
+
+impl MsgQueue {
+    /// Empty queue with the default capacity.
+    pub fn new() -> Self {
+        MsgQueue {
+            reqs: Vec::new(),
+            capacity: DEFAULT_QUEUE_CAPACITY,
+            pending_capacity: DEFAULT_QUEUE_CAPACITY,
+        }
+    }
+
+    /// `lpf_resize_message_queue`: O(N); takes effect at the next sync.
+    pub fn resize(&mut self, capacity: usize) -> Result<()> {
+        self.pending_capacity = capacity;
+        // Reserve now so steady-state enqueue never allocates (hot-path
+        // guarantee: O(1) put/get with no allocation).
+        if capacity > self.reqs.capacity() {
+            self.reqs.reserve(capacity - self.reqs.len());
+        }
+        Ok(())
+    }
+
+    /// Activate the pending capacity (sync engine, at the fence).
+    pub fn activate_pending(&mut self) {
+        self.capacity = self.pending_capacity;
+    }
+
+    /// Active capacity in messages.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Queued request count.
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    /// True if no requests are queued.
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    fn check_capacity(&self) -> Result<()> {
+        if self.reqs.len() >= self.capacity {
+            return Err(LpfError::QueueCapacity { capacity: self.capacity });
+        }
+        Ok(())
+    }
+
+    /// Enqueue a put. O(1), no payload access, mitigable on overflow.
+    pub fn push_put(&mut self, req: PutReq) -> Result<()> {
+        self.check_capacity()?;
+        self.reqs.push(Request::Put(req));
+        Ok(())
+    }
+
+    /// Enqueue a get. O(1), no payload access, mitigable on overflow.
+    pub fn push_get(&mut self, req: GetReq) -> Result<()> {
+        self.check_capacity()?;
+        self.reqs.push(Request::Get(req));
+        Ok(())
+    }
+
+    /// Drain all queued requests (sync engine, once per superstep). Keeps
+    /// the allocation so the steady state never reallocates.
+    pub fn drain(&mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.reqs.len());
+        out.append(&mut self.reqs);
+        out
+    }
+}
+
+impl Default for MsgQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{SlotKind, MSG_DEFAULT};
+
+    fn slot(i: u32) -> Memslot {
+        Memslot { kind: SlotKind::Global, index: i, gen: 1 }
+    }
+
+    fn put(dst_pid: Pid, len: usize) -> PutReq {
+        PutReq {
+            src_slot: slot(0),
+            src_off: 0,
+            dst_pid,
+            dst_slot: slot(1),
+            dst_off: 0,
+            len,
+            attr: MSG_DEFAULT,
+        }
+    }
+
+    #[test]
+    fn capacity_zero_by_default() {
+        let mut q = MsgQueue::new();
+        let err = q.push_put(put(0, 8)).unwrap_err();
+        assert!(err.is_mitigable());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn resize_takes_effect_at_fence_only() {
+        let mut q = MsgQueue::new();
+        q.resize(2).unwrap();
+        assert!(q.push_put(put(0, 8)).is_err());
+        q.activate_pending();
+        q.push_put(put(0, 8)).unwrap();
+        q.push_put(put(1, 8)).unwrap();
+        let err = q.push_put(put(2, 8)).unwrap_err();
+        assert_eq!(err, LpfError::QueueCapacity { capacity: 2 });
+        assert_eq!(q.len(), 2, "failed push had no side effects");
+    }
+
+    #[test]
+    fn drain_empties_but_keeps_capacity() {
+        let mut q = MsgQueue::new();
+        q.resize(4).unwrap();
+        q.activate_pending();
+        q.push_put(put(0, 1)).unwrap();
+        q.push_get(GetReq {
+            src_pid: 1,
+            src_slot: slot(0),
+            src_off: 0,
+            dst_slot: slot(2),
+            dst_off: 4,
+            len: 3,
+            attr: MSG_DEFAULT,
+        })
+        .unwrap();
+        let drained = q.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(q.is_empty());
+        assert_eq!(q.capacity(), 4);
+        assert_eq!(drained[0].len(), 1);
+        assert_eq!(drained[1].len(), 3);
+    }
+
+    #[test]
+    fn request_len_accessors() {
+        let r = Request::Put(put(0, 0));
+        assert!(r.is_empty());
+        assert_eq!(r.len(), 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! The artifact manifest: `artifacts/manifest.txt`, written by `aot.py`.
+//!
+//! Line format:
+//! `artifact <name> <file> in=f32[8,4],i32[8] out=f32[8]`
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+
+use crate::core::{LpfError, Result};
+
+/// Element type of a tensor on the PJRT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One tensor's dtype + shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<TensorSpec> {
+        let (dt, rest) = s
+            .split_once('[')
+            .ok_or_else(|| LpfError::Fatal(format!("bad tensor spec {s:?}")))?;
+        let dims = rest
+            .strip_suffix(']')
+            .ok_or_else(|| LpfError::Fatal(format!("bad tensor spec {s:?}")))?;
+        let dtype = match dt {
+            "f32" => DType::F32,
+            "i32" | "u32" => DType::I32,
+            _ => return Err(LpfError::Fatal(format!("unsupported dtype {dt:?}"))),
+        };
+        let shape = if dims.is_empty() {
+            vec![]
+        } else {
+            dims.split(',')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| LpfError::Fatal(format!("bad dim {d:?} in {s:?}")))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+impl fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dt = match self.dtype {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        };
+        write!(f, "{dt}[")?;
+        for (i, d) in self.shape.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    by_name: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt`.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            LpfError::Fatal(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut by_name = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 5 || fields[0] != "artifact" {
+                return Err(LpfError::Fatal(format!("bad manifest line {line:?}")));
+            }
+            let parse_specs = |field: &str, tag: &str| -> Result<Vec<TensorSpec>> {
+                let body = field
+                    .strip_prefix(tag)
+                    .ok_or_else(|| LpfError::Fatal(format!("bad manifest field {field:?}")))?;
+                // tensor specs are comma-separated but contain commas in
+                // shapes: split on "]," boundaries.
+                let mut specs = Vec::new();
+                let mut rest = body;
+                while !rest.is_empty() {
+                    match rest.find(']') {
+                        Some(i) => {
+                            specs.push(TensorSpec::parse(&rest[..=i])?);
+                            rest = rest[i + 1..].strip_prefix(',').unwrap_or(&rest[i + 1..]);
+                        }
+                        None => return Err(LpfError::Fatal(format!("bad specs {body:?}"))),
+                    }
+                }
+                Ok(specs)
+            };
+            let spec = ArtifactSpec {
+                name: fields[1].to_string(),
+                file: fields[2].to_string(),
+                inputs: parse_specs(fields[3], "in=")?,
+                outputs: parse_specs(fields[4], "out=")?,
+            };
+            by_name.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { by_name })
+    }
+
+    /// Entry by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name)
+    }
+
+    /// All entries (arbitrary order).
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    /// True if the manifest is empty.
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_line() {
+        let m = Manifest::parse(
+            "# comment\nartifact cmul_8 cmul_8.hlo.txt in=f32[8],f32[8],f32[8],f32[8] out=f32[8],f32[8]\n",
+        )
+        .unwrap();
+        let a = m.get("cmul_8").unwrap();
+        assert_eq!(a.file, "cmul_8.hlo.txt");
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(a.inputs[0].elems(), 8);
+    }
+
+    #[test]
+    fn parses_multidim_and_int_specs() {
+        let m = Manifest::parse(
+            "artifact f x.hlo.txt in=f32[128,4],i32[16] out=f32[128,4]\n",
+        )
+        .unwrap();
+        let a = m.get("f").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![128, 4]);
+        assert_eq!(a.inputs[0].elems(), 512);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let t = TensorSpec { dtype: DType::F32, shape: vec![3, 5] };
+        assert_eq!(t.to_string(), "f32[3,5]");
+        assert_eq!(TensorSpec::parse("f32[3,5]").unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("artifact x y z\n").is_err());
+        assert!(TensorSpec::parse("f64[2]").is_err());
+        assert!(TensorSpec::parse("f32[2").is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let t = TensorSpec::parse("f32[]").unwrap();
+        assert_eq!(t.elems(), 1);
+    }
+}

@@ -1,0 +1,374 @@
+//! PJRT runtime: load AOT artifacts and execute them from the request path.
+//!
+//! Build-time Python (`python/compile/aot.py`) lowers each L2 graph to HLO
+//! text under `artifacts/`; this module loads the manifest, compiles each
+//! artifact **once** on a PJRT CPU client, and exposes typed execution. No
+//! Python anywhere near the request path.
+//!
+//! Two implementation notes:
+//! * The `xla` crate pins xla_extension 0.5.1, hence HLO *text* interchange
+//!   (64-bit-id protos are rejected; the text parser reassigns ids).
+//! * The crate's `PjRtClient`/`PjRtLoadedExecutable` wrappers are `!Send`
+//!   (internal `Rc`), while LPF processes are threads. The runtime
+//!   therefore owns a dedicated **service thread** holding all PJRT state;
+//!   callers exchange [`Tensor`]s over a channel. One request in flight at
+//!   a time — which is also the physical truth of this container's single
+//!   core, and of one CPU PJRT client in general.
+
+mod manifest;
+
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::core::{LpfError, Result};
+
+/// A tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    /// True if no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32s (error if integer-typed).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => Err(LpfError::Illegal("tensor is i32, expected f32".into())),
+        }
+    }
+
+    /// Consume into f32s.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => Err(LpfError::Illegal("tensor is i32, expected f32".into())),
+        }
+    }
+}
+
+fn xla_err(e: impl std::fmt::Display) -> LpfError {
+    LpfError::Fatal(format!("xla: {e}"))
+}
+
+enum Cmd {
+    /// Execute `name` with dynamic inputs, merging binding `key` (if any).
+    Run { name: String, key: Option<String>, inputs: Vec<Tensor>, reply: Sender<Result<Vec<Tensor>>> },
+    /// Pre-convert static inputs for `(name, key)` to device literals once.
+    Bind { name: String, key: String, inputs: Vec<(usize, Tensor)>, reply: Sender<Result<()>> },
+}
+
+/// The artifact store: manifest + a service thread owning compiled
+/// executables.
+pub struct Runtime {
+    manifest: Manifest,
+    tx: Mutex<Sender<Cmd>>,
+}
+
+/// Service-thread state (everything `!Send` lives here).
+struct Service {
+    dir: PathBuf,
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, (ArtifactSpec, xla::PjRtLoadedExecutable)>,
+    /// (artifact, binding key) → pre-converted literals by input index.
+    /// Bound inputs skip the per-call Tensor→Literal conversion — the
+    /// dominant cost for large static tables (FFT permutations/twiddles,
+    /// SpMV structure). See EXPERIMENTS.md §Perf.
+    bindings: HashMap<(String, String), HashMap<usize, xla::Literal>>,
+}
+
+fn tensor_to_literal(t: &Tensor, s: &TensorSpec, name: &str) -> Result<xla::Literal> {
+    if t.len() != s.elems() {
+        return Err(LpfError::Illegal(format!(
+            "{name}: input has {} elems, spec {s} wants {}",
+            t.len(),
+            s.elems()
+        )));
+    }
+    let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+    match (t, s.dtype) {
+        (Tensor::F32(v), DType::F32) => xla::Literal::vec1(v).reshape(&dims).map_err(xla_err),
+        (Tensor::I32(v), DType::I32) => xla::Literal::vec1(v).reshape(&dims).map_err(xla_err),
+        _ => Err(LpfError::Illegal(format!("{name}: dtype mismatch vs {s}"))),
+    }
+}
+
+impl Service {
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| LpfError::Illegal(format!("no artifact named {name}")))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| LpfError::Fatal("non-utf8 path".into()))?,
+            )
+            .map_err(xla_err)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(xla_err)?;
+            self.cache.insert(name.to_string(), (spec, exe));
+        }
+        Ok(())
+    }
+
+    fn bind_one(&mut self, name: &str, key: &str, inputs: Vec<(usize, Tensor)>) -> Result<()> {
+        self.ensure_compiled(name)?;
+        let spec = self.cache[name].0.clone();
+        let mut map = HashMap::new();
+        for (idx, t) in inputs {
+            let s = spec.inputs.get(idx).ok_or_else(|| {
+                LpfError::Illegal(format!("{name}: bind index {idx} out of range"))
+            })?;
+            map.insert(idx, tensor_to_literal(&t, s, name)?);
+        }
+        self.bindings.insert((name.to_string(), key.to_string()), map);
+        Ok(())
+    }
+
+    fn run_one(&mut self, name: &str, key: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.ensure_compiled(name)?;
+        let (spec, _) = &self.cache[name];
+        let spec = spec.clone();
+        let empty: HashMap<usize, xla::Literal> = HashMap::new();
+        let bound = match key {
+            Some(k) => self
+                .bindings
+                .get(&(name.to_string(), k.to_string()))
+                .ok_or_else(|| LpfError::Illegal(format!("{name}: no binding {k:?}")))?,
+            None => &empty,
+        };
+        let dynamic_count = spec.inputs.len() - bound.len();
+        if inputs.len() != dynamic_count {
+            return Err(LpfError::Illegal(format!(
+                "{name}: {} dynamic inputs given, {} expected ({} bound)",
+                inputs.len(),
+                dynamic_count,
+                bound.len()
+            )));
+        }
+        let mut fresh: Vec<xla::Literal> = Vec::with_capacity(dynamic_count);
+        let mut it = inputs.iter();
+        for (i, s) in spec.inputs.iter().enumerate() {
+            if bound.contains_key(&i) {
+                continue;
+            }
+            let t = it.next().expect("counted above");
+            fresh.push(tensor_to_literal(t, s, name)?);
+        }
+        // interleave bound (borrowed) and fresh literals in spec order
+        let mut all: Vec<&xla::Literal> = Vec::with_capacity(spec.inputs.len());
+        let mut fi = 0usize;
+        for i in 0..spec.inputs.len() {
+            match bound.get(&i) {
+                Some(lit) => all.push(lit),
+                None => {
+                    all.push(&fresh[fi]);
+                    fi += 1;
+                }
+            }
+        }
+        let exe = &self.cache[name].1;
+        let mut result = exe.execute::<&xla::Literal>(&all).map_err(xla_err)?[0][0]
+            .to_literal_sync()
+            .map_err(xla_err)?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let parts = result.decompose_tuple().map_err(xla_err)?;
+        if parts.len() != spec.outputs.len() {
+            return Err(LpfError::Fatal(format!(
+                "{name}: {} outputs returned, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.into_iter().zip(&spec.outputs) {
+            let t = match s.dtype {
+                DType::F32 => Tensor::F32(lit.to_vec::<f32>().map_err(xla_err)?),
+                DType::I32 => Tensor::I32(lit.to_vec::<i32>().map_err(xla_err)?),
+            };
+            if t.len() != s.elems() {
+                return Err(LpfError::Fatal(format!(
+                    "{name}: output elems {} != spec {s}",
+                    t.len()
+                )));
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.txt`) and start the
+    /// PJRT service thread.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Arc<Runtime>> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        let manifest_for_service = Manifest::load(&dir.join("manifest.txt"))?;
+        let (tx, rx) = channel::<Cmd>();
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        std::thread::Builder::new()
+            .name("lpf-pjrt".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => {
+                        let _ = ready_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                let mut svc = Service {
+                    dir,
+                    manifest: manifest_for_service,
+                    client,
+                    cache: HashMap::new(),
+                    bindings: HashMap::new(),
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Run { name, key, inputs, reply } => {
+                            let _ = reply.send(svc.run_one(&name, key.as_deref(), &inputs));
+                        }
+                        Cmd::Bind { name, key, inputs, reply } => {
+                            let _ = reply.send(svc.bind_one(&name, &key, inputs));
+                        }
+                    }
+                }
+            })
+            .map_err(|e| LpfError::Fatal(format!("cannot spawn pjrt thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| LpfError::Fatal("pjrt thread died during startup".into()))?
+            .map_err(LpfError::Fatal)?;
+        Ok(Arc::new(Runtime { manifest, tx: Mutex::new(tx) }))
+    }
+
+    /// Process-wide runtime rooted at `$LPF_ARTIFACTS` or `artifacts/`.
+    pub fn global() -> Result<Arc<Runtime>> {
+        static GLOBAL: OnceLock<std::result::Result<Arc<Runtime>, String>> = OnceLock::new();
+        GLOBAL
+            .get_or_init(|| {
+                let dir = std::env::var("LPF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+                Runtime::open(dir).map_err(|e| e.to_string())
+            })
+            .clone()
+            .map_err(LpfError::Fatal)
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute the named artifact with shape/dtype checking. Compiles and
+    /// caches on first use; callable from any thread.
+    pub fn run(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.send_run(name, None, inputs)
+    }
+
+    /// Pre-convert static inputs (by input index) for `(name, key)` so
+    /// subsequent [`run_bound`](Runtime::run_bound) calls skip their
+    /// Tensor→Literal conversion — the hot-path optimisation for large
+    /// constant tables (see EXPERIMENTS.md §Perf).
+    pub fn bind(&self, name: &str, key: &str, inputs: Vec<(usize, Tensor)>) -> Result<()> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Cmd::Bind {
+                name: name.to_string(),
+                key: key.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| LpfError::Fatal("pjrt service thread gone".into()))?;
+        reply_rx.recv().map_err(|_| LpfError::Fatal("pjrt service thread gone".into()))?
+    }
+
+    /// Execute with a binding: `inputs` supplies only the *unbound* inputs,
+    /// in spec order.
+    pub fn run_bound(&self, name: &str, key: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.send_run(name, Some(key), inputs)
+    }
+
+    fn send_run(&self, name: &str, key: Option<&str>, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Cmd::Run {
+                name: name.to_string(),
+                key: key.map(|s| s.to_string()),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| LpfError::Fatal("pjrt service thread gone".into()))?;
+        reply_rx.recv().map_err(|_| LpfError::Fatal("pjrt service thread gone".into()))?
+    }
+
+    /// Pre-compile a set of artifacts (hides compile latency from the
+    /// measured region of benches).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            let spec = self
+                .manifest
+                .get(n)
+                .ok_or_else(|| LpfError::Illegal(format!("no artifact named {n}")))?;
+            // zero-filled inputs of the right shapes
+            let inputs: Vec<Tensor> = spec
+                .inputs
+                .iter()
+                .map(|s| match s.dtype {
+                    DType::F32 => Tensor::F32(vec![0.0; s.elems()]),
+                    DType::I32 => Tensor::I32(vec![0; s.elems()]),
+                })
+                .collect();
+            self.run(n, inputs)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_fails() {
+        assert!(Runtime::open("/nonexistent/lpf-artifacts").is_err());
+    }
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::F32(vec![1.0, 2.0]);
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+        assert!(t.as_f32().is_ok());
+        assert!(Tensor::I32(vec![1]).as_f32().is_err());
+        assert_eq!(Tensor::F32(vec![3.0]).into_f32().unwrap(), vec![3.0]);
+        assert!(Tensor::I32(vec![]).is_empty());
+    }
+}

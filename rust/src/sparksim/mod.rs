@@ -1,0 +1,157 @@
+//! sparksim: a miniature Spark-like RDD dataflow engine.
+//!
+//! The paper's Table 4 calls an LPF PageRank *from Spark* and compares it
+//! against a pure-Spark PageRank. Spark itself (plus JVM, HDFS, JNI) is
+//! not available here, so — per the substitution rule — we build the
+//! smallest engine that reproduces the costs that experiment measures:
+//!
+//! * **lazy RDD DAG** with narrow (map/flatMap/filter/mapValues) and wide
+//!   (reduceByKey, join) dependencies;
+//! * **hash-shuffle materialisation** at every wide dependency (the real
+//!   clone-hash-bucket work, like Spark's shuffle files);
+//! * **lineage recomputation** of narrow chains at every action, with
+//!   **checkpointing** to cut lineages (the pure-Spark PageRank checkpoints
+//!   every ten iterations, as the paper describes);
+//! * a fixed pool of **worker threads** executing partition tasks — the
+//!   processes that the interop experiment "repurposes as LPF processes"
+//!   via `hook` (paper §4.3 / §5 vs. Alchemist).
+
+pub mod pagerank;
+pub mod rdd;
+
+pub use rdd::{Rdd, Spark};
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+/// A unit of work shipped to a worker.
+type Job = Box<dyn FnOnce() + Send>;
+
+/// A fixed pool of worker threads (the "executors").
+pub struct Cluster {
+    senders: Vec<Sender<Job>>,
+    /// Worker "hostnames" — what the interop bootstrap collects and
+    /// broadcasts, mirroring the paper's Spark procedure.
+    hostnames: Vec<String>,
+    rr: Mutex<usize>,
+}
+
+impl Cluster {
+    /// Spin up `p` workers.
+    pub fn new(p: usize) -> Arc<Cluster> {
+        assert!(p > 0);
+        let mut senders = Vec::with_capacity(p);
+        let mut hostnames = Vec::with_capacity(p);
+        for w in 0..p {
+            let (tx, rx) = channel::<Job>();
+            std::thread::Builder::new()
+                .name(format!("sparksim-worker-{w}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn worker");
+            senders.push(tx);
+            hostnames.push(format!("worker-{w}.sparksim.local"));
+        }
+        Arc::new(Cluster { senders, hostnames, rr: Mutex::new(0) })
+    }
+
+    /// Number of workers.
+    pub fn num_workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// The worker hostnames (interop bootstrap step 1).
+    pub fn hostnames(&self) -> &[String] {
+        &self.hostnames
+    }
+
+    /// Run `tasks` across the pool (round-robin), blocking for all results
+    /// in order.
+    pub fn run_tasks<T: Send + 'static>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() -> T + Send>>,
+    ) -> Vec<T> {
+        let n = tasks.len();
+        let (tx, rx) = channel::<(usize, T)>();
+        {
+            let mut rr = self.rr.lock().unwrap();
+            for (i, task) in tasks.into_iter().enumerate() {
+                let tx = tx.clone();
+                let w = *rr % self.senders.len();
+                *rr += 1;
+                self.senders[w]
+                    .send(Box::new(move || {
+                        let out = task();
+                        let _ = tx.send((i, out));
+                    }))
+                    .expect("worker alive");
+            }
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v) = rx.recv().expect("task result");
+            out[i] = Some(v);
+        }
+        out.into_iter().map(|o| o.expect("all tasks returned")).collect()
+    }
+
+    /// Run exactly one task **pinned to each worker**, blocking for all.
+    /// This is the interop entry: each worker becomes one LPF process.
+    pub fn run_on_each_worker<T: Send + 'static>(
+        &self,
+        f: impl Fn(usize) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<(usize, T)>();
+        for (w, sender) in self.senders.iter().enumerate() {
+            let tx = tx.clone();
+            let f = f.clone();
+            sender
+                .send(Box::new(move || {
+                    let out = f(w);
+                    let _ = tx.send((w, out));
+                }))
+                .expect("worker alive");
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..self.senders.len()).map(|_| None).collect();
+        for _ in 0..self.senders.len() {
+            let (w, v) = rx.recv().expect("worker result");
+            out[w] = Some(v);
+        }
+        out.into_iter().map(|o| o.expect("all workers returned")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_tasks_returns_in_order() {
+        let c = Cluster::new(3);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..10usize).map(|i| Box::new(move || i * i) as _).collect();
+        assert_eq!(c.run_tasks(tasks), (0..10usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_on_each_worker_pins_ids() {
+        let c = Cluster::new(4);
+        let ids = c.run_on_each_worker(|w| w);
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn hostnames_are_unique() {
+        let c = Cluster::new(4);
+        let mut h = c.hostnames().to_vec();
+        h.sort();
+        h.dedup();
+        assert_eq!(h.len(), 4);
+    }
+}

@@ -1,0 +1,540 @@
+//! RDDs: lazy, partitioned, lineage-bearing datasets.
+//!
+//! Narrow ops (map/flatMap/filter/mapValues) recompute through the lineage
+//! inside each partition task; wide ops (reduceByKey, join) cut stages and
+//! materialise a hash shuffle, driven stage-by-stage from the action — the
+//! same execution model as Spark's DAG scheduler, minus the cluster.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::Cluster;
+
+/// Engine statistics (read by the Table-4 harness).
+#[derive(Debug, Default)]
+pub struct SparkStats {
+    /// Shuffles materialised.
+    pub shuffles: AtomicU64,
+    /// Records that crossed a shuffle boundary.
+    pub shuffle_records: AtomicU64,
+    /// Partition tasks executed.
+    pub tasks: AtomicU64,
+    /// Checkpoints taken.
+    pub checkpoints: AtomicU64,
+}
+
+/// The driver handle.
+#[derive(Clone)]
+pub struct Spark {
+    cluster: Arc<Cluster>,
+    /// Default partitions for parallelize/shuffles.
+    pub default_parallelism: usize,
+    stats: Arc<SparkStats>,
+}
+
+impl Spark {
+    /// New driver over `workers` threads with `parts` default partitions.
+    pub fn new(workers: usize, parts: usize) -> Spark {
+        Spark {
+            cluster: Cluster::new(workers),
+            default_parallelism: parts.max(1),
+            stats: Arc::new(SparkStats::default()),
+        }
+    }
+
+    /// The executor pool (interop uses this to hook LPF from workers).
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    /// Engine counters.
+    pub fn stats(&self) -> &SparkStats {
+        &self.stats
+    }
+
+    /// Create an RDD from a driver-side collection.
+    pub fn parallelize<T: Clone + Send + Sync + 'static>(
+        &self,
+        data: Vec<T>,
+        parts: usize,
+    ) -> Rdd<T> {
+        let parts = parts.max(1);
+        let chunk = data.len().div_ceil(parts);
+        let partitions: Vec<Vec<T>> = (0..parts)
+            .map(|i| data.iter().skip(i * chunk).take(chunk).cloned().collect())
+            .collect();
+        Rdd {
+            spark: self.clone(),
+            node: Arc::new(Materialized { parts: Arc::new(partitions) }),
+        }
+    }
+}
+
+/// Stage preparation: materialise every wide dependency below a node.
+/// Driven from actions (driver side), never from inside a worker task —
+/// which is what makes the fixed pool deadlock-free.
+pub(crate) trait Stage: Send + Sync {
+    fn prepare(&self, spark: &Spark);
+}
+
+pub(crate) trait RddNode<T: Send>: Stage {
+    fn parts(&self) -> usize;
+    /// Compute one partition (narrow lineage only; `prepare` has run).
+    fn compute(&self, part: usize) -> Vec<T>;
+}
+
+/// A lazy, partitioned dataset.
+pub struct Rdd<T: Send + 'static> {
+    spark: Spark,
+    node: Arc<dyn RddNode<T>>,
+}
+
+impl<T: Send + 'static> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Rdd { spark: self.spark.clone(), node: self.node.clone() }
+    }
+}
+
+fn fx_hash<K: Hash>(k: &K) -> u64 {
+    // FxHash-style multiply hash via std DefaultHasher is fine here.
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    k.hash(&mut h);
+    h.finish()
+}
+
+impl<T: Clone + Send + Sync + 'static> Rdd<T> {
+    /// Number of partitions.
+    pub fn num_partitions(&self) -> usize {
+        self.node.parts()
+    }
+
+    /// Narrow: elementwise map.
+    pub fn map<U: Clone + Send + Sync + 'static>(
+        &self,
+        f: impl Fn(&T) -> U + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        let parent = self.node.clone();
+        Rdd {
+            spark: self.spark.clone(),
+            node: Arc::new(Narrow {
+                parent,
+                f: Arc::new(move |v: Vec<T>| v.iter().map(&f).collect()),
+            }),
+        }
+    }
+
+    /// Narrow: flat map.
+    pub fn flat_map<U: Clone + Send + Sync + 'static>(
+        &self,
+        f: impl Fn(&T) -> Vec<U> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        let parent = self.node.clone();
+        Rdd {
+            spark: self.spark.clone(),
+            node: Arc::new(Narrow {
+                parent,
+                f: Arc::new(move |v: Vec<T>| v.iter().flat_map(&f).collect()),
+            }),
+        }
+    }
+
+    /// Narrow: filter.
+    pub fn filter(&self, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Rdd<T> {
+        let parent = self.node.clone();
+        Rdd {
+            spark: self.spark.clone(),
+            node: Arc::new(Narrow {
+                parent,
+                f: Arc::new(move |v: Vec<T>| v.into_iter().filter(|x| f(x)).collect()),
+            }),
+        }
+    }
+
+    /// Action: gather every partition to the driver.
+    pub fn collect(&self) -> Vec<T> {
+        self.node.prepare(&self.spark);
+        let node = self.node.clone();
+        let stats = self.spark.stats.clone();
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<T> + Send>> = (0..self.node.parts())
+            .map(|p| {
+                let node = node.clone();
+                let stats = stats.clone();
+                Box::new(move || {
+                    stats.tasks.fetch_add(1, Ordering::Relaxed);
+                    node.compute(p)
+                }) as _
+            })
+            .collect();
+        self.spark.cluster.run_tasks(tasks).into_iter().flatten().collect()
+    }
+
+    /// Action: count elements.
+    pub fn count(&self) -> usize {
+        self.node.prepare(&self.spark);
+        let node = self.node.clone();
+        let stats = self.spark.stats.clone();
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..self.node.parts())
+            .map(|p| {
+                let node = node.clone();
+                let stats = stats.clone();
+                Box::new(move || {
+                    stats.tasks.fetch_add(1, Ordering::Relaxed);
+                    node.compute(p).len()
+                }) as _
+            })
+            .collect();
+        self.spark.cluster.run_tasks(tasks).into_iter().sum()
+    }
+
+    /// Checkpoint: force materialisation and cut the lineage (Spark writes
+    /// to reliable storage; we hold the partitions in the driver — the
+    /// lineage-truncation cost structure is identical).
+    pub fn checkpoint(&self) -> Rdd<T> {
+        self.node.prepare(&self.spark);
+        let node = self.node.clone();
+        let stats = self.spark.stats.clone();
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<T> + Send>> = (0..self.node.parts())
+            .map(|p| {
+                let node = node.clone();
+                Box::new(move || node.compute(p)) as _
+            })
+            .collect();
+        let parts = self.spark.cluster.run_tasks(tasks);
+        stats.checkpoints.fetch_add(1, Ordering::Relaxed);
+        Rdd {
+            spark: self.spark.clone(),
+            node: Arc::new(Materialized { parts: Arc::new(parts) }),
+        }
+    }
+}
+
+impl<K, V> Rdd<(K, V)>
+where
+    K: Clone + Eq + Hash + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
+{
+    /// Narrow: map over values.
+    pub fn map_values<W: Clone + Send + Sync + 'static>(
+        &self,
+        f: impl Fn(&V) -> W + Send + Sync + 'static,
+    ) -> Rdd<(K, W)> {
+        self.map(move |(k, v)| (k.clone(), f(v)))
+    }
+
+    /// Wide: shuffle by key and combine values with `op`.
+    pub fn reduce_by_key(&self, op: impl Fn(V, V) -> V + Send + Sync + 'static) -> Rdd<(K, V)> {
+        let parts = self.spark.default_parallelism;
+        Rdd {
+            spark: self.spark.clone(),
+            node: Arc::new(ShuffleReduce {
+                parent: self.node.clone(),
+                parts,
+                op: Arc::new(op),
+                out: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Wide: inner hash join.
+    pub fn join<W: Clone + Send + Sync + 'static>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (V, W))> {
+        let parts = self.spark.default_parallelism;
+        Rdd {
+            spark: self.spark.clone(),
+            node: Arc::new(ShuffleJoin {
+                left: self.node.clone(),
+                right: other.node.clone(),
+                parts,
+                out: Mutex::new(None),
+            }),
+        }
+    }
+}
+
+// ------------------------------------------------------------------ nodes
+
+struct Materialized<T> {
+    parts: Arc<Vec<Vec<T>>>,
+}
+
+impl<T: Clone + Send + Sync> Stage for Materialized<T> {
+    fn prepare(&self, _spark: &Spark) {}
+}
+
+impl<T: Clone + Send + Sync> RddNode<T> for Materialized<T> {
+    fn parts(&self) -> usize {
+        self.parts.len()
+    }
+    fn compute(&self, part: usize) -> Vec<T> {
+        self.parts[part].clone()
+    }
+}
+
+type PartFn<T, U> = Arc<dyn Fn(Vec<T>) -> Vec<U> + Send + Sync>;
+
+struct Narrow<T: Send, U> {
+    parent: Arc<dyn RddNode<T>>,
+    f: PartFn<T, U>,
+}
+
+impl<T: Send + 'static, U: Send> Stage for Narrow<T, U> {
+    fn prepare(&self, spark: &Spark) {
+        self.parent.prepare(spark);
+    }
+}
+
+impl<T: Send + 'static, U: Send> RddNode<U> for Narrow<T, U> {
+    fn parts(&self) -> usize {
+        self.parent.parts()
+    }
+    fn compute(&self, part: usize) -> Vec<U> {
+        (self.f)(self.parent.compute(part))
+    }
+}
+
+/// Hash-partition records into `parts` buckets (the shuffle write side).
+fn hash_partition<K: Hash, V>(records: Vec<(K, V)>, parts: usize) -> Vec<Vec<(K, V)>> {
+    let mut buckets: Vec<Vec<(K, V)>> = (0..parts).map(|_| Vec::new()).collect();
+    for (k, v) in records {
+        let b = (fx_hash(&k) as usize) % parts;
+        buckets[b].push((k, v));
+    }
+    buckets
+}
+
+struct ShuffleReduce<K: Send, V: Send> {
+    parent: Arc<dyn RddNode<(K, V)>>,
+    parts: usize,
+    op: Arc<dyn Fn(V, V) -> V + Send + Sync>,
+    out: Mutex<Option<Arc<Vec<Vec<(K, V)>>>>>,
+}
+
+impl<K, V> Stage for ShuffleReduce<K, V>
+where
+    K: Clone + Eq + Hash + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
+{
+    fn prepare(&self, spark: &Spark) {
+        if self.out.lock().unwrap().is_some() {
+            return;
+        }
+        self.parent.prepare(spark);
+        // map side: compute parent partitions (on workers) + hash-bucket
+        let parent = self.parent.clone();
+        let parts = self.parts;
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<Vec<(K, V)>> + Send>> = (0..parent.parts())
+            .map(|p| {
+                let parent = parent.clone();
+                Box::new(move || hash_partition(parent.compute(p), parts)) as _
+            })
+            .collect();
+        let mapped = spark.cluster.run_tasks(tasks);
+        let records: u64 = mapped.iter().flatten().map(|b| b.len() as u64).sum();
+        spark.stats.shuffles.fetch_add(1, Ordering::Relaxed);
+        spark.stats.shuffle_records.fetch_add(records, Ordering::Relaxed);
+        // reduce side: merge bucket b of every map output
+        let mapped = Arc::new(mapped);
+        let op = self.op.clone();
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<(K, V)> + Send>> = (0..parts)
+            .map(|b| {
+                let mapped = mapped.clone();
+                let op = op.clone();
+                Box::new(move || {
+                    let mut agg: HashMap<K, V> = HashMap::new();
+                    for m in mapped.iter() {
+                        for (k, v) in &m[b] {
+                            match agg.remove(k) {
+                                Some(old) => {
+                                    agg.insert(k.clone(), op(old, v.clone()));
+                                }
+                                None => {
+                                    agg.insert(k.clone(), v.clone());
+                                }
+                            }
+                        }
+                    }
+                    agg.into_iter().collect()
+                }) as _
+            })
+            .collect();
+        let reduced = spark.cluster.run_tasks(tasks);
+        *self.out.lock().unwrap() = Some(Arc::new(reduced));
+    }
+}
+
+impl<K, V> RddNode<(K, V)> for ShuffleReduce<K, V>
+where
+    K: Clone + Eq + Hash + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
+{
+    fn parts(&self) -> usize {
+        self.parts
+    }
+    fn compute(&self, part: usize) -> Vec<(K, V)> {
+        self.out.lock().unwrap().as_ref().expect("prepare ran")[part].clone()
+    }
+}
+
+struct ShuffleJoin<K: Send, V: Send, W: Send> {
+    left: Arc<dyn RddNode<(K, V)>>,
+    right: Arc<dyn RddNode<(K, W)>>,
+    parts: usize,
+    out: Mutex<Option<Arc<Vec<Vec<(K, (V, W))>>>>>,
+}
+
+impl<K, V, W> Stage for ShuffleJoin<K, V, W>
+where
+    K: Clone + Eq + Hash + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
+    W: Clone + Send + Sync + 'static,
+{
+    fn prepare(&self, spark: &Spark) {
+        if self.out.lock().unwrap().is_some() {
+            return;
+        }
+        self.left.prepare(spark);
+        self.right.prepare(spark);
+        let parts = self.parts;
+        // left map side
+        let left = self.left.clone();
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<Vec<(K, V)>> + Send>> = (0..left.parts())
+            .map(|p| {
+                let left = left.clone();
+                Box::new(move || hash_partition(left.compute(p), parts)) as _
+            })
+            .collect();
+        let lmap = Arc::new(spark.cluster.run_tasks(tasks));
+        // right map side
+        let right = self.right.clone();
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<Vec<(K, W)>> + Send>> = (0..right.parts())
+            .map(|p| {
+                let right = right.clone();
+                Box::new(move || hash_partition(right.compute(p), parts)) as _
+            })
+            .collect();
+        let rmap = Arc::new(spark.cluster.run_tasks(tasks));
+        let records: u64 = lmap.iter().flatten().map(|b| b.len() as u64).sum::<u64>()
+            + rmap.iter().flatten().map(|b| b.len() as u64).sum::<u64>();
+        spark.stats.shuffles.fetch_add(2, Ordering::Relaxed);
+        spark.stats.shuffle_records.fetch_add(records, Ordering::Relaxed);
+        // reduce side: hash join per bucket
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<(K, (V, W))> + Send>> = (0..parts)
+            .map(|b| {
+                let lmap = lmap.clone();
+                let rmap = rmap.clone();
+                Box::new(move || {
+                    let mut ltab: HashMap<K, Vec<V>> = HashMap::new();
+                    for m in lmap.iter() {
+                        for (k, v) in &m[b] {
+                            ltab.entry(k.clone()).or_default().push(v.clone());
+                        }
+                    }
+                    let mut out = Vec::new();
+                    for m in rmap.iter() {
+                        for (k, w) in &m[b] {
+                            if let Some(vs) = ltab.get(k) {
+                                for v in vs {
+                                    out.push((k.clone(), (v.clone(), w.clone())));
+                                }
+                            }
+                        }
+                    }
+                    out
+                }) as _
+            })
+            .collect();
+        let joined = spark.cluster.run_tasks(tasks);
+        *self.out.lock().unwrap() = Some(Arc::new(joined));
+    }
+}
+
+impl<K, V, W> RddNode<(K, (V, W))> for ShuffleJoin<K, V, W>
+where
+    K: Clone + Eq + Hash + Send + Sync + 'static,
+    V: Clone + Send + Sync + 'static,
+    W: Clone + Send + Sync + 'static,
+{
+    fn parts(&self) -> usize {
+        self.parts
+    }
+    fn compute(&self, part: usize) -> Vec<(K, (V, W))> {
+        self.out.lock().unwrap().as_ref().expect("prepare ran")[part].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_filter_collect() {
+        let sc = Spark::new(2, 4);
+        let r = sc.parallelize((0..100u32).collect(), 4);
+        let out = r.map(|x| x * 2).filter(|x| x % 3 == 0).collect();
+        let mut want: Vec<u32> = (0..100).map(|x| x * 2).filter(|x| x % 3 == 0).collect();
+        let mut got = out.clone();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn flat_map_and_count() {
+        let sc = Spark::new(2, 3);
+        let r = sc.parallelize(vec![1u32, 2, 3], 2);
+        assert_eq!(r.flat_map(|&x| vec![x; x as usize]).count(), 6);
+    }
+
+    #[test]
+    fn reduce_by_key_sums() {
+        let sc = Spark::new(3, 5);
+        let pairs: Vec<(u32, u64)> = (0..1000).map(|i| (i % 7, 1u64)).collect();
+        let r = sc.parallelize(pairs, 8).reduce_by_key(|a, b| a + b);
+        let mut out = r.collect();
+        out.sort_unstable();
+        let want: Vec<(u32, u64)> =
+            (0..7).map(|k| (k, (1000 + 6 - k as u64) / 7)).collect();
+        // counts: keys 0..6 appear ceil/floor of 1000/7
+        let total: u64 = out.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 1000);
+        assert_eq!(out.len(), 7);
+        let _ = want;
+        assert!(sc.stats().shuffles.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn join_matches_pairs() {
+        let sc = Spark::new(2, 4);
+        let a = sc.parallelize(vec![(1u32, "a"), (2, "b"), (3, "c")], 2);
+        let b = sc.parallelize(vec![(2u32, 20), (3, 30), (4, 40)], 2);
+        let mut out = a.join(&b).collect();
+        out.sort_by_key(|&(k, _)| k);
+        assert_eq!(out, vec![(2, ("b", 20)), (3, ("c", 30))]);
+    }
+
+    #[test]
+    fn checkpoint_cuts_lineage_same_data() {
+        let sc = Spark::new(2, 4);
+        let base = sc.parallelize((0..50u32).collect(), 4);
+        let chained = base.map(|x| x + 1).map(|x| x * 2);
+        let cp = chained.checkpoint();
+        let mut a = chained.collect();
+        let mut b = cp.collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        assert_eq!(sc.stats().checkpoints.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn lineage_recomputes_deterministically() {
+        let sc = Spark::new(2, 3);
+        let r = sc.parallelize((0..30u32).collect(), 3).map(|x| x * x);
+        let mut a = r.collect();
+        let mut b = r.collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+}

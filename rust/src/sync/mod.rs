@@ -1,0 +1,3 @@
+//! The `lpf_sync` engine building blocks shared by all fabrics.
+pub mod conflict;
+pub mod metadata;

@@ -1,0 +1,3 @@
+//! Small self-contained utilities (the offline crate set is minimal).
+pub mod radix;
+pub mod rng;

@@ -1,0 +1,100 @@
+//! LSB radix sort on `u64` keys.
+//!
+//! The paper's write-conflict resolution runs in `O(m + h_s + R/s)` memory
+//! and `O(m + h_s + h_b/s)` time using a radix sort at the destination
+//! (Table 1). A comparison sort would put a `log m` factor into the `lpf_sync`
+//! critical path and break the stated bound, so we radix-sort descriptor
+//! keys here: 8-bit digits, early exit on already-uniform digits.
+
+/// Sort `items` ascending and stably by `key(item)`.
+///
+/// O(passes · n) time, O(n) scratch. Stability matters: the conflict
+/// resolver relies on stable order for deterministic CRCW winners.
+pub fn radix_sort_by_key<T, F: Fn(&T) -> u64>(items: &mut Vec<T>, key: F) {
+    let n = items.len();
+    if n <= 1 {
+        return;
+    }
+    // Small inputs: insertion-style via stable std sort on the key is not
+    // allowed (comparison); but a 2-pass counting sort on tiny n costs more
+    // than it saves only below ~8 elements, where cost is negligible anyway.
+    let mut max_key = 0u64;
+    for it in items.iter() {
+        max_key |= key(it);
+    }
+    let passes = ((64 - max_key.leading_zeros() as usize) + 7) / 8;
+    let mut src: Vec<(u64, usize)> = items.iter().enumerate().map(|(i, t)| (key(t), i)).collect();
+    let mut dst: Vec<(u64, usize)> = vec![(0, 0); n];
+    let mut counts = [0usize; 256];
+    for pass in 0..passes {
+        let shift = pass * 8;
+        counts.fill(0);
+        for &(k, _) in src.iter() {
+            counts[((k >> shift) & 0xff) as usize] += 1;
+        }
+        // skip pass if all keys share this digit
+        if counts.iter().any(|&c| c == n) {
+            continue;
+        }
+        let mut sum = 0usize;
+        for c in counts.iter_mut() {
+            let t = *c;
+            *c = sum;
+            sum += t;
+        }
+        for &(k, i) in src.iter() {
+            let d = ((k >> shift) & 0xff) as usize;
+            dst[counts[d]] = (k, i);
+            counts[d] += 1;
+        }
+        std::mem::swap(&mut src, &mut dst);
+    }
+    // Apply the permutation.
+    let mut out = Vec::with_capacity(n);
+    let mut taken: Vec<Option<T>> = items.drain(..).map(Some).collect();
+    for &(_, i) in src.iter() {
+        out.push(taken[i].take().expect("permutation is a bijection"));
+    }
+    *items = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn sorts_random_u64() {
+        let mut rng = XorShift64::new(42);
+        let mut v: Vec<u64> = (0..1000).map(|_| rng.next_u64()).collect();
+        let mut expect = v.clone();
+        expect.sort_unstable();
+        radix_sort_by_key(&mut v, |&x| x);
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn stable_on_equal_keys() {
+        // (key, original position); equal keys must keep original order.
+        let mut v: Vec<(u64, usize)> = vec![(5, 0), (1, 1), (5, 2), (1, 3), (5, 4)];
+        radix_sort_by_key(&mut v, |&(k, _)| k);
+        assert_eq!(v, vec![(1, 1), (1, 3), (5, 0), (5, 2), (5, 4)]);
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let mut v: Vec<u64> = vec![];
+        radix_sort_by_key(&mut v, |&x| x);
+        assert!(v.is_empty());
+        let mut v = vec![9u64];
+        radix_sort_by_key(&mut v, |&x| x);
+        assert_eq!(v, vec![9]);
+    }
+
+    #[test]
+    fn high_bit_keys() {
+        let mut v = vec![u64::MAX, 0, 1 << 63, 42];
+        radix_sort_by_key(&mut v, |&x| x);
+        assert_eq!(v, vec![0, 42, 1 << 63, u64::MAX]);
+    }
+}

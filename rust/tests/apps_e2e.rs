@@ -1,0 +1,122 @@
+//! End-to-end application tests over the full three-layer stack:
+//! the immortal BSP FFT and the accelerated PageRank with their
+//! process-local compute on PJRT artifacts (skips if not built).
+
+use lpf::bsplib::Bsp;
+use lpf::core::Args;
+use lpf::ctx::{exec, Platform, Root};
+use lpf::fft::bsp::{Backend, BspFft};
+use lpf::fft::local;
+use lpf::fft::plan::FftPlan;
+use lpf::graphblas::{pagerank_serial, Compute};
+use lpf::graphgen::cage_like;
+use lpf::runtime::Runtime;
+use lpf::sparksim::pagerank::accelerated_pagerank;
+use lpf::sparksim::Spark;
+use lpf::util::rng::XorShift64;
+
+fn runtime() -> Option<std::sync::Arc<Runtime>> {
+    match Runtime::global() {
+        Ok(rt) => Some(rt),
+        Err(_) => {
+            eprintln!("SKIP apps_e2e: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn bsp_fft_with_artifacts_matches_serial() {
+    let Some(rt) = runtime() else { return };
+    let p: u32 = 4;
+    let n: usize = 1 << 12; // artifacts built for k = 10..=18
+    let mut rng = XorShift64::new(31);
+    let g_re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+    let g_im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+    let plan = FftPlan::new(n).unwrap();
+    let (want_re, want_im) = local::fft(&plan, &g_re, &g_im).unwrap();
+
+    let root = Root::new(Platform::shared()).with_max_procs(p);
+    let (re2, im2) = (g_re.clone(), g_im.clone());
+    let outs = exec(
+        &root,
+        p,
+        move |ctx, _| {
+            let r = ctx.pid();
+            let pp = ctx.p();
+            let m = n / pp as usize;
+            let mut bsp = Bsp::begin(ctx, 8, 4 * pp as usize + 8).unwrap();
+            bsp.sync().unwrap();
+            let fft = BspFft::new(&mut bsp, n, Backend::Artifacts(rt.clone())).unwrap();
+            bsp.sync().unwrap();
+            let re: Vec<f32> = (0..m).map(|j| re2[r as usize + pp as usize * j]).collect();
+            let im: Vec<f32> = (0..m).map(|j| im2[r as usize + pp as usize * j]).collect();
+            let (o_re, o_im) = fft.run(&mut bsp, &re, &im).unwrap();
+            let blk = m / pp as usize;
+            let mut triples = Vec::new();
+            for k2 in 0..blk {
+                for k1 in 0..pp as usize {
+                    triples.push((
+                        fft.global_index(k2, k1),
+                        o_re[k2 * pp as usize + k1],
+                        o_im[k2 * pp as usize + k1],
+                    ));
+                }
+            }
+            bsp.end().unwrap();
+            triples
+        },
+        Args::none(),
+    )
+    .unwrap();
+    let tol = 1e-2 * (n as f32).sqrt();
+    for triples in outs {
+        for (gidx, re, im) in triples {
+            assert!((re - want_re[gidx]).abs() < tol, "re[{gidx}]: {re} vs {}", want_re[gidx]);
+            assert!((im - want_im[gidx]).abs() < tol, "im[{gidx}]");
+        }
+    }
+}
+
+#[test]
+fn accelerated_pagerank_with_artifacts_matches_serial() {
+    let Some(rt) = runtime() else { return };
+    // cage-like graphs are low-skew: blocks fit the aot shape 8n/p
+    let n = 1 << 13;
+    let workers = 4;
+    let g = cage_like(n, 3, 99);
+    let nnz_pad = 8 * n / workers;
+    // blocks must fit (cage band 3 → ≤ ~4.2 edges per row)
+    let rows_per = n.div_ceil(workers);
+    let mut per_block = vec![0usize; workers];
+    for &(_, d) in &g.edges {
+        per_block[(d as usize) / rows_per] += 1;
+    }
+    assert!(per_block.iter().all(|&b| b <= nnz_pad), "cage blocks must fit aot pad");
+    let name = format!("spmv_{}_{}_{}", nnz_pad, n, rows_per);
+    assert!(rt.manifest().get(&name).is_some(), "artifact {name} must exist");
+
+    let sc = Spark::new(workers, 8);
+    let out = accelerated_pagerank(
+        &sc,
+        &g,
+        Compute::Artifacts(rt.clone()),
+        0.85,
+        1e-6,
+        60,
+        nnz_pad,
+        "apps-e2e",
+    )
+    .unwrap();
+    let (want, _) = pagerank_serial(&g, 0.85, 1e-6, 60);
+    for v in 0..n {
+        assert!(
+            (out.ranks[v] - want[v]).abs() < 5e-5,
+            "rank[{v}]: {} vs {}",
+            out.ranks[v],
+            want[v]
+        );
+    }
+    let sum: f32 = out.ranks.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3);
+}

@@ -1,0 +1,193 @@
+//! Integration: LPF semantics must be identical on every backend.
+//!
+//! The paper's central claim is that one algorithm runs unchanged on all
+//! four implementations; these tests execute the same SPMD programs on
+//! shared / rdma / msg / hybrid fabrics and require byte-identical
+//! results, including the deterministic CRCW conflict-resolution order.
+
+use lpf::core::{Args, LpfError, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::ctx::{exec, Context, Platform, Root};
+
+fn all_platforms() -> Vec<(&'static str, Platform)> {
+    vec![
+        ("shared", Platform::shared().checked(true)),
+        ("rdma", Platform::rdma().checked(true)),
+        ("msg", Platform::msg().checked(true)),
+        ("hybrid", Platform::hybrid(2).checked(true)),
+    ]
+}
+
+/// Run one SPMD program on every backend and collect outputs.
+fn on_all_backends<O: Send + PartialEq + std::fmt::Debug>(
+    p: u32,
+    f: impl Fn(&mut Context, Args) -> O + Sync + Copy,
+) -> Vec<(&'static str, Vec<O>)> {
+    all_platforms()
+        .into_iter()
+        .map(|(name, plat)| {
+            let root = Root::new(plat).with_max_procs(p);
+            (name, exec(&root, p, f, Args::none()).unwrap())
+        })
+        .collect()
+}
+
+#[test]
+fn allgather_identical_across_backends() {
+    let results = on_all_backends(4, |ctx, _| {
+        ctx.resize_memory_register(2).unwrap();
+        ctx.resize_message_queue(2 * ctx.p() as usize).unwrap();
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        let mine = ctx.register_global(8).unwrap();
+        let all = ctx.register_global(8 * ctx.p() as usize).unwrap();
+        ctx.write_typed(mine, 0, &[0xAB00u64 + ctx.pid() as u64]).unwrap();
+        for k in 0..ctx.p() {
+            ctx.put(mine, 0, k, all, 8 * ctx.pid() as usize, 8, MSG_DEFAULT).unwrap();
+        }
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        let mut v = vec![0u64; ctx.p() as usize];
+        ctx.read_typed(all, 0, &mut v).unwrap();
+        v
+    });
+    let reference = results[0].1.clone();
+    for (name, got) in &results {
+        assert_eq!(got, &reference, "backend {name} diverged");
+    }
+}
+
+#[test]
+fn crcw_winner_identical_across_backends() {
+    // all pids write overlapping ranges into pid 0; the deterministic
+    // winner (highest (pid, seq)) must agree across backends byte-for-byte
+    let results = on_all_backends(4, |ctx, _| {
+        ctx.resize_memory_register(2).unwrap();
+        ctx.resize_message_queue(4 * ctx.p() as usize).unwrap();
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        let src = ctx.register_global(16).unwrap();
+        let dst = ctx.register_global(16).unwrap();
+        let fill = vec![ctx.pid() as u8 + 1; 16];
+        ctx.write_slot(src, 0, &fill).unwrap();
+        // pid k writes [k, k+8) — staggered overlaps
+        ctx.put(src, 0, 0, dst, ctx.pid() as usize * 2, 8, MSG_DEFAULT).unwrap();
+        // a second, same-pid later write over part of the first
+        ctx.put(src, 8, 0, dst, ctx.pid() as usize * 2 + 1, 2, MSG_DEFAULT).unwrap();
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        let mut out = vec![0u8; 16];
+        if ctx.pid() == 0 {
+            ctx.read_slot(dst, 0, &mut out).unwrap();
+        }
+        out
+    });
+    let reference = results[0].1[0].clone();
+    assert!(reference.iter().any(|&b| b != 0), "something was written");
+    for (name, got) in &results {
+        assert_eq!(got[0], reference, "backend {name} resolved CRCW differently");
+    }
+}
+
+#[test]
+fn gets_identical_across_backends() {
+    let results = on_all_backends(3, |ctx, _| {
+        ctx.resize_memory_register(2).unwrap();
+        ctx.resize_message_queue(2 * ctx.p() as usize).unwrap();
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        let data = ctx.register_global(8).unwrap();
+        let got = ctx.register_global(8 * ctx.p() as usize).unwrap();
+        ctx.write_typed(data, 0, &[(ctx.pid() as u64 + 7) * 11]).unwrap();
+        for k in 0..ctx.p() {
+            ctx.get(k, data, 0, got, 8 * k as usize, 8, MSG_DEFAULT).unwrap();
+        }
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        let mut v = vec![0u64; ctx.p() as usize];
+        ctx.read_typed(got, 0, &mut v).unwrap();
+        v
+    });
+    let reference = results[0].1.clone();
+    assert_eq!(reference[0], vec![77, 88, 99]);
+    for (name, got) in &results {
+        assert_eq!(got, &reference, "backend {name} diverged");
+    }
+}
+
+#[test]
+fn multi_superstep_pipeline_identical() {
+    // shift a token around the ring for p supersteps
+    let results = on_all_backends(4, |ctx, _| {
+        let p = ctx.p();
+        ctx.resize_memory_register(2).unwrap();
+        ctx.resize_message_queue(4).unwrap();
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        let cur = ctx.register_global(8).unwrap();
+        let nxt = ctx.register_global(8).unwrap();
+        ctx.write_typed(cur, 0, &[ctx.pid() as u64]).unwrap();
+        for _ in 0..p {
+            ctx.put(cur, 0, (ctx.pid() + 1) % p, nxt, 0, 8, MSG_DEFAULT).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let mut v = [0u64];
+            ctx.read_typed(nxt, 0, &mut v).unwrap();
+            ctx.write_typed(cur, 0, &[v[0] + 1]).unwrap();
+        }
+        let mut v = [0u64];
+        ctx.read_typed(cur, 0, &mut v).unwrap();
+        v[0]
+    });
+    // token returns home having been incremented p times
+    let reference = results[0].1.clone();
+    for (pid, &v) in reference.iter().enumerate() {
+        assert_eq!(v, pid as u64 + 4, "ring arithmetic");
+    }
+    for (name, got) in &results {
+        assert_eq!(got, &reference, "backend {name} diverged");
+    }
+}
+
+#[test]
+fn capacity_errors_mitigable_on_all_backends() {
+    for (name, plat) in all_platforms() {
+        let root = Root::new(plat).with_max_procs(2);
+        exec(
+            &root,
+            2,
+            |ctx, _| {
+                // no capacity yet: registration must fail mitigably
+                let err = ctx.register_global(8).unwrap_err();
+                assert!(err.is_mitigable());
+                ctx.resize_memory_register(1).unwrap();
+                ctx.resize_message_queue(1).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                ctx.register_global(8).unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap_or_else(|e| panic!("backend {name}: {e}"));
+    }
+}
+
+#[test]
+fn illegal_read_write_overlap_rejected_on_checked_backends() {
+    for (name, plat) in all_platforms() {
+        let root = Root::new(plat).with_max_procs(2);
+        let res = exec(
+            &root,
+            2,
+            |ctx, _| {
+                ctx.resize_memory_register(1).unwrap();
+                ctx.resize_message_queue(4).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let s = ctx.register_global(8).unwrap();
+                // read [0,8) of own slot while peer writes [0,8) — illegal
+                ctx.put(s, 0, (ctx.pid() + 1) % 2, s, 0, 8, MSG_DEFAULT).unwrap();
+                match ctx.sync(SYNC_DEFAULT) {
+                    Err(LpfError::Illegal(_)) | Err(LpfError::PeerAborted { .. }) => true,
+                    other => panic!("backend expected illegality, got {other:?}"),
+                }
+            },
+            Args::none(),
+        );
+        // exec as a whole may report the abort; both outcomes are fine as
+        // long as no backend silently accepts the program
+        match res {
+            Ok(flags) => assert!(flags.iter().all(|&f| f), "backend {name}"),
+            Err(e) => assert!(!e.is_mitigable(), "backend {name}: {e}"),
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Property tests: random h-relations must be delivered byte-exactly and
+//! identically on every backend, matching a sequential-replay oracle.
+//!
+//! (The offline registry has no proptest; `util::rng::XorShift64` drives a
+//! seeded generator loop — failures print the seed for replay.)
+
+use lpf::core::{Args, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::ctx::{exec, Platform, Root};
+use lpf::util::rng::XorShift64;
+
+const SLOT_BYTES: usize = 96;
+
+/// A randomly generated superstep: per pid, a list of puts and gets.
+#[derive(Debug, Clone)]
+struct Scenario {
+    p: u32,
+    /// (src_pid, src_off, dst_pid, dst_off, len), issued in order per src.
+    puts: Vec<(u32, usize, u32, usize, usize)>,
+    /// (issuer, src_pid, src_off, dst_off, len)
+    gets: Vec<(u32, u32, usize, usize, usize)>,
+}
+
+/// Generate a legal random scenario: writes land in [0, 48), reads come
+/// from [48, 96) — read/write disjoint by construction (LPF legality).
+fn gen_scenario(rng: &mut XorShift64) -> Scenario {
+    let p = 2 + rng.below(4) as u32; // 2..=5
+    let n_puts = rng.below_usize(12);
+    let n_gets = rng.below_usize(6);
+    let half = SLOT_BYTES / 2;
+    let mut puts = Vec::new();
+    for _ in 0..n_puts {
+        let src = rng.below(p as u64) as u32;
+        let dst = rng.below(p as u64) as u32;
+        let len = 1 + rng.below_usize(24);
+        let src_off = half + rng.below_usize(half - len);
+        let dst_off = rng.below_usize(half - len);
+        puts.push((src, src_off, dst, dst_off, len));
+    }
+    let mut gets = Vec::new();
+    for _ in 0..n_gets {
+        let issuer = rng.below(p as u64) as u32;
+        let src = rng.below(p as u64) as u32;
+        let len = 1 + rng.below_usize(24);
+        let src_off = half + rng.below_usize(half - len);
+        let dst_off = rng.below_usize(half - len);
+        gets.push((issuer, src, src_off, dst_off, len));
+    }
+    Scenario { p, puts, gets }
+}
+
+/// Initial slot contents for a pid: deterministic pattern.
+fn initial(pid: u32) -> Vec<u8> {
+    (0..SLOT_BYTES).map(|i| (pid as usize * 37 + i * 11) as u8).collect()
+}
+
+/// Sequential oracle: apply all writes in (writer pid, seq) order.
+fn oracle(sc: &Scenario) -> Vec<Vec<u8>> {
+    let mut mem: Vec<Vec<u8>> = (0..sc.p).map(initial).collect();
+    // per-issuer sequence: puts and gets interleaved in issue order — here
+    // all puts then gets per pid, matching the SPMD program below.
+    #[derive(Clone)]
+    struct W {
+        writer: u32,
+        seq: u32,
+        dst: u32,
+        dst_off: usize,
+        data: Vec<u8>,
+    }
+    let mut writes: Vec<W> = Vec::new();
+    let mut seqs = vec![0u32; sc.p as usize];
+    for &(src, src_off, dst, dst_off, len) in &sc.puts {
+        let data = mem[src as usize][src_off..src_off + len].to_vec();
+        writes.push(W { writer: src, seq: seqs[src as usize], dst, dst_off, data });
+        seqs[src as usize] += 1;
+    }
+    for &(issuer, src, src_off, dst_off, len) in &sc.gets {
+        let data = mem[src as usize][src_off..src_off + len].to_vec();
+        writes.push(W { writer: issuer, seq: seqs[issuer as usize], dst: issuer, dst_off, data });
+        seqs[issuer as usize] += 1;
+    }
+    writes.sort_by_key(|w| ((w.writer as u64) << 32) | w.seq as u64);
+    for w in writes {
+        mem[w.dst as usize][w.dst_off..w.dst_off + w.data.len()].copy_from_slice(&w.data);
+    }
+    mem
+}
+
+/// Execute the scenario on one platform, returning final slot contents.
+fn run_on(sc: &Scenario, plat: Platform) -> Vec<Vec<u8>> {
+    let sc = sc.clone();
+    let root = Root::new(plat).with_max_procs(sc.p);
+    exec(
+        &root,
+        sc.p,
+        move |ctx, _| {
+            ctx.resize_memory_register(1).unwrap();
+            ctx.resize_message_queue(64).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let slot = ctx.register_global(SLOT_BYTES).unwrap();
+            ctx.write_slot(slot, 0, &initial(ctx.pid())).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap(); // all initialised
+            for &(src, src_off, dst, dst_off, len) in &sc.puts {
+                if src == ctx.pid() {
+                    ctx.put(slot, src_off, dst, slot, dst_off, len, MSG_DEFAULT).unwrap();
+                }
+            }
+            for &(issuer, src, src_off, dst_off, len) in &sc.gets {
+                if issuer == ctx.pid() {
+                    ctx.get(src, slot, src_off, slot, dst_off, len, MSG_DEFAULT).unwrap();
+                }
+            }
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let mut out = vec![0u8; SLOT_BYTES];
+            ctx.read_slot(slot, 0, &mut out).unwrap();
+            out
+        },
+        Args::none(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn random_h_relations_match_oracle_on_all_backends() {
+    let mut rng = XorShift64::new(0x5EED_2026);
+    for case in 0..40 {
+        let sc = gen_scenario(&mut rng);
+        let want = oracle(&sc);
+        for (name, plat) in [
+            ("shared", Platform::shared().checked(false)),
+            ("rdma", Platform::rdma()),
+            ("msg", Platform::msg()),
+            ("hybrid", Platform::hybrid(2)),
+        ] {
+            let got = run_on(&sc, plat);
+            assert_eq!(
+                got, want,
+                "case {case} backend {name} diverged from oracle; scenario: {sc:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn conflict_free_attr_equivalent_when_no_conflicts() {
+    // when a scenario happens to be conflict-free, assume_no_conflicts
+    // must give identical bytes (it skips resolution, lowering g)
+    let mut rng = XorShift64::new(77);
+    let mut tested = 0;
+    for _ in 0..60 {
+        let sc = gen_scenario(&mut rng);
+        // keep only scenarios with no overlapping destination writes
+        let mut intervals: Vec<(u32, usize, usize)> = Vec::new();
+        let mut ok = true;
+        let mut add = |dst: u32, off: usize, len: usize, ok: &mut bool| {
+            for &(d, o, l) in intervals.iter() {
+                if d == dst && off < o + l && o < off + len {
+                    *ok = false;
+                }
+            }
+            intervals.push((dst, off, len));
+        };
+        for &(_, _, dst, dst_off, len) in &sc.puts {
+            add(dst, dst_off, len, &mut ok);
+        }
+        for &(issuer, _, _, dst_off, len) in &sc.gets {
+            add(issuer, dst_off, len, &mut ok);
+        }
+        if !ok {
+            continue;
+        }
+        tested += 1;
+        let want = oracle(&sc);
+        let sc2 = sc.clone();
+        let root = Root::new(Platform::shared().checked(false)).with_max_procs(sc.p);
+        let got = exec(
+            &root,
+            sc.p,
+            move |ctx, _| {
+                ctx.resize_memory_register(1).unwrap();
+                ctx.resize_message_queue(64).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let slot = ctx.register_global(SLOT_BYTES).unwrap();
+                ctx.write_slot(slot, 0, &initial(ctx.pid())).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                for &(src, src_off, dst, dst_off, len) in &sc2.puts {
+                    if src == ctx.pid() {
+                        ctx.put(slot, src_off, dst, slot, dst_off, len, MSG_DEFAULT).unwrap();
+                    }
+                }
+                for &(issuer, src, src_off, dst_off, len) in &sc2.gets {
+                    if issuer == ctx.pid() {
+                        ctx.get(src, slot, src_off, slot, dst_off, len, MSG_DEFAULT).unwrap();
+                    }
+                }
+                ctx.sync(lpf::core::SyncAttr { assume_no_conflicts: true }).unwrap();
+                let mut out = vec![0u8; SLOT_BYTES];
+                ctx.read_slot(slot, 0, &mut out).unwrap();
+                out
+            },
+            Args::none(),
+        )
+        .unwrap();
+        assert_eq!(got, want);
+    }
+    assert!(tested >= 3, "want several conflict-free scenarios, got {tested}");
+}

@@ -1,0 +1,165 @@
+//! Integration over the PJRT runtime: artifacts built by `make artifacts`
+//! load, compile and produce numerics matching the Rust oracles. Skipped
+//! (with a loud warning) when artifacts have not been built.
+
+use lpf::fft::local;
+use lpf::fft::plan::FftPlan;
+use lpf::runtime::{Runtime, Tensor};
+use lpf::util::rng::XorShift64;
+
+fn runtime() -> Option<std::sync::Arc<Runtime>> {
+    match Runtime::global() {
+        Ok(rt) => Some(rt),
+        Err(_) => {
+            eprintln!("SKIP runtime_e2e: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn rand_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = XorShift64::new(seed);
+    (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect()
+}
+
+#[test]
+fn manifest_lists_expected_families() {
+    let Some(rt) = runtime() else { return };
+    let names: Vec<&str> = rt.manifest().names().collect();
+    for family in ["fft_local_", "cmul_", "fft_batch_", "fft_full_", "spmv_", "pr_update_"] {
+        assert!(
+            names.iter().any(|n| n.starts_with(family)),
+            "missing artifact family {family}"
+        );
+    }
+}
+
+#[test]
+fn fft_local_artifact_matches_rust_fft() {
+    let Some(rt) = runtime() else { return };
+    let m = 1024;
+    let plan = FftPlan::new(m).unwrap();
+    let re = rand_f32(m, 1);
+    let im = rand_f32(m, 2);
+    let out = rt
+        .run(
+            &format!("fft_local_{m}"),
+            vec![
+                Tensor::F32(re.clone()),
+                Tensor::F32(im.clone()),
+                Tensor::I32(plan.perm.clone()),
+                Tensor::F32(plan.tw_re.clone()),
+                Tensor::F32(plan.tw_im.clone()),
+            ],
+        )
+        .unwrap();
+    let (want_re, want_im) = local::fft(&plan, &re, &im).unwrap();
+    let got_re = out[0].as_f32().unwrap();
+    let got_im = out[1].as_f32().unwrap();
+    let tol = 1e-3 * (m as f32).sqrt();
+    for k in 0..m {
+        assert!((got_re[k] - want_re[k]).abs() < tol, "re[{k}]");
+        assert!((got_im[k] - want_im[k]).abs() < tol, "im[{k}]");
+    }
+}
+
+#[test]
+fn cmul_artifact_is_complex_multiply() {
+    let Some(rt) = runtime() else { return };
+    let m = 256;
+    let (a_re, a_im) = (rand_f32(m, 3), rand_f32(m, 4));
+    let (b_re, b_im) = (rand_f32(m, 5), rand_f32(m, 6));
+    let out = rt
+        .run(
+            &format!("cmul_{m}"),
+            vec![
+                Tensor::F32(a_re.clone()),
+                Tensor::F32(a_im.clone()),
+                Tensor::F32(b_re.clone()),
+                Tensor::F32(b_im.clone()),
+            ],
+        )
+        .unwrap();
+    let got_re = out[0].as_f32().unwrap();
+    let got_im = out[1].as_f32().unwrap();
+    for k in 0..m {
+        let er = a_re[k] * b_re[k] - a_im[k] * b_im[k];
+        let ei = a_re[k] * b_im[k] + a_im[k] * b_re[k];
+        assert!((got_re[k] - er).abs() < 1e-4);
+        assert!((got_im[k] - ei).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn spmv_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    // use the aot-built shape (see aot.py): logn=13, p=4
+    let (nnz, n_in, n_out) = (8 * (1 << 13) / 4, 1 << 13, (1 << 13) / 4);
+    let name = format!("spmv_{nnz}_{n_in}_{n_out}");
+    if rt.manifest().get(&name).is_none() {
+        eprintln!("SKIP spmv shape {name}");
+        return;
+    }
+    let mut rng = XorShift64::new(9);
+    let vals: Vec<f32> = (0..nnz).map(|_| rng.unit_f64() as f32).collect();
+    let cols: Vec<i32> = (0..nnz).map(|_| rng.below(n_in as u64) as i32).collect();
+    let rows: Vec<i32> = (0..nnz).map(|_| rng.below(n_out as u64) as i32).collect();
+    let x = rand_f32(n_in, 10);
+    let out = rt
+        .run(
+            &name,
+            vec![
+                Tensor::F32(vals.clone()),
+                Tensor::I32(cols.clone()),
+                Tensor::I32(rows.clone()),
+                Tensor::F32(x.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    let mut want = vec![0f32; n_out];
+    for e in 0..nnz {
+        want[rows[e] as usize] += vals[e] * x[cols[e] as usize];
+    }
+    for k in 0..n_out {
+        assert!((got[k] - want[k]).abs() < 1e-2, "y[{k}]: {} vs {}", got[k], want[k]);
+    }
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.run("cmul_256", vec![Tensor::F32(vec![0.0; 8])]).unwrap_err();
+    assert!(matches!(err, lpf::core::LpfError::Illegal(_)));
+    let err = rt.run("no_such_artifact", vec![]).unwrap_err();
+    assert!(matches!(err, lpf::core::LpfError::Illegal(_)));
+}
+
+#[test]
+fn concurrent_runs_from_many_threads() {
+    let Some(rt) = runtime() else { return };
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let rt = rt.clone();
+            s.spawn(move || {
+                let m = 256;
+                let a = rand_f32(m, 100 + t);
+                let out = rt
+                    .run(
+                        &format!("cmul_{m}"),
+                        vec![
+                            Tensor::F32(a.clone()),
+                            Tensor::F32(vec![0.0; m]),
+                            Tensor::F32(vec![2.0; m]),
+                            Tensor::F32(vec![0.0; m]),
+                        ],
+                    )
+                    .unwrap();
+                let got = out[0].as_f32().unwrap();
+                for k in 0..m {
+                    assert!((got[k] - 2.0 * a[k]).abs() < 1e-5);
+                }
+            });
+        }
+    });
+}
