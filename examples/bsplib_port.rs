@@ -1,7 +1,9 @@
 //! Porting a BSPlib program verbatim (paper §4.2: the BSPlib layer "enables
 //! the use of a large body of BSP algorithms originally written for
 //! BSPlib"). This is the classic BSPlib inner-product example: block
-//! distribute two vectors, local dot products, allgather partial sums.
+//! distribute two vectors, local dot products, allgather partial sums —
+//! using the typed, element-indexed registrations (`push_reg_of`,
+//! `put_at`, `read_local_at`), so the port carries no byte offsets.
 //!
 //! Run: `cargo run --release --example bsplib_port`
 
@@ -11,18 +13,18 @@ use lpf::ctx::{exec, Platform, Root};
 
 fn bspip(bsp: &mut Bsp, x: &[f64], y: &[f64]) -> f64 {
     let p = bsp.nprocs();
-    // registered window for everyone's partial sum
-    let partial = bsp.push_reg(8 * p as usize).unwrap();
+    // registered window for everyone's partial sum, one f64 per pid
+    let partial = bsp.push_reg_of::<f64>(p as usize).unwrap();
     bsp.sync().unwrap();
     let local: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
     // bsp_put my partial into slot pid of everyone (buffered put)
     for k in 0..p {
-        bsp.put(k, &[local], partial, 8 * bsp.pid() as usize).unwrap();
+        bsp.put_at(k, &[local], partial, bsp.pid() as usize).unwrap();
     }
     bsp.sync().unwrap();
     let mut all = vec![0f64; p as usize];
-    bsp.read_local(partial, 0, &mut all).unwrap();
-    bsp.pop_reg(partial).unwrap();
+    bsp.read_local_at(partial, 0, &mut all).unwrap();
+    bsp.pop_reg_of(partial).unwrap();
     all.iter().sum()
 }
 

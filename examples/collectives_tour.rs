@@ -15,9 +15,7 @@ fn main() {
         &root,
         p,
         |ctx, _| {
-            ctx.resize_memory_register(8).unwrap();
-            ctx.resize_message_queue(8 * ctx.p() as usize).unwrap();
-            ctx.sync(SYNC_DEFAULT).unwrap();
+            ctx.bootstrap(8, 8 * ctx.p() as usize).unwrap();
             let coll = Coll::new(ctx, 1024).unwrap();
             ctx.sync(SYNC_DEFAULT).unwrap();
             let me = ctx.pid();

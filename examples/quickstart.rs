@@ -1,13 +1,18 @@
-//! Quickstart: the paper's Algorithm 1 + Algorithm 2 in Rust.
+//! Quickstart: the paper's Algorithm 1 + Algorithm 2 in Rust, written
+//! against the typed superstep API (v2).
 //!
 //! A sequential `main` launches an SPMD function with `exec` (Algorithm 1),
 //! which bootstraps buffers, distributes a matrix size from the root,
 //! broadcasts errors with CRCW write-conflict resolution, and returns an
 //! error code through the args/output mechanism (Algorithm 2).
 //!
+//! The raw twelve-primitive version of this same program is shown
+//! side-by-side in README.md ("Migrating from the raw API"); the two are
+//! byte-for-byte equivalent on the wire.
+//!
 //! Run: `cargo run --release --example quickstart -- 1000 500`
 
-use lpf::core::{Args, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::core::Args;
 use lpf::ctx::{exec, Context, Platform, Root};
 
 const OK: u32 = 0;
@@ -18,54 +23,58 @@ fn spmd(ctx: &mut Context, args: Args) -> u32 {
     let p = ctx.p();
     let s = ctx.pid();
 
-    // allocate and activate LPF buffers
-    ctx.resize_memory_register(3).unwrap();
-    ctx.resize_message_queue(2 * p as usize).unwrap();
-    ctx.sync(SYNC_DEFAULT).unwrap();
+    // allocate and activate LPF buffers (resize register + queue + fence)
+    ctx.bootstrap(3, 2 * p as usize).unwrap();
 
-    // register memory areas for communication
-    let s_lerr = ctx.register_local(4).unwrap();
-    let s_gerr = ctx.register_global(4).unwrap();
-    let s_mdim = ctx.register_global(8).unwrap();
+    // register typed memory areas for communication
+    let s_lerr = ctx.alloc_local::<u32>(1).unwrap();
+    let s_gerr = ctx.alloc_global::<u32>(1).unwrap();
+    let s_mdim = ctx.alloc_global::<u32>(2).unwrap();
 
     // root seeds the matrix size from args; everyone else fetches it
     if s == 0 && args.input.len() == 8 {
-        ctx.write_slot(s_mdim, 0, &args.input).unwrap();
+        let rows = u32::from_le_bytes(args.input[0..4].try_into().unwrap());
+        let cols = u32::from_le_bytes(args.input[4..8].try_into().unwrap());
+        ctx.write(s_mdim, 0, &[rows, cols]).unwrap();
     }
-    if s != 0 {
-        ctx.get(0, s_mdim, 0, s_mdim, 0, 8, MSG_DEFAULT).unwrap();
-    }
-    ctx.sync(SYNC_DEFAULT).unwrap();
+    ctx.superstep(|ep| {
+        if ep.pid() != 0 {
+            ep.get_slice(0, s_mdim, 0, s_mdim, 0, 2)?;
+        }
+        Ok(())
+    })
+    .unwrap();
 
     // compute the local matrix size
-    let mut mdim = [0u32; 2];
-    ctx.read_typed(s_mdim, 0, &mut mdim).unwrap();
+    let mdim = ctx.read_vec(s_mdim).unwrap();
     let m_local = (mdim[0] as i64 + p as i64 - s as i64 - 1) / p as i64;
     let n = mdim[1] as i64;
     let lerr = if m_local <= 0 || n <= 0 { ILLEGAL_INPUT } else { OK };
-    ctx.write_typed(s_lerr, 0, &[lerr]).unwrap();
+    ctx.write(s_lerr, 0, &[lerr]).unwrap();
 
     // broadcast errors using CRCW write-conflict resolution: every
     // erroring process puts its code into everyone's gerr — no buffer
     // needed, any winner is an error code (paper §2.1)
-    if lerr != OK {
-        for k in 0..p {
-            ctx.put(s_lerr, 0, k, s_gerr, 0, 4, MSG_DEFAULT).unwrap();
+    ctx.superstep(|ep| {
+        if lerr != OK {
+            for k in 0..ep.p() {
+                ep.put_slice(s_lerr, 0, k, s_gerr, 0, 1)?;
+            }
         }
-    }
-    ctx.sync(SYNC_DEFAULT).unwrap();
-    let mut gerr = [OK];
-    ctx.read_typed(s_gerr, 0, &mut gerr).unwrap();
+        Ok(())
+    })
+    .unwrap();
+    let gerr = ctx.read_vec(s_gerr).unwrap()[0];
 
-    if gerr[0] == OK {
+    if gerr == OK {
         println!("pid {s}/{p}: my block is {m_local} x {n} — building matrix...");
     }
 
     // clean up & return the error code
-    ctx.deregister(s_lerr).unwrap();
-    ctx.deregister(s_gerr).unwrap();
-    ctx.deregister(s_mdim).unwrap();
-    gerr[0]
+    ctx.dealloc(s_lerr).unwrap();
+    ctx.dealloc(s_gerr).unwrap();
+    ctx.dealloc(s_mdim).unwrap();
+    gerr
 }
 
 /// Algorithm 1: sequential main calling lpf_exec.

@@ -23,7 +23,15 @@
 //! payload into a registered staging slot and issue the LPF put from
 //! there, which is exactly how BSPlib-over-RDMA implementations (and the
 //! paper's layer) realise buffered puts.
+//!
+//! BSPlib itself is byte-addressed, and this layer deliberately sits on
+//! the *raw* twelve-primitive API (that interop is the paper's point).
+//! For Rust consumers, every primitive also has a typed, element-indexed
+//! variant over [`TypedReg<T>`] (`push_reg_of`, `put_at`, `hpput_at`,
+//! `get_at`, …) so that programs layered on BSPlib — like the immortal
+//! FFT — never hand-compute byte offsets.
 
+use std::marker::PhantomData;
 use std::time::Instant;
 
 use crate::core::{LpfError, Memslot, Result, MSG_DEFAULT, SYNC_DEFAULT};
@@ -35,6 +43,58 @@ use crate::ctx::{pod_bytes, Context, Pod};
 pub struct BspReg {
     slot: Memslot,
     len: usize,
+}
+
+/// A typed BSPlib registration: a [`BspReg`] that remembers its element
+/// type, addressed in elements rather than bytes (API v2).
+pub struct TypedReg<T: Pod> {
+    reg: BspReg,
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<T: Pod> Clone for TypedReg<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Pod> Copy for TypedReg<T> {}
+impl<T: Pod> std::fmt::Debug for TypedReg<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TypedReg<{}>(len {})", std::any::type_name::<T>(), self.len)
+    }
+}
+
+impl<T: Pod> TypedReg<T> {
+    /// Length in elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if zero-length.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The untyped registration, for the byte-addressed BSPlib calls.
+    pub fn raw(&self) -> BspReg {
+        self.reg
+    }
+
+    /// Byte offset of element `elem` — overflow-checked but not
+    /// length-checked, for the *remote* side of a transfer (peers may
+    /// legitimately register different lengths; the destination validates
+    /// during the sync, as in raw LPF).
+    fn byte_at(&self, elem: usize) -> Result<usize> {
+        crate::typed::byte_offset::<T>(elem)
+    }
+
+    /// Byte offset of element `elem`, bounds-checking `[elem, elem+n)`
+    /// against this process's registration — for the *local* side.
+    fn byte_off(&self, what: &str, elem: usize, n: usize) -> Result<usize> {
+        crate::typed::check_range(what, elem, n, self.len)?;
+        self.byte_at(elem)
+    }
 }
 
 /// Default staging capacity for buffered puts, bytes.
@@ -185,6 +245,87 @@ impl<'a> Bsp<'a> {
         self.ctx.get(src_pid, src.slot, src_byte_off, dst.slot, dst_byte_off, len, MSG_DEFAULT)
     }
 
+    // ------------------------------------------------- typed variants (v2)
+
+    /// `bsp_push_reg`, typed: collectively register a window of `n`
+    /// elements of `T`. Element-indexed access via the `*_at` calls.
+    pub fn push_reg_of<T: Pod>(&mut self, n: usize) -> Result<TypedReg<T>> {
+        let reg = self.push_reg(crate::typed::bytes_for::<T>(n)?)?;
+        Ok(TypedReg { reg, len: n, _elem: PhantomData })
+    }
+
+    /// `bsp_pop_reg`, typed.
+    pub fn pop_reg_of<T: Pod>(&mut self, reg: TypedReg<T>) -> Result<()> {
+        self.pop_reg(reg.raw())
+    }
+
+    /// Write into this process's window at element offset `elem`.
+    pub fn write_local_at<T: Pod>(
+        &mut self,
+        reg: TypedReg<T>,
+        elem: usize,
+        data: &[T],
+    ) -> Result<()> {
+        let off = reg.byte_off("write_local_at", elem, data.len())?;
+        self.write_local(reg.raw(), off, data)
+    }
+
+    /// Read from this process's window at element offset `elem`.
+    pub fn read_local_at<T: Pod>(
+        &self,
+        reg: TypedReg<T>,
+        elem: usize,
+        out: &mut [T],
+    ) -> Result<()> {
+        let off = reg.byte_off("read_local_at", elem, out.len())?;
+        self.read_local(reg.raw(), off, out)
+    }
+
+    /// `bsp_put`, typed: buffered put of `data` into `dst_pid`'s window at
+    /// element offset `dst_elem`. Snapshots `data` at call time.
+    pub fn put_at<T: Pod>(
+        &mut self,
+        dst_pid: u32,
+        data: &[T],
+        dst: TypedReg<T>,
+        dst_elem: usize,
+    ) -> Result<()> {
+        let dst_off = dst.byte_at(dst_elem)?;
+        self.put(dst_pid, data, dst.raw(), dst_off)
+    }
+
+    /// `bsp_hpput`, typed: unbuffered put of `n` elements from our window
+    /// at `src_elem` into `dst_pid`'s window at `dst_elem`.
+    pub fn hpput_at<T: Pod>(
+        &mut self,
+        dst_pid: u32,
+        src: TypedReg<T>,
+        src_elem: usize,
+        dst: TypedReg<T>,
+        dst_elem: usize,
+        n: usize,
+    ) -> Result<()> {
+        let src_off = src.byte_off("hpput_at source", src_elem, n)?;
+        let dst_off = dst.byte_at(dst_elem)?;
+        self.hpput(dst_pid, src.raw(), src_off, dst.raw(), dst_off, crate::typed::bytes_for::<T>(n)?)
+    }
+
+    /// `bsp_get`, typed: fetch `n` elements from `src_pid`'s window at
+    /// `src_elem` into our window at `dst_elem`.
+    pub fn get_at<T: Pod>(
+        &mut self,
+        src_pid: u32,
+        src: TypedReg<T>,
+        src_elem: usize,
+        dst: TypedReg<T>,
+        dst_elem: usize,
+        n: usize,
+    ) -> Result<()> {
+        let dst_off = dst.byte_off("get_at destination", dst_elem, n)?;
+        let src_off = src.byte_at(src_elem)?;
+        self.get(src_pid, src.raw(), src_off, dst.raw(), dst_off, crate::typed::bytes_for::<T>(n)?)
+    }
+
     /// `bsp_sync`: end the superstep; all queued communication completes
     /// and the staging area resets.
     pub fn sync(&mut self) -> Result<()> {
@@ -331,6 +472,53 @@ mod tests {
             let t0 = bsp.time();
             std::thread::sleep(std::time::Duration::from_millis(2));
             assert!(bsp.time() > t0);
+        });
+    }
+
+    #[test]
+    fn typed_regs_roundtrip_without_byte_offsets() {
+        run(4, |bsp| {
+            let src = bsp.push_reg_of::<u64>(1).unwrap();
+            let dst = bsp.push_reg_of::<u64>(4).unwrap();
+            bsp.sync().unwrap();
+            bsp.write_local_at(src, 0, &[bsp.pid() as u64 + 100]).unwrap();
+            for k in 0..bsp.nprocs() {
+                bsp.hpput_at(k, src, 0, dst, bsp.pid() as usize, 1).unwrap();
+            }
+            bsp.sync().unwrap();
+            let mut all = [0u64; 4];
+            bsp.read_local_at(dst, 0, &mut all).unwrap();
+            assert_eq!(all, [100, 101, 102, 103]);
+            // fetch the neighbour's value back, element-indexed
+            let peer = (bsp.pid() + 1) % bsp.nprocs();
+            let tmp = bsp.push_reg_of::<u64>(1).unwrap();
+            bsp.sync().unwrap();
+            bsp.get_at(peer, src, 0, tmp, 0, 1).unwrap();
+            bsp.sync().unwrap();
+            let mut got = [0u64];
+            bsp.read_local_at(tmp, 0, &mut got).unwrap();
+            assert_eq!(got[0], peer as u64 + 100);
+            bsp.pop_reg_of(tmp).unwrap();
+        });
+    }
+
+    #[test]
+    fn typed_buffered_put_snapshots_and_checks_bounds() {
+        run(2, |bsp| {
+            let dst = bsp.push_reg_of::<u32>(2).unwrap();
+            bsp.sync().unwrap();
+            let mut v = [5u32];
+            bsp.put_at((bsp.pid() + 1) % 2, &v, dst, 1).unwrap();
+            v[0] = 9; // must not affect the snapshot
+            bsp.sync().unwrap();
+            let mut got = [0u32; 2];
+            bsp.read_local_at(dst, 0, &mut got).unwrap();
+            assert_eq!(got, [0, 5]);
+            // local-side bounds are rejected at the call site
+            assert!(bsp.write_local_at(dst, 2, &[1u32]).is_err());
+            let mut over = [0u32; 3];
+            assert!(bsp.read_local_at(dst, 0, &mut over).is_err());
+            assert!(bsp.hpput_at(0, dst, 1, dst, 0, 2).is_err());
         });
     }
 }

@@ -1,4 +1,4 @@
-//! A collectives library on raw LPF.
+//! A collectives library on LPF's typed superstep API.
 //!
 //! The paper's experiments "made use of an LPF-based collectives library"
 //! (§6) to demonstrate that LPF is expressive enough for higher-level
@@ -10,18 +10,21 @@
 //!
 //! All collectives operate on a [`Coll`] workspace that pre-registers its
 //! communication slots once (registration is not free — paper Fig. 1), so
-//! the per-call hot path is pure put/sync.
+//! the per-call hot path is pure staged-put/superstep. The workspace is a
+//! byte arena ([`TypedSlot<u8>`]); each call [`cast`](TypedSlot::cast)s it
+//! to the caller's element type and works in element offsets throughout —
+//! there is no hand-computed byte arithmetic anywhere in this layer.
 
-use crate::core::{LpfError, Result, MSG_DEFAULT, SYNC_DEFAULT};
-use crate::ctx::{pod_bytes, Context, Pod};
+use crate::core::{LpfError, Result};
+use crate::ctx::{Context, Pod, TypedSlot};
 
 /// Pre-registered workspace for collectives over elements of up to
 /// `max_bytes` per process.
 pub struct Coll {
     /// Scratch able to hold one contribution from every process.
-    gather_slot: crate::core::Memslot,
+    gather: TypedSlot<u8>,
     /// Scratch holding this process's outgoing block.
-    send_slot: crate::core::Memslot,
+    send: TypedSlot<u8>,
     max_bytes: usize,
 }
 
@@ -31,15 +34,15 @@ impl Coll {
     /// of `max_bytes`. Costs one superstep to activate queue capacity.
     pub fn new(ctx: &mut Context, max_bytes: usize) -> Result<Coll> {
         let p = ctx.p() as usize;
-        let send_slot = ctx.register_global(max_bytes)?;
-        let gather_slot = ctx.register_global(max_bytes * p)?;
-        Ok(Coll { gather_slot, send_slot, max_bytes })
+        let send = ctx.alloc_global::<u8>(max_bytes)?;
+        let gather = ctx.alloc_global::<u8>(max_bytes * p)?;
+        Ok(Coll { gather, send, max_bytes })
     }
 
     /// Free the workspace slots.
     pub fn free(self, ctx: &mut Context) -> Result<()> {
-        ctx.deregister(self.send_slot)?;
-        ctx.deregister(self.gather_slot)
+        ctx.dealloc(self.send)?;
+        ctx.dealloc(self.gather)
     }
 
     fn check_len(&self, bytes: usize) -> Result<()> {
@@ -50,6 +53,11 @@ impl Coll {
             )));
         }
         Ok(())
+    }
+
+    /// The workspace as typed windows for elements of `T`: `(send, gather)`.
+    fn windows<T: Pod>(&self) -> (TypedSlot<T>, TypedSlot<T>) {
+        (self.send.cast::<T>(), self.gather.cast::<T>())
     }
 
     /// Broadcast `data` from `root` into every process's `out`.
@@ -64,114 +72,96 @@ impl Coll {
         root: u32,
         data: &mut [T],
     ) -> Result<()> {
-        let len = std::mem::size_of_val(data);
-        self.check_len(len)?;
+        let n = data.len();
+        self.check_len(std::mem::size_of_val(data))?;
         let p = ctx.p();
         if p == 1 {
             return Ok(());
         }
+        let (send, gather) = self.windows::<T>();
         let machine = ctx.probe();
         let params = machine.at_word(8);
-        let two_phase_wins =
-            params.g_ns * len as f64 * (p as f64 - 2.0) / p as f64 > params.l_ns && len >= p as usize;
+        let len_bytes = std::mem::size_of_val(data);
+        let two_phase_wins = params.g_ns * len_bytes as f64 * (p as f64 - 2.0) / p as f64
+            > params.l_ns
+            && len_bytes >= p as usize;
         if ctx.pid() == root {
-            ctx.write_slot(self.send_slot, 0, pod_bytes(data))?;
+            ctx.write(send, 0, data)?;
         }
         if !two_phase_wins {
             // one-phase: root puts the whole payload to everyone
-            if ctx.pid() == root {
-                for k in 0..p {
-                    if k != root {
-                        ctx.put(self.send_slot, 0, k, self.gather_slot, 0, len, MSG_DEFAULT)?;
+            ctx.superstep(|ep| {
+                if ep.pid() == root {
+                    for k in 0..p {
+                        if k != root {
+                            ep.put_slice(send, 0, k, gather, 0, n)?;
+                        }
                     }
                 }
-            }
-            ctx.sync(SYNC_DEFAULT)?;
+                Ok(())
+            })?;
             if ctx.pid() != root {
-                self.read_back(ctx, self.gather_slot, 0, data)?;
+                ctx.read(gather, 0, data)?;
             }
             return Ok(());
         }
         // two-phase: scatter blocks, then allgather them
-        let block = len.div_ceil(p as usize);
-        if ctx.pid() == root {
-            for k in 0..p {
-                let off = k as usize * block;
-                let blen = block.min(len.saturating_sub(off));
-                if blen > 0 && k != root {
-                    ctx.put(self.send_slot, off, k, self.gather_slot, off, blen, MSG_DEFAULT)?;
+        let block = n.div_ceil(p as usize);
+        ctx.superstep(|ep| {
+            if ep.pid() == root {
+                for k in 0..p {
+                    let off = k as usize * block;
+                    let blen = block.min(n.saturating_sub(off));
+                    if blen > 0 && k != root {
+                        ep.put_slice(send, off, k, gather, off, blen)?;
+                    }
                 }
             }
-        }
-        ctx.sync(SYNC_DEFAULT)?;
+            Ok(())
+        })?;
         if ctx.pid() == root {
-            // root already has all blocks in send_slot; copy to gather_slot
-            let mut tmp = vec![0u8; len];
-            ctx.read_slot(self.send_slot, 0, &mut tmp)?;
-            ctx.write_slot(self.gather_slot, 0, &tmp)?;
+            // root already holds the full payload; seed its gather window
+            ctx.write(gather, 0, data)?;
         }
         // allgather: each process broadcasts its block
         let my_off = ctx.pid() as usize * block;
-        let my_len = block.min(len.saturating_sub(my_off));
-        if my_len > 0 {
-            for k in 0..p {
-                if k != ctx.pid() {
-                    ctx.put(
-                        self.gather_slot,
-                        my_off,
-                        k,
-                        self.gather_slot,
-                        my_off,
-                        my_len,
-                        MSG_DEFAULT,
-                    )?;
+        let my_len = block.min(n.saturating_sub(my_off));
+        ctx.superstep(|ep| {
+            if my_len > 0 {
+                for k in 0..p {
+                    if k != ep.pid() {
+                        ep.put_slice(gather, my_off, k, gather, my_off, my_len)?;
+                    }
                 }
             }
-        }
-        ctx.sync(SYNC_DEFAULT)?;
-        self.read_back(ctx, self.gather_slot, 0, data)?;
+            Ok(())
+        })?;
+        ctx.read(gather, 0, data)?;
         Ok(())
-    }
-
-    fn read_back<T: Pod>(
-        &self,
-        ctx: &Context,
-        slot: crate::core::Memslot,
-        off: usize,
-        out: &mut [T],
-    ) -> Result<()> {
-        let len = std::mem::size_of_val(out);
-        ctx.with_slot(slot, |bytes| {
-            // SAFETY: Pod target, length checked by caller contracts.
-            unsafe {
-                std::ptr::copy_nonoverlapping(
-                    bytes[off..off + len].as_ptr(),
-                    out.as_mut_ptr() as *mut u8,
-                    len,
-                );
-            }
-        })
     }
 
     /// Allgather: every process contributes `mine`; `out` (length `p·len`)
     /// receives all contributions ordered by pid. One superstep,
     /// `h = (p−1)·len`.
     pub fn allgather<T: Pod>(&self, ctx: &mut Context, mine: &[T], out: &mut [T]) -> Result<()> {
-        let len = std::mem::size_of_val(mine);
-        self.check_len(len)?;
-        if out.len() != mine.len() * ctx.p() as usize {
+        let n = mine.len();
+        self.check_len(std::mem::size_of_val(mine))?;
+        if out.len() != n * ctx.p() as usize {
             return Err(LpfError::Illegal("allgather out must be p×len".into()));
         }
-        let my_off = ctx.pid() as usize * len;
-        ctx.write_slot(self.send_slot, 0, pod_bytes(mine))?;
-        ctx.write_slot(self.gather_slot, my_off, pod_bytes(mine))?;
-        for k in 0..ctx.p() {
-            if k != ctx.pid() {
-                ctx.put(self.send_slot, 0, k, self.gather_slot, my_off, len, MSG_DEFAULT)?;
+        let (send, gather) = self.windows::<T>();
+        let me = ctx.pid() as usize;
+        ctx.write(send, 0, mine)?;
+        ctx.write(gather, me * n, mine)?;
+        ctx.superstep(|ep| {
+            for k in 0..ep.p() {
+                if k != ep.pid() {
+                    ep.put_slice(send, 0, k, gather, me * n, n)?;
+                }
             }
-        }
-        ctx.sync(SYNC_DEFAULT)?;
-        self.read_back(ctx, self.gather_slot, 0, out)
+            Ok(())
+        })?;
+        ctx.read(gather, 0, out)
     }
 
     /// Gather to `root` only. One superstep, `h = (p−1)·len` at the root.
@@ -182,21 +172,26 @@ impl Coll {
         mine: &[T],
         out: &mut [T],
     ) -> Result<()> {
-        let len = std::mem::size_of_val(mine);
-        self.check_len(len)?;
-        let my_off = ctx.pid() as usize * len;
+        let n = mine.len();
+        self.check_len(std::mem::size_of_val(mine))?;
+        let (send, gather) = self.windows::<T>();
+        let me = ctx.pid() as usize;
         if ctx.pid() == root {
-            ctx.write_slot(self.gather_slot, my_off, pod_bytes(mine))?;
+            ctx.write(gather, me * n, mine)?;
         } else {
-            ctx.write_slot(self.send_slot, 0, pod_bytes(mine))?;
-            ctx.put(self.send_slot, 0, root, self.gather_slot, my_off, len, MSG_DEFAULT)?;
+            ctx.write(send, 0, mine)?;
         }
-        ctx.sync(SYNC_DEFAULT)?;
+        ctx.superstep(|ep| {
+            if ep.pid() != root {
+                ep.put_slice(send, 0, root, gather, me * n, n)?;
+            }
+            Ok(())
+        })?;
         if ctx.pid() == root {
-            if out.len() != mine.len() * ctx.p() as usize {
+            if out.len() != n * ctx.p() as usize {
                 return Err(LpfError::Illegal("gather out must be p×len at root".into()));
             }
-            self.read_back(ctx, self.gather_slot, 0, out)?;
+            ctx.read(gather, 0, out)?;
         }
         Ok(())
     }
@@ -210,68 +205,58 @@ impl Coll {
         data: &[T],
         out: &mut [T],
     ) -> Result<()> {
-        let len = std::mem::size_of_val(out);
-        self.check_len(len)?;
+        let n = out.len();
+        self.check_len(std::mem::size_of_val(out))?;
+        let (send, gather) = self.windows::<T>();
         if ctx.pid() == root {
-            if data.len() != out.len() * ctx.p() as usize {
+            if data.len() != n * ctx.p() as usize {
                 return Err(LpfError::Illegal("scatter data must be p×len at root".into()));
             }
-            ctx.write_slot(self.gather_slot, 0, pod_bytes(data))?;
-            for k in 0..ctx.p() {
-                if k != root {
-                    ctx.put(
-                        self.gather_slot,
-                        k as usize * len,
-                        k,
-                        self.send_slot,
-                        0,
-                        len,
-                        MSG_DEFAULT,
-                    )?;
+            ctx.write(gather, 0, data)?;
+        }
+        ctx.superstep(|ep| {
+            if ep.pid() == root {
+                for k in 0..ep.p() {
+                    if k != root {
+                        ep.put_slice(gather, k as usize * n, k, send, 0, n)?;
+                    }
                 }
             }
-        }
-        ctx.sync(SYNC_DEFAULT)?;
+            Ok(())
+        })?;
         if ctx.pid() == root {
-            self.read_back(ctx, self.gather_slot, root as usize * len, out)?;
+            ctx.read(gather, root as usize * n, out)?;
         } else {
-            self.read_back(ctx, self.send_slot, 0, out)?;
+            ctx.read(send, 0, out)?;
         }
         Ok(())
     }
 
     /// All-to-all: block `k` of `send` goes to process `k`; `recv[k]`
     /// receives process `k`'s block for me. One superstep, `h = (p−1)·len`.
-    pub fn alltoall<T: Pod>(&self, ctx: &mut Context, send: &[T], recv: &mut [T]) -> Result<()> {
+    pub fn alltoall<T: Pod>(&self, ctx: &mut Context, send_data: &[T], recv: &mut [T]) -> Result<()> {
         let p = ctx.p() as usize;
-        if send.len() != recv.len() || send.len() % p != 0 {
+        if send_data.len() != recv.len() || send_data.len() % p != 0 {
             return Err(LpfError::Illegal("alltoall buffers must be p×block".into()));
         }
-        let block = std::mem::size_of_val(send) / p;
-        self.check_len(block * p)?;
-        ctx.write_slot(self.send_slot, 0, pod_bytes(send))?;
+        let block = send_data.len() / p;
+        self.check_len(std::mem::size_of_val(send_data))?;
+        let (send, gather) = self.windows::<T>();
         let me = ctx.pid() as usize;
-        for k in 0..p {
-            if k == me {
-                continue;
+        ctx.write(send, 0, send_data)?;
+        ctx.superstep(|ep| {
+            for k in 0..p {
+                if k == me {
+                    continue;
+                }
+                ep.put_slice(send, k * block, k as u32, gather, me * block, block)?;
             }
-            ctx.put(
-                self.send_slot,
-                k * block,
-                k as u32,
-                self.gather_slot,
-                me * block,
-                block,
-                MSG_DEFAULT,
-            )?;
-        }
-        ctx.sync(SYNC_DEFAULT)?;
-        // self block
-        ctx.with_slot(self.send_slot, |_| ())?;
-        let mut self_block = vec![0u8; block];
-        ctx.read_slot(self.send_slot, me * block, &mut self_block)?;
-        ctx.write_slot(self.gather_slot, me * block, &self_block)?;
-        self.read_back(ctx, self.gather_slot, 0, recv)
+            Ok(())
+        })?;
+        // everyone else's block landed in gather; my own stays in send
+        ctx.read(gather, 0, recv)?;
+        ctx.read(send, me * block, &mut recv[me * block..(me + 1) * block])?;
+        Ok(())
     }
 
     /// Reduce every process's `mine` with `op` into `root`'s `out`.
@@ -344,7 +329,7 @@ impl Coll {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::Args;
+    use crate::core::{Args, SYNC_DEFAULT};
     use crate::ctx::{exec, Platform, Root};
 
     fn with_coll(p: u32, max_bytes: usize, f: impl Fn(&mut Context, &Coll) + Sync) {
@@ -353,9 +338,7 @@ mod tests {
             &root,
             p,
             move |ctx, _| {
-                ctx.resize_memory_register(8).unwrap();
-                ctx.resize_message_queue(4 * ctx.p() as usize).unwrap();
-                ctx.sync(SYNC_DEFAULT).unwrap();
+                ctx.bootstrap(8, 4 * ctx.p() as usize).unwrap();
                 let coll = Coll::new(ctx, max_bytes).unwrap();
                 ctx.sync(SYNC_DEFAULT).unwrap();
                 f(ctx, &coll);

@@ -8,41 +8,56 @@
 //! to *remote* errors, at the latest when attempting to communicate with an
 //! aborted LPF process.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors returned by LPF primitives.
 ///
 /// Mitigable errors (`OutOfMemory`, `SlotCapacity`, `QueueCapacity`) are
 /// guaranteed to leave the context unchanged: the offending operation is not
 /// partially applied and the program may retry after raising capacities.
-#[derive(Debug, Clone, PartialEq, Eq, Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LpfError {
     /// Heap memory for buffers could not be reserved. Mitigable.
-    #[error("out of memory: {0}")]
     OutOfMemory(String),
     /// The memory-slot register is full; raise it with
     /// [`resize_memory_register`](crate::ctx::Context::resize_memory_register).
     /// Mitigable, no side effects.
-    #[error("memory register full: capacity {capacity}, in use {in_use}")]
     SlotCapacity { capacity: usize, in_use: usize },
     /// The message queue is full; raise it with
     /// [`resize_message_queue`](crate::ctx::Context::resize_message_queue).
     /// Mitigable, no side effects.
-    #[error("message queue full: capacity {capacity} messages")]
     QueueCapacity { capacity: usize },
     /// An argument violated a documented precondition (e.g. out-of-range
     /// offset, unknown slot, write overlapping a read). These indicate
     /// program bugs; LPF detects what it can cheaply and in checked builds.
-    #[error("illegal argument: {0}")]
     Illegal(String),
     /// A peer process aborted; the context is unusable. Fatal. Observed only
     /// by `sync`, `exec`, `hook`, and `rehook`, as the paper prescribes.
-    #[error("fatal: peer {pid} aborted the context")]
     PeerAborted { pid: u32 },
     /// Unrecoverable internal failure (transport torn down, poisoned state).
-    #[error("fatal: {0}")]
     Fatal(String),
 }
+
+impl fmt::Display for LpfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LpfError::OutOfMemory(what) => write!(f, "out of memory: {what}"),
+            LpfError::SlotCapacity { capacity, in_use } => {
+                write!(f, "memory register full: capacity {capacity}, in use {in_use}")
+            }
+            LpfError::QueueCapacity { capacity } => {
+                write!(f, "message queue full: capacity {capacity} messages")
+            }
+            LpfError::Illegal(what) => write!(f, "illegal argument: {what}"),
+            LpfError::PeerAborted { pid } => {
+                write!(f, "fatal: peer {pid} aborted the context")
+            }
+            LpfError::Fatal(what) => write!(f, "fatal: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for LpfError {}
 
 impl LpfError {
     /// True for errors the paper classifies as user-mitigable: the call had

@@ -1,19 +1,27 @@
 //! Contexts and the twelve LPF primitives (paper §2, Fig. 1).
 //!
-//! | paper                        | here                                   |
-//! |------------------------------|----------------------------------------|
-//! | `lpf_exec`                   | [`exec`]                               |
-//! | `lpf_hook`                   | [`hook`] + [`Init`]                    |
-//! | `lpf_rehook`                 | [`Context::rehook`]                    |
-//! | `lpf_register_local`         | [`Context::register_local`]            |
-//! | `lpf_register_global`        | [`Context::register_global`]           |
-//! | `lpf_deregister`             | [`Context::deregister`]                |
-//! | `lpf_put`                    | [`Context::put`]                       |
-//! | `lpf_get`                    | [`Context::get`]                       |
-//! | `lpf_sync`                   | [`Context::sync`]                      |
-//! | `lpf_probe`                  | [`Context::probe`]                     |
-//! | `lpf_resize_memory_register` | [`Context::resize_memory_register`]    |
-//! | `lpf_resize_message_queue`   | [`Context::resize_message_queue`]      |
+//! The middle column is the raw, byte-addressed port of the C API; the
+//! right column is its typed API-v2 equivalent (see [`crate::typed`]),
+//! layered on the raw primitives without changing their semantics.
+//!
+//! | paper                        | raw (v1)                            | typed (v2)                       |
+//! |------------------------------|-------------------------------------|----------------------------------|
+//! | `lpf_exec`                   | [`exec`]                            | —                                |
+//! | `lpf_hook`                   | [`hook`] + [`Init`]                 | —                                |
+//! | `lpf_rehook`                 | [`Context::rehook`]                 | —                                |
+//! | `lpf_register_local`         | [`Context::register_local`]         | [`Context::alloc_local`]         |
+//! | `lpf_register_global`        | [`Context::register_global`]        | [`Context::alloc_global`]        |
+//! | `lpf_deregister`             | [`Context::deregister`]             | [`Context::dealloc`]             |
+//! | `lpf_put`                    | [`Context::put`]                    | [`Epoch::put_slice`]             |
+//! | `lpf_get`                    | [`Context::get`]                    | [`Epoch::get_slice`]             |
+//! | `lpf_sync`                   | [`Context::sync`]                   | [`Context::superstep`] (on exit) |
+//! | `lpf_probe`                  | [`Context::probe`]                  | [`Epoch::probe`]                 |
+//! | `lpf_resize_memory_register` | [`Context::resize_memory_register`] | [`Context::bootstrap`]           |
+//! | `lpf_resize_message_queue`   | [`Context::resize_message_queue`]   | [`Context::bootstrap`]           |
+//!
+//! Slot access helpers: raw [`Context::read_slot`] / [`Context::write_slot`]
+//! (bytes) correspond to typed [`Context::read`] / [`Context::write`] /
+//! [`Context::read_vec`] (elements of any [`Pod`] type on a [`TypedSlot`]).
 //!
 //! SPMD functions are Rust closures `Fn(&mut Context, Args) -> O`; `exec`
 //! spawns new processes (threads), `hook` enters a context from *existing*
@@ -26,6 +34,8 @@ mod platform;
 
 pub use init::{hook, Init};
 pub use platform::Platform;
+
+pub use crate::typed::{Epoch, TypedSlot};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
@@ -190,9 +200,27 @@ impl Context {
 
     // ---------------------------------------------------------- communication
 
+    /// Validate that `[off, off+len)` fits this process's `slot` — the O(1)
+    /// enqueue-time check for the *local* side of a `put`/`get`. The remote
+    /// side is validated by the destination during `sync` (remote global
+    /// slots may have different lengths per process; only the registration
+    /// order is required to align).
+    fn check_local_range(&self, what: &str, slot: Memslot, off: usize, len: usize) -> Result<()> {
+        let avail = self.group.fabric.register_of(self.pid).len_of(slot)?;
+        match off.checked_add(len) {
+            Some(end) if end <= avail => Ok(()),
+            _ => Err(LpfError::Illegal(format!(
+                "{what} range [{off}, {off}+{len}) exceeds local slot of {avail} B"
+            ))),
+        }
+    }
+
     /// `lpf_put`: O(1), touches no payload; copy `len` bytes from local
     /// `(src_slot, src_off)` to `(dst_pid, dst_slot, dst_off)`. Completed
-    /// only by the next `sync`.
+    /// only by the next `sync`. The local source range is validated here,
+    /// at enqueue time — an out-of-bounds source fails fast with
+    /// [`LpfError::Illegal`] and queues nothing, instead of surfacing as a
+    /// confusing failure inside the next `sync`.
     pub fn put(
         &mut self,
         src_slot: Memslot,
@@ -206,11 +234,14 @@ impl Context {
         if dst_pid >= self.p {
             return Err(LpfError::Illegal(format!("dst pid {dst_pid} out of range {}", self.p)));
         }
+        self.check_local_range("put source", src_slot, src_off, len)?;
         self.queue.push_put(PutReq { src_slot, src_off, dst_pid, dst_slot, dst_off, len, attr })
     }
 
     /// `lpf_get`: O(1), touches no payload; copy `len` bytes from
     /// `(src_pid, src_slot, src_off)` into local `(dst_slot, dst_off)`.
+    /// The local destination range is validated here, at enqueue time (see
+    /// [`put`](Context::put)).
     pub fn get(
         &mut self,
         src_pid: Pid,
@@ -224,6 +255,7 @@ impl Context {
         if src_pid >= self.p {
             return Err(LpfError::Illegal(format!("src pid {src_pid} out of range {}", self.p)));
         }
+        self.check_local_range("get destination", dst_slot, dst_off, len)?;
         self.queue.push_get(GetReq { src_pid, src_slot, src_off, dst_slot, dst_off, len, attr })
     }
 

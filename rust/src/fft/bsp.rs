@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use super::local;
 use super::plan::FftPlan;
-use crate::bsplib::{Bsp, BspReg};
+use crate::bsplib::{Bsp, TypedReg};
 use crate::core::{LpfError, Result};
 use crate::runtime::{Runtime, Tensor};
 
@@ -62,9 +62,10 @@ pub struct BspFft {
     /// (skips per-run conversion of perm + 2 twiddle tables — §Perf).
     fused_key: Option<String>,
     /// Registered communication windows (src row, dst matrix), reused
-    /// across runs: `[re | im]` planes of `m` f32 each.
-    src_reg: BspReg,
-    dst_reg: BspReg,
+    /// across runs: `[re | im]` planes of `m` f32 each — element-indexed
+    /// typed registrations, so no byte offsets appear below.
+    src_reg: TypedReg<f32>,
+    dst_reg: TypedReg<f32>,
 }
 
 impl BspFft {
@@ -83,8 +84,8 @@ impl BspFft {
         let plan_local = FftPlan::new(m)?;
         let plan_p = if p >= 2 { Some(FftPlan::new(p as usize)?) } else { None };
         let (tw_re, tw_im) = plan_local.bsp_twiddles(r, p);
-        let src_reg = bsp.push_reg(8 * m)?;
-        let dst_reg = bsp.push_reg(8 * m)?;
+        let src_reg = bsp.push_reg_of::<f32>(2 * m)?;
+        let dst_reg = bsp.push_reg_of::<f32>(2 * m)?;
         // bind the static tables server-side when the fused artifact exists
         let fused_key = match &backend {
             Backend::Artifacts(rt) if rt.manifest().get(&format!("fft_tw_local_{m}")).is_some() => {
@@ -245,28 +246,28 @@ impl BspFft {
             }
         };
         // stage into the registered source window: [re | im]
-        bsp.write_local(self.src_reg, 0, &re2)?;
-        bsp.write_local(self.src_reg, 4 * self.m, &im2)?;
+        bsp.write_local_at(self.src_reg, 0, &re2)?;
+        bsp.write_local_at(self.src_reg, self.m, &im2)?;
         // step 3: redistribute — block r′ → process r′, landing at row r
         for dst in 0..self.p {
-            let src_off = dst as usize * blk * 4;
-            let dst_off = self.r as usize * blk * 4;
-            bsp.hpput(dst, self.src_reg, src_off, self.dst_reg, dst_off, blk * 4)?;
-            bsp.hpput(
+            let src_elem = dst as usize * blk;
+            let dst_elem = self.r as usize * blk;
+            bsp.hpput_at(dst, self.src_reg, src_elem, self.dst_reg, dst_elem, blk)?;
+            bsp.hpput_at(
                 dst,
                 self.src_reg,
-                4 * self.m + src_off,
+                self.m + src_elem,
                 self.dst_reg,
-                4 * self.m + dst_off,
-                blk * 4,
+                self.m + dst_elem,
+                blk,
             )?;
         }
         bsp.sync()?;
         // gather [p][blk] rows, transpose to [blk][p]
         let mut rows_re = vec![0f32; self.m];
         let mut rows_im = vec![0f32; self.m];
-        bsp.read_local(self.dst_reg, 0, &mut rows_re)?;
-        bsp.read_local(self.dst_reg, 4 * self.m, &mut rows_im)?;
+        bsp.read_local_at(self.dst_reg, 0, &mut rows_re)?;
+        bsp.read_local_at(self.dst_reg, self.m, &mut rows_im)?;
         let mut t_re = vec![0f32; self.m];
         let mut t_im = vec![0f32; self.m];
         for j1 in 0..p {

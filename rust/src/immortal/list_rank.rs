@@ -10,7 +10,7 @@
 //! (`NIL` terminates). Output: each node's distance to the end of the
 //! list.
 
-use crate::core::{Result, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::core::{Result, SYNC_DEFAULT};
 use crate::ctx::Context;
 
 /// Terminator marker in successor arrays.
@@ -29,36 +29,38 @@ pub fn list_rank(ctx: &mut Context, n: usize, succ_local: &[u64]) -> Result<Vec<
     let me = ctx.pid() as usize;
     debug_assert!(succ_local.len() <= b);
 
-    // registered state: successor and rank arrays, plus fetch buffers
-    let succ_slot = ctx.register_global(8 * b)?;
-    let rank_slot = ctx.register_global(8 * b)?;
-    let fetch_succ = ctx.register_local(8 * b)?;
-    let fetch_rank = ctx.register_local(8 * b)?;
+    // registered state: successor and rank arrays, plus fetch buffers —
+    // typed u64 slots; every offset below is a node index, never a byte
+    let succ_slot = ctx.alloc_global::<u64>(b)?;
+    let rank_slot = ctx.alloc_global::<u64>(b)?;
+    let fetch_succ = ctx.alloc_local::<u64>(b)?;
+    let fetch_rank = ctx.alloc_local::<u64>(b)?;
     ctx.sync(SYNC_DEFAULT)?;
 
     let mut succ = vec![NIL; b];
     succ[..succ_local.len()].copy_from_slice(succ_local);
     let mut rank: Vec<u64> = succ.iter().map(|&s| u64::from(s != NIL)).collect();
-    ctx.write_typed(succ_slot, 0, &succ)?;
-    ctx.write_typed(rank_slot, 0, &rank)?;
+    ctx.write(succ_slot, 0, &succ)?;
+    ctx.write(rank_slot, 0, &rank)?;
     ctx.sync(SYNC_DEFAULT)?; // all state published
 
     let rounds = if n <= 1 { 0 } else { 64 - (n as u64 - 1).leading_zeros() };
     for _ in 0..rounds {
-        // fetch succ[succ[i]] and rank[succ[i]] for every live node
-        for i in 0..b {
-            if succ[i] != NIL {
-                let owner = (succ[i] as usize / b) as u32;
-                let off = 8 * (succ[i] as usize % b);
-                ctx.get(owner, succ_slot, off, fetch_succ, 8 * i, 8, MSG_DEFAULT)?;
-                ctx.get(owner, rank_slot, off, fetch_rank, 8 * i, 8, MSG_DEFAULT)?;
+        // one epoch: fetch succ[succ[i]] and rank[succ[i]] for every live
+        // node, completed by the fence on closure exit
+        ctx.superstep(|ep| {
+            for i in 0..b {
+                if succ[i] != NIL {
+                    let owner = (succ[i] as usize / b) as u32;
+                    let idx = succ[i] as usize % b;
+                    ep.get_slice(owner, succ_slot, idx, fetch_succ, i, 1)?;
+                    ep.get_slice(owner, rank_slot, idx, fetch_rank, i, 1)?;
+                }
             }
-        }
-        ctx.sync(SYNC_DEFAULT)?;
-        let mut got_succ = vec![NIL; b];
-        let mut got_rank = vec![0u64; b];
-        ctx.read_typed(fetch_succ, 0, &mut got_succ)?;
-        ctx.read_typed(fetch_rank, 0, &mut got_rank)?;
+            Ok(())
+        })?;
+        let got_succ = ctx.read_vec(fetch_succ)?;
+        let got_rank = ctx.read_vec(fetch_rank)?;
         for i in 0..b {
             if succ[i] != NIL {
                 rank[i] += got_rank[i];
@@ -67,17 +69,17 @@ pub fn list_rank(ctx: &mut Context, n: usize, succ_local: &[u64]) -> Result<Vec<
         }
         // publish the jumped state for the next round; writes must not
         // overlap this round's reads, so publish into the *next* epoch by
-        // rewriting our own slots locally after the sync (local writes,
-        // then a sync so peers observe them)
-        ctx.write_typed(succ_slot, 0, &succ)?;
-        ctx.write_typed(rank_slot, 0, &rank)?;
+        // rewriting our own slots locally after the fence (local writes,
+        // then a fence so peers observe them)
+        ctx.write(succ_slot, 0, &succ)?;
+        ctx.write(rank_slot, 0, &rank)?;
         ctx.sync(SYNC_DEFAULT)?;
     }
 
-    ctx.deregister(succ_slot)?;
-    ctx.deregister(rank_slot)?;
-    ctx.deregister(fetch_succ)?;
-    ctx.deregister(fetch_rank)?;
+    ctx.dealloc(succ_slot)?;
+    ctx.dealloc(rank_slot)?;
+    ctx.dealloc(fetch_succ)?;
+    ctx.dealloc(fetch_rank)?;
     Ok(rank[..succ_local.len()].to_vec())
 }
 

@@ -8,7 +8,7 @@
 //! `p` samples per process).
 
 use crate::collectives::Coll;
-use crate::core::{LpfError, Result, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::core::{LpfError, Result, SYNC_DEFAULT};
 use crate::ctx::Context;
 
 /// Sort the union of every process's `mine` slice; returns this process's
@@ -58,11 +58,10 @@ pub fn sample_sort(ctx: &mut Context, mine: &[u64]) -> Result<Vec<u64>> {
     incoming_sizes.copy_from_slice(&recv);
     let total_in: usize = incoming_sizes.iter().map(|&s| s as usize).sum();
 
-    // ---- superstep 3: the data total-exchange
-    let out_bytes: usize = 8 * local.len().max(1);
-    let in_bytes: usize = 8 * total_in.max(1);
-    let send_slot = ctx.register_local(out_bytes)?;
-    let recv_slot = ctx.register_global(in_bytes)?;
+    // ---- superstep 3: the data total-exchange (typed slots, element
+    // offsets — no byte arithmetic)
+    let send_slot = ctx.alloc_local::<u64>(local.len().max(1))?;
+    let recv_slot = ctx.alloc_global::<u64>(total_in.max(1))?;
     ctx.sync(SYNC_DEFAULT)?; // activate registration collectively
     // pack parts contiguously; put each part at the receiver's offset,
     // which is the prefix sum of what the receiver hears from pids < me.
@@ -71,32 +70,32 @@ pub fn sample_sort(ctx: &mut Context, mine: &[u64]) -> Result<Vec<u64>> {
     // receiver — allgather the full size matrix row we produced:
     let mut size_matrix = vec![0u64; p * p]; // [sender][receiver]
     coll.allgather(ctx, &sizes, &mut size_matrix)?;
-    let mut flat: Vec<u64> = Vec::with_capacity(local.len());
-    let mut my_off = 0usize;
-    for (dst, part) in parts.iter().enumerate() {
-        if !part.is_empty() {
-            ctx.write_typed(send_slot, my_off, part)?;
-            // offset at dst: Σ over senders < me of size_matrix[s][dst]
-            let dst_off: u64 = (0..me).map(|s| size_matrix[s * p + dst]).sum();
-            ctx.put(
-                send_slot,
-                8 * my_off,
-                dst as u32,
-                recv_slot,
-                8 * dst_off as usize,
-                8 * part.len(),
-                MSG_DEFAULT,
-            )?;
-            my_off += part.len();
+    let flat: Vec<u64> = parts.iter().flatten().copied().collect();
+    ctx.write(send_slot, 0, &flat)?;
+    ctx.superstep(|ep| {
+        let mut my_off = 0usize;
+        for (dst, part) in parts.iter().enumerate() {
+            if !part.is_empty() {
+                // offset at dst: Σ over senders < me of size_matrix[s][dst]
+                let dst_off: u64 = (0..me).map(|s| size_matrix[s * p + dst]).sum();
+                ep.put_slice(
+                    send_slot,
+                    my_off,
+                    dst as u32,
+                    recv_slot,
+                    dst_off as usize,
+                    part.len(),
+                )?;
+                my_off += part.len();
+            }
         }
-        flat.extend(part);
-    }
-    ctx.sync(SYNC_DEFAULT)?;
+        Ok(())
+    })?;
     let mut received = vec![0u64; total_in];
-    ctx.read_typed(recv_slot, 0, &mut received)?;
+    ctx.read(recv_slot, 0, &mut received)?;
     received.sort_unstable(); // merge of p sorted runs; sort is simplest
-    ctx.deregister(send_slot)?;
-    ctx.deregister(recv_slot)?;
+    ctx.dealloc(send_slot)?;
+    ctx.dealloc(recv_slot)?;
     coll.free(ctx)?;
     ctx.sync(SYNC_DEFAULT)?;
     Ok(received)

@@ -6,7 +6,8 @@
 //! EXPERIMENTS.md for the paper-vs-measured record.
 //!
 //! The crate exposes the paper's twelve primitives on the [`ctx::Context`]
-//! type, four fabrics ([`fabric`]), a collectives library ([`collectives`]),
+//! type, the typed superstep-epoch API v2 layered on them ([`typed`]),
+//! four fabrics ([`fabric`]), a collectives library ([`collectives`]),
 //! a BSPlib compatibility layer ([`bsplib`]), and the two evaluation
 //! applications (FFT, PageRank) plus the sparksim Big-Data substrate.
 
@@ -29,6 +30,7 @@ pub mod queue;
 pub mod runtime;
 pub mod sparksim;
 pub mod sync;
+pub mod typed;
 pub mod util;
 
 pub use crate::core::{
@@ -36,3 +38,4 @@ pub use crate::core::{
     SYNC_DEFAULT,
 };
 pub use crate::ctx::{exec, hook, Context, Init, Platform, Root};
+pub use crate::typed::{Epoch, TypedSlot};

@@ -215,16 +215,28 @@ impl Register {
         }
     }
 
-    /// Resolve a slot to its storage. O(1).
-    pub fn resolve(&self, slot: Memslot) -> Result<Arc<SlotStorage>> {
+    /// Live entry for a slot handle (generation-checked). O(1).
+    fn entry_of(&self, slot: Memslot) -> Result<&Entry> {
         let table = match slot.kind {
             SlotKind::Local => &self.local,
             SlotKind::Global => &self.global,
         };
         match table.get(slot.index as usize) {
-            Some(Some(entry)) if entry.gen == slot.gen => Ok(entry.storage.clone()),
+            Some(Some(entry)) if entry.gen == slot.gen => Ok(entry),
             _ => Err(LpfError::Illegal(format!("unknown slot {slot:?}"))),
         }
+    }
+
+    /// Resolve a slot to its storage. O(1).
+    pub fn resolve(&self, slot: Memslot) -> Result<Arc<SlotStorage>> {
+        Ok(self.entry_of(slot)?.storage.clone())
+    }
+
+    /// Byte length of a slot, without cloning its storage `Arc` — the
+    /// enqueue-time validation path reads only the length, and `put`/`get`
+    /// are the hot path (O(1), no refcount traffic). O(1).
+    pub fn len_of(&self, slot: Memslot) -> Result<usize> {
+        Ok(self.entry_of(slot)?.storage.len())
     }
 }
 
@@ -261,6 +273,11 @@ impl SharedRegister {
     /// Convenience: resolve a slot.
     pub fn resolve(&self, slot: Memslot) -> Result<Arc<SlotStorage>> {
         self.with(|r| r.resolve(slot))
+    }
+
+    /// Convenience: a slot's byte length (no `Arc` clone).
+    pub fn len_of(&self, slot: Memslot) -> Result<usize> {
+        self.with(|r| r.len_of(slot))
     }
 }
 

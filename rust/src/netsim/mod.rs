@@ -16,7 +16,7 @@ pub mod matching;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crossbeam_utils::CachePadded;
+use crate::util::CachePadded;
 
 /// How a transport completes two-party data movement.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -5,9 +5,17 @@
 //! artifact **once** on a PJRT CPU client, and exposes typed execution. No
 //! Python anywhere near the request path.
 //!
-//! Two implementation notes:
-//! * The `xla` crate pins xla_extension 0.5.1, hence HLO *text* interchange
-//!   (64-bit-id protos are rejected; the text parser reassigns ids).
+//! The PJRT-backed execution path needs the `xla` crate (pinning
+//! xla_extension 0.5.1), which the offline build container does not carry;
+//! it is therefore gated behind the off-by-default `xla` cargo feature.
+//! Without it, [`Runtime::open`] reports that artifacts are unavailable and
+//! every consumer falls back to its native Rust compute path (the
+//! `Backend::Native` / `Compute::Native` ablation arms) — the LPF
+//! communication layer is identical in both.
+//!
+//! Two implementation notes for the `xla` path:
+//! * xla_extension 0.5.1 means HLO *text* interchange (64-bit-id protos are
+//!   rejected; the text parser reassigns ids).
 //! * The crate's `PjRtClient`/`PjRtLoadedExecutable` wrappers are `!Send`
 //!   (internal `Rc`), while LPF processes are threads. The runtime
 //!   therefore owns a dedicated **service thread** holding all PJRT state;
@@ -19,10 +27,8 @@ mod manifest;
 
 pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
 
 use crate::core::{LpfError, Result};
 
@@ -64,168 +70,198 @@ impl Tensor {
     }
 }
 
-fn xla_err(e: impl std::fmt::Display) -> LpfError {
-    LpfError::Fatal(format!("xla: {e}"))
-}
-
-enum Cmd {
-    /// Execute `name` with dynamic inputs, merging binding `key` (if any).
-    Run { name: String, key: Option<String>, inputs: Vec<Tensor>, reply: Sender<Result<Vec<Tensor>>> },
-    /// Pre-convert static inputs for `(name, key)` to device literals once.
-    Bind { name: String, key: String, inputs: Vec<(usize, Tensor)>, reply: Sender<Result<()>> },
-}
-
 /// The artifact store: manifest + a service thread owning compiled
-/// executables.
+/// executables (with the `xla` feature; a manifest-only stub without).
 pub struct Runtime {
     manifest: Manifest,
-    tx: Mutex<Sender<Cmd>>,
+    #[cfg(feature = "xla")]
+    tx: std::sync::Mutex<std::sync::mpsc::Sender<pjrt::Cmd>>,
 }
 
-/// Service-thread state (everything `!Send` lives here).
-struct Service {
-    dir: PathBuf,
-    manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: HashMap<String, (ArtifactSpec, xla::PjRtLoadedExecutable)>,
-    /// (artifact, binding key) → pre-converted literals by input index.
-    /// Bound inputs skip the per-call Tensor→Literal conversion — the
-    /// dominant cost for large static tables (FFT permutations/twiddles,
-    /// SpMV structure). See EXPERIMENTS.md §Perf.
-    bindings: HashMap<(String, String), HashMap<usize, xla::Literal>>,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::mpsc::Sender;
 
-fn tensor_to_literal(t: &Tensor, s: &TensorSpec, name: &str) -> Result<xla::Literal> {
-    if t.len() != s.elems() {
-        return Err(LpfError::Illegal(format!(
-            "{name}: input has {} elems, spec {s} wants {}",
-            t.len(),
-            s.elems()
-        )));
-    }
-    let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
-    match (t, s.dtype) {
-        (Tensor::F32(v), DType::F32) => xla::Literal::vec1(v).reshape(&dims).map_err(xla_err),
-        (Tensor::I32(v), DType::I32) => xla::Literal::vec1(v).reshape(&dims).map_err(xla_err),
-        _ => Err(LpfError::Illegal(format!("{name}: dtype mismatch vs {s}"))),
-    }
-}
+    use super::{ArtifactSpec, DType, Manifest, Tensor, TensorSpec};
+    use crate::core::{LpfError, Result};
 
-impl Service {
-    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
-        if !self.cache.contains_key(name) {
-            let spec = self
-                .manifest
-                .get(name)
-                .ok_or_else(|| LpfError::Illegal(format!("no artifact named {name}")))?
-                .clone();
-            let path = self.dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| LpfError::Fatal("non-utf8 path".into()))?,
-            )
-            .map_err(xla_err)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).map_err(xla_err)?;
-            self.cache.insert(name.to_string(), (spec, exe));
-        }
-        Ok(())
+    pub(super) fn xla_err(e: impl std::fmt::Display) -> LpfError {
+        LpfError::Fatal(format!("xla: {e}"))
     }
 
-    fn bind_one(&mut self, name: &str, key: &str, inputs: Vec<(usize, Tensor)>) -> Result<()> {
-        self.ensure_compiled(name)?;
-        let spec = self.cache[name].0.clone();
-        let mut map = HashMap::new();
-        for (idx, t) in inputs {
-            let s = spec.inputs.get(idx).ok_or_else(|| {
-                LpfError::Illegal(format!("{name}: bind index {idx} out of range"))
-            })?;
-            map.insert(idx, tensor_to_literal(&t, s, name)?);
-        }
-        self.bindings.insert((name.to_string(), key.to_string()), map);
-        Ok(())
+    pub(super) enum Cmd {
+        /// Execute `name` with dynamic inputs, merging binding `key` (if any).
+        Run {
+            name: String,
+            key: Option<String>,
+            inputs: Vec<Tensor>,
+            reply: Sender<Result<Vec<Tensor>>>,
+        },
+        /// Pre-convert static inputs for `(name, key)` to device literals once.
+        Bind { name: String, key: String, inputs: Vec<(usize, Tensor)>, reply: Sender<Result<()>> },
     }
 
-    fn run_one(&mut self, name: &str, key: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.ensure_compiled(name)?;
-        let (spec, _) = &self.cache[name];
-        let spec = spec.clone();
-        let empty: HashMap<usize, xla::Literal> = HashMap::new();
-        let bound = match key {
-            Some(k) => self
-                .bindings
-                .get(&(name.to_string(), k.to_string()))
-                .ok_or_else(|| LpfError::Illegal(format!("{name}: no binding {k:?}")))?,
-            None => &empty,
-        };
-        let dynamic_count = spec.inputs.len() - bound.len();
-        if inputs.len() != dynamic_count {
+    /// Service-thread state (everything `!Send` lives here).
+    pub(super) struct Service {
+        pub(super) dir: PathBuf,
+        pub(super) manifest: Manifest,
+        pub(super) client: xla::PjRtClient,
+        pub(super) cache: HashMap<String, (ArtifactSpec, xla::PjRtLoadedExecutable)>,
+        /// (artifact, binding key) → pre-converted literals by input index.
+        /// Bound inputs skip the per-call Tensor→Literal conversion — the
+        /// dominant cost for large static tables (FFT permutations/twiddles,
+        /// SpMV structure). See EXPERIMENTS.md §Perf.
+        pub(super) bindings: HashMap<(String, String), HashMap<usize, xla::Literal>>,
+    }
+
+    fn tensor_to_literal(t: &Tensor, s: &TensorSpec, name: &str) -> Result<xla::Literal> {
+        if t.len() != s.elems() {
             return Err(LpfError::Illegal(format!(
-                "{name}: {} dynamic inputs given, {} expected ({} bound)",
-                inputs.len(),
-                dynamic_count,
-                bound.len()
+                "{name}: input has {} elems, spec {s} wants {}",
+                t.len(),
+                s.elems()
             )));
         }
-        let mut fresh: Vec<xla::Literal> = Vec::with_capacity(dynamic_count);
-        let mut it = inputs.iter();
-        for (i, s) in spec.inputs.iter().enumerate() {
-            if bound.contains_key(&i) {
-                continue;
+        let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+        match (t, s.dtype) {
+            (Tensor::F32(v), DType::F32) => xla::Literal::vec1(v).reshape(&dims).map_err(xla_err),
+            (Tensor::I32(v), DType::I32) => xla::Literal::vec1(v).reshape(&dims).map_err(xla_err),
+            _ => Err(LpfError::Illegal(format!("{name}: dtype mismatch vs {s}"))),
+        }
+    }
+
+    impl Service {
+        fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+            if !self.cache.contains_key(name) {
+                let spec = self
+                    .manifest
+                    .get(name)
+                    .ok_or_else(|| LpfError::Illegal(format!("no artifact named {name}")))?
+                    .clone();
+                let path = self.dir.join(&spec.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| LpfError::Fatal("non-utf8 path".into()))?,
+                )
+                .map_err(xla_err)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp).map_err(xla_err)?;
+                self.cache.insert(name.to_string(), (spec, exe));
             }
-            let t = it.next().expect("counted above");
-            fresh.push(tensor_to_literal(t, s, name)?);
+            Ok(())
         }
-        // interleave bound (borrowed) and fresh literals in spec order
-        let mut all: Vec<&xla::Literal> = Vec::with_capacity(spec.inputs.len());
-        let mut fi = 0usize;
-        for i in 0..spec.inputs.len() {
-            match bound.get(&i) {
-                Some(lit) => all.push(lit),
-                None => {
-                    all.push(&fresh[fi]);
-                    fi += 1;
-                }
+
+        pub(super) fn bind_one(
+            &mut self,
+            name: &str,
+            key: &str,
+            inputs: Vec<(usize, Tensor)>,
+        ) -> Result<()> {
+            self.ensure_compiled(name)?;
+            let spec = self.cache[name].0.clone();
+            let mut map = HashMap::new();
+            for (idx, t) in inputs {
+                let s = spec.inputs.get(idx).ok_or_else(|| {
+                    LpfError::Illegal(format!("{name}: bind index {idx} out of range"))
+                })?;
+                map.insert(idx, tensor_to_literal(&t, s, name)?);
             }
+            self.bindings.insert((name.to_string(), key.to_string()), map);
+            Ok(())
         }
-        let exe = &self.cache[name].1;
-        let mut result = exe.execute::<&xla::Literal>(&all).map_err(xla_err)?[0][0]
-            .to_literal_sync()
-            .map_err(xla_err)?;
-        // aot.py lowers with return_tuple=True: decompose the tuple.
-        let parts = result.decompose_tuple().map_err(xla_err)?;
-        if parts.len() != spec.outputs.len() {
-            return Err(LpfError::Fatal(format!(
-                "{name}: {} outputs returned, manifest says {}",
-                parts.len(),
-                spec.outputs.len()
-            )));
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, s) in parts.into_iter().zip(&spec.outputs) {
-            let t = match s.dtype {
-                DType::F32 => Tensor::F32(lit.to_vec::<f32>().map_err(xla_err)?),
-                DType::I32 => Tensor::I32(lit.to_vec::<i32>().map_err(xla_err)?),
+
+        pub(super) fn run_one(
+            &mut self,
+            name: &str,
+            key: Option<&str>,
+            inputs: &[Tensor],
+        ) -> Result<Vec<Tensor>> {
+            self.ensure_compiled(name)?;
+            let (spec, _) = &self.cache[name];
+            let spec = spec.clone();
+            let empty: HashMap<usize, xla::Literal> = HashMap::new();
+            let bound = match key {
+                Some(k) => self
+                    .bindings
+                    .get(&(name.to_string(), k.to_string()))
+                    .ok_or_else(|| LpfError::Illegal(format!("{name}: no binding {k:?}")))?,
+                None => &empty,
             };
-            if t.len() != s.elems() {
-                return Err(LpfError::Fatal(format!(
-                    "{name}: output elems {} != spec {s}",
-                    t.len()
+            let dynamic_count = spec.inputs.len() - bound.len();
+            if inputs.len() != dynamic_count {
+                return Err(LpfError::Illegal(format!(
+                    "{name}: {} dynamic inputs given, {} expected ({} bound)",
+                    inputs.len(),
+                    dynamic_count,
+                    bound.len()
                 )));
             }
-            out.push(t);
+            let mut fresh: Vec<xla::Literal> = Vec::with_capacity(dynamic_count);
+            let mut it = inputs.iter();
+            for (i, s) in spec.inputs.iter().enumerate() {
+                if bound.contains_key(&i) {
+                    continue;
+                }
+                let t = it.next().expect("counted above");
+                fresh.push(tensor_to_literal(t, s, name)?);
+            }
+            // interleave bound (borrowed) and fresh literals in spec order
+            let mut all: Vec<&xla::Literal> = Vec::with_capacity(spec.inputs.len());
+            let mut fi = 0usize;
+            for i in 0..spec.inputs.len() {
+                match bound.get(&i) {
+                    Some(lit) => all.push(lit),
+                    None => {
+                        all.push(&fresh[fi]);
+                        fi += 1;
+                    }
+                }
+            }
+            let exe = &self.cache[name].1;
+            let mut result = exe.execute::<&xla::Literal>(&all).map_err(xla_err)?[0][0]
+                .to_literal_sync()
+                .map_err(xla_err)?;
+            // aot.py lowers with return_tuple=True: decompose the tuple.
+            let parts = result.decompose_tuple().map_err(xla_err)?;
+            if parts.len() != spec.outputs.len() {
+                return Err(LpfError::Fatal(format!(
+                    "{name}: {} outputs returned, manifest says {}",
+                    parts.len(),
+                    spec.outputs.len()
+                )));
+            }
+            let mut out = Vec::with_capacity(parts.len());
+            for (lit, s) in parts.into_iter().zip(&spec.outputs) {
+                let t = match s.dtype {
+                    DType::F32 => Tensor::F32(lit.to_vec::<f32>().map_err(xla_err)?),
+                    DType::I32 => Tensor::I32(lit.to_vec::<i32>().map_err(xla_err)?),
+                };
+                if t.len() != s.elems() {
+                    return Err(LpfError::Fatal(format!(
+                        "{name}: output elems {} != spec {s}",
+                        t.len()
+                    )));
+                }
+                out.push(t);
+            }
+            Ok(out)
         }
-        Ok(out)
     }
 }
 
 impl Runtime {
     /// Open the artifact directory (reads `manifest.txt`) and start the
     /// PJRT service thread.
+    #[cfg(feature = "xla")]
     pub fn open(dir: impl AsRef<Path>) -> Result<Arc<Runtime>> {
+        use std::collections::HashMap;
+        use std::sync::mpsc::channel;
+
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir.join("manifest.txt"))?;
         let manifest_for_service = Manifest::load(&dir.join("manifest.txt"))?;
-        let (tx, rx) = channel::<Cmd>();
+        let (tx, rx) = channel::<pjrt::Cmd>();
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
         std::thread::Builder::new()
             .name("lpf-pjrt".into())
@@ -240,7 +276,7 @@ impl Runtime {
                         return;
                     }
                 };
-                let mut svc = Service {
+                let mut svc = pjrt::Service {
                     dir,
                     manifest: manifest_for_service,
                     client,
@@ -249,10 +285,10 @@ impl Runtime {
                 };
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
-                        Cmd::Run { name, key, inputs, reply } => {
+                        pjrt::Cmd::Run { name, key, inputs, reply } => {
                             let _ = reply.send(svc.run_one(&name, key.as_deref(), &inputs));
                         }
-                        Cmd::Bind { name, key, inputs, reply } => {
+                        pjrt::Cmd::Bind { name, key, inputs, reply } => {
                             let _ = reply.send(svc.bind_one(&name, &key, inputs));
                         }
                     }
@@ -263,7 +299,20 @@ impl Runtime {
             .recv()
             .map_err(|_| LpfError::Fatal("pjrt thread died during startup".into()))?
             .map_err(LpfError::Fatal)?;
-        Ok(Arc::new(Runtime { manifest, tx: Mutex::new(tx) }))
+        Ok(Arc::new(Runtime { manifest, tx: std::sync::Mutex::new(tx) }))
+    }
+
+    /// Without the `xla` feature there is no PJRT client to run artifacts
+    /// on: opening always fails (after checking the path), and callers take
+    /// their native compute path.
+    #[cfg(not(feature = "xla"))]
+    pub fn open(dir: impl AsRef<Path>) -> Result<Arc<Runtime>> {
+        let _ = Manifest::load(&dir.as_ref().join("manifest.txt"))?;
+        Err(LpfError::Fatal(
+            "lpf was built without the `xla` feature: PJRT artifacts cannot be executed \
+             (native compute fallback applies)"
+                .into(),
+        ))
     }
 
     /// Process-wide runtime rooted at `$LPF_ARTIFACTS` or `artifacts/`.
@@ -293,12 +342,13 @@ impl Runtime {
     /// subsequent [`run_bound`](Runtime::run_bound) calls skip their
     /// Tensor→Literal conversion — the hot-path optimisation for large
     /// constant tables (see EXPERIMENTS.md §Perf).
+    #[cfg(feature = "xla")]
     pub fn bind(&self, name: &str, key: &str, inputs: Vec<(usize, Tensor)>) -> Result<()> {
-        let (reply_tx, reply_rx) = channel();
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         self.tx
             .lock()
             .unwrap()
-            .send(Cmd::Bind {
+            .send(pjrt::Cmd::Bind {
                 name: name.to_string(),
                 key: key.to_string(),
                 inputs,
@@ -308,18 +358,26 @@ impl Runtime {
         reply_rx.recv().map_err(|_| LpfError::Fatal("pjrt service thread gone".into()))?
     }
 
+    /// See the `xla`-feature variant; unreachable without it (a `Runtime`
+    /// cannot be constructed), kept so callers typecheck either way.
+    #[cfg(not(feature = "xla"))]
+    pub fn bind(&self, _name: &str, _key: &str, _inputs: Vec<(usize, Tensor)>) -> Result<()> {
+        Err(LpfError::Fatal("built without the `xla` feature".into()))
+    }
+
     /// Execute with a binding: `inputs` supplies only the *unbound* inputs,
     /// in spec order.
     pub fn run_bound(&self, name: &str, key: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
         self.send_run(name, Some(key), inputs)
     }
 
+    #[cfg(feature = "xla")]
     fn send_run(&self, name: &str, key: Option<&str>, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
-        let (reply_tx, reply_rx) = channel();
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         self.tx
             .lock()
             .unwrap()
-            .send(Cmd::Run {
+            .send(pjrt::Cmd::Run {
                 name: name.to_string(),
                 key: key.map(|s| s.to_string()),
                 inputs,
@@ -327,6 +385,11 @@ impl Runtime {
             })
             .map_err(|_| LpfError::Fatal("pjrt service thread gone".into()))?;
         reply_rx.recv().map_err(|_| LpfError::Fatal("pjrt service thread gone".into()))?
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn send_run(&self, _name: &str, _key: Option<&str>, _inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        Err(LpfError::Fatal("built without the `xla` feature".into()))
     }
 
     /// Pre-compile a set of artifacts (hides compile latency from the

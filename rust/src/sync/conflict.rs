@@ -75,11 +75,13 @@ pub struct WriteSeg {
 /// giving the paper's `O(m + h)` bound).
 pub fn resolve_writes(descs: &[WriteDesc]) -> Vec<WriteSeg> {
     let mut order: Vec<usize> = (0..descs.len()).filter(|&i| descs[i].len > 0).collect();
-    // Sort by (slot, start offset); stable radix keeps equal starts in
-    // submission order.
-    radix_sort_by_key(&mut order, |&i| (descs[i].slot_key() << 40) | (descs[i].dst_off as u64));
-    // Note: dst_off < 2^40 assumed (1 TiB per slot); debug-checked:
-    debug_assert!(descs.iter().all(|d| d.dst_off < (1u64 << 40) as usize));
+    // Sort by (slot, start offset) as two stable radix passes — least
+    // significant key first. Packing both into one u64 would truncate the
+    // slot key (the kind bit lives at bit 32), letting a Local and a Global
+    // slot with equal low index bits interleave and split one slot's run,
+    // which would skip conflict resolution between its descriptors.
+    radix_sort_by_key(&mut order, |&i| descs[i].dst_off as u64);
+    radix_sort_by_key(&mut order, |&i| descs[i].slot_key());
 
     let mut segs: Vec<WriteSeg> = Vec::with_capacity(order.len());
     let mut active: Vec<usize> = Vec::new(); // descriptor indices, any order
@@ -401,6 +403,44 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn local_and_global_slots_with_same_index_do_not_interleave() {
+        // Regression: the old single-u64 sort key truncated the slot-kind
+        // bit, so a Local write whose offset fell between two overlapping
+        // Global writes split the Global run and skipped their resolution.
+        let mk = |kind: SlotKind, off: usize, len: usize, pid: Pid, seq: u32, tag: u32| WriteDesc {
+            slot_kind: kind,
+            slot_index: 0,
+            dst_off: off,
+            len,
+            src_pid: pid,
+            seq,
+            tag,
+        };
+        let d = vec![
+            mk(SlotKind::Global, 0, 32, 0, 0, 0),
+            mk(SlotKind::Local, 8, 4, 1, 0, 1),
+            mk(SlotKind::Global, 16, 4, 2, 0, 2),
+        ];
+        let segs = resolve_writes(&d);
+        for (a_i, a) in segs.iter().enumerate() {
+            for b in &segs[a_i + 1..] {
+                if d[a.desc].slot_kind == d[b.desc].slot_kind {
+                    assert!(
+                        a.dst_off + a.len <= b.dst_off || b.dst_off + b.len <= a.dst_off,
+                        "overlapping segments {a:?} / {b:?}"
+                    );
+                }
+            }
+        }
+        // the overlap [16,20) goes to the higher (pid, seq) writer
+        let winner = segs
+            .iter()
+            .find(|s| s.dst_off == 16 && d[s.desc].slot_kind == SlotKind::Global)
+            .unwrap();
+        assert_eq!(d[winner.desc].src_pid, 2);
     }
 
     #[test]

@@ -1,0 +1,456 @@
+//! API v2: typed slots and superstep epochs over the twelve primitives.
+//!
+//! The raw [`Context`](crate::ctx::Context) API is a faithful port of the
+//! paper's C interface: untyped [`Memslot`] handles, byte offsets, and
+//! seven-positional-argument `put`/`get`. Every layer above it (collectives,
+//! BSPlib, FFT, the immortal algorithms) used to re-derive `8 * i`-style
+//! offset arithmetic by hand. This module is the typed, epoch-safe layer
+//! those consumers now build on — the raw primitives stay public and
+//! unchanged for model compliance and BSPlib interop.
+//!
+//! Three pieces:
+//!
+//! * [`TypedSlot<T>`] — a [`Memslot`] that remembers its element type and
+//!   length. Allocated with [`Context::alloc_local`] /
+//!   [`Context::alloc_global`]; all accesses are element-indexed, so a call
+//!   site never multiplies by `size_of::<T>()` again.
+//! * [`Epoch`] — the superstep guard handed out by
+//!   [`Context::superstep`]. One-sided communication can *only* be staged
+//!   through an epoch, and the epoch issues the single `lpf_sync` fence
+//!   when the closure returns. Because the epoch mutably borrows the
+//!   context, no slot can be read while communication is in flight: the
+//!   paper's "completed only by the next sync" discipline becomes a borrow
+//!   rule instead of a comment.
+//! * [`Context::bootstrap`] — the `resize_memory_register` +
+//!   `resize_message_queue` + `sync` capacity dance that every LPF program
+//!   performs before its first registration (paper Algorithm 2), as one
+//!   call.
+//!
+//! # Validation model
+//!
+//! Typed operations validate the **local** side of every transfer at
+//! enqueue time in O(1): the local slot is authoritative here. The remote
+//! side of a `put`/`get` is validated by the destination during `sync`, as
+//! in the raw API — remote global slots may legitimately have different
+//! lengths per process (LPF only requires the registration *order* to
+//! align), so the local handle's length says nothing about the peer's.
+//!
+//! # Example
+//!
+//! ```ignore
+//! ctx.bootstrap(2, ctx.p() as usize)?;
+//! let mine = ctx.alloc_global::<u64>(1)?;
+//! let all = ctx.alloc_global::<u64>(ctx.p() as usize)?;
+//! ctx.sync(SYNC_DEFAULT)?; // activate the collective registrations
+//! ctx.write(mine, 0, &[ctx.pid() as u64])?;
+//! ctx.superstep(|ep| {
+//!     for k in 0..ep.p() {
+//!         ep.put_slice(mine, 0, k, all, ep.pid() as usize, 1)?;
+//!     }
+//!     Ok(())
+//! })?; // <- the one fence; `all` is complete after this line
+//! let gathered = ctx.read_vec(all)?;
+//! ```
+
+use std::marker::PhantomData;
+
+use crate::core::{LpfError, MsgAttr, Pid, Result, SyncAttr, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::core::{MachineParams, Memslot};
+use crate::ctx::{Context, Pod};
+
+/// A memory slot carrying its element type and length (in elements).
+///
+/// The handle is `Copy`, like the raw [`Memslot`] it wraps; it aligns
+/// across processes under the same collective-call-order contract as
+/// `lpf_register_global` (pinned by `tests/typed_api.rs`).
+pub struct TypedSlot<T: Pod> {
+    slot: Memslot,
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+// Manual impls: `derive` would needlessly bound them on `T: Clone` etc.
+impl<T: Pod> Clone for TypedSlot<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Pod> Copy for TypedSlot<T> {}
+impl<T: Pod> PartialEq for TypedSlot<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.slot == other.slot && self.len == other.len
+    }
+}
+impl<T: Pod> Eq for TypedSlot<T> {}
+impl<T: Pod> std::fmt::Debug for TypedSlot<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TypedSlot<{}>({:?}, len {})",
+            std::any::type_name::<T>(),
+            self.slot,
+            self.len
+        )
+    }
+}
+
+impl<T: Pod> TypedSlot<T> {
+    /// Length in elements (this process's allocation).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if zero-length.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Length in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.len * std::mem::size_of::<T>()
+    }
+
+    /// The raw slot handle, for interop with the twelve-primitive API.
+    pub fn raw(&self) -> Memslot {
+        self.slot
+    }
+
+    /// Reinterpret the slot as elements of another Pod type `U`; the new
+    /// length is the number of whole `U` that fit the byte extent. Safe
+    /// because storage is untyped bytes and all accesses copy bytewise
+    /// (no aligned `&[U]` is ever formed over the storage).
+    pub fn cast<U: Pod>(&self) -> TypedSlot<U> {
+        let u = std::mem::size_of::<U>().max(1);
+        TypedSlot { slot: self.slot, len: self.byte_len() / u, _elem: PhantomData }
+    }
+}
+
+/// Element-count → byte-count with overflow reported as a mitigable error.
+/// Shared with the BSPlib typed layer (`crate::bsplib::TypedReg`).
+pub(crate) fn bytes_for<T: Pod>(n: usize) -> Result<usize> {
+    n.checked_mul(std::mem::size_of::<T>())
+        .ok_or_else(|| LpfError::OutOfMemory(format!("{n} elements overflow a byte count")))
+}
+
+/// Element offset → byte offset, overflow-checked. Remote-side offsets are
+/// deliberately *not* length-checked locally (peer lengths may differ), but
+/// the conversion itself must still fail loudly instead of wrapping to a
+/// small byte offset that would silently hit the wrong remote element.
+pub(crate) fn byte_offset<T: Pod>(off: usize) -> Result<usize> {
+    off.checked_mul(std::mem::size_of::<T>())
+        .ok_or_else(|| LpfError::Illegal(format!("element offset {off} overflows a byte offset")))
+}
+
+/// Bounds check `off + n <= len`, with a clear element-indexed message.
+/// Shared with the BSPlib typed layer.
+pub(crate) fn check_range(what: &str, off: usize, n: usize, len: usize) -> Result<()> {
+    match off.checked_add(n) {
+        Some(end) if end <= len => Ok(()),
+        _ => Err(LpfError::Illegal(format!(
+            "{what}: elements [{off}, {off}+{n}) exceed slot of {len} elements"
+        ))),
+    }
+}
+
+impl Context {
+    /// Reserve `max_slots` memory-register entries and `max_msgs` queued
+    /// messages, and issue the activating fence — the capacity bootstrap
+    /// every LPF program runs before its first registration (Algorithm 2).
+    pub fn bootstrap(&mut self, max_slots: usize, max_msgs: usize) -> Result<()> {
+        self.resize_memory_register(max_slots)?;
+        self.resize_message_queue(max_msgs)?;
+        self.sync(SYNC_DEFAULT)
+    }
+
+    /// `register_local`, typed: a slot of `n` elements of `T`, visible only
+    /// to this process. O(1) amortised, zero-initialised.
+    pub fn alloc_local<T: Pod>(&mut self, n: usize) -> Result<TypedSlot<T>> {
+        let slot = self.register_local(bytes_for::<T>(n)?)?;
+        Ok(TypedSlot { slot, len: n, _elem: PhantomData })
+    }
+
+    /// `register_global`, typed: collective; ids align across processes
+    /// when every process performs the same sequence of global
+    /// (de)registrations. Usable for communication after the next fence.
+    pub fn alloc_global<T: Pod>(&mut self, n: usize) -> Result<TypedSlot<T>> {
+        let slot = self.register_global(bytes_for::<T>(n)?)?;
+        Ok(TypedSlot { slot, len: n, _elem: PhantomData })
+    }
+
+    /// `deregister`, typed. O(1).
+    pub fn dealloc<T: Pod>(&mut self, s: TypedSlot<T>) -> Result<()> {
+        self.deregister(s.raw())
+    }
+
+    /// Write `data` into this process's slot at element offset `off`
+    /// (outside communication — the superstep discipline applies).
+    pub fn write<T: Pod>(&mut self, s: TypedSlot<T>, off: usize, data: &[T]) -> Result<()> {
+        check_range("write", off, data.len(), s.len())?;
+        self.write_typed(s.raw(), off, data)
+    }
+
+    /// Read from this process's slot at element offset `off` into `out`.
+    pub fn read<T: Pod>(&self, s: TypedSlot<T>, off: usize, out: &mut [T]) -> Result<()> {
+        check_range("read", off, out.len(), s.len())?;
+        self.read_typed(s.raw(), off, out)
+    }
+
+    /// Read the whole slot into a fresh `Vec`.
+    pub fn read_vec<T: Pod>(&self, s: TypedSlot<T>) -> Result<Vec<T>> {
+        let mut v: Vec<T> = Vec::with_capacity(s.len());
+        // SAFETY: Pod guarantees the all-zeroes bit pattern is a valid T;
+        // the capacity was just reserved for exactly `s.len()` elements.
+        unsafe {
+            std::ptr::write_bytes(v.as_mut_ptr(), 0, s.len());
+            v.set_len(s.len());
+        }
+        self.read(s, 0, &mut v)?;
+        Ok(v)
+    }
+
+    /// Run one superstep: stage one-sided communication through the
+    /// [`Epoch`], then issue the single `lpf_sync` fence on normal exit.
+    ///
+    /// The epoch mutably borrows this context, so *nothing* can observe a
+    /// slot between staging and the fence — the type system encodes the
+    /// paper's rule that a `put` is "completed only by the next sync".
+    /// Returns the closure's value once the fence completed.
+    ///
+    /// If the closure fails, the error propagates **without** fencing:
+    /// already-staged requests stay queued (exactly the raw-API state after
+    /// a failed enqueue), so a mitigable error can be handled and the
+    /// superstep retried.
+    pub fn superstep<R, F>(&mut self, f: F) -> Result<R>
+    where
+        F: FnOnce(&mut Epoch<'_>) -> Result<R>,
+    {
+        self.superstep_with(SYNC_DEFAULT, f)
+    }
+
+    /// [`superstep`](Context::superstep) with explicit sync attributes
+    /// (e.g. `assume_no_conflicts` to skip conflict resolution).
+    pub fn superstep_with<R, F>(&mut self, attr: SyncAttr, f: F) -> Result<R>
+    where
+        F: FnOnce(&mut Epoch<'_>) -> Result<R>,
+    {
+        let mut ep = Epoch { ctx: &mut *self };
+        let out = f(&mut ep)?;
+        self.sync(attr)?;
+        Ok(out)
+    }
+}
+
+/// One superstep's staging handle: the only way to issue typed one-sided
+/// communication. Created by [`Context::superstep`]; the fence runs when
+/// the creating closure returns. See the module docs for the epoch-safety
+/// argument.
+pub struct Epoch<'a> {
+    ctx: &'a mut Context,
+}
+
+impl Epoch<'_> {
+    /// This process's id `s ∈ {0, …, p−1}`.
+    pub fn pid(&self) -> Pid {
+        self.ctx.pid()
+    }
+
+    /// Number of processes in the context.
+    pub fn p(&self) -> Pid {
+        self.ctx.p()
+    }
+
+    /// `lpf_probe` mid-epoch (Θ(1)): lets staging logic adapt to the
+    /// machine, e.g. one- vs two-phase broadcast.
+    pub fn probe(&self) -> MachineParams {
+        self.ctx.probe()
+    }
+
+    /// Stage a typed `lpf_put`: copy `n` elements from local
+    /// `src[src_off..]` to `dst[dst_off..]` on `dst_pid`. O(1), touches no
+    /// payload; delivered by the fence that ends this epoch.
+    pub fn put_slice<T: Pod>(
+        &mut self,
+        src: TypedSlot<T>,
+        src_off: usize,
+        dst_pid: Pid,
+        dst: TypedSlot<T>,
+        dst_off: usize,
+        n: usize,
+    ) -> Result<()> {
+        self.put_slice_with(src, src_off, dst_pid, dst, dst_off, n, MSG_DEFAULT)
+    }
+
+    /// [`put_slice`](Epoch::put_slice) with explicit message attributes.
+    pub fn put_slice_with<T: Pod>(
+        &mut self,
+        src: TypedSlot<T>,
+        src_off: usize,
+        dst_pid: Pid,
+        dst: TypedSlot<T>,
+        dst_off: usize,
+        n: usize,
+        attr: MsgAttr,
+    ) -> Result<()> {
+        check_range("put_slice source", src_off, n, src.len())?;
+        if dst_pid == self.ctx.pid() {
+            // only for self-puts is the local handle authoritative for the
+            // destination; remote lengths may differ per process
+            check_range("put_slice destination", dst_off, n, dst.len())?;
+        }
+        self.ctx.put(
+            src.raw(),
+            byte_offset::<T>(src_off)?,
+            dst_pid,
+            dst.raw(),
+            byte_offset::<T>(dst_off)?,
+            bytes_for::<T>(n)?,
+            attr,
+        )
+    }
+
+    /// Stage a typed `lpf_get`: copy `n` elements from `src[src_off..]` on
+    /// `src_pid` into local `dst[dst_off..]`. O(1), touches no payload;
+    /// delivered by the fence that ends this epoch.
+    pub fn get_slice<T: Pod>(
+        &mut self,
+        src_pid: Pid,
+        src: TypedSlot<T>,
+        src_off: usize,
+        dst: TypedSlot<T>,
+        dst_off: usize,
+        n: usize,
+    ) -> Result<()> {
+        self.get_slice_with(src_pid, src, src_off, dst, dst_off, n, MSG_DEFAULT)
+    }
+
+    /// [`get_slice`](Epoch::get_slice) with explicit message attributes.
+    pub fn get_slice_with<T: Pod>(
+        &mut self,
+        src_pid: Pid,
+        src: TypedSlot<T>,
+        src_off: usize,
+        dst: TypedSlot<T>,
+        dst_off: usize,
+        n: usize,
+        attr: MsgAttr,
+    ) -> Result<()> {
+        check_range("get_slice destination", dst_off, n, dst.len())?;
+        if src_pid == self.ctx.pid() {
+            check_range("get_slice source", src_off, n, src.len())?;
+        }
+        self.ctx.get(
+            src_pid,
+            src.raw(),
+            byte_offset::<T>(src_off)?,
+            dst.raw(),
+            byte_offset::<T>(dst_off)?,
+            bytes_for::<T>(n)?,
+            attr,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Args;
+    use crate::ctx::{exec, Platform, Root};
+
+    fn root(p: u32) -> Root {
+        Root::new(Platform::shared().checked(true)).with_max_procs(p)
+    }
+
+    #[test]
+    fn typed_local_roundtrip() {
+        exec(
+            &root(1),
+            1,
+            |ctx, _| {
+                ctx.bootstrap(2, 2).unwrap();
+                let s = ctx.alloc_local::<f64>(5).unwrap();
+                assert_eq!(s.len(), 5);
+                assert_eq!(s.byte_len(), 40);
+                ctx.write(s, 1, &[1.5, -2.5]).unwrap();
+                let v = ctx.read_vec(s).unwrap();
+                assert_eq!(v, vec![0.0, 1.5, -2.5, 0.0, 0.0]);
+                ctx.dealloc(s).unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn superstep_completes_staged_puts() {
+        let outs = exec(
+            &root(4),
+            4,
+            |ctx, _| {
+                ctx.bootstrap(2, ctx.p() as usize).unwrap();
+                let mine = ctx.alloc_global::<u64>(1).unwrap();
+                let all = ctx.alloc_global::<u64>(ctx.p() as usize).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                ctx.write(mine, 0, &[ctx.pid() as u64 * 3]).unwrap();
+                ctx.superstep(|ep| {
+                    for k in 0..ep.p() {
+                        ep.put_slice(mine, 0, k, all, ep.pid() as usize, 1)?;
+                    }
+                    Ok(())
+                })
+                .unwrap();
+                ctx.read_vec(all).unwrap()
+            },
+            Args::none(),
+        )
+        .unwrap();
+        assert!(outs.iter().all(|v| v == &vec![0, 3, 6, 9]));
+    }
+
+    #[test]
+    fn typed_bounds_rejected_at_call_site() {
+        exec(
+            &root(2),
+            2,
+            |ctx, _| {
+                ctx.bootstrap(2, 4).unwrap();
+                let s = ctx.alloc_global::<u32>(4).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                assert!(matches!(
+                    ctx.write(s, 3, &[1u32, 2]),
+                    Err(LpfError::Illegal(_))
+                ));
+                let mut out = [0u32; 2];
+                assert!(matches!(ctx.read(s, 3, &mut out), Err(LpfError::Illegal(_))));
+                let err = ctx
+                    .superstep(|ep| ep.put_slice(s, 2, 1 - ep.pid(), s, 0, 3))
+                    .unwrap_err();
+                assert!(matches!(err, LpfError::Illegal(_)));
+                // the failed stage left nothing queued: an empty superstep
+                // must pass cleanly on every process
+                ctx.superstep(|_| Ok(())).unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn cast_reinterprets_length() {
+        exec(
+            &root(1),
+            1,
+            |ctx, _| {
+                ctx.bootstrap(1, 1).unwrap();
+                let bytes = ctx.alloc_local::<u8>(10).unwrap();
+                let words = bytes.cast::<u32>();
+                assert_eq!(words.len(), 2, "10 bytes hold 2 whole u32");
+                ctx.write(words, 0, &[0xAABBCCDD, 0x11223344]).unwrap();
+                let raw = ctx.read_vec(bytes).unwrap();
+                assert_eq!(&raw[0..4], &0xAABBCCDDu32.to_le_bytes());
+                assert_eq!(raw[8], 0, "tail bytes untouched");
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+}

@@ -1,3 +1,55 @@
 //! Small self-contained utilities (the offline crate set is minimal).
 pub mod radix;
 pub mod rng;
+
+/// Pads and aligns a value to 128 bytes so that neighbouring values in an
+/// array never share a cache line (two 64-byte lines on x86 prefetch
+/// pairs). Stand-in for `crossbeam_utils::CachePadded` — the build is
+/// dependency-free.
+#[derive(Debug, Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap `value` in its own cache line.
+    pub const fn new(value: T) -> Self {
+        CachePadded { value }
+    }
+
+    /// Unwrap.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::CachePadded;
+
+    #[test]
+    fn cache_padded_is_line_aligned_and_transparent() {
+        assert!(std::mem::align_of::<CachePadded<u64>>() >= 128);
+        let c = CachePadded::new(7u64);
+        assert_eq!(*c, 7);
+        assert_eq!(c.into_inner(), 7);
+        let v: Vec<CachePadded<u8>> = (0..3).map(CachePadded::new).collect();
+        let a = &*v[0] as *const u8 as usize;
+        let b = &*v[1] as *const u8 as usize;
+        assert!(b - a >= 128, "neighbours must not share a line");
+    }
+}

@@ -1,0 +1,293 @@
+//! Integration tests for the typed superstep-epoch API (v2).
+//!
+//! * Property tests: typed-slot round trips for arbitrary Pod element
+//!   types, offsets, and lengths must be byte-exact, locally and across a
+//!   put/get superstep. (The offline registry has no proptest;
+//!   `util::rng::XorShift64` drives a seeded generator loop — failures
+//!   print the seed parameters for replay.)
+//! * A pin of the `register_global`/`alloc_global` id-alignment contract:
+//!   ids align across processes when every process performs the same
+//!   sequence of global (de)registrations, and the aligned handle really
+//!   does name the peer's corresponding area.
+//! * Enqueue-time validation: out-of-range *local* sides of put/get fail
+//!   with `Illegal` at the call site, not inside the next sync.
+
+use lpf::core::{Args, LpfError, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::ctx::{exec, Context, Platform, Root, TypedSlot};
+use lpf::util::rng::XorShift64;
+
+fn root(p: u32) -> Root {
+    Root::new(Platform::shared().checked(true)).with_max_procs(p)
+}
+
+// ---------------------------------------------------------------- property
+
+/// One round-trip case for element type T: random slot length, offset and
+/// payload; write → read back locally, then put to the peer and compare.
+fn roundtrip_case<T>(ctx: &mut Context, rng_seed: u64, mk: impl Fn(&mut XorShift64) -> T)
+where
+    T: lpf::ctx::Pod + PartialEq + std::fmt::Debug,
+{
+    let mut rng = XorShift64::new(rng_seed);
+    let slot_len = 1 + rng.below_usize(64);
+    let n = 1 + rng.below_usize(slot_len);
+    let off = rng.below_usize(slot_len - n + 1);
+    let data: Vec<T> = (0..n).map(|_| mk(&mut rng)).collect();
+
+    // local round trip at a random offset
+    let local: TypedSlot<T> = ctx.alloc_local::<T>(slot_len).unwrap();
+    ctx.write(local, off, &data).unwrap();
+    let mut back = data.clone();
+    ctx.read(local, off, &mut back).unwrap();
+    assert_eq!(back, data, "local roundtrip seed {rng_seed}");
+
+    // cross-process round trip: put my range to the peer's mirror slot
+    let mirror = ctx.alloc_global::<T>(slot_len).unwrap();
+    ctx.sync(SYNC_DEFAULT).unwrap();
+    let peer = (ctx.pid() + 1) % ctx.p();
+    ctx.superstep(|ep| ep.put_slice(local, off, peer, mirror, off, n)).unwrap();
+    // every pid generated the same data (same seed), so the incoming
+    // payload equals ours
+    let mut got = data.clone();
+    ctx.read(mirror, off, &mut got).unwrap();
+    assert_eq!(got, data, "put roundtrip seed {rng_seed}");
+
+    // and fetch it back from the peer with a get
+    let fetched = ctx.alloc_local::<T>(slot_len).unwrap();
+    ctx.superstep(|ep| ep.get_slice(peer, mirror, off, fetched, off, n)).unwrap();
+    let mut got2 = data.clone();
+    ctx.read(fetched, off, &mut got2).unwrap();
+    assert_eq!(got2, data, "get roundtrip seed {rng_seed}");
+
+    ctx.dealloc(fetched).unwrap();
+    ctx.dealloc(mirror).unwrap();
+    ctx.dealloc(local).unwrap();
+    // keep the global-deregistration sequence collective
+    ctx.sync(SYNC_DEFAULT).unwrap();
+}
+
+#[test]
+fn typed_roundtrips_hold_for_arbitrary_pod_types() {
+    exec(
+        &root(2),
+        2,
+        |ctx, _| {
+            ctx.bootstrap(8, 256).unwrap();
+            for case in 0..12u64 {
+                let seed = 0xC0FFEE + 977 * case;
+                roundtrip_case::<u8>(ctx, seed, |r| r.next_u64() as u8);
+                roundtrip_case::<u16>(ctx, seed + 1, |r| r.next_u64() as u16);
+                roundtrip_case::<u32>(ctx, seed + 2, |r| r.next_u64() as u32);
+                roundtrip_case::<u64>(ctx, seed + 3, |r| r.next_u64());
+                roundtrip_case::<i32>(ctx, seed + 4, |r| r.next_u64() as i32);
+                roundtrip_case::<f32>(ctx, seed + 5, |r| r.unit_f64() as f32);
+                roundtrip_case::<f64>(ctx, seed + 6, |r| r.unit_f64());
+            }
+        },
+        Args::none(),
+    )
+    .unwrap();
+}
+
+#[test]
+fn typed_and_raw_apis_interoperate_byte_exactly() {
+    // v2 is a layer, not a fork: bytes written through a TypedSlot must be
+    // readable through the raw Memslot handle, and vice versa
+    exec(
+        &root(1),
+        1,
+        |ctx, _| {
+            ctx.bootstrap(2, 2).unwrap();
+            let typed = ctx.alloc_local::<u32>(4).unwrap();
+            ctx.write(typed, 0, &[0x01020304u32, 0x05060708]).unwrap();
+            let mut raw = vec![0u8; 8];
+            ctx.read_slot(typed.raw(), 0, &mut raw).unwrap();
+            let mut expect = Vec::new();
+            expect.extend_from_slice(&0x01020304u32.to_le_bytes());
+            expect.extend_from_slice(&0x05060708u32.to_le_bytes());
+            assert_eq!(raw, expect);
+            // byte 12 is the little-endian low byte of element 3
+            ctx.write_slot(typed.raw(), 12, &[0xAA]).unwrap();
+            let v = ctx.read_vec(typed).unwrap();
+            assert_eq!(v[3], 0xAA);
+        },
+        Args::none(),
+    )
+    .unwrap();
+}
+
+// ------------------------------------------------------------ id alignment
+
+#[test]
+fn global_ids_align_across_processes_under_same_call_order() {
+    let outs = exec(
+        &root(4),
+        4,
+        |ctx, _| {
+            ctx.bootstrap(8, 4 * ctx.p() as usize).unwrap();
+            // interleave local and global registrations: local ids must not
+            // perturb the global id sequence (separate id spaces)
+            let g1 = ctx.alloc_global::<u64>(1).unwrap();
+            let _l1 = ctx.alloc_local::<u64>(3).unwrap();
+            let g2 = ctx.alloc_global::<u64>(ctx.p() as usize).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            // deregister + re-register: the freed id must be reused
+            // deterministically on every process
+            ctx.dealloc(g1).unwrap();
+            let g3 = ctx.alloc_global::<u64>(2).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            // the aligned handle names the peer's corresponding area:
+            // allgather through g2 using only our own handle
+            ctx.write(g3, 0, &[ctx.pid() as u64 + 40, 0]).unwrap();
+            ctx.superstep(|ep| {
+                for k in 0..ep.p() {
+                    ep.put_slice(g3, 0, k, g2, ep.pid() as usize, 1)?;
+                }
+                Ok(())
+            })
+            .unwrap();
+            let all = ctx.read_vec(g2).unwrap();
+            (g2.raw().index(), g3.raw().index(), all)
+        },
+        Args::none(),
+    )
+    .unwrap();
+    let (g2_idx, g3_idx, ref gathered) = outs[0];
+    assert_eq!(gathered, &vec![40, 41, 42, 43]);
+    for (pid, (i2, i3, all)) in outs.iter().enumerate() {
+        assert_eq!(*i2, g2_idx, "pid {pid}: g2 id misaligned");
+        assert_eq!(*i3, g3_idx, "pid {pid}: recycled g3 id misaligned");
+        assert_eq!(all, gathered, "pid {pid}: allgather through aligned ids");
+    }
+}
+
+// ------------------------------------------------- enqueue-time validation
+
+#[test]
+fn raw_put_get_validate_local_side_at_enqueue() {
+    exec(
+        &root(2),
+        2,
+        |ctx, _| {
+            ctx.bootstrap(2, 8).unwrap();
+            let s = ctx.register_global(8).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let peer = (ctx.pid() + 1) % 2;
+
+            // put: local source range must fit — caught HERE, not in sync
+            let err = ctx.put(s, 4, peer, s, 0, 8, MSG_DEFAULT).unwrap_err();
+            assert!(matches!(err, LpfError::Illegal(_)), "got {err:?}");
+            // offset+len overflow must not wrap around
+            let err = ctx.put(s, usize::MAX, peer, s, 0, 2, MSG_DEFAULT).unwrap_err();
+            assert!(matches!(err, LpfError::Illegal(_)));
+            // get: local destination range must fit
+            let err = ctx.get(peer, s, 0, s, 6, 4, MSG_DEFAULT).unwrap_err();
+            assert!(matches!(err, LpfError::Illegal(_)));
+            // unknown (stale) slots are rejected at enqueue too
+            let stale = ctx.register_local(4).unwrap();
+            ctx.deregister(stale).unwrap();
+            let err = ctx.put(stale, 0, peer, s, 0, 1, MSG_DEFAULT).unwrap_err();
+            assert!(matches!(err, LpfError::Illegal(_)));
+
+            // nothing was queued by any failed call: the next superstep
+            // must complete cleanly and deliver only the legal message
+            ctx.write_slot(s, 0, &[7, 7, 7, 7]).unwrap();
+            ctx.put(s, 0, peer, s, 4, 4, MSG_DEFAULT).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let mut got = [0u8; 4];
+            ctx.read_slot(s, 4, &mut got).unwrap();
+            assert_eq!(got, [7, 7, 7, 7]);
+        },
+        Args::none(),
+    )
+    .unwrap();
+}
+
+#[test]
+fn failed_validation_is_side_effect_free_and_capacity_still_mitigable() {
+    exec(
+        &root(2),
+        2,
+        |ctx, _| {
+            ctx.bootstrap(1, 1).unwrap();
+            let s = ctx.register_global(8).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            // illegal bounds do not consume queue capacity…
+            assert!(ctx.put(s, 0, 0, s, 4, 16, MSG_DEFAULT).is_err());
+            // …so the one-slot queue still accepts the legal request
+            ctx.put(s, 0, (ctx.pid() + 1) % 2, s, 4, 4, MSG_DEFAULT).unwrap();
+            // and overflowing it stays a mitigable QueueCapacity error
+            let err = ctx.put(s, 0, 0, s, 4, 4, MSG_DEFAULT).unwrap_err();
+            assert!(err.is_mitigable(), "got {err:?}");
+            ctx.sync(SYNC_DEFAULT).unwrap();
+        },
+        Args::none(),
+    )
+    .unwrap();
+}
+
+// ------------------------------------------------------------- epoch guard
+
+#[test]
+fn superstep_value_is_returned_after_the_fence() {
+    let outs = exec(
+        &root(3),
+        3,
+        |ctx, _| {
+            ctx.bootstrap(2, ctx.p() as usize).unwrap();
+            let ring = ctx.alloc_global::<u64>(1).unwrap();
+            let next = ctx.alloc_global::<u64>(1).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let mut token = ctx.pid() as u64;
+            ctx.write(ring, 0, &[token]).unwrap();
+            for _ in 0..ctx.p() {
+                let staged = ctx
+                    .superstep(|ep| {
+                        ep.put_slice(ring, 0, (ep.pid() + 1) % ep.p(), next, 0, 1)?;
+                        Ok(ep.p())
+                    })
+                    .unwrap();
+                assert_eq!(staged, ctx.p());
+                token = ctx.read_vec(next).unwrap()[0] + 1;
+                ctx.write(ring, 0, &[token]).unwrap();
+            }
+            token
+        },
+        Args::none(),
+    )
+    .unwrap();
+    // the token returns home having been incremented p times
+    assert_eq!(outs, vec![3, 4, 5]);
+}
+
+#[test]
+fn failed_epoch_propagates_without_fencing() {
+    exec(
+        &root(2),
+        2,
+        |ctx, _| {
+            ctx.bootstrap(2, 4).unwrap();
+            let s = ctx.alloc_global::<u32>(2).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            // the closure errors before staging anything: no fence ran, so
+            // both processes are still aligned on superstep count
+            let err = ctx
+                .superstep(|_| -> lpf::core::Result<()> {
+                    Err(LpfError::Illegal("application abort".into()))
+                })
+                .unwrap_err();
+            assert!(matches!(err, LpfError::Illegal(_)));
+            // a later complete superstep still works on every process
+            ctx.write(s, 0, &[ctx.pid() + 1]).unwrap();
+            ctx.superstep(|ep| {
+                let peer = (ep.pid() + 1) % 2;
+                ep.put_slice(s, 0, peer, s, 1, 1)
+            })
+            .unwrap();
+            let v = ctx.read_vec(s).unwrap();
+            assert_eq!(v[1], 2 - ctx.pid());
+        },
+        Args::none(),
+    )
+    .unwrap();
+}
