@@ -52,7 +52,7 @@ fn exchange_time(meta: MetaAlgo, pers: Personality, p: u32, msgs_per_peer: usize
                             }));
                         }
                     }
-                    fab.sync(pid, reqs, SYNC_DEFAULT).unwrap();
+                    fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
                     fab.sim_time_ns(pid).unwrap() - before
                 })
             })

@@ -1,0 +1,398 @@
+//! bench_sync — the sync-engine perf-trajectory harness.
+//!
+//! Times h-relations across backends and process counts, fits the BSP cost
+//! model `T(h) = g·h + ℓ` per (backend, p, coalescing) configuration, and
+//! writes `BENCH_sync.json` — the seed point of the repo's measured perf
+//! trajectory. The shared backend is timed in wall-clock nanoseconds; the
+//! simulated-NIC backends report simulated nanoseconds (their clocks
+//! advance by the costs of the transport operations actually executed).
+//!
+//! `--smoke` runs a reduced sweep (CI) and additionally asserts the
+//! engine's zero-allocation guarantee: after warmup, a window of
+//! steady-state shared-backend supersteps must perform **zero** heap
+//! allocations, counted by a global allocator wrapper. A violation exits
+//! non-zero and fails the CI job.
+//!
+//! Usage: `bench_sync [--smoke] [--out PATH]`
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use lpf::benchkit::{fit_affine, r_squared, Samples};
+use lpf::core::{Pid, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::fabric::net::{MetaAlgo, NetFabric, Topology};
+use lpf::fabric::shared::SharedFabric;
+use lpf::fabric::Fabric;
+use lpf::memory::SlotStorage;
+use lpf::netsim::Personality;
+use lpf::queue::{PutReq, Request};
+
+// ---------------------------------------------------------------- allocator
+
+/// Counts allocations while `TRACK` is on; otherwise a transparent wrapper
+/// around the system allocator.
+struct CountingAlloc;
+
+static TRACK: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if TRACK.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if TRACK.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if TRACK.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+// ---------------------------------------------------------------- workload
+
+/// The h-relation every process drives per superstep: `msgs` puts of
+/// `bytes` to each of its `p − 1` peers, source and destination ranges laid
+/// out so that consecutive puts to one peer are contiguous on both sides —
+/// the typed `put_slice`-loop shape request coalescing targets.
+fn build_requests(
+    pid: Pid,
+    p: Pid,
+    msgs: usize,
+    bytes: usize,
+    src: lpf::Memslot,
+    dst: lpf::Memslot,
+) -> Vec<Request> {
+    let mut reqs = Vec::new();
+    for d in 0..p {
+        if d == pid {
+            continue;
+        }
+        for m in 0..msgs {
+            reqs.push(Request::Put(PutReq {
+                src_slot: src,
+                src_off: (d as usize * msgs + m) * bytes,
+                dst_pid: d,
+                dst_slot: dst,
+                // each writer owns its zone of the destination slot
+                dst_off: (pid as usize * msgs + m) * bytes,
+                len: bytes,
+                attr: MSG_DEFAULT,
+            }));
+        }
+    }
+    reqs
+}
+
+fn setup_slots(
+    fab: &dyn Fabric,
+    pid: Pid,
+    p: Pid,
+    msgs: usize,
+    bytes: usize,
+) -> (lpf::Memslot, lpf::Memslot) {
+    let zone = p as usize * msgs * bytes;
+    fab.register_of(pid).with_mut(|r| {
+        r.resize(2).unwrap();
+        r.activate_pending();
+        let src = r.register_global(SlotStorage::new(zone).unwrap()).unwrap();
+        let dst = r.register_global(SlotStorage::new(zone).unwrap()).unwrap();
+        (src, dst)
+    })
+}
+
+/// Time `iters` steady-state supersteps after `warmup`; returns per-
+/// superstep samples in ns (wall-clock for real fabrics, simulated ns for
+/// netsim-backed ones), measured on pid 0 — every superstep is collective,
+/// so pid 0's interval spans the h-relation.
+fn time_supersteps(
+    fab: Arc<dyn Fabric>,
+    p: Pid,
+    msgs: usize,
+    bytes: usize,
+    warmup: u32,
+    iters: u32,
+) -> Samples {
+    let mut samples = vec![Vec::new(); p as usize];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..p)
+            .map(|pid| {
+                let fab = fab.clone();
+                s.spawn(move || {
+                    let (src, dst) = setup_slots(fab.as_ref(), pid, p, msgs, bytes);
+                    let reqs = build_requests(pid, p, msgs, bytes, src, dst);
+                    for _ in 0..warmup {
+                        fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+                    }
+                    fab.barrier(pid).unwrap();
+                    let simulated = fab.sim_time_ns(pid).is_some();
+                    let mut vals = Vec::with_capacity(iters as usize);
+                    for _ in 0..iters {
+                        if simulated {
+                            let t0 = fab.sim_time_ns(pid).unwrap();
+                            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+                            vals.push(fab.sim_time_ns(pid).unwrap() - t0);
+                        } else {
+                            let t0 = Instant::now();
+                            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+                            vals.push(t0.elapsed().as_nanos() as f64);
+                        }
+                    }
+                    vals
+                })
+            })
+            .collect();
+        for (pid, h) in handles.into_iter().enumerate() {
+            samples[pid] = h.join().unwrap();
+        }
+    });
+    // worst process bounds the h-relation; per-superstep max across pids
+    let iters = iters as usize;
+    let values = (0..iters)
+        .map(|i| samples.iter().map(|v| v[i]).fold(0.0f64, f64::max))
+        .collect();
+    Samples::from(values)
+}
+
+/// Steady-state allocation count over `iters` supersteps on the shared
+/// backend (the engine's zero-allocation guarantee).
+fn count_steady_state_allocs(p: Pid, msgs: usize, bytes: usize, iters: u32) -> u64 {
+    let fab = SharedFabric::new(p, false);
+    std::thread::scope(|s| {
+        for pid in 0..p {
+            let fab = fab.clone();
+            s.spawn(move || {
+                let (src, dst) = setup_slots(fab.as_ref(), pid, p, msgs, bytes);
+                let reqs = build_requests(pid, p, msgs, bytes, src, dst);
+                for _ in 0..50 {
+                    fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+                }
+                fab.barrier(pid).unwrap();
+                if pid == 0 {
+                    ALLOCS.store(0, Ordering::SeqCst);
+                    TRACK.store(true, Ordering::SeqCst);
+                }
+                fab.barrier(pid).unwrap();
+                for _ in 0..iters {
+                    fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+                }
+                fab.barrier(pid).unwrap();
+                if pid == 0 {
+                    TRACK.store(false, Ordering::SeqCst);
+                }
+            });
+        }
+    });
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------- sweep
+
+struct CaseResult {
+    backend: &'static str,
+    p: Pid,
+    coalesce: bool,
+    simulated: bool,
+    /// (h_bytes, mean_ns, ci95_ns) per swept h
+    points: Vec<(f64, f64, f64)>,
+    g_ns_per_byte: f64,
+    l_ns: f64,
+    r2: f64,
+}
+
+fn backend_fabric(backend: &'static str, p: Pid, coalesce: bool) -> Arc<dyn Fabric> {
+    match backend {
+        "shared" => {
+            let f = SharedFabric::new(p, false);
+            f.set_coalescing(coalesce);
+            f
+        }
+        "rdma" => {
+            let f = NetFabric::with_config(
+                p,
+                "rdma",
+                Personality::ibverbs(),
+                Topology::distributed(),
+                MetaAlgo::Direct,
+                false,
+            );
+            f.set_coalescing(coalesce);
+            f
+        }
+        "msg" => {
+            let f = NetFabric::with_config(
+                p,
+                "msg",
+                Personality::mpi_message_passing(),
+                Topology::distributed(),
+                MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+                false,
+            );
+            f.set_coalescing(coalesce);
+            f
+        }
+        "hybrid" => {
+            let f = NetFabric::with_config(
+                p,
+                "hybrid",
+                Personality::ibverbs(),
+                Topology::clustered(2),
+                MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+                false,
+            );
+            f.set_coalescing(coalesce);
+            f
+        }
+        other => panic!("unknown backend {other}"),
+    }
+}
+
+fn run_case(
+    backend: &'static str,
+    p: Pid,
+    coalesce: bool,
+    msg_counts: &[usize],
+    bytes: usize,
+    warmup: u32,
+    iters: u32,
+) -> CaseResult {
+    let mut points = Vec::new();
+    let mut simulated = false;
+    for &msgs in msg_counts {
+        let fab = backend_fabric(backend, p, coalesce);
+        simulated = fab.sim_time_ns(0).is_some();
+        let s = time_supersteps(fab, p, msgs, bytes, warmup, iters);
+        let h = ((p - 1) as usize * msgs * bytes) as f64;
+        points.push((h, s.mean(), s.ci95()));
+    }
+    let xs: Vec<f64> = points.iter().map(|&(h, _, _)| h).collect();
+    let ys: Vec<f64> = points.iter().map(|&(_, m, _)| m).collect();
+    let (g, l) = fit_affine(&xs, &ys);
+    let r2 = r_squared(&xs, &ys, g, l);
+    CaseResult { backend, p, coalesce, simulated, points, g_ns_per_byte: g, l_ns: l, r2 }
+}
+
+// ---------------------------------------------------------------- output
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".into()
+    }
+}
+
+fn write_json(path: &str, cases: &[CaseResult], alloc_check: Option<(u32, u64)>) {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"bench_sync/v1\",\n");
+    if let Some((steps, allocs)) = alloc_check {
+        s.push_str(&format!(
+            "  \"alloc_check\": {{ \"backend\": \"shared\", \"supersteps\": {steps}, \
+             \"allocations\": {allocs} }},\n"
+        ));
+    }
+    s.push_str("  \"cases\": [\n");
+    for (i, c) in cases.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"backend\": \"{}\", \"p\": {}, \"coalesce\": {}, \"time_base\": \"{}\",\n",
+            c.backend,
+            c.p,
+            c.coalesce,
+            if c.simulated { "simulated_ns" } else { "wall_ns" }
+        ));
+        s.push_str(&format!(
+            "      \"fit\": {{ \"g_ns_per_byte\": {}, \"l_ns\": {}, \"r2\": {} }},\n",
+            json_f64(c.g_ns_per_byte),
+            json_f64(c.l_ns),
+            json_f64(c.r2)
+        ));
+        s.push_str("      \"points\": [");
+        for (j, &(h, m, ci)) in c.points.iter().enumerate() {
+            s.push_str(&format!(
+                "{}{{ \"h_bytes\": {}, \"mean_ns\": {}, \"ci95_ns\": {} }}",
+                if j > 0 { ", " } else { "" },
+                json_f64(h),
+                json_f64(m),
+                json_f64(ci)
+            ));
+        }
+        s.push_str(&format!(" ] }}{}\n", if i + 1 < cases.len() { "," } else { "" }));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).expect("write BENCH_sync.json");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let out = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_sync.json".to_string());
+
+    let backends: &[&'static str] = &["shared", "rdma", "msg", "hybrid"];
+    let (ps, msg_counts, bytes, warmup, iters): (&[Pid], &[usize], usize, u32, u32) = if smoke {
+        (&[4], &[1, 4, 16], 64, 5, 10)
+    } else {
+        (&[2, 4], &[1, 2, 4, 8, 16, 32], 64, 10, 30)
+    };
+
+    let mut cases = Vec::new();
+    for &backend in backends {
+        for &p in ps {
+            for coalesce in [true, false] {
+                let c = run_case(backend, p, coalesce, msg_counts, bytes, warmup, iters);
+                eprintln!(
+                    "{:>7} p={} coalesce={:<5} g={} ns/B  l={} ns  r2={}",
+                    c.backend,
+                    c.p,
+                    c.coalesce,
+                    json_f64(c.g_ns_per_byte),
+                    json_f64(c.l_ns),
+                    json_f64(c.r2)
+                );
+                cases.push(c);
+            }
+        }
+    }
+
+    let alloc_check = if smoke {
+        const STEPS: u32 = 100;
+        let allocs = count_steady_state_allocs(4, 8, 64, STEPS);
+        eprintln!("alloc check: {allocs} allocations over {STEPS} steady-state supersteps");
+        Some((STEPS, allocs))
+    } else {
+        None
+    };
+
+    write_json(&out, &cases, alloc_check);
+    eprintln!("wrote {out}");
+
+    if let Some((_, allocs)) = alloc_check {
+        if allocs != 0 {
+            eprintln!(
+                "FAIL: steady-state shared-backend supersteps allocated {allocs} times (expected 0)"
+            );
+            std::process::exit(1);
+        }
+        eprintln!("OK: steady state is allocation-free");
+    }
+}

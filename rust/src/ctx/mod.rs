@@ -262,8 +262,8 @@ impl Context {
     /// `lpf_sync`: execute the queued h-relation; `hg + ℓ` (paper §2.2).
     /// The only fence: all puts/gets issued before it are visible after it.
     pub fn sync(&mut self, attr: SyncAttr) -> Result<()> {
-        let reqs = self.queue.drain();
-        let res = self.group.fabric.sync(self.pid, reqs, attr);
+        let res = self.group.fabric.sync(self.pid, self.queue.requests(), attr);
+        self.queue.clear();
         // Capacities become active "after a fence provided each call
         // completed successfully" (paper §2.2) — even a failed h-relation
         // leaves capacities consistent because activation is local.

@@ -4,7 +4,9 @@
 //! each memory registration conceptually exists on both levels, and a
 //! put/get decides locally from the remote pid which route to take —
 //! reproduced here by the per-pair personality selection inside
-//! [`NetFabric`]. `g = O(q + log(p/q))`, `ℓ = O(log p)`.
+//! [`NetFabric`] (whose superstep pipeline is the shared engine's,
+//! [`crate::sync::engine::SyncEngine`]). `g = O(q + log(p/q))`,
+//! `ℓ = O(log p)`.
 
 use std::sync::Arc;
 

@@ -11,19 +11,37 @@
 //! 3. the data exchange proper;
 //! 4. final barrier.
 //!
+//! That strategy is implemented **once**, by the shared sync engine
+//! ([`crate::sync::engine::SyncEngine`]) running over the per-process arena
+//! tables of [`plan`]. A backend only implements the
+//! [`Exchange`](crate::sync::engine::Exchange) trait — the two hooks that
+//! genuinely differ per transport:
+//!
+//! * *meta exchange* — how descriptors reach their destination: reading the
+//!   peers' published outboxes directly ([`shared`]), or posting them over
+//!   the simulated NIC, direct all-to-all or randomised-Bruck ([`net`]);
+//! * *data exchange* — how winning bytes move: destination-side memcpy
+//!   ([`shared`]) vs. a trim-notice round trip, source-side push, and
+//!   receiver-side matching ([`net`]).
+//!
+//! Everything else — request coalescing, grouping, CRCW resolution, checked
+//! legality, statistics — is engine code shared by every backend. See
+//! `docs/sync-engine.md` for the phase diagram and buffer-ownership map.
+//!
 //! This module defines the [`Fabric`] trait those backends implement, plus
 //! the wire-level descriptor types. Backends: [`shared`], [`msg`], [`rdma`],
-//! [`hybrid`].
+//! [`hybrid`] (the latter three parameterise [`net`]).
 
 pub mod hybrid;
 pub mod msg;
 pub mod net;
+pub mod plan;
 pub mod rdma;
 pub mod shared;
 
 use std::sync::Arc;
 
-use crate::core::{Memslot, MsgAttr, Pid, Result, SyncAttr};
+use crate::core::{LpfError, Memslot, MsgAttr, Pid, Result, SyncAttr};
 use crate::memory::SharedRegister;
 use crate::queue::Request;
 
@@ -61,17 +79,26 @@ pub struct GetMeta {
     pub attr: MsgAttr,
 }
 
-/// Statistics a fabric keeps per process, read by benches and `probe`.
+/// Statistics the sync engine keeps per process, read by benches and
+/// `probe`. Accounting is uniform across backends (engine-owned), so
+/// cross-backend numbers are directly comparable.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SyncStats {
     /// Supersteps completed.
     pub syncs: u64,
-    /// Payload bytes this process sent (post-trim).
+    /// Payload bytes this process's memory contributed to completed
+    /// h-relations, post-trim: winning bytes of the puts it issued plus the
+    /// gets it served.
     pub bytes_out: u64,
-    /// Payload bytes this process received (post-trim).
+    /// Payload bytes written into this process's memory (post-trim).
     pub bytes_in: u64,
-    /// Messages this process sent (meta + data), transport-level.
+    /// Wire descriptors this process issued, post-coalescing (puts sent +
+    /// gets requested). Tracks the h-relation's descriptor count, not
+    /// transport mechanics, so it means the same thing on every backend.
     pub msgs_out: u64,
+    /// Bytes the destination-side CRCW resolution trimmed off this
+    /// process's *incoming* writes — overlap bytes that never travel.
+    pub bytes_trimmed: u64,
 }
 
 /// A communication fabric connecting the `p` processes of one context.
@@ -86,9 +113,11 @@ pub trait Fabric: Send + Sync {
     /// The slot register of process `pid`.
     fn register_of(&self, pid: Pid) -> &Arc<SharedRegister>;
 
-    /// Execute one superstep for `pid` with its drained request queue.
-    /// Collective: blocks until the h-relation involving `pid` completed.
-    fn sync(&self, pid: Pid, reqs: Vec<Request>, attr: SyncAttr) -> Result<()>;
+    /// Execute one superstep for `pid` over its drained request queue
+    /// (borrowed: the caller retains the buffer so the steady state never
+    /// reallocates). Collective: blocks until the h-relation involving
+    /// `pid` completed.
+    fn sync(&self, pid: Pid, reqs: &[Request], attr: SyncAttr) -> Result<()>;
 
     /// A plain collective barrier (used by collective registration).
     fn barrier(&self, pid: Pid) -> Result<()>;
@@ -111,34 +140,38 @@ pub trait Fabric: Send + Sync {
 /// Split a drained request queue into wire descriptors: puts grouped by
 /// destination pid, gets grouped by *source* pid (they are served there).
 /// Sequence numbers preserve queue order for deterministic CRCW resolution.
+///
+/// Returns exactly-`p`-sized tables (callers index by any pid without
+/// defensive bounds checks) and rejects out-of-range pids up front. This is
+/// the uncoalesced reference form of the engine's arena fill — the fast
+/// path lives in [`plan`]; tests use this as its grouping oracle.
 pub fn split_requests(
     me: Pid,
+    p: Pid,
     reqs: &[Request],
-) -> (Vec<Vec<PutMeta>>, Vec<Vec<GetMeta>>) {
-    let mut puts: Vec<Vec<PutMeta>> = Vec::new();
-    let mut gets: Vec<Vec<GetMeta>> = Vec::new();
+) -> Result<(Vec<Vec<PutMeta>>, Vec<Vec<GetMeta>>)> {
+    let mut puts: Vec<Vec<PutMeta>> = (0..p).map(|_| Vec::new()).collect();
+    let mut gets: Vec<Vec<GetMeta>> = (0..p).map(|_| Vec::new()).collect();
     for (seq, r) in reqs.iter().enumerate() {
         match r {
-            Request::Put(p) => {
-                let need = p.dst_pid as usize + 1;
-                if puts.len() < need {
-                    puts.resize_with(need, Vec::new);
+            Request::Put(q) => {
+                if q.dst_pid >= p {
+                    return Err(LpfError::Illegal(format!("put to pid {} of {p}", q.dst_pid)));
                 }
-                puts[p.dst_pid as usize].push(PutMeta {
+                puts[q.dst_pid as usize].push(PutMeta {
                     src_pid: me,
                     seq: seq as u32,
-                    src_slot: p.src_slot,
-                    src_off: p.src_off,
-                    dst_slot: p.dst_slot,
-                    dst_off: p.dst_off,
-                    len: p.len,
-                    attr: p.attr,
+                    src_slot: q.src_slot,
+                    src_off: q.src_off,
+                    dst_slot: q.dst_slot,
+                    dst_off: q.dst_off,
+                    len: q.len,
+                    attr: q.attr,
                 });
             }
             Request::Get(g) => {
-                let need = g.src_pid as usize + 1;
-                if gets.len() < need {
-                    gets.resize_with(need, Vec::new);
+                if g.src_pid >= p {
+                    return Err(LpfError::Illegal(format!("get from pid {} of {p}", g.src_pid)));
                 }
                 gets[g.src_pid as usize].push(GetMeta {
                     requester: me,
@@ -154,7 +187,7 @@ pub fn split_requests(
             }
         }
     }
-    (puts, gets)
+    Ok((puts, gets))
 }
 
 #[cfg(test)]
@@ -198,16 +231,18 @@ mod tests {
                 attr: MSG_DEFAULT,
             }),
         ];
-        let (puts, gets) = split_requests(0, &reqs);
-        assert_eq!(puts.len(), 3);
-        assert!(puts[0].is_empty() && puts[1].is_empty());
+        let (puts, gets) = split_requests(0, 4, &reqs).unwrap();
+        assert_eq!(puts.len(), 4, "tables are exactly p-sized");
+        assert!(puts[0].is_empty() && puts[1].is_empty() && puts[3].is_empty());
         assert_eq!(puts[2].len(), 2);
         // queue order preserved as sequence numbers
         assert_eq!(puts[2][0].seq, 0);
         assert_eq!(puts[2][1].seq, 2);
-        assert_eq!(gets.len(), 2);
+        assert_eq!(gets.len(), 4);
         assert_eq!(gets[1].len(), 1);
         assert_eq!(gets[1][0].requester, 0);
         assert_eq!(gets[1][0].seq, 1);
+        // out-of-range pids are rejected up front
+        assert!(split_requests(0, 2, &reqs).is_err());
     }
 }

@@ -1,6 +1,8 @@
 //! The message-passing LPF implementation (paper §3, Table 1 row "Mesg.
 //! RB"): two-sided sends with receiver-side matching, randomised-Bruck
-//! meta-data exchange. `g = O(log p)`, `ℓ = O(log p)`.
+//! meta-data exchange. `g = O(log p)`, `ℓ = O(log p)`. A parameterisation
+//! of [`NetFabric`] — the superstep pipeline itself is the shared engine's
+//! ([`crate::sync::engine::SyncEngine`]).
 
 use std::sync::Arc;
 

@@ -1,13 +1,20 @@
 //! Distributed-memory fabrics over the simulated NIC (paper §3, Table 1
 //! rows "RDMA Direct", "Mesg. RB", and "Hybrid RB").
 //!
-//! One engine, [`NetFabric`], parameterised by:
+//! One engine backend, [`NetFabric`], parameterised by:
 //! * a node [`Topology`] (`q` processes per node; intra-node traffic uses a
 //!   shared-memory cost profile, inter-node traffic the NIC personality);
 //! * a [`MetaAlgo`] — direct all-to-all or randomised Bruck (Valiant
 //!   two-phase + Bruck index algorithm) for the first meta-data exchange;
 //! * a [`Personality`] — the executed transport mechanics (one-sided vs
 //!   two-sided matching, progress model) plus cost constants.
+//!
+//! The 4-phase superstep pipeline is the shared engine's
+//! ([`crate::sync::engine::SyncEngine`]); this file implements the
+//! [`Exchange`] hooks: posting meta descriptors over the simulated wire
+//! (charging the costs of the messages actually sent), the trim-notice
+//! round trip that makes the realised h-relation the *trimmed* one, and the
+//! source-push data phase with receiver-side matching.
 //!
 //! The data plane moves real bytes through in-process wire buffers; the
 //! simulated clocks advance by the costs of the *operations actually
@@ -19,16 +26,18 @@ use std::sync::{Arc, Mutex};
 
 use crate::barrier::{AutoBarrier, Barrier};
 use crate::core::{LpfError, Memslot, Pid, Result, SyncAttr};
-use crate::fabric::{split_requests, Fabric, GetMeta, PutMeta, SyncStats};
+use crate::fabric::plan::Scratch;
+use crate::fabric::{Fabric, GetMeta, PutMeta, SyncStats};
 use crate::memory::SharedRegister;
 #[cfg(test)]
 use crate::memory::SlotStorage;
 use crate::netsim::matching::MatchEngine;
 use crate::netsim::{PendingOps, Personality, ProgressModel, SimClocks, WireMode};
 use crate::queue::Request;
-use crate::sync::conflict::{find_read_write_overlap, resolve_writes, Interval, WriteDesc};
+use crate::sync::engine::{Exchange, SyncEngine};
 use crate::sync::metadata::{bruck_forward, bruck_rounds, valiant_intermediate};
 use crate::util::rng::XorShift64;
+use crate::util::CachePadded;
 
 /// Node topology: processes `[k·q, (k+1)·q)` share node `k`.
 #[derive(Debug, Clone)]
@@ -143,6 +152,7 @@ impl MetaItem {
 
 /// The distributed fabric.
 pub struct NetFabric {
+    engine: SyncEngine,
     p: Pid,
     name: &'static str,
     personality: Personality,
@@ -150,14 +160,13 @@ pub struct NetFabric {
     meta_algo: MetaAlgo,
     checked: bool,
     barrier: AutoBarrier,
-    regs: Vec<Arc<SharedRegister>>,
     clocks: SimClocks,
     aborted: AtomicBool,
-    superstep: AtomicU64,
-    stats: Vec<Mutex<SyncStats>>,
+    /// Per-process superstep counters (each process counts its own syncs,
+    /// which agree by the collective contract — no cross-thread race on the
+    /// Bruck rng's round number).
+    supersteps: Vec<CachePadded<AtomicU64>>,
     // wire buffers, one cell per (src, dst) pair, owner = src
-    put_mail: Vec<Mutex<Vec<PutMeta>>>,
-    get_mail: Vec<Mutex<Vec<GetMeta>>>,
     trim_mail: Vec<Mutex<Vec<TrimNotice>>>,
     getreq_mail: Vec<Mutex<Vec<GetReqWire>>>,
     data_mail: Vec<Mutex<Vec<DataMsg>>>,
@@ -180,6 +189,7 @@ impl NetFabric {
         assert!(p > 0);
         let cells = (p * p) as usize;
         Arc::new(NetFabric {
+            engine: SyncEngine::new(p),
             p,
             name,
             personality,
@@ -187,13 +197,9 @@ impl NetFabric {
             meta_algo,
             checked,
             barrier: AutoBarrier::new(p),
-            regs: (0..p).map(|_| SharedRegister::new()).collect(),
             clocks: SimClocks::new(p),
             aborted: AtomicBool::new(false),
-            superstep: AtomicU64::new(0),
-            stats: (0..p).map(|_| Mutex::new(SyncStats::default())).collect(),
-            put_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
-            get_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
+            supersteps: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
             trim_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
             getreq_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
             data_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
@@ -201,6 +207,11 @@ impl NetFabric {
             matchers: (0..p).map(|_| Mutex::new(MatchEngine::new())).collect(),
             pendings: (0..p).map(|_| Mutex::new(PendingOps::default())).collect(),
         })
+    }
+
+    /// Toggle request coalescing (ablation hook for `bench_sync`).
+    pub fn set_coalescing(&self, on: bool) {
+        self.engine.set_coalescing(on);
     }
 
     #[inline]
@@ -217,7 +228,8 @@ impl NetFabric {
     }
 
     /// Charge `pid` for posting one message of `bytes` to `dst`, executing
-    /// the progress-engine mechanics if the transport has them.
+    /// the progress-engine mechanics if the transport has them. (Pure cost
+    /// accounting: the engine owns the uniform `SyncStats`.)
     fn charge_send(&self, pid: Pid, dst: Pid, bytes: u64) {
         let pers = self.pers(pid, dst);
         let mut cost = pers.post_ns + bytes as f64 * pers.per_byte_ns;
@@ -226,9 +238,6 @@ impl NetFabric {
             cost += scanned as f64 * pers.progress_scan_ns;
         }
         self.clocks.advance(pid, cost);
-        let mut st = self.stats[pid as usize].lock().unwrap();
-        st.msgs_out += 1;
-        st.bytes_out += bytes;
     }
 
     /// Barrier that (a) aborts cleanly, (b) max-combines simulated clocks,
@@ -256,49 +265,73 @@ impl NetFabric {
         Ok(())
     }
 
-    /// Phase-A meta routing, direct flavour.
-    fn route_meta_direct(&self, pid: Pid, puts: Vec<Vec<PutMeta>>, gets: Vec<Vec<GetMeta>>) {
-        for (dst, metas) in puts.into_iter().enumerate() {
-            if metas.is_empty() {
-                continue;
+    /// Phase-A meta routing, direct flavour: charge one posted message per
+    /// non-empty descriptor batch, then read the peers' outbox arenas after
+    /// the delivery barrier (the in-process equivalent of the wire).
+    fn route_meta_direct(
+        &self,
+        pid: Pid,
+        engine: &SyncEngine,
+        s: &mut Scratch,
+    ) -> Result<()> {
+        {
+            let ob = engine.outbox(pid).read().expect("outbox poisoned");
+            for dst in 0..self.p {
+                let n_puts = ob.puts_to(dst).len() as u64;
+                if n_puts > 0 {
+                    self.charge_send(pid, dst, META_BYTES * n_puts);
+                }
+                let n_gets = ob.gets_to(dst).len() as u64;
+                if n_gets > 0 {
+                    self.charge_send(pid, dst, META_BYTES * n_gets);
+                }
             }
-            self.charge_send(pid, dst as Pid, META_BYTES * metas.len() as u64);
-            self.put_mail[self.cell(pid, dst as Pid)].lock().unwrap().extend(metas);
-        }
-        for (server, metas) in gets.into_iter().enumerate() {
-            if metas.is_empty() {
-                continue;
-            }
-            self.charge_send(pid, server as Pid, META_BYTES * metas.len() as u64);
-            self.get_mail[self.cell(pid, server as Pid)].lock().unwrap().extend(metas);
         }
         self.clocks.advance(pid, self.personality.latency_ns);
+        self.barrier_combine(pid, false)?;
+        // Gather: source order = ascending pid, per-source issue order —
+        // the canonical (src, seq) sort for free.
+        let Scratch { incoming_puts, serve_gets, .. } = s;
+        incoming_puts.clear();
+        serve_gets.clear();
+        for src in 0..self.p {
+            let ob = engine.outbox(src).read().expect("outbox poisoned");
+            incoming_puts.extend_from_slice(ob.puts_to(pid));
+            serve_gets.extend_from_slice(ob.gets_to(pid));
+        }
+        Ok(())
     }
 
     /// Phase-A meta routing, randomised-Bruck flavour: two Bruck phases
     /// (to the Valiant intermediate, then to the true destination), each
-    /// ⌈log₂ p⌉ rounds with exactly one partner per round.
+    /// ⌈log₂ p⌉ rounds with exactly one partner per round. The items move
+    /// physically through the round buffers, so arrival order is
+    /// route-dependent and the delivery is sorted back into canonical
+    /// (src, seq) order.
     fn route_meta_bruck(
         &self,
         pid: Pid,
-        puts: Vec<Vec<PutMeta>>,
-        gets: Vec<Vec<GetMeta>>,
+        engine: &SyncEngine,
+        s: &mut Scratch,
         seed: u64,
+        step: u64,
     ) -> Result<()> {
-        let step = self.superstep.load(Ordering::Relaxed);
         let mut rng = XorShift64::new(seed ^ (step << 20) ^ pid as u64);
         // hold my in-flight items; target = intermediate for phase 1
         let mut pool: Vec<(Pid, MetaItem)> = Vec::new();
-        for (dst, metas) in puts.into_iter().enumerate() {
-            for m in metas {
-                let inter = valiant_intermediate(&mut rng, self.p);
-                pool.push((inter, MetaItem::Put(m, dst as Pid)));
+        {
+            let ob = engine.outbox(pid).read().expect("outbox poisoned");
+            for dst in 0..self.p {
+                for m in ob.puts_to(dst) {
+                    let inter = valiant_intermediate(&mut rng, self.p);
+                    pool.push((inter, MetaItem::Put(m.clone(), dst)));
+                }
             }
-        }
-        for (server, metas) in gets.into_iter().enumerate() {
-            for m in metas {
-                let inter = valiant_intermediate(&mut rng, self.p);
-                pool.push((inter, MetaItem::Get(m, server as Pid)));
+            for dst in 0..self.p {
+                for g in ob.gets_to(dst) {
+                    let inter = valiant_intermediate(&mut rng, self.p);
+                    pool.push((inter, MetaItem::Get(g.clone(), dst)));
+                }
             }
         }
         for phase in 0..2 {
@@ -320,9 +353,7 @@ impl NetFabric {
                     let mut cell = self.route_mail[self.cell(pid, partner)].lock().unwrap();
                     cell.extend(shipped.into_iter().map(|(t, i)| {
                         // encode remaining target in the item by wrapping:
-                        // we keep (tgt) implicit by re-deriving: store tgt
-                        // inside MetaItem's dst only for phase 2; phase 1
-                        // target rides in a wrapper below.
+                        // the mailbox stores (tgt, final) as two packed pids.
                         RoutedWrapper { tgt: t, item: i }.into_item()
                     }));
                 }
@@ -345,19 +376,25 @@ impl NetFabric {
                 }
             }
         }
-        // deliver locally-arrived items into the phase-B mailboxes
+        // deliver locally-arrived items, restoring the canonical order the
+        // engine's CRCW resolution requires
+        let Scratch { incoming_puts, serve_gets, .. } = s;
+        incoming_puts.clear();
+        serve_gets.clear();
         for (_, item) in pool.drain(..) {
             match item {
                 MetaItem::Put(m, dst) => {
                     debug_assert_eq!(dst, pid);
-                    self.put_mail[self.cell(m.src_pid, pid)].lock().unwrap().push(m);
+                    incoming_puts.push(m);
                 }
                 MetaItem::Get(g, server) => {
                     debug_assert_eq!(server, pid);
-                    self.get_mail[self.cell(g.requester, pid)].lock().unwrap().push(g);
+                    serve_gets.push(g);
                 }
             }
         }
+        incoming_puts.sort_unstable_by_key(|m| ((m.src_pid as u64) << 32) | m.seq as u64);
+        serve_gets.sort_unstable_by_key(|g| ((g.requester as u64) << 32) | g.seq as u64);
         Ok(())
     }
 }
@@ -372,13 +409,7 @@ struct RoutedWrapper {
 impl RoutedWrapper {
     fn into_item(self) -> MetaItem {
         match self.item {
-            MetaItem::Put(m, _final) => {
-                // smuggle the final dst in the enum and the current target
-                // in a stacked encoding: (final kept, target rides in seq's
-                // high bits would be fragile) — instead store target by
-                // re-wrapping: the mailbox stores (tgt, final) as two pids.
-                MetaItem::Put(m, pack_pids(self.tgt, _final))
-            }
+            MetaItem::Put(m, _final) => MetaItem::Put(m, pack_pids(self.tgt, _final)),
             MetaItem::Get(g, _final) => MetaItem::Get(g, pack_pids(self.tgt, _final)),
         }
     }
@@ -408,108 +439,44 @@ fn unpack_pids(packed: Pid) -> (Pid, Pid) {
     (packed >> 16, packed & 0xFFFF)
 }
 
-impl Fabric for NetFabric {
-    fn p(&self) -> Pid {
-        self.p
+impl Exchange for NetFabric {
+    fn checked(&self) -> bool {
+        self.checked
     }
 
-    fn register_of(&self, pid: Pid) -> &Arc<SharedRegister> {
-        &self.regs[pid as usize]
-    }
-
-    fn sync(&self, pid: Pid, reqs: Vec<Request>, attr: SyncAttr) -> Result<()> {
-        // ---------------- phase A: first meta-data exchange
+    fn exchange_meta(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<()> {
+        // phase-A barrier: outboxes published; charges the superstep's
+        // tree-barrier latency (BSP composition rule).
         self.barrier_combine(pid, true)?;
-        if pid == 0 {
-            self.superstep.fetch_add(1, Ordering::Relaxed);
-        }
-        let (puts, gets) = split_requests(pid, &reqs);
-        for (dst, v) in puts.iter().enumerate() {
-            if !v.is_empty() && dst as Pid >= self.p {
-                return Err(LpfError::Illegal(format!("put to pid {dst} of {}", self.p)));
-            }
-        }
-        for (srv, v) in gets.iter().enumerate() {
-            if !v.is_empty() && srv as Pid >= self.p {
-                return Err(LpfError::Illegal(format!("get from pid {srv} of {}", self.p)));
-            }
-        }
-        // keep my own gets for destination-side resolution
-        let my_gets: Vec<GetMeta> = gets.iter().flatten().cloned().collect();
+        let step = self.supersteps[pid as usize].fetch_add(1, Ordering::Relaxed);
         match self.meta_algo {
-            MetaAlgo::Direct => self.route_meta_direct(pid, puts, gets),
-            MetaAlgo::RandomisedBruck { seed } => self.route_meta_bruck(pid, puts, gets, seed)?,
+            MetaAlgo::Direct => self.route_meta_direct(pid, engine, s),
+            MetaAlgo::RandomisedBruck { seed } => {
+                self.route_meta_bruck(pid, engine, s, seed, step)?;
+                // mirror the direct flavour's post-route delivery barrier
+                self.barrier_combine(pid, false)
+            }
         }
-        self.barrier_combine(pid, false)?;
+    }
 
-        // ---------------- phase B: destination-side conflict resolution
-        let mut incoming_puts: Vec<PutMeta> = Vec::new();
-        for src in 0..self.p {
-            let mut cell = self.put_mail[self.cell(src, pid)].lock().unwrap();
-            incoming_puts.append(&mut cell);
-        }
-        // deterministic order regardless of meta route: sort by (src, seq)
-        incoming_puts.sort_by_key(|m| ((m.src_pid as u64) << 32) | m.seq as u64);
-
-        let put_count = incoming_puts.len();
-        let mut descs: Vec<WriteDesc> = Vec::with_capacity(put_count + my_gets.len());
-        for (i, m) in incoming_puts.iter().enumerate() {
-            descs.push(WriteDesc {
-                slot_kind: m.dst_slot.kind(),
-                slot_index: m.dst_slot.index(),
-                dst_off: m.dst_off,
-                len: m.len,
-                src_pid: m.src_pid,
-                seq: m.seq,
-                tag: i as u32,
-            });
-        }
-        for (i, g) in my_gets.iter().enumerate() {
-            descs.push(WriteDesc {
-                slot_kind: g.dst_slot.kind(),
-                slot_index: g.dst_slot.index(),
-                dst_off: g.dst_off,
-                len: g.len,
-                src_pid: pid,
-                seq: g.seq,
-                tag: (put_count + i) as u32,
-            });
-        }
-        let segs = if attr.assume_no_conflicts {
-            descs
-                .iter()
-                .enumerate()
-                .filter(|(_, d)| d.len > 0)
-                .map(|(i, d)| crate::sync::conflict::WriteSeg {
-                    desc: i,
-                    dst_off: d.dst_off,
-                    len: d.len,
-                    src_delta: 0,
-                })
-                .collect()
-        } else {
-            resolve_writes(&descs)
-        };
-
-        // second meta-data exchange: trim notices to put sources, trimmed
-        // get requests to servers; also build my expected-arrival list.
+    fn exchange_data(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
+        let p = self.p;
+        // ---- second meta-data exchange: trim notices to put sources,
+        // trimmed get requests to servers; also my expected-arrival list.
         let mut expected: Vec<(u32, u64)> = Vec::new(); // match keys
-        for seg in &segs {
-            let d = &descs[seg.desc];
-            if (d.tag as usize) < put_count {
-                let m = &incoming_puts[d.tag as usize];
-                let notice =
-                    TrimNotice { seq: m.seq, src_delta: seg.src_delta, len: seg.len };
-                if m.src_pid == pid {
-                    // self-put: no wire round trip
-                    self.trim_mail[self.cell(pid, pid)].lock().unwrap().push(notice);
-                } else {
+        for seg in &s.segs {
+            let d = &s.descs[seg.desc];
+            if (d.tag as usize) < s.put_count {
+                let m = &s.incoming_puts[d.tag as usize];
+                let notice = TrimNotice { seq: m.seq, src_delta: seg.src_delta, len: seg.len };
+                if m.src_pid != pid {
+                    // self-puts take no wire round trip
                     self.charge_send(pid, m.src_pid, 16);
-                    self.trim_mail[self.cell(pid, m.src_pid)].lock().unwrap().push(notice);
                 }
+                self.trim_mail[self.cell(pid, m.src_pid)].lock().unwrap().push(notice);
                 expected.push((m.src_pid, ((m.seq as u64) << 32) | seg.src_delta as u64));
             } else {
-                let g = &my_gets[d.tag as usize - put_count];
+                let g = &s.my_gets[d.tag as usize - s.put_count];
                 let req = GetReqWire {
                     requester: pid,
                     seq: g.seq,
@@ -530,40 +497,50 @@ impl Fabric for NetFabric {
         self.clocks.advance(pid, self.personality.latency_ns);
         self.barrier_combine(pid, false)?;
 
-        // ---------------- phase C: data exchange (sources send)
+        // ---- phase C: data exchange (sources send)
         let data_result: Result<()> = (|| {
-            // serve my puts' winning segments
-            for dst in 0..self.p {
+            // serve my puts' winning segments; the coalesced originals live
+            // in my outbox, seq-ordered per destination → binary search
+            let ob = engine.outbox(pid).read().expect("outbox poisoned");
+            for dst in 0..p {
                 let notices: Vec<TrimNotice> =
                     self.trim_mail[self.cell(dst, pid)].lock().unwrap().drain(..).collect();
+                if notices.is_empty() {
+                    continue;
+                }
+                let mine = ob.puts_to(dst);
                 for n in notices {
-                    let Some(Request::Put(p)) = reqs.get(n.seq as usize) else {
+                    let Ok(i) = mine.binary_search_by_key(&n.seq, |m| m.seq) else {
                         return Err(LpfError::Fatal("trim notice for unknown put".into()));
                     };
-                    let st = self.regs[pid as usize].resolve(p.src_slot)?;
-                    if p.src_off + n.src_delta + n.len > st.len() {
+                    let m = &mine[i];
+                    let st = engine.register_of(pid).resolve(m.src_slot)?;
+                    if m.src_off + n.src_delta + n.len > st.len() {
                         return Err(LpfError::Illegal("put source out of bounds".into()));
                     }
                     // SAFETY: superstep discipline (source range unwritten).
                     let bytes = unsafe {
-                        st.bytes()[p.src_off + n.src_delta..p.src_off + n.src_delta + n.len]
+                        st.bytes()[m.src_off + n.src_delta..m.src_off + n.src_delta + n.len]
                             .to_vec()
                     };
                     self.charge_send(pid, dst, n.len as u64);
                     self.data_mail[self.cell(pid, dst)].lock().unwrap().push(DataMsg {
-                        dst_slot: p.dst_slot,
-                        dst_off: p.dst_off + n.src_delta,
+                        dst_slot: m.dst_slot,
+                        dst_off: m.dst_off + n.src_delta,
                         bytes,
                         key: (pid, ((n.seq as u64) << 32) | n.src_delta as u64),
                     });
                 }
             }
             // serve gets that read my memory
-            for requester in 0..self.p {
-                let reqs_in: Vec<GetReqWire> =
-                    self.getreq_mail[self.cell(requester, pid)].lock().unwrap().drain(..).collect();
+            for requester in 0..p {
+                let reqs_in: Vec<GetReqWire> = self.getreq_mail[self.cell(requester, pid)]
+                    .lock()
+                    .unwrap()
+                    .drain(..)
+                    .collect();
                 for g in reqs_in {
-                    let st = self.regs[pid as usize].resolve(g.src_slot)?;
+                    let st = engine.register_of(pid).resolve(g.src_slot)?;
                     if g.src_off + g.len > st.len() {
                         return Err(LpfError::Illegal("get source out of bounds".into()));
                     }
@@ -582,18 +559,15 @@ impl Fabric for NetFabric {
             }
             Ok(())
         })();
-        if let Err(e) = data_result {
-            self.abort(pid);
-            return Err(e);
-        }
+        data_result?;
         self.clocks.advance(pid, self.personality.latency_ns);
         self.barrier_combine(pid, false)?;
 
-        // ---------------- phase D: apply arrivals (receiver side)
+        // ---- phase D: apply arrivals (receiver side)
         // Gather arrivals; interleave across sources round-robin — the
         // arrival order a NIC would produce with concurrent senders, and
         // the one that exposes two-sided matching costs.
-        let mut per_src: Vec<Vec<DataMsg>> = (0..self.p)
+        let mut per_src: Vec<Vec<DataMsg>> = (0..p)
             .map(|src| self.data_mail[self.cell(src, pid)].lock().unwrap().drain(..).collect())
             .collect();
         let two_sided = self.personality.mode == WireMode::TwoSided;
@@ -632,7 +606,7 @@ impl Fabric for NetFabric {
                     + per_src
                         .iter()
                         .enumerate()
-                        .filter(|(s, _)| !self.topo.same_node(*s as Pid, pid))
+                        .filter(|(src, _)| !self.topo.same_node(*src as Pid, pid))
                         .map(|(_, v)| v.len())
                         .sum::<usize>() as f64
                         * pers.recv_base_ns,
@@ -642,7 +616,7 @@ impl Fabric for NetFabric {
         let apply_result: Result<()> = (|| {
             for msgs in per_src.iter_mut() {
                 for m in msgs.drain(..) {
-                    let st = self.regs[pid as usize].resolve(m.dst_slot)?;
+                    let st = engine.register_of(pid).resolve(m.dst_slot)?;
                     if m.dst_off + m.bytes.len() > st.len() {
                         return Err(LpfError::Illegal("write beyond destination slot".into()));
                     }
@@ -663,48 +637,30 @@ impl Fabric for NetFabric {
             Ok(())
         })();
         self.pendings[pid as usize].lock().unwrap().complete_all();
-        if let Err(e) = apply_result {
-            self.abort(pid);
-            return Err(e);
-        }
+        apply_result?;
+        Ok(bytes_in)
+    }
 
-        // checked mode: read/write legality on my memory (reads = my puts'
-        // sources + gets served by me; writes = resolved segments).
-        if self.checked {
-            let mut reads: Vec<Interval> = Vec::new();
-            for r in &reqs {
-                if let Request::Put(p) = r {
-                    reads.push(Interval {
-                        slot_kind: p.src_slot.kind(),
-                        slot_index: p.src_slot.index(),
-                        off: p.src_off,
-                        len: p.len,
-                    });
-                }
-            }
-            let writes: Vec<Interval> = descs
-                .iter()
-                .map(|d| Interval {
-                    slot_kind: d.slot_kind,
-                    slot_index: d.slot_index,
-                    off: d.dst_off,
-                    len: d.len,
-                })
-                .collect();
-            if find_read_write_overlap(&reads, &writes).is_some() {
-                self.abort(pid);
-                return Err(LpfError::Illegal(
-                    "read and write of the same memory in one superstep".into(),
-                ));
-            }
-        }
+    fn finish(&self, pid: Pid) -> Result<()> {
+        self.barrier_combine(pid, true)
+    }
 
-        // ---------------- final barrier
-        self.barrier_combine(pid, true)?;
-        let mut st = self.stats[pid as usize].lock().unwrap();
-        st.syncs += 1;
-        st.bytes_in += bytes_in;
-        Ok(())
+    fn abort_peers(&self, _pid: Pid) {
+        self.aborted.store(true, Ordering::Release);
+    }
+}
+
+impl Fabric for NetFabric {
+    fn p(&self) -> Pid {
+        self.p
+    }
+
+    fn register_of(&self, pid: Pid) -> &Arc<SharedRegister> {
+        self.engine.register_of(pid)
+    }
+
+    fn sync(&self, pid: Pid, reqs: &[Request], attr: SyncAttr) -> Result<()> {
+        self.engine.superstep(self, pid, reqs, attr)
     }
 
     fn barrier(&self, pid: Pid) -> Result<()> {
@@ -720,7 +676,7 @@ impl Fabric for NetFabric {
     }
 
     fn stats(&self, pid: Pid) -> SyncStats {
-        *self.stats[pid as usize].lock().unwrap()
+        self.engine.stats(pid)
     }
 
     fn name(&self) -> &'static str {
@@ -770,10 +726,13 @@ mod tests {
                 len: 2,
                 attr: MSG_DEFAULT,
             })];
-            fab.sync(pid, reqs, SYNC_DEFAULT).unwrap();
+            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
             let st = fab.register_of(pid).resolve(slot).unwrap();
             let prev = ((pid + p - 1) % p) as u8 + 1;
-            assert_eq!(unsafe { st.bytes().to_vec() }, vec![prev, prev, pid as u8 + 1, pid as u8 + 1]);
+            assert_eq!(
+                unsafe { st.bytes().to_vec() },
+                vec![prev, prev, pid as u8 + 1, pid as u8 + 1]
+            );
             assert!(fab.sim_time_ns(pid).unwrap() > 0.0, "clock advanced");
         });
     }
@@ -851,7 +810,7 @@ mod tests {
             } else {
                 vec![]
             };
-            fab.sync(pid, reqs, SYNC_DEFAULT).unwrap();
+            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
             if pid == 2 {
                 let st = fab.register_of(2).resolve(slot).unwrap();
                 assert_eq!(unsafe { st.bytes().to_vec() }, vec![10, 10, 10, 10]);
@@ -887,14 +846,15 @@ mod tests {
             } else {
                 vec![]
             };
-            fab.sync(pid, reqs, SYNC_DEFAULT).unwrap();
+            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
             if pid == 0 {
                 let st = fab.register_of(0).resolve(slot).unwrap();
                 // pid 2 wins the overlap [2,6)
                 assert_eq!(unsafe { st.bytes().to_vec() }, vec![1, 1, 2, 2, 2, 2, 2, 2]);
                 // union is 8 bytes; overlap would have been 12
-                let total_in = fab.stats(0).bytes_in;
-                assert_eq!(total_in, 8, "trimmed h-relation");
+                let stats = fab.stats(0);
+                assert_eq!(stats.bytes_in, 8, "trimmed h-relation");
+                assert_eq!(stats.bytes_trimmed, 4, "overlap bytes never travel");
             }
         });
     }
@@ -909,6 +869,9 @@ mod tests {
             MetaAlgo::Direct,
             false,
         );
+        // disable coalescing so the eight puts stay eight wire messages and
+        // the matcher has a queue to scan
+        fab.set_coalescing(false);
         run_spmd(fab, |fab, pid| {
             let slot = setup_slot(fab, pid, 1024, 7);
             let mut reqs = vec![];
@@ -925,7 +888,48 @@ mod tests {
                     }));
                 }
             }
-            fab.sync(pid, reqs, SYNC_DEFAULT).unwrap();
+            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+        });
+    }
+
+    #[test]
+    fn coalescing_collapses_descriptor_counts() {
+        // the same eight contiguous puts as above, with coalescing on:
+        // one wire descriptor, bit-identical memory
+        let fab = NetFabric::with_config(
+            2,
+            "rdma",
+            Personality::ibverbs(),
+            Topology::distributed(),
+            MetaAlgo::Direct,
+            false,
+        );
+        run_spmd(fab, |fab, pid| {
+            let slot = setup_slot(fab, pid, 1024, pid as u8 + 5);
+            let mut reqs = vec![];
+            if pid == 0 {
+                for i in 0..8usize {
+                    reqs.push(Request::Put(PutReq {
+                        src_slot: slot,
+                        src_off: i * 64,
+                        dst_pid: 1,
+                        dst_slot: slot,
+                        dst_off: 256 + i * 64,
+                        len: 64,
+                        attr: MSG_DEFAULT,
+                    }));
+                }
+            }
+            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+            if pid == 1 {
+                let st = fab.register_of(1).resolve(slot).unwrap();
+                let bytes = unsafe { st.bytes().to_vec() };
+                assert!(bytes[256..768].iter().all(|&b| b == 5), "payload arrived");
+                assert!(bytes[..256].iter().all(|&b| b == 6), "rest untouched");
+            }
+            if pid == 0 {
+                assert_eq!(fab.stats(0).msgs_out, 1, "8 calls, 1 descriptor");
+            }
         });
     }
 }

@@ -1,0 +1,403 @@
+//! Per-process sync-plan arenas: the reusable flat tables the shared sync
+//! engine ([`crate::sync::engine`]) runs on.
+//!
+//! One [`SyncPlan`] per process, living for the fabric's lifetime:
+//!
+//! * [`OutTables`] — the outgoing descriptor arena. The owner fills it
+//!   before the meta barrier (coalescing adjacent requests along the way);
+//!   peers then read their `(offset, count)` range after the barrier. This
+//!   replaces the seed's p² `Mutex<Vec<PutMeta>>` mailboxes: one flat table
+//!   per *source*, prefix ranges per remote pid instead of p² cells, and
+//!   capacity retained across supersteps.
+//! * [`Scratch`] — owner-only working memory for one superstep: incoming
+//!   descriptor tables, the destination-side write-descriptor table, and
+//!   the conflict-resolution buffers. Every `Vec` is `clear()`ed and
+//!   refilled, never dropped, so the steady-state superstep performs no
+//!   heap allocation (asserted by `bench_sync --smoke`'s counting
+//!   allocator).
+//!
+//! Ownership discipline (who touches which buffer when):
+//!
+//! * the owner writes its `outbox` only between the final barrier of
+//!   superstep `k` and the meta barrier of superstep `k+1`;
+//! * peers read it only between the meta barrier and the final barrier of
+//!   `k+1`. The `RwLock` enforces the exclusion; the engine's barriers make
+//!   it uncontended in practice.
+
+use std::sync::{Mutex, RwLock};
+
+use crate::core::{LpfError, Pid, Result};
+use crate::fabric::{GetMeta, PutMeta, SyncStats};
+use crate::queue::Request;
+use crate::sync::conflict::{Interval, OverlapScratch, ResolveScratch, WriteDesc, WriteSeg};
+use crate::util::CachePadded;
+
+/// Outgoing wire descriptors of one process for the current superstep,
+/// grouped by remote pid with prefix ranges.
+#[derive(Debug, Default)]
+pub struct OutTables {
+    /// Put descriptors sorted by (destination pid, seq).
+    puts: Vec<PutMeta>,
+    /// Get descriptors sorted by (server pid, seq).
+    gets: Vec<GetMeta>,
+    /// `p + 1` prefix offsets into `puts`: destination `d` owns
+    /// `puts[put_ranges[d] .. put_ranges[d+1]]`.
+    put_ranges: Vec<u32>,
+    /// `p + 1` prefix offsets into `gets`, by server pid.
+    get_ranges: Vec<u32>,
+}
+
+impl OutTables {
+    fn new(p: Pid) -> Self {
+        OutTables {
+            puts: Vec::new(),
+            gets: Vec::new(),
+            put_ranges: vec![0; p as usize + 1],
+            get_ranges: vec![0; p as usize + 1],
+        }
+    }
+
+    /// Puts addressed to `dst`, in issue (seq) order.
+    pub fn puts_to(&self, dst: Pid) -> &[PutMeta] {
+        let (a, b) =
+            (self.put_ranges[dst as usize] as usize, self.put_ranges[dst as usize + 1] as usize);
+        &self.puts[a..b]
+    }
+
+    /// Gets served by `server`, in issue (seq) order.
+    pub fn gets_to(&self, server: Pid) -> &[GetMeta] {
+        let (a, b) = (
+            self.get_ranges[server as usize] as usize,
+            self.get_ranges[server as usize + 1] as usize,
+        );
+        &self.gets[a..b]
+    }
+
+    /// Outgoing wire descriptors after coalescing (puts + gets).
+    pub fn descriptor_count(&self) -> usize {
+        self.puts.len() + self.gets.len()
+    }
+}
+
+/// Owner-only superstep working memory (see module docs for the reuse
+/// discipline). Public fields are the engine's phase outputs that
+/// [`Exchange`](crate::sync::engine::Exchange) implementations consume.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Coalesced outgoing puts in issue order (pre-grouping).
+    pub(crate) cputs: Vec<PutMeta>,
+    /// Destination pid of `cputs[i]` (`PutMeta` is wire-format and carries
+    /// only destination-side coordinates).
+    pub(crate) cput_dst: Vec<Pid>,
+    /// Coalesced outgoing gets in issue order.
+    pub(crate) cgets: Vec<GetMeta>,
+    /// Grouping permutation (indices into `cputs` / `cgets`).
+    pub(crate) order: Vec<u32>,
+    /// My own gets, grouped by server pid — the destination-side writes I
+    /// apply locally once served.
+    pub my_gets: Vec<GetMeta>,
+    /// Puts arriving at me, sorted by (src_pid, seq) — the canonical CRCW
+    /// order every backend must deliver (meta-exchange contract).
+    pub incoming_puts: Vec<PutMeta>,
+    /// Gets I serve (they read my memory), sorted by (requester, seq).
+    pub serve_gets: Vec<GetMeta>,
+    /// How many of `descs` are incoming puts (the rest are my own gets).
+    pub put_count: usize,
+    /// Destination-side write descriptors: puts then gets, `tag` indexing
+    /// `incoming_puts` / `my_gets`.
+    pub descs: Vec<WriteDesc>,
+    /// Resolved non-overlapping winning segments of `descs`.
+    pub segs: Vec<WriteSeg>,
+    pub(crate) reads: Vec<Interval>,
+    pub(crate) writes: Vec<Interval>,
+    pub(crate) resolve: ResolveScratch,
+    pub(crate) overlap: OverlapScratch,
+    pub(crate) bytes_out_by_src: Vec<u64>,
+}
+
+/// One process's plan: published outbox + private scratch + stats, each
+/// field on its own cache line so neighbouring processes never false-share.
+pub struct SyncPlan {
+    pub(crate) outbox: CachePadded<RwLock<OutTables>>,
+    pub(crate) scratch: CachePadded<Mutex<Scratch>>,
+    pub(crate) stats: CachePadded<Mutex<SyncStats>>,
+}
+
+impl SyncPlan {
+    pub(crate) fn new(p: Pid) -> Self {
+        SyncPlan {
+            outbox: CachePadded::new(RwLock::new(OutTables::new(p))),
+            scratch: CachePadded::new(Mutex::new(Scratch::default())),
+            stats: CachePadded::new(Mutex::new(SyncStats::default())),
+        }
+    }
+}
+
+/// Drain one superstep's requests into the outbox arenas: optional request
+/// coalescing, then grouping by remote pid. Returns the number of wire
+/// descriptors (puts + gets) after coalescing.
+///
+/// Coalescing rule: a request merges into the immediately preceding queue
+/// entry when both are the same kind, address the same remote pid and the
+/// same `(src_slot, dst_slot, attr)`, and both its source and destination
+/// ranges extend the previous request contiguously — the common output of
+/// typed `put_slice` loops. The merged descriptor keeps the *first*
+/// request's sequence number. Because only queue-adjacent requests merge,
+/// no other descriptor of this process carries a sequence number strictly
+/// inside a merged run, and the merged ranges are internally disjoint, so
+/// the CRCW resolution outcome is byte-identical with or without
+/// coalescing (pinned by `tests/engine_invariants.rs`).
+pub(crate) fn fill_outbox(
+    p: Pid,
+    me: Pid,
+    reqs: &[Request],
+    coalesce: bool,
+    s: &mut Scratch,
+    outbox: &RwLock<OutTables>,
+) -> Result<usize> {
+    let Scratch { cputs, cput_dst, cgets, order, my_gets, .. } = s;
+    cputs.clear();
+    cput_dst.clear();
+    cgets.clear();
+    my_gets.clear();
+
+    // Which table absorbed the previous queue entry (merge candidates must
+    // be queue-adjacent so no foreign seq can fall inside a merged run).
+    #[derive(PartialEq, Clone, Copy)]
+    enum Prev {
+        None,
+        Put,
+        Get,
+    }
+    let mut prev = Prev::None;
+    for (seq, r) in reqs.iter().enumerate() {
+        match r {
+            Request::Put(q) => {
+                if q.dst_pid >= p {
+                    return Err(LpfError::Illegal(format!("put to pid {} of {p}", q.dst_pid)));
+                }
+                if coalesce && prev == Prev::Put {
+                    let d = *cput_dst.last().unwrap();
+                    let last = cputs.last_mut().unwrap();
+                    if d == q.dst_pid
+                        && last.src_slot == q.src_slot
+                        && last.dst_slot == q.dst_slot
+                        && last.attr == q.attr
+                        && last.src_off + last.len == q.src_off
+                        && last.dst_off + last.len == q.dst_off
+                    {
+                        last.len += q.len;
+                        continue;
+                    }
+                }
+                cputs.push(PutMeta {
+                    src_pid: me,
+                    seq: seq as u32,
+                    src_slot: q.src_slot,
+                    src_off: q.src_off,
+                    dst_slot: q.dst_slot,
+                    dst_off: q.dst_off,
+                    len: q.len,
+                    attr: q.attr,
+                });
+                cput_dst.push(q.dst_pid);
+                prev = Prev::Put;
+            }
+            Request::Get(g) => {
+                if g.src_pid >= p {
+                    return Err(LpfError::Illegal(format!("get from pid {} of {p}", g.src_pid)));
+                }
+                if coalesce && prev == Prev::Get {
+                    let last = cgets.last_mut().unwrap();
+                    if last.server == g.src_pid
+                        && last.src_slot == g.src_slot
+                        && last.dst_slot == g.dst_slot
+                        && last.attr == g.attr
+                        && last.src_off + last.len == g.src_off
+                        && last.dst_off + last.len == g.dst_off
+                    {
+                        last.len += g.len;
+                        continue;
+                    }
+                }
+                cgets.push(GetMeta {
+                    requester: me,
+                    server: g.src_pid,
+                    seq: seq as u32,
+                    src_slot: g.src_slot,
+                    src_off: g.src_off,
+                    dst_slot: g.dst_slot,
+                    dst_off: g.dst_off,
+                    len: g.len,
+                    attr: g.attr,
+                });
+                prev = Prev::Get;
+            }
+        }
+    }
+
+    // Group by remote pid. The sort key (pid << 32 | seq) is unique per
+    // descriptor, so the unstable sort is deterministic and reproduces the
+    // stable (pid, issue-order) grouping every backend depends on.
+    let mut ob = outbox.write().expect("outbox poisoned");
+    let ob = &mut *ob;
+    ob.puts.clear();
+    order.clear();
+    order.extend(0..cputs.len() as u32);
+    order.sort_unstable_by_key(|&i| {
+        ((cput_dst[i as usize] as u64) << 32) | cputs[i as usize].seq as u64
+    });
+    ob.put_ranges.clear();
+    ob.put_ranges.resize(p as usize + 1, 0);
+    for &d in cput_dst.iter() {
+        ob.put_ranges[d as usize + 1] += 1;
+    }
+    for i in 0..p as usize {
+        ob.put_ranges[i + 1] += ob.put_ranges[i];
+    }
+    ob.puts.extend(order.iter().map(|&i| cputs[i as usize].clone()));
+
+    ob.gets.clear();
+    order.clear();
+    order.extend(0..cgets.len() as u32);
+    order.sort_unstable_by_key(|&i| {
+        ((cgets[i as usize].server as u64) << 32) | cgets[i as usize].seq as u64
+    });
+    ob.get_ranges.clear();
+    ob.get_ranges.resize(p as usize + 1, 0);
+    for g in cgets.iter() {
+        ob.get_ranges[g.server as usize + 1] += 1;
+    }
+    for i in 0..p as usize {
+        ob.get_ranges[i + 1] += ob.get_ranges[i];
+    }
+    ob.gets.extend(order.iter().map(|&i| cgets[i as usize].clone()));
+    my_gets.extend_from_slice(&ob.gets);
+
+    Ok(ob.descriptor_count())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Memslot, SlotKind, MSG_DEFAULT};
+    use crate::queue::{GetReq, PutReq};
+
+    fn slot(i: u32) -> Memslot {
+        Memslot { kind: SlotKind::Global, index: i, gen: 1 }
+    }
+
+    fn put(dst_pid: Pid, src_off: usize, dst_off: usize, len: usize) -> Request {
+        Request::Put(PutReq {
+            src_slot: slot(0),
+            src_off,
+            dst_pid,
+            dst_slot: slot(1),
+            dst_off,
+            len,
+            attr: MSG_DEFAULT,
+        })
+    }
+
+    fn get(src_pid: Pid, src_off: usize, dst_off: usize, len: usize) -> Request {
+        Request::Get(GetReq {
+            src_pid,
+            src_slot: slot(1),
+            src_off,
+            dst_slot: slot(0),
+            dst_off,
+            len,
+            attr: MSG_DEFAULT,
+        })
+    }
+
+    fn fill(p: Pid, reqs: &[Request], coalesce: bool) -> (OutTables, Scratch, usize) {
+        let mut s = Scratch::default();
+        let outbox = RwLock::new(OutTables::new(p));
+        let n = fill_outbox(p, 0, reqs, coalesce, &mut s, &outbox).unwrap();
+        (outbox.into_inner().unwrap(), s, n)
+    }
+
+    #[test]
+    fn contiguous_put_run_coalesces_to_one_descriptor() {
+        // the typed put_slice loop shape: 4 puts, 8 B each, contiguous on
+        // both sides, same slots, same destination
+        let reqs: Vec<Request> = (0..4).map(|i| put(2, i * 8, 64 + i * 8, 8)).collect();
+        let (ob, _, n) = fill(3, &reqs, true);
+        assert_eq!(n, 1, "descriptor count tracks the h-relation, not calls");
+        let ps = ob.puts_to(2);
+        assert_eq!(ps.len(), 1);
+        assert_eq!((ps[0].seq, ps[0].src_off, ps[0].dst_off, ps[0].len), (0, 0, 64, 32));
+        // without coalescing: one descriptor per call
+        let (ob, _, n) = fill(3, &reqs, false);
+        assert_eq!(n, 4);
+        assert_eq!(ob.puts_to(2).len(), 4);
+    }
+
+    #[test]
+    fn non_contiguous_or_cross_pid_puts_do_not_coalesce() {
+        let reqs = vec![
+            put(1, 0, 0, 8),
+            put(1, 8, 16, 8), // dst gap → no merge
+            put(2, 16, 24, 8), // different pid → no merge
+            put(2, 24, 32, 8), // contiguous with previous → merge
+        ];
+        let (ob, _, n) = fill(3, &reqs, true);
+        assert_eq!(n, 3);
+        assert_eq!(ob.puts_to(1).len(), 2);
+        let p2 = ob.puts_to(2);
+        assert_eq!(p2.len(), 1);
+        assert_eq!((p2[0].seq, p2[0].len), (2, 16));
+    }
+
+    #[test]
+    fn interleaved_get_breaks_a_put_run() {
+        let reqs = vec![put(1, 0, 0, 8), get(1, 0, 0, 4), put(1, 8, 8, 8)];
+        let (ob, s, n) = fill(2, &reqs, true);
+        assert_eq!(n, 3, "only queue-adjacent requests may merge");
+        assert_eq!(ob.puts_to(1).len(), 2);
+        assert_eq!(s.my_gets.len(), 1);
+        assert_eq!(s.my_gets[0].seq, 1);
+    }
+
+    #[test]
+    fn contiguous_gets_coalesce() {
+        let reqs = vec![get(1, 0, 0, 4), get(1, 4, 4, 4), get(1, 8, 8, 4)];
+        let (ob, s, n) = fill(2, &reqs, true);
+        assert_eq!(n, 1);
+        let gs = ob.gets_to(1);
+        assert_eq!(gs.len(), 1);
+        assert_eq!((gs[0].seq, gs[0].src_off, gs[0].dst_off, gs[0].len), (0, 0, 0, 12));
+        assert_eq!(s.my_gets.len(), 1);
+    }
+
+    #[test]
+    fn ranges_are_exactly_p_sized_and_ordered() {
+        let reqs = vec![put(2, 0, 0, 4), put(0, 8, 0, 4), put(2, 16, 8, 4)];
+        let (ob, _, _) = fill(4, &reqs, false);
+        assert!(ob.puts_to(1).is_empty() && ob.puts_to(3).is_empty());
+        assert_eq!(ob.puts_to(0).len(), 1);
+        let p2 = ob.puts_to(2);
+        assert_eq!(p2.len(), 2);
+        assert_eq!((p2[0].seq, p2[1].seq), (0, 2), "issue order within a destination");
+    }
+
+    #[test]
+    fn out_of_range_pid_is_illegal() {
+        let mut s = Scratch::default();
+        let outbox = RwLock::new(OutTables::new(2));
+        assert!(fill_outbox(2, 0, &[put(2, 0, 0, 4)], true, &mut s, &outbox).is_err());
+        assert!(fill_outbox(2, 0, &[get(5, 0, 0, 4)], true, &mut s, &outbox).is_err());
+    }
+
+    #[test]
+    fn refill_replaces_previous_superstep() {
+        let mut s = Scratch::default();
+        let outbox = RwLock::new(OutTables::new(2));
+        fill_outbox(2, 0, &[put(1, 0, 0, 4), put(1, 8, 8, 4)], false, &mut s, &outbox).unwrap();
+        fill_outbox(2, 0, &[put(1, 0, 0, 4)], false, &mut s, &outbox).unwrap();
+        let ob = outbox.read().unwrap();
+        assert_eq!(ob.puts_to(1).len(), 1);
+        assert_eq!(ob.descriptor_count(), 1);
+    }
+}

@@ -1,7 +1,9 @@
 //! The RDMA LPF implementation (paper §3, Table 1 row "RDMA Direct"):
 //! one-sided remote writes, direct all-to-all meta-data exchange.
 //! `g = O(1)`, `ℓ = O(p)`. The paper's experiments use the native-ibverbs
-//! flavour of this backend (its Fig. 2 baseline).
+//! flavour of this backend (its Fig. 2 baseline). A parameterisation of
+//! [`NetFabric`] — the superstep pipeline itself is the shared engine's
+//! ([`crate::sync::engine::SyncEngine`]).
 
 use std::sync::Arc;
 

@@ -1,39 +1,42 @@
 //! The cache-coherent shared-memory fabric (the paper's Pthreads backend).
 //!
-//! Strategy (paper §3.1, Table 1 row "Shared-memory"): per thread-*pair*
-//! request queues, destination-side execution of all requests protected by
-//! two (auto-tuned hierarchical) barriers, and destination-side CRCW
-//! conflict resolution. Executing writes **at the destination** is what
-//! avoids the false-sharing slowdown the paper opens §3 with: only the
-//! owning thread's cache writes its own lines during the data phase.
+//! Strategy (paper §3.1, Table 1 row "Shared-memory"): destination-side
+//! execution of all requests protected by two (auto-tuned hierarchical)
+//! barriers, and destination-side CRCW conflict resolution. Executing
+//! writes **at the destination** is what avoids the false-sharing slowdown
+//! the paper opens §3 with: only the owning thread's cache writes its own
+//! lines during the data phase.
 //!
-//! `g = O(1)`, `ℓ = O(p)` (Table 1): the data phase is pure memcpy at the
-//! destination, the barriers cost `O(log p)` each, and the mailbox scan is
-//! `O(p + m_in)`.
+//! The 4-phase pipeline itself is the shared engine's
+//! ([`crate::sync::engine::SyncEngine`]); this file implements only the
+//! [`Exchange`] hooks:
+//!
+//! * meta — one barrier, then each destination reads its `(offset, count)`
+//!   range straight out of the peers' published outbox arenas (no mailbox
+//!   copy, no per-pair locks);
+//! * data — pure destination-side memcpy of the winning segments.
+//!
+//! `g = O(1)`, `ℓ = O(p)` (Table 1): the data phase is memcpy at the
+//! destination, the barriers cost `O(log p)` each, and the meta gather is
+//! `O(p + m_in)`. A steady-state superstep performs zero heap allocations
+//! (`bench_sync --smoke` asserts this).
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::barrier::{AutoBarrier, Barrier};
 use crate::core::{LpfError, Pid, Result, SyncAttr};
-use crate::fabric::{split_requests, Fabric, GetMeta, PutMeta, SyncStats};
+use crate::fabric::plan::Scratch;
+use crate::fabric::{Fabric, SyncStats};
 use crate::memory::{SharedRegister, SlotStorage};
 use crate::queue::Request;
-use crate::sync::conflict::{find_read_write_overlap, resolve_writes, Interval, WriteDesc};
+use crate::sync::engine::{Exchange, SyncEngine};
 
 /// Shared-memory fabric over `p` threads of one address space.
 pub struct SharedFabric {
-    p: Pid,
+    engine: SyncEngine,
     barrier: AutoBarrier,
-    regs: Vec<Arc<SharedRegister>>,
-    /// Per-(src,dst) put mailboxes; `src` writes only its own row → the
-    /// locks are uncontended (they exist to make ownership explicit).
-    put_mail: Vec<Mutex<Vec<PutMeta>>>,
-    /// Per-(requester,server) get notices: used by checked mode (read
-    /// legality on the server) and by gets' own execution at the requester.
-    get_mail: Vec<Mutex<Vec<GetMeta>>>,
     aborted: AtomicBool,
-    stats: Vec<Mutex<SyncStats>>,
     /// Verify read/write-overlap legality each superstep (O(m log m)).
     checked: bool,
 }
@@ -43,22 +46,17 @@ impl SharedFabric {
     /// legality verification (on by default in debug builds via
     /// [`crate::ctx::Platform`]).
     pub fn new(p: Pid, checked: bool) -> Arc<Self> {
-        assert!(p > 0, "a context needs at least one process");
         Arc::new(SharedFabric {
-            p,
+            engine: SyncEngine::new(p),
             barrier: AutoBarrier::new(p),
-            regs: (0..p).map(|_| SharedRegister::new()).collect(),
-            put_mail: (0..p * p).map(|_| Mutex::new(Vec::new())).collect(),
-            get_mail: (0..p * p).map(|_| Mutex::new(Vec::new())).collect(),
             aborted: AtomicBool::new(false),
-            stats: (0..p).map(|_| Mutex::new(SyncStats::default())).collect(),
             checked,
         })
     }
 
-    #[inline]
-    fn cell(&self, src: Pid, dst: Pid) -> usize {
-        (src * self.p + dst) as usize
+    /// Toggle request coalescing (ablation hook for `bench_sync`).
+    pub fn set_coalescing(&self, on: bool) {
+        self.engine.set_coalescing(on);
     }
 
     fn barrier_checked(&self, pid: Pid) -> Result<()> {
@@ -82,7 +80,6 @@ impl SharedFabric {
     }
 
     fn bounds_check(
-        &self,
         reg: &SharedRegister,
         slot: crate::core::Memslot,
         off: usize,
@@ -99,187 +96,75 @@ impl SharedFabric {
     }
 }
 
+impl Exchange for SharedFabric {
+    fn checked(&self) -> bool {
+        self.checked
+    }
+
+    fn exchange_meta(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<()> {
+        // Meta barrier: every process's outbox is published.
+        self.barrier_checked(pid)?;
+        // Gather straight from the peers' arenas. Iterating sources in pid
+        // order with per-source issue order yields the canonical (src, seq)
+        // sort for free.
+        let Scratch { incoming_puts, serve_gets, .. } = s;
+        incoming_puts.clear();
+        serve_gets.clear();
+        for src in 0..engine.p() {
+            let ob = engine.outbox(src).read().expect("outbox poisoned");
+            incoming_puts.extend_from_slice(ob.puts_to(pid));
+            serve_gets.extend_from_slice(ob.gets_to(pid));
+        }
+        Ok(())
+    }
+
+    fn exchange_data(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
+        // Executed at the destination (me): memcpy each winning segment.
+        let mut bytes_in = 0u64;
+        for seg in &s.segs {
+            let d = &s.descs[seg.desc];
+            let (src_pid, src_slot, src_off, dst_slot, dst_off) = if (d.tag as usize) < s.put_count
+            {
+                let m = &s.incoming_puts[d.tag as usize];
+                (m.src_pid, m.src_slot, m.src_off, m.dst_slot, m.dst_off)
+            } else {
+                let g = &s.my_gets[d.tag as usize - s.put_count];
+                (g.server, g.src_slot, g.src_off, g.dst_slot, g.dst_off)
+            };
+            let src_st = Self::bounds_check(
+                engine.register_of(src_pid),
+                src_slot,
+                src_off + seg.src_delta,
+                seg.len,
+            )?;
+            let dst_st = Self::bounds_check(engine.register_of(pid), dst_slot, dst_off, d.len)?;
+            Self::copy(&src_st, src_off + seg.src_delta, &dst_st, seg.dst_off, seg.len);
+            debug_assert_eq!(seg.dst_off - d.dst_off, seg.src_delta);
+            bytes_in += seg.len as u64;
+        }
+        Ok(bytes_in)
+    }
+
+    fn finish(&self, pid: Pid) -> Result<()> {
+        self.barrier_checked(pid)
+    }
+
+    fn abort_peers(&self, _pid: Pid) {
+        self.aborted.store(true, Ordering::Release);
+    }
+}
+
 impl Fabric for SharedFabric {
     fn p(&self) -> Pid {
-        self.p
+        self.engine.p()
     }
 
     fn register_of(&self, pid: Pid) -> &Arc<SharedRegister> {
-        &self.regs[pid as usize]
+        self.engine.register_of(pid)
     }
 
-    fn sync(&self, pid: Pid, reqs: Vec<Request>, attr: SyncAttr) -> Result<()> {
-        // ---- publish meta: puts to destination rows, gets to server rows.
-        let (puts, gets) = split_requests(pid, &reqs);
-        let mut my_gets: Vec<GetMeta> = Vec::new();
-        for (dst, metas) in puts.into_iter().enumerate() {
-            if !metas.is_empty() {
-                if dst as Pid >= self.p {
-                    return Err(LpfError::Illegal(format!("put to pid {dst} of {}", self.p)));
-                }
-                *self.put_mail[self.cell(pid, dst as Pid)].lock().unwrap() = metas;
-            }
-        }
-        for (server, metas) in gets.into_iter().enumerate() {
-            if !metas.is_empty() {
-                if server as Pid >= self.p {
-                    return Err(LpfError::Illegal(format!("get from pid {server} of {}", self.p)));
-                }
-                my_gets.extend(metas.iter().cloned());
-                *self.get_mail[self.cell(pid, server as Pid)].lock().unwrap() = metas;
-            }
-        }
-
-        // ---- phase 1 barrier: all meta published.
-        self.barrier_checked(pid)?;
-
-        // ---- gather incoming writes (puts toward me + my own gets).
-        let mut incoming_puts: Vec<PutMeta> = Vec::new();
-        for src in 0..self.p {
-            let mut cell = self.put_mail[self.cell(src, pid)].lock().unwrap();
-            incoming_puts.append(&mut cell);
-        }
-        let mut descs: Vec<WriteDesc> = Vec::with_capacity(incoming_puts.len() + my_gets.len());
-        for (i, m) in incoming_puts.iter().enumerate() {
-            descs.push(WriteDesc {
-                slot_kind: m.dst_slot.kind(),
-                slot_index: m.dst_slot.index(),
-                dst_off: m.dst_off,
-                len: m.len,
-                src_pid: m.src_pid,
-                seq: m.seq,
-                tag: i as u32,
-            });
-        }
-        let put_count = incoming_puts.len();
-        for (i, g) in my_gets.iter().enumerate() {
-            descs.push(WriteDesc {
-                slot_kind: g.dst_slot.kind(),
-                slot_index: g.dst_slot.index(),
-                dst_off: g.dst_off,
-                len: g.len,
-                src_pid: pid,
-                seq: g.seq,
-                tag: (put_count + i) as u32,
-            });
-        }
-
-        // ---- checked mode: read/write legality on MY memory.
-        if self.checked {
-            let mut reads: Vec<Interval> = Vec::new();
-            // my puts read my memory
-            for r in &reqs {
-                if let Request::Put(p) = r {
-                    reads.push(Interval {
-                        slot_kind: p.src_slot.kind(),
-                        slot_index: p.src_slot.index(),
-                        off: p.src_off,
-                        len: p.len,
-                    });
-                }
-            }
-            // gets served by me read my memory
-            for requester in 0..self.p {
-                let cell = self.get_mail[self.cell(requester, pid)].lock().unwrap();
-                for g in cell.iter() {
-                    reads.push(Interval {
-                        slot_kind: g.src_slot.kind(),
-                        slot_index: g.src_slot.index(),
-                        off: g.src_off,
-                        len: g.len,
-                    });
-                }
-            }
-            let writes: Vec<Interval> = descs
-                .iter()
-                .map(|d| Interval {
-                    slot_kind: d.slot_kind,
-                    slot_index: d.slot_index,
-                    off: d.dst_off,
-                    len: d.len,
-                })
-                .collect();
-            if find_read_write_overlap(&reads, &writes).is_some() {
-                self.abort(pid);
-                return Err(LpfError::Illegal(
-                    "read and write of the same memory in one superstep".into(),
-                ));
-            }
-        }
-
-        // ---- phase 2: destination-side conflict resolution.
-        let segs = if attr.assume_no_conflicts {
-            // Caller vouches for disjointness: skip resolution (lower g).
-            descs
-                .iter()
-                .enumerate()
-                .filter(|(_, d)| d.len > 0)
-                .map(|(i, d)| crate::sync::conflict::WriteSeg {
-                    desc: i,
-                    dst_off: d.dst_off,
-                    len: d.len,
-                    src_delta: 0,
-                })
-                .collect()
-        } else {
-            resolve_writes(&descs)
-        };
-
-        // ---- phase 3: data exchange, executed at the destination (me).
-        let mut bytes_in = 0u64;
-        let result = (|| -> Result<()> {
-            for seg in &segs {
-                let d = &descs[seg.desc];
-                let (src_pid, src_slot, src_off, dst_slot, dst_off) =
-                    if (d.tag as usize) < put_count {
-                        let m = &incoming_puts[d.tag as usize];
-                        (m.src_pid, m.src_slot, m.src_off, m.dst_slot, m.dst_off)
-                    } else {
-                        let g = &my_gets[d.tag as usize - put_count];
-                        (g.server, g.src_slot, g.src_off, g.dst_slot, g.dst_off)
-                    };
-                let src_st = self.bounds_check(
-                    &self.regs[src_pid as usize],
-                    src_slot,
-                    src_off + seg.src_delta,
-                    seg.len,
-                )?;
-                let dst_st =
-                    self.bounds_check(&self.regs[pid as usize], dst_slot, dst_off, d.len)?;
-                Self::copy(&src_st, src_off + seg.src_delta, &dst_st, seg.dst_off, seg.len);
-                debug_assert_eq!(seg.dst_off - d.dst_off, seg.src_delta);
-                bytes_in += seg.len as u64;
-            }
-            Ok(())
-        })();
-        if let Err(e) = result {
-            self.abort(pid);
-            // Drain own get notices to keep mailboxes clean, then fail.
-            for server in 0..self.p {
-                self.get_mail[self.cell(pid, server)].lock().unwrap().clear();
-            }
-            return Err(e);
-        }
-
-        // ---- final barrier: h-relation complete.
-        self.barrier_checked(pid)?;
-        // clear my get notices (published for checked mode)
-        for server in 0..self.p {
-            self.get_mail[self.cell(pid, server)].lock().unwrap().clear();
-        }
-
-        let mut st = self.stats[pid as usize].lock().unwrap();
-        st.syncs += 1;
-        st.bytes_in += bytes_in;
-        st.bytes_out += reqs
-            .iter()
-            .map(|r| match r {
-                Request::Put(p) => p.len as u64,
-                Request::Get(_) => 0,
-            })
-            .sum::<u64>();
-        st.msgs_out += reqs.len() as u64;
-        Ok(())
+    fn sync(&self, pid: Pid, reqs: &[Request], attr: SyncAttr) -> Result<()> {
+        self.engine.superstep(self, pid, reqs, attr)
     }
 
     fn barrier(&self, pid: Pid) -> Result<()> {
@@ -295,7 +180,7 @@ impl Fabric for SharedFabric {
     }
 
     fn stats(&self, pid: Pid) -> SyncStats {
-        *self.stats[pid as usize].lock().unwrap()
+        self.engine.stats(pid)
     }
 
     fn name(&self) -> &'static str {
@@ -345,9 +230,9 @@ mod tests {
                     len: 4,
                     attr: MSG_DEFAULT,
                 })];
-                fab.sync(pid, reqs, SYNC_DEFAULT).unwrap();
+                fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
             } else {
-                fab.sync(pid, vec![], SYNC_DEFAULT).unwrap();
+                fab.sync(pid, &[], SYNC_DEFAULT).unwrap();
                 let st = fab.register_of(1).resolve(slot).unwrap();
                 let bytes = unsafe { st.bytes().to_vec() };
                 assert_eq!(bytes, vec![2, 2, 2, 2, 1, 1, 1, 1]);
@@ -369,11 +254,11 @@ mod tests {
                     len: 4,
                     attr: MSG_DEFAULT,
                 })];
-                fab.sync(pid, reqs, SYNC_DEFAULT).unwrap();
+                fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
                 let st = fab.register_of(1).resolve(slot).unwrap();
                 assert_eq!(unsafe { st.bytes().to_vec() }, vec![10, 10, 10, 10]);
             } else {
-                fab.sync(pid, vec![], SYNC_DEFAULT).unwrap();
+                fab.sync(pid, &[], SYNC_DEFAULT).unwrap();
             }
         });
     }
@@ -393,7 +278,7 @@ mod tests {
                     len: 4,
                     attr: MSG_DEFAULT,
                 })];
-                fab.sync(pid, reqs, SYNC_DEFAULT).unwrap();
+                fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
                 if pid == 0 {
                     let st = fab.register_of(0).resolve(slot).unwrap();
                     // fill was pid+... setup fills with 0xEE; sources wrote
@@ -403,6 +288,40 @@ mod tests {
                 }
             });
         }
+    }
+
+    #[test]
+    fn overlap_trimming_is_accounted() {
+        // pid 1 writes [0,6), pid 2 writes [2,8) of pid 0: 12 descriptor
+        // bytes, 8 winning bytes → 4 trimmed, 8 in; sources get post-trim
+        // bytes_out (pid 1 keeps [0,2) = 2, pid 2 all 6).
+        run_spmd(3, false, |fab, pid| {
+            let slot = setup_slot(fab, pid, 8, pid as u8);
+            let reqs = if pid > 0 {
+                vec![Request::Put(PutReq {
+                    src_slot: slot,
+                    src_off: 0,
+                    dst_pid: 0,
+                    dst_slot: slot,
+                    dst_off: 2 * (pid as usize - 1),
+                    len: 6,
+                    attr: MSG_DEFAULT,
+                })]
+            } else {
+                vec![]
+            };
+            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+            // all stats — including the destination-attributed bytes_out of
+            // *other* processes — are settled once the collective returned
+            if pid == 0 {
+                let st = fab.stats(0);
+                assert_eq!(st.bytes_in, 8);
+                assert_eq!(st.bytes_trimmed, 4);
+                assert_eq!(fab.stats(1).bytes_out, 2);
+                assert_eq!(fab.stats(2).bytes_out, 6);
+                assert_eq!(fab.stats(1).msgs_out, 1);
+            }
+        });
     }
 
     #[test]
@@ -434,7 +353,7 @@ mod tests {
             };
             // One of the two must observe the illegality (pid 1's memory is
             // both read by its own put and written by pid 0's put).
-            let r = fab.sync(pid, reqs, SYNC_DEFAULT);
+            let r = fab.sync(pid, &reqs, SYNC_DEFAULT);
             if pid == 1 {
                 assert!(r.is_err());
             }

@@ -135,12 +135,16 @@ impl MsgQueue {
         Ok(())
     }
 
-    /// Drain all queued requests (sync engine, once per superstep). Keeps
-    /// the allocation so the steady state never reallocates.
-    pub fn drain(&mut self) -> Vec<Request> {
-        let mut out = Vec::with_capacity(self.reqs.len());
-        out.append(&mut self.reqs);
-        out
+    /// All queued requests in issue order (the sync engine borrows them for
+    /// one superstep — no copy, no allocation).
+    pub fn requests(&self) -> &[Request] {
+        &self.reqs
+    }
+
+    /// Empty the queue after a completed superstep. Keeps the allocation so
+    /// the steady state never reallocates.
+    pub fn clear(&mut self) {
+        self.reqs.clear();
     }
 }
 
@@ -193,7 +197,7 @@ mod tests {
     }
 
     #[test]
-    fn drain_empties_but_keeps_capacity() {
+    fn requests_then_clear_keeps_capacity() {
         let mut q = MsgQueue::new();
         q.resize(4).unwrap();
         q.activate_pending();
@@ -208,12 +212,12 @@ mod tests {
             attr: MSG_DEFAULT,
         })
         .unwrap();
-        let drained = q.drain();
-        assert_eq!(drained.len(), 2);
+        assert_eq!(q.requests().len(), 2);
+        assert_eq!(q.requests()[0].len(), 1);
+        assert_eq!(q.requests()[1].len(), 3);
+        q.clear();
         assert!(q.is_empty());
         assert_eq!(q.capacity(), 4);
-        assert_eq!(drained[0].len(), 1);
-        assert_eq!(drained[1].len(), 3);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! bit-identical to every other (asserted by cross-backend tests).
 
 use crate::core::{Pid, SlotKind};
-use crate::util::radix::radix_sort_by_key;
+use crate::util::radix::radix_sort_idx_by_key;
 
 /// One incoming write at a destination process, in destination coordinates.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -66,31 +66,51 @@ pub struct WriteSeg {
     pub src_delta: usize,
 }
 
-/// Resolve write conflicts among `descs`.
-///
-/// Returns non-overlapping segments covering exactly the union of all
-/// destination intervals, each byte assigned to its deterministic winner.
-/// Runtime `O(m)` radix sort + `O(m·k)` sweep where `k` is the maximum
-/// overlap depth (`k = 1` for conflict-free supersteps — the common case —
-/// giving the paper's `O(m + h)` bound).
+/// Reusable working memory for [`resolve_writes_into`]: the sync engine
+/// threads one of these per process through every superstep so the
+/// steady-state resolution allocates nothing.
+#[derive(Debug, Default)]
+pub struct ResolveScratch {
+    order: Vec<u32>,
+    sort_tmp: Vec<u32>,
+    bounds: Vec<usize>,
+    active: Vec<u32>,
+}
+
+/// Resolve write conflicts among `descs` (allocating convenience wrapper
+/// around [`resolve_writes_into`]).
 pub fn resolve_writes(descs: &[WriteDesc]) -> Vec<WriteSeg> {
-    let mut order: Vec<usize> = (0..descs.len()).filter(|&i| descs[i].len > 0).collect();
+    let mut segs = Vec::new();
+    resolve_writes_into(descs, &mut ResolveScratch::default(), &mut segs);
+    segs
+}
+
+/// Resolve write conflicts among `descs` into `segs`, reusing `sc`.
+///
+/// `segs` receives non-overlapping segments covering exactly the union of
+/// all destination intervals, each byte assigned to its deterministic
+/// winner. Runtime `O(m)` radix sort + `O(m·k)` sweep where `k` is the
+/// maximum overlap depth (`k = 1` for conflict-free supersteps — the common
+/// case — giving the paper's `O(m + h)` bound).
+pub fn resolve_writes_into(descs: &[WriteDesc], sc: &mut ResolveScratch, segs: &mut Vec<WriteSeg>) {
+    segs.clear();
+    let ResolveScratch { order, sort_tmp, bounds, active } = sc;
+    order.clear();
+    order.extend((0..descs.len() as u32).filter(|&i| descs[i as usize].len > 0));
     // Sort by (slot, start offset) as two stable radix passes — least
     // significant key first. Packing both into one u64 would truncate the
     // slot key (the kind bit lives at bit 32), letting a Local and a Global
     // slot with equal low index bits interleave and split one slot's run,
     // which would skip conflict resolution between its descriptors.
-    radix_sort_by_key(&mut order, |&i| descs[i].dst_off as u64);
-    radix_sort_by_key(&mut order, |&i| descs[i].slot_key());
+    radix_sort_idx_by_key(order, sort_tmp, |i| descs[i as usize].dst_off as u64);
+    radix_sort_idx_by_key(order, sort_tmp, |i| descs[i as usize].slot_key());
 
-    let mut segs: Vec<WriteSeg> = Vec::with_capacity(order.len());
-    let mut active: Vec<usize> = Vec::new(); // descriptor indices, any order
     let mut i = 0;
     while i < order.len() {
-        let slot_key = descs[order[i]].slot_key();
+        let slot_key = descs[order[i] as usize].slot_key();
         // Gather the run of descriptors in this slot.
         let mut j = i;
-        while j < order.len() && descs[order[j]].slot_key() == slot_key {
+        while j < order.len() && descs[order[j] as usize].slot_key() == slot_key {
             j += 1;
         }
         let run = &order[i..j];
@@ -98,8 +118,8 @@ pub fn resolve_writes(descs: &[WriteDesc]) -> Vec<WriteSeg> {
         // Fast path: strictly non-overlapping run (common case).
         let mut overlap = false;
         for w in run.windows(2) {
-            let a = &descs[w[0]];
-            let b = &descs[w[1]];
+            let a = &descs[w[0] as usize];
+            let b = &descs[w[1] as usize];
             if a.dst_off + a.len > b.dst_off {
                 overlap = true;
                 break;
@@ -107,6 +127,7 @@ pub fn resolve_writes(descs: &[WriteDesc]) -> Vec<WriteSeg> {
         }
         if !overlap {
             for &d in run {
+                let d = d as usize;
                 segs.push(WriteSeg {
                     desc: d,
                     dst_off: descs[d].dst_off,
@@ -119,10 +140,10 @@ pub fn resolve_writes(descs: &[WriteDesc]) -> Vec<WriteSeg> {
         }
 
         // Sweep over interval boundaries within the slot.
-        let mut bounds: Vec<usize> = Vec::with_capacity(run.len() * 2);
+        bounds.clear();
         for &d in run {
-            bounds.push(descs[d].dst_off);
-            bounds.push(descs[d].dst_off + descs[d].len);
+            bounds.push(descs[d as usize].dst_off);
+            bounds.push(descs[d as usize].dst_off + descs[d as usize].len);
         }
         bounds.sort_unstable();
         bounds.dedup();
@@ -130,18 +151,25 @@ pub fn resolve_writes(descs: &[WriteDesc]) -> Vec<WriteSeg> {
         let mut cursor = 0usize; // next index in `run` to activate
         for w in bounds.windows(2) {
             let (lo, hi) = (w[0], w[1]);
-            while cursor < run.len() && descs[run[cursor]].dst_off <= lo {
+            while cursor < run.len() && descs[run[cursor] as usize].dst_off <= lo {
                 active.push(run[cursor]);
                 cursor += 1;
             }
-            active.retain(|&d| descs[d].dst_off + descs[d].len > lo);
+            active.retain(|&d| {
+                let d = &descs[d as usize];
+                d.dst_off + d.len > lo
+            });
             // Winner: highest (src_pid, seq) covering [lo, hi).
             let winner = active
                 .iter()
                 .copied()
-                .filter(|&d| descs[d].dst_off <= lo && descs[d].dst_off + descs[d].len >= hi)
-                .max_by_key(|&d| descs[d].order_key());
+                .filter(|&d| {
+                    let d = &descs[d as usize];
+                    d.dst_off <= lo && d.dst_off + d.len >= hi
+                })
+                .max_by_key(|&d| descs[d as usize].order_key());
             if let Some(d) = winner {
+                let d = d as usize;
                 // Merge with previous segment when contiguous & same desc.
                 if let Some(last) = segs.last_mut() {
                     if last.desc == d && last.dst_off + last.len == lo {
@@ -159,7 +187,6 @@ pub fn resolve_writes(descs: &[WriteDesc]) -> Vec<WriteSeg> {
         }
         i = j;
     }
-    segs
 }
 
 /// A byte interval in a destination slot, for read/write legality checks.
@@ -181,41 +208,51 @@ impl Interval {
     }
 }
 
+/// One endpoint event of the read/write legality sweep.
+#[derive(Debug, Clone, Copy)]
+struct Ev {
+    key: u64,
+    pos: usize,
+    end: usize,
+    is_read: bool,
+    idx: usize,
+}
+
+/// Reusable event buffer for [`find_read_write_overlap_scratch`].
+#[derive(Debug, Default)]
+pub struct OverlapScratch {
+    evs: Vec<Ev>,
+}
+
+/// Checked-mode legality (allocating convenience wrapper around
+/// [`find_read_write_overlap_scratch`]).
+pub fn find_read_write_overlap(reads: &[Interval], writes: &[Interval]) -> Option<(usize, usize)> {
+    find_read_write_overlap_scratch(reads, writes, &mut OverlapScratch::default())
+}
+
 /// Checked-mode legality: detect any byte that is both read and written in
 /// the same superstep on one process (illegal per paper §2.1). Returns the
-/// indices of an offending `(read, write)` pair, if any. `O((n+m) log(n+m))`.
-pub fn find_read_write_overlap(reads: &[Interval], writes: &[Interval]) -> Option<(usize, usize)> {
-    #[derive(Clone, Copy)]
-    struct Ev {
-        key: u64,
-        pos: usize,
-        end: usize,
-        is_read: bool,
-        idx: usize,
-    }
-    let mut evs: Vec<Ev> = Vec::with_capacity(reads.len() + writes.len());
+/// indices of an offending `(read, write)` pair, if any. `O((n+m) log(n+m))`
+/// time, no allocation once `sc` has grown.
+///
+/// Sweep: within each slot run (events sorted by start), an interval of one
+/// polarity overlaps an earlier one of the other polarity iff the running
+/// maximum end of the opposite polarity exceeds its start — complete for
+/// pairwise overlap detection.
+pub fn find_read_write_overlap_scratch(
+    reads: &[Interval],
+    writes: &[Interval],
+    sc: &mut OverlapScratch,
+) -> Option<(usize, usize)> {
+    let evs = &mut sc.evs;
+    evs.clear();
     for (idx, r) in reads.iter().enumerate().filter(|(_, r)| r.len > 0) {
         evs.push(Ev { key: r.slot_key(), pos: r.off, end: r.off + r.len, is_read: true, idx });
     }
     for (idx, w) in writes.iter().enumerate().filter(|(_, w)| w.len > 0) {
         evs.push(Ev { key: w.slot_key(), pos: w.off, end: w.off + w.len, is_read: false, idx });
     }
-    evs.sort_by_key(|e| (e.key, e.pos));
-    for w2 in evs.windows(2) {
-        let (a, b) = (&w2[0], &w2[1]);
-        if a.key == b.key && a.is_read != b.is_read && a.end > b.pos {
-            let (r, w) = if a.is_read { (a.idx, b.idx) } else { (b.idx, a.idx) };
-            return Some((r, w));
-        }
-        // A longer earlier interval can overlap later ones of same polarity
-        // in between; conservative pairwise scan within the slot run:
-        if a.key == b.key && a.is_read == b.is_read {
-            continue;
-        }
-    }
-    // The windows(2) scan misses overlaps separated by same-polarity
-    // intervals; do an exact per-slot merge when the fast scan found nothing
-    // but overlaps may hide. Cheap second pass over slot runs:
+    evs.sort_unstable_by_key(|e| (e.key, e.pos));
     let mut i = 0;
     while i < evs.len() {
         let mut j = i;
@@ -441,6 +478,39 @@ mod tests {
             .find(|s| s.dst_off == 16 && d[s.desc].slot_kind == SlotKind::Global)
             .unwrap();
         assert_eq!(d[winner.desc].src_pid, 2);
+    }
+
+    #[test]
+    fn scratch_reuse_is_equivalent_to_fresh() {
+        use crate::util::rng::XorShift64;
+        let mut rng = XorShift64::new(0xAB);
+        let mut sc = ResolveScratch::default();
+        let mut segs = Vec::new();
+        let mut ov = OverlapScratch::default();
+        for _ in 0..50 {
+            let n = 1 + rng.below_usize(10);
+            let descs: Vec<WriteDesc> = (0..n)
+                .map(|i| {
+                    let off = rng.below_usize(31);
+                    let len = 1 + rng.below_usize(32 - off);
+                    wd(rng.below(2) as u32, off, len, rng.below(4) as Pid, i as u32, i as u32)
+                })
+                .collect();
+            resolve_writes_into(&descs, &mut sc, &mut segs);
+            assert_eq!(segs, resolve_writes(&descs), "reused scratch must not change results");
+            let iv = |off: usize| Interval {
+                slot_kind: SlotKind::Global,
+                slot_index: 0,
+                off,
+                len: 8,
+            };
+            let reads = vec![iv(rng.below_usize(16))];
+            let writes = vec![iv(rng.below_usize(16))];
+            assert_eq!(
+                find_read_write_overlap_scratch(&reads, &writes, &mut ov).is_some(),
+                find_read_write_overlap(&reads, &writes).is_some(),
+            );
+        }
     }
 
     #[test]

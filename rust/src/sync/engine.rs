@@ -1,0 +1,291 @@
+//! The shared 4-phase `lpf_sync` engine (paper §3).
+//!
+//! All four backends implement the *same* superstep strategy:
+//!
+//! 1. barrier + first meta-data exchange (tell destinations what arrives);
+//! 2. destination-side CRCW conflict resolution (+ trim);
+//! 3. the data exchange proper;
+//! 4. final barrier.
+//!
+//! The seed re-implemented that pipeline once per fabric, with per-superstep
+//! `Vec` churn and p² mutexed mailboxes — exactly the per-message software
+//! overhead pMR-style measurements show dominating small-message
+//! performance. This module factors the pipeline out once, running on the
+//! per-process reusable arenas of [`crate::fabric::plan`]:
+//!
+//! * **phase 0** (engine): drain the request queue into the outbox arenas,
+//!   coalescing queue-adjacent contiguous requests so descriptor counts
+//!   track h-relations, not call counts;
+//! * **phase 1** ([`Exchange::exchange_meta`], backend): move descriptors to
+//!   their destinations — shared-memory outbox reads vs. simulated-NIC
+//!   posts, direct all-to-all vs. randomised Bruck;
+//! * **phase 2** (engine): build the destination-side write-descriptor
+//!   table, verify read/write legality in checked mode, resolve CRCW
+//!   conflicts with reusable scratch;
+//! * **phase 3** ([`Exchange::exchange_data`], backend): move the winning
+//!   bytes — destination-side memcpy (shared) vs. trim-notice round trip +
+//!   source push + receiver matching (distributed);
+//! * **phase 4** ([`Exchange::finish`], backend): the final barrier; the
+//!   engine then accounts uniform [`SyncStats`] for every backend.
+//!
+//! In the steady state (capacities warmed up) a superstep performs **zero
+//! heap allocations** on the shared backend — `bench_sync --smoke` asserts
+//! this with a counting global allocator.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::core::{LpfError, Pid, Result, SyncAttr};
+use crate::fabric::plan::{fill_outbox, OutTables, Scratch, SyncPlan};
+use crate::fabric::SyncStats;
+use crate::memory::SharedRegister;
+use crate::queue::Request;
+use crate::sync::conflict::{
+    find_read_write_overlap_scratch, resolve_writes_into, Interval, WriteDesc, WriteSeg,
+};
+
+/// What genuinely differs between backends. Implemented by the in-crate
+/// fabrics; the engine drives one superstep through these hooks.
+pub trait Exchange: Send + Sync {
+    /// Per-superstep read/write legality verification on/off.
+    fn checked(&self) -> bool;
+
+    /// Phase 1: the first meta-data exchange, *including* the barrier after
+    /// which every process's outbox is published.
+    ///
+    /// Contract on return: `s.incoming_puts` holds every put addressed to
+    /// `pid` sorted by `(src_pid, seq)` — the canonical CRCW order — and
+    /// `s.serve_gets` every get that reads `pid`'s memory, sorted by
+    /// `(requester, seq)`.
+    fn exchange_meta(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<()>;
+
+    /// Phase 3: move the winning bytes of `s.segs` (descriptors in
+    /// `s.descs`, payload sources in `s.incoming_puts` / `s.my_gets`).
+    /// Returns the payload bytes written into `pid`'s memory. On error the
+    /// engine aborts the context and propagates.
+    fn exchange_data(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64>;
+
+    /// Phase 4: the final barrier — the h-relation involving `pid` is
+    /// complete when it returns.
+    fn finish(&self, pid: Pid) -> Result<()>;
+
+    /// Mark the context aborted so peers fail at their next collective
+    /// instead of deadlocking (paper §2.1).
+    fn abort_peers(&self, pid: Pid);
+}
+
+/// The backend-independent state of one context's sync pipeline: slot
+/// registers and one [`SyncPlan`] arena per process.
+pub struct SyncEngine {
+    p: Pid,
+    regs: Vec<Arc<SharedRegister>>,
+    plans: Vec<SyncPlan>,
+    /// Request coalescing at queue-drain time (on by default; `bench_sync`
+    /// flips it off for the ablation).
+    coalesce: AtomicBool,
+}
+
+impl SyncEngine {
+    /// Engine for `p` processes.
+    pub fn new(p: Pid) -> Self {
+        assert!(p > 0, "a context needs at least one process");
+        SyncEngine {
+            p,
+            regs: (0..p).map(|_| SharedRegister::new()).collect(),
+            plans: (0..p).map(|_| SyncPlan::new(p)).collect(),
+            coalesce: AtomicBool::new(true),
+        }
+    }
+
+    /// Number of processes.
+    pub fn p(&self) -> Pid {
+        self.p
+    }
+
+    /// The slot register of process `pid`.
+    pub fn register_of(&self, pid: Pid) -> &Arc<SharedRegister> {
+        &self.regs[pid as usize]
+    }
+
+    /// Process `pid`'s outbox (readable by peers between the meta barrier
+    /// and the final barrier — see [`crate::fabric::plan`]).
+    pub fn outbox(&self, pid: Pid) -> &RwLock<OutTables> {
+        &self.plans[pid as usize].outbox
+    }
+
+    /// Per-process transport statistics.
+    pub fn stats(&self, pid: Pid) -> SyncStats {
+        *self.plans[pid as usize].stats.lock().expect("stats poisoned")
+    }
+
+    /// Toggle request coalescing (ablation hook).
+    pub fn set_coalescing(&self, on: bool) {
+        self.coalesce.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether request coalescing is active.
+    pub fn coalescing(&self) -> bool {
+        self.coalesce.load(Ordering::Relaxed)
+    }
+
+    /// Run one superstep of the 4-phase strategy for `pid` over `ex`.
+    pub fn superstep<E: Exchange>(
+        &self,
+        ex: &E,
+        pid: Pid,
+        reqs: &[Request],
+        attr: SyncAttr,
+    ) -> Result<()> {
+        let plan = &self.plans[pid as usize];
+        let mut guard = plan.scratch.lock().expect("scratch poisoned");
+        let s = &mut *guard;
+
+        // ---- phase 0: coalesce + group the drained queue into the outbox.
+        // A validation failure here happens before any barrier: abort so
+        // peers observe PeerAborted instead of hanging at the meta barrier
+        // (matters for direct Fabric users; Context pre-validates pids).
+        let sent = match fill_outbox(self.p, pid, reqs, self.coalescing(), s, &plan.outbox) {
+            Ok(n) => n,
+            Err(e) => {
+                ex.abort_peers(pid);
+                return Err(e);
+            }
+        };
+
+        // ---- phase 1: first meta-data exchange (backend).
+        ex.exchange_meta(pid, self, s)?;
+
+        // ---- phase 2: destination-side write-descriptor table.
+        {
+            let Scratch { descs, incoming_puts, my_gets, put_count, .. } = s;
+            descs.clear();
+            *put_count = incoming_puts.len();
+            for (i, m) in incoming_puts.iter().enumerate() {
+                descs.push(WriteDesc {
+                    slot_kind: m.dst_slot.kind(),
+                    slot_index: m.dst_slot.index(),
+                    dst_off: m.dst_off,
+                    len: m.len,
+                    src_pid: m.src_pid,
+                    seq: m.seq,
+                    tag: i as u32,
+                });
+            }
+            for (i, g) in my_gets.iter().enumerate() {
+                descs.push(WriteDesc {
+                    slot_kind: g.dst_slot.kind(),
+                    slot_index: g.dst_slot.index(),
+                    dst_off: g.dst_off,
+                    len: g.len,
+                    src_pid: pid,
+                    seq: g.seq,
+                    tag: (*put_count + i) as u32,
+                });
+            }
+        }
+
+        // ---- checked mode: read/write legality on MY memory. Reads are my
+        // puts' sources plus the gets I serve; writes the incoming table.
+        if ex.checked() {
+            let Scratch { reads, writes, cputs, serve_gets, descs, overlap, .. } = s;
+            reads.clear();
+            writes.clear();
+            for m in cputs.iter() {
+                reads.push(Interval {
+                    slot_kind: m.src_slot.kind(),
+                    slot_index: m.src_slot.index(),
+                    off: m.src_off,
+                    len: m.len,
+                });
+            }
+            for g in serve_gets.iter() {
+                reads.push(Interval {
+                    slot_kind: g.src_slot.kind(),
+                    slot_index: g.src_slot.index(),
+                    off: g.src_off,
+                    len: g.len,
+                });
+            }
+            for d in descs.iter() {
+                writes.push(Interval {
+                    slot_kind: d.slot_kind,
+                    slot_index: d.slot_index,
+                    off: d.dst_off,
+                    len: d.len,
+                });
+            }
+            if find_read_write_overlap_scratch(reads, writes, overlap).is_some() {
+                ex.abort_peers(pid);
+                return Err(LpfError::Illegal(
+                    "read and write of the same memory in one superstep".into(),
+                ));
+            }
+        }
+
+        // ---- CRCW conflict resolution (or the vouched-disjoint fast path).
+        let (desc_bytes, seg_bytes);
+        {
+            let Scratch { descs, segs, resolve, .. } = s;
+            if attr.assume_no_conflicts {
+                segs.clear();
+                segs.extend(descs.iter().enumerate().filter(|(_, d)| d.len > 0).map(
+                    |(i, d)| WriteSeg { desc: i, dst_off: d.dst_off, len: d.len, src_delta: 0 },
+                ));
+            } else {
+                resolve_writes_into(descs, resolve, segs);
+            }
+            desc_bytes = descs.iter().map(|d| d.len as u64).sum::<u64>();
+            seg_bytes = segs.iter().map(|g| g.len as u64).sum::<u64>();
+        }
+
+        // ---- phase 3: data exchange (backend).
+        let bytes_in = match ex.exchange_data(pid, self, s) {
+            Ok(b) => b,
+            Err(e) => {
+                ex.abort_peers(pid);
+                return Err(e);
+            }
+        };
+
+        // bytes_out is attributed at the destination, where the post-trim
+        // winners are known: puts to their source, gets to their server.
+        // This happens *before* the final barrier so that every process's
+        // stats are fully settled by the time its own sync() returns.
+        {
+            let Scratch { segs, descs, incoming_puts, my_gets, put_count, bytes_out_by_src, .. } =
+                s;
+            bytes_out_by_src.clear();
+            bytes_out_by_src.resize(self.p as usize, 0);
+            for seg in segs.iter() {
+                let d = &descs[seg.desc];
+                let src = if (d.tag as usize) < *put_count {
+                    incoming_puts[d.tag as usize].src_pid
+                } else {
+                    my_gets[d.tag as usize - *put_count].server
+                };
+                bytes_out_by_src[src as usize] += seg.len as u64;
+            }
+            for (src, &b) in bytes_out_by_src.iter().enumerate() {
+                if b > 0 {
+                    self.plans[src].stats.lock().expect("stats poisoned").bytes_out += b;
+                }
+            }
+        }
+
+        // ---- uniform statistics (identical accounting on every backend).
+        // Also pre-barrier: once any process returns from sync(), every
+        // process's counters for this superstep are settled. (On a failed
+        // final barrier the counters still include this superstep — the
+        // context is fatally dead at that point anyway.)
+        {
+            let mut st = plan.stats.lock().expect("stats poisoned");
+            st.syncs += 1;
+            st.bytes_in += bytes_in;
+            st.msgs_out += sent as u64;
+            st.bytes_trimmed += desc_bytes - seg_bytes;
+        }
+
+        // ---- phase 4: final barrier.
+        ex.finish(pid)
+    }
+}

@@ -1,3 +1,6 @@
-//! The `lpf_sync` engine building blocks shared by all fabrics.
+//! The `lpf_sync` engine shared by all fabrics: the 4-phase superstep
+//! pipeline ([`engine`]), destination-side CRCW conflict resolution
+//! ([`conflict`]), and the meta-data exchange schedules ([`metadata`]).
 pub mod conflict;
+pub mod engine;
 pub mod metadata;

@@ -6,33 +6,54 @@
 //! critical path and break the stated bound, so we radix-sort descriptor
 //! keys here: 8-bit digits, early exit on already-uniform digits.
 
-/// Sort `items` ascending and stably by `key(item)`.
-///
-/// O(passes · n) time, O(n) scratch. Stability matters: the conflict
-/// resolver relies on stable order for deterministic CRCW winners.
+/// Sort `items` ascending and stably by `key(item)`: the convenience form
+/// of [`radix_sort_idx_by_key`] (sorts an index permutation, then applies
+/// it — one radix core, two entry points).
 pub fn radix_sort_by_key<T, F: Fn(&T) -> u64>(items: &mut Vec<T>, key: F) {
     let n = items.len();
     if n <= 1 {
         return;
     }
-    // Small inputs: insertion-style via stable std sort on the key is not
-    // allowed (comparison); but a 2-pass counting sort on tiny n costs more
-    // than it saves only below ~8 elements, where cost is negligible anyway.
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let mut scratch = Vec::new();
+    radix_sort_idx_by_key(&mut idx, &mut scratch, |i| key(&items[i as usize]));
+    // Apply the permutation.
+    let mut taken: Vec<Option<T>> = items.drain(..).map(Some).collect();
+    items.extend(
+        idx.iter().map(|&i| taken[i as usize].take().expect("permutation is a bijection")),
+    );
+}
+
+/// Stably sort the index vector `idx` ascending by `key(i)`, reusing
+/// `scratch` as the ping-pong buffer (LSB radix, 8-bit digits, early exit
+/// on uniform digits).
+///
+/// Allocation-free once `scratch` has grown to `idx.len()`: this is the
+/// variant the sync engine threads its per-process scratch through so the
+/// steady-state superstep never touches the heap.
+pub fn radix_sort_idx_by_key(
+    idx: &mut Vec<u32>,
+    scratch: &mut Vec<u32>,
+    key: impl Fn(u32) -> u64,
+) {
+    let n = idx.len();
+    if n <= 1 {
+        return;
+    }
     let mut max_key = 0u64;
-    for it in items.iter() {
-        max_key |= key(it);
+    for &i in idx.iter() {
+        max_key |= key(i);
     }
     let passes = ((64 - max_key.leading_zeros() as usize) + 7) / 8;
-    let mut src: Vec<(u64, usize)> = items.iter().enumerate().map(|(i, t)| (key(t), i)).collect();
-    let mut dst: Vec<(u64, usize)> = vec![(0, 0); n];
+    scratch.clear();
+    scratch.resize(n, 0);
     let mut counts = [0usize; 256];
     for pass in 0..passes {
         let shift = pass * 8;
         counts.fill(0);
-        for &(k, _) in src.iter() {
-            counts[((k >> shift) & 0xff) as usize] += 1;
+        for &i in idx.iter() {
+            counts[((key(i) >> shift) & 0xff) as usize] += 1;
         }
-        // skip pass if all keys share this digit
         if counts.iter().any(|&c| c == n) {
             continue;
         }
@@ -42,20 +63,13 @@ pub fn radix_sort_by_key<T, F: Fn(&T) -> u64>(items: &mut Vec<T>, key: F) {
             *c = sum;
             sum += t;
         }
-        for &(k, i) in src.iter() {
-            let d = ((k >> shift) & 0xff) as usize;
-            dst[counts[d]] = (k, i);
+        for &i in idx.iter() {
+            let d = ((key(i) >> shift) & 0xff) as usize;
+            scratch[counts[d]] = i;
             counts[d] += 1;
         }
-        std::mem::swap(&mut src, &mut dst);
+        std::mem::swap(idx, scratch);
     }
-    // Apply the permutation.
-    let mut out = Vec::with_capacity(n);
-    let mut taken: Vec<Option<T>> = items.drain(..).map(Some).collect();
-    for &(_, i) in src.iter() {
-        out.push(taken[i].take().expect("permutation is a bijection"));
-    }
-    *items = out;
 }
 
 #[cfg(test)]
@@ -96,5 +110,20 @@ mod tests {
         let mut v = vec![u64::MAX, 0, 1 << 63, 42];
         radix_sort_by_key(&mut v, |&x| x);
         assert_eq!(v, vec![0, 42, 1 << 63, u64::MAX]);
+    }
+
+    #[test]
+    fn idx_sort_matches_stable_sort_and_reuses_scratch() {
+        let mut rng = XorShift64::new(7);
+        let mut scratch = Vec::new();
+        for _ in 0..50 {
+            let n = rng.below_usize(40);
+            let keys: Vec<u64> = (0..n).map(|_| rng.next_u64() & 0x3FF).collect();
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            radix_sort_idx_by_key(&mut idx, &mut scratch, |i| keys[i as usize]);
+            let mut expect: Vec<u32> = (0..n as u32).collect();
+            expect.sort_by_key(|&i| keys[i as usize]); // stable
+            assert_eq!(idx, expect);
+        }
     }
 }
