@@ -13,7 +13,8 @@
 //! Run: `cargo run --release --example quickstart -- 1000 500`
 
 use lpf::core::Args;
-use lpf::ctx::{exec, Context, Platform, Root};
+use lpf::ctx::{Context, Platform, Root};
+use lpf::pool::Pool;
 
 const OK: u32 = 0;
 const ILLEGAL_INPUT: u32 = 1;
@@ -77,7 +78,11 @@ fn spmd(ctx: &mut Context, args: Args) -> u32 {
     gerr
 }
 
-/// Algorithm 1: sequential main calling lpf_exec.
+/// Algorithm 1: sequential main launching SPMD jobs — pool-first. A
+/// [`Pool`] spawns the `p` processes once; every `exec` on it is a warm
+/// job (no spawn, no fabric rebuild). For a single one-shot job,
+/// `lpf::exec(&root, MAX_P, spmd, args)` remains available and is sugar
+/// for exactly this with a transient pool.
 fn main() {
     let argv: Vec<String> = std::env::args().collect();
     let rows: u32 = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(1000);
@@ -87,7 +92,12 @@ fn main() {
     input.extend_from_slice(&cols.to_le_bytes());
 
     let root = Root::new(Platform::shared()); // LPF_ROOT
-    let outs = exec(&root, lpf::core::MAX_P, spmd, Args::input(input)).unwrap();
+    let p = lpf::core::MAX_P.min(8);
+    let pool = Pool::new(root.platform().clone(), p); // spawn the team once
+
+    // serve the request on the warm team (a server would loop here,
+    // dispatching one job per incoming query at zero spawn cost)
+    let outs = pool.exec(spmd, Args::input(input)).unwrap();
     let out = outs[0];
     println!("exit code: {out}");
     std::process::exit(out as i32);

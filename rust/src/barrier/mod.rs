@@ -12,11 +12,38 @@
 //! * [`AutoBarrier`] — picks between the two by a quick online calibration,
 //!   mirroring the auto-tuning the paper cites.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 use crate::core::Pid;
+
+/// Process-wide cache of calibration outcomes: `p → use dissemination?`.
+/// One cell per `p`: the map lock is only held for map access, while the
+/// measurement runs under the cell's own `OnceLock` — concurrent
+/// [`ensure_tuned`] calls for one `p` calibrate exactly once, and
+/// [`AutoBarrier::tuned`] (fabric construction) never blocks on a
+/// calibration in progress (it falls back to the heuristic until the
+/// verdict lands).
+fn tuned_cache() -> &'static Mutex<HashMap<u32, Arc<OnceLock<bool>>>> {
+    static CACHE: OnceLock<Mutex<HashMap<u32, Arc<OnceLock<bool>>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Calibrate flat vs dissemination for `p` participants once per process
+/// (subsequent calls are a cache hit). Runs at pool startup — off the job
+/// dispatch path — mirroring the paper's "auto-tuned hierarchical barrier".
+pub fn ensure_tuned(p: u32) {
+    let cell = {
+        let mut cache = tuned_cache().lock().expect("tune cache poisoned");
+        cache.entry(p).or_default().clone()
+    };
+    cell.get_or_init(|| {
+        let (_chosen, t_flat, t_diss) = AutoBarrier::calibrate(p, 16);
+        t_diss < t_flat
+    });
+}
 
 /// A reusable barrier for a fixed set of `p` participants.
 pub trait Barrier: Send + Sync {
@@ -212,11 +239,29 @@ impl AutoBarrier {
         }
     }
 
+    /// Like [`new`](AutoBarrier::new), but consults the process-wide
+    /// calibration cache [`ensure_tuned`] populates at pool startup; falls
+    /// back to the size heuristic when no measurement exists for this `p`
+    /// (including while one is still running). Fabrics use this
+    /// constructor so a pool's one-time tuning carries to the team's
+    /// barrier.
+    pub fn tuned(p: u32) -> Self {
+        let verdict = tuned_cache()
+            .lock()
+            .expect("tune cache poisoned")
+            .get(&p)
+            .and_then(|cell| cell.get().copied());
+        match verdict {
+            Some(true) => AutoBarrier::Dissemination(DisseminationBarrier::new(p)),
+            Some(false) => AutoBarrier::Flat(FlatBarrier::new(p)),
+            None => AutoBarrier::new(p),
+        }
+    }
+
     /// Measure both variants with `iters` episodes of `p` threads and pick
     /// the faster. Used by the ablation bench; `new` uses the cached
     /// heuristic so context creation stays O(p).
     pub fn calibrate(p: u32, iters: u32) -> (Self, f64, f64) {
-        use std::sync::Arc;
         fn time_it(b: Arc<dyn Barrier>, p: u32, iters: u32) -> f64 {
             let start = std::time::Instant::now();
             std::thread::scope(|s| {

@@ -8,6 +8,80 @@
 
 use std::time::Instant;
 
+pub mod alloc_counter {
+    //! Allocation counting for the bench smoke gates (`bench_sync`,
+    //! `bench_exec`): a transparent [`GlobalAlloc`] wrapper whose counter
+    //! runs only between [`start`] and [`stop`]. Each binary declares
+    //!
+    //! ```ignore
+    //! #[global_allocator]
+    //! static GLOBAL: lpf::benchkit::alloc_counter::CountingAlloc = CountingAlloc;
+    //! ```
+    //!
+    //! so the counting logic — what counts as an allocation — cannot
+    //! diverge between the two gates.
+
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    /// Counts `alloc`/`alloc_zeroed`/`realloc` calls while tracking is on;
+    /// otherwise a transparent wrapper around the system allocator.
+    pub struct CountingAlloc;
+
+    static TRACK: AtomicBool = AtomicBool::new(false);
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            if TRACK.load(Ordering::Relaxed) {
+                ALLOCS.fetch_add(1, Ordering::Relaxed);
+            }
+            System.alloc(layout)
+        }
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            if TRACK.load(Ordering::Relaxed) {
+                ALLOCS.fetch_add(1, Ordering::Relaxed);
+            }
+            System.alloc_zeroed(layout)
+        }
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            if TRACK.load(Ordering::Relaxed) {
+                ALLOCS.fetch_add(1, Ordering::Relaxed);
+            }
+            System.realloc(ptr, layout, new_size)
+        }
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    /// Zero the counter and start counting (process-wide).
+    pub fn start() {
+        ALLOCS.store(0, Ordering::SeqCst);
+        TRACK.store(true, Ordering::SeqCst);
+    }
+
+    /// Stop counting.
+    pub fn stop() {
+        TRACK.store(false, Ordering::SeqCst);
+    }
+
+    /// Allocations counted since the last [`start`].
+    pub fn count() -> u64 {
+        ALLOCS.load(Ordering::SeqCst)
+    }
+}
+
+/// A finite float for hand-rolled JSON output (`null` otherwise) — shared
+/// by the bench binaries' report writers.
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "null".into()
+    }
+}
+
 /// A set of measurements (seconds or any unit).
 #[derive(Debug, Clone, Default)]
 pub struct Samples {
@@ -53,7 +127,9 @@ impl Samples {
         self.values.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
-    /// Median (of a copy).
+    /// Median (of a copy): the upper middle element for even counts —
+    /// deliberately not [`percentile`](Samples::percentile)`(0.5)`, whose
+    /// nearest-rank rule picks the lower middle.
     pub fn median(&self) -> f64 {
         if self.values.is_empty() {
             return f64::NAN;
@@ -61,6 +137,18 @@ impl Samples {
         let mut v = self.values.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         v[v.len() / 2]
+    }
+
+    /// `q`-quantile (of a copy) by the nearest-rank method, `q ∈ [0, 1]`
+    /// — `percentile(0.99)` is the p99 latency bench_exec reports.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.values.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
+        v[idx]
     }
 }
 

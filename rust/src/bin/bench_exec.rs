@@ -1,0 +1,309 @@
+//! bench_exec — the job-dispatch harness for the hot-team executor.
+//!
+//! Measures jobs/sec and p50/p99 job latency for small SPMD jobs, **cold**
+//! (one-shot `exec`: spawn `p` threads, build the fabric, tear down) vs
+//! **warm** (a shared [`Pool`]: the same closure as one job on the resident
+//! team). Jobs: empty SPMD, a 1-superstep PageRank iteration (the
+//! allgather + combine of one power-iteration step at n = 1024), and a
+//! 2^10 BSP FFT. Writes `BENCH_exec.json`.
+//!
+//! `--smoke` (CI) additionally asserts the executor's warm-path guarantees:
+//!
+//! * a warm job dispatch performs **zero thread spawns** (counted by the
+//!   crate's spawn hook, [`lpf::util::thread_spawn_count`]);
+//! * a warm prepared-job dispatch performs **zero heap allocations**
+//!   (counted by a global-allocator wrapper, as in `bench_sync`);
+//! * warm jobs/sec ≥ 5× cold jobs/sec for the empty job at the largest
+//!   local `p`.
+//!
+//! Any violation exits non-zero and fails the CI job.
+//!
+//! Usage: `bench_exec [--smoke] [--out PATH]`
+
+use std::time::Instant;
+
+use lpf::benchkit::{alloc_counter, json_f64, Samples};
+use lpf::bsplib::Bsp;
+use lpf::core::{Args, Pid, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::ctx::{exec, Context, Platform, Root};
+use lpf::fft::bsp::{Backend, BspFft};
+use lpf::pool::Pool;
+use lpf::util::rng::XorShift64;
+use lpf::util::thread_spawn_count;
+
+#[global_allocator]
+static GLOBAL: alloc_counter::CountingAlloc = alloc_counter::CountingAlloc;
+
+// ---------------------------------------------------------------- the jobs
+
+fn empty_job(_ctx: &mut Context, _args: Args) {}
+
+/// One superstep of a PageRank power iteration at `n` vertices: allgather
+/// the rank blocks (p puts), fence, local combine — the per-query shape of
+/// the ROADMAP's "many small PageRank jobs" scenario.
+fn pr_step_job(n: usize) -> impl Fn(&mut Context, Args) + Sync {
+    move |ctx, _| {
+        let p = ctx.p();
+        let m = (n / p as usize).max(1);
+        ctx.resize_memory_register(2).unwrap();
+        ctx.resize_message_queue(2 * p as usize).unwrap();
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        let mine = ctx.register_global(4 * m).unwrap();
+        let all = ctx.register_global(4 * m * p as usize).unwrap();
+        let seed = 1.0f32 / n as f32;
+        ctx.with_slot_mut(mine, |b| {
+            for w in b.chunks_exact_mut(4) {
+                w.copy_from_slice(&seed.to_le_bytes());
+            }
+        })
+        .unwrap();
+        for k in 0..p {
+            ctx.put(mine, 0, k, all, 4 * m * ctx.pid() as usize, 4 * m, MSG_DEFAULT).unwrap();
+        }
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        let mut acc = 0f32;
+        ctx.with_slot(all, |b| {
+            for w in b.chunks_exact(4) {
+                acc += f32::from_le_bytes(w.try_into().unwrap());
+            }
+        })
+        .unwrap();
+        std::hint::black_box(acc);
+    }
+}
+
+/// A full 2^10 BSP FFT request: plan + one transform, native local compute.
+fn fft_job(n: usize) -> impl Fn(&mut Context, Args) + Sync {
+    move |ctx, _| {
+        let p = ctx.p();
+        let m = n / p as usize;
+        let mut bsp = Bsp::begin_with_staging(ctx, 8, 4 * p as usize + 8, 64).unwrap();
+        bsp.sync().unwrap();
+        let fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+        bsp.sync().unwrap();
+        let mut rng = XorShift64::new(0xF17 + n as u64 + ctx.pid() as u64);
+        let re: Vec<f32> = (0..m).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        let im: Vec<f32> = (0..m).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        let out = fft.run(&mut bsp, &re, &im).unwrap();
+        std::hint::black_box(&out);
+        bsp.end().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------- timing
+
+fn time_cold<F>(platform: &Platform, p: Pid, f: &F, warmup: u32, iters: u32) -> Samples
+where
+    F: Fn(&mut Context, Args) + Sync,
+{
+    let root = Root::new(platform.clone()).with_max_procs(p);
+    for _ in 0..warmup {
+        exec(&root, p, f, Args::none()).unwrap();
+    }
+    let mut vals = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        exec(&root, p, f, Args::none()).unwrap();
+        vals.push(t.elapsed().as_nanos() as f64);
+    }
+    Samples::from(vals)
+}
+
+fn time_warm<F>(pool: &Pool, f: &F, warmup: u32, iters: u32) -> Samples
+where
+    F: Fn(&mut Context, Args) + Sync,
+{
+    for _ in 0..warmup {
+        pool.exec(f, Args::none()).unwrap();
+    }
+    let mut vals = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        pool.exec(f, Args::none()).unwrap();
+        vals.push(t.elapsed().as_nanos() as f64);
+    }
+    Samples::from(vals)
+}
+
+struct Row {
+    job: &'static str,
+    mode: &'static str,
+    p: Pid,
+    iters: u32,
+    jobs_per_sec: f64,
+    p50_ns: f64,
+    p99_ns: f64,
+}
+
+fn row(job: &'static str, mode: &'static str, p: Pid, iters: u32, s: &Samples) -> Row {
+    Row {
+        job,
+        mode,
+        p,
+        iters,
+        jobs_per_sec: 1e9 / s.mean(),
+        p50_ns: s.percentile(0.50),
+        p99_ns: s.percentile(0.99),
+    }
+}
+
+// ---------------------------------------------------------------- checks
+
+/// Warm dispatch must spawn no threads: run `iters` jobs on a warmed pool
+/// and return the spawn-counter delta.
+fn spawn_check(pool: &Pool, iters: u32) -> u64 {
+    pool.exec(&empty_job, Args::none()).unwrap(); // ensure fully warm
+    let before = thread_spawn_count();
+    for _ in 0..iters {
+        pool.exec(&empty_job, Args::none()).unwrap();
+    }
+    thread_spawn_count() - before
+}
+
+/// Warm prepared-job dispatch must not allocate: count allocations across
+/// `iters` steady-state dispatches of the empty job.
+fn alloc_check(pool: &Pool, iters: u32) -> u64 {
+    let job = pool.prepare(empty_job);
+    for _ in 0..20 {
+        pool.run_prepared(&job, Args::none()).unwrap();
+    }
+    alloc_counter::start();
+    for _ in 0..iters {
+        pool.run_prepared(&job, Args::none()).unwrap();
+    }
+    alloc_counter::stop();
+    alloc_counter::count()
+}
+
+// ---------------------------------------------------------------- output
+
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &str,
+    p_max: Pid,
+    rows: &[Row],
+    spawns: (u32, u64),
+    allocs: (u32, u64),
+    speedup: f64,
+) {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"bench_exec/v1\",\n");
+    s.push_str(&format!("  \"p_max\": {p_max},\n"));
+    s.push_str(&format!(
+        "  \"spawn_check\": {{ \"warm_jobs\": {}, \"thread_spawns\": {} }},\n",
+        spawns.0, spawns.1
+    ));
+    s.push_str(&format!(
+        "  \"alloc_check\": {{ \"warm_dispatches\": {}, \"allocations\": {} }},\n",
+        allocs.0, allocs.1
+    ));
+    s.push_str(&format!(
+        "  \"empty_warm_over_cold\": {},\n  \"jobs\": [\n",
+        json_f64(speedup)
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"job\": \"{}\", \"mode\": \"{}\", \"p\": {}, \"iters\": {}, \
+             \"jobs_per_sec\": {}, \"p50_ns\": {}, \"p99_ns\": {} }}{}\n",
+            r.job,
+            r.mode,
+            r.p,
+            r.iters,
+            json_f64(r.jobs_per_sec),
+            json_f64(r.p50_ns),
+            json_f64(r.p99_ns),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).expect("write BENCH_exec.json");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let out = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_exec.json".to_string());
+
+    // "largest local p": the host's parallelism, capped to the paper-scale
+    // process counts this container targets, rounded down to a power of
+    // two (the BSP FFT requires p | n with power-of-two splits).
+    let hw: Pid = std::thread::available_parallelism()
+        .map(|n| n.get() as Pid)
+        .unwrap_or(4)
+        .clamp(2, 8);
+    let p_max: Pid = 1 << (Pid::BITS - 1 - hw.leading_zeros());
+    let platform = Platform::shared().checked(false);
+
+    let (cold_iters, warm_iters, pr_iters, fft_iters) =
+        if smoke { (15u32, 200u32, 40u32, 10u32) } else { (40, 1000, 200, 40) };
+
+    let mut rows = Vec::new();
+    let pool = Pool::new(platform.clone(), p_max);
+
+    // empty SPMD: pure dispatch cost
+    let cold_empty = time_cold(&platform, p_max, &empty_job, 3, cold_iters);
+    let warm_empty = time_warm(&pool, &empty_job, 20, warm_iters);
+    rows.push(row("empty", "cold", p_max, cold_iters, &cold_empty));
+    rows.push(row("empty", "warm", p_max, warm_iters, &warm_empty));
+
+    // 1-superstep PageRank iteration
+    let pr = pr_step_job(1024);
+    let cold_pr = time_cold(&platform, p_max, &pr, 2, pr_iters.min(cold_iters));
+    let warm_pr = time_warm(&pool, &pr, 5, pr_iters);
+    rows.push(row("pagerank_step_1k", "cold", p_max, pr_iters.min(cold_iters), &cold_pr));
+    rows.push(row("pagerank_step_1k", "warm", p_max, pr_iters, &warm_pr));
+
+    // 2^10 FFT request
+    let fft = fft_job(1 << 10);
+    let cold_fft = time_cold(&platform, p_max, &fft, 1, fft_iters.min(cold_iters));
+    let warm_fft = time_warm(&pool, &fft, 2, fft_iters);
+    rows.push(row("fft_2p10", "cold", p_max, fft_iters.min(cold_iters), &cold_fft));
+    rows.push(row("fft_2p10", "warm", p_max, fft_iters, &warm_fft));
+
+    for r in &rows {
+        eprintln!(
+            "{:>16} {:>4} p={}  {:>12.0} jobs/s  p50={:>10.0} ns  p99={:>10.0} ns",
+            r.job, r.mode, r.p, r.jobs_per_sec, r.p50_ns, r.p99_ns
+        );
+    }
+
+    // medians resist scheduler noise on the shared CI core
+    let speedup = cold_empty.percentile(0.5) / warm_empty.percentile(0.5);
+    eprintln!("empty job warm-over-cold speedup: {speedup:.1}x");
+
+    let spawn_jobs: u32 = 50;
+    let spawns = spawn_check(&pool, spawn_jobs);
+    eprintln!("spawn check: {spawns} thread spawns over {spawn_jobs} warm jobs");
+
+    let alloc_jobs: u32 = 100;
+    let allocs = alloc_check(&pool, alloc_jobs);
+    eprintln!("alloc check: {allocs} allocations over {alloc_jobs} warm dispatches");
+
+    write_json(&out, p_max, &rows, (spawn_jobs, spawns), (alloc_jobs, allocs), speedup);
+    eprintln!("wrote {out}");
+
+    if smoke {
+        let mut failed = false;
+        if spawns != 0 {
+            eprintln!("FAIL: warm-pool jobs spawned {spawns} threads (expected 0)");
+            failed = true;
+        }
+        if allocs != 0 {
+            eprintln!("FAIL: warm prepared dispatches allocated {allocs} times (expected 0)");
+            failed = true;
+        }
+        if speedup.is_nan() || speedup < 5.0 {
+            eprintln!("FAIL: warm jobs/sec only {speedup:.1}x cold (need >= 5x)");
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        eprintln!("OK: zero spawns, zero allocations, {speedup:.1}x >= 5x");
+    }
+}

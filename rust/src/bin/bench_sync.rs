@@ -15,55 +15,22 @@
 //!
 //! Usage: `bench_sync [--smoke] [--out PATH]`
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use lpf::benchkit::{fit_affine, r_squared, Samples};
-use lpf::core::{Pid, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::benchkit::{alloc_counter, fit_affine, json_f64, r_squared, Samples};
+use lpf::core::{Args, Pid, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::ctx::{exec, Platform, Root};
 use lpf::fabric::net::{MetaAlgo, NetFabric, Topology};
 use lpf::fabric::shared::SharedFabric;
 use lpf::fabric::Fabric;
 use lpf::memory::SlotStorage;
 use lpf::netsim::Personality;
+use lpf::pool::Pool;
 use lpf::queue::{PutReq, Request};
 
-// ---------------------------------------------------------------- allocator
-
-/// Counts allocations while `TRACK` is on; otherwise a transparent wrapper
-/// around the system allocator.
-struct CountingAlloc;
-
-static TRACK: AtomicBool = AtomicBool::new(false);
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        if TRACK.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.alloc(layout)
-    }
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        if TRACK.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.alloc_zeroed(layout)
-    }
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        if TRACK.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.realloc(ptr, layout, new_size)
-    }
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
-
 #[global_allocator]
-static GLOBAL: CountingAlloc = CountingAlloc;
+static GLOBAL: alloc_counter::CountingAlloc = alloc_counter::CountingAlloc;
 
 // ---------------------------------------------------------------- workload
 
@@ -185,8 +152,7 @@ fn count_steady_state_allocs(p: Pid, msgs: usize, bytes: usize, iters: u32) -> u
                 }
                 fab.barrier(pid).unwrap();
                 if pid == 0 {
-                    ALLOCS.store(0, Ordering::SeqCst);
-                    TRACK.store(true, Ordering::SeqCst);
+                    alloc_counter::start();
                 }
                 fab.barrier(pid).unwrap();
                 for _ in 0..iters {
@@ -194,12 +160,58 @@ fn count_steady_state_allocs(p: Pid, msgs: usize, bytes: usize, iters: u32) -> u
                 }
                 fab.barrier(pid).unwrap();
                 if pid == 0 {
-                    TRACK.store(false, Ordering::SeqCst);
+                    alloc_counter::stop();
                 }
             });
         }
     });
-    ALLOCS.load(Ordering::SeqCst)
+    alloc_counter::count()
+}
+
+// ---------------------------------------------------------------- dispatch
+
+/// Warm/cold job-dispatch summary, folded into BENCH_sync.json so a single
+/// artifact covers both superstep cost (g, ℓ) and job-dispatch overhead.
+/// `bench_exec` is the full harness; this is its headline number.
+struct DispatchSummary {
+    p: Pid,
+    cold_iters: u32,
+    warm_iters: u32,
+    cold_jobs_per_sec: f64,
+    warm_jobs_per_sec: f64,
+    warm_over_cold: f64,
+}
+
+fn measure_dispatch(p: Pid, cold_iters: u32, warm_iters: u32) -> DispatchSummary {
+    let platform = Platform::shared().checked(false);
+    let empty = |_ctx: &mut lpf::Context, _args: Args| {};
+    let root = Root::new(platform.clone()).with_max_procs(p);
+    // plain warmup (code paths, allocator) — one-shot exec is untuned by
+    // design, so this does not touch the barrier-calibration cache
+    exec(&root, p, empty, Args::none()).unwrap();
+    let t = Instant::now();
+    for _ in 0..cold_iters {
+        exec(&root, p, empty, Args::none()).unwrap();
+    }
+    let cold_jobs_per_sec = cold_iters as f64 / t.elapsed().as_secs_f64();
+
+    let pool = Pool::new(platform, p);
+    for _ in 0..10 {
+        pool.exec(empty, Args::none()).unwrap();
+    }
+    let t = Instant::now();
+    for _ in 0..warm_iters {
+        pool.exec(empty, Args::none()).unwrap();
+    }
+    let warm_jobs_per_sec = warm_iters as f64 / t.elapsed().as_secs_f64();
+    DispatchSummary {
+        p,
+        cold_iters,
+        warm_iters,
+        cold_jobs_per_sec,
+        warm_jobs_per_sec,
+        warm_over_cold: warm_jobs_per_sec / cold_jobs_per_sec,
+    }
 }
 
 // ---------------------------------------------------------------- sweep
@@ -290,23 +302,31 @@ fn run_case(
 
 // ---------------------------------------------------------------- output
 
-fn json_f64(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v:.4}")
-    } else {
-        "null".into()
-    }
-}
-
-fn write_json(path: &str, cases: &[CaseResult], alloc_check: Option<(u32, u64)>) {
+fn write_json(
+    path: &str,
+    cases: &[CaseResult],
+    alloc_check: Option<(u32, u64)>,
+    dispatch: &DispatchSummary,
+) {
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"bench_sync/v1\",\n");
+    s.push_str("{\n  \"schema\": \"bench_sync/v2\",\n");
     if let Some((steps, allocs)) = alloc_check {
         s.push_str(&format!(
             "  \"alloc_check\": {{ \"backend\": \"shared\", \"supersteps\": {steps}, \
              \"allocations\": {allocs} }},\n"
         ));
     }
+    s.push_str(&format!(
+        "  \"job_dispatch\": {{ \"job\": \"empty\", \"p\": {}, \"cold_iters\": {}, \
+         \"warm_iters\": {}, \"cold_jobs_per_sec\": {}, \"warm_jobs_per_sec\": {}, \
+         \"warm_over_cold\": {} }},\n",
+        dispatch.p,
+        dispatch.cold_iters,
+        dispatch.warm_iters,
+        json_f64(dispatch.cold_jobs_per_sec),
+        json_f64(dispatch.warm_jobs_per_sec),
+        json_f64(dispatch.warm_over_cold)
+    ));
     s.push_str("  \"cases\": [\n");
     for (i, c) in cases.iter().enumerate() {
         s.push_str(&format!(
@@ -383,7 +403,15 @@ fn main() {
         None
     };
 
-    write_json(&out, &cases, alloc_check);
+    let dispatch =
+        if smoke { measure_dispatch(4, 10, 100) } else { measure_dispatch(4, 40, 400) };
+    eprintln!(
+        "job dispatch (empty, p={}): cold {:.0} jobs/s, warm {:.0} jobs/s ({:.1}x)",
+        dispatch.p, dispatch.cold_jobs_per_sec, dispatch.warm_jobs_per_sec,
+        dispatch.warm_over_cold
+    );
+
+    write_json(&out, &cases, alloc_check, &dispatch);
     eprintln!("wrote {out}");
 
     if let Some((_, allocs)) = alloc_check {

@@ -35,6 +35,18 @@ struct RendezvousState {
     arrived: Pid,
     /// Processes currently holding the init (registry cleanup).
     registered: Pid,
+    /// Epochs fully finished (all peers left). Epoch `e` may only start
+    /// once `completed == e`, which is what makes the warm team reusable:
+    /// hook epochs on one master are serialised, exactly like the jobs of a
+    /// [`crate::pool::Pool`].
+    completed: u64,
+    /// How many peers have finished each in-flight epoch.
+    finishers: HashMap<u64, Pid>,
+    /// The warm team from the last completed epoch (already reset), if it
+    /// ended healthy — the `lpf_hook`-over-a-live-pool path: repeated hooks
+    /// from a host framework (the sparksim Table-4 bootstrap) reuse the
+    /// fabric, arenas, and tuned barrier instead of rebuilding them.
+    warm: Option<Arc<ContextGroup>>,
 }
 
 /// `lpf_init_t`: one process's handle for hooking into a context shared
@@ -88,6 +100,16 @@ impl Init {
                 rv.nprocs
             )));
         }
+        if rv.platform != platform {
+            // Report the actual disagreement: without this check the
+            // first arrival's platform silently won, and a same-nprocs
+            // rendezvous over a different platform either "succeeded" on
+            // the wrong fabric or failed later with an unrelated error.
+            return Err(LpfError::Illegal(format!(
+                "master {master}: peer initialised platform {:?}, this process requests {:?}",
+                rv.platform, platform
+            )));
+        }
         // Wait until all peers registered (the TCP accept loop analogue).
         let deadline = Instant::now() + timeout;
         let mut st = rv.state.lock().unwrap();
@@ -100,6 +122,16 @@ impl Init {
                 let missing = nprocs - st.arrived;
                 st.arrived -= 1;
                 st.registered -= 1;
+                drop(st);
+                // Last one out retires the master address (same contract as
+                // finalize), so a later retry may rendezvous with different
+                // parameters instead of hitting a phantom peer forever.
+                // Locks in registry→state order, matching do_finalize.
+                let mut reg = registry().lock().unwrap();
+                let st = rv.state.lock().unwrap();
+                if st.registered == 0 && st.arrived == 0 {
+                    reg.retain(|_, v| !Arc::ptr_eq(v, &rv));
+                }
                 return Err(LpfError::Fatal(format!(
                     "initialize_over_tcp timed out waiting for {missing} of {nprocs} peers"
                 )));
@@ -157,7 +189,14 @@ impl Drop for Init {
 
 /// `lpf_hook`: enter an SPMD context from existing processes. May be called
 /// any number of times while the `Init` is valid (paper §2.3); each call is
-/// collective over all `nprocs` peers and builds a pristine context.
+/// collective over all `nprocs` peers and presents a pristine context.
+///
+/// Hooks over one master ride a **warm team**: the first epoch builds the
+/// context group (fabric, tuned barrier, arenas); every later epoch reuses
+/// it through the same job-boundary reset the [`crate::pool::Pool`]
+/// performs, so a host framework issuing many small LPF jobs (the paper's
+/// §4.3 Spark integration) pays context construction once. An epoch whose
+/// team aborted is not reused — the next hook builds a fresh group.
 pub fn hook<O, F>(init: &Init, spmd: F, args: Args) -> Result<O>
 where
     F: Fn(&mut Context, Args) -> O,
@@ -167,11 +206,22 @@ where
     }
     let epoch = init.epoch.fetch_add(1, Ordering::SeqCst) as u64;
     let rv = &init.rendezvous;
-    // First arrival of this epoch creates the group; all wait for it.
+    // First arrival of this epoch takes the warm team (or builds one); all
+    // peers wait for it. Epochs are serialised: epoch e may only start once
+    // every peer left epoch e−1, which each peer's own program order
+    // already implies for itself — the wait below extends it to the team.
     let group = {
-        let mut st = rv.state.lock().unwrap();
+        let mut guard = rv.state.lock().unwrap();
+        while guard.completed < epoch {
+            guard = rv.cv.wait(guard).unwrap();
+        }
+        let st = &mut *guard;
         let entry = st.groups.entry(epoch).or_insert_with(|| {
-            (ContextGroup::new(rv.platform.clone(), rv.nprocs), 0)
+            let g = match st.warm.take() {
+                Some(w) if w.healthy() => w, // already reset when stashed
+                _ => ContextGroup::new(rv.platform.clone(), rv.nprocs),
+            };
+            (g, 0)
         });
         entry.1 += 1;
         let g = entry.0.clone();
@@ -181,7 +231,23 @@ where
         rv.cv.notify_all();
         g
     };
-    run_spmd(group, init.pid, &spmd, args)
+    let out = run_spmd(group.clone(), init.pid, &spmd, args);
+    // Last peer out closes the epoch and stashes the team for the next one.
+    {
+        let mut st = rv.state.lock().unwrap();
+        let n = st.finishers.entry(epoch).or_insert(0);
+        *n += 1;
+        if *n == rv.nprocs {
+            st.finishers.remove(&epoch);
+            st.completed = epoch + 1;
+            if group.healthy() {
+                group.reset_for_job();
+                st.warm = Some(group);
+            }
+            rv.cv.notify_all();
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -271,6 +337,109 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn hook_epochs_reuse_a_warm_team_with_fresh_state() {
+        let n: Pid = 2;
+        std::thread::scope(|s| {
+            for pid in 0..n {
+                s.spawn(move || {
+                    let init = Init::over_master(
+                        "master-warm:9005",
+                        pid,
+                        n,
+                        Duration::from_secs(120),
+                        Platform::shared().checked(true),
+                    )
+                    .unwrap();
+                    // epoch 0: dirty the context — raise capacities,
+                    // register a slot, never deregister it
+                    let leaked = hook(
+                        &init,
+                        |ctx, _| {
+                            ctx.resize_memory_register(4).unwrap();
+                            ctx.resize_message_queue(8).unwrap();
+                            ctx.sync(SYNC_DEFAULT).unwrap();
+                            ctx.register_global(16).unwrap()
+                        },
+                        Args::none(),
+                    )
+                    .unwrap();
+                    // epoch 1: warm team, pristine state
+                    hook(
+                        &init,
+                        move |ctx, _| {
+                            // capacities are back at their defaults
+                            assert!(ctx.register_global(1).is_err());
+                            // the leaked handle is from an earlier epoch
+                            let mut buf = [0u8; 1];
+                            let err = ctx.read_slot(leaked, 0, &mut buf).unwrap_err();
+                            assert!(matches!(err, LpfError::Illegal(_)), "{err:?}");
+                            // and stats restarted from zero
+                            assert_eq!(ctx.stats().syncs, 0);
+                        },
+                        Args::none(),
+                    )
+                    .unwrap();
+                    init.finalize();
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn init_reports_platform_mismatch_explicitly() {
+        const MASTER: &str = "master-plat:9006";
+        // Peer A registers the master with the shared platform and waits.
+        let a = std::thread::spawn(|| {
+            Init::over_master(MASTER, 0, 2, Duration::from_secs(60), Platform::shared())
+        });
+        // Deterministic ordering: wait until A's registration is visible.
+        while !registry().lock().unwrap().contains_key(MASTER) {
+            std::thread::yield_now();
+        }
+        // A same-nprocs arrival on a different platform is rejected with an
+        // explicit platform report, not a timeout or a silently wrong fabric.
+        let b = Init::over_master(MASTER, 1, 2, Duration::from_millis(30), Platform::rdma());
+        let err = match b {
+            Err(e) => format!("{e:?}"),
+            Ok(_) => panic!("platform mismatch must be rejected"),
+        };
+        assert!(err.contains("platform"), "explicit platform report: {err}");
+        // A matching arrival completes the rendezvous normally.
+        let peer =
+            Init::over_master(MASTER, 1, 2, Duration::from_secs(60), Platform::shared()).unwrap();
+        let a = a.join().unwrap().unwrap();
+        a.finalize();
+        peer.finalize();
+    }
+
+    #[test]
+    fn timed_out_master_address_is_reusable() {
+        // Every arrival timing out retires the address: a retry with
+        // different parameters must start fresh instead of hitting a
+        // phantom peer.
+        let lonely = Init::over_master(
+            "master-retry:9007",
+            0,
+            2,
+            Duration::from_millis(20),
+            Platform::shared(),
+        );
+        assert!(matches!(&lonely, Err(LpfError::Fatal(_))), "expected a timeout");
+        assert!(!registry().lock().unwrap().contains_key("master-retry:9007"));
+        // retry with a different platform AND nprocs succeeds
+        let solo = Init::over_master(
+            "master-retry:9007",
+            0,
+            1,
+            Duration::from_millis(200),
+            Platform::rdma(),
+        )
+        .unwrap();
+        assert_eq!(solo.nprocs(), 1);
+        solo.finalize();
     }
 
     #[test]

@@ -46,23 +46,63 @@ use crate::memory::SlotStorage;
 use crate::probe::ProbeTable;
 use crate::queue::{GetReq, MsgQueue, PutReq};
 
-/// State shared by the `p` processes of one context.
-pub(crate) struct ContextGroup {
-    pub(crate) fabric: Arc<dyn Fabric>,
-    pub(crate) platform: Platform,
+/// The immutable team half of a context group: what a persistent worker
+/// team ([`crate::pool::Pool`]) keeps alive across the SPMD jobs it serves.
+/// Building this is the expensive part of context creation — the fabric
+/// owns the barrier, the sync-plan arenas, and the slot registers.
+pub(crate) struct TeamState {
+    fabric: Arc<dyn Fabric>,
+    platform: Platform,
+    probe: Arc<ProbeTable>,
+}
+
+/// The per-job half: state that must not leak from one SPMD job into the
+/// next. Reset by [`ContextGroup::reset_for_job`] instead of rebuilt.
+pub(crate) struct JobState {
     /// Slot used by `rehook` to hand the pristine child group to peers.
     child: Mutex<Option<Arc<ContextGroup>>>,
-    probe: Arc<ProbeTable>,
+}
+
+/// State shared by the `p` processes of one context: an immutable
+/// [`TeamState`] plus resettable [`JobState`].
+pub(crate) struct ContextGroup {
+    team: TeamState,
+    job: JobState,
 }
 
 impl ContextGroup {
     pub(crate) fn new(platform: Platform, p: Pid) -> Arc<Self> {
         Arc::new(ContextGroup {
-            fabric: platform.make_fabric(p),
-            platform,
-            child: Mutex::new(None),
-            probe: ProbeTable::global(),
+            team: TeamState {
+                fabric: platform.make_fabric(p),
+                platform,
+                probe: ProbeTable::global(),
+            },
+            job: JobState { child: Mutex::new(None) },
         })
+    }
+
+    pub(crate) fn fabric(&self) -> &Arc<dyn Fabric> {
+        &self.team.fabric
+    }
+
+    pub(crate) fn platform(&self) -> &Platform {
+        &self.team.platform
+    }
+
+    /// Whether the team survived its last job: an aborted fabric has torn
+    /// barrier episodes and cannot be reused warm.
+    pub(crate) fn healthy(&self) -> bool {
+        !self.team.fabric.aborted()
+    }
+
+    /// Job-boundary reset: clear every piece of per-job state so the next
+    /// SPMD job observes a context bit-identical in behaviour to a freshly
+    /// built one, while the team (threads, fabric, tuned barrier, arenas)
+    /// stays warm. Caller guarantees no process is inside the fabric.
+    pub(crate) fn reset_for_job(&self) {
+        self.team.fabric.reset_for_job();
+        *self.job.child.lock().expect("child slot poisoned") = None;
     }
 }
 
@@ -84,7 +124,7 @@ pub struct Context {
 
 impl Context {
     pub(crate) fn new(group: Arc<ContextGroup>, pid: Pid) -> Self {
-        let p = group.fabric.p();
+        let p = group.fabric().p();
         Context { pid, p, group, queue: MsgQueue::new(), clean: false }
     }
 
@@ -104,7 +144,7 @@ impl Context {
     /// this process. Storage is owned by the register (zero-initialised).
     pub fn register_local(&mut self, len: usize) -> Result<Memslot> {
         let storage = SlotStorage::new(len)?;
-        self.group.fabric.register_of(self.pid).with_mut(|r| r.register_local(storage))
+        self.group.fabric().register_of(self.pid).with_mut(|r| r.register_local(storage))
     }
 
     /// `lpf_register_global`: collective; ids align across processes when
@@ -113,17 +153,17 @@ impl Context {
     /// `sync`, exactly as in the paper's Algorithm 2.
     pub fn register_global(&mut self, len: usize) -> Result<Memslot> {
         let storage = SlotStorage::new(len)?;
-        self.group.fabric.register_of(self.pid).with_mut(|r| r.register_global(storage))
+        self.group.fabric().register_of(self.pid).with_mut(|r| r.register_global(storage))
     }
 
     /// `lpf_deregister`: O(1); frees the slot for reuse.
     pub fn deregister(&mut self, slot: Memslot) -> Result<()> {
-        self.group.fabric.register_of(self.pid).with_mut(|r| r.deregister(slot))
+        self.group.fabric().register_of(self.pid).with_mut(|r| r.deregister(slot))
     }
 
     /// `lpf_resize_memory_register`: O(N); active after the next `sync`.
     pub fn resize_memory_register(&mut self, max_slots: usize) -> Result<()> {
-        self.group.fabric.register_of(self.pid).with_mut(|r| r.resize(max_slots))
+        self.group.fabric().register_of(self.pid).with_mut(|r| r.resize(max_slots))
     }
 
     /// `lpf_resize_message_queue`: O(N); active after the next `sync`.
@@ -135,7 +175,7 @@ impl Context {
 
     /// Read bytes from one of this process's slots (outside communication).
     pub fn read_slot(&self, slot: Memslot, off: usize, out: &mut [u8]) -> Result<()> {
-        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        let st = self.group.fabric().register_of(self.pid).resolve(slot)?;
         if off + out.len() > st.len() {
             return Err(LpfError::Illegal(format!(
                 "read {off}+{} beyond slot of {}",
@@ -150,7 +190,7 @@ impl Context {
 
     /// Write bytes into one of this process's slots (outside communication).
     pub fn write_slot(&mut self, slot: Memslot, off: usize, data: &[u8]) -> Result<()> {
-        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        let st = self.group.fabric().register_of(self.pid).resolve(slot)?;
         if off + data.len() > st.len() {
             return Err(LpfError::Illegal(format!(
                 "write {off}+{} beyond slot of {}",
@@ -165,14 +205,14 @@ impl Context {
 
     /// Closure access to a slot's bytes (owner, outside communication).
     pub fn with_slot_mut<T>(&mut self, slot: Memslot, f: impl FnOnce(&mut [u8]) -> T) -> Result<T> {
-        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        let st = self.group.fabric().register_of(self.pid).resolve(slot)?;
         // SAFETY: superstep discipline; this process owns the slot.
         Ok(f(unsafe { st.bytes_mut() }))
     }
 
     /// Closure read access to a slot's bytes.
     pub fn with_slot<T>(&self, slot: Memslot, f: impl FnOnce(&[u8]) -> T) -> Result<T> {
-        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        let st = self.group.fabric().register_of(self.pid).resolve(slot)?;
         // SAFETY: superstep discipline.
         Ok(f(unsafe { st.bytes() }))
     }
@@ -184,7 +224,7 @@ impl Context {
 
     /// Typed read helper.
     pub fn read_typed<T: Pod>(&self, slot: Memslot, elem_off: usize, out: &mut [T]) -> Result<()> {
-        let st = self.group.fabric.register_of(self.pid).resolve(slot)?;
+        let st = self.group.fabric().register_of(self.pid).resolve(slot)?;
         let off = elem_off * size_of::<T>();
         let len = size_of_val(out);
         if off + len > st.len() {
@@ -206,7 +246,7 @@ impl Context {
     /// slots may have different lengths per process; only the registration
     /// order is required to align).
     fn check_local_range(&self, what: &str, slot: Memslot, off: usize, len: usize) -> Result<()> {
-        let avail = self.group.fabric.register_of(self.pid).len_of(slot)?;
+        let avail = self.group.fabric().register_of(self.pid).len_of(slot)?;
         match off.checked_add(len) {
             Some(end) if end <= avail => Ok(()),
             _ => Err(LpfError::Illegal(format!(
@@ -262,13 +302,13 @@ impl Context {
     /// `lpf_sync`: execute the queued h-relation; `hg + ℓ` (paper §2.2).
     /// The only fence: all puts/gets issued before it are visible after it.
     pub fn sync(&mut self, attr: SyncAttr) -> Result<()> {
-        let res = self.group.fabric.sync(self.pid, self.queue.requests(), attr);
+        let res = self.group.fabric().sync(self.pid, self.queue.requests(), attr);
         self.queue.clear();
         // Capacities become active "after a fence provided each call
         // completed successfully" (paper §2.2) — even a failed h-relation
         // leaves capacities consistent because activation is local.
         self.queue.activate_pending();
-        self.group.fabric.register_of(self.pid).with_mut(|r| r.activate_pending());
+        self.group.fabric().register_of(self.pid).with_mut(|r| r.activate_pending());
         res
     }
 
@@ -276,7 +316,7 @@ impl Context {
     /// context (offline-benchmarked table, falling back to conservative
     /// constants — paper §2.2 allows both).
     pub fn probe(&self) -> MachineParams {
-        self.group.probe.lookup(self.group.fabric.name(), self.p)
+        self.group.team.probe.lookup(self.group.fabric().name(), self.p)
     }
 
     /// `lpf_rehook`: temporarily replace this context with a pristine one
@@ -286,15 +326,16 @@ impl Context {
     where
         F: Fn(&mut Context, Args) -> O,
     {
-        let fabric = &self.group.fabric;
+        let fabric = self.group.fabric();
         fabric.barrier(self.pid)?;
         if self.pid == 0 {
-            let child = ContextGroup::new(self.group.platform.clone(), self.p);
-            *self.group.child.lock().unwrap() = Some(child);
+            let child = ContextGroup::new(self.group.platform().clone(), self.p);
+            *self.group.job.child.lock().unwrap() = Some(child);
         }
         fabric.barrier(self.pid)?;
         let child = self
             .group
+            .job
             .child
             .lock()
             .unwrap()
@@ -302,24 +343,24 @@ impl Context {
             .ok_or_else(|| LpfError::Fatal("rehook: child group missing".into()))?;
         fabric.barrier(self.pid)?;
         if self.pid == 0 {
-            *self.group.child.lock().unwrap() = None;
+            *self.group.job.child.lock().unwrap() = None;
         }
         run_spmd(child, self.pid, &spmd, args)
     }
 
     /// Transport statistics (diagnostics; not part of the paper API).
     pub fn stats(&self) -> crate::fabric::SyncStats {
-        self.group.fabric.stats(self.pid)
+        self.group.fabric().stats(self.pid)
     }
 
     /// Simulated time for netsim-backed fabrics (None on real backends).
     pub fn sim_time_ns(&self) -> Option<f64> {
-        self.group.fabric.sim_time_ns(self.pid)
+        self.group.fabric().sim_time_ns(self.pid)
     }
 
     /// Backend name ("shared", "msg", "rdma", "hybrid").
     pub fn backend(&self) -> &'static str {
-        self.group.fabric.name()
+        self.group.fabric().name()
     }
 }
 
@@ -329,9 +370,19 @@ impl Drop for Context {
             // SPMD function unwound or returned early through `?`: mark the
             // context aborted so peers observe PeerAborted (paper §2.1's
             // natural error propagation without deadlocks).
-            self.group.fabric.abort(self.pid);
+            self.group.fabric().abort(self.pid);
         }
     }
+}
+
+/// Human-readable form of a panic payload (`&str` and `String` payloads —
+/// what `panic!` produces — are quoted verbatim; anything else is labelled).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("<non-string panic payload>")
 }
 
 /// Run one process's SPMD body with abort-on-panic semantics.
@@ -339,19 +390,41 @@ pub(crate) fn run_spmd<O, F>(group: Arc<ContextGroup>, pid: Pid, spmd: &F, args:
 where
     F: Fn(&mut Context, Args) -> O,
 {
+    let mut slab = MsgQueue::new();
+    run_spmd_recycled(group, pid, spmd, args, &mut slab)
+}
+
+/// [`run_spmd`], recycling the caller's request-queue arena: the queue is
+/// taken for the duration of the job and handed back (cleared, capacities
+/// at defaults) afterwards. The pool's worker threads keep one slab per
+/// process so a warm job dispatch performs no queue allocation.
+pub(crate) fn run_spmd_recycled<O, F>(
+    group: Arc<ContextGroup>,
+    pid: Pid,
+    spmd: &F,
+    args: Args,
+    slab: &mut MsgQueue,
+) -> Result<O>
+where
+    F: Fn(&mut Context, Args) -> O,
+{
+    slab.reset_for_job();
     let mut ctx = Context::new(group, pid);
+    ctx.queue = std::mem::take(slab);
     let out = catch_unwind(AssertUnwindSafe(|| spmd(&mut ctx, args)));
-    match out {
+    let res = match out {
         Ok(o) => {
             ctx.clean = true;
-            drop(ctx);
             Ok(o)
         }
-        Err(_) => {
-            drop(ctx); // marks abort
-            Err(LpfError::Fatal(format!("SPMD function panicked on pid {pid}")))
-        }
-    }
+        Err(payload) => Err(LpfError::Fatal(format!(
+            "SPMD function panicked on pid {pid}: {}",
+            panic_message(payload.as_ref())
+        ))),
+    };
+    *slab = std::mem::take(&mut ctx.queue);
+    drop(ctx); // a non-clean drop marks the process aborted
+    res
 }
 
 /// The sequential "root" context (`LPF_ROOT`): configuration from which
@@ -393,29 +466,22 @@ impl Default for Root {
 /// `lpf_exec`: run `spmd` on `min(max_p, root budget)` new processes.
 /// Returns every process's output (index = pid). Cost O(Ng + ℓ) with N the
 /// argument size (one broadcast) plus process spawn.
+///
+/// Implemented as sugar over a transient single-job [`crate::pool::Pool`]:
+/// one code path serves both the one-shot `exec` and the persistent
+/// hot-team executor. Callers issuing *repeated* jobs should hold a shared
+/// [`Pool`](crate::pool::Pool) instead — `Pool::exec` has the same
+/// semantics but pays the spawn/teardown only once.
 pub fn exec<O, F>(root: &Root, max_p: Pid, spmd: F, args: Args) -> Result<Vec<O>>
 where
     F: Fn(&mut Context, Args) -> O + Sync,
     O: Send,
 {
     let p = max_p.min(root.max_procs).max(1);
-    let group = ContextGroup::new(root.platform.clone(), p);
-    let mut outs: Vec<Result<O>> = Vec::with_capacity(p as usize);
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(p as usize);
-        for pid in 0..p {
-            let group = group.clone();
-            let spmd = &spmd;
-            let args = args.clone();
-            handles.push(s.spawn(move || run_spmd(group, pid, spmd, args)));
-        }
-        for h in handles {
-            outs.push(h.join().unwrap_or_else(|_| {
-                Err(LpfError::Fatal("SPMD thread terminated abnormally".into()))
-            }));
-        }
-    });
-    outs.into_iter().collect()
+    // untuned: a single-job pool would discard the barrier calibration, so
+    // one-shot exec keeps its pre-pool O(p) heuristic and first-call cost
+    let pool = crate::pool::Pool::new_untuned(root.platform.clone(), p);
+    pool.exec(spmd, args)
 }
 
 // ---------------------------------------------------------------- Pod bytes

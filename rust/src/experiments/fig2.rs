@@ -7,8 +7,9 @@
 
 use crate::benchkit::{growth_exponent, Table};
 use crate::core::{Args, Result, MSG_DEFAULT, SYNC_DEFAULT};
-use crate::ctx::{exec, Context, Platform, Root};
+use crate::ctx::{Context, Platform};
 use crate::netsim::{Personality, WireMode};
+use crate::pool::Pool;
 
 /// Configuration for the Fig. 2 sweep.
 #[derive(Debug, Clone)]
@@ -45,26 +46,35 @@ pub struct Fig2Curve {
     pub exponent: f64,
 }
 
-/// Simulated time to send `n` messages of `msg_bytes` round-robin to the
-/// other processes and complete one superstep, on the given transport.
-pub fn round_robin_time(
-    personality: &Personality,
-    p: u32,
-    n: usize,
-    msg_bytes: usize,
-) -> Result<f64> {
-    let platform = match personality.mode {
+/// The platform a Fig.-2 transport personality runs on.
+fn platform_for(personality: &Personality) -> Platform {
+    match personality.mode {
         WireMode::OneSided => Platform::rdma().with_personality(personality.clone()),
         WireMode::TwoSided => {
             // the paper's message-matching measurements use plain two-sided
             // transports; direct meta keeps the focus on the data path
             Platform::Msg { personality: personality.clone(), checked: false }
         }
-    };
-    let root = Root::new(platform).with_max_procs(p);
-    let outs = exec(
-        &root,
-        p,
+    }
+}
+
+/// Simulated time to send `n` messages of `msg_bytes` round-robin to the
+/// other processes and complete one superstep, on the given transport.
+/// One-shot convenience over [`round_robin_time_on`]; the sweep runs every
+/// message count of one transport on a shared warm pool.
+pub fn round_robin_time(
+    personality: &Personality,
+    p: u32,
+    n: usize,
+    msg_bytes: usize,
+) -> Result<f64> {
+    let pool = Pool::new(platform_for(personality), p);
+    round_robin_time_on(&pool, n, msg_bytes)
+}
+
+/// [`round_robin_time`] as one warm job on a shared pool.
+pub fn round_robin_time_on(pool: &Pool, n: usize, msg_bytes: usize) -> Result<f64> {
+    let outs = pool.exec(
         move |ctx: &mut Context, _| -> Result<f64> {
             let p = ctx.p();
             ctx.resize_memory_register(2)?;
@@ -107,9 +117,11 @@ pub fn round_robin_time(
 pub fn run_fig2(cfg: &Fig2Config) -> Result<Vec<Fig2Curve>> {
     let mut curves = Vec::new();
     for pers in &cfg.personalities {
+        // one warm team per transport serves the whole n sweep
+        let pool = Pool::new(platform_for(pers), cfg.p);
         let mut points = Vec::new();
         for &n in &cfg.n_values {
-            let t = round_robin_time(pers, cfg.p, n, cfg.msg_bytes)?;
+            let t = round_robin_time_on(&pool, n, cfg.msg_bytes)?;
             points.push((n, t));
         }
         let xs: Vec<f64> = points.iter().map(|&(n, _)| n as f64).collect();

@@ -13,9 +13,10 @@ use std::sync::Arc;
 use crate::benchkit::{time_secs, Table};
 use crate::bsplib::Bsp;
 use crate::core::{Args, Result};
-use crate::ctx::{exec, Platform, Root};
+use crate::ctx::Platform;
 use crate::fft::baseline::{PortableFft, VendorFft};
 use crate::fft::bsp::{Backend, BspFft};
+use crate::pool::Pool;
 use crate::runtime::Runtime;
 use crate::util::rng::XorShift64;
 
@@ -57,11 +58,16 @@ fn random_planes(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
 }
 
 /// Mean seconds per distributed BSP FFT at size `n` on `p` processes.
+/// One-shot convenience over [`bsp_fft_secs_on`]; the Fig.-3 sweep reuses
+/// one warm pool for every transform size.
 pub fn bsp_fft_secs(n: usize, p: u32, reps: u32, backend: Backend) -> Result<f64> {
-    let root = Root::new(Platform::shared().checked(false)).with_max_procs(p);
-    let outs = exec(
-        &root,
-        p,
+    let pool = Pool::new(Platform::shared().checked(false), p);
+    bsp_fft_secs_on(&pool, n, reps, backend)
+}
+
+/// [`bsp_fft_secs`] as one warm job on a shared pool.
+pub fn bsp_fft_secs_on(pool: &Pool, n: usize, reps: u32, backend: Backend) -> Result<f64> {
+    let outs = pool.exec(
         move |ctx, _| -> Result<f64> {
             let m = n / ctx.p() as usize;
             let mut bsp = Bsp::begin_with_staging(ctx, 8, 4 * ctx.p() as usize + 8, 64)?;
@@ -91,6 +97,8 @@ pub fn run_fig3(cfg: &Fig3Config) -> Result<Vec<Fig3Row>> {
     if cfg.use_artifacts && runtime.is_none() {
         eprintln!("fig3: artifacts not found — run `make artifacts`; using native compute");
     }
+    // one warm team serves every size of the BSP-FFT series
+    let pool = Pool::new(Platform::shared().checked(false), cfg.p);
     let mut rows = Vec::new();
     for &k in &cfg.ks {
         let n = 1usize << k;
@@ -98,7 +106,7 @@ pub fn run_fig3(cfg: &Fig3Config) -> Result<Vec<Fig3Row>> {
             Some(rt) => Backend::Artifacts(rt.clone()),
             None => Backend::Native,
         };
-        let bsp_fft = bsp_fft_secs(n, cfg.p, cfg.reps, backend)?;
+        let bsp_fft = bsp_fft_secs_on(&pool, n, cfg.reps, backend)?;
         let vendor = match &runtime {
             Some(rt) => {
                 let v = VendorFft::new(n, rt.clone());

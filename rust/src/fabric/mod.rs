@@ -126,6 +126,19 @@ pub trait Fabric: Send + Sync {
     /// fail fatally at their next collective, as the paper specifies.
     fn abort(&self, pid: Pid);
 
+    /// True once any process aborted. A warm team cannot reuse an aborted
+    /// fabric (its barrier episodes are torn); the pool rebuilds instead.
+    fn aborted(&self) -> bool;
+
+    /// Job-boundary reset (the pool's warm path): restore the observable
+    /// state of a freshly built fabric — empty registers at default
+    /// capacity, zeroed statistics and simulated clocks — while retaining
+    /// arenas, outboxes, registration tables and the tuned barrier, so a
+    /// warm job dispatch performs no allocation and no spawn. Must only be
+    /// called when no process is inside a collective, and never after
+    /// [`aborted`](Fabric::aborted) turned true.
+    fn reset_for_job(&self);
+
     /// Simulated time in ns for `pid`, if this fabric runs on the network
     /// simulator (`None` for the real shared-memory backend).
     fn sim_time_ns(&self, pid: Pid) -> Option<f64>;

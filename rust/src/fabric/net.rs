@@ -196,7 +196,7 @@ impl NetFabric {
             topo,
             meta_algo,
             checked,
-            barrier: AutoBarrier::new(p),
+            barrier: AutoBarrier::tuned(p),
             clocks: SimClocks::new(p),
             aborted: AtomicBool::new(false),
             supersteps: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
@@ -669,6 +669,43 @@ impl Fabric for NetFabric {
 
     fn abort(&self, _pid: Pid) {
         self.aborted.store(true, Ordering::Release);
+    }
+
+    fn aborted(&self) -> bool {
+        self.aborted.load(Ordering::Acquire)
+    }
+
+    fn reset_for_job(&self) {
+        debug_assert!(!Fabric::aborted(self), "reset of an aborted fabric");
+        self.engine.reset_for_job();
+        // Fresh-fabric observables: simulated time restarts at 0 and the
+        // Bruck rng sequence restarts at superstep 0, so a warm job is
+        // tick-for-tick identical to one on a freshly built fabric.
+        self.clocks.reset();
+        for c in &self.supersteps {
+            c.store(0, Ordering::Relaxed);
+        }
+        // Wire buffers are drained by every completed superstep; clear
+        // defensively (keeps capacity — a no-op on the clean path).
+        for cell in &self.trim_mail {
+            cell.lock().expect("mailbox poisoned").clear();
+        }
+        for cell in &self.getreq_mail {
+            cell.lock().expect("mailbox poisoned").clear();
+        }
+        for cell in &self.route_mail {
+            cell.lock().expect("mailbox poisoned").clear();
+        }
+        for cell in &self.data_mail {
+            cell.lock().expect("mailbox poisoned").clear();
+        }
+        for m in &self.matchers {
+            m.lock().expect("matcher poisoned").reset();
+        }
+        for pd in &self.pendings {
+            pd.lock().expect("pending poisoned").reset_for_job();
+        }
+        self.aborted.store(false, Ordering::Release);
     }
 
     fn sim_time_ns(&self, pid: Pid) -> Option<f64> {

@@ -77,6 +77,15 @@ impl OutTables {
     pub fn descriptor_count(&self) -> usize {
         self.puts.len() + self.gets.len()
     }
+
+    /// Empty the tables, keeping their capacity (job-boundary reset).
+    pub(crate) fn clear(&mut self) {
+        self.puts.clear();
+        self.gets.clear();
+        for r in self.put_ranges.iter_mut().chain(self.get_ranges.iter_mut()) {
+            *r = 0;
+        }
+    }
 }
 
 /// Owner-only superstep working memory (see module docs for the reuse
@@ -123,6 +132,26 @@ pub struct SyncPlan {
     pub(crate) stats: CachePadded<Mutex<SyncStats>>,
 }
 
+impl Scratch {
+    /// Empty every working buffer, keeping the capacity (job-boundary
+    /// reset; within a job the engine clears and refills them per phase).
+    pub(crate) fn clear(&mut self) {
+        self.cputs.clear();
+        self.cput_dst.clear();
+        self.cgets.clear();
+        self.order.clear();
+        self.my_gets.clear();
+        self.incoming_puts.clear();
+        self.serve_gets.clear();
+        self.put_count = 0;
+        self.descs.clear();
+        self.segs.clear();
+        self.reads.clear();
+        self.writes.clear();
+        self.bytes_out_by_src.clear();
+    }
+}
+
 impl SyncPlan {
     pub(crate) fn new(p: Pid) -> Self {
         SyncPlan {
@@ -130,6 +159,15 @@ impl SyncPlan {
             scratch: CachePadded::new(Mutex::new(Scratch::default())),
             stats: CachePadded::new(Mutex::new(SyncStats::default())),
         }
+    }
+
+    /// Job-boundary reset: empty the descriptor arenas and zero the stats,
+    /// retaining every allocation. Caller (the pool) guarantees no process
+    /// of the team is inside a superstep.
+    pub(crate) fn reset_for_job(&self) {
+        self.outbox.write().expect("outbox poisoned").clear();
+        self.scratch.lock().expect("scratch poisoned").clear();
+        *self.stats.lock().expect("stats poisoned") = SyncStats::default();
     }
 }
 

@@ -48,7 +48,7 @@ impl SharedFabric {
     pub fn new(p: Pid, checked: bool) -> Arc<Self> {
         Arc::new(SharedFabric {
             engine: SyncEngine::new(p),
-            barrier: AutoBarrier::new(p),
+            barrier: AutoBarrier::tuned(p),
             aborted: AtomicBool::new(false),
             checked,
         })
@@ -173,6 +173,18 @@ impl Fabric for SharedFabric {
 
     fn abort(&self, _pid: Pid) {
         self.aborted.store(true, Ordering::Release);
+    }
+
+    fn aborted(&self) -> bool {
+        self.aborted.load(Ordering::Acquire)
+    }
+
+    fn reset_for_job(&self) {
+        debug_assert!(!self.aborted(), "reset of an aborted fabric");
+        self.engine.reset_for_job();
+        // The barrier is reusable as-is: episodes of a *clean* team always
+        // complete, so the structure is at a quiescent point between jobs.
+        self.aborted.store(false, Ordering::Release);
     }
 
     fn sim_time_ns(&self, _pid: Pid) -> Option<f64> {

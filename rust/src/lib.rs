@@ -25,6 +25,7 @@ pub mod immortal;
 pub mod graphgen;
 pub mod memory;
 pub mod netsim;
+pub mod pool;
 pub mod probe;
 pub mod queue;
 pub mod runtime;
@@ -38,4 +39,5 @@ pub use crate::core::{
     SYNC_DEFAULT,
 };
 pub use crate::ctx::{exec, hook, Context, Init, Platform, Root};
+pub use crate::pool::{JobHandle, Pool, PreparedJob};
 pub use crate::typed::{Epoch, TypedSlot};

@@ -109,6 +109,13 @@ pub struct Register {
     pending_capacity: usize,
     in_use: usize,
     gen_counter: AtomicU32,
+    /// First generation id of the current job epoch. The pool's warm path
+    /// resets the register *between* jobs without resetting `gen_counter`,
+    /// so every slot registered in job `k+1` carries a generation strictly
+    /// greater than any handle job `k` could have kept: a stale handle can
+    /// never alias a new slot, and is rejected with a dedicated message
+    /// (the epoch-tag invalidation rule; see `docs/pool.md`).
+    epoch_floor: u32,
 }
 
 /// Default slot capacity before any `resize_memory_register` call. The paper
@@ -129,7 +136,25 @@ impl Register {
             pending_capacity: DEFAULT_SLOT_CAPACITY,
             in_use: 0,
             gen_counter: AtomicU32::new(1),
+            epoch_floor: 1,
         }
+    }
+
+    /// Reset to the pristine state a fresh context would observe, retaining
+    /// the table allocations (the pool's warm path between jobs). Index
+    /// assignment restarts from zero — deterministic global ids align with a
+    /// fresh register — while `gen_counter` keeps counting, so handles from
+    /// the previous job fail with [`LpfError::Illegal`] instead of aliasing
+    /// a new slot (see `epoch_floor`).
+    pub fn reset_for_job(&mut self) {
+        self.local.clear();
+        self.global.clear();
+        self.local_free.clear();
+        self.global_free.clear();
+        self.capacity = DEFAULT_SLOT_CAPACITY;
+        self.pending_capacity = DEFAULT_SLOT_CAPACITY;
+        self.in_use = 0;
+        self.epoch_floor = self.gen_counter.load(Ordering::Relaxed);
     }
 
     /// `lpf_resize_memory_register`: O(N) in the requested capacity, takes
@@ -217,6 +242,12 @@ impl Register {
 
     /// Live entry for a slot handle (generation-checked). O(1).
     fn entry_of(&self, slot: Memslot) -> Result<&Entry> {
+        if slot.gen < self.epoch_floor {
+            return Err(LpfError::Illegal(format!(
+                "slot {slot:?} belongs to an earlier job epoch (handles do not survive \
+                 a pool job boundary)"
+            )));
+        }
         let table = match slot.kind {
             SlotKind::Local => &self.local,
             SlotKind::Global => &self.global,
@@ -371,6 +402,29 @@ mod tests {
             s.bytes_mut()[3] = 7;
             assert_eq!(s.bytes()[3], 7);
         }
+    }
+
+    #[test]
+    fn reset_for_job_restores_pristine_state_but_invalidates_old_handles() {
+        let mut r = reg_with_capacity(4);
+        let s = SlotStorage::new(8).unwrap();
+        let a = r.register_global(s.clone()).unwrap();
+        let _b = r.register_local(s.clone()).unwrap();
+        r.reset_for_job();
+        // pristine: default capacity (0 slots) until the next resize+fence
+        assert_eq!(r.capacity(), DEFAULT_SLOT_CAPACITY);
+        assert_eq!(r.in_use(), 0);
+        assert!(r.register_global(s.clone()).is_err());
+        r.resize(2).unwrap();
+        r.activate_pending();
+        // index assignment restarts at 0, exactly as in a fresh register
+        let c = r.register_global(s).unwrap();
+        assert_eq!(c.index(), 0);
+        // the stale handle shares c's index but is rejected by the epoch rule
+        assert_eq!(a.index(), c.index());
+        let err = r.resolve(a).unwrap_err();
+        assert!(format!("{err:?}").contains("earlier job epoch"), "{err:?}");
+        assert!(r.resolve(c).is_ok());
     }
 
     #[test]

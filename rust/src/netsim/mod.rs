@@ -181,6 +181,14 @@ impl SimClocks {
     pub fn p(&self) -> u32 {
         self.clocks.len() as u32
     }
+
+    /// Zero every clock (job-boundary reset: a warm team's next job starts
+    /// at simulated t = 0, exactly like a freshly built fabric).
+    pub fn reset(&self) {
+        for c in &self.clocks {
+            c.store(0, Ordering::Release);
+        }
+    }
 }
 
 /// Pending-op ledger for [`ProgressModel::ScanPending`] transports: the
@@ -219,6 +227,14 @@ impl PendingOps {
     /// Total scan steps performed (diagnostics).
     pub fn total_scans(&self) -> u64 {
         self.scans
+    }
+
+    /// Job-boundary reset: back to the freshly built state, keeping the
+    /// list allocation.
+    pub fn reset_for_job(&mut self) {
+        self.pending.clear();
+        self.next_id = 0;
+        self.scans = 0;
     }
 }
 

@@ -14,7 +14,8 @@ use std::time::Instant;
 use crate::benchkit::Samples;
 use crate::core::machine::BspParams;
 use crate::core::{Args, Result, MSG_DEFAULT, SYNC_DEFAULT};
-use crate::ctx::{exec, Context, Platform, Root};
+use crate::ctx::{Context, Platform};
+use crate::pool::Pool;
 use crate::probe::ProbeTable;
 
 /// Configuration for one probe run.
@@ -49,6 +50,10 @@ impl ProbeConfig {
 /// Measure the mean time (ns) of a total-exchange where every process
 /// sends and receives `h` words of `word_bytes` each. Uses wall-clock on
 /// real fabrics and the simulated clock on netsim fabrics.
+///
+/// One-shot convenience over [`measure_exchange_on`]; the probe sweep
+/// itself runs its hundreds of measurement jobs on one shared [`Pool`] so
+/// process spawn stays off the measured path.
 pub fn measure_exchange(
     platform: &Platform,
     p: u32,
@@ -56,10 +61,13 @@ pub fn measure_exchange(
     h: usize,
     reps: u32,
 ) -> Result<f64> {
-    let root = Root::new(platform.clone()).with_max_procs(p);
-    let outs = exec(
-        &root,
-        p,
+    let pool = Pool::new(platform.clone(), p);
+    measure_exchange_on(&pool, word_bytes, h, reps)
+}
+
+/// [`measure_exchange`] as one warm job on a shared pool.
+pub fn measure_exchange_on(pool: &Pool, word_bytes: usize, h: usize, reps: u32) -> Result<f64> {
+    let outs = pool.exec(
         move |ctx: &mut Context, _| -> Result<f64> {
             let p = ctx.p();
             let bytes = h * word_bytes;
@@ -151,16 +159,19 @@ pub fn run_offline_probe(
     let backend = platform.make_fabric(1).name();
     let r = measure_memcpy_r(cfg.max_bytes.min(8 << 20), 5);
     let p = cfg.p;
+    // One warm team serves the whole sweep (4 × samples × word-size jobs):
+    // the measured intervals never include process spawn or fabric build.
+    let pool = Pool::new(platform.clone(), p);
     let mut rows = Vec::new();
     for &w in &cfg.word_sizes {
         let n_max = (cfg.max_bytes / w).max(4 * p as usize);
         let mut gs = Vec::new();
         let mut ls = Vec::new();
         for _ in 0..cfg.samples {
-            let t0 = measure_exchange(platform, p, w, 0, cfg.reps)?;
-            let tp = measure_exchange(platform, p, w, p as usize, cfg.reps)?;
-            let t2p = measure_exchange(platform, p, w, 2 * p as usize, cfg.reps)?;
-            let tmax = measure_exchange(platform, p, w, n_max, cfg.reps)?;
+            let t0 = measure_exchange_on(&pool, w, 0, cfg.reps)?;
+            let tp = measure_exchange_on(&pool, w, p as usize, cfg.reps)?;
+            let t2p = measure_exchange_on(&pool, w, 2 * p as usize, cfg.reps)?;
+            let tmax = measure_exchange_on(&pool, w, n_max, cfg.reps)?;
             let g = (tmax - t2p) / (n_max - 2 * p as usize) as f64;
             let l = f64::max(t0, 2.0 * tp - t2p);
             gs.push(g.max(0.0));

@@ -146,6 +146,16 @@ impl MsgQueue {
     pub fn clear(&mut self) {
         self.reqs.clear();
     }
+
+    /// Reset to the state a fresh queue presents — default (zero) capacity
+    /// until the program's own `resize` + fence — while keeping the request
+    /// arena allocation. The pool's worker threads recycle one queue per
+    /// process across jobs so a warm job dispatch never allocates.
+    pub fn reset_for_job(&mut self) {
+        self.reqs.clear();
+        self.capacity = DEFAULT_QUEUE_CAPACITY;
+        self.pending_capacity = DEFAULT_QUEUE_CAPACITY;
+    }
 }
 
 impl Default for MsgQueue {

@@ -128,6 +128,23 @@ impl SyncEngine {
         self.coalesce.load(Ordering::Relaxed)
     }
 
+    /// Job-boundary reset (the pool's warm path): restore the state a
+    /// freshly built engine would present — empty registers at default
+    /// capacity, zeroed statistics, coalescing back to its default —
+    /// while retaining every arena allocation and the slot-generation
+    /// counters (stale handles from the previous job must fail, not alias;
+    /// see [`crate::memory::Register::reset_for_job`]). Caller guarantees
+    /// no process is inside a superstep.
+    pub fn reset_for_job(&self) {
+        for reg in &self.regs {
+            reg.with_mut(|r| r.reset_for_job());
+        }
+        for plan in &self.plans {
+            plan.reset_for_job();
+        }
+        self.coalesce.store(true, Ordering::Relaxed);
+    }
+
     /// Run one superstep of the 4-phase strategy for `pid` over `ex`.
     pub fn superstep<E: Exchange>(
         &self,

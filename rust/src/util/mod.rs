@@ -2,6 +2,31 @@
 pub mod radix;
 pub mod rng;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of OS threads created through [`spawn_counted`].
+/// All crate-internal non-scoped thread creation (the pool's workers, and
+/// therefore every `exec`) goes through the counted wrapper, so
+/// `bench_exec --smoke` can assert that a warm-pool job dispatch spawns
+/// zero threads.
+static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+/// Spawn a thread, counting it in [`thread_spawn_count`].
+pub fn spawn_counted<F, T>(f: F) -> std::thread::JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+    std::thread::spawn(f)
+}
+
+/// Number of threads spawned so far via [`spawn_counted`] (monotonic;
+/// benches read a before/after delta).
+pub fn thread_spawn_count() -> u64 {
+    THREAD_SPAWNS.load(Ordering::Relaxed)
+}
+
 /// Pads and aligns a value to 128 bytes so that neighbouring values in an
 /// array never share a cache line (two 64-byte lines on x86 prefetch
 /// pairs). Stand-in for `crossbeam_utils::CachePadded` — the build is

@@ -1,0 +1,245 @@
+//! Cross-job isolation of the hot-team executor.
+//!
+//! The pool's contract: a job served by a warm team observes a context
+//! **bit-identical in behaviour** to a fresh `exec` — no leaked slots, no
+//! inherited queue capacity, no inherited `SyncStats`, simulated clocks at
+//! zero — and slot handles never survive the job boundary (a handle from
+//! job A used in job B fails with `Illegal`, it can never alias job B's
+//! memory). These tests drive a parameterised observer program under both
+//! executors and compare every observable, property-test style, over a
+//! grid of seeds and process counts.
+
+use std::sync::{Arc, Mutex};
+
+use lpf::core::{Args, LpfError, Memslot, Pid, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::ctx::{exec, Context, Platform, Root};
+use lpf::fabric::SyncStats;
+use lpf::pool::Pool;
+
+/// Everything a program can observe about the freshness of its context.
+#[derive(Debug, Clone, PartialEq)]
+struct Observation {
+    p: Pid,
+    /// Registration before any resize must fail (default capacity 0).
+    register_rejected_cold: bool,
+    /// Stats at entry must be zeroed.
+    stats_at_entry: SyncStats,
+    /// Deterministic slot indices (fresh registers start at index 0).
+    slot_indices: Vec<u32>,
+    /// Allgathered payload (communication works and is correct).
+    gathered: Vec<u32>,
+    /// Stats after the program's two supersteps.
+    stats_after: SyncStats,
+    /// Simulated time (netsim backends; None on shared).
+    sim_time_ns: Option<f64>,
+}
+
+/// The observer program: checks pristine state, then runs a seed-dependent
+/// allgather through seed-dependent slot shapes.
+fn observe(ctx: &mut Context, seed: u32) -> Observation {
+    let p = ctx.p();
+    let s = ctx.pid();
+
+    let register_rejected_cold = ctx.register_global(4).is_err();
+    let stats_at_entry = ctx.stats();
+
+    let extra = (seed % 3) as usize; // shape varies with the seed
+    ctx.resize_memory_register(2 + extra).unwrap();
+    ctx.resize_message_queue(p as usize + extra).unwrap();
+
+    // capacity takes effect only at the fence — also true of a fresh ctx
+    let mine_probe = ctx.register_global(4);
+    assert!(mine_probe.is_err(), "capacity must not pre-activate");
+    ctx.sync(SYNC_DEFAULT).unwrap();
+
+    let mut slot_indices = Vec::new();
+    let mine = ctx.register_global(4).unwrap();
+    slot_indices.push(mine.index());
+    let all = ctx.register_global(4 * p as usize).unwrap();
+    slot_indices.push(all.index());
+    for _ in 0..extra {
+        let t = ctx.register_local(8).unwrap();
+        slot_indices.push(t.index());
+    }
+
+    ctx.write_typed(mine, 0, &[seed.wrapping_mul(31).wrapping_add(s)]).unwrap();
+    for k in 0..p {
+        ctx.put(mine, 0, k, all, 4 * s as usize, 4, MSG_DEFAULT).unwrap();
+    }
+    ctx.sync(SYNC_DEFAULT).unwrap();
+    let mut gathered = vec![0u32; p as usize];
+    ctx.read_typed(all, 0, &mut gathered).unwrap();
+
+    Observation {
+        p,
+        register_rejected_cold,
+        stats_at_entry,
+        slot_indices,
+        gathered,
+        stats_after: ctx.stats(),
+        sim_time_ns: ctx.sim_time_ns(),
+    }
+}
+
+/// A deliberately messy job: raises capacities high, registers and leaks
+/// slots, syncs a few times — everything the next job must not see.
+fn dirty_job(ctx: &mut Context, seed: u32) -> Memslot {
+    let p = ctx.p();
+    ctx.resize_memory_register(16 + (seed % 5) as usize).unwrap();
+    ctx.resize_message_queue(64).unwrap();
+    ctx.sync(SYNC_DEFAULT).unwrap();
+    let mut last = None;
+    for _ in 0..(3 + seed % 4) {
+        last = Some(ctx.register_global(32).unwrap());
+    }
+    let leak = last.unwrap();
+    for k in 0..p {
+        ctx.put(leak, 0, k, leak, 4, 4, MSG_DEFAULT).unwrap();
+    }
+    ctx.sync(SYNC_DEFAULT).unwrap();
+    ctx.sync(SYNC_DEFAULT).unwrap();
+    leak // leaked on purpose: never deregistered
+}
+
+fn fresh_observation(platform: &Platform, p: Pid, seed: u32) -> Vec<Observation> {
+    let root = Root::new(platform.clone()).with_max_procs(p);
+    exec(&root, p, move |ctx, _| observe(ctx, seed), Args::none()).unwrap()
+}
+
+#[test]
+fn second_pool_job_is_behaviourally_identical_to_fresh_exec() {
+    for platform in [Platform::shared().checked(true), Platform::rdma()] {
+        for p in [2 as Pid, 4] {
+            let pool = Pool::new(platform.clone(), p);
+            for seed in 0..6u32 {
+                // job A dirties the team...
+                pool.exec(move |ctx, _| dirty_job(ctx, seed), Args::none()).unwrap();
+                // ...job B must still observe a fresh context
+                let warm = pool
+                    .exec(move |ctx, _| observe(ctx, seed), Args::none())
+                    .unwrap();
+                let fresh = fresh_observation(&platform, p, seed);
+                assert_eq!(
+                    warm, fresh,
+                    "platform {platform:?}, p {p}, seed {seed}: warm job diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn queue_capacity_is_cold_after_a_job_that_raised_it() {
+    let pool = Pool::new(Platform::shared().checked(true), 2);
+    pool.exec(
+        |ctx, _| {
+            ctx.resize_message_queue(128).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+        },
+        Args::none(),
+    )
+    .unwrap();
+    pool.exec(
+        |ctx, _| {
+            ctx.resize_memory_register(1).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let s = ctx.register_global(8).unwrap();
+            // queue capacity is back at the default of zero
+            let err = ctx.put(s, 0, 0, s, 4, 4, MSG_DEFAULT).unwrap_err();
+            assert_eq!(err, LpfError::QueueCapacity { capacity: 0 });
+        },
+        Args::none(),
+    )
+    .unwrap();
+}
+
+#[test]
+fn slot_handle_from_job_a_is_illegal_in_job_b() {
+    let pool = Pool::new(Platform::shared().checked(true), 2);
+    let leaked: Arc<Mutex<Vec<Memslot>>> = Arc::new(Mutex::new(Vec::new()));
+    {
+        let leaked = leaked.clone();
+        pool.exec(
+            move |ctx, _| {
+                let slot = dirty_job(ctx, 1);
+                if ctx.pid() == 0 {
+                    leaked.lock().unwrap().push(slot);
+                }
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+    let stale = leaked.lock().unwrap()[0];
+    pool.exec(
+        move |ctx, _| {
+            // resolve paths must reject the stale handle...
+            let mut buf = [0u8; 4];
+            let err = ctx.read_slot(stale, 0, &mut buf).unwrap_err();
+            assert!(
+                matches!(&err, LpfError::Illegal(m) if m.contains("earlier job epoch")),
+                "{err:?}"
+            );
+            // ...including the put/get enqueue validation
+            ctx.resize_memory_register(1).unwrap();
+            ctx.resize_message_queue(4).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let fresh = ctx.register_global(8).unwrap();
+            let err = ctx.put(stale, 0, 0, fresh, 0, 4, MSG_DEFAULT).unwrap_err();
+            assert!(matches!(err, LpfError::Illegal(_)), "{err:?}");
+            // a stale handle can never alias a live slot, even at the same
+            // index: generations are monotonic across the job boundary
+            assert!(stale.index() != fresh.index() || stale != fresh);
+        },
+        Args::none(),
+    )
+    .unwrap();
+}
+
+#[test]
+fn panic_payload_and_pid_reach_the_submitter() {
+    let pool = Pool::new(Platform::shared(), 3);
+    let err = pool
+        .exec(
+            |ctx, _| {
+                if ctx.pid() == 2 {
+                    panic!("graph shard 2 out of range");
+                }
+            },
+            Args::none(),
+        )
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("graph shard 2 out of range"), "payload lost: {msg}");
+    assert!(msg.contains("pid 2"), "pid lost: {msg}");
+    // the same propagation holds through the one-shot exec sugar
+    let root = Root::new(Platform::shared()).with_max_procs(2);
+    let err = exec(
+        &root,
+        2,
+        |ctx, _| {
+            if ctx.pid() == 1 {
+                panic!("boom {}", 41 + 1);
+            }
+        },
+        Args::none(),
+    )
+    .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("boom 42") && msg.contains("pid 1"), "{msg}");
+}
+
+#[test]
+fn netsim_clocks_restart_per_job() {
+    let pool = Pool::new(Platform::rdma(), 3);
+    let job = |ctx: &mut Context, _: Args| -> f64 {
+        ctx.resize_memory_register(1).unwrap();
+        ctx.resize_message_queue(4).unwrap();
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        ctx.sim_time_ns().unwrap()
+    };
+    let first = pool.exec(job, Args::none()).unwrap();
+    let second = pool.exec(job, Args::none()).unwrap();
+    // deterministic netsim + per-job clock reset: identical timelines
+    assert_eq!(first, second, "clocks must restart at every job boundary");
+}
