@@ -1,0 +1,164 @@
+//! bench_faults — the fault-injection adversary sweep (ISSUE 4).
+//!
+//! Sweeps seeds through the cross-backend differential oracle
+//! ([`lpf::check::differential`]): for each seed a deterministic fault is
+//! derived ([`lpf::netsim::faults::FaultPlan::from_seed`]) and the
+//! adversary workload runs on `{shared, rdma, msg, hybrid} × {cold,
+//! warm}` against a fault-free reference. The sweep pins the paper's §3
+//! guarantees adversarially:
+//!
+//! * **absorbed** (model-legal delay / reorder / late rendezvous) faults
+//!   leave destination memory and `SyncStats` bit-identical to the
+//!   reference on every backend and mode;
+//! * **reportable** (mid-job abort, allocation failure) faults surface as
+//!   a clean `LpfError` of the *same class* everywhere, followed by
+//!   exactly one pool cold-rebuild and a successful next job;
+//! * **never a hang**: a watchdog thread kills the process loudly if the
+//!   sweep wedges, so a deadlock can never masquerade as a slow CI job.
+//!
+//! Writes `BENCH_faults.json`. `--smoke` (CI) exits non-zero on any
+//! violation.
+//!
+//! Usage: `bench_faults [--smoke] [--seeds N] [--p P] [--out PATH]`
+
+use std::time::{Duration, Instant};
+
+use lpf::check::{differential, DiffReport};
+use lpf::core::Pid;
+use lpf::netsim::faults::FaultPlan;
+
+/// The workload seed is fixed: the sweep varies the *fault*, and every
+/// case of one sweep must run the identical program.
+const WORKLOAD_SEED: u32 = 1;
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn report_json(r: &DiffReport, indent: &str) -> String {
+    let mut s = String::new();
+    match r.fault_seed {
+        Some(seed) => s.push_str(&format!("{indent}{{ \"fault_seed\": {seed},")),
+        None => s.push_str(&format!("{indent}{{ \"fault_seed\": null,")),
+    }
+    s.push_str(&format!(
+        " \"fault\": \"{}\", \"absorbed\": {},\n",
+        json_escape(&r.fault_desc),
+        match r.absorbed {
+            Some(a) => a.to_string(),
+            None => "null".to_string(),
+        }
+    ));
+    s.push_str(&format!("{indent}  \"cases\": [\n"));
+    for (i, c) in r.cases.iter().enumerate() {
+        s.push_str(&format!(
+            "{indent}    {{ \"backend\": \"{}\", \"mode\": \"{}\", \"class\": \"{}\", \
+             \"cold_resets\": {}, \"recovered\": {}, \"injections\": {} }}{}\n",
+            c.backend,
+            c.mode.name(),
+            c.class(),
+            c.cold_resets,
+            c.recovered,
+            c.injections,
+            if i + 1 < r.cases.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!("{indent}  ],\n"));
+    s.push_str(&format!("{indent}  \"violations\": ["));
+    for (i, v) in r.violations.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("\"{}\"", json_escape(v)));
+    }
+    s.push_str("] }");
+    s
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let arg_after = |flag: &str| {
+        argv.iter().position(|a| a == flag).and_then(|i| argv.get(i + 1)).cloned()
+    };
+    let out = arg_after("--out").unwrap_or_else(|| "BENCH_faults.json".to_string());
+    // --smoke shrinks the sweep to the CI budget; the violation gate below
+    // is armed in every mode
+    let default_seeds: u64 = if smoke { 8 } else { 16 };
+    let n_seeds: u64 = arg_after("--seeds").and_then(|s| s.parse().ok()).unwrap_or(default_seeds);
+    let p: Pid = arg_after("--p").and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    // The "never a hang" pin: if any injected fault wedges a barrier, the
+    // watchdog turns the hang into a loud, fast failure instead of a CI
+    // timeout. Budget scales with the sweep size.
+    let budget = Duration::from_secs(60 + 30 * n_seeds);
+    std::thread::spawn(move || {
+        std::thread::sleep(budget);
+        eprintln!(
+            "FAIL: fault sweep still running after {}s — an injected fault hung the \
+             pipeline instead of surfacing as a clean error",
+            budget.as_secs()
+        );
+        std::process::exit(2);
+    });
+
+    let t0 = Instant::now();
+    let mut reports: Vec<DiffReport> = Vec::new();
+
+    // Fault-free matrix first: the compliance baseline.
+    let baseline = differential(p, WORKLOAD_SEED, None);
+    eprintln!(
+        "baseline (no fault): {} cases, {} violations",
+        baseline.cases.len(),
+        baseline.violations.len()
+    );
+
+    for seed in 0..n_seeds {
+        let plan = FaultPlan::from_seed(seed, p);
+        let r = differential(p, WORKLOAD_SEED, Some(seed));
+        eprintln!(
+            "seed {seed}: {:?} [{}] -> {}",
+            plan.spec(),
+            if plan.spec().absorbed() { "absorbed" } else { "reportable" },
+            if r.ok() { "ok".to_string() } else { format!("{} VIOLATIONS", r.violations.len()) }
+        );
+        for v in &r.violations {
+            eprintln!("    {v}");
+        }
+        reports.push(r);
+    }
+
+    let violations: usize =
+        baseline.violations.len() + reports.iter().map(|r| r.violations.len()).sum::<usize>();
+
+    // ---- BENCH_faults.json
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"bench_faults/v1\",\n");
+    s.push_str(&format!("  \"p\": {p},\n  \"workload_seed\": {WORKLOAD_SEED},\n"));
+    s.push_str(&format!("  \"seeds\": {n_seeds},\n"));
+    s.push_str(&format!("  \"elapsed_ms\": {},\n", t0.elapsed().as_millis()));
+    s.push_str(&format!("  \"total_violations\": {violations},\n"));
+    s.push_str("  \"baseline\":\n");
+    s.push_str(&report_json(&baseline, "    "));
+    s.push_str(",\n  \"sweeps\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        s.push_str(&report_json(r, "    "));
+        s.push_str(if i + 1 < reports.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(&out, s).expect("write BENCH_faults.json");
+    eprintln!("wrote {out} ({} sweeps, {:.1}s)", reports.len(), t0.elapsed().as_secs_f64());
+
+    if violations > 0 {
+        // non-zero exit in every mode — docs and CI both promise that a
+        // violation can never look like a passing run (--smoke only
+        // shrinks the sweep budget, it is not what arms the gate)
+        eprintln!("FAIL: {violations} compliance violations under fault injection");
+        std::process::exit(1);
+    } else {
+        eprintln!(
+            "OK: every injected fault was absorbed or surfaced as a clean error with a \
+             cold rebuild; memory and stats stayed bit-identical across all backends"
+        );
+    }
+}

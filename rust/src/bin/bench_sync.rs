@@ -21,7 +21,7 @@ use std::time::Instant;
 use lpf::benchkit::{alloc_counter, fit_affine, json_f64, r_squared, Samples};
 use lpf::core::{Args, Pid, MSG_DEFAULT, SYNC_DEFAULT};
 use lpf::ctx::{exec, Platform, Root};
-use lpf::fabric::net::{MetaAlgo, NetFabric, Topology};
+use lpf::fabric::net::{DEFAULT_BRUCK_SEED, MetaAlgo, NetFabric, Topology};
 use lpf::fabric::shared::SharedFabric;
 use lpf::fabric::Fabric;
 use lpf::memory::SlotStorage;
@@ -253,7 +253,7 @@ fn backend_fabric(backend: &'static str, p: Pid, coalesce: bool) -> Arc<dyn Fabr
                 "msg",
                 Personality::mpi_message_passing(),
                 Topology::distributed(),
-                MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+                MetaAlgo::RandomisedBruck { seed: DEFAULT_BRUCK_SEED },
                 false,
             );
             f.set_coalescing(coalesce);
@@ -265,7 +265,7 @@ fn backend_fabric(backend: &'static str, p: Pid, coalesce: bool) -> Arc<dyn Fabr
                 "hybrid",
                 Personality::ibverbs(),
                 Topology::clustered(2),
-                MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+                MetaAlgo::RandomisedBruck { seed: DEFAULT_BRUCK_SEED },
                 false,
             );
             f.set_coalescing(coalesce);

@@ -1,0 +1,386 @@
+//! Cross-backend differential checking (ISSUE 4 tentpole).
+//!
+//! The paper's model-compliance claim (§2–3) makes a falsifiable promise:
+//! one SPMD program must behave *identically* on all four LPF
+//! implementations — bit-identical destination memory, the same uniform
+//! [`SyncStats`], and the same error classification on failure. This
+//! module is the oracle that checks the promise adversarially:
+//!
+//! * [`adversary`] — a seed-parameterised SPMD workload exercising the
+//!   whole superstep pipeline (bootstrap fence, coalescible put runs,
+//!   CRCW overlap storms, served gets, an empty superstep), designed to
+//!   satisfy the trigger contract of
+//!   [`FaultPlan::from_seed`](crate::netsim::faults::FaultPlan::from_seed);
+//! * [`run_case`] — one (backend, cold/warm) execution of a workload on a
+//!   [`Pool`], with optional fault injection, recording the outcome, the
+//!   pool's cold-rebuild count, and whether the team recovered;
+//! * [`differential`] — the full matrix: `{shared, rdma, msg, hybrid} ×
+//!   {cold, warm}` against one reference run, asserting
+//!   - absorbed (model-legal) faults are invisible: memory and stats
+//!     bit-identical to the unperturbed reference;
+//!   - reportable faults surface as a clean [`LpfError`] of the *same
+//!     class* on every backend and mode, followed by exactly one cold
+//!     rebuild and a successful next job — never a hang, never silent
+//!     corruption.
+//!
+//! `bench_faults --smoke` sweeps seeds through [`differential`] in CI;
+//! `tests/fault_adversary.rs` pins the same properties in `cargo test`.
+
+use std::sync::Arc;
+
+use crate::core::{Args, LpfError, Pid, MSG_DEFAULT, SYNC_DEFAULT};
+use crate::ctx::{Context, Platform};
+use crate::fabric::SyncStats;
+use crate::netsim::faults::FaultPlan;
+use crate::pool::Pool;
+
+/// Coarse error classification used for cross-backend comparison. Wrapped
+/// errors (a panic whose payload quotes the original error) classify like
+/// the original, so the class is stable across propagation paths.
+pub fn classify(e: &LpfError) -> &'static str {
+    let text = format!("{e:?}");
+    if text.contains("injected fault") {
+        return "injected";
+    }
+    if text.contains("PeerAborted") {
+        return "peer-aborted";
+    }
+    match e {
+        LpfError::OutOfMemory(_)
+        | LpfError::SlotCapacity { .. }
+        | LpfError::QueueCapacity { .. } => "mitigable",
+        LpfError::Illegal(_) => "illegal",
+        LpfError::PeerAborted { .. } => "peer-aborted",
+        LpfError::Fatal(_) => "fatal",
+    }
+}
+
+/// The four platforms of the differential matrix, checked mode on (the
+/// oracle should also exercise the legality verification paths).
+pub fn all_backends() -> Vec<(&'static str, Platform)> {
+    vec![
+        ("shared", Platform::shared().checked(true)),
+        ("rdma", Platform::rdma().checked(true)),
+        ("msg", Platform::msg().checked(true)),
+        ("hybrid", Platform::hybrid(2).checked(true)),
+    ]
+}
+
+/// Everything one process observes at the end of the adversary workload.
+/// Simulated time is deliberately excluded: backends (and delay faults)
+/// legitimately differ there — the compliance claim is about memory and
+/// the uniform statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Observation {
+    /// Final bytes of the destination slot.
+    pub mem: Vec<u8>,
+    /// The engine's uniform per-process statistics.
+    pub stats: SyncStats,
+}
+
+/// The adversary workload: 4 supersteps, ≥ 2 global registrations per
+/// process (the [`crate::netsim::faults`] sweep contract), deterministic
+/// given `(p, seed)`:
+///
+/// 0. bootstrap fence (Algorithm 2 shape);
+/// 1. allgather puts + an overlapping CRCW put storm into one target pid
+///    + a contiguous 4-put run (exercises request coalescing);
+/// 2. every process serves a get from its successor;
+/// 3. an empty superstep.
+///
+/// Any internal failure propagates by panic: the abort machinery then
+/// guarantees peers fail with `PeerAborted` instead of hanging — exactly
+/// the clean-failure path the checker wants to observe under injection.
+pub fn adversary(seed: u32) -> impl Fn(&mut Context, Args) -> Observation + Send + Sync + Copy {
+    move |ctx, _| {
+        let p = ctx.p();
+        let me = ctx.pid();
+        let dst_len = 64 * p as usize + 64;
+        // superstep 0: the bootstrap fence
+        ctx.resize_memory_register(4).unwrap();
+        ctx.resize_message_queue(8 * p as usize + 8).unwrap();
+        ctx.sync(SYNC_DEFAULT).unwrap();
+        // registrations 0 and 1 (the FailSlotRegister window)
+        let src = ctx.register_global(64).unwrap();
+        let dst = ctx.register_global(dst_len).unwrap();
+        let fill: Vec<u8> =
+            (0..64).map(|i| (seed as usize * 37 + me as usize * 13 + i * 3) as u8).collect();
+        ctx.write_slot(src, 0, &fill).unwrap();
+
+        // superstep 1: allgather + CRCW storm + coalescible run
+        let storm_target = seed % p;
+        let storm_base = 64 * p as usize;
+        for k in 0..p {
+            ctx.put(src, 0, k, dst, 64 * me as usize, 32, MSG_DEFAULT).unwrap();
+        }
+        // staggered overlapping writes into one pid — deterministic CRCW
+        let stagger = (me as usize * 4) % 32;
+        ctx.put(src, 32, storm_target, dst, storm_base + stagger, 16, MSG_DEFAULT).unwrap();
+        // 4 contiguous puts, the shape request coalescing collapses
+        for i in 0..4usize {
+            ctx.put(src, 48 + i * 4, storm_target, dst, storm_base + 32 + i * 4, 4, MSG_DEFAULT)
+                .unwrap();
+        }
+        ctx.sync(SYNC_DEFAULT).unwrap();
+
+        // superstep 2: get 8 bytes from the successor's source block
+        let succ = (me + 1) % p;
+        ctx.get(succ, src, 8, dst, storm_base + 48, 8, MSG_DEFAULT).unwrap();
+        ctx.sync(SYNC_DEFAULT).unwrap();
+
+        // superstep 3: empty (faults may target it)
+        ctx.sync(SYNC_DEFAULT).unwrap();
+
+        let mut mem = vec![0u8; dst_len];
+        ctx.read_slot(dst, 0, &mut mem).unwrap();
+        Observation { mem, stats: ctx.stats() }
+    }
+}
+
+/// Cold = the workload is the pool's first job (the one-shot `exec`
+/// shape); warm = a throwaway job runs first, so the measured job rides a
+/// job-reset team.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    Cold,
+    Warm,
+}
+
+impl ExecMode {
+    /// Lower-case label for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Cold => "cold",
+            ExecMode::Warm => "warm",
+        }
+    }
+}
+
+/// Outcome of one (backend, mode) case.
+#[derive(Debug)]
+pub struct CaseOutcome {
+    pub backend: &'static str,
+    pub mode: ExecMode,
+    /// Per-pid observations, or the job's first error in pid order.
+    pub result: Result<Vec<Observation>, LpfError>,
+    /// Cold rebuilds the measured job caused (0 clean, 1 after a fault).
+    pub cold_resets: u64,
+    /// Whether a trivial job succeeded afterwards on the same pool.
+    pub recovered: bool,
+    /// Injection count of the installed plan (0 without a plan).
+    pub injections: u64,
+}
+
+impl CaseOutcome {
+    /// `"ok"` or the error class (see [`classify`]).
+    pub fn class(&self) -> &'static str {
+        match &self.result {
+            Ok(_) => "ok",
+            Err(e) => classify(e),
+        }
+    }
+}
+
+/// Run the adversary workload once on `platform` under `mode`, with an
+/// optional fault plan installed, and capture the full outcome.
+pub fn run_case(
+    backend: &'static str,
+    platform: &Platform,
+    p: Pid,
+    seed: u32,
+    mode: ExecMode,
+    plan: Option<Arc<FaultPlan>>,
+) -> CaseOutcome {
+    let pool = Pool::new(platform.clone(), p);
+    if mode == ExecMode::Warm {
+        // a throwaway job, so the measured one rides a warm (job-reset)
+        // team — the state the persistent executor serves in production
+        pool.exec(|ctx, _| ctx.pid(), Args::none()).expect("warm-up job failed");
+    }
+    pool.set_fault_plan(plan.clone());
+    let before = pool.stats();
+    let result = pool.exec(adversary(seed), Args::none());
+    let after = pool.stats();
+    // serviceability: fault or not, the next job must run cleanly (after
+    // a reported fault the pool cold-rebuilds the team first)
+    let recovered = pool.exec(|ctx, _| ctx.p(), Args::none()).is_ok();
+    CaseOutcome {
+        backend,
+        mode,
+        result,
+        cold_resets: after.cold_resets - before.cold_resets,
+        recovered,
+        injections: plan.map_or(0, |pl| pl.injections()),
+    }
+}
+
+/// Report of one full differential matrix run.
+#[derive(Debug)]
+pub struct DiffReport {
+    pub p: Pid,
+    pub workload_seed: u32,
+    /// The fault sweep seed, if injection was requested.
+    pub fault_seed: Option<u64>,
+    /// Debug rendering of the derived fault (empty without injection).
+    pub fault_desc: String,
+    /// Whether the derived fault belongs to the absorbed class.
+    pub absorbed: Option<bool>,
+    pub cases: Vec<CaseOutcome>,
+    /// Every compliance violation found (empty = the matrix holds).
+    pub violations: Vec<String>,
+}
+
+impl DiffReport {
+    /// True when no violation was found.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Run the differential matrix: the adversary workload on every backend,
+/// cold and warm, against a fault-free shared/cold reference, optionally
+/// under a fault derived from `fault_seed` (a fresh plan instance per
+/// case, so the fault fires in each). Returns the full report; violations
+/// are collected, not panicked, so sweeps can report every failure.
+pub fn differential(p: Pid, workload_seed: u32, fault_seed: Option<u64>) -> DiffReport {
+    let backends = all_backends();
+    let (fault_desc, absorbed, wire_only) = match fault_seed {
+        Some(s) => {
+            let probe = FaultPlan::from_seed(s, p);
+            let spec = probe.spec();
+            (format!("{spec:?}"), Some(spec.absorbed()), spec.wire_only())
+        }
+        None => (String::new(), None, false),
+    };
+    let mut violations = Vec::new();
+
+    // The fault-free reference every absorbed/clean case must match.
+    let reference = run_case("shared", &backends[0].1, p, workload_seed, ExecMode::Cold, None);
+    let ref_obs = match &reference.result {
+        Ok(obs) => obs.clone(),
+        Err(e) => {
+            violations.push(format!("reference run failed: {e:?}"));
+            Vec::new()
+        }
+    };
+
+    let mut cases = Vec::new();
+    for (name, platform) in &backends {
+        for mode in [ExecMode::Cold, ExecMode::Warm] {
+            let plan = fault_seed.map(|s| FaultPlan::from_seed(s, p));
+            cases.push(run_case(*name, platform, p, workload_seed, mode, plan));
+        }
+    }
+
+    if !ref_obs.is_empty() {
+        for case in &cases {
+            let tag = format!("{}/{}", case.backend, case.mode.name());
+            match absorbed {
+                // no fault, or a model-legal one: the run must succeed and
+                // match the reference bit for bit (memory AND stats)
+                None | Some(true) => {
+                    match &case.result {
+                        Ok(obs) if *obs == ref_obs => {}
+                        Ok(obs) => {
+                            for (pid, (got, want)) in obs.iter().zip(&ref_obs).enumerate() {
+                                if got.mem != want.mem {
+                                    violations.push(format!(
+                                        "{tag}: pid {pid} destination memory diverged \
+                                         (silent corruption)"
+                                    ));
+                                } else if got.stats != want.stats {
+                                    violations.push(format!(
+                                        "{tag}: pid {pid} SyncStats diverged: {:?} vs {:?}",
+                                        got.stats, want.stats
+                                    ));
+                                }
+                            }
+                        }
+                        Err(e) => violations.push(format!("{tag}: unexpected failure {e:?}")),
+                    }
+                    if case.cold_resets != 0 {
+                        violations.push(format!("{tag}: clean run forced a cold rebuild"));
+                    }
+                    // wire-only faults cannot fire on the shared backend
+                    // (no simulated wire) — vacuously absorbed there
+                    let exempt = wire_only && case.backend == "shared";
+                    if absorbed == Some(true) && !exempt && case.injections == 0 {
+                        violations.push(format!("{tag}: planned fault never fired"));
+                    }
+                }
+                // a reportable fault: a clean error of a backend-agnostic
+                // class, one cold rebuild, full recovery
+                Some(false) => {
+                    if case.result.is_ok() {
+                        violations.push(format!("{tag}: reportable fault was not surfaced"));
+                    }
+                    if case.cold_resets != 1 {
+                        violations.push(format!(
+                            "{tag}: expected exactly one cold rebuild, saw {}",
+                            case.cold_resets
+                        ));
+                    }
+                    if case.injections == 0 {
+                        violations.push(format!("{tag}: planned fault never fired"));
+                    }
+                }
+            }
+            if !case.recovered {
+                violations.push(format!("{tag}: pool did not recover (possible wedged team)"));
+            }
+        }
+        // error classes must agree across the whole matrix
+        if absorbed == Some(false) {
+            let classes: Vec<&'static str> = cases.iter().map(|c| c.class()).collect();
+            if classes.windows(2).any(|w| w[0] != w[1]) {
+                let detail: Vec<String> = cases
+                    .iter()
+                    .map(|c| format!("{}/{}={}", c.backend, c.mode.name(), c.class()))
+                    .collect();
+                violations.push(format!(
+                    "error classification diverged across backends: {}",
+                    detail.join(", ")
+                ));
+            }
+        }
+    }
+
+    DiffReport { p, workload_seed, fault_seed, fault_desc, absorbed, cases, violations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_sees_through_wrapping() {
+        let direct = LpfError::Fatal("injected fault: abort at superstep 1 on pid 0".into());
+        assert_eq!(classify(&direct), "injected");
+        let wrapped = LpfError::Fatal(
+            "SPMD function panicked on pid 2: called `Result::unwrap()` on an `Err` value: \
+             PeerAborted { pid: 4294967295 }"
+                .into(),
+        );
+        assert_eq!(classify(&wrapped), "peer-aborted");
+        assert_eq!(classify(&LpfError::OutOfMemory("x".into())), "mitigable");
+        assert_eq!(classify(&LpfError::Illegal("x".into())), "illegal");
+        assert_eq!(classify(&LpfError::Fatal("other".into())), "fatal");
+    }
+
+    #[test]
+    fn adversary_is_deterministic_per_backend() {
+        let a = run_case("shared", &Platform::shared().checked(true), 4, 3, ExecMode::Cold, None);
+        let b = run_case("shared", &Platform::shared().checked(true), 4, 3, ExecMode::Cold, None);
+        assert_eq!(a.result.unwrap(), b.result.unwrap());
+        assert!(a.recovered && b.recovered);
+        assert_eq!(a.cold_resets, 0);
+    }
+
+    #[test]
+    fn warm_case_matches_cold_case() {
+        let plat = Platform::rdma().checked(true);
+        let cold = run_case("rdma", &plat, 4, 5, ExecMode::Cold, None);
+        let warm = run_case("rdma", &plat, 4, 5, ExecMode::Warm, None);
+        assert_eq!(cold.result.unwrap(), warm.result.unwrap());
+    }
+}

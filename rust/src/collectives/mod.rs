@@ -31,11 +31,31 @@ pub struct Coll {
 impl Coll {
     /// Collective constructor: registers workspace slots (2 global slots;
     /// callers must have capacity for them) sized for per-process payloads
-    /// of `max_bytes`. Costs one superstep to activate queue capacity.
+    /// of `max_bytes`. Performs no superstep itself: the registrations
+    /// take effect for communication at the caller's next `sync`, exactly
+    /// like any `lpf_register_global` (paper Algorithm 2).
+    ///
+    /// Mitigable failures (workspace too large, slot capacity exhausted)
+    /// leave no slot behind; as with any failed collective registration,
+    /// every process must observe the same outcome (and mitigate
+    /// identically) for global slot ids to stay aligned.
     pub fn new(ctx: &mut Context, max_bytes: usize) -> Result<Coll> {
         let p = ctx.p() as usize;
+        let gather_bytes = max_bytes.checked_mul(p).ok_or_else(|| {
+            LpfError::OutOfMemory(format!(
+                "collectives workspace of {max_bytes} B x {p} processes overflows"
+            ))
+        })?;
         let send = ctx.alloc_global::<u8>(max_bytes)?;
-        let gather = ctx.alloc_global::<u8>(max_bytes * p)?;
+        let gather = match ctx.alloc_global::<u8>(gather_bytes) {
+            Ok(g) => g,
+            Err(e) => {
+                // keep the mitigable no-side-effects contract: a failed
+                // constructor must not leak its first slot
+                let _ = ctx.dealloc(send);
+                return Err(e);
+            }
+        };
         Ok(Coll { gather, send, max_bytes })
     }
 
@@ -270,7 +290,12 @@ impl Coll {
         op: impl Fn(T, T) -> T,
     ) -> Result<()> {
         let p = ctx.p() as usize;
-        let mut all = vec![mine[0]; mine.len() * p];
+        // Zero-length reduction: still collective — run the same gather
+        // superstep with no payload so every process stays in lockstep.
+        let Some(&head) = mine.first() else {
+            return self.gather(ctx, root, mine, &mut []);
+        };
+        let mut all = vec![head; mine.len() * p];
         self.gather(ctx, root, mine, if ctx.pid() == root { &mut all } else { &mut [] })?;
         if ctx.pid() == root {
             out.copy_from_slice(&all[..mine.len()]);
@@ -293,7 +318,11 @@ impl Coll {
         op: impl Fn(T, T) -> T,
     ) -> Result<()> {
         let p = ctx.p() as usize;
-        let mut all = vec![mine[0]; mine.len() * p];
+        // Zero-length: same collective shape, no payload (see `reduce`).
+        let Some(&head) = mine.first() else {
+            return self.allgather(ctx, mine, out);
+        };
+        let mut all = vec![head; mine.len() * p];
         self.allgather(ctx, mine, &mut all)?;
         out.copy_from_slice(&all[..mine.len()]);
         for k in 1..p {
@@ -314,7 +343,11 @@ impl Coll {
         op: impl Fn(T, T) -> T,
     ) -> Result<()> {
         let p = ctx.p() as usize;
-        let mut all = vec![mine[0]; mine.len() * p];
+        // Zero-length: same collective shape, no payload (see `reduce`).
+        let Some(&head) = mine.first() else {
+            return self.allgather(ctx, mine, out);
+        };
+        let mut all = vec![head; mine.len() * p];
         self.allgather(ctx, mine, &mut all)?;
         out.copy_from_slice(&all[..mine.len()]);
         for k in 1..=ctx.pid() as usize {
@@ -454,5 +487,110 @@ mod tests {
             let err = coll.broadcast(ctx, 0, &mut data).unwrap_err();
             assert!(matches!(err, LpfError::Illegal(_)));
         });
+    }
+
+    #[test]
+    fn oversize_payload_rejected_on_every_entry_point() {
+        // ISSUE 4 satellite: only the broadcast happy path exercised
+        // check_len; pin the other entry points' error paths too. Every
+        // process takes the same erroring path before any superstep, so
+        // collectiveness is preserved.
+        with_coll(2, 8, |ctx, coll| {
+            let data = [0u64; 4]; // 32 B > 8 B workspace
+            let mut out = [0u64; 4];
+            let mut big = [0u64; 8];
+            assert!(matches!(
+                coll.allgather(ctx, &data, &mut big).unwrap_err(),
+                LpfError::Illegal(_)
+            ));
+            assert!(matches!(
+                coll.gather(ctx, 0, &data, &mut big).unwrap_err(),
+                LpfError::Illegal(_)
+            ));
+            assert!(matches!(
+                coll.reduce(ctx, 0, &data, &mut out, |a, b| a + b).unwrap_err(),
+                LpfError::Illegal(_)
+            ));
+            assert!(matches!(
+                coll.scan(ctx, &data, &mut out, |a, b| a + b).unwrap_err(),
+                LpfError::Illegal(_)
+            ));
+            assert!(matches!(
+                coll.alltoall(ctx, &data, &mut out).unwrap_err(),
+                LpfError::Illegal(_)
+            ));
+        });
+    }
+
+    #[test]
+    fn zero_length_reduce_scan_allreduce_are_collective_noops() {
+        // Regression (ISSUE 4 satellite): reduce/allreduce/scan indexed
+        // `mine[0]` unconditionally, panicking on zero-length input.
+        with_coll(4, 16, |ctx, coll| {
+            let empty: [u64; 0] = [];
+            let mut none: [u64; 0] = [];
+            coll.reduce(ctx, 0, &empty, &mut none, |a, b| a + b).unwrap();
+            coll.allreduce(ctx, &empty, &mut none, |a, b| a + b).unwrap();
+            coll.scan(ctx, &empty, &mut none, |a, b| a + b).unwrap();
+            // the workspace stays serviceable afterwards
+            let mine = [ctx.pid() as u64];
+            let mut sum = [0u64];
+            coll.allreduce(ctx, &mine, &mut sum, |a, b| a + b).unwrap();
+            assert_eq!(sum[0], 6, "sum of pids 0..4");
+        });
+    }
+
+    #[test]
+    fn coll_new_rejects_workspace_size_overflow() {
+        // `max_bytes * p` used to overflow (panic in debug builds);
+        // now a checked multiply reports mitigable out-of-memory.
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(2);
+        exec(
+            &root,
+            2,
+            |ctx, _| {
+                ctx.bootstrap(4, 8).unwrap();
+                let err = Coll::new(ctx, usize::MAX / 2 + 1).unwrap_err();
+                assert!(matches!(&err, LpfError::OutOfMemory(_)), "{err:?}");
+                assert!(err.is_mitigable());
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn coll_new_failure_leaves_no_slot_behind() {
+        // Regression (ISSUE 4 satellite): with the global-slot capacity
+        // exhausted mid-constructor, the already-registered send slot
+        // leaked, breaking the mitigable no-side-effects contract.
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(2);
+        exec(
+            &root,
+            2,
+            |ctx, _| {
+                ctx.bootstrap(3, 8).unwrap();
+                let keep_a = ctx.alloc_global::<u8>(4).unwrap();
+                let keep_b = ctx.alloc_global::<u8>(4).unwrap();
+                // 1 of 3 slots free; the constructor needs 2
+                let err = Coll::new(ctx, 16).unwrap_err();
+                assert!(err.is_mitigable(), "{err:?}");
+                // the partial registration was rolled back: one slot is
+                // still free, and a full mitigation (dealloc + retry)
+                // succeeds
+                let probe = ctx.alloc_global::<u8>(4).unwrap();
+                ctx.dealloc(probe).unwrap();
+                ctx.dealloc(keep_b).unwrap();
+                let coll = Coll::new(ctx, 16).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let mine = [ctx.pid() as u64];
+                let mut sum = [0u64];
+                coll.allreduce(ctx, &mine, &mut sum, |a, b| a + b).unwrap();
+                assert_eq!(sum[0], 1);
+                let _ = keep_a;
+            },
+            Args::none(),
+        )
+        .unwrap();
     }
 }

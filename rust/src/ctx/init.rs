@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 
 use super::{run_spmd, Context, ContextGroup, Platform};
 use crate::core::{Args, LpfError, Pid, Result};
+use crate::netsim::faults::FaultPlan;
 
 /// Shared rendezvous state for one master address.
 struct Rendezvous {
@@ -47,6 +48,10 @@ struct RendezvousState {
     /// from a host framework (the sparksim Table-4 bootstrap) reuse the
     /// fabric, arenas, and tuned barrier instead of rebuilding them.
     warm: Option<Arc<ContextGroup>>,
+    /// Fault-injection plan every hook epoch installs on its team (warm
+    /// or freshly built) — the hook-epoch analogue of
+    /// [`crate::pool::Pool::set_fault_plan`].
+    fault_plan: Option<Arc<FaultPlan>>,
 }
 
 /// `lpf_init_t`: one process's handle for hooking into a context shared
@@ -160,6 +165,16 @@ impl Init {
         self.nprocs
     }
 
+    /// Install (or clear) a deterministic fault-injection plan for the
+    /// hook epochs over this rendezvous (see [`crate::netsim::faults`]).
+    /// Takes effect from the next epoch's team hand-out; like the pool's
+    /// [`crate::pool::Pool::set_fault_plan`], the plan object persists
+    /// across epochs, so one-shot faults stay exhausted after firing and
+    /// the next hook runs clean on a rebuilt team.
+    pub fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        self.rendezvous.state.lock().unwrap().fault_plan = plan;
+    }
+
     /// `lpf_mpi_finalize`: release the init. The registry entry is removed
     /// when the last peer finalises, so the master address can be reused.
     pub fn finalize(mut self) {
@@ -221,6 +236,9 @@ where
                 Some(w) if w.healthy() => w, // already reset when stashed
                 _ => ContextGroup::new(rv.platform.clone(), rv.nprocs),
             };
+            // the hook-epoch path consults the same fault plan a pool
+            // would: installed on fresh and warm teams alike
+            g.fabric().set_fault_plan(st.fault_plan.clone());
             (g, 0)
         });
         entry.1 += 1;
@@ -386,6 +404,46 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn hook_epoch_consults_fault_plan_and_next_epoch_recovers() {
+        use crate::netsim::faults::{FaultPlan, FaultSpec};
+        let n: Pid = 2;
+        let plan = FaultPlan::one(FaultSpec::AbortAtSuperstep { pid: 1, step: 0 });
+        std::thread::scope(|s| {
+            for pid in 0..n {
+                let plan = plan.clone();
+                s.spawn(move || {
+                    let init = Init::over_master(
+                        "master-fault:9008",
+                        pid,
+                        n,
+                        Duration::from_secs(120),
+                        Platform::shared().checked(true),
+                    )
+                    .unwrap();
+                    init.set_fault_plan(Some(plan.clone()));
+                    // epoch 0: the injected abort surfaces as a clean
+                    // error on every peer — never a hang
+                    let res = hook(
+                        &init,
+                        |ctx, _| {
+                            ctx.resize_message_queue(1).unwrap();
+                            ctx.sync(SYNC_DEFAULT).unwrap();
+                        },
+                        Args::none(),
+                    );
+                    assert!(res.is_err(), "pid {pid}: fault must surface");
+                    // epoch 1: the aborted team is not reused; the fresh
+                    // one shares the exhausted plan → clean run
+                    let out = hook(&init, |ctx, _| ctx.pid(), Args::none()).unwrap();
+                    assert_eq!(out, pid);
+                    init.finalize();
+                });
+            }
+        });
+        assert_eq!(plan.injections(), 1, "the abort fired exactly once");
     }
 
     #[test]

@@ -140,9 +140,21 @@ impl Context {
 
     // ---------------------------------------------------------- registration
 
+    /// Fault-injection consult for the registration path (adversarial
+    /// testing only; a no-op without an installed plan). Runs *before*
+    /// any allocation or table mutation, so an injected failure honours
+    /// the mitigable no-side-effects contract.
+    fn registration_fault(&self) -> Result<()> {
+        match self.group.fabric().fault_plan() {
+            Some(plan) => plan.register_injection(self.pid),
+            None => Ok(()),
+        }
+    }
+
     /// `lpf_register_local`: O(1) amortised; the slot is visible only to
     /// this process. Storage is owned by the register (zero-initialised).
     pub fn register_local(&mut self, len: usize) -> Result<Memslot> {
+        self.registration_fault()?;
         let storage = SlotStorage::new(len)?;
         self.group.fabric().register_of(self.pid).with_mut(|r| r.register_local(storage))
     }
@@ -152,6 +164,7 @@ impl Context {
     /// — the LPF contract. Takes effect for communication at the next
     /// `sync`, exactly as in the paper's Algorithm 2.
     pub fn register_global(&mut self, len: usize) -> Result<Memslot> {
+        self.registration_fault()?;
         let storage = SlotStorage::new(len)?;
         self.group.fabric().register_of(self.pid).with_mut(|r| r.register_global(storage))
     }

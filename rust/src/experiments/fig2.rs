@@ -50,11 +50,7 @@ pub struct Fig2Curve {
 fn platform_for(personality: &Personality) -> Platform {
     match personality.mode {
         WireMode::OneSided => Platform::rdma().with_personality(personality.clone()),
-        WireMode::TwoSided => {
-            // the paper's message-matching measurements use plain two-sided
-            // transports; direct meta keeps the focus on the data path
-            Platform::Msg { personality: personality.clone(), checked: false }
-        }
+        WireMode::TwoSided => Platform::msg().with_personality(personality.clone()),
     }
 }
 

@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use super::net::{MetaAlgo, NetFabric, Topology};
+use super::net::{DEFAULT_BRUCK_SEED, MetaAlgo, NetFabric, Topology};
 use crate::core::Pid;
 use crate::netsim::Personality;
 
@@ -18,14 +18,29 @@ use crate::netsim::Personality;
 pub struct HybridFabric;
 
 impl HybridFabric {
-    /// Build with `q` processes per node over the given NIC personality.
+    /// Build with `q` processes per node over the given NIC personality
+    /// and the default Bruck base seed.
     pub fn new(p: Pid, q: Pid, personality: Personality, checked: bool) -> Arc<NetFabric> {
+        Self::with_seed(p, q, personality, checked, DEFAULT_BRUCK_SEED)
+    }
+
+    /// [`HybridFabric::new`] with an explicit Bruck base seed (the
+    /// platform seed): the schedule in effect for a job is derived from
+    /// `(seed, job epoch)`, so hybrid fabrics no longer all replay one
+    /// hard-coded meta-exchange schedule (ISSUE 4 satellite).
+    pub fn with_seed(
+        p: Pid,
+        q: Pid,
+        personality: Personality,
+        checked: bool,
+        seed: u64,
+    ) -> Arc<NetFabric> {
         NetFabric::with_config(
             p,
             "hybrid",
             personality,
             Topology::clustered(q),
-            MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+            MetaAlgo::RandomisedBruck { seed },
             checked,
         )
     }

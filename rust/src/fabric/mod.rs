@@ -43,6 +43,7 @@ use std::sync::Arc;
 
 use crate::core::{LpfError, Memslot, MsgAttr, Pid, Result, SyncAttr};
 use crate::memory::SharedRegister;
+use crate::netsim::faults::FaultPlan;
 use crate::queue::Request;
 
 /// A put descriptor on the wire (first meta-data exchange), in destination
@@ -138,6 +139,18 @@ pub trait Fabric: Send + Sync {
     /// called when no process is inside a collective, and never after
     /// [`aborted`](Fabric::aborted) turned true.
     fn reset_for_job(&self);
+
+    /// Install (or clear) a deterministic fault-injection plan (see
+    /// [`crate::netsim::faults`]). Consulted by the shared sync engine at
+    /// superstep entry, by netsim backends at their wire phases, and by
+    /// the registration path; `None` (the default) disables injection.
+    /// The plan survives warm job resets (its per-job counters restart);
+    /// callers that rebuild a fabric re-install it themselves (the pool
+    /// does, so one-shot faults stay exhausted across a cold rebuild).
+    fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>);
+
+    /// The installed fault-injection plan, if any.
+    fn fault_plan(&self) -> Option<Arc<FaultPlan>>;
 
     /// Simulated time in ns for `pid`, if this fabric runs on the network
     /// simulator (`None` for the real shared-memory backend).

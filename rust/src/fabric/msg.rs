@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use super::net::{MetaAlgo, NetFabric, Topology};
+use super::net::{DEFAULT_BRUCK_SEED, MetaAlgo, NetFabric, Topology};
 use crate::core::Pid;
 use crate::netsim::Personality;
 
@@ -14,14 +14,22 @@ use crate::netsim::Personality;
 pub struct MsgFabric;
 
 impl MsgFabric {
-    /// Build over the simulated NIC with the given personality.
+    /// Build over the simulated NIC with the given personality and the
+    /// default Bruck base seed.
     pub fn new(p: Pid, personality: Personality, checked: bool) -> Arc<NetFabric> {
+        Self::with_seed(p, personality, checked, DEFAULT_BRUCK_SEED)
+    }
+
+    /// [`MsgFabric::new`] with an explicit Bruck base seed (the platform
+    /// seed, [`crate::ctx::Platform::with_seed`]); the per-job schedule is
+    /// derived from it and the job epoch.
+    pub fn with_seed(p: Pid, personality: Personality, checked: bool, seed: u64) -> Arc<NetFabric> {
         NetFabric::with_config(
             p,
             "msg",
             personality,
             Topology::distributed(),
-            MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+            MetaAlgo::RandomisedBruck { seed },
             checked,
         )
     }

@@ -31,6 +31,7 @@ use crate::fabric::{Fabric, GetMeta, PutMeta, SyncStats};
 use crate::memory::SharedRegister;
 #[cfg(test)]
 use crate::memory::SlotStorage;
+use crate::netsim::faults::FaultPlan;
 use crate::netsim::matching::MatchEngine;
 use crate::netsim::{PendingOps, Personality, ProgressModel, SimClocks, WireMode};
 use crate::queue::Request;
@@ -94,10 +95,16 @@ pub enum MetaAlgo {
     /// Direct all-to-all: up to `p−1` messages per process.
     Direct,
     /// Randomised Bruck: `2⌈log₂ p⌉` messages per process w.h.p., payload
-    /// ×O(log p). The seed makes Valiant's random intermediates
-    /// reproducible.
+    /// ×O(log p). `seed` is the *base* (platform) seed: the schedule in
+    /// effect for a given job is derived from `(seed, job epoch)` — see
+    /// [`NetFabric::meta_seed`] — so warm pool jobs do not replay one
+    /// schedule while every run stays reproducible from the recorded pair.
     RandomisedBruck { seed: u64 },
 }
+
+/// Default base seed for the randomised-Bruck meta exchange, used when a
+/// platform does not choose its own ([`crate::ctx::Platform::with_seed`]).
+pub const DEFAULT_BRUCK_SEED: u64 = 0x5eed_ba5e;
 
 /// Approximate wire size of one meta descriptor (bytes): pids, slots,
 /// offsets, length — what a packed `PutMeta` costs on a real wire.
@@ -166,6 +173,11 @@ pub struct NetFabric {
     /// which agree by the collective contract — no cross-thread race on the
     /// Bruck rng's round number).
     supersteps: Vec<CachePadded<AtomicU64>>,
+    /// Jobs this fabric has served (bumped by `reset_for_job`): mixed into
+    /// the Bruck schedule seed so each warm job draws a fresh randomised
+    /// meta-exchange schedule (ISSUE 4 satellite) — deterministically, from
+    /// the recorded `(base seed, epoch)` pair.
+    job_epoch: AtomicU64,
     // wire buffers, one cell per (src, dst) pair, owner = src
     trim_mail: Vec<Mutex<Vec<TrimNotice>>>,
     getreq_mail: Vec<Mutex<Vec<GetReqWire>>>,
@@ -200,6 +212,7 @@ impl NetFabric {
             clocks: SimClocks::new(p),
             aborted: AtomicBool::new(false),
             supersteps: (0..p).map(|_| CachePadded::new(AtomicU64::new(0))).collect(),
+            job_epoch: AtomicU64::new(0),
             trim_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
             getreq_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
             data_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
@@ -212,6 +225,29 @@ impl NetFabric {
     /// Toggle request coalescing (ablation hook for `bench_sync`).
     pub fn set_coalescing(&self, on: bool) {
         self.engine.set_coalescing(on);
+    }
+
+    /// Number of jobs this fabric has completed (warm resets).
+    pub fn job_epoch(&self) -> u64 {
+        self.job_epoch.load(Ordering::Relaxed)
+    }
+
+    /// The randomised-Bruck schedule seed in effect for the current job
+    /// (`None` on direct-meta fabrics): the base seed mixed with the job
+    /// epoch. Epoch 0 — a freshly built fabric — uses the base seed
+    /// unchanged, so one-shot `exec` behaviour is untouched; every warm
+    /// job after that draws a fresh schedule, reproducible from this
+    /// recorded value.
+    pub fn meta_seed(&self) -> Option<u64> {
+        match self.meta_algo {
+            MetaAlgo::Direct => None,
+            MetaAlgo::RandomisedBruck { seed } => Some(Self::mix_seed(seed, self.job_epoch())),
+        }
+    }
+
+    #[inline]
+    fn mix_seed(base: u64, epoch: u64) -> u64 {
+        base ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15)
     }
 
     #[inline]
@@ -445,18 +481,40 @@ impl Exchange for NetFabric {
     }
 
     fn exchange_meta(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<()> {
+        let step = self.supersteps[pid as usize].load(Ordering::Relaxed);
+        let faults = engine.fault_plan();
+        if let Some(f) = &faults {
+            // Injected delayed rendezvous: this process reaches the
+            // superstep barrier late. The barrier max-combine propagates
+            // the delay to every clock — model-legal (BSP composition),
+            // so memory and statistics must be unaffected.
+            let d = f.rendezvous_delay_ns(pid, step);
+            if d > 0.0 {
+                self.clocks.advance(pid, d);
+            }
+        }
         // phase-A barrier: outboxes published; charges the superstep's
         // tree-barrier latency (BSP composition rule).
         self.barrier_combine(pid, true)?;
-        let step = self.supersteps[pid as usize].fetch_add(1, Ordering::Relaxed);
+        self.supersteps[pid as usize].fetch_add(1, Ordering::Relaxed);
         match self.meta_algo {
-            MetaAlgo::Direct => self.route_meta_direct(pid, engine, s),
+            MetaAlgo::Direct => self.route_meta_direct(pid, engine, s)?,
             MetaAlgo::RandomisedBruck { seed } => {
-                self.route_meta_bruck(pid, engine, s, seed, step)?;
+                let job_seed = Self::mix_seed(seed, self.job_epoch());
+                self.route_meta_bruck(pid, engine, s, job_seed, step)?;
                 // mirror the direct flavour's post-route delivery barrier
-                self.barrier_combine(pid, false)
+                self.barrier_combine(pid, false)?;
             }
         }
+        if let Some(f) = &faults {
+            // Injected slow wire: the meta exchange took longer. Pure
+            // simulated time; the next barrier max-combines it.
+            let d = f.meta_delay_ns(pid, step);
+            if d > 0.0 {
+                self.clocks.advance(pid, d);
+            }
+        }
+        Ok(())
     }
 
     fn exchange_data(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
@@ -570,6 +628,20 @@ impl Exchange for NetFabric {
         let mut per_src: Vec<Vec<DataMsg>> = (0..p)
             .map(|src| self.data_mail[self.cell(src, pid)].lock().unwrap().drain(..).collect())
             .collect();
+        // Injected arrival reorder (model-legal): reverse the source
+        // interleaving and each source's batch. CRCW resolution made the
+        // winning segments destination-disjoint, so memory must come out
+        // bit-identical; only matching costs (simulated time) may move.
+        // `src_at` maps iteration rank to source pid so the clean path
+        // stays allocation-free.
+        let step = self.supersteps[pid as usize].load(Ordering::Relaxed).wrapping_sub(1);
+        let reversed = engine.fault_plan().is_some_and(|f| f.reorder_arrivals(step));
+        let src_at = |rank: Pid| if reversed { p - 1 - rank } else { rank };
+        if reversed {
+            for batch in per_src.iter_mut() {
+                batch.reverse();
+            }
+        }
         let two_sided = self.personality.mode == WireMode::TwoSided;
         if two_sided {
             let mut matcher = self.matchers[pid as usize].lock().unwrap();
@@ -589,13 +661,14 @@ impl Exchange for NetFabric {
             // senders' not-yet-arrived entries. This is exactly the
             // "message matching misery" mechanism (paper ref. [7]) that
             // bends the two-sided curves of Fig. 2 superlinear.
-            for (src, msgs) in per_src.iter().enumerate() {
+            for rank in 0..p {
+                let src = src_at(rank);
                 // intra-node traffic bypasses MPI matching in the hybrid
                 // backend (memcpy path)
-                if self.topo.same_node(src as Pid, pid) {
+                if self.topo.same_node(src, pid) {
                     continue;
                 }
-                for msg in msgs {
+                for msg in &per_src[src as usize] {
                     scan_steps += matcher.arrive(msg.key);
                 }
             }
@@ -614,8 +687,9 @@ impl Exchange for NetFabric {
         }
         let mut bytes_in = 0u64;
         let apply_result: Result<()> = (|| {
-            for msgs in per_src.iter_mut() {
-                for m in msgs.drain(..) {
+            for rank in 0..p {
+                let src = src_at(rank);
+                for m in per_src[src as usize].drain(..) {
                     let st = engine.register_of(pid).resolve(m.dst_slot)?;
                     if m.dst_off + m.bytes.len() > st.len() {
                         return Err(LpfError::Illegal("write beyond destination slot".into()));
@@ -679,12 +753,17 @@ impl Fabric for NetFabric {
         debug_assert!(!Fabric::aborted(self), "reset of an aborted fabric");
         self.engine.reset_for_job();
         // Fresh-fabric observables: simulated time restarts at 0 and the
-        // Bruck rng sequence restarts at superstep 0, so a warm job is
-        // tick-for-tick identical to one on a freshly built fabric.
+        // superstep counters restart, so a warm job's clocks behave like a
+        // freshly built fabric's. The Bruck schedule seed deliberately does
+        // NOT replay: it advances with the job epoch (a fixed seed would
+        // make every warm job — and the "randomised" ablation — measure one
+        // schedule), while staying reproducible from the recorded
+        // `(base seed, epoch)` pair; see [`NetFabric::meta_seed`].
         self.clocks.reset();
         for c in &self.supersteps {
             c.store(0, Ordering::Relaxed);
         }
+        self.job_epoch.fetch_add(1, Ordering::Relaxed);
         // Wire buffers are drained by every completed superstep; clear
         // defensively (keeps capacity — a no-op on the clean path).
         for cell in &self.trim_mail {
@@ -706,6 +785,14 @@ impl Fabric for NetFabric {
             pd.lock().expect("pending poisoned").reset_for_job();
         }
         self.aborted.store(false, Ordering::Release);
+    }
+
+    fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        self.engine.set_fault_plan(plan);
+    }
+
+    fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.engine.fault_plan()
     }
 
     fn sim_time_ns(&self, pid: Pid) -> Option<f64> {
@@ -894,6 +981,74 @@ mod tests {
                 assert_eq!(stats.bytes_trimmed, 4, "overlap bytes never travel");
             }
         });
+    }
+
+    #[test]
+    fn bruck_schedule_advances_per_job_epoch_and_is_recorded() {
+        // Regression (ISSUE 4 satellite): the schedule seed was a fixed
+        // constant, so every warm pool job — and every "randomised"
+        // ablation sample — replayed one meta-exchange schedule.
+        let mk = || {
+            NetFabric::with_config(
+                4,
+                "msg",
+                Personality::mpi_message_passing(),
+                Topology::distributed(),
+                MetaAlgo::RandomisedBruck { seed: DEFAULT_BRUCK_SEED },
+                false,
+            )
+        };
+        let fab = mk();
+        assert_eq!(
+            fab.meta_seed(),
+            Some(DEFAULT_BRUCK_SEED),
+            "epoch 0 (a fresh fabric) uses the base seed unchanged"
+        );
+        fab.reset_for_job();
+        assert_eq!(fab.job_epoch(), 1);
+        let warm = fab.meta_seed().unwrap();
+        assert_ne!(warm, DEFAULT_BRUCK_SEED, "a warm job must draw a fresh schedule");
+        // determinism via the recorded pair: an identically configured
+        // fabric at the same epoch replays the same schedule
+        let fab2 = mk();
+        fab2.reset_for_job();
+        assert_eq!(fab2.meta_seed(), Some(warm));
+        // direct meta has no randomised schedule
+        let direct = NetFabric::with_config(
+            2,
+            "rdma",
+            Personality::ibverbs(),
+            Topology::distributed(),
+            MetaAlgo::Direct,
+            false,
+        );
+        assert_eq!(direct.meta_seed(), None);
+    }
+
+    #[test]
+    fn injected_wire_faults_are_absorbed_bit_identically() {
+        use crate::netsim::faults::{FaultPlan, FaultSpec};
+        // The model-legal fault class must be invisible in destination
+        // memory: the ring assertion inside `ring_put_test` pins the exact
+        // bytes with each wire fault active.
+        for spec in [
+            FaultSpec::ReorderArrivals { step: 0 },
+            FaultSpec::DelayRendezvous { pid: 1, step: 0, ns: 250_000.0 },
+            FaultSpec::DelayMeta { pid: 0, step: 0, ns: 125_000.0 },
+        ] {
+            let fab = NetFabric::with_config(
+                3,
+                "msg",
+                Personality::mpi_message_passing(),
+                Topology::distributed(),
+                MetaAlgo::Direct,
+                true,
+            );
+            let plan = FaultPlan::one(spec);
+            fab.set_fault_plan(Some(plan.clone()));
+            ring_put_test(fab);
+            assert!(plan.injections() > 0, "{spec:?} never fired");
+        }
     }
 
     #[test]

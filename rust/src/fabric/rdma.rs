@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use super::net::{MetaAlgo, NetFabric, Topology};
+use super::net::{DEFAULT_BRUCK_SEED, MetaAlgo, NetFabric, Topology};
 use crate::core::Pid;
 use crate::netsim::Personality;
 
@@ -34,7 +34,7 @@ impl RdmaFabric {
             "rdma-rb",
             personality,
             Topology::distributed(),
-            MetaAlgo::RandomisedBruck { seed: 0x5eed_ba5e },
+            MetaAlgo::RandomisedBruck { seed: DEFAULT_BRUCK_SEED },
             checked,
         )
     }

@@ -29,6 +29,7 @@ use crate::core::{LpfError, Pid, Result, SyncAttr};
 use crate::fabric::plan::Scratch;
 use crate::fabric::{Fabric, SyncStats};
 use crate::memory::{SharedRegister, SlotStorage};
+use crate::netsim::faults::FaultPlan;
 use crate::queue::Request;
 use crate::sync::engine::{Exchange, SyncEngine};
 
@@ -185,6 +186,14 @@ impl Fabric for SharedFabric {
         // The barrier is reusable as-is: episodes of a *clean* team always
         // complete, so the structure is at a quiescent point between jobs.
         self.aborted.store(false, Ordering::Release);
+    }
+
+    fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        self.engine.set_fault_plan(plan);
+    }
+
+    fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.engine.fault_plan()
     }
 
     fn sim_time_ns(&self, _pid: Pid) -> Option<f64> {

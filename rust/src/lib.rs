@@ -10,10 +10,14 @@
 //! four fabrics ([`fabric`]), a collectives library ([`collectives`]),
 //! a BSPlib compatibility layer ([`bsplib`]), and the two evaluation
 //! applications (FFT, PageRank) plus the sparksim Big-Data substrate.
+//! Adversarial testability lives in [`netsim::faults`] (deterministic
+//! fault injection) and [`check`] (the cross-backend differential
+//! oracle); see `docs/faults.md`.
 
 pub mod barrier;
 pub mod benchkit;
 pub mod bsplib;
+pub mod check;
 pub mod collectives;
 pub mod core;
 pub mod ctx;

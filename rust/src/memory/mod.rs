@@ -164,12 +164,16 @@ impl Register {
         if capacity > u32::MAX as usize {
             return Err(LpfError::OutOfMemory(format!("{capacity} slots")));
         }
-        self.pending_capacity = capacity;
         // O(N) reservation up front, so activation at the fence is O(1) and
-        // registration stays amortised O(1).
+        // registration stays amortised O(1). A failed reservation surfaces
+        // as the paper's mitigable out-of-memory — before any state change
+        // (no side effects), never as a process abort.
         let want = capacity.saturating_sub(self.local.len().max(self.global.len()));
-        self.local.reserve(want);
-        self.global.reserve(want);
+        self.local
+            .try_reserve(want)
+            .and_then(|()| self.global.try_reserve(want))
+            .map_err(|_| LpfError::OutOfMemory(format!("register of {capacity} slots")))?;
+        self.pending_capacity = capacity;
         Ok(())
     }
 

@@ -1,0 +1,342 @@
+//! Deterministic, seed-driven fault injection (ISSUE 4 tentpole).
+//!
+//! The paper's model-compliance claim (§3) is a *semantic* guarantee:
+//! every primitive keeps its contract under adversarial conditions, not
+//! just on the happy path. A [`FaultPlan`] makes the whole stack
+//! adversarially testable: it schedules one fault — derived from a seed,
+//! so every run is reproducible — and the superstep pipeline consults it
+//! at fixed points:
+//!
+//! * the shared sync engine ([`crate::sync::engine::SyncEngine`]) at
+//!   superstep entry ([`FaultPlan::abort_injection`]);
+//! * the simulated-NIC fabrics ([`crate::fabric::net::NetFabric`]) before
+//!   the superstep barrier ([`FaultPlan::rendezvous_delay_ns`]), after the
+//!   meta routing ([`FaultPlan::meta_delay_ns`]), and at arrival
+//!   application ([`FaultPlan::reorder_arrivals`]);
+//! * the registration path ([`crate::ctx::Context::register_local`] /
+//!   `register_global`) via [`FaultPlan::register_injection`].
+//!
+//! Faults come in two classes (see `docs/faults.md`):
+//!
+//! * **absorbed** — model-legal perturbations (message delay, arrival
+//!   reorder, delayed rendezvous). BSP semantics guarantee they are
+//!   invisible: destination memory and [`crate::fabric::SyncStats`] must
+//!   stay bit-identical to an unperturbed run (only simulated clocks may
+//!   differ). The differential checker ([`crate::check`]) asserts this.
+//! * **reportable** — genuine failures (mid-job abort at a chosen
+//!   superstep, allocation failure at a chosen slot registration). These
+//!   must surface as a *clean* [`LpfError`] on every backend — never a
+//!   hang, never silent corruption — after which a
+//!   [`crate::pool::Pool`] cold-rebuilds its team.
+//!
+//! Reportable faults are **one-shot**: the plan object remembers that it
+//! fired, so a team rebuilt after the failure (which shares the same
+//! `Arc<FaultPlan>`) runs clean — exactly the recovery the checker pins.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::core::{LpfError, Pid, Result};
+use crate::util::rng::XorShift64;
+
+/// Superstep count the seed-derived plans target: every fault step drawn
+/// by [`FaultPlan::from_seed`] is `< FAULT_SWEEP_SUPERSTEPS`, so a
+/// workload performing at least this many `sync`s is guaranteed to reach
+/// the trigger (the contract [`crate::check::adversary`] satisfies).
+pub const FAULT_SWEEP_SUPERSTEPS: u64 = 4;
+
+/// Slot-registration count the seed-derived plans target: every `nth`
+/// drawn by [`FaultPlan::from_seed`] is `< FAULT_SWEEP_REGISTRATIONS`.
+pub const FAULT_SWEEP_REGISTRATIONS: u64 = 2;
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultSpec {
+    /// Model-legal: `pid` arrives `ns` simulated nanoseconds late at the
+    /// barrier opening superstep `step` (a delayed rendezvous). The
+    /// barrier max-combine propagates the delay to every clock; memory
+    /// and statistics are unaffected.
+    DelayRendezvous { pid: Pid, step: u64, ns: f64 },
+    /// Model-legal: `pid`'s meta-data exchange of superstep `step` takes
+    /// `ns` extra simulated nanoseconds (a slow wire).
+    DelayMeta { pid: Pid, step: u64, ns: f64 },
+    /// Model-legal: the data phase of superstep `step` applies arrivals
+    /// in reversed order (across sources and within each source's
+    /// batch). CRCW resolution already made the winning segments
+    /// destination-disjoint, so any arrival order must produce identical
+    /// memory — this fault proves it.
+    ReorderArrivals { step: u64 },
+    /// Reportable: `pid` aborts cleanly at the entry of superstep `step`
+    /// (before any barrier). `pid`'s `sync` returns
+    /// [`LpfError::Fatal`]; peers observe [`LpfError::PeerAborted`] at
+    /// their next collective.
+    AbortAtSuperstep { pid: Pid, step: u64 },
+    /// Reportable: `pid`'s `nth` (0-based, per job) slot registration
+    /// fails with [`LpfError::OutOfMemory`] — mitigable, no side
+    /// effects, exactly the paper's §2.1 out-of-memory contract.
+    FailSlotRegister { pid: Pid, nth: u64 },
+}
+
+impl FaultSpec {
+    /// True for the model-legal class: the fault must be invisible in
+    /// destination memory and `SyncStats` (only simulated time may
+    /// move). False for the reportable class: the fault must surface as
+    /// a clean `LpfError`.
+    pub fn absorbed(&self) -> bool {
+        matches!(
+            self,
+            FaultSpec::DelayRendezvous { .. }
+                | FaultSpec::DelayMeta { .. }
+                | FaultSpec::ReorderArrivals { .. }
+        )
+    }
+
+    /// True when the fault only perturbs the simulated wire: the
+    /// shared-memory backend has no wire, so these are vacuously
+    /// absorbed there and fire only on netsim-backed fabrics.
+    pub fn wire_only(&self) -> bool {
+        self.absorbed()
+    }
+}
+
+/// A deterministic fault schedule shared by every consult point of one
+/// team. Thread-safe: consulted concurrently by all `p` processes.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// The sweep seed this plan was derived from (`None` for hand-built
+    /// plans) — recorded so any observed failure is reproducible.
+    seed: Option<u64>,
+    spec: FaultSpec,
+    /// One-shot latch for the reportable faults.
+    fired: AtomicBool,
+    /// How many times any fault influenced execution (diagnostics; the
+    /// checker asserts a planned fault actually fired).
+    injections: AtomicU64,
+    /// Registration ordinal of the `FailSlotRegister` target pid (only
+    /// that pid's registrations count), restarted at every job boundary.
+    reg_count: AtomicU64,
+}
+
+impl FaultPlan {
+    /// A plan with exactly the given fault.
+    pub fn one(spec: FaultSpec) -> Arc<FaultPlan> {
+        Self::build(None, spec)
+    }
+
+    /// Derive a plan deterministically from a sweep seed: the kind, the
+    /// target pid, and the trigger point all follow from `seed`. Steps
+    /// stay below [`FAULT_SWEEP_SUPERSTEPS`] and registration ordinals
+    /// below [`FAULT_SWEEP_REGISTRATIONS`], so the checker's adversary
+    /// workload always reaches the trigger.
+    pub fn from_seed(seed: u64, p: Pid) -> Arc<FaultPlan> {
+        assert!(p > 0, "a fault plan needs at least one process");
+        let mut rng =
+            XorShift64::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xFA_17));
+        let pid = rng.below(p as u64) as Pid;
+        let step = rng.below(FAULT_SWEEP_SUPERSTEPS);
+        let ns = 40_000.0 + rng.below(1_000_000) as f64;
+        let spec = match rng.below(5) {
+            0 => FaultSpec::DelayRendezvous { pid, step, ns },
+            1 => FaultSpec::DelayMeta { pid, step, ns },
+            2 => FaultSpec::ReorderArrivals { step },
+            3 => FaultSpec::AbortAtSuperstep { pid, step },
+            _ => FaultSpec::FailSlotRegister { pid, nth: rng.below(FAULT_SWEEP_REGISTRATIONS) },
+        };
+        Self::build(Some(seed), spec)
+    }
+
+    fn build(seed: Option<u64>, spec: FaultSpec) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            seed,
+            spec,
+            fired: AtomicBool::new(false),
+            injections: AtomicU64::new(0),
+            reg_count: AtomicU64::new(0),
+        })
+    }
+
+    /// The sweep seed this plan was derived from, if any.
+    pub fn seed(&self) -> Option<u64> {
+        self.seed
+    }
+
+    /// The scheduled fault.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// How many times the fault influenced execution so far.
+    pub fn injections(&self) -> u64 {
+        self.injections.load(Ordering::Acquire)
+    }
+
+    /// True once a reportable fault has fired (reportable faults are
+    /// one-shot; absorbed faults re-fire every job that reaches their
+    /// trigger, which is harmless by definition).
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::Acquire)
+    }
+
+    fn mark(&self) {
+        self.injections.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Consulted by the sync engine at superstep entry, before any
+    /// barrier. `Some(error)` means: abort this process now — the caller
+    /// must mark peers aborted and propagate the error.
+    pub fn abort_injection(&self, pid: Pid, step: u64) -> Option<LpfError> {
+        if let FaultSpec::AbortAtSuperstep { pid: fp, step: fs } = self.spec {
+            if pid == fp && step == fs && !self.fired.swap(true, Ordering::AcqRel) {
+                self.mark();
+                return Some(LpfError::Fatal(format!(
+                    "injected fault: abort at superstep {fs} on pid {fp}"
+                )));
+            }
+        }
+        None
+    }
+
+    /// Consulted by the registration path. Increments `pid`'s per-job
+    /// registration counter and fails the scheduled one with a mitigable
+    /// [`LpfError::OutOfMemory`] — before any side effect, honouring the
+    /// paper's no-side-effects contract for mitigable errors.
+    pub fn register_injection(&self, pid: Pid) -> Result<()> {
+        if let FaultSpec::FailSlotRegister { pid: fp, nth } = self.spec {
+            if pid == fp {
+                let n = self.reg_count.fetch_add(1, Ordering::AcqRel);
+                if n == nth && !self.fired.swap(true, Ordering::AcqRel) {
+                    self.mark();
+                    return Err(LpfError::OutOfMemory(format!(
+                        "injected fault: allocation failure at slot registration {nth} \
+                         on pid {fp}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Extra simulated ns `pid` spends before entering superstep
+    /// `step`'s opening barrier (0.0 = no fault here).
+    pub fn rendezvous_delay_ns(&self, pid: Pid, step: u64) -> f64 {
+        if let FaultSpec::DelayRendezvous { pid: fp, step: fs, ns } = self.spec {
+            if pid == fp && step == fs {
+                self.mark();
+                return ns;
+            }
+        }
+        0.0
+    }
+
+    /// Extra simulated ns `pid`'s meta exchange of superstep `step`
+    /// takes (0.0 = no fault here).
+    pub fn meta_delay_ns(&self, pid: Pid, step: u64) -> f64 {
+        if let FaultSpec::DelayMeta { pid: fp, step: fs, ns } = self.spec {
+            if pid == fp && step == fs {
+                self.mark();
+                return ns;
+            }
+        }
+        0.0
+    }
+
+    /// Whether the data phase of superstep `step` must apply arrivals in
+    /// reversed order.
+    pub fn reorder_arrivals(&self, step: u64) -> bool {
+        if let FaultSpec::ReorderArrivals { step: fs } = self.spec {
+            if step == fs {
+                self.mark();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Job-boundary reset: the registration ordinal restarts (superstep
+    /// counters restart with the fabric's own job reset); the one-shot
+    /// `fired` latch and the cumulative injection count persist, so a
+    /// team rebuilt after a reported fault runs clean.
+    pub fn reset_for_job(&self) {
+        self.reg_count.store(0, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_seed_is_deterministic_and_in_contract_bounds() {
+        for seed in 0..64u64 {
+            let a = FaultPlan::from_seed(seed, 4);
+            let b = FaultPlan::from_seed(seed, 4);
+            assert_eq!(a.spec(), b.spec(), "seed {seed} not reproducible");
+            assert_eq!(a.seed(), Some(seed));
+            match *a.spec() {
+                FaultSpec::DelayRendezvous { pid, step, ns }
+                | FaultSpec::DelayMeta { pid, step, ns } => {
+                    assert!(pid < 4 && step < FAULT_SWEEP_SUPERSTEPS && ns > 0.0);
+                }
+                FaultSpec::ReorderArrivals { step } => assert!(step < FAULT_SWEEP_SUPERSTEPS),
+                FaultSpec::AbortAtSuperstep { pid, step } => {
+                    assert!(pid < 4 && step < FAULT_SWEEP_SUPERSTEPS);
+                }
+                FaultSpec::FailSlotRegister { pid, nth } => {
+                    assert!(pid < 4 && nth < FAULT_SWEEP_REGISTRATIONS);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seed_sweep_covers_both_fault_classes() {
+        let classes: Vec<bool> =
+            (0..8).map(|s| FaultPlan::from_seed(s, 4).spec().absorbed()).collect();
+        assert!(classes.iter().any(|&a| a), "sweep has no absorbed fault");
+        assert!(classes.iter().any(|&a| !a), "sweep has no reportable fault");
+    }
+
+    #[test]
+    fn abort_injection_is_one_shot_and_targeted() {
+        let plan = FaultPlan::one(FaultSpec::AbortAtSuperstep { pid: 1, step: 2 });
+        assert!(plan.abort_injection(0, 2).is_none(), "wrong pid");
+        assert!(plan.abort_injection(1, 1).is_none(), "wrong step");
+        assert!(!plan.fired());
+        let err = plan.abort_injection(1, 2).expect("must fire");
+        assert!(format!("{err:?}").contains("injected fault"));
+        assert!(plan.fired());
+        assert_eq!(plan.injections(), 1);
+        assert!(plan.abort_injection(1, 2).is_none(), "one-shot");
+    }
+
+    #[test]
+    fn register_injection_counts_per_job_and_has_no_side_effects() {
+        let plan = FaultPlan::one(FaultSpec::FailSlotRegister { pid: 0, nth: 1 });
+        assert!(plan.register_injection(1).is_ok(), "other pid untouched");
+        assert!(plan.register_injection(0).is_ok(), "nth 0 passes");
+        let err = plan.register_injection(0).unwrap_err();
+        assert!(err.is_mitigable(), "injected allocation failure is mitigable: {err:?}");
+        assert!(plan.register_injection(0).is_ok(), "one-shot: retry succeeds");
+        // next job restarts the ordinal count, but the latch persists
+        plan.reset_for_job();
+        assert!(plan.register_injection(0).is_ok());
+        assert!(plan.register_injection(0).is_ok(), "fired plans stay exhausted");
+    }
+
+    #[test]
+    fn absorbed_faults_refire_and_classify() {
+        let plan = FaultPlan::one(FaultSpec::ReorderArrivals { step: 1 });
+        assert!(plan.spec().absorbed() && plan.spec().wire_only());
+        assert!(!plan.reorder_arrivals(0));
+        assert!(plan.reorder_arrivals(1));
+        assert!(plan.reorder_arrivals(1), "absorbed faults are not one-shot");
+        assert_eq!(plan.injections(), 2);
+        let d = FaultPlan::one(FaultSpec::DelayRendezvous { pid: 0, step: 0, ns: 5.0 });
+        assert_eq!(d.rendezvous_delay_ns(1, 0), 0.0);
+        assert_eq!(d.rendezvous_delay_ns(0, 1), 0.0);
+        assert_eq!(d.rendezvous_delay_ns(0, 0), 5.0);
+        let m = FaultPlan::one(FaultSpec::DelayMeta { pid: 1, step: 2, ns: 7.5 });
+        assert_eq!(m.meta_delay_ns(1, 2), 7.5);
+        assert_eq!(m.meta_delay_ns(0, 2), 0.0);
+    }
+}

@@ -12,6 +12,7 @@
 //! the superlinear curves of some MPI transports *emerge from the executed
 //! queue mechanics*, not from a formula fitted to the paper.
 
+pub mod faults;
 pub mod matching;
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -51,6 +51,7 @@ use std::thread::JoinHandle;
 
 use crate::core::{Args, LpfError, Pid, Result};
 use crate::ctx::{run_spmd_recycled, Context, ContextGroup, Platform};
+use crate::netsim::faults::FaultPlan;
 use crate::queue::MsgQueue;
 
 // ---------------------------------------------------------------- job core
@@ -276,6 +277,9 @@ struct PoolState {
     running: Pid,
     stats: PoolStats,
     shutdown: bool,
+    /// Installed fault-injection plan, re-installed on every cold rebuild
+    /// so one-shot faults stay exhausted after the failure they caused.
+    fault_plan: Option<Arc<FaultPlan>>,
 }
 
 struct Shared {
@@ -321,6 +325,7 @@ impl Pool {
                 running: 0,
                 stats: PoolStats::default(),
                 shutdown: false,
+                fault_plan: None,
             }),
             worker_cv: Condvar::new(),
         });
@@ -346,6 +351,19 @@ impl Pool {
     /// Aggregate counters (jobs served, cold resets after failures).
     pub fn stats(&self) -> PoolStats {
         self.shared.state.lock().expect("pool poisoned").stats
+    }
+
+    /// Install (or clear) a deterministic fault-injection plan on the
+    /// team (see [`crate::netsim::faults`]). The plan survives both warm
+    /// resets (its per-job counters restart) and cold rebuilds (the
+    /// rebuilt fabric consults the same plan object, so a one-shot fault
+    /// that already fired stays exhausted — the team recovers cleanly).
+    /// Call between jobs; the fault machinery is for adversarial testing,
+    /// not production dispatch.
+    pub fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        let mut st = self.shared.state.lock().expect("pool poisoned");
+        st.group.fabric().set_fault_plan(plan.clone());
+        st.fault_plan = plan;
     }
 
     fn enqueue(&self, job: QueuedJob) {
@@ -496,6 +514,7 @@ fn worker_loop(shared: &Shared, pid: Pid) {
             // Torn barrier episodes cannot be reused: cold reset. The
             // worker threads themselves stay.
             st.group = ContextGroup::new(shared.platform.clone(), shared.p);
+            st.group.fabric().set_fault_plan(st.fault_plan.clone());
             st.stats.cold_resets += 1;
         } else {
             group.reset_for_job();

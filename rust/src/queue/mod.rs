@@ -7,8 +7,13 @@
 //!
 //! `lpf_resize_message_queue(n)` bounds how many requests this process "can
 //! queue or be subject to" (paper §2.2): `n` caps outgoing requests at
-//! enqueue time, and the sync engine checks the incoming count against the
-//! destination's cap in checked builds.
+//! enqueue time. Two further disciplines are enforced here (ISSUE 4):
+//! the capacity may not exceed the 32-bit wire sequence-number space
+//! (request seqs travel as `u32` in [`crate::fabric::PutMeta`]; a larger
+//! queue would silently alias them), and a shrink never invalidates
+//! requests already queued — it is deferred past the fence until the
+//! queue has drained below the new bound, matching the register's
+//! capacity rule and the paper's Algorithm 2 usage.
 
 use crate::core::{LpfError, Memslot, MsgAttr, Pid, Result};
 
@@ -84,19 +89,40 @@ impl MsgQueue {
     }
 
     /// `lpf_resize_message_queue`: O(N); takes effect at the next sync.
+    ///
+    /// Rejects capacities beyond the 32-bit sequence-number space with
+    /// [`LpfError::Illegal`] (request seqs and trim-notice tags are `u32`
+    /// wire fields — a larger queue would alias them), and reports a
+    /// failed arena reservation as mitigable [`LpfError::OutOfMemory`]
+    /// instead of aborting the process.
     pub fn resize(&mut self, capacity: usize) -> Result<()> {
-        self.pending_capacity = capacity;
-        // Reserve now so steady-state enqueue never allocates (hot-path
-        // guarantee: O(1) put/get with no allocation).
-        if capacity > self.reqs.capacity() {
-            self.reqs.reserve(capacity - self.reqs.len());
+        if capacity > u32::MAX as usize {
+            return Err(LpfError::Illegal(format!(
+                "message queue of {capacity} requests exceeds the 2^32 - 1 wire \
+                 sequence-number space"
+            )));
         }
+        // Reserve before recording the pending capacity so a failed
+        // reservation has no side effects (the mitigable contract), and
+        // so steady-state enqueue never allocates (hot-path guarantee:
+        // O(1) put/get with no allocation).
+        if capacity > self.reqs.capacity() {
+            self.reqs
+                .try_reserve(capacity - self.reqs.len())
+                .map_err(|_| LpfError::OutOfMemory(format!("queue of {capacity} requests")))?;
+        }
+        self.pending_capacity = capacity;
         Ok(())
     }
 
-    /// Activate the pending capacity (sync engine, at the fence).
+    /// Activate the pending capacity (sync engine, at the fence). A
+    /// shrink below the number of requests still queued is deferred: the
+    /// active capacity never drops below `len()`, so queued requests are
+    /// never invalidated (the LPF capacity discipline, §2.2); the smaller
+    /// pending capacity takes full effect at the first fence after the
+    /// queue drained.
     pub fn activate_pending(&mut self) {
-        self.capacity = self.pending_capacity;
+        self.capacity = self.pending_capacity.max(self.reqs.len());
     }
 
     /// Active capacity in messages.
@@ -228,6 +254,51 @@ mod tests {
         q.clear();
         assert!(q.is_empty());
         assert_eq!(q.capacity(), 4);
+    }
+
+    #[cfg(target_pointer_width = "64")]
+    #[test]
+    fn resize_past_the_sequence_space_is_illegal() {
+        // Regression (ISSUE 4 satellite): request seqs are u32 wire
+        // fields; a queue resized past u32::MAX requests silently aliased
+        // tags (pre-fix this returned Ok and reserved the arena).
+        let mut q = MsgQueue::new();
+        let err = q.resize(u32::MAX as usize + 1).unwrap_err();
+        assert!(matches!(&err, LpfError::Illegal(m) if m.contains("sequence-number")), "{err:?}");
+        // no side effects: the pending capacity is untouched
+        q.activate_pending();
+        assert_eq!(q.capacity(), DEFAULT_QUEUE_CAPACITY);
+        // the boundary itself is representable (no reservation performed
+        // here because the request arena check happens against the Vec's
+        // current capacity only when it must grow — so keep this modest)
+        q.resize(8).unwrap();
+        q.activate_pending();
+        assert_eq!(q.capacity(), 8);
+    }
+
+    #[test]
+    fn shrink_below_queued_requests_is_deferred_to_the_drained_fence() {
+        // Regression (ISSUE 4 satellite): a shrink below the number of
+        // already-enqueued requests was activated unchecked at the fence,
+        // violating the capacity discipline (capacity >= queued).
+        let mut q = MsgQueue::new();
+        q.resize(4).unwrap();
+        q.activate_pending();
+        q.push_put(put(0, 1)).unwrap();
+        q.push_put(put(1, 1)).unwrap();
+        q.push_put(put(0, 1)).unwrap();
+        q.resize(1).unwrap();
+        q.activate_pending();
+        assert_eq!(q.capacity(), 3, "shrink deferred: queued requests stay valid");
+        assert!(q.capacity() >= q.len(), "capacity discipline");
+        // further enqueues are already bounded by the deferred capacity
+        assert!(q.push_put(put(1, 1)).is_err());
+        // once drained, the next fence applies the shrink in full
+        q.clear();
+        q.activate_pending();
+        assert_eq!(q.capacity(), 1);
+        q.push_put(put(0, 1)).unwrap();
+        assert!(q.push_put(put(0, 1)).is_err());
     }
 
     #[test]

@@ -33,7 +33,10 @@ pub struct WriteDesc {
     /// Per-source queue sequence number: total order within a source.
     pub seq: u32,
     /// Opaque handle for the caller (e.g. index into a payload table).
-    pub tag: u32,
+    /// 64-bit: a destination aggregates descriptors from all `p` sources,
+    /// so its table can exceed one source's 2^32 sequence space — a `u32`
+    /// here would silently alias payloads (ISSUE 4 satellite).
+    pub tag: u64,
 }
 
 impl WriteDesc {
@@ -292,7 +295,7 @@ pub fn find_read_write_overlap_scratch(
 mod tests {
     use super::*;
 
-    fn wd(slot: u32, off: usize, len: usize, pid: Pid, seq: u32, tag: u32) -> WriteDesc {
+    fn wd(slot: u32, off: usize, len: usize, pid: Pid, seq: u32, tag: u64) -> WriteDesc {
         WriteDesc {
             slot_kind: SlotKind::Global,
             slot_index: slot,
@@ -412,7 +415,7 @@ mod tests {
                 .map(|i| {
                     let off = rng.below_usize(size - 1);
                     let len = 1 + rng.below_usize(size - off);
-                    wd(rng.below(2) as u32, off, len, rng.below(4) as Pid, i as u32, i as u32)
+                    wd(rng.below(2) as u32, off, len, rng.below(4) as Pid, i as u32, i as u64)
                 })
                 .collect();
             let segs = resolve_writes(&descs);
@@ -447,7 +450,7 @@ mod tests {
         // Regression: the old single-u64 sort key truncated the slot-kind
         // bit, so a Local write whose offset fell between two overlapping
         // Global writes split the Global run and skipped their resolution.
-        let mk = |kind: SlotKind, off: usize, len: usize, pid: Pid, seq: u32, tag: u32| WriteDesc {
+        let mk = |kind: SlotKind, off: usize, len: usize, pid: Pid, seq: u32, tag: u64| WriteDesc {
             slot_kind: kind,
             slot_index: 0,
             dst_off: off,
@@ -493,7 +496,7 @@ mod tests {
                 .map(|i| {
                     let off = rng.below_usize(31);
                     let len = 1 + rng.below_usize(32 - off);
-                    wd(rng.below(2) as u32, off, len, rng.below(4) as Pid, i as u32, i as u32)
+                    wd(rng.below(2) as u32, off, len, rng.below(4) as Pid, i as u32, i as u64)
                 })
                 .collect();
             resolve_writes_into(&descs, &mut sc, &mut segs);
@@ -511,6 +514,24 @@ mod tests {
                 find_read_write_overlap(&reads, &writes).is_some(),
             );
         }
+    }
+
+    #[test]
+    fn tags_beyond_the_u32_boundary_stay_distinct() {
+        // Regression (ISSUE 4 satellite): `tag` was u32, so a destination
+        // table past 2^32 entries aliased payload indices. Descriptors
+        // whose tags straddle the boundary must survive resolution with
+        // their identities intact (pre-fix this did not even typecheck).
+        let hi = u32::MAX as u64;
+        let d = vec![
+            wd(0, 0, 4, 0, 0, hi),
+            wd(0, 8, 4, 1, 0, hi + 1),
+            wd(0, 16, 4, 2, 0, hi + 2),
+        ];
+        let segs = resolve_writes(&d);
+        let mut tags: Vec<u64> = segs.iter().map(|s| d[s.desc].tag).collect();
+        tags.sort_unstable();
+        assert_eq!(tags, vec![hi, hi + 1, hi + 2]);
     }
 
     #[test]

@@ -39,6 +39,7 @@ use crate::core::{LpfError, Pid, Result, SyncAttr};
 use crate::fabric::plan::{fill_outbox, OutTables, Scratch, SyncPlan};
 use crate::fabric::SyncStats;
 use crate::memory::SharedRegister;
+use crate::netsim::faults::FaultPlan;
 use crate::queue::Request;
 use crate::sync::conflict::{
     find_read_write_overlap_scratch, resolve_writes_into, Interval, WriteDesc, WriteSeg,
@@ -83,6 +84,15 @@ pub struct SyncEngine {
     /// Request coalescing at queue-drain time (on by default; `bench_sync`
     /// flips it off for the ablation).
     coalesce: AtomicBool,
+    /// Installed fault-injection plan (None in production). Consulted at
+    /// superstep entry here; backends and the registration path consult
+    /// it through [`SyncEngine::fault_plan`].
+    faults: RwLock<Option<Arc<FaultPlan>>>,
+    /// Fast-path mirror of `faults.is_some()`: the per-superstep consult
+    /// is a single relaxed read of an immutable-in-production flag, so
+    /// the hot path never touches the lock word when no plan is
+    /// installed (no cross-core RMW traffic on the ℓ-critical path).
+    faults_installed: AtomicBool,
 }
 
 impl SyncEngine {
@@ -94,6 +104,8 @@ impl SyncEngine {
             regs: (0..p).map(|_| SharedRegister::new()).collect(),
             plans: (0..p).map(|_| SyncPlan::new(p)).collect(),
             coalesce: AtomicBool::new(true),
+            faults: RwLock::new(None),
+            faults_installed: AtomicBool::new(false),
         }
     }
 
@@ -128,6 +140,25 @@ impl SyncEngine {
         self.coalesce.load(Ordering::Relaxed)
     }
 
+    /// Install (or clear) the fault-injection plan this engine and its
+    /// backend consult (`None` = no faults; the production default).
+    /// Call between jobs, not mid-superstep.
+    pub fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        let mut guard = self.faults.write().expect("fault plan poisoned");
+        self.faults_installed.store(plan.is_some(), Ordering::Release);
+        *guard = plan;
+    }
+
+    /// The installed fault-injection plan, if any. Without a plan this is
+    /// one relaxed flag read; with one, an `Arc` clone — either way no
+    /// heap allocation, so the zero-allocation steady state holds.
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        if !self.faults_installed.load(Ordering::Acquire) {
+            return None;
+        }
+        self.faults.read().expect("fault plan poisoned").clone()
+    }
+
     /// Job-boundary reset (the pool's warm path): restore the state a
     /// freshly built engine would present — empty registers at default
     /// capacity, zeroed statistics, coalescing back to its default —
@@ -143,6 +174,11 @@ impl SyncEngine {
             plan.reset_for_job();
         }
         self.coalesce.store(true, Ordering::Relaxed);
+        // The fault plan stays installed across warm jobs (faults target
+        // per-job trigger points); only its per-job counters restart.
+        if let Some(faults) = self.fault_plan() {
+            faults.reset_for_job();
+        }
     }
 
     /// Run one superstep of the 4-phase strategy for `pid` over `ex`.
@@ -154,6 +190,20 @@ impl SyncEngine {
         attr: SyncAttr,
     ) -> Result<()> {
         let plan = &self.plans[pid as usize];
+
+        // ---- fault injection (adversarial testing only; `None` in
+        // production). A scheduled mid-job abort fires here, at superstep
+        // entry and before any barrier: this process fails with a clean
+        // error while peers observe PeerAborted at their next collective —
+        // the same propagation path a panicking SPMD function takes.
+        if let Some(faults) = self.fault_plan() {
+            let step = plan.stats.lock().expect("stats poisoned").syncs;
+            if let Some(e) = faults.abort_injection(pid, step) {
+                ex.abort_peers(pid);
+                return Err(e);
+            }
+        }
+
         let mut guard = plan.scratch.lock().expect("scratch poisoned");
         let s = &mut *guard;
 
@@ -185,7 +235,7 @@ impl SyncEngine {
                     len: m.len,
                     src_pid: m.src_pid,
                     seq: m.seq,
-                    tag: i as u32,
+                    tag: i as u64,
                 });
             }
             for (i, g) in my_gets.iter().enumerate() {
@@ -196,7 +246,7 @@ impl SyncEngine {
                     len: g.len,
                     src_pid: pid,
                     seq: g.seq,
-                    tag: (*put_count + i) as u32,
+                    tag: (*put_count + i) as u64,
                 });
             }
         }

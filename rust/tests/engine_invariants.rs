@@ -35,7 +35,7 @@ fn random_descs(rng: &mut XorShift64, size: usize) -> Vec<WriteDesc> {
                 len: rng.below_usize(size - off), // may be 0
                 src_pid: rng.below(5) as Pid,
                 seq: i as u32,
-                tag: i as u32,
+                tag: i as u64,
             }
         })
         .collect()

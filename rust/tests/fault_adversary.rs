@@ -1,0 +1,117 @@
+//! The adversary suite (ISSUE 4): fault injection + differential checking.
+//!
+//! Pins the tentpole's guarantees in `cargo test` (the full seed sweep
+//! runs in CI via `bench_faults --smoke`):
+//!
+//! * the fault-free differential matrix is clean — one SPMD program is
+//!   bit-identical on shared / rdma / msg / hybrid, cold and warm;
+//! * injected reportable faults end in a clean `LpfError` of the same
+//!   class everywhere, one pool cold-rebuild, and a recovered team;
+//! * injected absorbed faults are invisible in memory and statistics;
+//! * an injected allocation failure honours the mitigable
+//!   no-side-effects contract and is one-shot.
+
+use lpf::check::{classify, differential, run_case, ExecMode};
+use lpf::core::{Args, LpfError, SYNC_DEFAULT};
+use lpf::ctx::Platform;
+use lpf::netsim::faults::{FaultPlan, FaultSpec};
+use lpf::pool::Pool;
+
+#[test]
+fn no_fault_differential_matrix_is_clean() {
+    let r = differential(4, 1, None);
+    assert!(r.ok(), "violations: {:#?}", r.violations);
+    assert_eq!(r.cases.len(), 8, "4 backends x cold/warm");
+    assert!(r.cases.iter().all(|c| c.class() == "ok" && c.recovered));
+}
+
+#[test]
+fn seeded_fault_sweep_holds_compliance() {
+    // A slice of the CI sweep: every derived fault either absorbs or
+    // surfaces cleanly, identically across the matrix.
+    for seed in 0..4u64 {
+        let r = differential(4, 1, Some(seed));
+        assert!(r.ok(), "seed {seed} ({}): {:#?}", r.fault_desc, r.violations);
+    }
+}
+
+#[test]
+fn injected_abort_is_clean_cold_rebuilds_and_recovers() {
+    for (name, plat) in
+        [("shared", Platform::shared().checked(true)), ("rdma", Platform::rdma().checked(true))]
+    {
+        let plan = FaultPlan::one(FaultSpec::AbortAtSuperstep { pid: 1, step: 1 });
+        let case = run_case(name, &plat, 3, 2, ExecMode::Warm, Some(plan.clone()));
+        let err = case.result.expect_err("the abort must surface");
+        // pid 0 observes its peer's abort; the injected error itself lives
+        // on pid 1 — both classes are clean, deterministic outcomes
+        assert_eq!(classify(&err), "peer-aborted", "{err:?}");
+        assert_eq!(case.cold_resets, 1, "{name}: failed job must cold-rebuild the team");
+        assert!(case.recovered, "{name}: team must serve the next job");
+        assert_eq!(plan.injections(), 1);
+    }
+}
+
+#[test]
+fn injected_register_failure_is_mitigable_and_one_shot() {
+    let pool = Pool::new(Platform::shared().checked(true), 1);
+    pool.set_fault_plan(Some(FaultPlan::one(FaultSpec::FailSlotRegister { pid: 0, nth: 1 })));
+    pool.exec(
+        |ctx, _| {
+            ctx.resize_memory_register(4).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let a = ctx.register_global(8).unwrap(); // ordinal 0: clean
+            let err = ctx.register_global(8).unwrap_err(); // ordinal 1: injected
+            assert!(matches!(&err, LpfError::OutOfMemory(m) if m.contains("injected")), "{err:?}");
+            assert!(err.is_mitigable());
+            // no side effects + one-shot: the retry succeeds and lands on
+            // the index the failed call would have taken
+            let b = ctx.register_global(8).unwrap();
+            assert_eq!(a.index(), 0);
+            assert_eq!(b.index(), 1, "failed registration consumed no slot");
+        },
+        Args::none(),
+    )
+    .unwrap();
+    // a mitigated fault is not a failure: the team stayed warm
+    assert_eq!(pool.stats().cold_resets, 0);
+}
+
+#[test]
+fn absorbed_wire_faults_leave_observations_bit_identical() {
+    for (name, plat) in
+        [("msg", Platform::msg().checked(true)), ("hybrid", Platform::hybrid(2).checked(true))]
+    {
+        let clean = run_case(name, &plat, 4, 7, ExecMode::Cold, None);
+        let reference = clean.result.expect("clean run");
+        for spec in [
+            FaultSpec::ReorderArrivals { step: 1 },
+            FaultSpec::DelayRendezvous { pid: 2, step: 1, ns: 300_000.0 },
+            FaultSpec::DelayMeta { pid: 0, step: 2, ns: 150_000.0 },
+        ] {
+            let plan = FaultPlan::one(spec);
+            let case = run_case(name, &plat, 4, 7, ExecMode::Cold, Some(plan.clone()));
+            let observed = case.result.expect("absorbed faults must not fail");
+            assert_eq!(
+                observed, reference,
+                "{name}: {spec:?} changed memory or stats (must be model-legal)"
+            );
+            assert!(plan.injections() > 0, "{name}: {spec:?} never fired");
+            assert_eq!(case.cold_resets, 0);
+        }
+    }
+}
+
+#[test]
+fn adversary_exercises_coalescing_and_trimming() {
+    // sanity on the workload itself: the CRCW storm trims bytes and the
+    // contiguous run coalesces, so the oracle is comparing a pipeline
+    // that actually went through every engine phase
+    let case = run_case("shared", &Platform::shared().checked(true), 4, 1, ExecMode::Cold, None);
+    let obs = case.result.unwrap();
+    let total_trimmed: u64 = obs.iter().map(|o| o.stats.bytes_trimmed).sum();
+    assert!(total_trimmed > 0, "storm must overlap: {obs:?}");
+    let sent: u64 = obs.iter().map(|o| o.stats.msgs_out).sum();
+    // per pid: p allgather puts + 1 storm put + 1 coalesced run + 1 get
+    assert_eq!(sent, 4 * (4 + 3), "coalescing must collapse the 4-put run");
+}

@@ -141,6 +141,54 @@ fn multi_superstep_pipeline_identical() {
 }
 
 #[test]
+fn queue_capacity_discipline_shrink_deferred_and_seq_space_bounded() {
+    // ISSUE 4 satellites, pinned on the raw public `MsgQueue` type — the
+    // surface where the discipline can actually be violated: a resize may
+    // never invalidate queued requests (shrink defers to the drained
+    // fence), and the capacity may never exceed the u32 wire
+    // sequence-number space. (`Context::sync` drains the queue before it
+    // activates capacities, so the integrated path reaches the fence with
+    // an empty queue by construction; direct `MsgQueue` users get the
+    // same guarantee from the deferral floor pinned here.)
+    use lpf::fabric::shared::SharedFabric;
+    use lpf::fabric::Fabric;
+    use lpf::memory::SlotStorage;
+    use lpf::queue::MsgQueue;
+    let fab = SharedFabric::new(1, false);
+    let slot = fab.register_of(0).with_mut(|r| {
+        r.resize(1).unwrap();
+        r.activate_pending();
+        r.register_global(SlotStorage::new(8).unwrap()).unwrap()
+    });
+    let mut q = MsgQueue::new();
+    q.resize(3).unwrap();
+    q.activate_pending();
+    for _ in 0..3 {
+        q.push_put(lpf::queue::PutReq {
+            src_slot: slot,
+            src_off: 0,
+            dst_pid: 0,
+            dst_slot: slot,
+            dst_off: 4,
+            len: 1,
+            attr: MSG_DEFAULT,
+        })
+        .unwrap();
+    }
+    q.resize(1).unwrap();
+    q.activate_pending();
+    assert!(q.capacity() >= q.len(), "a fence must not strand queued requests");
+    q.clear();
+    q.activate_pending();
+    assert_eq!(q.capacity(), 1, "the shrink lands once the queue drained");
+    #[cfg(target_pointer_width = "64")]
+    {
+        let err = q.resize(u32::MAX as usize + 1).unwrap_err();
+        assert!(matches!(err, LpfError::Illegal(_)), "{err:?}");
+    }
+}
+
+#[test]
 fn capacity_errors_mitigable_on_all_backends() {
     for (name, plat) in all_platforms() {
         let root = Root::new(plat).with_max_procs(2);
