@@ -53,7 +53,7 @@ fn main() {
             let m = n / pp as usize;
             let mut bsp = Bsp::begin(ctx, 8, 4 * pp as usize + 8).unwrap();
             bsp.sync().unwrap();
-            let fft = BspFft::new(&mut bsp, n, backend.clone()).unwrap();
+            let mut fft = BspFft::new(&mut bsp, n, backend.clone()).unwrap();
             bsp.sync().unwrap();
             let re: Vec<f32> = (0..m).map(|j| g_re2[r as usize + pp as usize * j]).collect();
             let im: Vec<f32> = (0..m).map(|j| g_im2[r as usize + pp as usize * j]).collect();

@@ -79,7 +79,7 @@ fn fft_job(n: usize) -> impl Fn(&mut Context, Args) + Sync {
         let m = n / p as usize;
         let mut bsp = Bsp::begin_with_staging(ctx, 8, 4 * p as usize + 8, 64).unwrap();
         bsp.sync().unwrap();
-        let fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+        let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
         bsp.sync().unwrap();
         let mut rng = XorShift64::new(0xF17 + n as u64 + ctx.pid() as u64);
         let re: Vec<f32> = (0..m).map(|_| rng.unit_f64() as f32 - 0.5).collect();

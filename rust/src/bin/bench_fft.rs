@@ -1,0 +1,313 @@
+//! bench_fft — the FFT perf-trajectory harness.
+//!
+//! Measures the two layers the paper's Fig. 3 claim rests on and writes
+//! `BENCH_fft.json`:
+//!
+//! * **kernel**: ns per local transform for the retained scalar radix-2
+//!   baseline (`fft::baseline::fft_radix2_in_place`) vs the rebuilt
+//!   cache-blocked radix-4 native kernel (`fft::local::fft_in_place`)
+//!   across sizes, with the speedup ratio per size;
+//! * **bsp**: cold (construct + first transform) vs warm (steady-state)
+//!   `BspFft::run_into` latency on a worker pool, across process counts
+//!   and backends.
+//!
+//! `--smoke` runs a reduced sweep (CI) and additionally asserts the BSP
+//! layer's steady-state guarantees: a window of warm native-path
+//! `BspFft::run_into` calls on the shared backend must perform **zero**
+//! heap allocations (counted by the shared global-allocator hook), and
+//! the native kernel must beat the radix-2 baseline by ≥ 2× at the
+//! largest measured size. A violation exits non-zero and fails CI.
+//!
+//! Usage: `bench_fft [--smoke] [--out PATH]`
+
+use std::time::Instant;
+
+use lpf::benchkit::{alloc_counter, fmt_ns, json_f64, time_secs};
+use lpf::bsplib::Bsp;
+use lpf::core::Args;
+use lpf::ctx::Platform;
+use lpf::fft::baseline;
+use lpf::fft::bsp::{Backend, BspFft};
+use lpf::fft::local;
+use lpf::fft::plan::FftPlan;
+use lpf::pool::Pool;
+use lpf::util::rng::XorShift64;
+
+#[global_allocator]
+static GLOBAL: alloc_counter::CountingAlloc = alloc_counter::CountingAlloc;
+
+fn rand_planes(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = XorShift64::new(seed);
+    let re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+    let im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+    (re, im)
+}
+
+// ---------------------------------------------------------------- kernels
+
+struct KernelRow {
+    k: u32,
+    n: usize,
+    baseline_ns: f64,
+    native_ns: f64,
+    speedup: f64,
+}
+
+/// Per-size head-to-head of the two local kernels over identical inputs
+/// (each rep re-copies the input: the copy cost is tiny and identical on
+/// both sides, so the ratio is clean).
+fn bench_kernels(ks: &[u32]) -> Vec<KernelRow> {
+    let mut rows = Vec::new();
+    for &k in ks {
+        let n = 1usize << k;
+        let plan = FftPlan::cached(n).expect("plan");
+        let (re0, im0) = rand_planes(n, 0xAB + k as u64);
+        let mut re = re0.clone();
+        let mut im = im0.clone();
+        // rep budget ~2^24 butterfly-elements per kernel, at least 3 reps
+        let reps = ((1u64 << 24) / n as u64).clamp(3, 500) as u32;
+        let base = time_secs(1, reps, || {
+            re.copy_from_slice(&re0);
+            im.copy_from_slice(&im0);
+            baseline::fft_radix2_in_place(&plan, &mut re, &mut im).expect("radix2");
+        });
+        std::hint::black_box((&re, &im));
+        let nat = time_secs(1, reps, || {
+            re.copy_from_slice(&re0);
+            im.copy_from_slice(&im0);
+            local::fft_in_place(&plan, &mut re, &mut im).expect("radix4");
+        });
+        std::hint::black_box((&re, &im));
+        let row = KernelRow {
+            k,
+            n,
+            baseline_ns: base.mean() * 1e9,
+            native_ns: nat.mean() * 1e9,
+            speedup: base.mean() / nat.mean(),
+        };
+        eprintln!(
+            "kernel n=2^{k:<2} radix2 {:>12}  radix4 {:>12}  speedup {:.2}x",
+            fmt_ns(row.baseline_ns),
+            fmt_ns(row.native_ns),
+            row.speedup
+        );
+        rows.push(row);
+    }
+    rows
+}
+
+// ---------------------------------------------------------------- BSP layer
+
+struct BspRow {
+    backend: &'static str,
+    p: u32,
+    n: usize,
+    /// Construct + first transform (plan-cache hit, registration, first
+    /// superstep) inside a fresh pool job.
+    cold_ns: f64,
+    /// Mean steady-state `run_into`.
+    warm_ns: f64,
+    warm_ci95_ns: f64,
+}
+
+fn bench_bsp(backend: &'static str, platform: Platform, p: u32, n: usize, reps: u32) -> BspRow {
+    let pool = Pool::new(platform, p);
+    let outs = pool
+        .exec(
+            move |ctx, _| {
+                let m = n / ctx.p() as usize;
+                let mut bsp =
+                    Bsp::begin_with_staging(ctx, 8, 4 * ctx.p() as usize + 8, 64).unwrap();
+                bsp.sync().unwrap();
+                let (re, im) = rand_planes(m, 1 + ctx.pid() as u64);
+                let mut o_re = vec![0f32; m];
+                let mut o_im = vec![0f32; m];
+                let t0 = Instant::now();
+                let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+                bsp.sync().unwrap();
+                fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                let cold = t0.elapsed().as_secs_f64();
+                for _ in 0..2 {
+                    fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                }
+                let s = time_secs(0, reps, || {
+                    fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                });
+                std::hint::black_box((&o_re, &o_im));
+                bsp.end().unwrap();
+                (cold, s.mean(), s.ci95())
+            },
+            Args::none(),
+        )
+        .expect("bsp bench job");
+    // the transform is done when the slowest process is done
+    let cold = outs.iter().map(|o| o.0).fold(0.0, f64::max);
+    let warm = outs.iter().map(|o| o.1).fold(0.0, f64::max);
+    let ci = outs.iter().map(|o| o.2).fold(0.0, f64::max);
+    let row = BspRow {
+        backend,
+        p,
+        n,
+        cold_ns: cold * 1e9,
+        warm_ns: warm * 1e9,
+        warm_ci95_ns: ci * 1e9,
+    };
+    eprintln!(
+        "bsp {:>6} p={} n=2^{:<2} cold {:>12}  warm {:>12} (±{})",
+        backend,
+        p,
+        n.trailing_zeros(),
+        fmt_ns(row.cold_ns),
+        fmt_ns(row.warm_ns),
+        fmt_ns(row.warm_ci95_ns)
+    );
+    row
+}
+
+/// Heap allocations over `runs` steady-state native `BspFft::run_into`
+/// calls on the shared backend, across all `p` processes (the counter is
+/// process-wide, so every process's run must be clean).
+fn count_steady_state_allocs(p: u32, n: usize, runs: u32) -> u64 {
+    let pool = Pool::new(Platform::shared().checked(false), p);
+    pool.exec(
+        move |ctx, _| {
+            let m = n / ctx.p() as usize;
+            let mut bsp = Bsp::begin_with_staging(ctx, 8, 4 * ctx.p() as usize + 8, 64).unwrap();
+            bsp.sync().unwrap();
+            let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+            bsp.sync().unwrap();
+            let (re, im) = rand_planes(m, 9 + ctx.pid() as u64);
+            let mut o_re = vec![0f32; m];
+            let mut o_im = vec![0f32; m];
+            for _ in 0..3 {
+                fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+            }
+            bsp.sync().unwrap(); // align processes before counting
+            if ctx.pid() == 0 {
+                alloc_counter::start();
+            }
+            bsp.sync().unwrap(); // nobody proceeds before the counter is on
+            for _ in 0..runs {
+                fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+            }
+            bsp.sync().unwrap(); // everyone done before the counter stops
+            if ctx.pid() == 0 {
+                alloc_counter::stop();
+            }
+            bsp.sync().unwrap(); // teardown stays outside the window
+            std::hint::black_box((&o_re, &o_im));
+            bsp.end().unwrap();
+        },
+        Args::none(),
+    )
+    .expect("alloc check job");
+    alloc_counter::count()
+}
+
+// ---------------------------------------------------------------- output
+
+fn write_json(
+    path: &str,
+    kernels: &[KernelRow],
+    alloc_check: Option<(u32, u32, u64)>,
+    bsp: &[BspRow],
+) {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"bench_fft/v1\",\n");
+    if let Some((p, runs, allocs)) = alloc_check {
+        s.push_str(&format!(
+            "  \"alloc_check\": {{ \"backend\": \"shared\", \"p\": {p}, \"runs\": {runs}, \
+             \"allocations\": {allocs} }},\n"
+        ));
+    }
+    s.push_str("  \"kernel\": [\n");
+    for (i, r) in kernels.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"k\": {}, \"n\": {}, \"baseline_ns\": {}, \"native_ns\": {}, \
+             \"speedup\": {} }}{}\n",
+            r.k,
+            r.n,
+            json_f64(r.baseline_ns),
+            json_f64(r.native_ns),
+            json_f64(r.speedup),
+            if i + 1 < kernels.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"bsp\": [\n");
+    for (i, r) in bsp.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"backend\": \"{}\", \"p\": {}, \"n\": {}, \"cold_ns\": {}, \
+             \"warm_ns\": {}, \"warm_ci95_ns\": {} }}{}\n",
+            r.backend,
+            r.p,
+            r.n,
+            json_f64(r.cold_ns),
+            json_f64(r.warm_ns),
+            json_f64(r.warm_ci95_ns),
+            if i + 1 < bsp.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).expect("write BENCH_fft.json");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let out = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_fft.json".to_string());
+
+    // 2^20 anchors the headline speedup in both modes
+    let ks: Vec<u32> = if smoke { vec![12, 16, 20] } else { vec![10, 12, 14, 16, 18, 20] };
+    let kernels = bench_kernels(&ks);
+
+    let (bsp_n, reps) = if smoke { (1usize << 14, 10u32) } else { (1usize << 14, 40u32) };
+    let mut bsp = Vec::new();
+    for p in [2u32, 4] {
+        bsp.push(bench_bsp("shared", Platform::shared().checked(false), p, bsp_n, reps));
+        bsp.push(bench_bsp("rdma", Platform::rdma(), p, bsp_n, reps));
+    }
+
+    let alloc_check = if smoke {
+        const RUNS: u32 = 20;
+        let allocs = count_steady_state_allocs(4, 1 << 12, RUNS);
+        eprintln!("alloc check: {allocs} allocations over {RUNS} steady-state BSP FFT runs");
+        Some((4u32, RUNS, allocs))
+    } else {
+        None
+    };
+
+    write_json(&out, &kernels, alloc_check, &bsp);
+    eprintln!("wrote {out}");
+
+    let mut failed = false;
+    if let Some((_, _, allocs)) = alloc_check {
+        if allocs != 0 {
+            eprintln!(
+                "FAIL: steady-state BspFft::run_into allocated {allocs} times (expected 0)"
+            );
+            failed = true;
+        } else {
+            eprintln!("OK: steady-state BSP FFT is allocation-free");
+        }
+    }
+    if smoke {
+        let top = kernels.last().expect("kernel rows");
+        if top.speedup < 2.0 {
+            eprintln!(
+                "FAIL: native kernel speedup {:.2}x at n=2^{} (expected >= 2x over radix-2)",
+                top.speedup, top.k
+            );
+            failed = true;
+        } else {
+            eprintln!("OK: native kernel {:.2}x over radix-2 at n=2^{}", top.speedup, top.k);
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

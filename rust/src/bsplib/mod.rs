@@ -180,16 +180,10 @@ impl<'a> Bsp<'a> {
     }
 
     /// Read from this process's window of a registration (local access).
+    /// Allocation-free: the target is filled in place (steady-state
+    /// `BspFft::run` gathers through this every superstep).
     pub fn read_local<T: Pod>(&self, reg: BspReg, byte_off: usize, out: &mut [T]) -> Result<()> {
-        self.ctx.read_typed::<u8>(reg.slot, 0, &mut [])?; // slot validity
-        let len = std::mem::size_of_val(out);
-        let mut bytes = vec![0u8; len];
-        self.ctx.read_slot(reg.slot, byte_off, &mut bytes)?;
-        // SAFETY: Pod target.
-        unsafe {
-            std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, len);
-        }
-        Ok(())
+        self.ctx.read_slot(reg.slot, byte_off, crate::ctx::pod_bytes_mut(out))
     }
 
     /// `bsp_put`: **buffered** — `data` is snapshotted now into the staging

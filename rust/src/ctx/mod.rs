@@ -522,6 +522,14 @@ pub fn pod_bytes<T: Pod>(data: &[T]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, size_of_val(data)) }
 }
 
+/// Reinterpret a Pod slice as mutable bytes (read targets need no
+/// intermediate buffer: any bit pattern written is a valid `T`).
+pub fn pod_bytes_mut<T: Pod>(data: &mut [T]) -> &mut [u8] {
+    let len = size_of_val(data);
+    // SAFETY: Pod guarantees no padding and all bit patterns valid.
+    unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, len) }
+}
+
 use std::mem::{size_of, size_of_val};
 
 #[cfg(test)]

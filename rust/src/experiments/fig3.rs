@@ -72,13 +72,17 @@ pub fn bsp_fft_secs_on(pool: &Pool, n: usize, reps: u32, backend: Backend) -> Re
             let m = n / ctx.p() as usize;
             let mut bsp = Bsp::begin_with_staging(ctx, 8, 4 * ctx.p() as usize + 8, 64)?;
             bsp.sync()?;
-            let fft = BspFft::new(&mut bsp, n, backend.clone())?;
+            let mut fft = BspFft::new(&mut bsp, n, backend.clone())?;
             bsp.sync()?;
             let (re, im) = random_planes(m, 0xF17 + n as u64);
+            let mut out_re = vec![0f32; m];
+            let mut out_im = vec![0f32; m];
             // warm (compiles artifacts on first use)
-            let _ = fft.run(&mut bsp, &re, &im)?;
+            fft.run_into(&mut bsp, &re, &im, &mut out_re, &mut out_im)?;
+            // measured region is the steady state: allocation-free on the
+            // native path, outputs written into reused planes
             let samples = time_secs(0, reps, || {
-                fft.run(&mut bsp, &re, &im).expect("fft run");
+                fft.run_into(&mut bsp, &re, &im, &mut out_re, &mut out_im).expect("fft run");
             });
             bsp.end()?;
             Ok(samples.mean())

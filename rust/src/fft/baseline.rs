@@ -1,4 +1,4 @@
-//! Fig. 3 baselines.
+//! Fig. 3 baselines, including the retained scalar radix-2 kernel.
 //!
 //! The paper compares the immortal HPBSP FFT against Intel MKL and FFTW.
 //! Neither exists in this container, so per the substitution rule we build
@@ -8,14 +8,72 @@
 //!   fused FFT op (one `fft_full_n` artifact), i.e. "a vendor-optimised
 //!   monolithic library call".
 //! * [`PortableFft`] — FFTW proxy: the decent portable implementation
-//!   (`fft::local`, plan-cached).
+//!   ([`fft_radix2_in_place`], plan-cached).
+//!
+//! [`fft_radix2_in_place`] is the pre-rebuild `local::fft_in_place`: a
+//! correct, scalar, stage-per-pass iterative radix-2 DIT. It stays here
+//! verbatim as (a) the correctness oracle the rebuilt radix-4 kernel is
+//! property-tested against, and (b) the denominator of the `bench_fft`
+//! kernel speedup trajectory.
 
 use std::sync::Arc;
 
 use super::local;
 use super::plan::FftPlan;
-use crate::core::Result;
+use crate::core::{LpfError, Result};
 use crate::runtime::{Runtime, Tensor};
+
+/// In-place scalar radix-2 complex FFT over split planes — the retained
+/// baseline kernel. Length mismatches are [`LpfError::Illegal`], not
+/// panics (safe API misuse must be reportable).
+pub fn fft_radix2_in_place(plan: &FftPlan, re: &mut [f32], im: &mut [f32]) -> Result<()> {
+    if re.len() != plan.n || im.len() != plan.n {
+        return Err(LpfError::Illegal(format!(
+            "fft_radix2_in_place: planes of {}/{} elements do not match plan size {}",
+            re.len(),
+            im.len(),
+            plan.n
+        )));
+    }
+    let n = plan.n;
+    // bit-reverse permutation (cycle-safe: swap only when i < j)
+    for i in 0..n {
+        let j = plan.perm[i] as usize;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut m = 1usize;
+    let mut off = 0usize;
+    while m < n {
+        let span = 2 * m;
+        for base in (0..n).step_by(span) {
+            for k in 0..m {
+                let (wr, wi) = (plan.tw_re[off + k], plan.tw_im[off + k]);
+                let (br, bi) = (re[base + m + k], im[base + m + k]);
+                let tr = wr * br - wi * bi;
+                let ti = wr * bi + wi * br;
+                let (ar, ai) = (re[base + k], im[base + k]);
+                re[base + k] = ar + tr;
+                im[base + k] = ai + ti;
+                re[base + m + k] = ar - tr;
+                im[base + m + k] = ai - ti;
+            }
+        }
+        off += m;
+        m = span;
+    }
+    Ok(())
+}
+
+/// Convenience: allocate-and-transform through the radix-2 baseline.
+pub fn fft_radix2(plan: &FftPlan, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut r = re.to_vec();
+    let mut i = im.to_vec();
+    fft_radix2_in_place(plan, &mut r, &mut i)?;
+    Ok((r, i))
+}
 
 /// MKL-proxy baseline: one fused XLA FFT call for the whole vector.
 pub struct VendorFft {
@@ -42,26 +100,28 @@ impl VendorFft {
     }
 }
 
-/// FFTW-proxy baseline: plan-cached portable Rust FFT.
+/// FFTW-proxy baseline: plan-cached portable radix-2 Rust FFT.
 pub struct PortableFft {
-    plan: FftPlan,
+    plan: Arc<FftPlan>,
 }
 
 impl PortableFft {
-    /// Build the plan for size `n`.
+    /// Build (or fetch from the [`super::plan::PlanCache`]) the plan for
+    /// size `n`.
     pub fn new(n: usize) -> Result<PortableFft> {
-        Ok(PortableFft { plan: FftPlan::new(n)? })
+        Ok(PortableFft { plan: FftPlan::cached(n)? })
     }
 
     /// Transform split planes.
     pub fn run(&self, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        local::fft(&self.plan, re, im)
+        fft_radix2(&self.plan, re, im)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::XorShift64;
 
     #[test]
     fn portable_matches_impulse() {
@@ -71,5 +131,32 @@ mod tests {
         let (or, oi) = f.run(&re, &vec![0f32; 16]).unwrap();
         assert!(or.iter().all(|&x| (x - 1.0).abs() < 1e-6));
         assert!(oi.iter().all(|&x| x.abs() < 1e-6));
+    }
+
+    #[test]
+    fn radix2_matches_naive_dft() {
+        for n in [2usize, 8, 64, 256] {
+            let plan = FftPlan::new(n).unwrap();
+            let mut rng = XorShift64::new(n as u64);
+            let re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+            let im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+            let (fr, fi) = fft_radix2(&plan, &re, &im).unwrap();
+            let (dr, di) = local::dft_naive(&re, &im);
+            for k in 0..n {
+                assert!((fr[k] - dr[k]).abs() < 1e-3, "n={n} re[{k}]");
+                assert!((fi[k] - di[k]).abs() < 1e-3, "n={n} im[{k}]");
+            }
+        }
+    }
+
+    #[test]
+    fn radix2_length_mismatch_is_illegal_not_a_panic() {
+        let plan = FftPlan::new(8).unwrap();
+        let mut re = vec![0f32; 4];
+        let mut im = vec![0f32; 8];
+        assert!(matches!(
+            fft_radix2_in_place(&plan, &mut re, &mut im),
+            Err(LpfError::Illegal(_))
+        ));
     }
 }

@@ -4,20 +4,35 @@
 //! Four-step structure for global size `n = p·m`, process `r` owning the
 //! cyclic slice `x[r::p]`:
 //!
-//! 1. **local FFT** of length `m` (PJRT artifact `fft_local_m`, i.e. the
-//!    Pallas butterfly path; or the native Rust FFT as fallback);
-//! 2. **twiddle** by `exp(−2πi·r·k2/n)` (artifact `cmul_m`);
+//! 1. **local FFT** of length `m` — the cache-blocked radix-4 native
+//!    kernel ([`local::fft_in_place_post_mul`]), or the PJRT artifact
+//!    path when available;
+//! 2. **twiddle** by `exp(−2πi·r·k2/n)` — fused into the last butterfly
+//!    stage on the native path (a free epilogue, not an extra pass);
 //! 3. **redistribution**: block `r′` of every process's row travels to
 //!    process `r′` — the all-to-all h-relation of `h = m` words per
 //!    process that makes this algorithm communication-bound (the paper's
-//!    focus), done with `bsp_hpput`s and one `bsp_sync`;
-//! 4. **length-p FFTs** over the gathered rows (artifact `fft_batch`).
+//!    focus). Each destination receives one *pair* of plane blocks staged
+//!    contiguously, so the PR-2 engine coalesces every pair into a single
+//!    wire descriptor;
+//! 4. **length-p FFTs** over the gathered rows — the strided batch kernel
+//!    ([`local::fft_batch_strided_out`]) consumes the landing layout
+//!    directly and fuses the output transpose into its final stage; the
+//!    explicit gather-transpose of the old pipeline is gone.
 //!
 //! Output layout: process `r′` holds `X[k2 + m·k1]` for its block of
 //! `k2 ∈ [r′·m/p, (r′+1)·m/p)` and all `k1` — row-major `[m/p][p]`.
 //! (The paper notes vendor libraries expose no "unordered time-shifted"
 //! FFTs; like HPBSP we keep the natural distributed layout and pay the
 //! extra twiddle pass inside step 2.)
+//!
+//! **Steady state allocates nothing** on the native path: plans come from
+//! the process-wide [`super::plan::PlanCache`], scratch planes are owned
+//! by the [`BspFft`], staging uses the registered windows, and
+//! [`BspFft::run_into`] writes results into caller-provided planes
+//! (`bench_fft --smoke` gates this with the counting allocator).
+//! `p = 1` degrades to a plain local FFT with no redistribution
+//! superstep.
 
 use std::sync::Arc;
 
@@ -32,7 +47,7 @@ use crate::runtime::{Runtime, Tensor};
 pub enum Backend {
     /// PJRT artifacts (the three-layer path; requires `make artifacts`).
     Artifacts(Arc<Runtime>),
-    /// Pure-Rust compute (fallback + ablation baseline).
+    /// Pure-Rust compute (the radix-4 native kernel).
     Native,
 }
 
@@ -45,6 +60,88 @@ impl std::fmt::Debug for Backend {
     }
 }
 
+/// The artifact bindings a `BspFft` establishes once at construction, so
+/// no run ever re-converts the static tables (perm + twiddles).
+#[derive(Default)]
+struct ArtifactKeys {
+    /// `fft_tw_local_{m}` with *all* tables bound (fused steps 1–2).
+    fused: Option<String>,
+    /// `fft_local_{m}` with the plan tables bound.
+    local: Option<String>,
+    /// `cmul_{m}` with the redistribution twiddles bound.
+    cmul: Option<String>,
+}
+
+fn bind_artifacts(
+    backend: &Backend,
+    m: usize,
+    r: u32,
+    plan: &FftPlan,
+    tw_re: &[f32],
+    tw_im: &[f32],
+) -> Result<ArtifactKeys> {
+    let Backend::Artifacts(rt) = backend else {
+        return Ok(ArtifactKeys::default());
+    };
+    let fused_name = format!("fft_tw_local_{m}");
+    if rt.manifest().get(&fused_name).is_some() {
+        let key = format!("m{m}-r{r}");
+        rt.bind(
+            &fused_name,
+            &key,
+            vec![
+                (2, Tensor::I32(plan.perm_i32()?)),
+                (3, Tensor::F32(plan.tw_re.clone())),
+                (4, Tensor::F32(plan.tw_im.clone())),
+                (5, Tensor::F32(tw_re.to_vec())),
+                (6, Tensor::F32(tw_im.to_vec())),
+            ],
+        )?;
+        return Ok(ArtifactKeys { fused: Some(key), ..ArtifactKeys::default() });
+    }
+    let mut keys = ArtifactKeys::default();
+    let local_name = format!("fft_local_{m}");
+    if rt.manifest().get(&local_name).is_some() {
+        let key = format!("m{m}");
+        rt.bind(
+            &local_name,
+            &key,
+            vec![
+                (2, Tensor::I32(plan.perm_i32()?)),
+                (3, Tensor::F32(plan.tw_re.clone())),
+                (4, Tensor::F32(plan.tw_im.clone())),
+            ],
+        )?;
+        keys.local = Some(key);
+    }
+    let cmul_name = format!("cmul_{m}");
+    if rt.manifest().get(&cmul_name).is_some() {
+        let key = format!("m{m}-r{r}");
+        rt.bind(
+            &cmul_name,
+            &key,
+            vec![(2, Tensor::F32(tw_re.to_vec())), (3, Tensor::F32(tw_im.to_vec()))],
+        )?;
+        keys.cmul = Some(key);
+    }
+    Ok(keys)
+}
+
+/// Copy an artifact output plane, validating its length first — a
+/// malformed artifact must surface as `Illegal`, not as a
+/// `copy_from_slice` panic inside an SPMD process.
+fn copy_plane(what: &str, dst: &mut [f32], src: &[f32]) -> Result<()> {
+    if src.len() != dst.len() {
+        return Err(LpfError::Illegal(format!(
+            "{what}: artifact returned a {}-element plane, expected {}",
+            src.len(),
+            dst.len()
+        )));
+    }
+    dst.copy_from_slice(src);
+    Ok(())
+}
+
 /// Per-process state for repeated BSP FFTs of one size.
 pub struct BspFft {
     /// Global transform size.
@@ -53,24 +150,31 @@ pub struct BspFft {
     r: u32,
     /// Local length `n_global / p`.
     pub m: usize,
-    plan_local: FftPlan,
-    plan_p: Option<FftPlan>,
+    plan_local: Arc<FftPlan>,
+    plan_p: Option<Arc<FftPlan>>,
     tw_re: Vec<f32>,
     tw_im: Vec<f32>,
     backend: Backend,
-    /// Fused fft+twiddle artifact available with tables bound server-side
-    /// (skips per-run conversion of perm + 2 twiddle tables — §Perf).
-    fused_key: Option<String>,
+    keys: ArtifactKeys,
     /// Registered communication windows (src row, dst matrix), reused
-    /// across runs: `[re | im]` planes of `m` f32 each — element-indexed
-    /// typed registrations, so no byte offsets appear below.
+    /// across runs. Layout `[p][2][blk]`: per destination block `d`, its
+    /// `re` then `im` plane chunks contiguously — which makes each
+    /// destination's plane pair one contiguous range on both sides, i.e.
+    /// coalescible by the sync engine.
     src_reg: TypedReg<f32>,
     dst_reg: TypedReg<f32>,
+    /// Reusable scratch planes (`m` each): FFT workspace before staging,
+    /// then landing area for the gathered rows. No run allocates.
+    sc_re: Vec<f32>,
+    sc_im: Vec<f32>,
 }
 
 impl BspFft {
     /// Collective constructor: registers the communication windows
     /// (costs one superstep via `bsp.sync` by the caller afterwards).
+    ///
+    /// Every error path rolls back partial registrations, so a failed
+    /// constructor leaks no slots (mirrors the PR-4 `Coll::new` fix).
     pub fn new(bsp: &mut Bsp, n_global: usize, backend: Backend) -> Result<BspFft> {
         let p = bsp.nprocs();
         let r = bsp.pid();
@@ -81,29 +185,28 @@ impl BspFft {
         if m % (p as usize) != 0 {
             return Err(LpfError::Illegal(format!("m={m} not divisible by p={p}")));
         }
-        let plan_local = FftPlan::new(m)?;
-        let plan_p = if p >= 2 { Some(FftPlan::new(p as usize)?) } else { None };
+        let plan_local = FftPlan::cached(m)?;
+        let plan_p = if p >= 2 { Some(FftPlan::cached(p as usize)?) } else { None };
         let (tw_re, tw_im) = plan_local.bsp_twiddles(r, p);
-        let src_reg = bsp.push_reg_of::<f32>(2 * m)?;
-        let dst_reg = bsp.push_reg_of::<f32>(2 * m)?;
-        // bind the static tables server-side when the fused artifact exists
-        let fused_key = match &backend {
-            Backend::Artifacts(rt) if rt.manifest().get(&format!("fft_tw_local_{m}")).is_some() => {
-                let key = format!("m{m}-r{r}");
-                rt.bind(
-                    &format!("fft_tw_local_{m}"),
-                    &key,
-                    vec![
-                        (2, crate::runtime::Tensor::I32(plan_local.perm.clone())),
-                        (3, crate::runtime::Tensor::F32(plan_local.tw_re.clone())),
-                        (4, crate::runtime::Tensor::F32(plan_local.tw_im.clone())),
-                        (5, crate::runtime::Tensor::F32(tw_re.clone())),
-                        (6, crate::runtime::Tensor::F32(tw_im.clone())),
-                    ],
-                )?;
-                Some(key)
+        // p = 1 never redistributes: register empty windows (keeping the
+        // collective registration sequence uniform) and no scratch
+        let win = if p == 1 { 0 } else { 2 * m };
+        let src_reg = bsp.push_reg_of::<f32>(win)?;
+        let dst_reg = match bsp.push_reg_of::<f32>(win) {
+            Ok(reg) => reg,
+            Err(e) => {
+                let _ = bsp.pop_reg_of(src_reg);
+                return Err(e);
             }
-            _ => None,
+        };
+        // bind the static tables server-side, once (no per-run clones)
+        let keys = match bind_artifacts(&backend, m, r, &plan_local, &tw_re, &tw_im) {
+            Ok(keys) => keys,
+            Err(e) => {
+                let _ = bsp.pop_reg_of(dst_reg);
+                let _ = bsp.pop_reg_of(src_reg);
+                return Err(e);
+            }
         };
         Ok(BspFft {
             n_global,
@@ -115,9 +218,11 @@ impl BspFft {
             tw_re,
             tw_im,
             backend,
-            fused_key,
+            keys,
             src_reg,
             dst_reg,
+            sc_re: vec![0f32; if p == 1 { 0 } else { m }],
+            sc_im: vec![0f32; if p == 1 { 0 } else { m }],
         })
     }
 
@@ -133,21 +238,24 @@ impl BspFft {
     fn local_fft(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>)> {
         match &self.backend {
             Backend::Artifacts(rt) => {
-                let out = rt.run(
-                    &format!("fft_local_{}", self.m),
-                    vec![
-                        Tensor::F32(re),
-                        Tensor::F32(im),
-                        Tensor::I32(self.plan_local.perm.clone()),
-                        Tensor::F32(self.plan_local.tw_re.clone()),
-                        Tensor::F32(self.plan_local.tw_im.clone()),
-                    ],
-                )?;
+                let name = format!("fft_local_{}", self.m);
+                let out = match &self.keys.local {
+                    Some(key) => {
+                        rt.run_bound(&name, key, vec![Tensor::F32(re), Tensor::F32(im)])?
+                    }
+                    None => rt.run(
+                        &name,
+                        vec![
+                            Tensor::F32(re),
+                            Tensor::F32(im),
+                            Tensor::I32(self.plan_local.perm_i32()?),
+                            Tensor::F32(self.plan_local.tw_re.clone()),
+                            Tensor::F32(self.plan_local.tw_im.clone()),
+                        ],
+                    )?,
+                };
                 let mut it = out.into_iter();
-                Ok((
-                    it.next().unwrap().into_f32()?,
-                    it.next().unwrap().into_f32()?,
-                ))
+                Ok((it.next().unwrap().into_f32()?, it.next().unwrap().into_f32()?))
             }
             Backend::Native => {
                 let mut re = re;
@@ -161,20 +269,23 @@ impl BspFft {
     fn twiddle(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>)> {
         match &self.backend {
             Backend::Artifacts(rt) => {
-                let out = rt.run(
-                    &format!("cmul_{}", self.m),
-                    vec![
-                        Tensor::F32(re),
-                        Tensor::F32(im),
-                        Tensor::F32(self.tw_re.clone()),
-                        Tensor::F32(self.tw_im.clone()),
-                    ],
-                )?;
+                let name = format!("cmul_{}", self.m);
+                let out = match &self.keys.cmul {
+                    Some(key) => {
+                        rt.run_bound(&name, key, vec![Tensor::F32(re), Tensor::F32(im)])?
+                    }
+                    None => rt.run(
+                        &name,
+                        vec![
+                            Tensor::F32(re),
+                            Tensor::F32(im),
+                            Tensor::F32(self.tw_re.clone()),
+                            Tensor::F32(self.tw_im.clone()),
+                        ],
+                    )?,
+                };
                 let mut it = out.into_iter();
-                Ok((
-                    it.next().unwrap().into_f32()?,
-                    it.next().unwrap().into_f32()?,
-                ))
+                Ok((it.next().unwrap().into_f32()?, it.next().unwrap().into_f32()?))
             }
             Backend::Native => {
                 let mut ore = re;
@@ -190,47 +301,59 @@ impl BspFft {
         }
     }
 
-    fn batch_fft_p(&self, re: Vec<f32>, im: Vec<f32>) -> Result<(Vec<f32>, Vec<f32>)> {
-        let p = self.p as usize;
-        let rows = self.m / p;
-        match &self.backend {
-            Backend::Artifacts(rt) => {
-                let out = rt.run(
-                    &format!("fft_batch_{rows}x{p}"),
-                    vec![Tensor::F32(re), Tensor::F32(im)],
-                )?;
-                let mut it = out.into_iter();
-                Ok((
-                    it.next().unwrap().into_f32()?,
-                    it.next().unwrap().into_f32()?,
-                ))
-            }
-            Backend::Native => {
-                let plan = self.plan_p.as_ref().expect("p >= 2");
-                let mut re = re;
-                let mut im = im;
-                for row in 0..rows {
-                    let s = row * p;
-                    local::fft_in_place(plan, &mut re[s..s + p], &mut im[s..s + p])?;
-                }
-                Ok((re, im))
-            }
-        }
+    /// Run one distributed FFT, allocating the output planes. See
+    /// [`run_into`](BspFft::run_into) for the allocation-free form this
+    /// wraps.
+    pub fn run(&mut self, bsp: &mut Bsp, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut out_re = vec![0f32; self.m];
+        let mut out_im = vec![0f32; self.m];
+        self.run_into(bsp, re, im, &mut out_re, &mut out_im)?;
+        Ok((out_re, out_im))
     }
 
-    /// Run one distributed FFT. `re`/`im` hold this process's cyclic slice
-    /// (`x[r::p]`, length `m`); the result is this process's `[m/p][p]`
+    /// Run one distributed FFT into caller-provided output planes.
+    /// `re`/`im` hold this process's cyclic slice (`x[r::p]`, length `m`);
+    /// `out_re`/`out_im` (length `m`) receive this process's `[m/p][p]`
     /// output block (see module docs for the global layout).
     ///
-    /// BSP cost: local compute + one full `h = m`-relation + one sync.
-    pub fn run(&self, bsp: &mut Bsp, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+    /// BSP cost: local compute + one full `h = m`-relation + one sync
+    /// (`p = 1`: local compute only, no superstep). On the native path
+    /// the steady state performs zero heap allocations.
+    pub fn run_into(
+        &mut self,
+        bsp: &mut Bsp,
+        re: &[f32],
+        im: &[f32],
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+    ) -> Result<()> {
         if re.len() != self.m || im.len() != self.m {
             return Err(LpfError::Illegal(format!("input must be m={} per plane", self.m)));
         }
+        if out_re.len() != self.m || out_im.len() != self.m {
+            return Err(LpfError::Illegal(format!("output must be m={} per plane", self.m)));
+        }
         let p = self.p as usize;
+        if p == 1 {
+            // the whole transform is local: no twiddle (r = 0), no
+            // redistribution superstep, output already in `[m][1]` layout
+            return match &self.backend {
+                Backend::Native => {
+                    out_re.copy_from_slice(re);
+                    out_im.copy_from_slice(im);
+                    local::fft_in_place(&self.plan_local, out_re, out_im)
+                }
+                Backend::Artifacts(_) => {
+                    let (o_re, o_im) = self.local_fft(re.to_vec(), im.to_vec())?;
+                    copy_plane("BspFft p=1 local FFT", out_re, &o_re)?;
+                    copy_plane("BspFft p=1 local FFT", out_im, &o_im)?;
+                    Ok(())
+                }
+            };
+        }
         let blk = self.m / p;
-        // steps 1–2: local FFT + twiddle (fused single call when bound)
-        let (re2, im2) = match (&self.backend, &self.fused_key) {
+        // steps 1–2: local FFT + redistribution twiddle
+        match (&self.backend, &self.keys.fused) {
             (Backend::Artifacts(rt), Some(key)) => {
                 let out = rt.run_bound(
                     &format!("fft_tw_local_{}", self.m),
@@ -238,46 +361,102 @@ impl BspFft {
                     vec![Tensor::F32(re.to_vec()), Tensor::F32(im.to_vec())],
                 )?;
                 let mut it = out.into_iter();
-                (it.next().unwrap().into_f32()?, it.next().unwrap().into_f32()?)
+                let o_re = it.next().unwrap().into_f32()?;
+                let o_im = it.next().unwrap().into_f32()?;
+                copy_plane("BspFft fused local FFT", &mut self.sc_re, &o_re)?;
+                copy_plane("BspFft fused local FFT", &mut self.sc_im, &o_im)?;
             }
-            _ => {
+            (Backend::Artifacts(_), None) => {
                 let (re1, im1) = self.local_fft(re.to_vec(), im.to_vec())?;
-                self.twiddle(re1, im1)?
+                let (re2, im2) = self.twiddle(re1, im1)?;
+                copy_plane("BspFft local FFT", &mut self.sc_re, &re2)?;
+                copy_plane("BspFft local FFT", &mut self.sc_im, &im2)?;
             }
-        };
-        // stage into the registered source window: [re | im]
-        bsp.write_local_at(self.src_reg, 0, &re2)?;
-        bsp.write_local_at(self.src_reg, self.m, &im2)?;
-        // step 3: redistribute — block r′ → process r′, landing at row r
-        for dst in 0..self.p {
-            let src_elem = dst as usize * blk;
-            let dst_elem = self.r as usize * blk;
-            bsp.hpput_at(dst, self.src_reg, src_elem, self.dst_reg, dst_elem, blk)?;
-            bsp.hpput_at(
-                dst,
+            (Backend::Native, _) => {
+                self.sc_re.copy_from_slice(re);
+                self.sc_im.copy_from_slice(im);
+                local::fft_in_place_post_mul(
+                    &self.plan_local,
+                    &mut self.sc_re,
+                    &mut self.sc_im,
+                    &self.tw_re,
+                    &self.tw_im,
+                )?;
+            }
+        }
+        // stage into the src window, block-pair layout [p][2][blk]
+        for d in 0..p {
+            bsp.write_local_at(self.src_reg, 2 * d * blk, &self.sc_re[d * blk..(d + 1) * blk])?;
+            bsp.write_local_at(
                 self.src_reg,
-                self.m + src_elem,
-                self.dst_reg,
-                self.m + dst_elem,
-                blk,
+                (2 * d + 1) * blk,
+                &self.sc_im[d * blk..(d + 1) * blk],
             )?;
         }
+        // step 3: redistribute — block pair d → process d, landing at row
+        // r. The two puts of each pair cover contiguous source and
+        // destination ranges, so the engine coalesces them to one wire
+        // descriptor per destination.
+        let home = 2 * self.r as usize * blk;
+        for d in 0..self.p {
+            let s = 2 * d as usize * blk;
+            bsp.hpput_at(d, self.src_reg, s, self.dst_reg, home, blk)?;
+            bsp.hpput_at(d, self.src_reg, s + blk, self.dst_reg, home + blk, blk)?;
+        }
         bsp.sync()?;
-        // gather [p][blk] rows, transpose to [blk][p]
-        let mut rows_re = vec![0f32; self.m];
-        let mut rows_im = vec![0f32; self.m];
-        bsp.read_local_at(self.dst_reg, 0, &mut rows_re)?;
-        bsp.read_local_at(self.dst_reg, self.m, &mut rows_im)?;
-        let mut t_re = vec![0f32; self.m];
-        let mut t_im = vec![0f32; self.m];
-        for j1 in 0..p {
-            for k2 in 0..blk {
-                t_re[k2 * p + j1] = rows_re[j1 * blk + k2];
-                t_im[k2 * p + j1] = rows_im[j1 * blk + k2];
+        // gather the landed [p][2][blk] rows into the scratch planes
+        for j in 0..p {
+            bsp.read_local_at(
+                self.dst_reg,
+                2 * j * blk,
+                &mut self.sc_re[j * blk..(j + 1) * blk],
+            )?;
+            bsp.read_local_at(
+                self.dst_reg,
+                (2 * j + 1) * blk,
+                &mut self.sc_im[j * blk..(j + 1) * blk],
+            )?;
+        }
+        // step 4: blk strided length-p FFTs over the rows; the output
+        // transpose to [m/p][p] is fused into the kernel's final stage
+        match &self.backend {
+            Backend::Native => {
+                let plan_p = self
+                    .plan_p
+                    .as_ref()
+                    .ok_or_else(|| LpfError::Illegal("BspFft: missing length-p plan".into()))?;
+                local::fft_batch_strided_out(
+                    plan_p,
+                    &mut self.sc_re,
+                    &mut self.sc_im,
+                    blk,
+                    blk,
+                    out_re,
+                    out_im,
+                )
+            }
+            Backend::Artifacts(rt) => {
+                // the batch artifact consumes the transposed [blk][p] rows
+                let mut t_re = vec![0f32; self.m];
+                let mut t_im = vec![0f32; self.m];
+                for j1 in 0..p {
+                    for k2 in 0..blk {
+                        t_re[k2 * p + j1] = self.sc_re[j1 * blk + k2];
+                        t_im[k2 * p + j1] = self.sc_im[j1 * blk + k2];
+                    }
+                }
+                let out = rt.run(
+                    &format!("fft_batch_{blk}x{p}"),
+                    vec![Tensor::F32(t_re), Tensor::F32(t_im)],
+                )?;
+                let mut it = out.into_iter();
+                let o_re = it.next().unwrap().into_f32()?;
+                let o_im = it.next().unwrap().into_f32()?;
+                copy_plane("BspFft batch FFT", out_re, &o_re)?;
+                copy_plane("BspFft batch FFT", out_im, &o_im)?;
+                Ok(())
             }
         }
-        // step 4: length-p FFTs
-        self.batch_fft_p(t_re, t_im)
     }
 
     /// Where `out[local]` lives in the global spectrum: process `r` row
@@ -292,75 +471,200 @@ mod tests {
     use super::*;
     use crate::core::Args;
     use crate::ctx::{exec, Platform, Root};
+    use crate::fft::baseline;
+    use crate::pool::Pool;
     use crate::util::rng::XorShift64;
 
-    /// Distributed BSP FFT (native backend) vs single-node rust FFT.
-    #[test]
-    fn bsp_fft_matches_serial() {
-        let p: u32 = 4;
-        let n: usize = 256;
-        // global input
-        let mut rng = XorShift64::new(42);
-        let g_re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
-        let g_im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
-        let plan = FftPlan::new(n).unwrap();
-        let (want_re, want_im) = local::fft(&plan, &g_re, &g_im).unwrap();
+    fn rand_planes(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift64::new(seed);
+        let re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        let im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        (re, im)
+    }
 
-        let root = Root::new(Platform::shared().checked(true)).with_max_procs(p);
-        let g_re2 = g_re.clone();
-        let g_im2 = g_im.clone();
+    /// One cell of the verification grid: distributed BSP FFT (native
+    /// backend) vs the serial radix-2 oracle, on a pool — job 0 runs on
+    /// the cold team, job 1 on the warm reused team, and each job checks
+    /// both a cold and a steady-state `run` of the same `BspFft`.
+    fn grid_case(platform: Platform, p: u32, n: usize) {
+        let (g_re, g_im) = rand_planes(n, 0xF17 + p as u64);
+        let plan = FftPlan::new(n).unwrap();
+        let (want_re, want_im) = baseline::fft_radix2(&plan, &g_re, &g_im).unwrap();
+        let pool = Pool::new(platform, p);
+        let g_re = Arc::new(g_re);
+        let g_im = Arc::new(g_im);
+        for job in 0..2u32 {
+            let (gr, gi) = (g_re.clone(), g_im.clone());
+            let outs = pool
+                .exec(
+                    move |ctx, _| {
+                        let r = ctx.pid();
+                        let pp = ctx.p();
+                        let m = n / pp as usize;
+                        let mut bsp = Bsp::begin(ctx, 8, 4 * pp as usize + 8).unwrap();
+                        bsp.sync().unwrap();
+                        let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+                        bsp.sync().unwrap(); // activate the fft's registrations
+                        let re: Vec<f32> =
+                            (0..m).map(|j| gr[r as usize + pp as usize * j]).collect();
+                        let im: Vec<f32> =
+                            (0..m).map(|j| gi[r as usize + pp as usize * j]).collect();
+                        // cold run, then a steady-state run into reused planes
+                        let (c_re, c_im) = fft.run(&mut bsp, &re, &im).unwrap();
+                        let mut o_re = vec![0f32; m];
+                        let mut o_im = vec![0f32; m];
+                        fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                        for k in 0..m {
+                            let drift =
+                                (c_re[k] - o_re[k]).abs().max((c_im[k] - o_im[k]).abs());
+                            assert!(drift < 1e-6, "warm run diverged from cold at {k}");
+                        }
+                        let blk = m / pp as usize;
+                        let mut triples = Vec::new();
+                        for k2 in 0..blk {
+                            for k1 in 0..pp as usize {
+                                triples.push((
+                                    fft.global_index(k2, k1),
+                                    o_re[k2 * pp as usize + k1],
+                                    o_im[k2 * pp as usize + k1],
+                                ));
+                            }
+                        }
+                        bsp.end().unwrap();
+                        triples
+                    },
+                    Args::none(),
+                )
+                .unwrap();
+            let mut got_re = vec![0f32; n];
+            let mut got_im = vec![0f32; n];
+            for triples in outs {
+                for (gidx, re, im) in triples {
+                    got_re[gidx] = re;
+                    got_im[gidx] = im;
+                }
+            }
+            let tol = 1e-3 * (n as f32).sqrt();
+            for k in 0..n {
+                assert!(
+                    (got_re[k] - want_re[k]).abs() < tol,
+                    "job {job} re[{k}]: {} vs {}",
+                    got_re[k],
+                    want_re[k]
+                );
+                assert!((got_im[k] - want_im[k]).abs() < tol, "job {job} im[{k}]");
+            }
+        }
+    }
+
+    /// The {p ∈ 1,2,4,8} × {shared, rdma} × {cold, warm-pool} grid.
+    #[test]
+    fn bsp_fft_matches_serial_grid() {
+        let n = 512; // divisible by p² for every p in the grid
+        for p in [1u32, 2, 4, 8] {
+            grid_case(Platform::shared().checked(true), p, n);
+            grid_case(Platform::rdma(), p, n);
+        }
+    }
+
+    /// `p = 1` must degrade to a plain local FFT — no redistribution
+    /// superstep, no panic (regression: `plan_p.expect("p >= 2")`).
+    #[test]
+    fn p1_degrades_to_plain_local_fft() {
+        let n = 128;
+        let (g_re, g_im) = rand_planes(n, 7);
+        let plan = FftPlan::new(n).unwrap();
+        let (want_re, want_im) = baseline::fft_radix2(&plan, &g_re, &g_im).unwrap();
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(1);
+        let (g_re2, g_im2) = (g_re.clone(), g_im.clone());
         let outs = exec(
             &root,
-            p,
+            1,
             move |ctx, _| {
-                let r = ctx.pid();
-                let pp = ctx.p();
-                let mut bsp = Bsp::begin(ctx, 8, 8 * pp as usize).unwrap();
+                let mut bsp = Bsp::begin(ctx, 8, 16).unwrap();
                 bsp.sync().unwrap();
-                let fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
-                bsp.sync().unwrap(); // activate the fft's registrations
-                // my cyclic slice
-                let m = n / pp as usize;
-                let re: Vec<f32> = (0..m).map(|j| g_re2[r as usize + pp as usize * j]).collect();
-                let im: Vec<f32> = (0..m).map(|j| g_im2[r as usize + pp as usize * j]).collect();
-                let (o_re, o_im) = fft.run(&mut bsp, &re, &im).unwrap();
-                // map to global indices
-                let blk = m / pp as usize;
-                let mut triples = Vec::new();
-                for k2 in 0..blk {
-                    for k1 in 0..pp as usize {
-                        triples.push((
-                            fft.global_index(k2, k1),
-                            o_re[k2 * pp as usize + k1],
-                            o_im[k2 * pp as usize + k1],
-                        ));
-                    }
-                }
+                let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+                bsp.sync().unwrap();
+                let syncs_before = bsp.lpf().stats().syncs;
+                let (o_re, o_im) = fft.run(&mut bsp, &g_re2, &g_im2).unwrap();
+                let syncs_after = bsp.lpf().stats().syncs;
                 bsp.end().unwrap();
-                triples
+                (o_re, o_im, syncs_after - syncs_before)
             },
             Args::none(),
         )
         .unwrap();
-
-        let mut got_re = vec![0f32; n];
-        let mut got_im = vec![0f32; n];
-        for triples in outs {
-            for (gidx, re, im) in triples {
-                got_re[gidx] = re;
-                got_im[gidx] = im;
-            }
-        }
+        let (o_re, o_im, extra_syncs) = &outs[0];
+        assert_eq!(*extra_syncs, 0, "p=1 must not cost a superstep");
         let tol = 1e-3 * (n as f32).sqrt();
         for k in 0..n {
-            assert!(
-                (got_re[k] - want_re[k]).abs() < tol,
-                "re[{k}]: {} vs {}",
-                got_re[k],
-                want_re[k]
-            );
-            assert!((got_im[k] - want_im[k]).abs() < tol, "im[{k}]");
+            assert!((o_re[fft_out_idx(k)] - want_re[k]).abs() < tol, "re[{k}]");
+            assert!((o_im[fft_out_idx(k)] - want_im[k]).abs() < tol, "im[{k}]");
         }
+        // p = 1: global index k2 maps straight through
+        fn fft_out_idx(k: usize) -> usize {
+            k
+        }
+    }
+
+    /// A failing registration mid-constructor must roll back the earlier
+    /// one (regression: `src_reg` leaked when `dst_reg` failed).
+    #[test]
+    fn constructor_rolls_back_partial_registrations() {
+        let root = Root::new(Platform::shared()).with_max_procs(2);
+        exec(
+            &root,
+            2,
+            |ctx, _| {
+                // capacity: staging + exactly one free slot, so the
+                // second window registration must fail
+                let mut bsp = Bsp::begin(ctx, 1, 16).unwrap();
+                bsp.sync().unwrap();
+                assert!(BspFft::new(&mut bsp, 8, Backend::Native).is_err());
+                // rollback freed the slot: a fresh registration succeeds
+                let reg = bsp.push_reg_of::<f32>(4).unwrap();
+                bsp.sync().unwrap();
+                bsp.pop_reg_of(reg).unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    /// The 2p redistribution puts must leave p wire descriptors: each
+    /// destination's plane pair is contiguous on both sides, so the PR-2
+    /// engine coalescing merges it.
+    #[test]
+    fn redistribution_pairs_coalesce_on_the_wire() {
+        let p: u32 = 4;
+        let n: usize = 256;
+        let root = Root::new(Platform::shared()).with_max_procs(p);
+        exec(
+            &root,
+            p,
+            move |ctx, _| {
+                let pp = ctx.p();
+                let m = n / pp as usize;
+                let mut bsp = Bsp::begin(ctx, 8, 4 * pp as usize + 8).unwrap();
+                bsp.sync().unwrap();
+                let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+                bsp.sync().unwrap();
+                let (re, im) = rand_planes(m, 3);
+                let _ = fft.run(&mut bsp, &re, &im).unwrap(); // warm
+                let before = bsp.lpf().stats();
+                let _ = fft.run(&mut bsp, &re, &im).unwrap();
+                let after = bsp.lpf().stats();
+                assert_eq!(after.syncs - before.syncs, 1, "one redistribution superstep");
+                assert_eq!(
+                    after.msgs_out - before.msgs_out,
+                    pp as u64,
+                    "2p puts must coalesce to p descriptors"
+                );
+                bsp.end().unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap();
     }
 
     #[test]
@@ -375,6 +679,36 @@ mod tests {
                 assert!(BspFft::new(&mut bsp, 100, Backend::Native).is_err());
                 // m = 8/4 = 2 not divisible by 4:
                 assert!(BspFft::new(&mut bsp, 8, Backend::Native).is_err());
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    /// Mismatched input/output plane lengths are `Illegal`, not panics.
+    #[test]
+    fn run_rejects_bad_plane_lengths() {
+        let root = Root::new(Platform::shared()).with_max_procs(2);
+        exec(
+            &root,
+            2,
+            |ctx, _| {
+                let mut bsp = Bsp::begin(ctx, 8, 16).unwrap();
+                bsp.sync().unwrap();
+                let mut fft = BspFft::new(&mut bsp, 16, Backend::Native).unwrap();
+                bsp.sync().unwrap();
+                let short = vec![0f32; 3];
+                let ok = vec![0f32; 8];
+                assert!(fft.run(&mut bsp, &short, &ok).is_err());
+                let mut out_short = vec![0f32; 3];
+                let mut out_ok = vec![0f32; 8];
+                let (mut o1, mut o2) = (vec![0f32; 8], vec![0f32; 8]);
+                assert!(fft
+                    .run_into(&mut bsp, &ok, &ok, &mut out_short, &mut out_ok)
+                    .is_err());
+                // a well-formed call still works afterwards
+                fft.run_into(&mut bsp, &ok, &ok, &mut o1, &mut o2).unwrap();
+                bsp.end().unwrap();
             },
             Args::none(),
         )

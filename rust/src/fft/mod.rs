@@ -1,16 +1,23 @@
-//! The immortal FFT (paper §4.2) and its baselines.
+//! The immortal FFT (paper §4.2), its kernels and its baselines.
 //!
-//! * [`plan`] — per-size tables (bit-reverse permutation, stage twiddles,
-//!   redistribution twiddles) shared by every process; mirrors
+//! * [`plan`] — per-size tables (bit-reverse permutation, radix-2 and
+//!   radix-4 stage twiddles, redistribution twiddles) shared process-wide
+//!   through a [`plan::PlanCache`]; the radix-2 layout mirrors
 //!   `python/compile/model.fft_tables` bit-for-bit (pinned by tests).
-//! * [`local`] — a pure-Rust iterative radix-2 FFT: the "portable library"
-//!   baseline (FFTW proxy) and the oracle for integration tests.
+//! * [`local`] — the native kernel suite: cache-blocked radix-4 (+
+//!   radix-2 parity cleanup) DIT over split planes, with fused
+//!   post-twiddle and strided/batched variants. The oracle for
+//!   integration tests.
 //! * [`bsp`] — the Inda–Bisseling BSP FFT over LPF, with process-local
-//!   compute executed through PJRT artifacts (the paper's HPBSP FFT ran
-//!   its local FFTs through FFTW/MKL; ours run through the Pallas-built
-//!   XLA artifacts). Runs through the BSPlib layer, as the paper's did.
-//! * [`baseline`] — the "vendor library" baseline: one fused XLA FFT
-//!   artifact for the whole vector (MKL proxy).
+//!   compute on the native kernels or through PJRT artifacts (the paper's
+//!   HPBSP FFT ran its local FFTs through FFTW/MKL; ours run through the
+//!   Pallas-built XLA artifacts). Runs through the BSPlib layer, as the
+//!   paper's did; steady-state runs are allocation-free on the native
+//!   path (see `docs/fft.md`).
+//! * [`baseline`] — the retained scalar radix-2 kernel (correctness
+//!   oracle + `bench_fft` speedup denominator) and the Fig.-3 proxies:
+//!   portable (FFTW stand-in) and vendor (one fused XLA FFT artifact,
+//!   MKL stand-in).
 
 pub mod baseline;
 pub mod bsp;

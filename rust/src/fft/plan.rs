@@ -5,6 +5,22 @@
 //! * `perm[i]` — bit-reverse of `i` over `log2 n` bits;
 //! * `tw_re/tw_im[2^s − 1 .. 2^{s+1} − 1]` — stage-`s` twiddles
 //!   `exp(−iπk/2^s)`, `k ∈ [0, 2^s)`.
+//!
+//! The permutation is `u32` internally (a `Vec<i32>` would overflow
+//! silently past `n = 2^31`); the `model.fft_tables` contract keeps the
+//! i32 layout only at the artifact-tensor boundary, via
+//! [`FftPlan::perm_i32`].
+//!
+//! On top of the radix-2 contract tables, a plan carries the radix-4
+//! stage tables that the rebuilt native kernel (`fft::local`) consumes:
+//! per fused radix-4 stage of quarter-size `q`, the pair
+//! `(w1, w2) = (exp(−iπk/q), exp(−iπk/2q))` interleaved per butterfly
+//! index `k` — the third classic radix-4 twiddle `w3 = −i·w2` is a
+//! coordinate swap and is never materialised. All angles are evaluated in
+//! `f64` before narrowing to the stored `f32` (§ISSUE-5 tentpole).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::core::{LpfError, Result};
 
@@ -14,10 +30,18 @@ pub struct FftPlan {
     /// Transform size (power of two).
     pub n: usize,
     /// Bit-reverse permutation, `[n]`.
-    pub perm: Vec<i32>,
-    /// Concatenated stage twiddles, `[n − 1]` each plane.
+    pub perm: Vec<u32>,
+    /// Concatenated radix-2 stage twiddles, `[n − 1]` each plane (the
+    /// `model.fft_tables` contract layout; consumed by the retained
+    /// baseline kernel and the PJRT artifacts).
     pub tw_re: Vec<f32>,
     pub tw_im: Vec<f32>,
+    /// Concatenated radix-4 stage twiddles: stages in execution order
+    /// (quarter-size `q = q0, 4q0, …, n/4` with `q0 ∈ {1, 2}` fixing the
+    /// log2-parity), each contributing `2q` interleaved `(w1, w2)`
+    /// entries per plane. Empty for `n = 2`.
+    pub r4_re: Vec<f32>,
+    pub r4_im: Vec<f32>,
 }
 
 impl FftPlan {
@@ -27,13 +51,13 @@ impl FftPlan {
             return Err(LpfError::Illegal(format!("FFT size {n} is not a power of two ≥ 2")));
         }
         let bits = n.trailing_zeros();
-        let mut perm = vec![0i32; n];
+        let mut perm = vec![0u32; n];
         for (i, q) in perm.iter_mut().enumerate() {
             let mut r = 0usize;
             for b in 0..bits {
                 r |= ((i >> b) & 1) << (bits - 1 - b);
             }
-            *q = r as i32;
+            *q = r as u32;
         }
         let mut tw_re = vec![0f32; n - 1];
         let mut tw_im = vec![0f32; n - 1];
@@ -48,7 +72,44 @@ impl FftPlan {
             off += m;
             m <<= 1;
         }
-        Ok(FftPlan { n, perm, tw_re, tw_im })
+        // radix-4 stage tables: (w1, w2) interleaved per k, f64-computed
+        let mut r4_re = Vec::new();
+        let mut r4_im = Vec::new();
+        let mut q = if bits % 2 == 1 { 2usize } else { 1usize };
+        while 4 * q <= n {
+            r4_re.reserve(2 * q);
+            r4_im.reserve(2 * q);
+            for k in 0..q {
+                let a1 = -std::f64::consts::PI * k as f64 / q as f64;
+                let a2 = -std::f64::consts::PI * k as f64 / (2.0 * q as f64);
+                r4_re.push(a1.cos() as f32);
+                r4_re.push(a2.cos() as f32);
+                r4_im.push(a1.sin() as f32);
+                r4_im.push(a2.sin() as f32);
+            }
+            q *= 4;
+        }
+        Ok(FftPlan { n, perm, tw_re, tw_im, r4_re, r4_im })
+    }
+
+    /// Shared plan from the process-wide [`PlanCache`]: repeated sizes
+    /// share one immutable table set across `BspFft` instances, pools and
+    /// threads.
+    pub fn cached(n: usize) -> Result<Arc<FftPlan>> {
+        PlanCache::get(n)
+    }
+
+    /// The permutation in the `model.fft_tables` i32 layout — only for the
+    /// artifact-tensor boundary. Sizes past `i32::MAX` (where a `Vec<i32>`
+    /// permutation would wrap) are rejected instead of truncated.
+    pub fn perm_i32(&self) -> Result<Vec<i32>> {
+        if self.n > i32::MAX as usize {
+            return Err(LpfError::Illegal(format!(
+                "FFT size {} exceeds the i32 artifact-tensor permutation layout",
+                self.n
+            )));
+        }
+        Ok(self.perm.iter().map(|&x| x as i32).collect())
     }
 
     /// The BSP redistribution twiddles for process `r` of `p` over global
@@ -67,6 +128,42 @@ impl FftPlan {
     }
 }
 
+/// Process-wide plan cache: one immutable [`FftPlan`] per size, shared by
+/// every consumer (`BspFft`, baselines, benches). Plans are a few × `n`
+/// floats; repeated `BspFft::new` calls for hot sizes must not rebuild or
+/// re-own them.
+pub struct PlanCache;
+
+static PLANS: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+
+fn plans() -> &'static Mutex<HashMap<usize, Arc<FftPlan>>> {
+    PLANS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+impl PlanCache {
+    /// The shared plan for size `n`, building it on first request.
+    pub fn get(n: usize) -> Result<Arc<FftPlan>> {
+        if let Some(p) = plans().lock().expect("plan cache poisoned").get(&n) {
+            return Ok(p.clone());
+        }
+        // build outside the lock: table construction is O(n log n) and
+        // must not serialise unrelated sizes behind it
+        let built = Arc::new(FftPlan::new(n)?);
+        let mut map = plans().lock().expect("plan cache poisoned");
+        Ok(map.entry(n).or_insert(built).clone())
+    }
+
+    /// Number of distinct sizes currently cached.
+    pub fn len() -> usize {
+        plans().lock().expect("plan cache poisoned").len()
+    }
+
+    /// Drop every cached plan (outstanding `Arc`s stay valid).
+    pub fn clear() {
+        plans().lock().expect("plan cache poisoned").clear();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,6 +172,7 @@ mod tests {
     fn perm_matches_python_contract_for_8() {
         let p = FftPlan::new(8).unwrap();
         assert_eq!(p.perm, vec![0, 4, 2, 6, 1, 5, 3, 7]);
+        assert_eq!(p.perm_i32().unwrap(), vec![0, 4, 2, 6, 1, 5, 3, 7]);
     }
 
     #[test]
@@ -89,10 +187,43 @@ mod tests {
     }
 
     #[test]
+    fn radix4_tables_cover_all_stages() {
+        // even log2: stages q = 1, 4, …, n/4, each 2q entries
+        let p = FftPlan::new(64).unwrap();
+        assert_eq!(p.r4_re.len(), 2 * (1 + 4 + 16));
+        // odd log2: the m=1 radix-2 parity stage is table-free
+        let p = FftPlan::new(32).unwrap();
+        assert_eq!(p.r4_re.len(), 2 * (2 + 8));
+        // n = 2 has no radix-4 stage at all
+        let p = FftPlan::new(2).unwrap();
+        assert!(p.r4_re.is_empty());
+        // every radix-4 twiddle is unit-magnitude
+        let p = FftPlan::new(256).unwrap();
+        for (re, im) in p.r4_re.iter().zip(&p.r4_im) {
+            assert!((re * re + im * im - 1.0).abs() < 1e-6);
+        }
+        // the (w1, w2) pair of stage q=2, k=1: w1 = exp(-iπ/2) = -i,
+        // w2 = exp(-iπ/4)
+        let p = FftPlan::new(8).unwrap();
+        assert!(p.r4_re[2].abs() < 1e-7 && (p.r4_im[2] + 1.0).abs() < 1e-7);
+        let s = 1.0 / 2f32.sqrt();
+        assert!((p.r4_re[3] - s).abs() < 1e-6 && (p.r4_im[3] + s).abs() < 1e-6);
+    }
+
+    #[test]
     fn rejects_bad_sizes() {
         assert!(FftPlan::new(0).is_err());
         assert!(FftPlan::new(1).is_err());
         assert!(FftPlan::new(12).is_err());
+    }
+
+    #[test]
+    fn plan_cache_shares_tables() {
+        let a = FftPlan::cached(1 << 9).unwrap();
+        let b = FftPlan::cached(1 << 9).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "repeated sizes must share one plan");
+        assert!(PlanCache::len() >= 1);
+        assert!(FftPlan::cached(12).is_err());
     }
 
     #[test]

@@ -47,7 +47,7 @@ fn bsp_fft_with_artifacts_matches_serial() {
             let m = n / pp as usize;
             let mut bsp = Bsp::begin(ctx, 8, 4 * pp as usize + 8).unwrap();
             bsp.sync().unwrap();
-            let fft = BspFft::new(&mut bsp, n, Backend::Artifacts(rt.clone())).unwrap();
+            let mut fft = BspFft::new(&mut bsp, n, Backend::Artifacts(rt.clone())).unwrap();
             bsp.sync().unwrap();
             let re: Vec<f32> = (0..m).map(|j| re2[r as usize + pp as usize * j]).collect();
             let im: Vec<f32> = (0..m).map(|j| im2[r as usize + pp as usize * j]).collect();

@@ -1,0 +1,238 @@
+//! Property tests for the rebuilt FFT kernel suite: the cache-blocked
+//! radix-4 native kernel vs the naive-DFT oracle and the retained radix-2
+//! baseline, the fused post-twiddle epilogue, and the strided/batched
+//! kernels across shapes (ISSUE-5 test-coverage satellite).
+
+use lpf::fft::baseline;
+use lpf::fft::local;
+use lpf::fft::plan::FftPlan;
+use lpf::util::rng::XorShift64;
+
+fn rand_planes(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = XorShift64::new(seed);
+    let re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+    let im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+    (re, im)
+}
+
+/// Max |a - b| over both planes.
+fn max_err(ar: &[f32], ai: &[f32], br: &[f32], bi: &[f32]) -> f32 {
+    ar.iter()
+        .zip(br)
+        .chain(ai.iter().zip(bi))
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max)
+}
+
+/// Rounding tolerance for size n (errors grow ~sqrt(log n) per plane, the
+/// input is O(1) per element so spectra are O(sqrt n)).
+fn tol(n: usize) -> f32 {
+    1e-5 * (n as f32).sqrt().max(1.0) * (n as f32).log2().max(1.0)
+}
+
+#[test]
+fn radix4_matches_naive_dft_small() {
+    for bits in 1..=10u32 {
+        let n = 1usize << bits;
+        let plan = FftPlan::new(n).unwrap();
+        let (re, im) = rand_planes(n, 100 + bits as u64);
+        let (fr, fi) = local::fft(&plan, &re, &im).unwrap();
+        let (dr, di) = local::dft_naive(&re, &im);
+        assert!(
+            max_err(&fr, &fi, &dr, &di) < 1e-2 * (n as f32).sqrt(),
+            "radix-4 vs naive DFT diverged at n={n}"
+        );
+    }
+}
+
+#[test]
+fn radix4_matches_radix2_baseline_up_to_2p16() {
+    // covers both log2 parities and both the single-block and the
+    // blocked (n > 2^13) code paths
+    for bits in [1u32, 2, 3, 5, 8, 11, 12, 13, 14, 15, 16] {
+        let n = 1usize << bits;
+        let plan = FftPlan::new(n).unwrap();
+        let (re, im) = rand_planes(n, 7 + bits as u64);
+        let (fr, fi) = local::fft(&plan, &re, &im).unwrap();
+        let (br, bi) = baseline::fft_radix2(&plan, &re, &im).unwrap();
+        assert!(
+            max_err(&fr, &fi, &br, &bi) < tol(n),
+            "radix-4 vs radix-2 diverged at n={n} (err {})",
+            max_err(&fr, &fi, &br, &bi)
+        );
+    }
+}
+
+#[test]
+fn fused_post_twiddle_equals_fft_then_mul() {
+    // 14 and 15 exceed one cache block (2^12 even / 2^13 odd), so the
+    // post-multiply runs in the streaming top-stage path there — the
+    // large-m production regime — not the blocked bottom loop
+    for bits in [1u32, 2, 4, 7, 10, 13, 14, 15] {
+        let n = 1usize << bits;
+        let plan = FftPlan::new(n).unwrap();
+        let (re, im) = rand_planes(n, 21 + bits as u64);
+        // a unit-magnitude twiddle table (the BSP use) plus a generic one
+        for (tw_seed, unit) in [(1u64, true), (2u64, false)] {
+            let mut rng = XorShift64::new(tw_seed);
+            let mut tw_re = vec![0f32; n];
+            let mut tw_im = vec![0f32; n];
+            for k in 0..n {
+                if unit {
+                    let ang = 2.0 * std::f64::consts::PI * rng.unit_f64();
+                    tw_re[k] = ang.cos() as f32;
+                    tw_im[k] = ang.sin() as f32;
+                } else {
+                    tw_re[k] = rng.unit_f64() as f32 - 0.5;
+                    tw_im[k] = rng.unit_f64() as f32 - 0.5;
+                }
+            }
+            let mut fr = re.clone();
+            let mut fi = im.clone();
+            local::fft_in_place_post_mul(&plan, &mut fr, &mut fi, &tw_re, &tw_im).unwrap();
+            let (xr, xi) = local::fft(&plan, &re, &im).unwrap();
+            let want_re: Vec<f32> = (0..n).map(|k| xr[k] * tw_re[k] - xi[k] * tw_im[k]).collect();
+            let want_im: Vec<f32> = (0..n).map(|k| xr[k] * tw_im[k] + xi[k] * tw_re[k]).collect();
+            assert!(
+                max_err(&fr, &fi, &want_re, &want_im) < tol(n),
+                "fused post-twiddle diverged at n={n}"
+            );
+        }
+    }
+}
+
+/// Gather transform `t` out of the strided layout.
+fn gather(buf: &[f32], n: usize, stride: usize, t: usize) -> Vec<f32> {
+    (0..n).map(|j| buf[j * stride + t]).collect()
+}
+
+#[test]
+fn batch_strided_matches_per_row_ffts() {
+    let shapes =
+        [(2usize, 3usize, 5usize), (4, 4, 4), (8, 16, 16), (16, 7, 9), (64, 32, 32)];
+    for &(n, count, stride) in &shapes {
+        let plan = FftPlan::new(n).unwrap();
+        let len = (n - 1) * stride + count;
+        let (re0, im0) = rand_planes(len, (n * 31 + count) as u64);
+        let mut re = re0.clone();
+        let mut im = im0.clone();
+        local::fft_batch_strided(&plan, &mut re, &mut im, count, stride).unwrap();
+        for t in 0..count {
+            let (wr, wi) =
+                local::fft(&plan, &gather(&re0, n, stride, t), &gather(&im0, n, stride, t))
+                    .unwrap();
+            let gr = gather(&re, n, stride, t);
+            let gi = gather(&im, n, stride, t);
+            assert!(
+                max_err(&gr, &gi, &wr, &wi) < tol(n),
+                "batch strided diverged at n={n} count={count} stride={stride} t={t}"
+            );
+        }
+        // the kernel may only touch columns t < count of each row;
+        // the tail columns must come through bit-identical
+        for j in 0..n {
+            for t in count..stride.min(len - j * stride) {
+                let idx = j * stride + t;
+                assert_eq!(re[idx], re0[idx], "re column {t} of row {j} was clobbered");
+                assert_eq!(im[idx], im0[idx], "im column {t} of row {j} was clobbered");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_strided_out_is_the_transposed_batch() {
+    let shapes =
+        [(2usize, 3usize, 5usize), (4, 4, 4), (8, 16, 16), (16, 7, 9), (64, 32, 32)];
+    for &(n, count, stride) in &shapes {
+        let plan = FftPlan::new(n).unwrap();
+        let len = (n - 1) * stride + count;
+        let (re0, im0) = rand_planes(len, (n * 17 + count) as u64);
+        let mut out_re = vec![0f32; count * n];
+        let mut out_im = vec![0f32; count * n];
+        let mut re = re0.clone();
+        let mut im = im0.clone();
+        let (o_r, o_i) = (&mut out_re, &mut out_im);
+        local::fft_batch_strided_out(&plan, &mut re, &mut im, count, stride, o_r, o_i)
+            .unwrap();
+        for t in 0..count {
+            let (wr, wi) =
+                local::fft(&plan, &gather(&re0, n, stride, t), &gather(&im0, n, stride, t))
+                    .unwrap();
+            let gr = &out_re[t * n..(t + 1) * n];
+            let gi = &out_im[t * n..(t + 1) * n];
+            assert!(
+                max_err(gr, gi, &wr, &wi) < tol(n),
+                "batch strided out diverged at n={n} count={count} stride={stride} t={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_strided_count_zero_is_a_noop() {
+    let plan = FftPlan::new(8).unwrap();
+    let mut re = vec![1f32; 32];
+    let mut im = vec![2f32; 32];
+    local::fft_batch_strided(&plan, &mut re, &mut im, 0, 4).unwrap();
+    assert!(re.iter().all(|&x| x == 1.0) && im.iter().all(|&x| x == 2.0));
+}
+
+#[test]
+fn batch_strided_rejects_bad_shapes_without_panicking() {
+    let plan = FftPlan::new(8).unwrap();
+    let mut re = vec![0f32; 64];
+    let mut im = vec![0f32; 64];
+    // count > stride
+    assert!(local::fft_batch_strided(&plan, &mut re, &mut im, 9, 8).is_err());
+    // planes too short for the strided extent
+    assert!(local::fft_batch_strided(&plan, &mut re, &mut im, 8, 16).is_err());
+    // output too short
+    let mut o1 = vec![0f32; 8];
+    let mut o2 = vec![0f32; 8];
+    assert!(
+        local::fft_batch_strided_out(&plan, &mut re, &mut im, 8, 8, &mut o1, &mut o2).is_err()
+    );
+}
+
+/// Regression (ISSUE-5 satellite 1): the pre-rebuild kernel used
+/// `assert_eq!` on the input lengths despite returning `Result` — every
+/// kernel must report `Illegal` instead of panicking.
+#[test]
+fn all_kernels_reject_length_mismatch_as_illegal() {
+    let plan = FftPlan::new(16).unwrap();
+    let mut short = vec![0f32; 8];
+    let mut ok = vec![0f32; 16];
+    assert!(local::fft_in_place(&plan, &mut short, &mut ok).is_err());
+    assert!(local::fft_in_place(&plan, &mut ok, &mut short).is_err());
+    assert!(baseline::fft_radix2_in_place(&plan, &mut short, &mut ok).is_err());
+    let tw = vec![0f32; 8];
+    assert!(local::fft_in_place_post_mul(&plan, &mut ok, &mut ok.clone(), &tw, &tw).is_err());
+}
+
+#[test]
+fn plan_cache_is_shared_and_kernels_agree_through_it() {
+    let a = FftPlan::cached(256).unwrap();
+    let b = FftPlan::cached(256).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    let (re, im) = rand_planes(256, 5);
+    let (fr, fi) = local::fft(&a, &re, &im).unwrap();
+    let (br, bi) = baseline::fft_radix2(&b, &re, &im).unwrap();
+    assert!(max_err(&fr, &fi, &br, &bi) < tol(256));
+}
+
+/// The widened permutation (ISSUE-5 satellite 4): `perm` is `u32` end to
+/// end; the i32 layout survives only through `perm_i32` for the
+/// artifact-tensor boundary, which must refuse (not wrap) oversized n.
+#[test]
+fn perm_is_u32_with_i32_only_at_the_artifact_boundary() {
+    let plan = FftPlan::new(1 << 16).unwrap();
+    let max = *plan.perm.iter().max().unwrap();
+    assert_eq!(max as usize, (1 << 16) - 1);
+    let as_i32 = plan.perm_i32().unwrap();
+    assert_eq!(as_i32.len(), 1 << 16);
+    assert!(as_i32.iter().all(|&v| v >= 0));
+    // the type itself is the regression guard: a Vec<i32> permutation
+    // cannot represent indices past 2^31
+    let _typed: &Vec<u32> = &plan.perm;
+}

@@ -47,7 +47,7 @@ fn fft_local_artifact_matches_rust_fft() {
             vec![
                 Tensor::F32(re.clone()),
                 Tensor::F32(im.clone()),
-                Tensor::I32(plan.perm.clone()),
+                Tensor::I32(plan.perm_i32().unwrap()),
                 Tensor::F32(plan.tw_re.clone()),
                 Tensor::F32(plan.tw_im.clone()),
             ],
