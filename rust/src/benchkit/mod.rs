@@ -147,8 +147,51 @@ impl Samples {
         }
         let mut v = self.values.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
-        v[idx]
+        nearest_rank(&v, q)
+    }
+
+    /// The three tail quantiles every latency report in this repo uses,
+    /// from a single sort (the per-quantile [`percentile`](Samples::percentile)
+    /// calls each sort a fresh copy).
+    pub fn percentiles(&self) -> Percentiles {
+        percentiles_of(&self.values)
+    }
+}
+
+/// The standard latency-tail triple (nanoseconds, seconds — unit follows
+/// the input). Shared by `bench_exec`, `bench_serve`, and the serve-layer
+/// SLO tracker so "p99" means the same rank rule everywhere.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Percentiles {
+    /// Median (nearest-rank, i.e. the lower middle for even counts).
+    pub p50: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// 99.9th percentile.
+    pub p999: f64,
+}
+
+/// Nearest-rank quantile of an already-sorted slice.
+fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// p50/p99/p999 of `values` by the nearest-rank method, sorting one copy.
+/// NaN-filled for empty input.
+pub fn percentiles_of(values: &[f64]) -> Percentiles {
+    if values.is_empty() {
+        return Percentiles { p50: f64::NAN, p99: f64::NAN, p999: f64::NAN };
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Percentiles {
+        p50: nearest_rank(&v, 0.50),
+        p99: nearest_rank(&v, 0.99),
+        p999: nearest_rank(&v, 0.999),
     }
 }
 
@@ -284,6 +327,32 @@ mod tests {
         assert!(s.ci95() > 0.0);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.median(), 3.0);
+    }
+
+    #[test]
+    fn percentiles_match_per_quantile_calls() {
+        // unsorted, with duplicates and a heavy tail
+        let vals: Vec<f64> =
+            (0..1000).map(|i| ((i * 7919) % 1000) as f64).chain([5000.0, 9000.0]).collect();
+        let s = Samples::from(vals);
+        let pct = s.percentiles();
+        assert_eq!(pct.p50, s.percentile(0.50));
+        assert_eq!(pct.p99, s.percentile(0.99));
+        assert_eq!(pct.p999, s.percentile(0.999));
+        assert!(pct.p50 <= pct.p99 && pct.p99 <= pct.p999);
+    }
+
+    #[test]
+    fn percentiles_edge_cases() {
+        let empty = percentiles_of(&[]);
+        assert!(empty.p50.is_nan() && empty.p99.is_nan() && empty.p999.is_nan());
+        let one = percentiles_of(&[42.0]);
+        assert_eq!((one.p50, one.p99, one.p999), (42.0, 42.0, 42.0));
+        // nearest-rank on a small set picks real samples, never interpolates
+        let four = percentiles_of(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(four.p50, 2.0);
+        assert_eq!(four.p99, 4.0);
+        assert_eq!(four.p999, 4.0);
     }
 
     #[test]

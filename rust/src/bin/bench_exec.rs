@@ -136,15 +136,8 @@ struct Row {
 }
 
 fn row(job: &'static str, mode: &'static str, p: Pid, iters: u32, s: &Samples) -> Row {
-    Row {
-        job,
-        mode,
-        p,
-        iters,
-        jobs_per_sec: 1e9 / s.mean(),
-        p50_ns: s.percentile(0.50),
-        p99_ns: s.percentile(0.99),
-    }
+    let pct = s.percentiles();
+    Row { job, mode, p, iters, jobs_per_sec: 1e9 / s.mean(), p50_ns: pct.p50, p99_ns: pct.p99 }
 }
 
 // ---------------------------------------------------------------- checks

@@ -1,0 +1,512 @@
+//! bench_serve — the serving-front-door harness (ISSUE 6 tentpole).
+//!
+//! Drives the replicated KV tenant through [`lpf::serve::Serve`] and
+//! writes `BENCH_serve.json`:
+//!
+//! * **batching** — closed-loop pipelined throughput with `max_batch = 64`
+//!   vs `max_batch = 1` on identical traffic (the `ℓ`-amortisation the
+//!   cost model in `docs/serve.md` predicts);
+//! * **cold vs warm** — first-request latency on a fresh door vs the
+//!   steady-state median, per backend × p;
+//! * **rate sweeps** — quasi-open-loop driving at target request rates
+//!   (rejected requests are dropped, not retried), recording achieved
+//!   throughput, rejections, and per-class queue-wait / service
+//!   p50/p99/p999 from [`lpf::serve::ServeStats`]; the highest swept rate
+//!   that is served without rejections and within 10% of the offered
+//!   load is reported as `max_sustainable`, across {shared, rdma} × p.
+//!
+//! `--smoke` (CI) additionally asserts the tentpole's guarantees:
+//!
+//! * a steady-state batched KV dispatch performs **zero heap
+//!   allocations** (global-allocator counter) and **zero thread spawns**
+//!   — tickets, queues, batch buffers, registration storage (the slot
+//!   recycler), and latency rings are all preallocated;
+//! * batched throughput is **≥ 2×** unbatched throughput.
+//!
+//! Any violation exits non-zero and fails the CI job.
+//!
+//! Usage: `bench_serve [--smoke] [--out PATH]`
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use lpf::benchkit::{alloc_counter, json_f64, Samples};
+use lpf::core::Pid;
+use lpf::ctx::Platform;
+use lpf::serve::kv::{KvOp, KvTenant, KV_VAL};
+use lpf::serve::{
+    ClassConfig, LatencySummary, Pending, QueueClass, Serve, ServeConfig, ServeStats,
+};
+use lpf::util::thread_spawn_count;
+
+#[global_allocator]
+static GLOBAL: alloc_counter::CountingAlloc = alloc_counter::CountingAlloc;
+
+type KvServe = Serve<KvTenant>;
+
+/// Distinct keys preloaded into every measured store.
+const KEYSPACE: u64 = 256;
+/// Outstanding requests per submitter thread (closed-loop sections).
+const PIPELINE: usize = 64;
+
+// ------------------------------------------------------------- harness
+
+fn make_serve(platform: &Platform, p: Pid, max_batch: usize, window: usize) -> KvServe {
+    let class = |capacity| ClassConfig { capacity, max_batch, max_linger: Duration::ZERO };
+    let config = ServeConfig {
+        interactive: class(4096),
+        batch: class(4096),
+        background: class(4096),
+        starvation_limit: 8,
+        stats_window: window,
+    };
+    let tenant = KvTenant::new(p, 2 * KEYSPACE as usize, max_batch);
+    Serve::new(platform.clone(), p, tenant, config)
+}
+
+fn prepopulate(serve: &KvServe) {
+    for k in 0..KEYSPACE {
+        let r = serve
+            .submit_wait(QueueClass::Batch, KvOp::put(k, [k as u8; KV_VAL]))
+            .expect("prepopulate put");
+        assert_eq!(r.status, lpf::serve::kv::KvStatus::Ok);
+    }
+}
+
+/// 60% interactive / 30% batch / 10% background — a serving-shaped mix.
+fn class_of(i: u64) -> QueueClass {
+    match i % 10 {
+        0..=5 => QueueClass::Interactive,
+        6..=8 => QueueClass::Batch,
+        _ => QueueClass::Background,
+    }
+}
+
+/// Closed-loop pipelined GET throughput (requests/sec): `threads`
+/// submitters, each keeping [`PIPELINE`] requests in flight.
+fn closed_loop_rps(serve: &KvServe, threads: usize, per_thread: u64) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            scope.spawn(move || {
+                let mut pending: VecDeque<Pending<KvTenant>> = VecDeque::with_capacity(PIPELINE);
+                let mut sent = 0u64;
+                while sent < per_thread {
+                    let key = sent.wrapping_mul(0x9E37).wrapping_add(t as u64) % KEYSPACE;
+                    match serve.submit(QueueClass::Batch, KvOp::get(key)) {
+                        Ok(p) => {
+                            pending.push_back(p);
+                            sent += 1;
+                            if pending.len() >= PIPELINE {
+                                let done = pending.pop_front().expect("nonempty");
+                                done.wait().expect("healthy batch");
+                            }
+                        }
+                        Err(_) => match pending.pop_front() {
+                            Some(p) => {
+                                p.wait().expect("healthy batch");
+                            }
+                            None => std::thread::yield_now(),
+                        },
+                    }
+                }
+                for p in pending {
+                    p.wait().expect("healthy batch");
+                }
+            });
+        }
+    });
+    (threads as u64 * per_thread) as f64 / t0.elapsed().as_secs_f64()
+}
+
+struct LoadResult {
+    attempted: u64,
+    completed: u64,
+    rejected: u64,
+    wall_s: f64,
+}
+
+/// Quasi-open-loop driver: `threads` submitters pace at `rate_rps` total,
+/// dropping (not retrying) rejected requests; a bounded pipeline keeps
+/// waits off the pacing path unless the system falls far behind.
+fn drive_open_loop(serve: &KvServe, threads: usize, rate_rps: f64, dur: Duration) -> LoadResult {
+    let attempted = AtomicU64::new(0);
+    let completed = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let (attempted, completed, rejected) = (&attempted, &completed, &rejected);
+            scope.spawn(move || {
+                let interval_ns = threads as f64 / rate_rps * 1e9;
+                let mut pending: VecDeque<Pending<KvTenant>> = VecDeque::with_capacity(PIPELINE);
+                let mut sent = 0u64;
+                let start = Instant::now();
+                loop {
+                    let elapsed = start.elapsed();
+                    if elapsed >= dur {
+                        break;
+                    }
+                    let due_ns = sent as f64 * interval_ns;
+                    let now_ns = elapsed.as_nanos() as f64;
+                    if now_ns < due_ns {
+                        let gap = due_ns - now_ns;
+                        if gap > 200_000.0 {
+                            std::thread::sleep(Duration::from_nanos((gap - 100_000.0) as u64));
+                        } else {
+                            std::thread::yield_now();
+                        }
+                        continue;
+                    }
+                    let i = sent.wrapping_add(t as u64);
+                    let key = i.wrapping_mul(0x9E37) % KEYSPACE;
+                    attempted.fetch_add(1, Ordering::Relaxed);
+                    match serve.submit(class_of(i), KvOp::get(key)) {
+                        Ok(p) => {
+                            pending.push_back(p);
+                            if pending.len() >= PIPELINE {
+                                let done = pending.pop_front().expect("nonempty");
+                                if done.wait().is_ok() {
+                                    completed.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        Err(e) if e.is_overloaded() => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {}
+                    }
+                    sent += 1;
+                }
+                for p in pending {
+                    if p.wait().is_ok() {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    LoadResult {
+        attempted: attempted.load(Ordering::Relaxed),
+        completed: completed.load(Ordering::Relaxed),
+        rejected: rejected.load(Ordering::Relaxed),
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+// -------------------------------------------------------------- checks
+
+/// Steady-state allocation + thread-spawn count across `iters` batched
+/// KV dispatches (full front-door path: admission, ticket, batch
+/// assembly, 4-superstep SPMD job over recycled windows, completion).
+fn alloc_and_spawn_check(platform: &Platform, warm: u32, iters: u32) -> (u64, u64) {
+    let serve = make_serve(platform, 2, 8, 64);
+    prepopulate(&serve);
+    // warm everything: tickets, rings, recycled slot storage, arenas
+    for i in 0..warm {
+        serve.submit_wait(class_of(i as u64), KvOp::get(i as u64 % KEYSPACE)).expect("warm-up");
+    }
+    let spawns_before = thread_spawn_count();
+    alloc_counter::start();
+    for i in 0..iters {
+        serve
+            .submit_wait(class_of(i as u64), KvOp::get(i as u64 % KEYSPACE))
+            .expect("steady state");
+    }
+    alloc_counter::stop();
+    (alloc_counter::count(), thread_spawn_count() - spawns_before)
+}
+
+// -------------------------------------------------------------- output
+
+struct ColdRow {
+    backend: &'static str,
+    p: Pid,
+    first_request_ns: f64,
+    warm_median_ns: f64,
+}
+
+struct SweepRow {
+    backend: &'static str,
+    p: Pid,
+    offered_rps: f64,
+    achieved_rps: f64,
+    attempted: u64,
+    completed: u64,
+    rejected: u64,
+    sustainable: bool,
+    stats: ServeStats,
+}
+
+fn lat_json(l: &LatencySummary) -> String {
+    format!(
+        "{{ \"count\": {}, \"mean_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"p999_ns\": {}, \"max_ns\": {} }}",
+        l.count,
+        json_f64(l.mean_ns),
+        json_f64(l.tail.p50),
+        json_f64(l.tail.p99),
+        json_f64(l.tail.p999),
+        json_f64(l.max_ns)
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &str,
+    p_list: &[Pid],
+    allocs: (u32, u64),
+    spawns: u64,
+    batching: (f64, f64, f64),
+    cold: &[ColdRow],
+    sweeps: &[SweepRow],
+) {
+    let (batched, unbatched, mean_batch) = batching;
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"bench_serve/v1\",\n");
+    s.push_str(&format!(
+        "  \"p_list\": [{}],\n",
+        p_list.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(", ")
+    ));
+    s.push_str(&format!(
+        "  \"alloc_check\": {{ \"warm_requests\": {}, \"allocations\": {}, \"thread_spawns\": {} }},\n",
+        allocs.0, allocs.1, spawns
+    ));
+    s.push_str(&format!(
+        "  \"batching\": {{ \"backend\": \"shared\", \"p\": 2, \"batched_rps\": {}, \
+         \"unbatched_rps\": {}, \"speedup\": {}, \"mean_batch_size\": {} }},\n",
+        json_f64(batched),
+        json_f64(unbatched),
+        json_f64(batched / unbatched),
+        json_f64(mean_batch)
+    ));
+    s.push_str("  \"cold\": [\n");
+    for (i, r) in cold.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"backend\": \"{}\", \"p\": {}, \"first_request_ns\": {}, \"warm_median_ns\": {} }}{}\n",
+            r.backend,
+            r.p,
+            json_f64(r.first_request_ns),
+            json_f64(r.warm_median_ns),
+            if i + 1 < cold.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"sweeps\": [\n");
+    for (i, r) in sweeps.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"backend\": \"{}\", \"p\": {}, \"offered_rps\": {}, \"achieved_rps\": {}, \
+             \"attempted\": {}, \"completed\": {}, \"rejected\": {}, \"sustainable\": {},\n",
+            r.backend,
+            r.p,
+            json_f64(r.offered_rps),
+            json_f64(r.achieved_rps),
+            r.attempted,
+            r.completed,
+            r.rejected,
+            r.sustainable
+        ));
+        s.push_str("      \"classes\": [\n");
+        for (j, c) in QueueClass::ALL.iter().enumerate() {
+            let cs = r.stats.class(*c);
+            s.push_str(&format!(
+                "        {{ \"class\": \"{}\", \"completed\": {}, \"failed\": {}, \"rejected\": {}, \
+                 \"queue_wait\": {}, \"service\": {} }}{}\n",
+                c.name(),
+                cs.completed,
+                cs.failed,
+                cs.rejected,
+                lat_json(&cs.queue_wait),
+                lat_json(&cs.service),
+                if j + 1 < QueueClass::ALL.len() { "," } else { "" }
+            ));
+        }
+        s.push_str(&format!(
+            "      ] }}{}\n",
+            if i + 1 < sweeps.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"max_sustainable\": [\n");
+    let mut first = true;
+    let mut best: Vec<(&'static str, Pid, f64)> = Vec::new();
+    for r in sweeps {
+        if r.sustainable {
+            match best.iter_mut().find(|(b, p, _)| *b == r.backend && *p == r.p) {
+                Some(e) => e.2 = e.2.max(r.achieved_rps),
+                None => best.push((r.backend, r.p, r.achieved_rps)),
+            }
+        }
+    }
+    for (b, p, rps) in &best {
+        s.push_str(&format!(
+            "{}    {{ \"backend\": \"{b}\", \"p\": {p}, \"rps\": {} }}",
+            if first { "" } else { ",\n" },
+            json_f64(*rps)
+        ));
+        first = false;
+    }
+    s.push_str("\n  ]\n}\n");
+    std::fs::write(path, s).expect("write BENCH_serve.json");
+}
+
+// ---------------------------------------------------------------- main
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let out = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_serve.json".to_string());
+
+    let hw: Pid = std::thread::available_parallelism()
+        .map(|n| n.get() as Pid)
+        .unwrap_or(4)
+        .clamp(2, 8);
+    let p_list: Vec<Pid> = if hw >= 4 { vec![2, 4] } else { vec![2] };
+
+    let (warm_reqs, gate_reqs, bt_per_thread, bt_threads, sweep_threads, sweep_dur, rates): (
+        u32,
+        u32,
+        u64,
+        usize,
+        usize,
+        Duration,
+        &[f64],
+    ) = if smoke {
+        (300, 400, 1200, 4, 2, Duration::from_millis(250), &[5_000.0, 20_000.0, 80_000.0])
+    } else {
+        let rates: &[f64] = &[10_000.0, 40_000.0, 160_000.0, 640_000.0];
+        (500, 2000, 6000, 4, 4, Duration::from_millis(1000), rates)
+    };
+
+    let shared = Platform::shared().checked(false);
+
+    // ---- gate 1: the batched dispatch path is allocation-free
+    let (allocs, spawns) = alloc_and_spawn_check(&shared, warm_reqs, gate_reqs);
+    eprintln!(
+        "alloc check: {allocs} allocations, {spawns} thread spawns over {gate_reqs} \
+         warm batched requests"
+    );
+
+    // ---- gate 2: batching amortises dispatch (max_batch 64 vs 1)
+    let (batched_rps, mean_batch) = {
+        let serve = make_serve(&shared, 2, 64, 2048);
+        prepopulate(&serve);
+        closed_loop_rps(&serve, bt_threads, bt_per_thread / 4); // warm-up
+        serve.reset_stats();
+        let rps = closed_loop_rps(&serve, bt_threads, bt_per_thread);
+        (rps, serve.stats().mean_batch_size())
+    };
+    let unbatched_rps = {
+        let serve = make_serve(&shared, 2, 1, 2048);
+        prepopulate(&serve);
+        closed_loop_rps(&serve, bt_threads, bt_per_thread / 8); // warm-up
+        closed_loop_rps(&serve, bt_threads, bt_per_thread)
+    };
+    let speedup = batched_rps / unbatched_rps;
+    eprintln!(
+        "batching: {batched_rps:.0} rps batched (mean batch {mean_batch:.1}) vs \
+         {unbatched_rps:.0} rps unbatched — {speedup:.1}x"
+    );
+
+    // ---- cold vs warm first-request latency, per backend x p
+    let backends: [(&'static str, Platform); 2] =
+        [("shared", Platform::shared().checked(false)), ("rdma", Platform::rdma())];
+    let mut cold_rows = Vec::new();
+    for (name, plat) in &backends {
+        for &p in &p_list {
+            let serve = make_serve(plat, p, 32, 256);
+            let t = Instant::now();
+            serve.submit_wait(QueueClass::Interactive, KvOp::get(0)).expect("cold request");
+            let first_ns = t.elapsed().as_nanos() as f64;
+            let iters = if smoke { 60 } else { 300 };
+            let mut vals = Vec::with_capacity(iters);
+            for i in 0..iters {
+                let t = Instant::now();
+                serve
+                    .submit_wait(QueueClass::Interactive, KvOp::get(i as u64 % KEYSPACE))
+                    .expect("warm request");
+                vals.push(t.elapsed().as_nanos() as f64);
+            }
+            let warm_ns = Samples::from(vals).percentile(0.5);
+            eprintln!(
+                "cold/warm {name} p={p}: first {first_ns:.0} ns, warm median {warm_ns:.0} ns"
+            );
+            cold_rows.push(ColdRow {
+                backend: name,
+                p,
+                first_request_ns: first_ns,
+                warm_median_ns: warm_ns,
+            });
+        }
+    }
+
+    // ---- open-loop rate sweeps, per backend x p
+    let mut sweep_rows = Vec::new();
+    for (name, plat) in &backends {
+        for &p in &p_list {
+            let serve = make_serve(plat, p, 64, 4096);
+            prepopulate(&serve);
+            // warm the door before the measured windows
+            closed_loop_rps(&serve, sweep_threads, 400);
+            for &rate in rates {
+                serve.reset_stats();
+                let r = drive_open_loop(&serve, sweep_threads, rate, sweep_dur);
+                let achieved = r.completed as f64 / r.wall_s;
+                let sustainable = r.rejected == 0 && achieved >= 0.9 * rate;
+                eprintln!(
+                    "sweep {name} p={p} offered {rate:.0} rps: achieved {achieved:.0} rps, \
+                     rejected {}{}",
+                    r.rejected,
+                    if sustainable { " [sustainable]" } else { "" }
+                );
+                sweep_rows.push(SweepRow {
+                    backend: name,
+                    p,
+                    offered_rps: rate,
+                    achieved_rps: achieved,
+                    attempted: r.attempted,
+                    completed: r.completed,
+                    rejected: r.rejected,
+                    sustainable,
+                    stats: serve.stats(),
+                });
+            }
+        }
+    }
+
+    write_json(
+        &out,
+        &p_list,
+        (gate_reqs, allocs),
+        spawns,
+        (batched_rps, unbatched_rps, mean_batch),
+        &cold_rows,
+        &sweep_rows,
+    );
+    eprintln!("wrote {out}");
+
+    if smoke {
+        let mut failed = false;
+        if allocs != 0 {
+            eprintln!(
+                "FAIL: steady-state batched dispatches allocated {allocs} times (expected 0)"
+            );
+            failed = true;
+        }
+        if spawns != 0 {
+            eprintln!("FAIL: steady-state serving spawned {spawns} threads (expected 0)");
+            failed = true;
+        }
+        if speedup.is_nan() || speedup < 2.0 {
+            eprintln!("FAIL: batching speedup only {speedup:.2}x (need >= 2x)");
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        eprintln!("OK: zero allocations, zero spawns, batching {speedup:.1}x >= 2x");
+    }
+}

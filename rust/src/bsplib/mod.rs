@@ -100,13 +100,26 @@ impl<T: Pod> TypedReg<T> {
 /// Default staging capacity for buffered puts, bytes.
 const STAGING_DEFAULT: usize = 1 << 20;
 
+/// Registrations tracked inline (no heap). Programs holding more than
+/// this many simultaneous `push_reg`s spill to a `Vec` — correct, but no
+/// longer allocation-free. Eight covers every consumer in this repo (the
+/// BSP FFT peaks at five).
+const BSP_INLINE_REGS: usize = 8;
+
 /// The BSPlib façade over an LPF context.
+///
+/// Constructing and destroying a `Bsp` every job is the serve layer's
+/// steady state, so the façade itself performs **zero heap allocations**:
+/// the registration table is an inline array (up to [`BSP_INLINE_REGS`]
+/// live registrations; more spill to a heap `Vec`), and the slot storage
+/// behind `push_reg`/staging is recycled across jobs by the memory layer.
 pub struct Bsp<'a> {
     ctx: &'a mut Context,
     staging: Memslot,
     staging_used: usize,
     staging_cap: usize,
-    regs: Vec<BspReg>,
+    regs_inline: [Option<BspReg>; BSP_INLINE_REGS],
+    regs_spill: Vec<BspReg>,
     started: Instant,
 }
 
@@ -133,7 +146,8 @@ impl<'a> Bsp<'a> {
             staging,
             staging_used: 0,
             staging_cap,
-            regs: Vec::new(),
+            regs_inline: [None; BSP_INLINE_REGS],
+            regs_spill: Vec::new(),
             started: Instant::now(),
         })
     }
@@ -159,15 +173,24 @@ impl<'a> Bsp<'a> {
     pub fn push_reg(&mut self, len: usize) -> Result<BspReg> {
         let slot = self.ctx.register_global(len)?;
         let reg = BspReg { slot, len };
-        self.regs.push(reg);
+        match self.regs_inline.iter_mut().find(|r| r.is_none()) {
+            Some(free) => *free = Some(reg),
+            None => self.regs_spill.push(reg),
+        }
         Ok(reg)
     }
 
-    /// `bsp_pop_reg`.
+    /// `bsp_pop_reg`. Removes the most recent matching registration
+    /// (BSPlib's rule; registrations are unique here, so at most one
+    /// matches).
     pub fn pop_reg(&mut self, reg: BspReg) -> Result<()> {
-        match self.regs.iter().rposition(|r| *r == reg) {
-            Some(i) => {
-                self.regs.remove(i);
+        if let Some(i) = self.regs_spill.iter().rposition(|r| *r == reg) {
+            self.regs_spill.remove(i);
+            return self.ctx.deregister(reg.slot);
+        }
+        match self.regs_inline.iter_mut().rev().find(|r| **r == Some(reg)) {
+            Some(found) => {
+                *found = None;
                 self.ctx.deregister(reg.slot)
             }
             None => Err(LpfError::Illegal("pop_reg of unknown registration".into())),
@@ -237,6 +260,24 @@ impl<'a> Bsp<'a> {
         len: usize,
     ) -> Result<()> {
         self.ctx.get(src_pid, src.slot, src_byte_off, dst.slot, dst_byte_off, len, MSG_DEFAULT)
+    }
+
+    /// `bsp_hpget`: unbuffered high-performance get. LPF's `lpf_get` is
+    /// already unbuffered, so over this layer `bsp_get` and `bsp_hpget`
+    /// lower to the same primitive; the name exists for BSPlib API
+    /// completeness, and the *contract* differs — the caller must not
+    /// touch the destination until the next sync (BSPlib's high-performance
+    /// rule, which is also LPF's).
+    pub fn hpget(
+        &mut self,
+        src_pid: u32,
+        src: BspReg,
+        src_byte_off: usize,
+        dst: BspReg,
+        dst_byte_off: usize,
+        len: usize,
+    ) -> Result<()> {
+        self.get(src_pid, src, src_byte_off, dst, dst_byte_off, len)
     }
 
     // ------------------------------------------------- typed variants (v2)
@@ -320,6 +361,21 @@ impl<'a> Bsp<'a> {
         self.get(src_pid, src.raw(), src_off, dst.raw(), dst_off, crate::typed::bytes_for::<T>(n)?)
     }
 
+    /// `bsp_hpget`, typed: fetch `n` elements from `src_pid`'s window at
+    /// `src_elem` into our window at `dst_elem`, unbuffered (see
+    /// [`hpget`](Bsp::hpget) for the contract).
+    pub fn hpget_at<T: Pod>(
+        &mut self,
+        src_pid: u32,
+        src: TypedReg<T>,
+        src_elem: usize,
+        dst: TypedReg<T>,
+        dst_elem: usize,
+        n: usize,
+    ) -> Result<()> {
+        self.get_at(src_pid, src, src_elem, dst, dst_elem, n)
+    }
+
     /// `bsp_sync`: end the superstep; all queued communication completes
     /// and the staging area resets.
     pub fn sync(&mut self) -> Result<()> {
@@ -328,10 +384,16 @@ impl<'a> Bsp<'a> {
         Ok(())
     }
 
-    /// `bsp_end`: release resources (registrations + staging).
+    /// `bsp_end`: release resources (registrations + staging). Their slot
+    /// storage is parked by the memory layer for the next same-shaped
+    /// `begin` (allocation-free warm restarts).
     pub fn end(mut self) -> Result<()> {
-        let regs: Vec<BspReg> = self.regs.drain(..).collect();
-        for r in regs {
+        let inline = std::mem::take(&mut self.regs_inline);
+        let spill = std::mem::take(&mut self.regs_spill);
+        for r in inline.into_iter().flatten() {
+            self.ctx.deregister(r.slot)?;
+        }
+        for r in spill {
             self.ctx.deregister(r.slot)?;
         }
         self.ctx.deregister(self.staging)
@@ -458,6 +520,57 @@ mod tests {
             bsp.pop_reg(r).unwrap();
             assert!(bsp.pop_reg(r).is_err());
         });
+    }
+
+    #[test]
+    fn hpget_matches_get_semantics() {
+        run(2, |bsp| {
+            let src = bsp.push_reg_of::<u64>(1).unwrap();
+            let dst = bsp.push_reg_of::<u64>(1).unwrap();
+            bsp.sync().unwrap();
+            bsp.write_local_at(src, 0, &[bsp.pid() as u64 + 7]).unwrap();
+            let peer = (bsp.pid() + 1) % bsp.nprocs();
+            bsp.hpget_at(peer, src, 0, dst, 0, 1).unwrap();
+            bsp.sync().unwrap();
+            let mut got = [0u64];
+            bsp.read_local_at(dst, 0, &mut got).unwrap();
+            assert_eq!(got[0], peer as u64 + 7);
+            // byte-addressed flavour too
+            bsp.hpget(peer, src.raw(), 0, dst.raw(), 0, 8).unwrap();
+            bsp.sync().unwrap();
+            bsp.read_local_at(dst, 0, &mut got).unwrap();
+            assert_eq!(got[0], peer as u64 + 7);
+        });
+    }
+
+    #[test]
+    fn many_registrations_spill_beyond_inline_table() {
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(2);
+        exec(
+            &root,
+            2,
+            |ctx, _| {
+                let mut bsp = Bsp::begin(ctx, 16, 16).unwrap();
+                bsp.sync().unwrap();
+                // 12 live registrations: 8 inline + 4 spilled
+                let regs: Vec<BspReg> = (0..12).map(|_| bsp.push_reg(8).unwrap()).collect();
+                bsp.sync().unwrap();
+                bsp.write_local(regs[10], 0, &[41u64]).unwrap();
+                let peer = (bsp.pid() + 1) % 2;
+                bsp.hpput(peer, regs[10], 0, regs[11], 0, 8).unwrap();
+                bsp.sync().unwrap();
+                let mut got = [0u64];
+                bsp.read_local(regs[11], 0, &mut got).unwrap();
+                assert_eq!(got[0], 41);
+                // popping works from both tables, in any order
+                bsp.pop_reg(regs[2]).unwrap();
+                bsp.pop_reg(regs[9]).unwrap();
+                assert!(bsp.pop_reg(regs[9]).is_err(), "double pop rejected");
+                bsp.end().unwrap(); // deregisters the remaining 10 cleanly
+            },
+            Args::none(),
+        )
+        .unwrap();
     }
 
     #[test]

@@ -155,8 +155,16 @@ impl Context {
     /// this process. Storage is owned by the register (zero-initialised).
     pub fn register_local(&mut self, len: usize) -> Result<Memslot> {
         self.registration_fault()?;
-        let storage = SlotStorage::new(len)?;
-        self.group.fabric().register_of(self.pid).with_mut(|r| r.register_local(storage))
+        self.group.fabric().register_of(self.pid).with_mut(|r| {
+            // Reuse a parked same-sized block (re-zeroed) when one exists:
+            // a warm job re-registering the windows of the previous job —
+            // the serve layer's batched dispatch — allocates nothing.
+            let storage = match r.take_recycled(len) {
+                Some(s) => s,
+                None => SlotStorage::new(len)?,
+            };
+            r.register_local(storage)
+        })
     }
 
     /// `lpf_register_global`: collective; ids align across processes when
@@ -165,8 +173,13 @@ impl Context {
     /// `sync`, exactly as in the paper's Algorithm 2.
     pub fn register_global(&mut self, len: usize) -> Result<Memslot> {
         self.registration_fault()?;
-        let storage = SlotStorage::new(len)?;
-        self.group.fabric().register_of(self.pid).with_mut(|r| r.register_global(storage))
+        self.group.fabric().register_of(self.pid).with_mut(|r| {
+            let storage = match r.take_recycled(len) {
+                Some(s) => s,
+                None => SlotStorage::new(len)?,
+            };
+            r.register_global(storage)
+        })
     }
 
     /// `lpf_deregister`: O(1); frees the slot for reuse.

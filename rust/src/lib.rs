@@ -8,8 +8,9 @@
 //! The crate exposes the paper's twelve primitives on the [`ctx::Context`]
 //! type, the typed superstep-epoch API v2 layered on them ([`typed`]),
 //! four fabrics ([`fabric`]), a collectives library ([`collectives`]),
-//! a BSPlib compatibility layer ([`bsplib`]), and the two evaluation
-//! applications (FFT, PageRank) plus the sparksim Big-Data substrate.
+//! a BSPlib compatibility layer ([`bsplib`]), a serving front door over
+//! the hot-team executor ([`serve`]), and the two evaluation applications
+//! (FFT, PageRank) plus the sparksim Big-Data substrate.
 //! Adversarial testability lives in [`netsim::faults`] (deterministic
 //! fault injection) and [`check`] (the cross-backend differential
 //! oracle); see `docs/faults.md`.
@@ -33,6 +34,7 @@ pub mod pool;
 pub mod probe;
 pub mod queue;
 pub mod runtime;
+pub mod serve;
 pub mod sparksim;
 pub mod sync;
 pub mod typed;
@@ -44,4 +46,5 @@ pub use crate::core::{
 };
 pub use crate::ctx::{exec, hook, Context, Init, Platform, Root};
 pub use crate::pool::{JobHandle, Pool, PreparedJob};
+pub use crate::serve::{QueueClass, Serve, ServeConfig, ServeError, ServeStats, Tenant};
 pub use crate::typed::{Epoch, TypedSlot};

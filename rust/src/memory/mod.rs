@@ -116,7 +116,18 @@ pub struct Register {
     /// never alias a new slot, and is rejected with a dedicated message
     /// (the epoch-tag invalidation rule; see `docs/pool.md`).
     epoch_floor: u32,
+    /// Storage blocks returned by `deregister`/`reset_for_job`, kept for
+    /// reuse by the next same-sized registration (`take_recycled`). This is
+    /// what makes re-registering the same windows every batch job — the
+    /// serve layer's steady state — allocation-free. Bounded; never handed
+    /// out while any stale `Arc` still aliases the block.
+    recycle: Vec<Arc<SlotStorage>>,
 }
+
+/// Upper bound on recycled storage blocks kept per register. Generous for
+/// a serving tenant's handful of windows, small enough that a pathological
+/// job registering many distinct sizes cannot pin unbounded memory.
+const RECYCLE_CAP: usize = 64;
 
 /// Default slot capacity before any `resize_memory_register` call. The paper
 /// leaves the initial capacity implementation-defined; we match the real
@@ -137,7 +148,34 @@ impl Register {
             in_use: 0,
             gen_counter: AtomicU32::new(1),
             epoch_floor: 1,
+            recycle: Vec::with_capacity(RECYCLE_CAP),
         }
+    }
+
+    /// Park a freed storage block for reuse. Bounded: beyond
+    /// [`RECYCLE_CAP`] the block is simply dropped (the preallocated list
+    /// never grows, so parking itself cannot allocate).
+    fn recycle_push(recycle: &mut Vec<Arc<SlotStorage>>, storage: Arc<SlotStorage>) {
+        if recycle.len() < RECYCLE_CAP {
+            recycle.push(storage);
+        }
+    }
+
+    /// Take a parked storage block of exactly `len` bytes, re-zeroed — a
+    /// registration that hits this cache is indistinguishable from (and as
+    /// cheap as a memset instead of) a fresh allocation. Blocks still
+    /// aliased by a stale `Arc` (a leaked `resolve` clone) are skipped:
+    /// they may become reusable later, but must never be zeroed or handed
+    /// out while shared. Returns `None` on a size or uniqueness miss.
+    pub(crate) fn take_recycled(&mut self, len: usize) -> Option<Arc<SlotStorage>> {
+        let i = self.recycle.iter().position(|s| {
+            s.len() == len && Arc::strong_count(s) == 1 && Arc::weak_count(s) == 0
+        })?;
+        let storage = self.recycle.swap_remove(i);
+        // SAFETY: the block is uniquely owned (checked above), so there is
+        // no concurrent reader or writer.
+        unsafe { storage.bytes_mut().fill(0) };
+        Some(storage)
     }
 
     /// Reset to the pristine state a fresh context would observe, retaining
@@ -147,8 +185,12 @@ impl Register {
     /// the previous job fail with [`LpfError::Illegal`] instead of aliasing
     /// a new slot (see `epoch_floor`).
     pub fn reset_for_job(&mut self) {
-        self.local.clear();
-        self.global.clear();
+        for entry in self.local.drain(..).flatten() {
+            Self::recycle_push(&mut self.recycle, entry.storage);
+        }
+        for entry in self.global.drain(..).flatten() {
+            Self::recycle_push(&mut self.recycle, entry.storage);
+        }
         self.local_free.clear();
         self.global_free.clear();
         self.capacity = DEFAULT_SLOT_CAPACITY;
@@ -227,7 +269,8 @@ impl Register {
         self.alloc(SlotKind::Global, storage)
     }
 
-    /// `lpf_deregister`: O(1).
+    /// `lpf_deregister`: O(1). The freed storage is parked for reuse by a
+    /// later same-sized registration (see [`Register::take_recycled`]).
     pub fn deregister(&mut self, slot: Memslot) -> Result<()> {
         let (table, free) = match slot.kind {
             SlotKind::Local => (&mut self.local, &mut self.local_free),
@@ -235,7 +278,8 @@ impl Register {
         };
         match table.get_mut(slot.index as usize) {
             Some(entry @ Some(_)) if entry.as_ref().unwrap().gen == slot.gen => {
-                *entry = None;
+                let taken = entry.take().expect("matched Some");
+                Self::recycle_push(&mut self.recycle, taken.storage);
                 free.push(slot.index);
                 self.in_use -= 1;
                 Ok(())
@@ -429,6 +473,53 @@ mod tests {
         let err = r.resolve(a).unwrap_err();
         assert!(format!("{err:?}").contains("earlier job epoch"), "{err:?}");
         assert!(r.resolve(c).is_ok());
+    }
+
+    #[test]
+    fn deregistered_storage_is_recycled_and_rezeroed() {
+        let mut r = reg_with_capacity(2);
+        let s = SlotStorage::new(16).unwrap();
+        let ptr = unsafe { s.bytes().as_ptr() as usize };
+        unsafe { s.bytes_mut()[3] = 9 };
+        let a = r.register_local(s).unwrap();
+        r.deregister(a).unwrap();
+        // same allocation comes back, scrubbed to the fresh-slot state
+        let t = r.take_recycled(16).expect("block parked for reuse");
+        assert_eq!(unsafe { t.bytes().as_ptr() as usize }, ptr);
+        assert!(unsafe { t.bytes().iter().all(|&b| b == 0) });
+        // the cache held exactly one block of this size
+        assert!(r.take_recycled(16).is_none());
+        // size must match exactly
+        drop(t);
+        assert!(r.take_recycled(8).is_none());
+    }
+
+    #[test]
+    fn reset_for_job_recycles_all_live_slots() {
+        let mut r = reg_with_capacity(4);
+        let _a = r.register_global(SlotStorage::new(32).unwrap()).unwrap();
+        let _b = r.register_local(SlotStorage::new(48).unwrap()).unwrap();
+        r.reset_for_job();
+        assert!(r.take_recycled(32).is_some());
+        assert!(r.take_recycled(48).is_some());
+        assert!(r.take_recycled(32).is_none());
+    }
+
+    #[test]
+    fn aliased_storage_is_never_recycled() {
+        let mut r = reg_with_capacity(2);
+        let s = SlotStorage::new(16).unwrap();
+        let keep = s.clone(); // a leaked resolve()-style alias
+        unsafe { keep.bytes_mut()[0] = 7 };
+        let a = r.register_local(s).unwrap();
+        r.deregister(a).unwrap();
+        // the block is parked but must not be handed out (or zeroed) while
+        // the alias lives
+        assert!(r.take_recycled(16).is_none());
+        assert_eq!(unsafe { keep.bytes()[0] }, 7);
+        drop(keep);
+        // alias gone: now reusable
+        assert!(r.take_recycled(16).is_some());
     }
 
     #[test]

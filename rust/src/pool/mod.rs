@@ -48,6 +48,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::core::{Args, LpfError, Pid, Result};
 use crate::ctx::{run_spmd_recycled, Context, ContextGroup, Platform};
@@ -76,6 +77,12 @@ struct JobInner<O> {
     cv: Condvar,
     /// Any process's share failed — the pool cold-resets the team.
     failed: AtomicBool,
+    /// The submitter dropped its [`JobHandle`] without `wait`ing: nobody
+    /// will ever collect the outputs. A still-queued abandoned job is
+    /// retired without executing; a finished one has its result slots
+    /// released immediately (they would otherwise sit in the slots until
+    /// every reference to the job died).
+    abandoned: AtomicBool,
 }
 
 impl<O> JobInner<O> {
@@ -86,6 +93,7 @@ impl<O> JobInner<O> {
             sync: Mutex::new(JobPhase::Done { cancelled: false }),
             cv: Condvar::new(),
             failed: AtomicBool::new(false),
+            abandoned: AtomicBool::new(false),
         }
     }
 
@@ -101,10 +109,26 @@ impl<O> JobInner<O> {
         }
         *self.args.lock().expect("job args poisoned") = args;
         self.failed.store(false, Ordering::Relaxed);
+        self.abandoned.store(false, Ordering::Relaxed);
         for slot in &self.outs {
             *slot.lock().expect("job slot poisoned") = None;
         }
         Ok(())
+    }
+
+    /// The handle died without `wait`. Serialised against [`finish`] by the
+    /// phase mutex: exactly one of the two observes the other's work and
+    /// performs the slot release.
+    fn abandon(&self) {
+        self.abandoned.store(true, Ordering::Release);
+        let ph = self.sync.lock().expect("job phase poisoned");
+        if matches!(*ph, JobPhase::Done { .. }) {
+            for slot in &self.outs {
+                *slot.lock().expect("job slot poisoned") = None;
+            }
+        }
+        // else: still queued or running — `finish` sees the flag and
+        // releases the slots when the job retires.
     }
 
     fn record(&self, pid: Pid, res: Result<O>) {
@@ -150,6 +174,10 @@ trait RunnableJob: Send + Sync {
     fn run(&self, group: &Arc<ContextGroup>, pid: Pid, slab: &mut MsgQueue);
     /// True if any share failed (panic or abort) — forces a cold reset.
     fn failed(&self) -> bool;
+    /// True if the submitter dropped its handle without waiting — the pool
+    /// samples this **once per dispatch** (install time) and retires the
+    /// job without running it.
+    fn abandoned(&self) -> bool;
     /// Release the submitter. Last touch (see trait docs).
     fn complete(&self, cancelled: bool);
 }
@@ -180,6 +208,13 @@ impl<O> JobInner<O> {
     fn finish(&self, cancelled: bool) {
         let mut ph = self.sync.lock().expect("job phase poisoned");
         *ph = JobPhase::Done { cancelled };
+        if self.abandoned.load(Ordering::Acquire) {
+            // Nobody will collect: release the result slots while still
+            // holding the phase lock (see `abandon`).
+            for slot in &self.outs {
+                *slot.lock().expect("job slot poisoned") = None;
+            }
+        }
         self.cv.notify_all();
     }
 }
@@ -195,6 +230,10 @@ where
 
     fn failed(&self) -> bool {
         self.inner.failed.load(Ordering::Acquire)
+    }
+
+    fn abandoned(&self) -> bool {
+        self.inner.abandoned.load(Ordering::Acquire)
     }
 
     fn complete(&self, cancelled: bool) {
@@ -213,6 +252,12 @@ where
 
     fn failed(&self) -> bool {
         self.inner.failed.load(Ordering::Acquire)
+    }
+
+    fn abandoned(&self) -> bool {
+        // the `Pool::exec` submitter is blocked in `wait_collect` for the
+        // job's whole life — it cannot abandon it
+        false
     }
 
     fn complete(&self, cancelled: bool) {
@@ -257,21 +302,52 @@ impl QueuedJob {
 
 // ---------------------------------------------------------------- the pool
 
-/// Aggregate pool counters (diagnostics).
+/// Aggregate pool counters (diagnostics). The queue-wait fields are what
+/// the serve layer's SLO tracker consumes: they separate "time spent
+/// behind other jobs" from the jobs' own service time.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
     /// Jobs fully served (including failed ones).
     pub jobs_completed: u64,
     /// Jobs after which the team needed a cold rebuild (failed jobs).
     pub cold_resets: u64,
+    /// Jobs waiting in the queue right now (sampled by [`Pool::stats`];
+    /// excludes the job currently running).
+    pub queue_depth: u64,
+    /// High-water mark of `queue_depth` over the pool's lifetime.
+    pub max_queue_depth: u64,
+    /// Jobs handed to the team so far (each contributes one queue-wait
+    /// sample; a job installed on an idle team waits 0 ns).
+    pub jobs_dispatched: u64,
+    /// Total enqueue→dispatch wait across dispatched jobs, nanoseconds.
+    pub queue_wait_ns_total: u64,
+    /// Worst single enqueue→dispatch wait, nanoseconds.
+    pub queue_wait_ns_max: u64,
+}
+
+impl PoolStats {
+    /// Mean enqueue→dispatch wait in nanoseconds (NaN before any job).
+    pub fn mean_queue_wait_ns(&self) -> f64 {
+        if self.jobs_dispatched == 0 {
+            return f64::NAN;
+        }
+        self.queue_wait_ns_total as f64 / self.jobs_dispatched as f64
+    }
 }
 
 struct PoolState {
     /// The warm team. Replaced (cold reset) only after a failed job.
     group: Arc<ContextGroup>,
-    queue: VecDeque<QueuedJob>,
+    /// Waiting jobs with their enqueue instants (for queue-wait stats).
+    queue: VecDeque<(QueuedJob, Instant)>,
     /// Job every worker must run exactly once per `seq` bump.
     current: Option<QueuedJob>,
+    /// Decided once, at install time, for the whole team: an owned job
+    /// whose handle was already dropped is retired without executing. The
+    /// decision must be per-dispatch, not per-worker — workers checking a
+    /// live flag independently could split (some entering the job's
+    /// barriers, some not) and wedge the team.
+    current_skip: bool,
     seq: u64,
     /// Workers still inside `current`.
     running: Pid,
@@ -321,6 +397,7 @@ impl Pool {
                 group: ContextGroup::new(platform, p),
                 queue: VecDeque::with_capacity(16),
                 current: None,
+                current_skip: false,
                 seq: 0,
                 running: 0,
                 stats: PoolStats::default(),
@@ -348,9 +425,13 @@ impl Pool {
         &self.shared.platform
     }
 
-    /// Aggregate counters (jobs served, cold resets after failures).
+    /// Aggregate counters (jobs served, cold resets after failures,
+    /// queue depth and enqueue→dispatch waits).
     pub fn stats(&self) -> PoolStats {
-        self.shared.state.lock().expect("pool poisoned").stats
+        let st = self.shared.state.lock().expect("pool poisoned");
+        let mut stats = st.stats;
+        stats.queue_depth = st.queue.len() as u64;
+        stats
     }
 
     /// Install (or clear) a deterministic fault-injection plan on the
@@ -370,12 +451,17 @@ impl Pool {
         let mut st = self.shared.state.lock().expect("pool poisoned");
         debug_assert!(!st.shutdown, "enqueue after shutdown");
         if st.current.is_none() {
+            // idle team: installed immediately, queue-wait is zero
+            st.current_skip = job.as_job().abandoned();
             st.current = Some(job);
             st.seq += 1;
             st.running = self.shared.p;
+            st.stats.jobs_dispatched += 1;
             self.shared.worker_cv.notify_all();
         } else {
-            st.queue.push_back(job);
+            st.queue.push_back((job, Instant::now()));
+            let depth = st.queue.len() as u64;
+            st.stats.max_queue_depth = st.stats.max_queue_depth.max(depth);
         }
     }
 
@@ -389,7 +475,7 @@ impl Pool {
         let prepared = self.prepare(spmd);
         prepared.inner.begin(args).expect("fresh job cannot be in flight");
         self.enqueue(QueuedJob::Owned(prepared.erased.clone()));
-        JobHandle { inner: prepared.inner }
+        JobHandle { inner: Some(prepared.inner) }
     }
 
     /// Allocate a reusable job once; [`Pool::run_prepared`] then dispatches
@@ -459,7 +545,7 @@ impl Pool {
 
 impl Drop for Pool {
     fn drop(&mut self) {
-        let drained: Vec<QueuedJob> = {
+        let drained: Vec<(QueuedJob, Instant)> = {
             let mut st = self.shared.state.lock().expect("pool poisoned");
             st.shutdown = true;
             self.shared.worker_cv.notify_all();
@@ -468,7 +554,7 @@ impl Drop for Pool {
         // Cancel jobs that never started (their submitters get an error).
         // The current job, if any, runs to completion first — workers only
         // exit once it is done.
-        for job in &drained {
+        for (job, _) in &drained {
             job.as_job().complete(true);
         }
         drop(drained);
@@ -484,12 +570,12 @@ fn worker_loop(shared: &Shared, pid: Pid) {
     let mut slab = MsgQueue::new();
     let mut last_seq = 0u64;
     loop {
-        let (job, group, seq) = {
+        let (job, group, seq, skip) = {
             let mut st = shared.state.lock().expect("pool poisoned");
             loop {
                 if let Some(cur) = &st.current {
                     if st.seq != last_seq {
-                        break (cur.clone(), st.group.clone(), st.seq);
+                        break (cur.clone(), st.group.clone(), st.seq, st.current_skip);
                     }
                 }
                 if st.shutdown {
@@ -499,7 +585,12 @@ fn worker_loop(shared: &Shared, pid: Pid) {
             }
         };
         last_seq = seq;
-        job.as_job().run(&group, pid, &mut slab);
+        if !skip {
+            job.as_job().run(&group, pid, &mut slab);
+        }
+        // (an abandoned job is retired below without running: its outputs
+        // are unobservable, and the skip decision was made at install time
+        // so the whole team agrees — no half-entered barriers)
 
         let mut st = shared.state.lock().expect("pool poisoned");
         st.running -= 1;
@@ -519,7 +610,17 @@ fn worker_loop(shared: &Shared, pid: Pid) {
         } else {
             group.reset_for_job();
         }
-        st.current = st.queue.pop_front();
+        st.current = match st.queue.pop_front() {
+            Some((next, enqueued)) => {
+                let wait = enqueued.elapsed().as_nanos() as u64;
+                st.stats.jobs_dispatched += 1;
+                st.stats.queue_wait_ns_total += wait;
+                st.stats.queue_wait_ns_max = st.stats.queue_wait_ns_max.max(wait);
+                st.current_skip = next.as_job().abandoned();
+                Some(next)
+            }
+            None => None,
+        };
         if st.current.is_some() {
             st.seq += 1;
             st.running = shared.p;
@@ -534,16 +635,33 @@ fn worker_loop(shared: &Shared, pid: Pid) {
 // ---------------------------------------------------------------- handles
 
 /// Handle to a job submitted with [`Pool::submit`].
+///
+/// Dropping the handle without [`wait`](JobHandle::wait) *abandons* the
+/// job: a still-queued job is retired by the pool without executing, a
+/// finished one has its result slots released immediately, and the workers
+/// never block on the dead submitter (completion is a broadcast, not a
+/// rendezvous). Abandoning is not cancellation — a job already running
+/// runs to completion, its outputs are simply discarded.
 #[must_use = "wait() observes the job's outcome"]
 pub struct JobHandle<O> {
-    inner: Arc<JobInner<O>>,
+    /// `Some` until consumed by `wait` (so `Drop` knows to abandon).
+    inner: Option<Arc<JobInner<O>>>,
 }
 
 impl<O> JobHandle<O> {
     /// Block until the job completed; outputs in pid order, first error
     /// wins — identical to the one-shot `exec`'s return contract.
-    pub fn wait(self) -> Result<Vec<O>> {
-        self.inner.wait_collect()
+    pub fn wait(mut self) -> Result<Vec<O>> {
+        let inner = self.inner.take().expect("handle waited twice");
+        inner.wait_collect()
+    }
+}
+
+impl<O> Drop for JobHandle<O> {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            inner.abandon();
+        }
     }
 }
 
@@ -676,6 +794,81 @@ mod tests {
             Err(LpfError::Fatal(m)) => assert!(m.contains("cancelled"), "{m}"),
             Err(e) => panic!("unexpected error {e:?}"),
         }
+    }
+
+    #[test]
+    fn pool_stats_track_queue_depth_and_wait() {
+        let pool = pool(2);
+        let slow = pool.submit(
+            |_ctx, _| std::thread::sleep(std::time::Duration::from_millis(20)),
+            Args::none(),
+        );
+        let h1: JobHandle<u32> = pool.submit(|ctx, _| ctx.pid(), Args::none());
+        let h2: JobHandle<u32> = pool.submit(|ctx, _| ctx.pid(), Args::none());
+        let mid = pool.stats();
+        assert_eq!(mid.queue_depth, 2, "two jobs parked behind the slow one");
+        assert!(mid.max_queue_depth >= 2);
+        assert_eq!(mid.jobs_dispatched, 1, "only the slow job was installed");
+        slow.wait().unwrap();
+        h1.wait().unwrap();
+        h2.wait().unwrap();
+        let done = pool.stats();
+        assert_eq!(done.queue_depth, 0);
+        assert_eq!(done.jobs_dispatched, 3);
+        assert!(done.queue_wait_ns_total > 0, "queued jobs waited behind the slow one");
+        assert!(done.mean_queue_wait_ns() > 0.0);
+        assert!(done.queue_wait_ns_max as f64 >= done.mean_queue_wait_ns());
+    }
+
+    #[test]
+    fn dropped_handle_skips_queued_job_and_releases_slots() {
+        struct Guard(Arc<std::sync::atomic::AtomicU64>);
+        impl Drop for Guard {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+
+        let pool = pool(2);
+        let ran = Arc::new(AtomicBool::new(false));
+        let drops = Arc::new(std::sync::atomic::AtomicU64::new(0));
+
+        // occupy the team so the victim is still queued when abandoned
+        let slow = pool.submit(
+            |_ctx, _| std::thread::sleep(std::time::Duration::from_millis(30)),
+            Args::none(),
+        );
+        let victim = {
+            let ran = ran.clone();
+            let drops = drops.clone();
+            pool.submit(
+                move |_ctx, _| {
+                    ran.store(true, Ordering::SeqCst);
+                    Guard(drops.clone())
+                },
+                Args::none(),
+            )
+        };
+        drop(victim); // dropped without wait(): abandoned
+        slow.wait().unwrap();
+        // FIFO: this only runs after the abandoned job was retired, and the
+        // workers got here without blocking on the dead submitter
+        let outs = pool.exec(|ctx, _| ctx.pid(), Args::none()).unwrap();
+        assert_eq!(outs, vec![0, 1]);
+        assert!(!ran.load(Ordering::SeqCst), "abandoned queued job must not execute");
+        assert_eq!(drops.load(Ordering::SeqCst), 0, "no outputs were ever produced");
+        assert_eq!(pool.stats().jobs_completed, 3, "abandoned job retired exactly once");
+
+        // abandoned *after* completion: the parked results are released by
+        // the handle drop, not leaked until some later reuse
+        let h = {
+            let drops = drops.clone();
+            pool.submit(move |_ctx, _| Guard(drops.clone()), Args::none())
+        };
+        pool.exec(|_ctx, _| (), Args::none()).unwrap(); // FIFO fence: job finished
+        assert_eq!(drops.load(Ordering::SeqCst), 0, "outputs parked in the result slots");
+        drop(h);
+        assert_eq!(drops.load(Ordering::SeqCst), 2, "drop released both result slots");
     }
 
     #[test]

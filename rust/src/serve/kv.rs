@@ -1,0 +1,409 @@
+//! Replicated key-value tenant — the reference workload behind the
+//! serving front door.
+//!
+//! Every process of the team holds a **full replica** of the store in
+//! host memory (it survives cold team rebuilds, which is the recovery
+//! story the fault tests exercise). A batch of operations is served in
+//! one SPMD job of four supersteps, all data movement going through
+//! registered LPF windows with `hpput_at` — the protocol would run
+//! unchanged on a distributed fabric:
+//!
+//! 1. `begin_with_staging` — resize + activate the staging window;
+//! 2. register the *ops* and *resp* windows, `sync` to activate;
+//! 3. pid 0 encodes the batch into its ops window and `hpput`s it to
+//!    every process (fan-out is the `g·(p·k·m)` term of the cost model);
+//!    `sync`;
+//! 4. every process decodes the ops from **its own window** (not from
+//!    shared memory — model compliance), applies all `Put`s to its
+//!    replica (replication), and the *home* process of each key
+//!    (`key % p`) `hpput`s the response into pid 0's resp window;
+//!    `sync`; pid 0 reads the responses back into the batch.
+//!
+//! Window shapes depend only on `max_batch`, never on the actual batch
+//! size, so the slot recycler in [`crate::memory`] serves every batch
+//! after the first from parked storage — zero allocations per dispatch.
+
+use std::sync::Mutex;
+
+use crate::bsplib::Bsp;
+use crate::core::{LpfError, Pid, Result};
+use crate::ctx::Context;
+
+use super::{BatchView, Tenant};
+
+/// Value payload size, bytes. Fixed so operations are `Copy` and window
+/// shapes are static.
+pub const KV_VAL: usize = 16;
+
+/// `u64` words per encoded operation: `[tag, key, val_lo, val_hi]`.
+const OP_WORDS: usize = 4;
+/// `u64` words per encoded response: `[status, val_lo, val_hi]`.
+const RESP_WORDS: usize = 3;
+
+const TAG_PUT: u64 = 0;
+const TAG_GET: u64 = 1;
+
+/// One key-value operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvOp {
+    /// Store `val` under `key` on every replica.
+    Put { key: u64, val: [u8; KV_VAL] },
+    /// Fetch the value under `key` (answered by the key's home process).
+    Get { key: u64 },
+}
+
+impl KvOp {
+    /// Convenience constructor for a `Put`.
+    pub fn put(key: u64, val: [u8; KV_VAL]) -> KvOp {
+        KvOp::Put { key, val }
+    }
+
+    /// Convenience constructor for a `Get`.
+    pub fn get(key: u64) -> KvOp {
+        KvOp::Get { key }
+    }
+
+    fn encode(&self) -> [u64; OP_WORDS] {
+        match *self {
+            KvOp::Put { key, val } => [TAG_PUT, key, half(&val, 0), half(&val, 1)],
+            KvOp::Get { key } => [TAG_GET, key, 0, 0],
+        }
+    }
+
+    fn key(&self) -> u64 {
+        match *self {
+            KvOp::Put { key, .. } | KvOp::Get { key } => key,
+        }
+    }
+}
+
+/// Outcome of one operation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum KvStatus {
+    /// `Put` stored / `Get` found the key.
+    #[default]
+    Ok,
+    /// `Get` on an absent key.
+    Miss,
+    /// `Put` refused: the replica is at capacity.
+    Full,
+}
+
+impl KvStatus {
+    fn to_word(self) -> u64 {
+        match self {
+            KvStatus::Ok => 0,
+            KvStatus::Miss => 1,
+            KvStatus::Full => 2,
+        }
+    }
+
+    fn from_word(w: u64) -> KvStatus {
+        match w {
+            1 => KvStatus::Miss,
+            2 => KvStatus::Full,
+            _ => KvStatus::Ok,
+        }
+    }
+}
+
+/// Response to one [`KvOp`]. `val` is meaningful for `Get` hits only.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvResp {
+    pub status: KvStatus,
+    pub val: [u8; KV_VAL],
+}
+
+fn half(val: &[u8; KV_VAL], i: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&val[i * 8..i * 8 + 8]);
+    u64::from_le_bytes(b)
+}
+
+fn unhalf(lo: u64, hi: u64) -> [u8; KV_VAL] {
+    let mut val = [0u8; KV_VAL];
+    val[..8].copy_from_slice(&lo.to_le_bytes());
+    val[8..].copy_from_slice(&hi.to_le_bytes());
+    val
+}
+
+// --------------------------------------------------------------- replica
+
+/// One process's full copy of the store: preallocated open-addressing
+/// table (fibonacci hashing, linear probing, no deletion). All memory is
+/// carved out in `new`; inserts never allocate.
+struct Replica {
+    keys: Vec<u64>,
+    vals: Vec<[u8; KV_VAL]>,
+    used: Vec<bool>,
+    len: usize,
+    /// Admission bound: `Full` beyond this many distinct keys.
+    capacity: usize,
+    /// `table.len() == 1 << bits`, probe index = top `bits` of the hash.
+    bits: u32,
+}
+
+impl Replica {
+    fn new(capacity: usize) -> Replica {
+        let cap = capacity.max(1);
+        // keep load factor <= 1/2 so probes stay short
+        let slots = (cap * 2).next_power_of_two();
+        Replica {
+            keys: vec![0; slots],
+            vals: vec![[0; KV_VAL]; slots],
+            used: vec![false; slots],
+            len: 0,
+            capacity: cap,
+            bits: slots.trailing_zeros(),
+        }
+    }
+
+    fn slot_of(&self, key: u64) -> usize {
+        (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> (64 - self.bits)) as usize
+    }
+
+    /// Probe to the slot holding `key`, or the empty slot where it would
+    /// be inserted.
+    fn probe(&self, key: u64) -> usize {
+        let mask = self.keys.len() - 1;
+        let mut i = self.slot_of(key);
+        while self.used[i] && self.keys[i] != key {
+            i = (i + 1) & mask;
+        }
+        i
+    }
+
+    fn put(&mut self, key: u64, val: [u8; KV_VAL]) -> KvStatus {
+        let i = self.probe(key);
+        if !self.used[i] {
+            if self.len >= self.capacity {
+                return KvStatus::Full;
+            }
+            self.used[i] = true;
+            self.keys[i] = key;
+            self.len += 1;
+        }
+        self.vals[i] = val;
+        KvStatus::Ok
+    }
+
+    fn get(&self, key: u64) -> Option<[u8; KV_VAL]> {
+        let i = self.probe(key);
+        if self.used[i] {
+            Some(self.vals[i])
+        } else {
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------- tenant
+
+/// The replicated KV [`Tenant`]. Construct with the same `p` as the pool
+/// behind the front door.
+pub struct KvTenant {
+    replicas: Vec<Mutex<Replica>>,
+    /// Largest batch the windows are shaped for (must be ≥ the front
+    /// door's [`super::ServeConfig::max_batch`]).
+    max_batch: usize,
+}
+
+impl KvTenant {
+    /// A store of `capacity` distinct keys, fully replicated over `p`
+    /// processes, serving batches of up to `max_batch` operations.
+    pub fn new(p: Pid, capacity: usize, max_batch: usize) -> KvTenant {
+        let max_batch = max_batch.max(1);
+        KvTenant {
+            replicas: (0..p.max(1)).map(|_| Mutex::new(Replica::new(capacity))).collect(),
+            max_batch,
+        }
+    }
+
+    /// Number of distinct keys currently stored (replica 0's view).
+    pub fn len(&self) -> usize {
+        self.replicas[0].lock().expect("replica poisoned").len
+    }
+
+    /// True when no key is stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Tenant for KvTenant {
+    type Req = KvOp;
+    type Resp = KvResp;
+
+    fn run_batch(&self, ctx: &mut Context, batch: &mut BatchView<'_, KvOp, KvResp>) -> Result<()> {
+        let pid = ctx.pid();
+        let p = ctx.p();
+        if self.replicas.len() != p as usize {
+            return Err(LpfError::Illegal(format!(
+                "KvTenant built for p={}, serving on p={p}",
+                self.replicas.len()
+            )));
+        }
+        if batch.len() > self.max_batch {
+            return Err(LpfError::Illegal(format!(
+                "batch of {} exceeds KvTenant max_batch {}",
+                batch.len(),
+                self.max_batch
+            )));
+        }
+
+        // Window shapes depend on max_batch only — constant across
+        // batches, so registration hits the slot recycler every time
+        // after the first batch.
+        let ops_words = 1 + self.max_batch * OP_WORDS; // word 0 carries k
+        let resp_words = self.max_batch * RESP_WORDS;
+        let max_msgs = self.max_batch + p as usize + 2;
+
+        let mut bsp = Bsp::begin_with_staging(ctx, 2, max_msgs, 64)?;
+        let ops = bsp.push_reg_of::<u64>(ops_words)?;
+        let resp = bsp.push_reg_of::<u64>(resp_words)?;
+        bsp.sync()?; // activate the windows
+
+        // --- superstep: pid 0 fans the encoded batch out to the team.
+        // The count and the ops travel through the fabric even though the
+        // team shares an address space: the protocol stays model-
+        // compliant (it would run unchanged over a distributed fabric).
+        if pid == 0 {
+            let k = batch.len();
+            bsp.write_local_at(ops, 0, &[k as u64])?;
+            for (i, op) in batch.reqs().iter().enumerate() {
+                bsp.write_local_at(ops, 1 + i * OP_WORDS, &op.encode())?;
+            }
+            for peer in 0..p {
+                if peer != pid {
+                    bsp.hpput_at(peer, ops, 0, ops, 0, 1 + k * OP_WORDS)?;
+                }
+            }
+        }
+        bsp.sync()?;
+
+        // --- superstep: decode from the local window, apply, respond.
+        let mut cnt = [0u64; 1];
+        bsp.read_local_at(ops, 0, &mut cnt)?;
+        let k = cnt[0] as usize;
+        if k > self.max_batch {
+            return Err(LpfError::Illegal(format!("corrupt batch header: k={k}")));
+        }
+        {
+            let mut replica = self.replicas[pid as usize].lock().expect("replica poisoned");
+            for i in 0..k {
+                let mut w = [0u64; OP_WORDS];
+                bsp.read_local_at(ops, 1 + i * OP_WORDS, &mut w)?;
+                let key = w[1];
+                let home = (key % p as u64) as u32;
+                let reply: Option<KvResp> = match w[0] {
+                    TAG_PUT => {
+                        // every replica applies the put; the home process
+                        // reports the admission status
+                        let status = replica.put(key, unhalf(w[2], w[3]));
+                        (home == pid).then(|| KvResp { status, val: [0; KV_VAL] })
+                    }
+                    TAG_GET => (home == pid).then(|| match replica.get(key) {
+                        Some(val) => KvResp { status: KvStatus::Ok, val },
+                        None => KvResp { status: KvStatus::Miss, val: [0; KV_VAL] },
+                    }),
+                    tag => return Err(LpfError::Illegal(format!("corrupt op tag {tag}"))),
+                };
+                if let Some(r) = reply {
+                    // stage in our own resp window at the op's index, then
+                    // hp-put the 3 words home to pid 0 (self-puts included)
+                    let words = [r.status.to_word(), half(&r.val, 0), half(&r.val, 1)];
+                    bsp.write_local_at(resp, i * RESP_WORDS, &words)?;
+                    bsp.hpput_at(0, resp, i * RESP_WORDS, resp, i * RESP_WORDS, RESP_WORDS)?;
+                }
+            }
+        }
+        bsp.sync()?;
+
+        // --- pid 0 hands the responses back to the front door.
+        if pid == 0 {
+            for i in 0..k {
+                let mut w = [0u64; RESP_WORDS];
+                bsp.read_local_at(resp, i * RESP_WORDS, &mut w)?;
+                batch.put_resp(
+                    i,
+                    KvResp { status: KvStatus::from_word(w[0]), val: unhalf(w[1], w[2]) },
+                );
+            }
+        }
+        bsp.end()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ctx::Platform;
+    use crate::serve::{QueueClass, Serve, ServeConfig};
+
+    fn val(seed: u8) -> [u8; KV_VAL] {
+        let mut v = [0u8; KV_VAL];
+        for (i, b) in v.iter_mut().enumerate() {
+            *b = seed.wrapping_add(i as u8);
+        }
+        v
+    }
+
+    #[test]
+    fn replica_put_get_overwrite_and_full() {
+        let mut r = Replica::new(4);
+        assert_eq!(r.get(7), None);
+        assert_eq!(r.put(7, val(1)), KvStatus::Ok);
+        assert_eq!(r.get(7), Some(val(1)));
+        // overwrite does not consume capacity
+        assert_eq!(r.put(7, val(2)), KvStatus::Ok);
+        assert_eq!(r.get(7), Some(val(2)));
+        for k in 0..3 {
+            assert_eq!(r.put(100 + k, val(k as u8)), KvStatus::Ok);
+        }
+        assert_eq!(r.len, 4);
+        assert_eq!(r.put(999, val(9)), KvStatus::Full, "capacity bound enforced");
+        // existing keys still writable at capacity
+        assert_eq!(r.put(7, val(3)), KvStatus::Ok);
+        assert_eq!(r.get(7), Some(val(3)));
+    }
+
+    #[test]
+    fn op_encoding_roundtrips() {
+        let put = KvOp::put(0xDEAD_BEEF, val(42));
+        let w = put.encode();
+        assert_eq!(w[0], TAG_PUT);
+        assert_eq!(w[1], 0xDEAD_BEEF);
+        assert_eq!(unhalf(w[2], w[3]), val(42));
+        let get = KvOp::get(5);
+        assert_eq!(get.encode()[0], TAG_GET);
+        assert_eq!(get.key(), 5);
+        for s in [KvStatus::Ok, KvStatus::Miss, KvStatus::Full] {
+            assert_eq!(KvStatus::from_word(s.to_word()), s);
+        }
+    }
+
+    #[test]
+    fn kv_serves_puts_and_gets_through_the_front_door() {
+        let p = 2;
+        let tenant = KvTenant::new(p, 256, 8);
+        let serve =
+            Serve::new(Platform::shared().checked(true), p, tenant, ServeConfig::default());
+        // puts land on every replica; gets are answered by the home pid
+        for k in 0..16u64 {
+            let r = serve.submit_wait(QueueClass::Interactive, KvOp::put(k, val(k as u8))).unwrap();
+            assert_eq!(r.status, KvStatus::Ok, "put {k}");
+        }
+        for k in 0..16u64 {
+            let r = serve.submit_wait(QueueClass::Batch, KvOp::get(k)).unwrap();
+            assert_eq!(r.status, KvStatus::Ok, "get {k}");
+            assert_eq!(r.val, val(k as u8), "get {k} value");
+        }
+        let r = serve.submit_wait(QueueClass::Background, KvOp::get(10_000)).unwrap();
+        assert_eq!(r.status, KvStatus::Miss);
+        let stats = serve.stats();
+        assert_eq!(stats.class(QueueClass::Interactive).completed, 16);
+        assert_eq!(stats.class(QueueClass::Batch).completed, 16);
+        assert!(stats.batches_dispatched >= 3);
+        assert_eq!(stats.pool.jobs_completed, stats.batches_dispatched);
+    }
+}

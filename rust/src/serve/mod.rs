@@ -1,0 +1,766 @@
+//! # lpf::serve — a high-throughput serving front door over the hot team
+//!
+//! [`Serve`] turns the persistent [`Pool`] executor into a request-serving
+//! engine. Callers [`submit`](Serve::submit) small requests into one of
+//! three prioritised queues ([`QueueClass`]); a single dispatcher thread
+//! coalesces same-class requests into **batches** and runs each batch as
+//! one prepared SPMD job over the warm team, so the fixed superstep and
+//! dispatch cost (the `ℓ`-side of `T(h) = g·h + ℓ`) is paid once per
+//! batch instead of once per request — see `docs/serve.md` for the cost
+//! model.
+//!
+//! Design pillars:
+//!
+//! * **Admission control, not buffering.** Every queue is bounded; a full
+//!   queue rejects immediately with [`ServeError::Overloaded`] so the
+//!   caller holds the backpressure, never a hidden unbounded buffer.
+//! * **Priority with an anti-starvation valve.** `Interactive` beats
+//!   `Batch` beats `Background`, but any class passed over
+//!   [`ServeConfig::starvation_limit`] times in a row is served next
+//!   regardless of priority.
+//! * **Allocation-free steady state.** Tickets are recycled through a
+//!   bounded freelist, batch request/response vectors are carved out once
+//!   at capacity, the SPMD job is [`Pool::prepare`]d once, and latency
+//!   samples land in fixed rings ([`stats`]). Together with the slot
+//!   recycler in [`crate::memory`] a warm batched dispatch performs zero
+//!   heap allocations (gated by `bench_serve --smoke`).
+//! * **Failure is batch-scoped.** A fatal error inside a batched job
+//!   (e.g. an injected abort) fails exactly the requests of that batch
+//!   with [`ServeError::Job`]; the pool rebuilds cold underneath and the
+//!   next batch proceeds.
+//!
+//! The replicated key-value tenant in [`kv`] is the reference workload;
+//! any [`Tenant`] implementation can sit behind the same front door.
+
+pub mod kv;
+pub mod stats;
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::core::{Args, LpfError, Pid, Result};
+use crate::ctx::{Context, Platform};
+use crate::pool::{Pool, PreparedJob};
+
+pub use stats::{ClassStats, LatencySummary, ServeStats};
+
+// --------------------------------------------------------------- classes
+
+/// Priority class of a submitted request. Lower index wins dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueueClass {
+    /// Latency-sensitive traffic; dispatched first, no linger by default.
+    Interactive,
+    /// Throughput traffic; lingers briefly to fill large batches.
+    Batch,
+    /// Best-effort traffic; served when nothing else waits (or when the
+    /// starvation valve opens).
+    Background,
+}
+
+impl QueueClass {
+    /// All classes in dispatch-priority order.
+    pub const ALL: [QueueClass; 3] =
+        [QueueClass::Interactive, QueueClass::Batch, QueueClass::Background];
+
+    /// Dense index, usable against [`ServeStats::classes`].
+    pub fn index(self) -> usize {
+        match self {
+            QueueClass::Interactive => 0,
+            QueueClass::Batch => 1,
+            QueueClass::Background => 2,
+        }
+    }
+
+    /// Stable lowercase name (used in bench artifacts).
+    pub fn name(self) -> &'static str {
+        match self {
+            QueueClass::Interactive => "interactive",
+            QueueClass::Batch => "batch",
+            QueueClass::Background => "background",
+        }
+    }
+}
+
+impl fmt::Display for QueueClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------- errors
+
+/// Errors surfaced by the front door. `Overloaded` carries only scalars so
+/// the rejection path stays allocation-free.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control refused the request: the class queue is at
+    /// capacity. Back off and retry; nothing was enqueued.
+    Overloaded {
+        /// The class whose queue was full.
+        class: QueueClass,
+        /// Its configured capacity.
+        capacity: usize,
+    },
+    /// The front door is shutting down; queued requests are drained with
+    /// this error and new submissions are refused.
+    ShuttingDown,
+    /// The batched SPMD job carrying this request failed. Every request of
+    /// that batch observes the same error; later batches run on a freshly
+    /// rebuilt team.
+    Job(LpfError),
+}
+
+impl ServeError {
+    /// True for the admission-control rejection (retryable with backoff).
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, ServeError::Overloaded { .. })
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded { class, capacity } => {
+                write!(f, "{class} queue at capacity ({capacity}); request rejected")
+            }
+            ServeError::ShuttingDown => write!(f, "serve front door is shutting down"),
+            ServeError::Job(e) => write!(f, "batched job failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+// ---------------------------------------------------------------- config
+
+/// Per-class tunables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassConfig {
+    /// Queue bound; submissions beyond it get [`ServeError::Overloaded`].
+    pub capacity: usize,
+    /// Most requests coalesced into one SPMD dispatch.
+    pub max_batch: usize,
+    /// How long the dispatcher waits for a batch to fill before running a
+    /// partial one. Zero dispatches whatever is queued immediately.
+    pub max_linger: Duration,
+}
+
+/// Front-door configuration. The defaults favour latency for
+/// `Interactive` (small batches, no linger) and throughput for the other
+/// classes (larger batches, short linger).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    pub interactive: ClassConfig,
+    pub batch: ClassConfig,
+    pub background: ClassConfig,
+    /// A non-empty class passed over this many consecutive dispatches is
+    /// served next regardless of priority.
+    pub starvation_limit: u32,
+    /// Latency samples retained per class and distribution for the
+    /// percentile window in [`ServeStats`].
+    pub stats_window: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            interactive: ClassConfig {
+                capacity: 1024,
+                max_batch: 32,
+                max_linger: Duration::ZERO,
+            },
+            batch: ClassConfig {
+                capacity: 4096,
+                max_batch: 64,
+                max_linger: Duration::from_micros(200),
+            },
+            background: ClassConfig {
+                capacity: 4096,
+                max_batch: 64,
+                max_linger: Duration::from_millis(1),
+            },
+            starvation_limit: 8,
+            stats_window: 4096,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The tunables of `class`.
+    pub fn class(&self, class: QueueClass) -> ClassConfig {
+        match class {
+            QueueClass::Interactive => self.interactive,
+            QueueClass::Batch => self.batch,
+            QueueClass::Background => self.background,
+        }
+    }
+
+    /// The largest `max_batch` across classes — the capacity the shared
+    /// batch buffers are carved to.
+    pub fn max_batch(&self) -> usize {
+        QueueClass::ALL
+            .iter()
+            .map(|c| self.class(*c).max_batch)
+            .max()
+            .unwrap_or(1)
+            .max(1)
+    }
+}
+
+// ---------------------------------------------------------------- tenant
+
+/// A workload served through the front door.
+///
+/// `run_batch` is the SPMD body: it executes **once per process** of the
+/// team, all processes seeing the same [`BatchView`]. Requests are read
+/// directly from the shared view (no copies); each response index must be
+/// written by **exactly one** process via [`BatchView::put_resp`] — the
+/// usual pattern routes request `i` to one owner process, as the
+/// replicated KV tenant does.
+pub trait Tenant: Send + Sync + 'static {
+    /// Request payload. Read-shared across the team while a batch runs.
+    type Req: Send + Sync + 'static;
+    /// Response payload. `Default` fills the slots of a fresh batch.
+    type Resp: Send + Default + 'static;
+
+    /// The SPMD body of one batched dispatch. Returning an error (on any
+    /// process) fails every request of the batch with
+    /// [`ServeError::Job`].
+    fn run_batch(
+        &self,
+        ctx: &mut Context,
+        batch: &mut BatchView<'_, Self::Req, Self::Resp>,
+    ) -> Result<()>;
+}
+
+/// The per-process window onto the in-flight batch.
+pub struct BatchView<'a, Req, Resp> {
+    reqs: &'a [Req],
+    resps: &'a mut [Resp],
+}
+
+impl<'a, Req, Resp> BatchView<'a, Req, Resp> {
+    /// Number of requests in this batch (1 ..= `max_batch`).
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    /// True when the batch carries no requests (never observed by
+    /// tenants; dispatches are skipped for empty batches).
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    /// All requests of the batch, in submission order.
+    pub fn reqs(&self) -> &[Req] {
+        self.reqs
+    }
+
+    /// Request `i`.
+    pub fn req(&self, i: usize) -> &Req {
+        &self.reqs[i]
+    }
+
+    /// Store the response for request `i`. Each index must be written by
+    /// exactly one process of the team (writes are not synchronised
+    /// across processes — disjoint ownership is the tenant's contract).
+    pub fn put_resp(&mut self, i: usize, resp: Resp) {
+        self.resps[i] = resp;
+    }
+}
+
+// ------------------------------------------------------------ batch state
+
+/// Shared request/response buffers of the single in-flight batch. The
+/// dispatcher owns them exclusively between dispatches; during a dispatch
+/// the team reads `reqs` and writes disjoint `resps` indices — the same
+/// `UnsafeCell` discipline `SlotStorage` uses for communication buffers.
+struct BatchState<Req, Resp> {
+    reqs: UnsafeCell<Vec<Req>>,
+    resps: UnsafeCell<Vec<Resp>>,
+    /// First tenant error of the dispatch, if any.
+    error: Mutex<Option<LpfError>>,
+}
+
+// SAFETY: access is phase-disciplined as documented on the struct; the
+// payload bounds mirror what each phase does with the data (shared reads
+// of `Req`, owned sends of `Resp`).
+unsafe impl<Req: Send + Sync, Resp: Send> Sync for BatchState<Req, Resp> {}
+unsafe impl<Req: Send, Resp: Send> Send for BatchState<Req, Resp> {}
+
+impl<Req, Resp> BatchState<Req, Resp> {
+    fn with_capacity(cap: usize) -> BatchState<Req, Resp> {
+        BatchState {
+            reqs: UnsafeCell::new(Vec::with_capacity(cap)),
+            resps: UnsafeCell::new(Vec::with_capacity(cap)),
+            error: Mutex::new(None),
+        }
+    }
+
+    /// Record the first tenant failure of the running dispatch.
+    fn note_error(&self, e: LpfError) {
+        let mut slot = self.error.lock().expect("batch error slot poisoned");
+        slot.get_or_insert(e);
+    }
+}
+
+/// What the prepared SPMD closure captures: the tenant plus the shared
+/// batch buffers. Kept separate from [`ServeShared`] so the closure does
+/// not create a reference cycle through the prepared job.
+struct BatchInner<T: Tenant> {
+    tenant: T,
+    state: BatchState<T::Req, T::Resp>,
+}
+
+// --------------------------------------------------------------- tickets
+
+/// Rendezvous between a submitter and the dispatcher. Recycled through a
+/// bounded freelist so steady-state submission does not allocate.
+struct Ticket<Req, Resp> {
+    state: Mutex<TicketState<Req, Resp>>,
+    cv: Condvar,
+}
+
+struct TicketState<Req, Resp> {
+    /// Present while queued; taken by the dispatcher at batch assembly.
+    req: Option<Req>,
+    outcome: Option<std::result::Result<Resp, ServeError>>,
+    done: bool,
+}
+
+impl<Req, Resp> Ticket<Req, Resp> {
+    fn new() -> Ticket<Req, Resp> {
+        Ticket {
+            state: Mutex::new(TicketState { req: None, outcome: None, done: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, outcome: std::result::Result<Resp, ServeError>) {
+        let mut ts = self.state.lock().expect("ticket poisoned");
+        ts.outcome = Some(outcome);
+        ts.done = true;
+        drop(ts);
+        self.cv.notify_all();
+    }
+}
+
+/// A submitted request's handle. [`wait`](Pending::wait) blocks for the
+/// response. Dropping a `Pending` without waiting is safe: the request
+/// still runs, its response is discarded, and nothing blocks.
+pub struct Pending<T: Tenant> {
+    ticket: Arc<Ticket<T::Req, T::Resp>>,
+    shared: Arc<ServeShared<T>>,
+}
+
+impl<T: Tenant> Pending<T> {
+    /// Block until the carrying batch completes; returns the response or
+    /// the batch's error.
+    pub fn wait(self) -> std::result::Result<T::Resp, ServeError> {
+        let Pending { ticket, shared } = self;
+        let outcome = {
+            let mut ts = ticket.state.lock().expect("ticket poisoned");
+            while !ts.done {
+                ts = ticket.cv.wait(ts).expect("ticket poisoned");
+            }
+            ts.done = false;
+            ts.outcome.take().expect("done ticket has an outcome")
+        };
+        // Recycle the ticket. The freelist is bounded by its preallocated
+        // capacity, so this push never allocates.
+        let mut st = shared.state.lock().expect("serve state poisoned");
+        if st.freelist.len() < st.freelist.capacity() {
+            st.freelist.push(ticket);
+        }
+        drop(st);
+        outcome
+    }
+}
+
+// ------------------------------------------------------------ front door
+
+struct QueueEntry<T: Tenant> {
+    ticket: Arc<Ticket<T::Req, T::Resp>>,
+    enqueued: Instant,
+}
+
+struct DoorState<T: Tenant> {
+    /// One bounded FIFO per class, indexed by [`QueueClass::index`].
+    queues: [VecDeque<QueueEntry<T>>; 3],
+    /// Consecutive dispatches each non-empty class was passed over.
+    skipped: [u32; 3],
+    /// Recycled tickets (bounded; pushes beyond capacity are dropped).
+    freelist: Vec<Arc<Ticket<T::Req, T::Resp>>>,
+    shutdown: bool,
+}
+
+struct ServeShared<T: Tenant> {
+    pool: Pool,
+    batch: Arc<BatchInner<T>>,
+    job: PreparedJob<()>,
+    config: ServeConfig,
+    state: Mutex<DoorState<T>>,
+    /// Signalled on submit and on shutdown; the dispatcher waits here.
+    work_cv: Condvar,
+    tracker: Mutex<stats::Tracker>,
+}
+
+/// The serving front door. See the [module docs](self) for the design.
+pub struct Serve<T: Tenant> {
+    shared: Arc<ServeShared<T>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl<T: Tenant> Serve<T> {
+    /// Build a front door over a fresh hot team of `p` processes.
+    pub fn new(platform: Platform, p: Pid, tenant: T, config: ServeConfig) -> Serve<T> {
+        Serve::over(Pool::new(platform, p), tenant, config)
+    }
+
+    /// Build a front door over an existing pool. The pool may still be
+    /// used directly ([`Pool::exec`] / [`Pool::submit`]); direct jobs and
+    /// batched dispatches interleave through the pool's own FIFO.
+    pub fn over(pool: Pool, tenant: T, config: ServeConfig) -> Serve<T> {
+        let max_batch = config.max_batch();
+        let batch = Arc::new(BatchInner { tenant, state: BatchState::with_capacity(max_batch) });
+        let job = pool.prepare({
+            let batch = Arc::clone(&batch);
+            move |ctx: &mut Context, _args: Args| {
+                // SAFETY: while the team runs, the dispatcher is parked
+                // inside `run_prepared`, so these are the only accessors:
+                // `reqs` is read-only on every process and `resps` writes
+                // are index-disjoint per the `Tenant::run_batch` contract
+                // — the `SlotStorage::bytes_mut` discipline.
+                let reqs: &[T::Req] = unsafe { &*batch.state.reqs.get() };
+                let resps: &mut [T::Resp] = unsafe { &mut *batch.state.resps.get() };
+                let mut view = BatchView { reqs, resps };
+                if let Err(e) = batch.tenant.run_batch(ctx, &mut view) {
+                    batch.state.note_error(e);
+                }
+            }
+        });
+        let ticket_cap: usize = QueueClass::ALL
+            .iter()
+            .map(|c| config.class(*c).capacity)
+            .sum::<usize>()
+            .saturating_add(max_batch);
+        let shared = Arc::new(ServeShared {
+            pool,
+            batch,
+            job,
+            config,
+            state: Mutex::new(DoorState {
+                queues: [
+                    VecDeque::with_capacity(config.interactive.capacity),
+                    VecDeque::with_capacity(config.batch.capacity),
+                    VecDeque::with_capacity(config.background.capacity),
+                ],
+                skipped: [0; 3],
+                freelist: Vec::with_capacity(ticket_cap),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            tracker: Mutex::new(stats::Tracker::new(config.stats_window)),
+        });
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            crate::util::spawn_counted(move || dispatcher_loop(&shared))
+        };
+        Serve { shared, dispatcher: Some(dispatcher) }
+    }
+
+    /// Submit a request into `class`. Returns immediately: `Ok` with a
+    /// [`Pending`] handle once admitted, or [`ServeError::Overloaded`] /
+    /// [`ServeError::ShuttingDown`] without queueing anything.
+    pub fn submit(
+        &self,
+        class: QueueClass,
+        req: T::Req,
+    ) -> std::result::Result<Pending<T>, ServeError> {
+        let shared = &self.shared;
+        let capacity = shared.config.class(class).capacity;
+        let ticket = {
+            let mut st = shared.state.lock().expect("serve state poisoned");
+            if st.shutdown {
+                return Err(ServeError::ShuttingDown);
+            }
+            if st.queues[class.index()].len() >= capacity {
+                drop(st);
+                let mut tr = shared.tracker.lock().expect("serve tracker poisoned");
+                tr.note_rejected(class);
+                return Err(ServeError::Overloaded { class, capacity });
+            }
+            let ticket = st.freelist.pop().unwrap_or_else(|| Arc::new(Ticket::new()));
+            {
+                let mut ts = ticket.state.lock().expect("ticket poisoned");
+                ts.req = Some(req);
+                ts.outcome = None;
+                ts.done = false;
+            }
+            st.queues[class.index()]
+                .push_back(QueueEntry { ticket: Arc::clone(&ticket), enqueued: Instant::now() });
+            ticket
+        };
+        {
+            let mut tr = shared.tracker.lock().expect("serve tracker poisoned");
+            tr.note_submitted(class);
+        }
+        shared.work_cv.notify_all();
+        Ok(Pending { ticket, shared: Arc::clone(shared) })
+    }
+
+    /// [`submit`](Serve::submit) + [`Pending::wait`] in one call.
+    pub fn submit_wait(
+        &self,
+        class: QueueClass,
+        req: T::Req,
+    ) -> std::result::Result<T::Resp, ServeError> {
+        self.submit(class, req)?.wait()
+    }
+
+    /// Snapshot the serving statistics, including the underlying pool's.
+    pub fn stats(&self) -> ServeStats {
+        let pool = self.shared.pool.stats();
+        let tr = self.shared.tracker.lock().expect("serve tracker poisoned");
+        tr.snapshot(pool)
+    }
+
+    /// Zero the serving statistics (the pool's counters are unaffected).
+    pub fn reset_stats(&self) {
+        self.shared.tracker.lock().expect("serve tracker poisoned").reset();
+    }
+
+    /// The underlying hot team (e.g. to install a fault plan or submit
+    /// direct jobs alongside the front door).
+    pub fn pool(&self) -> &Pool {
+        &self.shared.pool
+    }
+
+    /// Team size.
+    pub fn p(&self) -> Pid {
+        self.shared.pool.p()
+    }
+
+    /// The effective configuration.
+    pub fn config(&self) -> &ServeConfig {
+        &self.shared.config
+    }
+}
+
+impl<T: Tenant> Drop for Serve<T> {
+    /// Shut down: refuse new submissions, drain queued requests with
+    /// [`ServeError::ShuttingDown`], let the in-flight batch finish, and
+    /// join the dispatcher.
+    fn drop(&mut self) {
+        let drained: Vec<QueueEntry<T>> = {
+            let mut st = self.shared.state.lock().expect("serve state poisoned");
+            st.shutdown = true;
+            let mut v = Vec::new();
+            for q in &mut st.queues {
+                v.extend(q.drain(..));
+            }
+            v
+        };
+        self.shared.work_cv.notify_all();
+        for entry in drained {
+            let mut ts = entry.ticket.state.lock().expect("ticket poisoned");
+            ts.req = None;
+            drop(ts);
+            entry.ticket.complete(Err(ServeError::ShuttingDown));
+        }
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+// ------------------------------------------------------------ dispatcher
+
+/// Pick the class to serve next: highest priority non-empty, unless a
+/// class has starved past `limit` — then the most-starved one goes first.
+fn pick_class(lens: [usize; 3], skipped: [u32; 3], limit: u32) -> Option<QueueClass> {
+    let mut starved: Option<QueueClass> = None;
+    for c in QueueClass::ALL {
+        if lens[c.index()] > 0 && skipped[c.index()] >= limit {
+            let better = match starved {
+                Some(s) => skipped[c.index()] > skipped[s.index()],
+                None => true,
+            };
+            if better {
+                starved = Some(c);
+            }
+        }
+    }
+    if starved.is_some() {
+        return starved;
+    }
+    QueueClass::ALL.into_iter().find(|c| lens[c.index()] > 0)
+}
+
+fn queue_lens<T: Tenant>(st: &DoorState<T>) -> [usize; 3] {
+    [st.queues[0].len(), st.queues[1].len(), st.queues[2].len()]
+}
+
+fn dispatcher_loop<T: Tenant>(shared: &Arc<ServeShared<T>>) {
+    let max_batch = shared.config.max_batch();
+    let mut inflight: Vec<Arc<Ticket<T::Req, T::Resp>>> = Vec::with_capacity(max_batch);
+    let mut waits_ns: Vec<f64> = Vec::with_capacity(max_batch);
+
+    loop {
+        // ------------------------------------------------ select + batch
+        let class = {
+            let mut st = shared.state.lock().expect("serve state poisoned");
+            let class = loop {
+                if let Some(c) =
+                    pick_class(queue_lens(&st), st.skipped, shared.config.starvation_limit)
+                {
+                    break c;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).expect("serve state poisoned");
+            };
+
+            // Linger: give the batch a chance to fill. Early-out on
+            // shutdown, on a full batch, or when the oldest request has
+            // waited its due.
+            let cfg = shared.config.class(class);
+            if cfg.max_linger > Duration::ZERO {
+                loop {
+                    let q = &st.queues[class.index()];
+                    if st.shutdown || q.len() >= cfg.max_batch {
+                        break;
+                    }
+                    let oldest = match q.front() {
+                        Some(e) => e.enqueued,
+                        None => break, // drained by shutdown while we slept
+                    };
+                    let elapsed = oldest.elapsed();
+                    if elapsed >= cfg.max_linger {
+                        break;
+                    }
+                    let (guard, _timeout) = shared
+                        .work_cv
+                        .wait_timeout(st, cfg.max_linger - elapsed)
+                        .expect("serve state poisoned");
+                    st = guard;
+                }
+            }
+
+            // Assemble: move up to max_batch tickets into the shared
+            // batch buffers. Exclusive access to the buffers here — the
+            // team only touches them inside `run_prepared` below.
+            let k = st.queues[class.index()].len().min(cfg.max_batch);
+            if k == 0 {
+                continue; // shutdown drained the queue; loop re-checks
+            }
+            let now = Instant::now();
+            // SAFETY: dispatcher-exclusive phase, see above.
+            let reqs = unsafe { &mut *shared.batch.state.reqs.get() };
+            let resps = unsafe { &mut *shared.batch.state.resps.get() };
+            reqs.clear();
+            resps.clear();
+            resps.resize_with(k, T::Resp::default);
+            inflight.clear();
+            waits_ns.clear();
+            for _ in 0..k {
+                let entry = st.queues[class.index()].pop_front().expect("len checked");
+                waits_ns.push(now.duration_since(entry.enqueued).as_nanos() as f64);
+                let req = {
+                    let mut ts = entry.ticket.state.lock().expect("ticket poisoned");
+                    ts.req.take().expect("queued ticket carries a request")
+                };
+                reqs.push(req);
+                inflight.push(entry.ticket);
+            }
+
+            // Fairness bookkeeping: the served class resets, every other
+            // non-empty class accrues a skip.
+            st.skipped[class.index()] = 0;
+            for c in QueueClass::ALL {
+                if c != class && !st.queues[c.index()].is_empty() {
+                    st.skipped[c.index()] = st.skipped[c.index()].saturating_add(1);
+                }
+            }
+            class
+        }; // queue lock released before running the batch
+
+        // --------------------------------------------------- run + settle
+        let t0 = Instant::now();
+        let run = shared.pool.run_prepared(&shared.job, Args::none());
+        let service_ns = t0.elapsed().as_nanos() as f64;
+        let tenant_err = shared.batch.state.error.lock().expect("batch error slot poisoned").take();
+        let failure: Option<ServeError> = match run {
+            Err(e) => Some(ServeError::Job(e)),
+            Ok(_) => tenant_err.map(ServeError::Job),
+        };
+
+        {
+            // SAFETY: the team is parked again; dispatcher-exclusive.
+            let resps = unsafe { &mut *shared.batch.state.resps.get() };
+            for (i, ticket) in inflight.drain(..).enumerate() {
+                let outcome = match &failure {
+                    None => Ok(std::mem::take(&mut resps[i])),
+                    Some(f) => Err(f.clone()),
+                };
+                ticket.complete(outcome);
+            }
+            let reqs = unsafe { &mut *shared.batch.state.reqs.get() };
+            reqs.clear();
+        }
+
+        let mut tr = shared.tracker.lock().expect("serve tracker poisoned");
+        tr.note_batch(class, waits_ns.len() as u64);
+        for w in &waits_ns {
+            tr.note_done(class, *w, service_ns, failure.is_none());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_class_prefers_priority_then_starvation() {
+        // plain priority: interactive first, then batch, then background
+        assert_eq!(pick_class([1, 1, 1], [0; 3], 8), Some(QueueClass::Interactive));
+        assert_eq!(pick_class([0, 1, 1], [0; 3], 8), Some(QueueClass::Batch));
+        assert_eq!(pick_class([0, 0, 1], [0; 3], 8), Some(QueueClass::Background));
+        assert_eq!(pick_class([0, 0, 0], [0; 3], 8), None);
+        // starvation valve: background starved past the limit wins
+        assert_eq!(pick_class([1, 1, 1], [0, 0, 8], 8), Some(QueueClass::Background));
+        // most-starved wins among several over the limit
+        assert_eq!(pick_class([0, 1, 1], [0, 9, 12], 8), Some(QueueClass::Background));
+        // an empty class never wins, starved or not
+        assert_eq!(pick_class([1, 0, 0], [0, 99, 99], 8), Some(QueueClass::Interactive));
+    }
+
+    #[test]
+    fn config_defaults_are_coherent() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.max_batch(), 64);
+        assert_eq!(cfg.class(QueueClass::Interactive).max_linger, Duration::ZERO);
+        assert!(cfg.class(QueueClass::Batch).capacity >= cfg.class(QueueClass::Batch).max_batch);
+        for c in QueueClass::ALL {
+            assert_eq!(QueueClass::ALL[c.index()], c);
+        }
+    }
+
+    #[test]
+    fn serve_error_display_names_the_class() {
+        let e = ServeError::Overloaded { class: QueueClass::Interactive, capacity: 4 };
+        assert!(e.is_overloaded());
+        assert!(e.to_string().contains("interactive"));
+        assert!(ServeError::ShuttingDown.to_string().contains("shutting down"));
+        let j = ServeError::Job(LpfError::Fatal("boom".into()));
+        assert!(!j.is_overloaded());
+        assert!(j.to_string().contains("boom"));
+    }
+}

@@ -1,0 +1,293 @@
+//! Latency-SLO tracking for the serving front door.
+//!
+//! Every request contributes two latency samples: **queue wait** (submit →
+//! batch assembly) and **service** (dispatch → completion of the batched
+//! SPMD job it rode in). The [`Tracker`] keeps both per class in
+//! fixed-capacity sample rings so the steady-state record path never
+//! allocates; percentile math happens only at snapshot time, on a sorted
+//! copy, via the shared [`crate::benchkit::percentiles_of`] helper.
+
+use crate::benchkit::{percentiles_of, Percentiles};
+use crate::pool::PoolStats;
+
+use super::QueueClass;
+
+/// Summary of one latency distribution, in nanoseconds. `count` covers the
+/// whole lifetime; the percentiles cover the retained sample window (the
+/// most recent [`super::ServeConfig::stats_window`] samples).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    /// Samples recorded since construction (or the last reset).
+    pub count: u64,
+    /// Lifetime mean, `NaN` when no samples were recorded.
+    pub mean_ns: f64,
+    /// Lifetime maximum, `NaN` when no samples were recorded.
+    pub max_ns: f64,
+    /// p50 / p99 / p999 over the retained window (nearest-rank).
+    pub tail: Percentiles,
+}
+
+/// Per-class serving counters and latency summaries.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassStats {
+    /// Requests admitted past admission control.
+    pub submitted: u64,
+    /// Requests rejected with [`super::ServeError::Overloaded`].
+    pub rejected: u64,
+    /// Requests completed with a response.
+    pub completed: u64,
+    /// Requests completed with an error (their batch failed).
+    pub failed: u64,
+    /// Batched SPMD dispatches on behalf of this class.
+    pub batches: u64,
+    /// Submit → batch-assembly latency.
+    pub queue_wait: LatencySummary,
+    /// Dispatch → job-completion latency of the carrying batch.
+    pub service: LatencySummary,
+}
+
+/// Snapshot returned by [`super::Serve::stats`]: per-class serving stats
+/// plus the underlying [`Pool`](crate::pool::Pool) counters (queue depth,
+/// per-job queue wait, cold resets) so one call tells the whole story.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServeStats {
+    /// Indexed by [`QueueClass::index`].
+    pub classes: [ClassStats; 3],
+    /// Batched dispatches across all classes.
+    pub batches_dispatched: u64,
+    /// Requests carried by those dispatches (ratio = mean batch size).
+    pub batched_requests: u64,
+    /// Counters of the hot-team pool the front door feeds.
+    pub pool: PoolStats,
+}
+
+impl ServeStats {
+    /// The per-class block for `class`.
+    pub fn class(&self, class: QueueClass) -> &ClassStats {
+        &self.classes[class.index()]
+    }
+
+    /// Mean requests per dispatched batch, `NaN` before the first batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches_dispatched == 0 {
+            f64::NAN
+        } else {
+            self.batched_requests as f64 / self.batches_dispatched as f64
+        }
+    }
+}
+
+/// Fixed-window latency recorder. `record` is allocation-free: the ring is
+/// carved out up front and old samples are overwritten in place.
+#[derive(Debug)]
+struct Recorder {
+    ring: Vec<f64>,
+    cap: usize,
+    /// Next overwrite position once the ring is full.
+    next: usize,
+    count: u64,
+    total_ns: f64,
+    max_ns: f64,
+}
+
+impl Recorder {
+    fn new(window: usize) -> Recorder {
+        let cap = window.max(1);
+        Recorder {
+            ring: Vec::with_capacity(cap),
+            cap,
+            next: 0,
+            count: 0,
+            total_ns: 0.0,
+            max_ns: 0.0,
+        }
+    }
+
+    fn record(&mut self, ns: f64) {
+        self.count += 1;
+        self.total_ns += ns;
+        if ns > self.max_ns {
+            self.max_ns = ns;
+        }
+        if self.ring.len() < self.cap {
+            self.ring.push(ns);
+        } else {
+            self.ring[self.next] = ns;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count,
+            mean_ns: if self.count == 0 { f64::NAN } else { self.total_ns / self.count as f64 },
+            max_ns: if self.count == 0 { f64::NAN } else { self.max_ns },
+            tail: percentiles_of(&self.ring),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.ring.clear();
+        self.next = 0;
+        self.count = 0;
+        self.total_ns = 0.0;
+        self.max_ns = 0.0;
+    }
+}
+
+#[derive(Debug)]
+struct ClassTrack {
+    submitted: u64,
+    rejected: u64,
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    queue_wait: Recorder,
+    service: Recorder,
+}
+
+impl ClassTrack {
+    fn new(window: usize) -> ClassTrack {
+        ClassTrack {
+            submitted: 0,
+            rejected: 0,
+            completed: 0,
+            failed: 0,
+            batches: 0,
+            queue_wait: Recorder::new(window),
+            service: Recorder::new(window),
+        }
+    }
+}
+
+/// The live tracker behind [`super::Serve`]. All mutation happens outside
+/// the front-door queue lock (never hold both).
+#[derive(Debug)]
+pub(crate) struct Tracker {
+    classes: [ClassTrack; 3],
+    batches_dispatched: u64,
+    batched_requests: u64,
+}
+
+impl Tracker {
+    pub(crate) fn new(window: usize) -> Tracker {
+        Tracker {
+            classes: [ClassTrack::new(window), ClassTrack::new(window), ClassTrack::new(window)],
+            batches_dispatched: 0,
+            batched_requests: 0,
+        }
+    }
+
+    pub(crate) fn note_submitted(&mut self, class: QueueClass) {
+        self.classes[class.index()].submitted += 1;
+    }
+
+    pub(crate) fn note_rejected(&mut self, class: QueueClass) {
+        self.classes[class.index()].rejected += 1;
+    }
+
+    /// One batched dispatch of `k` requests for `class`.
+    pub(crate) fn note_batch(&mut self, class: QueueClass, k: u64) {
+        self.classes[class.index()].batches += 1;
+        self.batches_dispatched += 1;
+        self.batched_requests += k;
+    }
+
+    /// One finished request: its queue wait, the service time of the batch
+    /// that carried it, and whether it produced a response.
+    pub(crate) fn note_done(
+        &mut self,
+        class: QueueClass,
+        queue_wait_ns: f64,
+        service_ns: f64,
+        ok: bool,
+    ) {
+        let c = &mut self.classes[class.index()];
+        if ok {
+            c.completed += 1;
+        } else {
+            c.failed += 1;
+        }
+        c.queue_wait.record(queue_wait_ns);
+        c.service.record(service_ns);
+    }
+
+    pub(crate) fn snapshot(&self, pool: PoolStats) -> ServeStats {
+        let mut out = ServeStats { pool, ..ServeStats::default() };
+        out.batches_dispatched = self.batches_dispatched;
+        out.batched_requests = self.batched_requests;
+        for (dst, src) in out.classes.iter_mut().zip(self.classes.iter()) {
+            *dst = ClassStats {
+                submitted: src.submitted,
+                rejected: src.rejected,
+                completed: src.completed,
+                failed: src.failed,
+                batches: src.batches,
+                queue_wait: src.queue_wait.summary(),
+                service: src.service.summary(),
+            };
+        }
+        out
+    }
+
+    pub(crate) fn reset(&mut self) {
+        for c in &mut self.classes {
+            c.submitted = 0;
+            c.rejected = 0;
+            c.completed = 0;
+            c.failed = 0;
+            c.batches = 0;
+            c.queue_wait.reset();
+            c.service.reset();
+        }
+        self.batches_dispatched = 0;
+        self.batched_requests = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_window_overwrites_oldest() {
+        let mut r = Recorder::new(4);
+        for i in 1..=6 {
+            r.record(i as f64);
+        }
+        // lifetime counters see all six samples
+        let s = r.summary();
+        assert_eq!(s.count, 6);
+        assert!((s.mean_ns - 3.5).abs() < 1e-9);
+        assert_eq!(s.max_ns, 6.0);
+        // window holds {5, 6, 3, 4}: percentiles over the last four
+        assert_eq!(s.tail.p50, 4.0);
+        assert_eq!(s.tail.p999, 6.0);
+    }
+
+    #[test]
+    fn tracker_snapshot_and_reset() {
+        let mut t = Tracker::new(16);
+        t.note_submitted(QueueClass::Interactive);
+        t.note_submitted(QueueClass::Interactive);
+        t.note_rejected(QueueClass::Background);
+        t.note_batch(QueueClass::Interactive, 2);
+        t.note_done(QueueClass::Interactive, 100.0, 1000.0, true);
+        t.note_done(QueueClass::Interactive, 300.0, 1000.0, false);
+
+        let s = t.snapshot(PoolStats::default());
+        let c = s.class(QueueClass::Interactive);
+        assert_eq!((c.submitted, c.completed, c.failed, c.batches), (2, 1, 1, 1));
+        assert_eq!(s.class(QueueClass::Background).rejected, 1);
+        assert_eq!(c.queue_wait.count, 2);
+        assert!((c.queue_wait.mean_ns - 200.0).abs() < 1e-9);
+        assert_eq!(c.service.tail.p999, 1000.0);
+        assert!((s.mean_batch_size() - 2.0).abs() < 1e-9);
+
+        t.reset();
+        let s = t.snapshot(PoolStats::default());
+        assert_eq!(s.class(QueueClass::Interactive).submitted, 0);
+        assert!(s.mean_batch_size().is_nan());
+        assert!(s.class(QueueClass::Interactive).queue_wait.mean_ns.is_nan());
+    }
+}

@@ -1,0 +1,285 @@
+//! Front-door suite (ISSUE 6): the serving layer over the hot team.
+//!
+//! Pins the tentpole's contracts in `cargo test` (throughput and the
+//! zero-allocation gate run in CI via `bench_serve --smoke`):
+//!
+//! * per-class FIFO and exactly-once completion hold while many threads
+//!   submit through the front door interleaved with direct `Pool::submit`
+//!   / `Pool::exec` jobs on the same team;
+//! * admission control rejects with a clean `Overloaded` error and the
+//!   door recovers once the backlog drains;
+//! * an injected abort inside a batched job fails exactly that batch's
+//!   requests with a clean error class, costs one cold rebuild, and the
+//!   replicated KV store survives into the next batch — on shared and
+//!   rdma fabrics, cold and warm.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use lpf::check::classify;
+use lpf::core::{Args, Pid, Result};
+use lpf::ctx::{Context, Platform};
+use lpf::netsim::faults::{FaultPlan, FaultSpec};
+use lpf::serve::kv::{KvOp, KvStatus, KvTenant, KV_VAL};
+use lpf::serve::{BatchView, ClassConfig, QueueClass, Serve, ServeConfig, ServeError, Tenant};
+
+fn val(seed: u8) -> [u8; KV_VAL] {
+    let mut v = [0u8; KV_VAL];
+    for (i, b) in v.iter_mut().enumerate() {
+        *b = seed.wrapping_add(i as u8);
+    }
+    v
+}
+
+// ----------------------------------------------------------- fifo tenant
+
+/// Records, on pid 0, every request in dispatch order and echoes it back
+/// transformed. No supersteps — a pure dispatch-order probe.
+struct EchoTenant {
+    log: Arc<Mutex<Vec<u64>>>,
+}
+
+const ECHO_XOR: u64 = 0x5A5A_0000_0000_5A5A;
+
+impl Tenant for EchoTenant {
+    type Req = u64;
+    type Resp = u64;
+
+    fn run_batch(&self, ctx: &mut Context, batch: &mut BatchView<'_, u64, u64>) -> Result<()> {
+        if ctx.pid() == 0 {
+            let mut log = self.log.lock().expect("log poisoned");
+            for i in 0..batch.len() {
+                let r = *batch.req(i);
+                log.push(r);
+                batch.put_resp(i, r ^ ECHO_XOR);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn concurrent_submitters_and_direct_pool_jobs_keep_fifo_and_exactly_once() {
+    const SUBMITTERS: u64 = 6;
+    const PER_SUBMITTER: u64 = 64;
+    const DIRECT_JOBS: u64 = 24;
+
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let serve = Serve::new(
+        Platform::shared().checked(true),
+        2,
+        EchoTenant { log: Arc::clone(&log) },
+        ServeConfig::default(),
+    );
+    let direct_sum = AtomicU64::new(0);
+
+    std::thread::scope(|scope| {
+        for s in 0..SUBMITTERS {
+            let serve = &serve;
+            scope.spawn(move || {
+                let class = QueueClass::ALL[(s % 3) as usize];
+                // pipeline the submissions so queue order is actually
+                // exercised, then wait them all
+                let pending: Vec<_> = (0..PER_SUBMITTER)
+                    .map(|q| serve.submit(class, (s << 32) | q).expect("within capacity"))
+                    .collect();
+                for (q, pend) in pending.into_iter().enumerate() {
+                    let resp = pend.wait().expect("batch must complete");
+                    assert_eq!(
+                        resp,
+                        ((s << 32) | q as u64) ^ ECHO_XOR,
+                        "response delivered to the wrong ticket"
+                    );
+                }
+            });
+        }
+        // direct jobs race the dispatcher through the pool's own FIFO
+        let direct_sum = &direct_sum;
+        let serve = &serve;
+        scope.spawn(move || {
+            for j in 0..DIRECT_JOBS {
+                if j % 2 == 0 {
+                    let outs = serve
+                        .pool()
+                        .exec(move |ctx: &mut Context, _| ctx.pid() as u64 + j, Args::none())
+                        .expect("direct exec");
+                    direct_sum.fetch_add(outs.iter().sum::<u64>(), Ordering::Relaxed);
+                } else {
+                    let h = serve
+                        .pool()
+                        .submit(move |ctx: &mut Context, _| ctx.pid() as u64 + j, Args::none());
+                    let outs = h.wait().expect("direct submit");
+                    direct_sum.fetch_add(outs.iter().sum::<u64>(), Ordering::Relaxed);
+                }
+            }
+        });
+    });
+
+    // direct jobs computed correctly despite interleaving
+    let want: u64 = (0..DIRECT_JOBS).map(|j| 2 * j + 1).sum();
+    assert_eq!(direct_sum.load(Ordering::Relaxed), want);
+
+    // exactly-once + per-submitter FIFO: walking the dispatch log, every
+    // submitter's sequence numbers appear 0,1,2,... with no gap, no
+    // repeat, no loss
+    let log = log.lock().expect("log poisoned");
+    assert_eq!(log.len() as u64, SUBMITTERS * PER_SUBMITTER, "lost or duplicated requests");
+    let mut next = [0u64; SUBMITTERS as usize];
+    for r in log.iter() {
+        let (s, q) = ((r >> 32) as usize, r & 0xFFFF_FFFF);
+        assert_eq!(q, next[s], "submitter {s}: out-of-order dispatch");
+        next[s] += 1;
+    }
+    assert!(next.iter().all(|&n| n == PER_SUBMITTER));
+
+    let stats = serve.stats();
+    let completed: u64 = QueueClass::ALL.iter().map(|c| stats.class(*c).completed).sum();
+    assert_eq!(completed, SUBMITTERS * PER_SUBMITTER);
+    assert_eq!(QueueClass::ALL.iter().map(|c| stats.class(*c).failed).sum::<u64>(), 0);
+    // every pool job was either a batch or a direct job — none invented,
+    // none lost
+    assert_eq!(stats.pool.jobs_completed, stats.batches_dispatched + DIRECT_JOBS);
+}
+
+// -------------------------------------------------------------- overload
+
+struct SlowTenant;
+
+impl Tenant for SlowTenant {
+    type Req = ();
+    type Resp = ();
+
+    fn run_batch(&self, _ctx: &mut Context, _batch: &mut BatchView<'_, (), ()>) -> Result<()> {
+        std::thread::sleep(Duration::from_millis(4));
+        Ok(())
+    }
+}
+
+#[test]
+fn admission_control_rejects_when_full_and_recovers() {
+    let capacity = 2;
+    let config = ServeConfig {
+        interactive: ClassConfig {
+            capacity,
+            max_batch: 1,
+            max_linger: Duration::ZERO,
+        },
+        ..ServeConfig::default()
+    };
+    let serve = Serve::new(Platform::shared().checked(true), 2, SlowTenant, config);
+
+    // burst far past capacity: with 4ms service per 1-request batch, the
+    // tight loop must hit a full queue
+    let mut accepted = Vec::new();
+    let mut rejections = 0u64;
+    for _ in 0..24 {
+        match serve.submit(QueueClass::Interactive, ()) {
+            Ok(p) => accepted.push(p),
+            Err(e) => {
+                assert_eq!(
+                    e,
+                    ServeError::Overloaded { class: QueueClass::Interactive, capacity },
+                    "rejection must carry the class and its bound"
+                );
+                assert!(e.is_overloaded());
+                rejections += 1;
+            }
+        }
+    }
+    assert!(rejections > 0, "burst of 24 into a 2-deep queue must overflow");
+    // backpressure is explicit, not destructive: everything admitted
+    // completes
+    for p in accepted {
+        p.wait().expect("admitted requests must complete");
+    }
+    // and the door recovers once the backlog drained
+    serve.submit_wait(QueueClass::Interactive, ()).expect("must recover after drain");
+
+    let stats = serve.stats();
+    assert_eq!(stats.class(QueueClass::Interactive).rejected, rejections);
+    assert!(stats.class(QueueClass::Interactive).queue_wait.count > 0);
+}
+
+// -------------------------------------------------- fault adversary (kv)
+
+/// An injected abort inside a batched KV job: exactly that batch fails,
+/// with a clean error class; one cold rebuild; the host-resident replicas
+/// survive and serve the next batch.
+#[test]
+fn injected_abort_fails_only_its_batch_and_replicas_survive() {
+    for warm in [false, true] {
+        for backend in ["shared", "rdma"] {
+            let platform = match backend {
+                "shared" => Platform::shared().checked(true),
+                _ => Platform::rdma().checked(true),
+            };
+            let p: Pid = 2;
+            let serve = Serve::new(platform, p, KvTenant::new(p, 128, 8), ServeConfig::default());
+            let mode = if warm { "warm" } else { "cold" };
+            let tag = format!("{backend}/{mode}");
+
+            if warm {
+                for k in 0..8u64 {
+                    let r = serve
+                        .submit_wait(QueueClass::Interactive, KvOp::put(k, val(k as u8)))
+                        .unwrap_or_else(|e| panic!("{tag}: warm-up put {k}: {e}"));
+                    assert_eq!(r.status, KvStatus::Ok, "{tag}");
+                }
+            }
+
+            let plan = FaultPlan::one(FaultSpec::AbortAtSuperstep { pid: 1, step: 2 });
+            serve.pool().set_fault_plan(Some(plan.clone()));
+            let resets_before = serve.pool().stats().cold_resets;
+
+            let err = serve
+                .submit_wait(QueueClass::Interactive, KvOp::get(0))
+                .expect_err(&format!("{tag}: the doomed batch must fail"));
+            match &err {
+                ServeError::Job(e) => {
+                    let class = classify(e);
+                    assert!(
+                        class == "peer-aborted" || class == "fatal",
+                        "{tag}: unclean error class {class}: {e:?}"
+                    );
+                }
+                other => panic!("{tag}: expected ServeError::Job, got {other:?}"),
+            }
+            assert_eq!(plan.injections(), 1, "{tag}: fault must fire exactly once");
+            assert_eq!(
+                serve.pool().stats().cold_resets,
+                resets_before + 1,
+                "{tag}: a failed batch costs exactly one cold rebuild"
+            );
+
+            // recovery on the rebuilt team; replicas survive the rebuild
+            if warm {
+                for k in 0..8u64 {
+                    let r = serve
+                        .submit_wait(QueueClass::Interactive, KvOp::get(k))
+                        .unwrap_or_else(|e| panic!("{tag}: post-abort get {k}: {e}"));
+                    assert_eq!(r.status, KvStatus::Ok, "{tag}: key {k} lost in rebuild");
+                    assert_eq!(r.val, val(k as u8), "{tag}: key {k} corrupted");
+                }
+            } else {
+                let r = serve
+                    .submit_wait(QueueClass::Interactive, KvOp::put(7, val(7)))
+                    .unwrap_or_else(|e| panic!("{tag}: post-abort put: {e}"));
+                assert_eq!(r.status, KvStatus::Ok, "{tag}");
+                let r = serve
+                    .submit_wait(QueueClass::Interactive, KvOp::get(7))
+                    .unwrap_or_else(|e| panic!("{tag}: post-abort get: {e}"));
+                assert_eq!((r.status, r.val), (KvStatus::Ok, val(7)), "{tag}");
+            }
+
+            let stats = serve.stats();
+            let c = stats.class(QueueClass::Interactive);
+            assert_eq!(c.failed, 1, "{tag}: exactly the doomed batch's request fails");
+            assert_eq!(
+                c.completed + c.failed,
+                c.submitted,
+                "{tag}: every admitted request settled exactly once"
+            );
+        }
+    }
+}
