@@ -72,7 +72,8 @@ fn pr_step_job(n: usize) -> impl Fn(&mut Context, Args) + Sync {
     }
 }
 
-/// A full 2^10 BSP FFT request: plan + one transform, native local compute.
+/// A full 2^10 BSP FFT request: plan + one transform, native local compute,
+/// split-phase (overlapped) redistribution.
 fn fft_job(n: usize) -> impl Fn(&mut Context, Args) + Sync {
     move |ctx, _| {
         let p = ctx.p();
@@ -84,8 +85,11 @@ fn fft_job(n: usize) -> impl Fn(&mut Context, Args) + Sync {
         let mut rng = XorShift64::new(0xF17 + n as u64 + ctx.pid() as u64);
         let re: Vec<f32> = (0..m).map(|_| rng.unit_f64() as f32 - 0.5).collect();
         let im: Vec<f32> = (0..m).map(|_| rng.unit_f64() as f32 - 0.5).collect();
-        let out = fft.run(&mut bsp, &re, &im).unwrap();
-        std::hint::black_box(&out);
+        let mut out_re = vec![0f32; m];
+        let mut out_im = vec![0f32; m];
+        // the split-phase pipeline: each job exercises the overlapped path
+        fft.run_into_overlapped(&mut bsp, &re, &im, &mut out_re, &mut out_im).unwrap();
+        std::hint::black_box((&out_re, &out_im));
         bsp.end().unwrap();
     }
 }

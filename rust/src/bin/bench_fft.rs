@@ -7,16 +7,26 @@
 //!   baseline (`fft::baseline::fft_radix2_in_place`) vs the rebuilt
 //!   cache-blocked radix-4 native kernel (`fft::local::fft_in_place`)
 //!   across sizes, with the speedup ratio per size;
+//! * **kernel_throughput**: the SIMD head-to-head — the radix-4 kernel
+//!   with the scalar sweeps forced vs the plan-selected lane sweeps,
+//!   in GFLOP/s (5·n·log2 n flops per transform) across sizes;
 //! * **bsp**: cold (construct + first transform) vs warm (steady-state)
 //!   `BspFft::run_into` latency on a worker pool, across process counts
-//!   and backends.
+//!   and backends;
+//! * **overlap**: split-phase efficiency on netsim-rdma — priced
+//!   communication of the bulk redistribution vs the overlapped
+//!   pipeline's *unhidden* remainder (simulated wire ns minus the
+//!   `overlap_ns` credit), i.e. how much of g·h the compute window hid.
 //!
-//! `--smoke` runs a reduced sweep (CI) and additionally asserts the BSP
-//! layer's steady-state guarantees: a window of warm native-path
-//! `BspFft::run_into` calls on the shared backend must perform **zero**
-//! heap allocations (counted by the shared global-allocator hook), and
-//! the native kernel must beat the radix-2 baseline by ≥ 2× at the
-//! largest measured size. A violation exits non-zero and fails CI.
+//! `--smoke` runs a reduced sweep (CI) and additionally asserts the
+//! steady-state guarantees: warm native-path `BspFft::run_into` *and*
+//! `run_into_overlapped` windows on the shared backend must perform
+//! **zero** heap allocations (counted by the shared global-allocator
+//! hook); the native kernel must beat the radix-2 baseline by ≥ 2× and
+//! the lane sweeps must beat the scalar sweeps by ≥ 1.5× at the largest
+//! measured size; and the overlapped pipeline must price ≥ 1.15× less
+//! effective communication than bulk at n=2^20 on rdma, p ∈ {2, 4}. A
+//! violation exits non-zero and fails CI.
 //!
 //! Usage: `bench_fft [--smoke] [--out PATH]`
 
@@ -31,6 +41,7 @@ use lpf::fft::bsp::{Backend, BspFft};
 use lpf::fft::local;
 use lpf::fft::plan::FftPlan;
 use lpf::pool::Pool;
+use lpf::simd::Lane;
 use lpf::util::rng::XorShift64;
 
 #[global_allocator]
@@ -89,6 +100,67 @@ fn bench_kernels(ks: &[u32]) -> Vec<KernelRow> {
             "kernel n=2^{k:<2} radix2 {:>12}  radix4 {:>12}  speedup {:.2}x",
             fmt_ns(row.baseline_ns),
             fmt_ns(row.native_ns),
+            row.speedup
+        );
+        rows.push(row);
+    }
+    rows
+}
+
+// ----------------------------------------------------------- SIMD kernels
+
+struct SimdRow {
+    k: u32,
+    n: usize,
+    lane: Lane,
+    scalar_ns: f64,
+    lane_ns: f64,
+    scalar_gflops: f64,
+    lane_gflops: f64,
+    speedup: f64,
+}
+
+/// Scalar vs lane sweeps of the *same* radix-4 kernel (the two produce
+/// bit-identical output; only the sweep width differs), in GFLOP/s using
+/// the conventional 5·n·log2 n complex-FFT flop count.
+fn bench_simd_kernels(ks: &[u32]) -> Vec<SimdRow> {
+    let mut rows = Vec::new();
+    for &k in ks {
+        let n = 1usize << k;
+        let plan = FftPlan::cached(n).expect("plan");
+        let (re0, im0) = rand_planes(n, 0xCD + k as u64);
+        let mut re = re0.clone();
+        let mut im = im0.clone();
+        let reps = ((1u64 << 24) / n as u64).clamp(3, 500) as u32;
+        let mut time_lane = |lane: Lane| {
+            let s = time_secs(1, reps, || {
+                re.copy_from_slice(&re0);
+                im.copy_from_slice(&im0);
+                local::fft_in_place_with_lane(&plan, &mut re, &mut im, lane).expect("radix4");
+            });
+            std::hint::black_box((&re, &im));
+            s.mean() * 1e9
+        };
+        let scalar_ns = time_lane(Lane::Scalar);
+        let lane_ns = time_lane(plan.lane);
+        let flops = 5.0 * n as f64 * (k as f64);
+        let row = SimdRow {
+            k,
+            n,
+            lane: plan.lane,
+            scalar_ns,
+            lane_ns,
+            scalar_gflops: flops / scalar_ns,
+            lane_gflops: flops / lane_ns,
+            speedup: scalar_ns / lane_ns,
+        };
+        eprintln!(
+            "simd   n=2^{k:<2} scalar {:>12} ({:.2} GF/s) {:?} {:>12} ({:.2} GF/s) speedup {:.2}x",
+            fmt_ns(row.scalar_ns),
+            row.scalar_gflops,
+            row.lane,
+            fmt_ns(row.lane_ns),
+            row.lane_gflops,
             row.speedup
         );
         rows.push(row);
@@ -165,9 +237,10 @@ fn bench_bsp(backend: &'static str, platform: Platform, p: u32, n: usize, reps: 
 }
 
 /// Heap allocations over `runs` steady-state native `BspFft::run_into`
-/// calls on the shared backend, across all `p` processes (the counter is
-/// process-wide, so every process's run must be clean).
-fn count_steady_state_allocs(p: u32, n: usize, runs: u32) -> u64 {
+/// (or `run_into_overlapped`) calls on the shared backend, across all `p`
+/// processes (the counter is process-wide, so every process's run must be
+/// clean).
+fn count_steady_state_allocs(p: u32, n: usize, runs: u32, overlapped: bool) -> u64 {
     let pool = Pool::new(Platform::shared().checked(false), p);
     pool.exec(
         move |ctx, _| {
@@ -179,8 +252,18 @@ fn count_steady_state_allocs(p: u32, n: usize, runs: u32) -> u64 {
             let (re, im) = rand_planes(m, 9 + ctx.pid() as u64);
             let mut o_re = vec![0f32; m];
             let mut o_im = vec![0f32; m];
+            let mut run = |fft: &mut BspFft,
+                           bsp: &mut Bsp,
+                           o_re: &mut Vec<f32>,
+                           o_im: &mut Vec<f32>| {
+                if overlapped {
+                    fft.run_into_overlapped(bsp, &re, &im, o_re, o_im).unwrap();
+                } else {
+                    fft.run_into(bsp, &re, &im, o_re, o_im).unwrap();
+                }
+            };
             for _ in 0..3 {
-                fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                run(&mut fft, &mut bsp, &mut o_re, &mut o_im);
             }
             bsp.sync().unwrap(); // align processes before counting
             if ctx.pid() == 0 {
@@ -188,7 +271,7 @@ fn count_steady_state_allocs(p: u32, n: usize, runs: u32) -> u64 {
             }
             bsp.sync().unwrap(); // nobody proceeds before the counter is on
             for _ in 0..runs {
-                fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                run(&mut fft, &mut bsp, &mut o_re, &mut o_im);
             }
             bsp.sync().unwrap(); // everyone done before the counter stops
             if ctx.pid() == 0 {
@@ -204,20 +287,108 @@ fn count_steady_state_allocs(p: u32, n: usize, runs: u32) -> u64 {
     alloc_counter::count()
 }
 
+// ----------------------------------------------------------------- overlap
+
+struct OverlapRow {
+    p: u32,
+    n: usize,
+    /// Simulated wire ns one bulk `run_into` prices (per run).
+    bulk_comm_ns: f64,
+    /// Simulated wire ns one overlapped run prices (per run; the split
+    /// pipeline pays extra superstep latencies, so this can exceed bulk).
+    split_comm_ns: f64,
+    /// Mean `overlap_ns` credit per overlapped run — communication the
+    /// compute window hid.
+    hidden_ns: f64,
+    /// `split_comm_ns − hidden_ns`: the communication that remains on the
+    /// critical path.
+    effective_ns: f64,
+    /// `bulk_comm_ns / effective_ns` — the headline overlap efficiency.
+    comm_speedup: f64,
+}
+
+/// Priced-communication head-to-head on netsim-rdma: how much of the
+/// redistribution's g·h does the overlapped pipeline hide behind the
+/// step-4 compute? Wire time is simulated (deterministic), the credit is
+/// `min(compute window, in-flight cost)` per chunk superstep.
+fn bench_overlap(p: u32, n: usize, reps: u32) -> OverlapRow {
+    let pool = Pool::new(Platform::rdma(), p);
+    let outs = pool
+        .exec(
+            move |ctx, _| {
+                let m = n / ctx.p() as usize;
+                let mut bsp =
+                    Bsp::begin_with_staging(ctx, 8, 4 * ctx.p() as usize + 8, 64).unwrap();
+                bsp.sync().unwrap();
+                let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+                bsp.sync().unwrap();
+                let (re, im) = rand_planes(m, 2 + ctx.pid() as u64);
+                let mut o_re = vec![0f32; m];
+                let mut o_im = vec![0f32; m];
+                fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                fft.run_into_overlapped(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                let sim0 = bsp.lpf().sim_time_ns().expect("rdma is simulated");
+                for _ in 0..reps {
+                    fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                }
+                let sim1 = bsp.lpf().sim_time_ns().unwrap();
+                let hid0 = bsp.lpf().stats().overlap_ns;
+                for _ in 0..reps {
+                    fft.run_into_overlapped(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                }
+                let sim2 = bsp.lpf().sim_time_ns().unwrap();
+                let hid1 = bsp.lpf().stats().overlap_ns;
+                std::hint::black_box((&o_re, &o_im));
+                bsp.end().unwrap();
+                let r = reps as f64;
+                ((sim1 - sim0) / r, (sim2 - sim1) / r, (hid1 - hid0) as f64 / r)
+            },
+            Args::none(),
+        )
+        .expect("overlap bench job");
+    // the slowest process bounds the priced h-relation; take the least
+    // hidden credit so the efficiency claim is conservative
+    let bulk = outs.iter().map(|o| o.0).fold(0.0, f64::max);
+    let split = outs.iter().map(|o| o.1).fold(0.0, f64::max);
+    let hidden = outs.iter().map(|o| o.2).fold(f64::INFINITY, f64::min);
+    let effective = (split - hidden).max(1.0);
+    let row = OverlapRow {
+        p,
+        n,
+        bulk_comm_ns: bulk,
+        split_comm_ns: split,
+        hidden_ns: hidden,
+        effective_ns: effective,
+        comm_speedup: bulk / effective,
+    };
+    eprintln!(
+        "overlap rdma p={} n=2^{:<2} bulk {:>12}  split {:>12}  hidden {:>12}  -> {:.2}x",
+        p,
+        n.trailing_zeros(),
+        fmt_ns(row.bulk_comm_ns),
+        fmt_ns(row.split_comm_ns),
+        fmt_ns(row.hidden_ns),
+        row.comm_speedup
+    );
+    row
+}
+
 // ---------------------------------------------------------------- output
 
 fn write_json(
     path: &str,
     kernels: &[KernelRow],
-    alloc_check: Option<(u32, u32, u64)>,
+    simd: &[SimdRow],
+    alloc_check: Option<(u32, u32, u64, u64)>,
     bsp: &[BspRow],
+    overlap: &[OverlapRow],
 ) {
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"bench_fft/v1\",\n");
-    if let Some((p, runs, allocs)) = alloc_check {
+    s.push_str("{\n  \"schema\": \"bench_fft/v2\",\n");
+    if let Some((p, runs, allocs, allocs_ovl)) = alloc_check {
         s.push_str(&format!(
             "  \"alloc_check\": {{ \"backend\": \"shared\", \"p\": {p}, \"runs\": {runs}, \
-             \"allocations\": {allocs} }},\n"
+             \"allocations\": {allocs}, \"allocations_overlapped\": {allocs_ovl} }},\n"
         ));
     }
     s.push_str("  \"kernel\": [\n");
@@ -233,6 +404,23 @@ fn write_json(
             if i + 1 < kernels.len() { "," } else { "" }
         ));
     }
+    s.push_str("  ],\n  \"kernel_throughput\": [\n");
+    for (i, r) in simd.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"k\": {}, \"n\": {}, \"lane\": \"{:?}\", \"scalar_ns\": {}, \
+             \"lane_ns\": {}, \"scalar_gflops\": {}, \"lane_gflops\": {}, \
+             \"speedup\": {} }}{}\n",
+            r.k,
+            r.n,
+            r.lane,
+            json_f64(r.scalar_ns),
+            json_f64(r.lane_ns),
+            json_f64(r.scalar_gflops),
+            json_f64(r.lane_gflops),
+            json_f64(r.speedup),
+            if i + 1 < simd.len() { "," } else { "" }
+        ));
+    }
     s.push_str("  ],\n  \"bsp\": [\n");
     for (i, r) in bsp.iter().enumerate() {
         s.push_str(&format!(
@@ -245,6 +433,22 @@ fn write_json(
             json_f64(r.warm_ns),
             json_f64(r.warm_ci95_ns),
             if i + 1 < bsp.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"overlap\": [\n");
+    for (i, r) in overlap.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"backend\": \"rdma\", \"p\": {}, \"n\": {}, \"bulk_comm_ns\": {}, \
+             \"split_comm_ns\": {}, \"hidden_ns\": {}, \"effective_ns\": {}, \
+             \"comm_speedup\": {} }}{}\n",
+            r.p,
+            r.n,
+            json_f64(r.bulk_comm_ns),
+            json_f64(r.split_comm_ns),
+            json_f64(r.hidden_ns),
+            json_f64(r.effective_ns),
+            json_f64(r.comm_speedup),
+            if i + 1 < overlap.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -264,6 +468,7 @@ fn main() {
     // 2^20 anchors the headline speedup in both modes
     let ks: Vec<u32> = if smoke { vec![12, 16, 20] } else { vec![10, 12, 14, 16, 18, 20] };
     let kernels = bench_kernels(&ks);
+    let simd = bench_simd_kernels(&ks);
 
     let (bsp_n, reps) = if smoke { (1usize << 14, 10u32) } else { (1usize << 14, 40u32) };
     let mut bsp = Vec::new();
@@ -272,20 +477,29 @@ fn main() {
         bsp.push(bench_bsp("rdma", Platform::rdma(), p, bsp_n, reps));
     }
 
+    // the overlap headline is at the acceptance size 2^20 in both modes;
+    // wire time is simulated so few reps suffice
+    let overlap: Vec<OverlapRow> =
+        [2u32, 4].iter().map(|&p| bench_overlap(p, 1 << 20, if smoke { 2 } else { 5 })).collect();
+
     let alloc_check = if smoke {
         const RUNS: u32 = 20;
-        let allocs = count_steady_state_allocs(4, 1 << 12, RUNS);
-        eprintln!("alloc check: {allocs} allocations over {RUNS} steady-state BSP FFT runs");
-        Some((4u32, RUNS, allocs))
+        let allocs = count_steady_state_allocs(4, 1 << 12, RUNS, false);
+        let allocs_ovl = count_steady_state_allocs(4, 1 << 12, RUNS, true);
+        eprintln!(
+            "alloc check: {allocs} allocations over {RUNS} steady-state BSP FFT runs, \
+             {allocs_ovl} over {RUNS} overlapped runs"
+        );
+        Some((4u32, RUNS, allocs, allocs_ovl))
     } else {
         None
     };
 
-    write_json(&out, &kernels, alloc_check, &bsp);
+    write_json(&out, &kernels, &simd, alloc_check, &bsp, &overlap);
     eprintln!("wrote {out}");
 
     let mut failed = false;
-    if let Some((_, _, allocs)) = alloc_check {
+    if let Some((_, _, allocs, allocs_ovl)) = alloc_check {
         if allocs != 0 {
             eprintln!(
                 "FAIL: steady-state BspFft::run_into allocated {allocs} times (expected 0)"
@@ -293,6 +507,15 @@ fn main() {
             failed = true;
         } else {
             eprintln!("OK: steady-state BSP FFT is allocation-free");
+        }
+        if allocs_ovl != 0 {
+            eprintln!(
+                "FAIL: steady-state run_into_overlapped allocated {allocs_ovl} times \
+                 (expected 0)"
+            );
+            failed = true;
+        } else {
+            eprintln!("OK: steady-state overlapped BSP FFT is allocation-free");
         }
     }
     if smoke {
@@ -305,6 +528,31 @@ fn main() {
             failed = true;
         } else {
             eprintln!("OK: native kernel {:.2}x over radix-2 at n=2^{}", top.speedup, top.k);
+        }
+        let top_simd = simd.last().expect("simd rows");
+        if top_simd.speedup < 1.5 {
+            eprintln!(
+                "FAIL: lane sweeps {:.2}x over scalar at n=2^{} (expected >= 1.5x)",
+                top_simd.speedup, top_simd.k
+            );
+            failed = true;
+        } else {
+            eprintln!(
+                "OK: lane sweeps {:.2}x over scalar at n=2^{}",
+                top_simd.speedup, top_simd.k
+            );
+        }
+        for r in &overlap {
+            if r.comm_speedup < 1.15 {
+                eprintln!(
+                    "FAIL: overlapped pipeline priced {:.2}x at p={} (expected >= 1.15x \
+                     effective-communication advantage)",
+                    r.comm_speedup, r.p
+                );
+                failed = true;
+            } else {
+                eprintln!("OK: overlapped pipeline {:.2}x at p={}", r.comm_speedup, r.p);
+            }
         }
     }
     if failed {

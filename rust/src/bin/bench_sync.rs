@@ -168,6 +168,112 @@ fn count_steady_state_allocs(p: Pid, msgs: usize, bytes: usize, iters: u32) -> u
     alloc_counter::count()
 }
 
+// ----------------------------------------------------------------- overlap
+
+/// One overlap-efficiency measurement: split-phase supersteps of a fixed
+/// h-relation with a calibrated busy-spin between `sync_begin` and
+/// `sync_end`, reporting how much of the priced wire time the compute
+/// window hid (`overlap_ns` credit / in-flight cost).
+struct OverlapPoint {
+    /// Target compute width per superstep, as a fraction of the in-flight
+    /// cost (0 = back-to-back begin/end, like a bulk sync).
+    width_frac: f64,
+    compute_ns: f64,
+    overlap_ns: f64,
+    hidden_frac: f64,
+}
+
+struct OverlapCase {
+    backend: &'static str,
+    p: Pid,
+    h_bytes: f64,
+    /// Priced in-flight cost of one split data phase (the credit ceiling),
+    /// measured with a compute window far wider than any wire time.
+    inflight_ns: f64,
+    points: Vec<OverlapPoint>,
+}
+
+/// Busy-spin for roughly `ns` wall nanoseconds (the overlapped "compute").
+fn spin_for_ns(ns: f64) {
+    if ns <= 0.0 {
+        return;
+    }
+    let t0 = Instant::now();
+    while (t0.elapsed().as_nanos() as f64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+/// Mean `overlap_ns` credit per split superstep with a `busy_ns` compute
+/// window, on a fresh fabric (so the stats delta is exactly this run's).
+fn overlap_credit_per_step(
+    backend: &'static str,
+    p: Pid,
+    msgs: usize,
+    bytes: usize,
+    iters: u32,
+    busy_ns: f64,
+) -> f64 {
+    let fab = backend_fabric(backend, p, true);
+    std::thread::scope(|s| {
+        for pid in 0..p {
+            let fab = fab.clone();
+            s.spawn(move || {
+                let (src, dst) = setup_slots(fab.as_ref(), pid, p, msgs, bytes);
+                let reqs = build_requests(pid, p, msgs, bytes, src, dst);
+                for _ in 0..3 {
+                    fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+                }
+                fab.barrier(pid).unwrap();
+                for _ in 0..iters {
+                    fab.sync_begin(pid, &reqs, SYNC_DEFAULT).unwrap();
+                    spin_for_ns(busy_ns);
+                    fab.sync_end(pid).unwrap();
+                }
+            });
+        }
+    });
+    fab.stats(0).overlap_ns as f64 / iters as f64
+}
+
+/// Sweep compute widths against one h-relation per netsim backend: the
+/// achieved hidden fraction of the in-flight g·h versus the width of the
+/// compute window the caller provides.
+fn measure_overlap(
+    backend: &'static str,
+    p: Pid,
+    msgs: usize,
+    bytes: usize,
+    iters: u32,
+) -> OverlapCase {
+    let h = ((p - 1) as usize * msgs * bytes) as f64;
+    // ceiling: with compute far wider than any simulated wire time here,
+    // the credit saturates at the in-flight cost itself
+    let inflight = overlap_credit_per_step(backend, p, msgs, bytes, iters, 500_000.0);
+    let widths = [0.0f64, 0.5, 2.0];
+    let points = widths
+        .iter()
+        .map(|&w| {
+            let busy = w * inflight;
+            let credit = overlap_credit_per_step(backend, p, msgs, bytes, iters, busy);
+            OverlapPoint {
+                width_frac: w,
+                compute_ns: busy,
+                overlap_ns: credit,
+                hidden_frac: if inflight > 0.0 { credit / inflight } else { 0.0 },
+            }
+        })
+        .collect();
+    let case = OverlapCase { backend, p, h_bytes: h, inflight_ns: inflight, points };
+    for pt in &case.points {
+        eprintln!(
+            "overlap {:>6} p={} h={}B width={:.1}x: hid {:>10.0} of {:>10.0} ns ({:.0}%)",
+            backend, p, h, pt.width_frac, pt.overlap_ns, inflight, pt.hidden_frac * 100.0
+        );
+    }
+    case
+}
+
 // ---------------------------------------------------------------- dispatch
 
 /// Warm/cold job-dispatch summary, folded into BENCH_sync.json so a single
@@ -307,9 +413,10 @@ fn write_json(
     cases: &[CaseResult],
     alloc_check: Option<(u32, u64)>,
     dispatch: &DispatchSummary,
+    overlap: &[OverlapCase],
 ) {
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"bench_sync/v2\",\n");
+    s.push_str("{\n  \"schema\": \"bench_sync/v3\",\n");
     if let Some((steps, allocs)) = alloc_check {
         s.push_str(&format!(
             "  \"alloc_check\": {{ \"backend\": \"shared\", \"supersteps\": {steps}, \
@@ -353,6 +460,29 @@ fn write_json(
             ));
         }
         s.push_str(&format!(" ] }}{}\n", if i + 1 < cases.len() { "," } else { "" }));
+    }
+    s.push_str("  ],\n  \"overlap\": [\n");
+    for (i, c) in overlap.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"backend\": \"{}\", \"p\": {}, \"h_bytes\": {}, \"inflight_ns\": {},\n",
+            c.backend,
+            c.p,
+            json_f64(c.h_bytes),
+            json_f64(c.inflight_ns)
+        ));
+        s.push_str("      \"points\": [");
+        for (j, pt) in c.points.iter().enumerate() {
+            s.push_str(&format!(
+                "{}{{ \"width_frac\": {}, \"compute_ns\": {}, \"overlap_ns\": {}, \
+                 \"hidden_frac\": {} }}",
+                if j > 0 { ", " } else { "" },
+                json_f64(pt.width_frac),
+                json_f64(pt.compute_ns),
+                json_f64(pt.overlap_ns),
+                json_f64(pt.hidden_frac)
+            ));
+        }
+        s.push_str(&format!(" ] }}{}\n", if i + 1 < overlap.len() { "," } else { "" }));
     }
     s.push_str("  ]\n}\n");
     std::fs::write(path, s).expect("write BENCH_sync.json");
@@ -403,6 +533,14 @@ fn main() {
         None
     };
 
+    // overlap efficiency: netsim backends price the in-flight window, so
+    // the hidden fraction of g·h is a deterministic credit to measure
+    let overlap_iters = if smoke { 5 } else { 20 };
+    let overlap: Vec<OverlapCase> = ["rdma", "msg"]
+        .iter()
+        .map(|&b| measure_overlap(b, 4, 16, 256, overlap_iters))
+        .collect();
+
     let dispatch =
         if smoke { measure_dispatch(4, 10, 100) } else { measure_dispatch(4, 40, 400) };
     eprintln!(
@@ -411,16 +549,43 @@ fn main() {
         dispatch.warm_over_cold
     );
 
-    write_json(&out, &cases, alloc_check, &dispatch);
+    write_json(&out, &cases, alloc_check, &dispatch, &overlap);
     eprintln!("wrote {out}");
 
+    let mut failed = false;
     if let Some((_, allocs)) = alloc_check {
         if allocs != 0 {
             eprintln!(
                 "FAIL: steady-state shared-backend supersteps allocated {allocs} times (expected 0)"
             );
-            std::process::exit(1);
+            failed = true;
+        } else {
+            eprintln!("OK: steady state is allocation-free");
         }
-        eprintln!("OK: steady state is allocation-free");
+    }
+    if smoke {
+        // an ample compute window (2x the wire time) must hide nearly all
+        // of the in-flight cost — the credit is min(compute, inflight)
+        for c in &overlap {
+            let ample = c.points.iter().find(|pt| pt.width_frac >= 2.0).expect("ample point");
+            if c.inflight_ns > 0.0 && ample.hidden_frac < 0.9 {
+                eprintln!(
+                    "FAIL: {} hid only {:.0}% of the in-flight cost with an ample \
+                     compute window (expected >= 90%)",
+                    c.backend,
+                    ample.hidden_frac * 100.0
+                );
+                failed = true;
+            } else {
+                eprintln!(
+                    "OK: {} hides {:.0}% of g*h behind an ample compute window",
+                    c.backend,
+                    ample.hidden_frac * 100.0
+                );
+            }
+        }
+    }
+    if failed {
+        std::process::exit(1);
     }
 }

@@ -384,6 +384,25 @@ impl<'a> Bsp<'a> {
         Ok(())
     }
 
+    /// Split-phase `bsp_sync`, first half: launch the exchange and return
+    /// while the bytes are in flight (see
+    /// [`Context::sync_begin`](crate::ctx::Context::sync_begin)). No
+    /// registered window — and no staging byte — may be touched until
+    /// [`sync_end`](Bsp::sync_end) fences; BSPlib's high-performance rule,
+    /// held across the whole begin→end window.
+    pub fn sync_begin(&mut self) -> Result<()> {
+        self.ctx.sync_begin(SYNC_DEFAULT)
+    }
+
+    /// Split-phase `bsp_sync`, second half: complete delivery and the
+    /// barrier. The staging area resets here (the buffered snapshots it
+    /// holds are only dead once delivery has fenced).
+    pub fn sync_end(&mut self) -> Result<()> {
+        self.ctx.sync_end()?;
+        self.staging_used = 0;
+        Ok(())
+    }
+
     /// `bsp_end`: release resources (registrations + staging). Their slot
     /// storage is parked by the memory layer for the next same-shaped
     /// `begin` (allocation-free warm restarts).

@@ -11,11 +11,13 @@
 //!   CRCW overlap storms, served gets, an empty superstep), designed to
 //!   satisfy the trigger contract of
 //!   [`FaultPlan::from_seed`](crate::netsim::faults::FaultPlan::from_seed);
-//! * [`run_case`] — one (backend, cold/warm) execution of a workload on a
-//!   [`Pool`], with optional fault injection, recording the outcome, the
-//!   pool's cold-rebuild count, and whether the team recovered;
+//! * [`run_case`] — one (backend, cold/warm, bulk/split) execution of a
+//!   workload on a [`Pool`], with optional fault injection, recording the
+//!   outcome, the pool's cold-rebuild count, and whether the team
+//!   recovered;
 //! * [`differential`] — the full matrix: `{shared, rdma, msg, hybrid} ×
-//!   {cold, warm}` against one reference run, asserting
+//!   {cold, warm} × {bulk, split-phase}` against one reference run
+//!   (shared / cold / bulk), asserting
 //!   - absorbed (model-legal) faults are invisible: memory and stats
 //!     bit-identical to the unperturbed reference;
 //!   - reportable faults surface as a clean [`LpfError`] of the *same
@@ -91,15 +93,45 @@ pub struct Observation {
 /// Any internal failure propagates by panic: the abort machinery then
 /// guarantees peers fail with `PeerAborted` instead of hanging — exactly
 /// the clean-failure path the checker wants to observe under injection.
+///
+/// Under [`SyncMode::Split`] every superstep runs split-phase
+/// (`sync_begin` → local compute → `sync_end`), so injected faults land
+/// *inside* the begin→end window while the process is busy elsewhere —
+/// the observational-equivalence claim the split-phase engine makes.
 pub fn adversary(seed: u32) -> impl Fn(&mut Context, Args) -> Observation + Send + Sync + Copy {
+    adversary_in(seed, SyncMode::Bulk)
+}
+
+/// [`adversary`], parameterised over the superstep style. The split
+/// variant must produce an [`Observation`] bit-identical to the bulk one:
+/// the data and the uniform statistics cannot depend on when the exchange
+/// was in flight (overlap time is excluded from stats equality).
+pub fn adversary_in(
+    seed: u32,
+    sync: SyncMode,
+) -> impl Fn(&mut Context, Args) -> Observation + Send + Sync + Copy {
     move |ctx, _| {
+        // One superstep boundary in the requested style. The split arm
+        // spins a little deterministic compute inside the begin→end
+        // window, so in-flight faults genuinely overlap local work.
+        let superstep = |ctx: &mut Context, busy: &mut u64| match sync {
+            SyncMode::Bulk => ctx.sync(SYNC_DEFAULT).unwrap(),
+            SyncMode::Split => {
+                ctx.sync_begin(SYNC_DEFAULT).unwrap();
+                for i in 0..512u64 {
+                    *busy = busy.wrapping_mul(6364136223846793005).wrapping_add(i);
+                }
+                ctx.sync_end().unwrap();
+            }
+        };
+        let mut busy = seed as u64;
         let p = ctx.p();
         let me = ctx.pid();
         let dst_len = 64 * p as usize + 64;
         // superstep 0: the bootstrap fence
         ctx.resize_memory_register(4).unwrap();
         ctx.resize_message_queue(8 * p as usize + 8).unwrap();
-        ctx.sync(SYNC_DEFAULT).unwrap();
+        superstep(ctx, &mut busy);
         // registrations 0 and 1 (the FailSlotRegister window)
         let src = ctx.register_global(64).unwrap();
         let dst = ctx.register_global(dst_len).unwrap();
@@ -121,16 +153,18 @@ pub fn adversary(seed: u32) -> impl Fn(&mut Context, Args) -> Observation + Send
             ctx.put(src, 48 + i * 4, storm_target, dst, storm_base + 32 + i * 4, 4, MSG_DEFAULT)
                 .unwrap();
         }
-        ctx.sync(SYNC_DEFAULT).unwrap();
+        superstep(ctx, &mut busy);
 
         // superstep 2: get 8 bytes from the successor's source block
         let succ = (me + 1) % p;
         ctx.get(succ, src, 8, dst, storm_base + 48, 8, MSG_DEFAULT).unwrap();
-        ctx.sync(SYNC_DEFAULT).unwrap();
+        superstep(ctx, &mut busy);
 
         // superstep 3: empty (faults may target it)
-        ctx.sync(SYNC_DEFAULT).unwrap();
+        superstep(ctx, &mut busy);
 
+        // keep the busy-loop observable so it cannot be optimised away
+        std::hint::black_box(busy);
         let mut mem = vec![0u8; dst_len];
         ctx.read_slot(dst, 0, &mut mem).unwrap();
         Observation { mem, stats: ctx.stats() }
@@ -156,11 +190,32 @@ impl ExecMode {
     }
 }
 
-/// Outcome of one (backend, mode) case.
+/// Bulk = every superstep is one `sync` call; split = every superstep is
+/// a `sync_begin`/`sync_end` pair with local compute in the window. The
+/// model says the two are observationally equivalent — this is the third
+/// axis of the differential matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    Bulk,
+    Split,
+}
+
+impl SyncMode {
+    /// Lower-case label for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncMode::Bulk => "bulk",
+            SyncMode::Split => "split",
+        }
+    }
+}
+
+/// Outcome of one (backend, mode, sync style) case.
 #[derive(Debug)]
 pub struct CaseOutcome {
     pub backend: &'static str,
     pub mode: ExecMode,
+    pub sync: SyncMode,
     /// Per-pid observations, or the job's first error in pid order.
     pub result: Result<Vec<Observation>, LpfError>,
     /// Cold rebuilds the measured job caused (0 clean, 1 after a fault).
@@ -182,13 +237,27 @@ impl CaseOutcome {
 }
 
 /// Run the adversary workload once on `platform` under `mode`, with an
-/// optional fault plan installed, and capture the full outcome.
+/// optional fault plan installed, and capture the full outcome. Bulk
+/// supersteps; see [`run_case_in`] for the split-phase variant.
 pub fn run_case(
     backend: &'static str,
     platform: &Platform,
     p: Pid,
     seed: u32,
     mode: ExecMode,
+    plan: Option<Arc<FaultPlan>>,
+) -> CaseOutcome {
+    run_case_in(backend, platform, p, seed, mode, SyncMode::Bulk, plan)
+}
+
+/// [`run_case`] with the superstep style as an explicit axis.
+pub fn run_case_in(
+    backend: &'static str,
+    platform: &Platform,
+    p: Pid,
+    seed: u32,
+    mode: ExecMode,
+    sync: SyncMode,
     plan: Option<Arc<FaultPlan>>,
 ) -> CaseOutcome {
     let pool = Pool::new(platform.clone(), p);
@@ -199,7 +268,7 @@ pub fn run_case(
     }
     pool.set_fault_plan(plan.clone());
     let before = pool.stats();
-    let result = pool.exec(adversary(seed), Args::none());
+    let result = pool.exec(adversary_in(seed, sync), Args::none());
     let after = pool.stats();
     // serviceability: fault or not, the next job must run cleanly (after
     // a reported fault the pool cold-rebuilds the team first)
@@ -207,6 +276,7 @@ pub fn run_case(
     CaseOutcome {
         backend,
         mode,
+        sync,
         result,
         cold_resets: after.cold_resets - before.cold_resets,
         recovered,
@@ -238,10 +308,11 @@ impl DiffReport {
 }
 
 /// Run the differential matrix: the adversary workload on every backend,
-/// cold and warm, against a fault-free shared/cold reference, optionally
-/// under a fault derived from `fault_seed` (a fresh plan instance per
-/// case, so the fault fires in each). Returns the full report; violations
-/// are collected, not panicked, so sweeps can report every failure.
+/// cold and warm, **bulk and split-phase**, against a fault-free
+/// shared/cold/bulk reference, optionally under a fault derived from
+/// `fault_seed` (a fresh plan instance per case, so the fault fires in
+/// each). Returns the full report; violations are collected, not
+/// panicked, so sweeps can report every failure.
 pub fn differential(p: Pid, workload_seed: u32, fault_seed: Option<u64>) -> DiffReport {
     let backends = all_backends();
     let (fault_desc, absorbed, wire_only) = match fault_seed {
@@ -267,14 +338,17 @@ pub fn differential(p: Pid, workload_seed: u32, fault_seed: Option<u64>) -> Diff
     let mut cases = Vec::new();
     for (name, platform) in &backends {
         for mode in [ExecMode::Cold, ExecMode::Warm] {
-            let plan = fault_seed.map(|s| FaultPlan::from_seed(s, p));
-            cases.push(run_case(*name, platform, p, workload_seed, mode, plan));
+            for sync in [SyncMode::Bulk, SyncMode::Split] {
+                let plan = fault_seed.map(|s| FaultPlan::from_seed(s, p));
+                cases.push(run_case_in(*name, platform, p, workload_seed, mode, sync, plan));
+            }
         }
     }
 
     if !ref_obs.is_empty() {
         for case in &cases {
-            let tag = format!("{}/{}", case.backend, case.mode.name());
+            let tag =
+                format!("{}/{}/{}", case.backend, case.mode.name(), case.sync.name());
             match absorbed {
                 // no fault, or a model-legal one: the run must succeed and
                 // match the reference bit for bit (memory AND stats)
@@ -335,7 +409,9 @@ pub fn differential(p: Pid, workload_seed: u32, fault_seed: Option<u64>) -> Diff
             if classes.windows(2).any(|w| w[0] != w[1]) {
                 let detail: Vec<String> = cases
                     .iter()
-                    .map(|c| format!("{}/{}={}", c.backend, c.mode.name(), c.class()))
+                    .map(|c| {
+                        format!("{}/{}/{}={}", c.backend, c.mode.name(), c.sync.name(), c.class())
+                    })
                     .collect();
                 violations.push(format!(
                     "error classification diverged across backends: {}",
@@ -382,5 +458,21 @@ mod tests {
         let cold = run_case("rdma", &plat, 4, 5, ExecMode::Cold, None);
         let warm = run_case("rdma", &plat, 4, 5, ExecMode::Warm, None);
         assert_eq!(cold.result.unwrap(), warm.result.unwrap());
+    }
+
+    /// The heart of the split-phase compliance claim: running every
+    /// superstep as begin/compute/end must leave memory and the uniform
+    /// stats bit-identical to the bulk run, on every fabric family.
+    #[test]
+    fn split_phase_observation_matches_bulk() {
+        for (name, plat) in all_backends() {
+            let bulk = run_case_in(name, &plat, 4, 3, ExecMode::Cold, SyncMode::Bulk, None);
+            let split = run_case_in(name, &plat, 4, 3, ExecMode::Cold, SyncMode::Split, None);
+            assert_eq!(
+                bulk.result.unwrap(),
+                split.result.unwrap(),
+                "{name}: split-phase diverged from bulk"
+            );
+        }
     }
 }

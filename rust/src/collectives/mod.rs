@@ -17,6 +17,7 @@
 
 use crate::core::{LpfError, Result};
 use crate::ctx::{Context, Pod, TypedSlot};
+use crate::simd::{fold_f32, FloatOp};
 
 /// Pre-registered workspace for collectives over elements of up to
 /// `max_bytes` per process.
@@ -333,6 +334,79 @@ impl Coll {
         Ok(())
     }
 
+    /// [`reduce`](Coll::reduce) specialised to `f32` with a vectorised
+    /// fold ([`crate::simd::fold_f32`]: explicit 8/4-wide lanes, scalar
+    /// tail). Same communication shape and bit-identical results to the
+    /// generic path with the matching scalar operator — the generic
+    /// `reduce` is the correctness oracle.
+    pub fn reduce_f32(
+        &self,
+        ctx: &mut Context,
+        root: u32,
+        mine: &[f32],
+        out: &mut [f32],
+        op: FloatOp,
+    ) -> Result<()> {
+        let p = ctx.p() as usize;
+        // Zero-length reduction: still collective (see `reduce`).
+        let Some(&head) = mine.first() else {
+            return self.gather(ctx, root, mine, &mut []);
+        };
+        let mut all = vec![head; mine.len() * p];
+        self.gather(ctx, root, mine, if ctx.pid() == root { &mut all } else { &mut [] })?;
+        if ctx.pid() == root {
+            out.copy_from_slice(&all[..mine.len()]);
+            for k in 1..p {
+                fold_f32(out, &all[k * mine.len()..(k + 1) * mine.len()], op);
+            }
+        }
+        Ok(())
+    }
+
+    /// [`allreduce`](Coll::allreduce) specialised to `f32` with a
+    /// vectorised fold (see [`reduce_f32`](Coll::reduce_f32)).
+    pub fn allreduce_f32(
+        &self,
+        ctx: &mut Context,
+        mine: &[f32],
+        out: &mut [f32],
+        op: FloatOp,
+    ) -> Result<()> {
+        let p = ctx.p() as usize;
+        let Some(&head) = mine.first() else {
+            return self.allgather(ctx, mine, out);
+        };
+        let mut all = vec![head; mine.len() * p];
+        self.allgather(ctx, mine, &mut all)?;
+        out.copy_from_slice(&all[..mine.len()]);
+        for k in 1..p {
+            fold_f32(out, &all[k * mine.len()..(k + 1) * mine.len()], op);
+        }
+        Ok(())
+    }
+
+    /// [`scan`](Coll::scan) specialised to `f32` with a vectorised fold
+    /// (see [`reduce_f32`](Coll::reduce_f32)).
+    pub fn scan_f32(
+        &self,
+        ctx: &mut Context,
+        mine: &[f32],
+        out: &mut [f32],
+        op: FloatOp,
+    ) -> Result<()> {
+        let p = ctx.p() as usize;
+        let Some(&head) = mine.first() else {
+            return self.allgather(ctx, mine, out);
+        };
+        let mut all = vec![head; mine.len() * p];
+        self.allgather(ctx, mine, &mut all)?;
+        out.copy_from_slice(&all[..mine.len()]);
+        for k in 1..=ctx.pid() as usize {
+            fold_f32(out, &all[k * mine.len()..(k + 1) * mine.len()], op);
+        }
+        Ok(())
+    }
+
     /// Inclusive prefix scan: `out = op(mine_0, …, mine_pid)` elementwise.
     /// One superstep (allgather) + local fold over the prefix.
     pub fn scan<T: Pod>(
@@ -478,6 +552,47 @@ mod tests {
             let expect: u64 = (1..=ctx.pid() as u64 + 1).sum();
             assert_eq!(out[0], expect);
         });
+    }
+
+    #[test]
+    fn lane_f32_collectives_match_generic_oracle_bitwise() {
+        // reduce_f32/allreduce_f32/scan_f32 must agree bit-for-bit with
+        // the generic scalar fold across non-multiple-of-lane lengths
+        // (tails of 1..7) and zero-length inputs.
+        for len in [0usize, 1, 3, 5, 7, 8, 11, 16, 19] {
+            with_coll(4, 4 * 32, move |ctx, coll| {
+                let mine: Vec<f32> =
+                    (0..len).map(|i| ((ctx.pid() as usize * 31 + i) as f32).sin()).collect();
+                for (op, f) in [
+                    (FloatOp::Sum, (|a: f32, b: f32| a + b) as fn(f32, f32) -> f32),
+                    (FloatOp::Max, f32::max as fn(f32, f32) -> f32),
+                    (FloatOp::Min, f32::min as fn(f32, f32) -> f32),
+                ] {
+                    let mut lane = vec![0f32; len];
+                    let mut oracle = vec![0f32; len];
+                    coll.allreduce_f32(ctx, &mine, &mut lane, op).unwrap();
+                    coll.allreduce(ctx, &mine, &mut oracle, f).unwrap();
+                    assert!(
+                        lane.iter().zip(&oracle).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "allreduce len {len} {op:?}"
+                    );
+                    coll.scan_f32(ctx, &mine, &mut lane, op).unwrap();
+                    coll.scan(ctx, &mine, &mut oracle, f).unwrap();
+                    assert!(
+                        lane.iter().zip(&oracle).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "scan len {len} {op:?}"
+                    );
+                    coll.reduce_f32(ctx, 1, &mine, &mut lane, op).unwrap();
+                    coll.reduce(ctx, 1, &mine, &mut oracle, f).unwrap();
+                    if ctx.pid() == 1 {
+                        assert!(
+                            lane.iter().zip(&oracle).all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "reduce len {len} {op:?}"
+                        );
+                    }
+                }
+            });
+        }
     }
 
     #[test]

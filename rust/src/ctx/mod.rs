@@ -117,6 +117,11 @@ pub struct Context {
     p: Pid,
     group: Arc<ContextGroup>,
     queue: MsgQueue,
+    /// True between [`sync_begin`](Context::sync_begin) and
+    /// [`sync_end`](Context::sync_end): the data exchange is in flight, so
+    /// enqueueing puts/gets or syncing again is `Illegal` until the end
+    /// half completes the fence.
+    split_in_flight: bool,
     /// Set when the SPMD function completes normally; `Drop` otherwise
     /// marks the process aborted so peers fail fatally instead of hanging.
     clean: bool,
@@ -125,7 +130,7 @@ pub struct Context {
 impl Context {
     pub(crate) fn new(group: Arc<ContextGroup>, pid: Pid) -> Self {
         let p = group.fabric().p();
-        Context { pid, p, group, queue: MsgQueue::new(), clean: false }
+        Context { pid, p, group, queue: MsgQueue::new(), split_in_flight: false, clean: false }
     }
 
     /// This process's id `s ∈ {0, …, p−1}`.
@@ -297,6 +302,7 @@ impl Context {
         len: usize,
         attr: MsgAttr,
     ) -> Result<()> {
+        self.check_quiescent("put")?;
         if dst_pid >= self.p {
             return Err(LpfError::Illegal(format!("dst pid {dst_pid} out of range {}", self.p)));
         }
@@ -318,6 +324,7 @@ impl Context {
         len: usize,
         attr: MsgAttr,
     ) -> Result<()> {
+        self.check_quiescent("get")?;
         if src_pid >= self.p {
             return Err(LpfError::Illegal(format!("src pid {src_pid} out of range {}", self.p)));
         }
@@ -325,9 +332,22 @@ impl Context {
         self.queue.push_get(GetReq { src_pid, src_slot, src_off, dst_slot, dst_off, len, attr })
     }
 
+    /// Misuse guard: between `sync_begin` and `sync_end` the queue and the
+    /// registered slots belong to the in-flight exchange — a clean, purely
+    /// local `Illegal` (never a deadlock or corruption).
+    fn check_quiescent(&self, what: &str) -> Result<()> {
+        if self.split_in_flight {
+            return Err(LpfError::Illegal(format!(
+                "{what} while a split-phase superstep is in flight (sync_begin without sync_end)"
+            )));
+        }
+        Ok(())
+    }
+
     /// `lpf_sync`: execute the queued h-relation; `hg + ℓ` (paper §2.2).
     /// The only fence: all puts/gets issued before it are visible after it.
     pub fn sync(&mut self, attr: SyncAttr) -> Result<()> {
+        self.check_quiescent("sync")?;
         let res = self.group.fabric().sync(self.pid, self.queue.requests(), attr);
         self.queue.clear();
         // Capacities become active "after a fence provided each call
@@ -336,6 +356,57 @@ impl Context {
         self.queue.activate_pending();
         self.group.fabric().register_of(self.pid).with_mut(|r| r.activate_pending());
         res
+    }
+
+    /// First half of a split-phase superstep: drains the queued h-relation,
+    /// launches its data exchange, and returns control so local compute
+    /// overlaps the in-flight transfer. Until [`sync_end`](Context::sync_end)
+    /// completes the fence, `put`/`get`/`sync`/`sync_begin` return `Illegal`
+    /// and registered slots must be left quiescent (the typed
+    /// [`superstep_overlapped`](Context::superstep_overlapped) enforces the
+    /// latter statically). Collective: every process must pair begin/end.
+    pub fn sync_begin(&mut self, attr: SyncAttr) -> Result<()> {
+        self.check_quiescent("sync_begin")?;
+        let res = self.group.fabric().sync_begin(self.pid, self.queue.requests(), attr);
+        self.queue.clear();
+        if res.is_ok() {
+            // Capacity activation waits for sync_end — the fence is not
+            // complete while the exchange is in flight.
+            self.split_in_flight = true;
+        }
+        res
+    }
+
+    /// Second half of a split-phase superstep: completes delivery and the
+    /// fence begun by [`sync_begin`](Context::sync_begin); all puts/gets
+    /// issued before the begin are visible after this returns. `Illegal`
+    /// (purely local) if no split superstep is in flight.
+    pub fn sync_end(&mut self) -> Result<()> {
+        if !self.split_in_flight {
+            return Err(LpfError::Illegal(
+                "sync_end without a matching sync_begin".to_string(),
+            ));
+        }
+        let res = self.group.fabric().sync_end(self.pid);
+        self.split_in_flight = false;
+        // The fence is complete (or the context fatally dead): capacities
+        // activate exactly as at the end of a bulk sync.
+        self.queue.activate_pending();
+        self.group.fabric().register_of(self.pid).with_mut(|r| r.activate_pending());
+        res
+    }
+
+    /// One split-phase superstep around a compute closure: `sync_begin`,
+    /// run `compute` while the exchange is in flight, `sync_end`. The
+    /// closure gets no context access, so it cannot enqueue or sync; it is
+    /// the *caller's* contract that it leaves registered slots alone — use
+    /// the typed [`superstep_overlapped`](Context::superstep_overlapped)
+    /// for the statically checked form.
+    pub fn sync_split<R>(&mut self, attr: SyncAttr, compute: impl FnOnce() -> R) -> Result<R> {
+        self.sync_begin(attr)?;
+        let out = compute();
+        self.sync_end()?;
+        Ok(out)
     }
 
     /// `lpf_probe`: Θ(1) lookup of the machine parameters underneath this
@@ -440,8 +511,19 @@ where
     let out = catch_unwind(AssertUnwindSafe(|| spmd(&mut ctx, args)));
     let res = match out {
         Ok(o) => {
-            ctx.clean = true;
-            Ok(o)
+            if ctx.split_in_flight {
+                // sync_begin without sync_end at SPMD exit: leave `clean`
+                // false so the drop below aborts the fabric — peers fail
+                // with PeerAborted instead of hanging at sync_end's
+                // barrier (the never-deadlock rule for split-phase misuse).
+                Err(LpfError::Illegal(format!(
+                    "SPMD function on pid {pid} returned with a split-phase \
+                     superstep still in flight (sync_begin without sync_end)"
+                )))
+            } else {
+                ctx.clean = true;
+                Ok(o)
+            }
         }
         Err(payload) => Err(LpfError::Fatal(format!(
             "SPMD function panicked on pid {pid}: {}",

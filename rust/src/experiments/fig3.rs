@@ -78,11 +78,13 @@ pub fn bsp_fft_secs_on(pool: &Pool, n: usize, reps: u32, backend: Backend) -> Re
             let mut out_re = vec![0f32; m];
             let mut out_im = vec![0f32; m];
             // warm (compiles artifacts on first use)
-            fft.run_into(&mut bsp, &re, &im, &mut out_re, &mut out_im)?;
+            fft.run_into_overlapped(&mut bsp, &re, &im, &mut out_re, &mut out_im)?;
             // measured region is the steady state: allocation-free on the
-            // native path, outputs written into reused planes
+            // native path, outputs written into reused planes, the step-3
+            // redistribution overlapped chunk-by-chunk with step-4 compute
             let samples = time_secs(0, reps, || {
-                fft.run_into(&mut bsp, &re, &im, &mut out_re, &mut out_im).expect("fft run");
+                fft.run_into_overlapped(&mut bsp, &re, &im, &mut out_re, &mut out_im)
+                    .expect("fft run");
             });
             bsp.end()?;
             Ok(samples.mean())

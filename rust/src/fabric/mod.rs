@@ -83,7 +83,7 @@ pub struct GetMeta {
 /// Statistics the sync engine keeps per process, read by benches and
 /// `probe`. Accounting is uniform across backends (engine-owned), so
 /// cross-backend numbers are directly comparable.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct SyncStats {
     /// Supersteps completed.
     pub syncs: u64,
@@ -100,6 +100,27 @@ pub struct SyncStats {
     /// Bytes the destination-side CRCW resolution trimmed off this
     /// process's *incoming* writes — overlap bytes that never travel.
     pub bytes_trimmed: u64,
+    /// Communication cost hidden behind compute by split-phase supersteps:
+    /// per `sync_begin`/`sync_end` pair, `min(compute window, data-phase
+    /// cost)` in ns. The data-phase cost is the simulated wire time on
+    /// netsim backends and zero on the real shared-memory backend (its
+    /// data phase runs inside `sync_end`), so this is a *credit* against
+    /// g·h, never an invented saving.
+    pub overlap_ns: u64,
+}
+
+/// `overlap_ns` is wall-clock-dependent (the compute window is measured
+/// with `Instant`), so it is excluded from equality: the differential
+/// checker compares stats across backends and runs, and must stay
+/// bit-stable while still recording the overlap credit.
+impl PartialEq for SyncStats {
+    fn eq(&self, other: &Self) -> bool {
+        self.syncs == other.syncs
+            && self.bytes_out == other.bytes_out
+            && self.bytes_in == other.bytes_in
+            && self.msgs_out == other.msgs_out
+            && self.bytes_trimmed == other.bytes_trimmed
+    }
 }
 
 /// A communication fabric connecting the `p` processes of one context.
@@ -119,6 +140,19 @@ pub trait Fabric: Send + Sync {
     /// reallocates). Collective: blocks until the h-relation involving
     /// `pid` completed.
     fn sync(&self, pid: Pid, reqs: &[Request], attr: SyncAttr) -> Result<()>;
+
+    /// First half of a split-phase superstep: drain the queue, run the meta
+    /// exchange and conflict resolution, and *kick off* the data exchange,
+    /// then return so the caller can compute while bytes are in flight.
+    /// Between `sync_begin` and [`sync_end`](Fabric::sync_end) the process
+    /// may not enqueue requests, sync, or begin again (`Illegal`), and must
+    /// not touch registered slots (the slot-quiescence rule). Collective:
+    /// every process must pair its begin with an end.
+    fn sync_begin(&self, pid: Pid, reqs: &[Request], attr: SyncAttr) -> Result<()>;
+
+    /// Second half of a split-phase superstep: complete delivery and the
+    /// final barrier. Returns `Illegal` if no split superstep is in flight.
+    fn sync_end(&self, pid: Pid) -> Result<()>;
 
     /// A plain collective barrier (used by collective registration).
     fn barrier(&self, pid: Pid) -> Result<()>;

@@ -517,24 +517,42 @@ impl Exchange for NetFabric {
         Ok(())
     }
 
-    fn exchange_data(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
+    /// Launch half of the data phase: the trim-notice round trip and the
+    /// source-side pushes (phases B + C). When it returns, every winning
+    /// byte is on the simulated wire but none has been applied — the window
+    /// split-phase callers compute through. Returns the priced in-flight
+    /// cost: one wire latency plus the per-byte transit of this process's
+    /// inter-node arrivals — what a bulk superstep would spend *waiting*
+    /// for delivery, i.e. the most the overlap credit may claim. The
+    /// simulated clocks are NOT credited (bulk and split charge identical
+    /// sim time), so split-phase stays observationally equivalent;
+    /// `SyncStats::overlap_ns` alone records the hidden cost.
+    fn exchange_data_begin(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
         let p = self.p;
         // ---- second meta-data exchange: trim notices to put sources,
-        // trimmed get requests to servers; also my expected-arrival list.
-        let mut expected: Vec<(u32, u64)> = Vec::new(); // match keys
-        for seg in &s.segs {
-            let d = &s.descs[seg.desc];
-            if (d.tag as usize) < s.put_count {
-                let m = &s.incoming_puts[d.tag as usize];
+        // trimmed get requests to servers; also my expected-arrival list
+        // (persisted in the scratch arena: consumed by `exchange_data_end`
+        // after control returned to the caller in between).
+        let Scratch { expected, segs, descs, incoming_puts, my_gets, put_count, .. } = s;
+        expected.clear();
+        // Priced in-flight cost: the per-byte transit of my non-self
+        // arrivals (accumulated below) plus one wire latency — what a bulk
+        // superstep spends waiting for delivery.
+        let mut inflight = 0.0f64;
+        for seg in segs.iter() {
+            let d = &descs[seg.desc];
+            if (d.tag as usize) < *put_count {
+                let m = &incoming_puts[d.tag as usize];
                 let notice = TrimNotice { seq: m.seq, src_delta: seg.src_delta, len: seg.len };
                 if m.src_pid != pid {
                     // self-puts take no wire round trip
                     self.charge_send(pid, m.src_pid, 16);
+                    inflight += seg.len as f64 * self.pers(m.src_pid, pid).per_byte_ns;
                 }
                 self.trim_mail[self.cell(pid, m.src_pid)].lock().unwrap().push(notice);
                 expected.push((m.src_pid, ((m.seq as u64) << 32) | seg.src_delta as u64));
             } else {
-                let g = &s.my_gets[d.tag as usize - s.put_count];
+                let g = &my_gets[d.tag as usize - *put_count];
                 let req = GetReqWire {
                     requester: pid,
                     seq: g.seq,
@@ -547,6 +565,7 @@ impl Exchange for NetFabric {
                 };
                 if g.server != pid {
                     self.charge_send(pid, g.server, 48);
+                    inflight += seg.len as f64 * self.pers(g.server, pid).per_byte_ns;
                 }
                 self.getreq_mail[self.cell(pid, g.server)].lock().unwrap().push(req);
                 expected.push((g.server, ((g.seq as u64) << 32) | seg.src_delta as u64));
@@ -620,7 +639,19 @@ impl Exchange for NetFabric {
         data_result?;
         self.clocks.advance(pid, self.personality.latency_ns);
         self.barrier_combine(pid, false)?;
+        if inflight > 0.0 {
+            inflight += self.personality.latency_ns;
+        }
+        Ok(inflight as u64)
+    }
 
+    /// Delivery half of the data phase (phase D): receive, match, and apply
+    /// the arrivals whose keys `exchange_data_begin` recorded in
+    /// `s.expected`. Identical mechanics and simulated costs whether the
+    /// caller computed in between (split-phase) or not (bulk).
+    fn exchange_data_end(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
+        let p = self.p;
+        let expected = &s.expected;
         // ---- phase D: apply arrivals (receiver side)
         // Gather arrivals; interleave across sources round-robin — the
         // arrival order a NIC would produce with concurrent senders, and
@@ -647,7 +678,7 @@ impl Exchange for NetFabric {
             let mut matcher = self.matchers[pid as usize].lock().unwrap();
             matcher.reset();
             let mut scan_steps = 0u64;
-            for key in &expected {
+            for key in expected.iter() {
                 // intra-node traffic bypasses MPI matching (memcpy path in
                 // the hybrid backend; self-messages short-circuit).
                 if !self.topo.same_node(key.0, pid) {
@@ -735,6 +766,14 @@ impl Fabric for NetFabric {
 
     fn sync(&self, pid: Pid, reqs: &[Request], attr: SyncAttr) -> Result<()> {
         self.engine.superstep(self, pid, reqs, attr)
+    }
+
+    fn sync_begin(&self, pid: Pid, reqs: &[Request], attr: SyncAttr) -> Result<()> {
+        self.engine.sync_begin(self, pid, reqs, attr)
+    }
+
+    fn sync_end(&self, pid: Pid) -> Result<()> {
+        self.engine.sync_end(self, pid)
     }
 
     fn barrier(&self, pid: Pid) -> Result<()> {

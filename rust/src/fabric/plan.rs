@@ -25,6 +25,7 @@
 //!   it uncontended in practice.
 
 use std::sync::{Mutex, RwLock};
+use std::time::Instant;
 
 use crate::core::{LpfError, Pid, Result};
 use crate::fabric::{GetMeta, PutMeta, SyncStats};
@@ -122,6 +123,38 @@ pub struct Scratch {
     pub(crate) resolve: ResolveScratch,
     pub(crate) overlap: OverlapScratch,
     pub(crate) bytes_out_by_src: Vec<u64>,
+    /// In-flight split superstep, if any: `sync_begin` stores it, `sync_end`
+    /// takes it. Living in the scratch (owner-only, mutex-protected) it
+    /// survives between the two lock sessions without any new allocation.
+    pub(crate) split: Option<SplitState>,
+    /// Reusable match-key arena for the netsim backends' two-sided receive
+    /// matching: `(src_pid, seq << 32 | src_delta)` per expected arrival.
+    /// Built during the data-begin half, consumed at data-end; a standing
+    /// field (not part of [`SplitState`]) so its capacity is retained.
+    pub(crate) expected: Vec<(Pid, u64)>,
+}
+
+/// Everything `sync_end` needs that `sync_begin` computed: the engine's
+/// phase-0..2 byproducts plus the overlap-accounting anchors. Stored in
+/// [`Scratch::split`] while the data exchange is in flight.
+#[derive(Debug)]
+pub(crate) struct SplitState {
+    /// Wire descriptors issued (post-coalescing) — `msgs_out` credit.
+    pub(crate) sent: usize,
+    /// Total bytes of destination-side write descriptors (pre-trim).
+    pub(crate) desc_bytes: u64,
+    /// Total bytes of winning segments (post-trim).
+    pub(crate) seg_bytes: u64,
+    /// When `sync_begin` returned control to the caller — start of the
+    /// compute window the overlap credit is measured against.
+    pub(crate) began_at: Instant,
+    /// Simulated cost (ns) of the in-flight data phase on netsim backends
+    /// (0 on shared memory, whose data phase runs inside `sync_end`). The
+    /// overlap credit is `min(compute window, this)`.
+    pub(crate) inflight_ns: u64,
+    /// An error latched at `sync_begin` (e.g. an injected abort) that must
+    /// surface from `sync_end` — the begin half already aborted peers.
+    pub(crate) pending_err: Option<LpfError>,
 }
 
 /// One process's plan: published outbox + private scratch + stats, each
@@ -149,6 +182,8 @@ impl Scratch {
         self.reads.clear();
         self.writes.clear();
         self.bytes_out_by_src.clear();
+        self.split = None;
+        self.expected.clear();
     }
 }
 

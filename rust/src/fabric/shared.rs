@@ -119,7 +119,11 @@ impl Exchange for SharedFabric {
         Ok(())
     }
 
-    fn exchange_data(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
+    // `exchange_data_begin` keeps the default no-op: a destination-side
+    // memcpy cannot be launched early, so shared memory's whole data phase
+    // runs in the end half and contributes no in-flight cost (overlap_ns
+    // stays 0 here — the model charges nothing hideable).
+    fn exchange_data_end(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
         // Executed at the destination (me): memcpy each winning segment.
         let mut bytes_in = 0u64;
         for seg in &s.segs {
@@ -166,6 +170,14 @@ impl Fabric for SharedFabric {
 
     fn sync(&self, pid: Pid, reqs: &[Request], attr: SyncAttr) -> Result<()> {
         self.engine.superstep(self, pid, reqs, attr)
+    }
+
+    fn sync_begin(&self, pid: Pid, reqs: &[Request], attr: SyncAttr) -> Result<()> {
+        self.engine.sync_begin(self, pid, reqs, attr)
+    }
+
+    fn sync_end(&self, pid: Pid) -> Result<()> {
+        self.engine.sync_end(self, pid)
     }
 
     fn barrier(&self, pid: Pid) -> Result<()> {

@@ -26,6 +26,14 @@
 //! FFTs; like HPBSP we keep the natural distributed layout and pay the
 //! extra twiddle pass inside step 2.)
 //!
+//! [`BspFft::run_into_overlapped`] runs the same four steps **split-
+//! phase**: step 3 is chunked into up to `OVERLAP_CHUNKS` supersteps
+//! and step 4's batched FFTs of each landed chunk run inside the next
+//! chunk's `sync_begin`→`sync_end` window, hiding the all-to-all behind
+//! local compute (credited as `SyncStats::overlap_ns`). Results are
+//! bit-identical to the bulk path and the per-destination pair
+//! coalescing still holds — `p` wire descriptors per chunk superstep.
+//!
 //! **Steady state allocates nothing** on the native path: plans come from
 //! the process-wide [`super::plan::PlanCache`], scratch planes are owned
 //! by the [`BspFft`], staging uses the registered windows, and
@@ -167,7 +175,20 @@ pub struct BspFft {
     /// then landing area for the gathered rows. No run allocates.
     sc_re: Vec<f32>,
     sc_im: Vec<f32>,
+    /// Gather planes for the overlapped pipeline (`m` each): chunk `c`
+    /// of the landed rows is gathered here (layout `[C][p][csz]`) while
+    /// the *next* chunk's exchange is still in flight, so step-4 compute
+    /// never touches a registered window during a begin→end gap.
+    ga_re: Vec<f32>,
+    ga_im: Vec<f32>,
 }
+
+/// Pipeline depth of [`BspFft::run_into_overlapped`]: the redistribution
+/// is split into up to this many chunk supersteps (clamped to the row
+/// block size; power-of-two sizes make the division exact). Deep enough
+/// that all but the first exchange hides behind compute, shallow enough
+/// that each chunk still amortises the superstep latency ℓ.
+const OVERLAP_CHUNKS: usize = 4;
 
 impl BspFft {
     /// Collective constructor: registers the communication windows
@@ -223,6 +244,8 @@ impl BspFft {
             dst_reg,
             sc_re: vec![0f32; if p == 1 { 0 } else { m }],
             sc_im: vec![0f32; if p == 1 { 0 } else { m }],
+            ga_re: vec![0f32; if p == 1 { 0 } else { m }],
+            ga_im: vec![0f32; if p == 1 { 0 } else { m }],
         })
     }
 
@@ -459,6 +482,146 @@ impl BspFft {
         }
     }
 
+    /// [`run_into`](BspFft::run_into) with the redistribution **split-phase
+    /// and overlapped**: step 3's all-to-all is chunked into up to
+    /// `OVERLAP_CHUNKS` supersteps, and while chunk `c` is in flight
+    /// (between `sync_begin` and `sync_end`) step 4 runs the length-`p`
+    /// batched FFTs of chunk `c−1` on already-landed data. Per chunk the
+    /// window layout keeps each destination's `(re, im)` pair contiguous
+    /// on both sides, so the engine still coalesces to exactly `p` wire
+    /// descriptors per chunk superstep (the PR-2 invariant, now per
+    /// chunk). The hidden communication is credited to
+    /// [`SyncStats::overlap_ns`](crate::fabric::SyncStats::overlap_ns).
+    ///
+    /// Results are **bit-identical** to the bulk [`run_into`]: the same
+    /// kernels run on the same values, only the superstep structure
+    /// changes (pinned by tests and by `check::differential`). Steady
+    /// state allocates nothing, like the bulk path.
+    ///
+    /// `p = 1` (nothing to redistribute) and the artifact backend (its
+    /// batch kernel consumes whole rows) fall back to the bulk path.
+    ///
+    /// [`run_into`]: BspFft::run_into
+    pub fn run_into_overlapped(
+        &mut self,
+        bsp: &mut Bsp,
+        re: &[f32],
+        im: &[f32],
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+    ) -> Result<()> {
+        let p = self.p as usize;
+        if p == 1 || matches!(self.backend, Backend::Artifacts(_)) {
+            return self.run_into(bsp, re, im, out_re, out_im);
+        }
+        if re.len() != self.m || im.len() != self.m {
+            return Err(LpfError::Illegal(format!("input must be m={} per plane", self.m)));
+        }
+        if out_re.len() != self.m || out_im.len() != self.m {
+            return Err(LpfError::Illegal(format!("output must be m={} per plane", self.m)));
+        }
+        let blk = self.m / p;
+        let chunks = OVERLAP_CHUNKS.min(blk);
+        let csz = blk / chunks; // exact: both are powers of two
+        let plan_p = self
+            .plan_p
+            .clone()
+            .ok_or_else(|| LpfError::Illegal("BspFft: missing length-p plan".into()))?;
+        // steps 1–2: local FFT + fused redistribution twiddle (as bulk)
+        self.sc_re.copy_from_slice(re);
+        self.sc_im.copy_from_slice(im);
+        local::fft_in_place_post_mul(
+            &self.plan_local,
+            &mut self.sc_re,
+            &mut self.sc_im,
+            &self.tw_re,
+            &self.tw_im,
+        )?;
+        // steps 3–4, pipelined: launch chunk c, then compute chunk c−1
+        // while its successor's bytes are in flight. All window access
+        // (staging writes, put queueing, gather reads) happens strictly
+        // between sync_end and sync_begin — the begin→end gap touches
+        // only unregistered scratch, honouring slot quiescence.
+        self.stage_chunk(bsp, 0, csz, blk)?;
+        self.queue_chunk_puts(bsp, 0, csz, blk)?;
+        bsp.sync_begin()?;
+        for c in 1..chunks {
+            bsp.sync_end()?;
+            self.gather_chunk(bsp, c - 1, csz, blk)?;
+            self.stage_chunk(bsp, c, csz, blk)?;
+            self.queue_chunk_puts(bsp, c, csz, blk)?;
+            bsp.sync_begin()?;
+            self.compute_chunk(&plan_p, c - 1, csz, out_re, out_im)?;
+        }
+        bsp.sync_end()?;
+        self.gather_chunk(bsp, chunks - 1, csz, blk)?;
+        self.compute_chunk(&plan_p, chunks - 1, csz, out_re, out_im)
+    }
+
+    /// Stage chunk `c` of the step-2 result into the src window: per
+    /// destination `d` the `(re, im)` pair lands contiguously at
+    /// `d·2·blk + 2·c·csz` (bulk layout when `csz == blk`).
+    fn stage_chunk(&self, bsp: &mut Bsp, c: usize, csz: usize, blk: usize) -> Result<()> {
+        for d in 0..self.p as usize {
+            let w = d * 2 * blk + 2 * c * csz;
+            let s = d * blk + c * csz;
+            bsp.write_local_at(self.src_reg, w, &self.sc_re[s..s + csz])?;
+            bsp.write_local_at(self.src_reg, w + csz, &self.sc_im[s..s + csz])?;
+        }
+        Ok(())
+    }
+
+    /// Queue chunk `c`'s redistribution puts: pair `d` → process `d`,
+    /// landing in row `r` at the chunk offset. Contiguous pair on both
+    /// sides ⇒ one wire descriptor per destination after coalescing.
+    fn queue_chunk_puts(&self, bsp: &mut Bsp, c: usize, csz: usize, blk: usize) -> Result<()> {
+        let home = self.r as usize * 2 * blk + 2 * c * csz;
+        for d in 0..self.p {
+            let s = d as usize * 2 * blk + 2 * c * csz;
+            bsp.hpput_at(d, self.src_reg, s, self.dst_reg, home, csz)?;
+            bsp.hpput_at(d, self.src_reg, s + csz, self.dst_reg, home + csz, csz)?;
+        }
+        Ok(())
+    }
+
+    /// Gather the landed chunk `c` rows into the gather planes (layout
+    /// `[C][p][csz]`), clearing the dst window for reuse by later runs.
+    fn gather_chunk(&mut self, bsp: &Bsp, c: usize, csz: usize, blk: usize) -> Result<()> {
+        let p = self.p as usize;
+        for j in 0..p {
+            let w = j * 2 * blk + 2 * c * csz;
+            let g = c * p * csz + j * csz;
+            bsp.read_local_at(self.dst_reg, w, &mut self.ga_re[g..g + csz])?;
+            bsp.read_local_at(self.dst_reg, w + csz, &mut self.ga_im[g..g + csz])?;
+        }
+        Ok(())
+    }
+
+    /// Step 4 for chunk `c`: `csz` strided length-`p` FFTs over the
+    /// gathered rows, transposed store straight into the output slice.
+    /// Touches only unregistered scratch — safe inside a begin→end gap.
+    fn compute_chunk(
+        &mut self,
+        plan_p: &FftPlan,
+        c: usize,
+        csz: usize,
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+    ) -> Result<()> {
+        let p = self.p as usize;
+        let g = c * p * csz;
+        let o = c * csz * p;
+        local::fft_batch_strided_out(
+            plan_p,
+            &mut self.ga_re[g..g + p * csz],
+            &mut self.ga_im[g..g + p * csz],
+            csz,
+            csz,
+            &mut out_re[o..o + csz * p],
+            &mut out_im[o..o + csz * p],
+        )
+    }
+
     /// Where `out[local]` lives in the global spectrum: process `r` row
     /// `k2_local`, column `k1` → global index `(r·m/p + k2_local) + m·k1`.
     pub fn global_index(&self, k2_local: usize, k1: usize) -> usize {
@@ -659,6 +822,98 @@ mod tests {
                     after.msgs_out - before.msgs_out,
                     pp as u64,
                     "2p puts must coalesce to p descriptors"
+                );
+                bsp.end().unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    /// The overlapped pipeline must be **bit-identical** to the bulk
+    /// path: same kernels on the same values, only the superstep
+    /// structure differs. Swept over p × {shared, rdma}.
+    #[test]
+    fn overlapped_matches_bulk_bit_identically() {
+        for platform in [Platform::shared().checked(true), Platform::rdma()] {
+            for p in [2u32, 4] {
+                let n: usize = 256;
+                let root = Root::new(platform.clone()).with_max_procs(p);
+                exec(
+                    &root,
+                    p,
+                    move |ctx, _| {
+                        let pp = ctx.p();
+                        let m = n / pp as usize;
+                        let mut bsp = Bsp::begin(ctx, 8, 4 * pp as usize + 8).unwrap();
+                        bsp.sync().unwrap();
+                        let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+                        bsp.sync().unwrap();
+                        let (re, im) = rand_planes(m, 0x0B17 + pp as u64);
+                        let (mut b_re, mut b_im) = (vec![0f32; m], vec![0f32; m]);
+                        let (mut o_re, mut o_im) = (vec![0f32; m], vec![0f32; m]);
+                        fft.run_into(&mut bsp, &re, &im, &mut b_re, &mut b_im).unwrap();
+                        fft.run_into_overlapped(&mut bsp, &re, &im, &mut o_re, &mut o_im)
+                            .unwrap();
+                        for k in 0..m {
+                            assert_eq!(
+                                b_re[k].to_bits(),
+                                o_re[k].to_bits(),
+                                "re[{k}] p={pp}"
+                            );
+                            assert_eq!(
+                                b_im[k].to_bits(),
+                                o_im[k].to_bits(),
+                                "im[{k}] p={pp}"
+                            );
+                        }
+                        bsp.end().unwrap();
+                    },
+                    Args::none(),
+                )
+                .unwrap();
+            }
+        }
+    }
+
+    /// Descriptor coalescing must survive the split: each chunk
+    /// superstep queues 2p puts whose `(re, im)` pairs are contiguous on
+    /// both sides, so the overlapped run costs exactly C supersteps of p
+    /// wire descriptors each (the PR-2 invariant, now per chunk).
+    #[test]
+    fn overlapped_chunks_coalesce_per_superstep() {
+        let p: u32 = 4;
+        let n: usize = 256; // m = 64, blk = 16 → C = 4 chunks of 4
+        let root = Root::new(Platform::shared()).with_max_procs(p);
+        exec(
+            &root,
+            p,
+            move |ctx, _| {
+                let pp = ctx.p();
+                let m = n / pp as usize;
+                let blk = m / pp as usize;
+                let chunks = OVERLAP_CHUNKS.min(blk) as u64;
+                let mut bsp = Bsp::begin(ctx, 8, 4 * pp as usize + 8).unwrap();
+                bsp.sync().unwrap();
+                let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+                bsp.sync().unwrap();
+                let (re, im) = rand_planes(m, 3);
+                let (mut o_re, mut o_im) = (vec![0f32; m], vec![0f32; m]);
+                fft.run_into_overlapped(&mut bsp, &re, &im, &mut o_re, &mut o_im)
+                    .unwrap(); // warm
+                let before = bsp.lpf().stats();
+                fft.run_into_overlapped(&mut bsp, &re, &im, &mut o_re, &mut o_im)
+                    .unwrap();
+                let after = bsp.lpf().stats();
+                assert_eq!(
+                    after.syncs - before.syncs,
+                    chunks,
+                    "one superstep per chunk"
+                );
+                assert_eq!(
+                    after.msgs_out - before.msgs_out,
+                    chunks * pp as u64,
+                    "2p puts per chunk must coalesce to p descriptors"
                 );
                 bsp.end().unwrap();
             },

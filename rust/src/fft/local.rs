@@ -25,10 +25,21 @@
 //! runs over the contiguous batch dimension with loop-invariant twiddles,
 //! which is the shape the BSP redistribution naturally produces.
 //!
+//! On top of the structure, the radix-4 sweeps are **vectorised** with
+//! the explicit-width lane structs of [`crate::simd`]: the batched sweeps
+//! lane over the contiguous batch dimension `t` (twiddles splatted), the
+//! single-transform sweep lanes over the butterfly index `k` (twiddles
+//! loaded contiguously from the plan's planar tables). The width is
+//! chosen at plan time ([`FftPlan::lane`]); every stage whose own extent
+//! is narrower than a lane falls back to the scalar sweep, which remains
+//! compiled as the correctness oracle (`*_with_lane` entry points pin
+//! lane ≡ scalar bit-identically — per-element arithmetic is unchanged).
+//!
 //! `dft_naive` remains the ultimate correctness oracle for small sizes.
 
 use super::plan::FftPlan;
 use crate::core::{LpfError, Result};
+use crate::simd::{Lane, Lanes};
 
 /// Cache block in complex elements, even-log2 sizes: 2^12 × 2 planes × 4 B
 /// = 32 KiB, sized for L1d. Blocked stage runs must end exactly on the
@@ -47,13 +58,26 @@ fn check_planes(what: &str, plan: &FftPlan, re_len: usize, im_len: usize) -> Res
     Ok(())
 }
 
-/// In-place complex FFT over split planes using a prebuilt plan.
+/// In-place complex FFT over split planes using a prebuilt plan, with the
+/// plan-time lane selection.
 ///
 /// Length mismatches are [`LpfError::Illegal`] (API misuse must not
 /// panic), like every kernel in this module.
 pub fn fft_in_place(plan: &FftPlan, re: &mut [f32], im: &mut [f32]) -> Result<()> {
+    fft_in_place_with_lane(plan, re, im, plan.lane)
+}
+
+/// [`fft_in_place`] with an explicit lane override — `Lane::Scalar` is
+/// the correctness oracle the lane paths are pinned against (and what the
+/// kernel benches compare for the vectorisation speedup).
+pub fn fft_in_place_with_lane(
+    plan: &FftPlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    lane: Lane,
+) -> Result<()> {
     check_planes("fft_in_place", plan, re.len(), im.len())?;
-    fft_core(plan, re, im, None);
+    fft_core(plan, re, im, None, lane);
     Ok(())
 }
 
@@ -68,9 +92,21 @@ pub fn fft_in_place_post_mul(
     post_re: &[f32],
     post_im: &[f32],
 ) -> Result<()> {
+    fft_in_place_post_mul_with_lane(plan, re, im, post_re, post_im, plan.lane)
+}
+
+/// [`fft_in_place_post_mul`] with an explicit lane override.
+pub fn fft_in_place_post_mul_with_lane(
+    plan: &FftPlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    post_re: &[f32],
+    post_im: &[f32],
+    lane: Lane,
+) -> Result<()> {
     check_planes("fft_in_place_post_mul", plan, re.len(), im.len())?;
     check_planes("fft_in_place_post_mul twiddle", plan, post_re.len(), post_im.len())?;
-    fft_core(plan, re, im, Some((post_re, post_im)));
+    fft_core(plan, re, im, Some((post_re, post_im)), lane);
     Ok(())
 }
 
@@ -85,7 +121,13 @@ pub fn fft(plan: &FftPlan, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>
 // ------------------------------------------------------------- single FFT
 
 /// Blocked radix-4 DIT driver. Lengths are pre-validated by the callers.
-fn fft_core(plan: &FftPlan, re: &mut [f32], im: &mut [f32], post: Option<(&[f32], &[f32])>) {
+fn fft_core(
+    plan: &FftPlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    post: Option<(&[f32], &[f32])>,
+    lane: Lane,
+) {
     let n = plan.n;
     // bit-reverse permutation (cycle-safe: swap only when i < j)
     for i in 0..n {
@@ -132,7 +174,7 @@ fn fft_core(plan: &FftPlan, re: &mut [f32], im: &mut [f32], post: Option<(&[f32]
         }
         let mut off = 0usize;
         while 4 * q <= nb {
-            stage_r4(plan, re, im, lo, lo + nb, q, off, if 4 * q == n { post } else { None });
+            stage_r4(plan, re, im, lo, lo + nb, q, off, if 4 * q == n { post } else { None }, lane);
             off += 2 * q;
             q *= 4;
         }
@@ -143,9 +185,19 @@ fn fft_core(plan: &FftPlan, re: &mut [f32], im: &mut [f32], post: Option<(&[f32]
     let mut q = q_top;
     let mut off = off_top;
     while 4 * q <= n {
-        stage_r4(plan, re, im, 0, n, q, off, if 4 * q == n { post } else { None });
+        stage_r4(plan, re, im, 0, n, q, off, if 4 * q == n { post } else { None }, lane);
         off += 2 * q;
         q *= 4;
+    }
+}
+
+/// The widest lane that fits an extent of `len` under the `lane` ceiling.
+#[inline]
+fn lane_for(lane: Lane, len: usize) -> Lane {
+    match lane {
+        Lane::X8 if len >= 8 => Lane::X8,
+        Lane::X8 | Lane::X4 if len >= 4 => Lane::X4,
+        _ => Lane::Scalar,
     }
 }
 
@@ -165,7 +217,9 @@ fn stage_r2_m1(re: &mut [f32], im: &mut [f32], lo: usize, hi: usize) {
 
 /// One radix-4 stage of quarter-size `q` over `[lo, hi)` (a multiple of
 /// `4q`), dispatching to the fused-post-multiply variant for the final
-/// stage of [`fft_in_place_post_mul`].
+/// stage of [`fft_in_place_post_mul`] and to the lane sweep where the
+/// stage is wide enough for it (`q ≥ W`; `q` and `W` are powers of two,
+/// so the lane loop needs no tail).
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn stage_r4(
@@ -177,12 +231,31 @@ fn stage_r4(
     q: usize,
     off: usize,
     post: Option<(&[f32], &[f32])>,
+    lane: Lane,
 ) {
-    let twr = &plan.r4_re[off..off + 2 * q];
-    let twi = &plan.r4_im[off..off + 2 * q];
-    match post {
-        Some((pr, pi)) => stage_r4_impl::<true>(re, im, lo, hi, q, twr, twi, pr, pi),
-        None => stage_r4_impl::<false>(re, im, lo, hi, q, twr, twi, &[], &[]),
+    let eff = lane_for(lane, q);
+    if eff == Lane::Scalar {
+        let twr = &plan.r4_re[off..off + 2 * q];
+        let twi = &plan.r4_im[off..off + 2 * q];
+        match post {
+            Some((pr, pi)) => stage_r4_impl::<true>(re, im, lo, hi, q, twr, twi, pr, pi),
+            None => stage_r4_impl::<false>(re, im, lo, hi, q, twr, twi, &[], &[]),
+        }
+        return;
+    }
+    // planar tables sit at half the interleaved stage offset
+    let po = off / 2;
+    let tw = [
+        &plan.r4w1_re[po..po + q],
+        &plan.r4w1_im[po..po + q],
+        &plan.r4w2_re[po..po + q],
+        &plan.r4w2_im[po..po + q],
+    ];
+    match (eff, post) {
+        (Lane::X8, Some((pr, pi))) => stage_r4_lanes::<8, true>(re, im, lo, hi, q, tw, pr, pi),
+        (Lane::X8, None) => stage_r4_lanes::<8, false>(re, im, lo, hi, q, tw, &[], &[]),
+        (_, Some((pr, pi))) => stage_r4_lanes::<4, true>(re, im, lo, hi, q, tw, pr, pi),
+        (_, None) => stage_r4_lanes::<4, false>(re, im, lo, hi, q, tw, &[], &[]),
     }
 }
 
@@ -315,6 +388,130 @@ fn stage_r4_impl<const POST: bool>(
     }
 }
 
+/// [`butterfly_r4`] over `W`-wide lanes: the identical expression tree on
+/// [`Lanes`] instead of `f32`, so each lane element computes exactly what
+/// the scalar butterfly computes (bit-identical results, by construction).
+#[inline(always)]
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn butterfly_r4_lanes<const W: usize>(
+    a0r: Lanes<W>,
+    a0i: Lanes<W>,
+    x1r: Lanes<W>,
+    x1i: Lanes<W>,
+    a2r: Lanes<W>,
+    a2i: Lanes<W>,
+    x3r: Lanes<W>,
+    x3i: Lanes<W>,
+    w1r: Lanes<W>,
+    w1i: Lanes<W>,
+    w2r: Lanes<W>,
+    w2i: Lanes<W>,
+) -> (Lanes<W>, Lanes<W>, Lanes<W>, Lanes<W>, Lanes<W>, Lanes<W>, Lanes<W>, Lanes<W>) {
+    let t1r = w1r * x1r - w1i * x1i;
+    let t1i = w1r * x1i + w1i * x1r;
+    let t3r = w1r * x3r - w1i * x3i;
+    let t3i = w1r * x3i + w1i * x3r;
+    let b0r = a0r + t1r;
+    let b0i = a0i + t1i;
+    let b1r = a0r - t1r;
+    let b1i = a0i - t1i;
+    let b2r = a2r + t3r;
+    let b2i = a2i + t3i;
+    let b3r = a2r - t3r;
+    let b3i = a2i - t3i;
+    let u2r = w2r * b2r - w2i * b2i;
+    let u2i = w2r * b2i + w2i * b2r;
+    let u3r = w2r * b3r - w2i * b3i;
+    let u3i = w2r * b3i + w2i * b3r;
+    (
+        b0r + u2r,
+        b0i + u2i,
+        b1r + u3i,
+        b1i - u3r,
+        b0r - u2r,
+        b0i - u2i,
+        b1r - u3i,
+        b1i + u3r,
+    )
+}
+
+/// The radix-4 sweep laned over the butterfly index `k`: data loads at
+/// `i0..i3` and twiddle loads from the planar tables (`tw` is
+/// `[w1re, w1im, w2re, w2im]`, `q` entries each) are all contiguous.
+/// Requires `q % W == 0` (guaranteed by the `q ≥ W` dispatch: both are
+/// powers of two).
+#[allow(clippy::too_many_arguments)]
+fn stage_r4_lanes<const W: usize, const POST: bool>(
+    re: &mut [f32],
+    im: &mut [f32],
+    lo: usize,
+    hi: usize,
+    q: usize,
+    tw: [&[f32]; 4],
+    pr: &[f32],
+    pi: &[f32],
+) {
+    debug_assert!(q % W == 0 && (hi - lo) % (4 * q) == 0 && hi <= re.len() && hi <= im.len());
+    debug_assert!(tw.iter().all(|t| t.len() >= q));
+    debug_assert!(!POST || (pr.len() >= hi && pi.len() >= hi));
+    let [w1r, w1i, w2r, w2i] = tw;
+    let mut base = lo;
+    while base < hi {
+        let mut k = 0usize;
+        while k < q {
+            // SAFETY: k + W ≤ q (q is a multiple of W), so twiddle lanes
+            // stay inside the q-length tables and data lanes end at
+            // i3 + W − 1 < base + 4q ≤ hi ≤ len for both data planes and
+            // (when POST) both post planes — all debug-asserted above.
+            unsafe {
+                let v1r = Lanes::<W>::load_unchecked(w1r, k);
+                let v1i = Lanes::<W>::load_unchecked(w1i, k);
+                let v2r = Lanes::<W>::load_unchecked(w2r, k);
+                let v2i = Lanes::<W>::load_unchecked(w2i, k);
+                let i0 = base + k;
+                let i1 = i0 + q;
+                let i2 = i1 + q;
+                let i3 = i2 + q;
+                let (c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i) = butterfly_r4_lanes(
+                    Lanes::<W>::load_unchecked(re, i0),
+                    Lanes::<W>::load_unchecked(im, i0),
+                    Lanes::<W>::load_unchecked(re, i1),
+                    Lanes::<W>::load_unchecked(im, i1),
+                    Lanes::<W>::load_unchecked(re, i2),
+                    Lanes::<W>::load_unchecked(im, i2),
+                    Lanes::<W>::load_unchecked(re, i3),
+                    Lanes::<W>::load_unchecked(im, i3),
+                    v1r,
+                    v1i,
+                    v2r,
+                    v2i,
+                );
+                if POST {
+                    for (idx, (cr, ci)) in
+                        [(i0, (c0r, c0i)), (i1, (c1r, c1i)), (i2, (c2r, c2i)), (i3, (c3r, c3i))]
+                    {
+                        let vr = Lanes::<W>::load_unchecked(pr, idx);
+                        let vi = Lanes::<W>::load_unchecked(pi, idx);
+                        (cr * vr - ci * vi).store_unchecked(re, idx);
+                        (cr * vi + ci * vr).store_unchecked(im, idx);
+                    }
+                } else {
+                    c0r.store_unchecked(re, i0);
+                    c0i.store_unchecked(im, i0);
+                    c1r.store_unchecked(re, i1);
+                    c1i.store_unchecked(im, i1);
+                    c2r.store_unchecked(re, i2);
+                    c2i.store_unchecked(im, i2);
+                    c3r.store_unchecked(re, i3);
+                    c3i.store_unchecked(im, i3);
+                }
+            }
+            k += W;
+        }
+        base += 4 * q;
+    }
+}
+
 // ------------------------------------------------------------- batch FFT
 
 #[inline]
@@ -361,6 +558,19 @@ pub fn fft_batch_strided(
     count: usize,
     stride: usize,
 ) -> Result<()> {
+    fft_batch_strided_with_lane(plan, re, im, count, stride, plan.lane)
+}
+
+/// [`fft_batch_strided`] with an explicit lane override (`Lane::Scalar`
+/// is the oracle path).
+pub fn fft_batch_strided_with_lane(
+    plan: &FftPlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    count: usize,
+    stride: usize,
+    lane: Lane,
+) -> Result<()> {
     check_batch("fft_batch_strided", plan, re.len(), im.len(), count, stride)?;
     if count == 0 {
         return Ok(());
@@ -368,12 +578,12 @@ pub fn fft_batch_strided(
     batch_permute(plan, re, im, count, stride);
     let mut q = 1usize;
     if plan.n.trailing_zeros() % 2 == 1 {
-        batch_stage_r2_m1(re, im, plan.n, count, stride);
+        batch_stage_r2_m1(re, im, plan.n, count, stride, lane);
         q = 2;
     }
     let mut off = 0usize;
     while 4 * q <= plan.n {
-        batch_stage_r4(plan, re, im, q, off, count, stride);
+        batch_stage_r4(plan, re, im, q, off, count, stride, lane);
         off += 2 * q;
         q *= 4;
     }
@@ -392,6 +602,22 @@ pub fn fft_batch_strided_out(
     stride: usize,
     out_re: &mut [f32],
     out_im: &mut [f32],
+) -> Result<()> {
+    fft_batch_strided_out_with_lane(plan, re, im, count, stride, out_re, out_im, plan.lane)
+}
+
+/// [`fft_batch_strided_out`] with an explicit lane override
+/// (`Lane::Scalar` is the oracle path).
+#[allow(clippy::too_many_arguments)]
+pub fn fft_batch_strided_out_with_lane(
+    plan: &FftPlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    count: usize,
+    stride: usize,
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    lane: Lane,
 ) -> Result<()> {
     check_batch("fft_batch_strided_out", plan, re.len(), im.len(), count, stride)?;
     let out_need = count.checked_mul(plan.n).ok_or_else(|| {
@@ -425,17 +651,17 @@ pub fn fft_batch_strided_out(
     }
     let mut q = 1usize;
     if n.trailing_zeros() % 2 == 1 {
-        batch_stage_r2_m1(re, im, n, count, stride);
+        batch_stage_r2_m1(re, im, n, count, stride, lane);
         q = 2;
     }
     let mut off = 0usize;
     while 4 * q < n {
-        batch_stage_r4(plan, re, im, q, off, count, stride);
+        batch_stage_r4(plan, re, im, q, off, count, stride, lane);
         off += 2 * q;
         q *= 4;
     }
     // final radix-4 stage (span 4q == n, single base), transposed store
-    batch_last_r4_out(plan, re, im, q, off, count, stride, out_re, out_im);
+    batch_last_r4_out(plan, re, im, q, off, count, stride, out_re, out_im, lane);
     Ok(())
 }
 
@@ -455,9 +681,27 @@ fn batch_permute(plan: &FftPlan, re: &mut [f32], im: &mut [f32], count: usize, s
     }
 }
 
-/// Row variant of the `m = 1` radix-2 parity stage.
+/// Row variant of the `m = 1` radix-2 parity stage: lane dispatch on the
+/// batch extent.
 #[inline]
-fn batch_stage_r2_m1(re: &mut [f32], im: &mut [f32], n: usize, count: usize, stride: usize) {
+fn batch_stage_r2_m1(
+    re: &mut [f32],
+    im: &mut [f32],
+    n: usize,
+    count: usize,
+    stride: usize,
+    lane: Lane,
+) {
+    match lane_for(lane, count) {
+        Lane::X8 => batch_stage_r2_m1_lanes::<8>(re, im, n, count, stride),
+        Lane::X4 => batch_stage_r2_m1_lanes::<4>(re, im, n, count, stride),
+        Lane::Scalar => batch_stage_r2_m1_scalar(re, im, n, count, stride),
+    }
+}
+
+/// The scalar (oracle) `m = 1` parity sweep.
+#[inline]
+fn batch_stage_r2_m1_scalar(re: &mut [f32], im: &mut [f32], n: usize, count: usize, stride: usize) {
     let mut j = 0usize;
     while j < n {
         let (a, b) = (j * stride, (j + 1) * stride);
@@ -479,10 +723,75 @@ fn batch_stage_r2_m1(re: &mut [f32], im: &mut [f32], n: usize, count: usize, str
     }
 }
 
-/// Row variant of one radix-4 stage: the same [`butterfly_r4`], with the
-/// contiguous batch dimension innermost and the `(w1, w2)` pair hoisted
-/// out of it.
+/// Laned `m = 1` parity sweep: lanes over the contiguous batch dimension,
+/// scalar tail for `count % W`.
+fn batch_stage_r2_m1_lanes<const W: usize>(
+    re: &mut [f32],
+    im: &mut [f32],
+    n: usize,
+    count: usize,
+    stride: usize,
+) {
+    let mut j = 0usize;
+    while j < n {
+        let (a, b) = (j * stride, (j + 1) * stride);
+        let mut t = 0usize;
+        while t + W <= count {
+            // SAFETY: b + t + W − 1 ≤ (n−1)·stride + count − 1 < plane len
+            // (validated by check_batch).
+            unsafe {
+                let ar = Lanes::<W>::load_unchecked(re, a + t);
+                let ai = Lanes::<W>::load_unchecked(im, a + t);
+                let br = Lanes::<W>::load_unchecked(re, b + t);
+                let bi = Lanes::<W>::load_unchecked(im, b + t);
+                (ar + br).store_unchecked(re, a + t);
+                (ai + bi).store_unchecked(im, a + t);
+                (ar - br).store_unchecked(re, b + t);
+                (ai - bi).store_unchecked(im, b + t);
+            }
+            t += W;
+        }
+        while t < count {
+            // SAFETY: as above, with scalar extent.
+            unsafe {
+                let ar = *re.get_unchecked(a + t);
+                let ai = *im.get_unchecked(a + t);
+                let br = *re.get_unchecked(b + t);
+                let bi = *im.get_unchecked(b + t);
+                *re.get_unchecked_mut(a + t) = ar + br;
+                *im.get_unchecked_mut(a + t) = ai + bi;
+                *re.get_unchecked_mut(b + t) = ar - br;
+                *im.get_unchecked_mut(b + t) = ai - bi;
+            }
+            t += 1;
+        }
+        j += 2;
+    }
+}
+
+/// Row variant of one radix-4 stage: lane dispatch on the batch extent.
+#[allow(clippy::too_many_arguments)]
 fn batch_stage_r4(
+    plan: &FftPlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    q: usize,
+    off: usize,
+    count: usize,
+    stride: usize,
+    lane: Lane,
+) {
+    match lane_for(lane, count) {
+        Lane::X8 => batch_stage_r4_lanes::<8>(plan, re, im, q, off, count, stride),
+        Lane::X4 => batch_stage_r4_lanes::<4>(plan, re, im, q, off, count, stride),
+        Lane::Scalar => batch_stage_r4_scalar(plan, re, im, q, off, count, stride),
+    }
+}
+
+/// The scalar (oracle) radix-4 row sweep: the same [`butterfly_r4`], with
+/// the contiguous batch dimension innermost and the `(w1, w2)` pair
+/// hoisted out of it.
+fn batch_stage_r4_scalar(
     plan: &FftPlan,
     re: &mut [f32],
     im: &mut [f32],
@@ -537,9 +846,129 @@ fn batch_stage_r4(
     }
 }
 
-/// The final radix-4 stage with the transposed store (`out[t·n + j]`).
+/// Laned radix-4 row sweep: one lane of `W` adjacent transforms per
+/// butterfly, twiddles splatted (loop-invariant over `t`), scalar tail
+/// for `count % W`.
+fn batch_stage_r4_lanes<const W: usize>(
+    plan: &FftPlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    q: usize,
+    off: usize,
+    count: usize,
+    stride: usize,
+) {
+    let twr = &plan.r4_re[off..off + 2 * q];
+    let twi = &plan.r4_im[off..off + 2 * q];
+    let mut base = 0usize;
+    while base < plan.n {
+        for k in 0..q {
+            let w1r = twr[2 * k];
+            let w2r = twr[2 * k + 1];
+            let w1i = twi[2 * k];
+            let w2i = twi[2 * k + 1];
+            let v1r = Lanes::<W>::splat(w1r);
+            let v1i = Lanes::<W>::splat(w1i);
+            let v2r = Lanes::<W>::splat(w2r);
+            let v2i = Lanes::<W>::splat(w2i);
+            let r0 = (base + k) * stride;
+            let r1 = r0 + q * stride;
+            let r2 = r1 + q * stride;
+            let r3 = r2 + q * stride;
+            let mut t = 0usize;
+            while t + W <= count {
+                // SAFETY: r3 + t + W − 1 ≤ (n−1)·stride + count − 1 <
+                // plane len (validated by check_batch).
+                unsafe {
+                    let (c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i) = butterfly_r4_lanes(
+                        Lanes::<W>::load_unchecked(re, r0 + t),
+                        Lanes::<W>::load_unchecked(im, r0 + t),
+                        Lanes::<W>::load_unchecked(re, r1 + t),
+                        Lanes::<W>::load_unchecked(im, r1 + t),
+                        Lanes::<W>::load_unchecked(re, r2 + t),
+                        Lanes::<W>::load_unchecked(im, r2 + t),
+                        Lanes::<W>::load_unchecked(re, r3 + t),
+                        Lanes::<W>::load_unchecked(im, r3 + t),
+                        v1r,
+                        v1i,
+                        v2r,
+                        v2i,
+                    );
+                    c0r.store_unchecked(re, r0 + t);
+                    c0i.store_unchecked(im, r0 + t);
+                    c1r.store_unchecked(re, r1 + t);
+                    c1i.store_unchecked(im, r1 + t);
+                    c2r.store_unchecked(re, r2 + t);
+                    c2i.store_unchecked(im, r2 + t);
+                    c3r.store_unchecked(re, r3 + t);
+                    c3i.store_unchecked(im, r3 + t);
+                }
+                t += W;
+            }
+            while t < count {
+                // SAFETY: as above, with scalar extent.
+                unsafe {
+                    let (c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i) = butterfly_r4(
+                        *re.get_unchecked(r0 + t),
+                        *im.get_unchecked(r0 + t),
+                        *re.get_unchecked(r1 + t),
+                        *im.get_unchecked(r1 + t),
+                        *re.get_unchecked(r2 + t),
+                        *im.get_unchecked(r2 + t),
+                        *re.get_unchecked(r3 + t),
+                        *im.get_unchecked(r3 + t),
+                        w1r,
+                        w1i,
+                        w2r,
+                        w2i,
+                    );
+                    *re.get_unchecked_mut(r0 + t) = c0r;
+                    *im.get_unchecked_mut(r0 + t) = c0i;
+                    *re.get_unchecked_mut(r1 + t) = c1r;
+                    *im.get_unchecked_mut(r1 + t) = c1i;
+                    *re.get_unchecked_mut(r2 + t) = c2r;
+                    *im.get_unchecked_mut(r2 + t) = c2i;
+                    *re.get_unchecked_mut(r3 + t) = c3r;
+                    *im.get_unchecked_mut(r3 + t) = c3i;
+                }
+                t += 1;
+            }
+        }
+        base += 4 * q;
+    }
+}
+
+/// The final radix-4 stage with the transposed store (`out[t·n + j]`):
+/// lane dispatch on the batch extent.
 #[allow(clippy::too_many_arguments)]
 fn batch_last_r4_out(
+    plan: &FftPlan,
+    re: &[f32],
+    im: &[f32],
+    q: usize,
+    off: usize,
+    count: usize,
+    stride: usize,
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    lane: Lane,
+) {
+    match lane_for(lane, count) {
+        Lane::X8 => {
+            batch_last_r4_out_lanes::<8>(plan, re, im, q, off, count, stride, out_re, out_im)
+        }
+        Lane::X4 => {
+            batch_last_r4_out_lanes::<4>(plan, re, im, q, off, count, stride, out_re, out_im)
+        }
+        Lane::Scalar => {
+            batch_last_r4_out_scalar(plan, re, im, q, off, count, stride, out_re, out_im)
+        }
+    }
+}
+
+/// Scalar (oracle) final transposing stage.
+#[allow(clippy::too_many_arguments)]
+fn batch_last_r4_out_scalar(
     plan: &FftPlan,
     re: &[f32],
     im: &[f32],
@@ -591,6 +1020,99 @@ fn batch_last_r4_out(
                 *out_re.get_unchecked_mut(o + 3 * q) = c3r;
                 *out_im.get_unchecked_mut(o + 3 * q) = c3i;
             }
+        }
+    }
+}
+
+/// Laned final transposing stage: lane loads and butterfly over `W`
+/// adjacent transforms; the store is a per-element scatter (output rows
+/// are `n` apart), so only the arithmetic is vectorised here.
+#[allow(clippy::too_many_arguments)]
+fn batch_last_r4_out_lanes<const W: usize>(
+    plan: &FftPlan,
+    re: &[f32],
+    im: &[f32],
+    q: usize,
+    off: usize,
+    count: usize,
+    stride: usize,
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+) {
+    let n = plan.n;
+    debug_assert_eq!(4 * q, n);
+    let twr = &plan.r4_re[off..off + 2 * q];
+    let twi = &plan.r4_im[off..off + 2 * q];
+    for k in 0..q {
+        let w1r = twr[2 * k];
+        let w2r = twr[2 * k + 1];
+        let w1i = twi[2 * k];
+        let w2i = twi[2 * k + 1];
+        let r0 = k * stride;
+        let r1 = r0 + q * stride;
+        let r2 = r1 + q * stride;
+        let r3 = r2 + q * stride;
+        let mut t = 0usize;
+        while t + W <= count {
+            // SAFETY: input as in batch_stage_r4_lanes; scatter index
+            // (t+j)·n + 3q + k < count·n ≤ out plane len (validated).
+            unsafe {
+                let (c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i) = butterfly_r4_lanes(
+                    Lanes::<W>::load_unchecked(re, r0 + t),
+                    Lanes::<W>::load_unchecked(im, r0 + t),
+                    Lanes::<W>::load_unchecked(re, r1 + t),
+                    Lanes::<W>::load_unchecked(im, r1 + t),
+                    Lanes::<W>::load_unchecked(re, r2 + t),
+                    Lanes::<W>::load_unchecked(im, r2 + t),
+                    Lanes::<W>::load_unchecked(re, r3 + t),
+                    Lanes::<W>::load_unchecked(im, r3 + t),
+                    Lanes::<W>::splat(w1r),
+                    Lanes::<W>::splat(w1i),
+                    Lanes::<W>::splat(w2r),
+                    Lanes::<W>::splat(w2i),
+                );
+                for j in 0..W {
+                    let o = (t + j) * n + k;
+                    *out_re.get_unchecked_mut(o) = c0r.0[j];
+                    *out_im.get_unchecked_mut(o) = c0i.0[j];
+                    *out_re.get_unchecked_mut(o + q) = c1r.0[j];
+                    *out_im.get_unchecked_mut(o + q) = c1i.0[j];
+                    *out_re.get_unchecked_mut(o + 2 * q) = c2r.0[j];
+                    *out_im.get_unchecked_mut(o + 2 * q) = c2i.0[j];
+                    *out_re.get_unchecked_mut(o + 3 * q) = c3r.0[j];
+                    *out_im.get_unchecked_mut(o + 3 * q) = c3i.0[j];
+                }
+            }
+            t += W;
+        }
+        while t < count {
+            // SAFETY: as above, scalar extent.
+            unsafe {
+                let (c0r, c0i, c1r, c1i, c2r, c2i, c3r, c3i) = butterfly_r4(
+                    *re.get_unchecked(r0 + t),
+                    *im.get_unchecked(r0 + t),
+                    *re.get_unchecked(r1 + t),
+                    *im.get_unchecked(r1 + t),
+                    *re.get_unchecked(r2 + t),
+                    *im.get_unchecked(r2 + t),
+                    *re.get_unchecked(r3 + t),
+                    *im.get_unchecked(r3 + t),
+                    w1r,
+                    w1i,
+                    w2r,
+                    w2i,
+                );
+                let o = t * n + k;
+                *out_re.get_unchecked_mut(o) = c0r;
+                *out_im.get_unchecked_mut(o) = c0i;
+                *out_re.get_unchecked_mut(o + q) = c1r;
+                *out_im.get_unchecked_mut(o + q) = c1i;
+                *out_re.get_unchecked_mut(o + 2 * q) = c2r;
+                *out_im.get_unchecked_mut(o + 2 * q) = c2i;
+                *out_re.get_unchecked_mut(o + 3 * q) = c3r;
+                *out_im.get_unchecked_mut(o + 3 * q) = c3i;
+            }
+            t += 1;
         }
     }
 }
@@ -692,6 +1214,77 @@ mod tests {
         for k in 0..n {
             assert!((fs_re[k] - fa_re[k] - fb_re[k]).abs() < 1e-3);
             assert!((fs_im[k] - fa_im[k] - fb_im[k]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn lane_sweeps_match_scalar_bit_identically() {
+        // The lane butterflies perform the same per-element arithmetic as
+        // the scalar oracle, so results must agree to the last bit — both
+        // radix parities, fused-twiddle and plain, plus batched shapes
+        // with non-multiple-of-lane counts.
+        for n in [4usize, 8, 16, 64, 128, 1024, 2048] {
+            let plan = FftPlan::new(n).unwrap();
+            let (re0, im0) = rand_planes(n, 11 + n as u64);
+            for lane in [Lane::X4, Lane::X8] {
+                let (mut sr, mut si) = (re0.clone(), im0.clone());
+                fft_in_place_with_lane(&plan, &mut sr, &mut si, Lane::Scalar).unwrap();
+                let (mut lr, mut li) = (re0.clone(), im0.clone());
+                fft_in_place_with_lane(&plan, &mut lr, &mut li, lane).unwrap();
+                for k in 0..n {
+                    assert_eq!(sr[k].to_bits(), lr[k].to_bits(), "n={n} {lane:?} re[{k}]");
+                    assert_eq!(si[k].to_bits(), li[k].to_bits(), "n={n} {lane:?} im[{k}]");
+                }
+                // fused post-multiply path
+                let (pr, pi) = plan.bsp_twiddles(1, 4);
+                let (mut sr, mut si) = (re0.clone(), im0.clone());
+                fft_in_place_post_mul_with_lane(&plan, &mut sr, &mut si, &pr, &pi, Lane::Scalar)
+                    .unwrap();
+                let (mut lr, mut li) = (re0.clone(), im0.clone());
+                fft_in_place_post_mul_with_lane(&plan, &mut lr, &mut li, &pr, &pi, lane).unwrap();
+                assert!(sr.iter().zip(&lr).all(|(a, b)| a.to_bits() == b.to_bits()));
+                assert!(si.iter().zip(&li).all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+        }
+        // batched: counts straddling both lane widths, count < stride
+        for n in [8usize, 32, 64] {
+            let plan = FftPlan::new(n).unwrap();
+            for (count, stride) in [(1usize, 3usize), (3, 3), (5, 6), (7, 7), (9, 12), (16, 16)] {
+                let len = (n - 1) * stride + count;
+                let (re0, im0) = rand_planes(len, (n * stride + count) as u64);
+                for lane in [Lane::X4, Lane::X8] {
+                    let (mut sr, mut si) = (re0.clone(), im0.clone());
+                    let scalar = Lane::Scalar;
+                    fft_batch_strided_with_lane(&plan, &mut sr, &mut si, count, stride, scalar)
+                        .unwrap();
+                    let (mut lr, mut li) = (re0.clone(), im0.clone());
+                    fft_batch_strided_with_lane(&plan, &mut lr, &mut li, count, stride, lane)
+                        .unwrap();
+                    assert!(
+                        sr.iter().zip(&lr).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "batch n={n} count={count} {lane:?}"
+                    );
+                    assert!(si.iter().zip(&li).all(|(a, b)| a.to_bits() == b.to_bits()));
+                    // transposed-output epilogue
+                    let (mut sr, mut si) = (re0.clone(), im0.clone());
+                    let (mut sor, mut soi) = (vec![0f32; count * n], vec![0f32; count * n]);
+                    fft_batch_strided_out_with_lane(
+                        &plan, &mut sr, &mut si, count, stride, &mut sor, &mut soi, Lane::Scalar,
+                    )
+                    .unwrap();
+                    let (mut lr, mut li) = (re0.clone(), im0.clone());
+                    let (mut lor, mut loi) = (vec![0f32; count * n], vec![0f32; count * n]);
+                    fft_batch_strided_out_with_lane(
+                        &plan, &mut lr, &mut li, count, stride, &mut lor, &mut loi, lane,
+                    )
+                    .unwrap();
+                    assert!(
+                        sor.iter().zip(&lor).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "batch-out n={n} count={count} {lane:?}"
+                    );
+                    assert!(soi.iter().zip(&loi).all(|(a, b)| a.to_bits() == b.to_bits()));
+                }
+            }
         }
     }
 

@@ -23,6 +23,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::core::{LpfError, Result};
+use crate::simd::Lane;
 
 /// Immutable tables for one FFT size (and optionally one BSP split).
 #[derive(Debug, Clone)]
@@ -39,9 +40,22 @@ pub struct FftPlan {
     /// Concatenated radix-4 stage twiddles: stages in execution order
     /// (quarter-size `q = q0, 4q0, …, n/4` with `q0 ∈ {1, 2}` fixing the
     /// log2-parity), each contributing `2q` interleaved `(w1, w2)`
-    /// entries per plane. Empty for `n = 2`.
+    /// entries per plane. Empty for `n = 2`. Consumed by the scalar
+    /// (oracle) sweeps.
     pub r4_re: Vec<f32>,
     pub r4_im: Vec<f32>,
+    /// The same radix-4 twiddles de-interleaved into planar `w1` / `w2`
+    /// tables (`q` entries per stage, stage offsets at half the
+    /// interleaved ones): the lane sweeps load `w1[k..k+W]` as one
+    /// contiguous lane instead of a stride-2 gather.
+    pub r4w1_re: Vec<f32>,
+    pub r4w1_im: Vec<f32>,
+    pub r4w2_re: Vec<f32>,
+    pub r4w2_im: Vec<f32>,
+    /// Lane-width ceiling chosen at plan time ([`Lane::for_len`]); the
+    /// kernels dispatch on it per stage, falling back to the scalar
+    /// sweeps where a stage is too narrow for a full lane.
+    pub lane: Lane,
 }
 
 impl FftPlan {
@@ -72,9 +86,14 @@ impl FftPlan {
             off += m;
             m <<= 1;
         }
-        // radix-4 stage tables: (w1, w2) interleaved per k, f64-computed
+        // radix-4 stage tables: (w1, w2) interleaved per k for the scalar
+        // sweeps, planar w1 / w2 for the lane sweeps; f64-computed
         let mut r4_re = Vec::new();
         let mut r4_im = Vec::new();
+        let mut r4w1_re = Vec::new();
+        let mut r4w1_im = Vec::new();
+        let mut r4w2_re = Vec::new();
+        let mut r4w2_im = Vec::new();
         let mut q = if bits % 2 == 1 { 2usize } else { 1usize };
         while 4 * q <= n {
             r4_re.reserve(2 * q);
@@ -86,10 +105,27 @@ impl FftPlan {
                 r4_re.push(a2.cos() as f32);
                 r4_im.push(a1.sin() as f32);
                 r4_im.push(a2.sin() as f32);
+                r4w1_re.push(a1.cos() as f32);
+                r4w1_im.push(a1.sin() as f32);
+                r4w2_re.push(a2.cos() as f32);
+                r4w2_im.push(a2.sin() as f32);
             }
             q *= 4;
         }
-        Ok(FftPlan { n, perm, tw_re, tw_im, r4_re, r4_im })
+        let lane = Lane::for_len(n);
+        Ok(FftPlan {
+            n,
+            perm,
+            tw_re,
+            tw_im,
+            r4_re,
+            r4_im,
+            r4w1_re,
+            r4w1_im,
+            r4w2_re,
+            r4w2_im,
+            lane,
+        })
     }
 
     /// Shared plan from the process-wide [`PlanCache`]: repeated sizes
@@ -208,6 +244,23 @@ mod tests {
         assert!(p.r4_re[2].abs() < 1e-7 && (p.r4_im[2] + 1.0).abs() < 1e-7);
         let s = 1.0 / 2f32.sqrt();
         assert!((p.r4_re[3] - s).abs() < 1e-6 && (p.r4_im[3] + s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn planar_tables_deinterleave_the_scalar_ones() {
+        for n in [8usize, 64, 512] {
+            let p = FftPlan::new(n).unwrap();
+            assert_eq!(p.r4w1_re.len() * 2, p.r4_re.len());
+            for k in 0..p.r4w1_re.len() {
+                assert_eq!(p.r4w1_re[k].to_bits(), p.r4_re[2 * k].to_bits());
+                assert_eq!(p.r4w1_im[k].to_bits(), p.r4_im[2 * k].to_bits());
+                assert_eq!(p.r4w2_re[k].to_bits(), p.r4_re[2 * k + 1].to_bits());
+                assert_eq!(p.r4w2_im[k].to_bits(), p.r4_im[2 * k + 1].to_bits());
+            }
+        }
+        // plan-time lane selection is part of the plan
+        assert_eq!(FftPlan::new(1 << 10).unwrap().lane, Lane::X8);
+        assert_eq!(FftPlan::new(2).unwrap().lane, Lane::Scalar);
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub mod probe;
 pub mod queue;
 pub mod runtime;
 pub mod serve;
+pub mod simd;
 pub mod sparksim;
 pub mod sync;
 pub mod typed;

@@ -1,0 +1,308 @@
+//! Portable explicit-width f32 lanes for the hot kernels.
+//!
+//! The FFT butterflies (`fft::local`) and the collectives folds
+//! (`collectives`) spend their time in elementwise f32 arithmetic over
+//! contiguous runs. Rather than trust the autovectoriser to find the
+//! vector shape through the surrounding index algebra, the hot sweeps are
+//! written against **explicit-width lane structs**: a [`Lanes<W>`] is a
+//! `[f32; W]` wrapper whose `+`/`-`/`*`/`min`/`max` are straight-line
+//! elementwise loops. Fixed-width array arithmetic with no
+//! loop-carried dependence is the one shape every backend's
+//! autovectoriser compiles to full-width vector instructions (SSE/NEON at
+//! `W = 4`, AVX at `W = 8`, and clean scalar code on targets with
+//! neither) — so this stays `std`-only and portable: no `std::simd`, no
+//! intrinsics, no feature detection.
+//!
+//! Lane width is **selected at plan time**, not per call: an [`FftPlan`]
+//! carries the [`Lane`] choice for its size ([`Lane::for_len`]) and the
+//! kernels dispatch on it once per stage, outside the sweeps. The scalar
+//! kernels remain compiled and reachable ([`Lane::Scalar`]) as the
+//! correctness oracle: the lane sweeps perform *identical arithmetic per
+//! element* (same operations, same order, no reassociation and no FMA
+//! contraction), so lane and scalar results are pinned **bit-identical**
+//! by the kernel tests — vectorisation here changes throughput, never
+//! results.
+//!
+//! [`FftPlan`]: crate::fft::FftPlan
+
+use std::ops::{Add, Mul, Sub};
+
+/// A `W`-wide f32 lane: elementwise arithmetic over a fixed-size array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+#[repr(transparent)]
+pub struct Lanes<const W: usize>(pub [f32; W]);
+
+/// Four f32 lanes — one SSE/NEON register.
+pub type F32x4 = Lanes<4>;
+/// Eight f32 lanes — one AVX register (two SSE/NEON ops where absent).
+pub type F32x8 = Lanes<8>;
+
+impl<const W: usize> Lanes<W> {
+    /// All lanes set to `x`.
+    #[inline(always)]
+    pub fn splat(x: f32) -> Self {
+        Lanes([x; W])
+    }
+
+    /// Load the first `W` elements of `s` (panics if `s` is shorter).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        let mut a = [0f32; W];
+        a.copy_from_slice(&s[..W]);
+        Lanes(a)
+    }
+
+    /// Store into the first `W` elements of `s`.
+    #[inline(always)]
+    pub fn store(self, s: &mut [f32]) {
+        s[..W].copy_from_slice(&self.0);
+    }
+
+    /// Load `W` elements starting at `s[i]` without bounds checks.
+    ///
+    /// # Safety
+    /// `i + W <= s.len()`.
+    #[inline(always)]
+    pub unsafe fn load_unchecked(s: &[f32], i: usize) -> Self {
+        debug_assert!(i + W <= s.len());
+        // `[f32; W]` is 4-byte aligned; read_unaligned keeps this valid
+        // for any slice offset and compiles to an unaligned vector load.
+        Lanes((s.as_ptr().add(i) as *const [f32; W]).read_unaligned())
+    }
+
+    /// Store `W` elements starting at `s[i]` without bounds checks.
+    ///
+    /// # Safety
+    /// `i + W <= s.len()`.
+    #[inline(always)]
+    pub unsafe fn store_unchecked(self, s: &mut [f32], i: usize) {
+        debug_assert!(i + W <= s.len());
+        (s.as_mut_ptr().add(i) as *mut [f32; W]).write_unaligned(self.0);
+    }
+
+    /// Elementwise maximum (IEEE `f32::max` per lane, like the scalar
+    /// oracle).
+    #[inline(always)]
+    pub fn max(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a = a.max(*b);
+        }
+        Lanes(r)
+    }
+
+    /// Elementwise minimum.
+    #[inline(always)]
+    pub fn min(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a = a.min(*b);
+        }
+        Lanes(r)
+    }
+}
+
+impl<const W: usize> Add for Lanes<W> {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a += *b;
+        }
+        Lanes(r)
+    }
+}
+
+impl<const W: usize> Sub for Lanes<W> {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a -= *b;
+        }
+        Lanes(r)
+    }
+}
+
+impl<const W: usize> Mul for Lanes<W> {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        let mut r = self.0;
+        for (a, b) in r.iter_mut().zip(&o.0) {
+            *a *= *b;
+        }
+        Lanes(r)
+    }
+}
+
+/// Lane-width choice for a kernel, made once at plan time.
+///
+/// The FFT stages require the vectorised dimension (butterfly index `k`
+/// for single transforms, batch index `t` for batched ones) to cover at
+/// least one lane; each stage falls back to the scalar sweep when its own
+/// extent is narrower, so a wide `Lane` choice is always safe — it is a
+/// *ceiling*, not a promise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// The scalar oracle kernels.
+    Scalar,
+    /// 4-wide lanes.
+    X4,
+    /// 8-wide lanes.
+    X8,
+}
+
+impl Lane {
+    /// Preferred lane ceiling for a problem of `n` elements: 8-wide when a
+    /// full lane fits, narrowing for tiny sizes where lane setup is pure
+    /// overhead.
+    pub fn for_len(n: usize) -> Lane {
+        if n >= 8 {
+            Lane::X8
+        } else if n >= 4 {
+            Lane::X4
+        } else {
+            Lane::Scalar
+        }
+    }
+
+    /// The width in f32 elements (1 for scalar).
+    pub fn width(self) -> usize {
+        match self {
+            Lane::Scalar => 1,
+            Lane::X4 => 4,
+            Lane::X8 => 8,
+        }
+    }
+}
+
+/// The f32 fold operators the collectives accelerate. The scalar oracle
+/// is the same expression per element (`a + b`, `f32::max`, `f32::min`),
+/// so lane and scalar folds agree bitwise, NaN semantics included.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FloatOp {
+    /// Elementwise sum.
+    Sum,
+    /// Elementwise IEEE maximum.
+    Max,
+    /// Elementwise IEEE minimum.
+    Min,
+}
+
+impl FloatOp {
+    /// The scalar fold step.
+    #[inline(always)]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            FloatOp::Sum => a + b,
+            FloatOp::Max => a.max(b),
+            FloatOp::Min => a.min(b),
+        }
+    }
+
+    #[inline(always)]
+    fn combine<const W: usize>(self, a: Lanes<W>, b: Lanes<W>) -> Lanes<W> {
+        match self {
+            FloatOp::Sum => a + b,
+            FloatOp::Max => a.max(b),
+            FloatOp::Min => a.min(b),
+        }
+    }
+}
+
+/// `acc[i] = op(acc[i], other[i])` over the common length: 8-wide main
+/// loop, 4-wide step-down, scalar tail. This is the collectives' fold
+/// inner loop (`reduce`/`allreduce`/`scan` accumulate one peer
+/// contribution per call); lane order equals scalar order, so results are
+/// bit-identical to the scalar oracle.
+pub fn fold_f32(acc: &mut [f32], other: &[f32], op: FloatOp) {
+    let n = acc.len().min(other.len());
+    let mut i = 0usize;
+    while i + 8 <= n {
+        // SAFETY: i + 8 <= n <= both lengths.
+        unsafe {
+            op.combine(F32x8::load_unchecked(acc, i), F32x8::load_unchecked(other, i))
+                .store_unchecked(acc, i);
+        }
+        i += 8;
+    }
+    while i + 4 <= n {
+        // SAFETY: i + 4 <= n <= both lengths.
+        unsafe {
+            op.combine(F32x4::load_unchecked(acc, i), F32x4::load_unchecked(other, i))
+                .store_unchecked(acc, i);
+        }
+        i += 4;
+    }
+    while i < n {
+        acc[i] = op.apply(acc[i], other[i]);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_arithmetic_is_elementwise() {
+        let a = F32x4::load(&[1.0, 2.0, 3.0, 4.0]);
+        let b = F32x4::splat(2.0);
+        assert_eq!((a + b).0, [3.0, 4.0, 5.0, 6.0]);
+        assert_eq!((a - b).0, [-1.0, 0.0, 1.0, 2.0]);
+        assert_eq!((a * b).0, [2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(a.max(b).0, [2.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.min(b).0, [1.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn unchecked_load_store_roundtrip_at_odd_offsets() {
+        let src: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let mut dst = vec![0f32; 20];
+        for off in [0usize, 1, 3, 7, 12] {
+            // SAFETY: off + 8 <= 20.
+            unsafe { F32x8::load_unchecked(&src, off).store_unchecked(&mut dst, off) };
+            assert_eq!(&dst[off..off + 8], &src[off..off + 8]);
+        }
+    }
+
+    #[test]
+    fn plan_time_selection_narrows_with_size() {
+        assert_eq!(Lane::for_len(1 << 20), Lane::X8);
+        assert_eq!(Lane::for_len(8), Lane::X8);
+        assert_eq!(Lane::for_len(4), Lane::X4);
+        assert_eq!(Lane::for_len(2), Lane::Scalar);
+        assert_eq!(Lane::Scalar.width(), 1);
+        assert_eq!(Lane::X4.width(), 4);
+        assert_eq!(Lane::X8.width(), 8);
+    }
+
+    #[test]
+    fn fold_matches_scalar_bitwise_at_awkward_lengths() {
+        for len in [0usize, 1, 3, 4, 5, 7, 8, 9, 12, 13, 31, 64, 65] {
+            for op in [FloatOp::Sum, FloatOp::Max, FloatOp::Min] {
+                let a: Vec<f32> = (0..len).map(|i| (i as f32).sin() * 3.0).collect();
+                let b: Vec<f32> = (0..len).map(|i| (i as f32).cos() * 2.0).collect();
+                let mut lane = a.clone();
+                fold_f32(&mut lane, &b, op);
+                let scalar: Vec<f32> =
+                    a.iter().zip(&b).map(|(&x, &y)| op.apply(x, y)).collect();
+                for (l, s) in lane.iter().zip(&scalar) {
+                    assert_eq!(l.to_bits(), s.to_bits(), "len {len} op {op:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fold_preserves_ieee_nan_semantics_of_the_oracle() {
+        let mut acc = vec![f32::NAN; 9];
+        let other = vec![1.0f32; 9];
+        fold_f32(&mut acc, &other, FloatOp::Max);
+        // f32::max(NAN, 1.0) == 1.0 — the lane path must agree
+        assert!(acc.iter().all(|&x| x == 1.0));
+    }
+}

@@ -22,11 +22,27 @@
 //! * **phase 2** (engine): build the destination-side write-descriptor
 //!   table, verify read/write legality in checked mode, resolve CRCW
 //!   conflicts with reusable scratch;
-//! * **phase 3** ([`Exchange::exchange_data`], backend): move the winning
-//!   bytes — destination-side memcpy (shared) vs. trim-notice round trip +
-//!   source push + receiver matching (distributed);
+//! * **phase 3** ([`Exchange::exchange_data_begin`] +
+//!   [`Exchange::exchange_data_end`], backend): move the winning bytes —
+//!   destination-side memcpy (shared) vs. trim-notice round trip + source
+//!   push + receiver matching (distributed);
 //! * **phase 4** ([`Exchange::finish`], backend): the final barrier; the
 //!   engine then accounts uniform [`SyncStats`] for every backend.
+//!
+//! **Split-phase supersteps.** Phase 3 is split at the point where every
+//! winning byte has been *launched* but not yet *delivered*:
+//! [`SyncEngine::sync_begin`] runs phases 0–2 plus the launch half and
+//! returns control to the caller, [`SyncEngine::sync_end`] completes
+//! delivery and the final barrier. Compute performed between the two
+//! overlaps the in-flight exchange; the engine credits
+//! `min(compute window, in-flight cost)` to [`SyncStats::overlap_ns`]. The
+//! monolithic [`SyncEngine::superstep`] is literally `sync_begin` followed
+//! by `sync_end`, so the bulk and split paths cannot drift apart: same
+//! phases, same barriers, same accounting. Between begin and end the
+//! caller must leave registered slots quiescent (see
+//! `docs/sync-engine.md`); misuse (begin-while-begun, end-without-begin)
+//! is a purely local `Illegal` raised before any barrier, so it can never
+//! deadlock peers.
 //!
 //! In the steady state (capacities warmed up) a superstep performs **zero
 //! heap allocations** on the shared backend — `bench_sync --smoke` asserts
@@ -34,9 +50,10 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
+use std::time::Instant;
 
 use crate::core::{LpfError, Pid, Result, SyncAttr};
-use crate::fabric::plan::{fill_outbox, OutTables, Scratch, SyncPlan};
+use crate::fabric::plan::{fill_outbox, OutTables, Scratch, SplitState, SyncPlan};
 use crate::fabric::SyncStats;
 use crate::memory::SharedRegister;
 use crate::netsim::faults::FaultPlan;
@@ -60,11 +77,29 @@ pub trait Exchange: Send + Sync {
     /// `(requester, seq)`.
     fn exchange_meta(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<()>;
 
-    /// Phase 3: move the winning bytes of `s.segs` (descriptors in
-    /// `s.descs`, payload sources in `s.incoming_puts` / `s.my_gets`).
-    /// Returns the payload bytes written into `pid`'s memory. On error the
-    /// engine aborts the context and propagates.
-    fn exchange_data(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64>;
+    /// Phase 3a: *launch* the data exchange for the winning bytes of
+    /// `s.segs` (descriptors in `s.descs`, payload sources in
+    /// `s.incoming_puts` / `s.my_gets`) and return while delivery is in
+    /// flight. Returns the simulated cost in ns of the in-flight remainder
+    /// — the budget the engine's overlap credit is measured against. The
+    /// default is a no-op returning 0: correct for any backend whose data
+    /// phase runs entirely inside [`exchange_data_end`]
+    /// (shared memory's destination-side memcpy cannot be launched early).
+    ///
+    /// [`exchange_data_end`]: Exchange::exchange_data_end
+    fn exchange_data_begin(
+        &self,
+        _pid: Pid,
+        _engine: &SyncEngine,
+        _s: &mut Scratch,
+    ) -> Result<u64> {
+        Ok(0)
+    }
+
+    /// Phase 3b: complete delivery of the winning bytes into `pid`'s
+    /// memory. Returns the payload bytes written. On error the engine
+    /// aborts the context and propagates.
+    fn exchange_data_end(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64>;
 
     /// Phase 4: the final barrier — the h-relation involving `pid` is
     /// complete when it returns.
@@ -182,7 +217,30 @@ impl SyncEngine {
     }
 
     /// Run one superstep of the 4-phase strategy for `pid` over `ex`.
+    ///
+    /// Exactly [`sync_begin`](SyncEngine::sync_begin) followed by
+    /// [`sync_end`](SyncEngine::sync_end) with an empty compute window:
+    /// the bulk and split-phase paths share every phase, barrier, and
+    /// counter by construction.
     pub fn superstep<E: Exchange>(
+        &self,
+        ex: &E,
+        pid: Pid,
+        reqs: &[Request],
+        attr: SyncAttr,
+    ) -> Result<()> {
+        self.sync_begin(ex, pid, reqs, attr)?;
+        self.sync_end(ex, pid)
+    }
+
+    /// First half of a split-phase superstep: phases 0–2 (outbox fill, meta
+    /// exchange, conflict resolution) plus the launch half of the data
+    /// exchange. On return the exchange is in flight and the caller may
+    /// compute, provided it leaves registered slots quiescent; it must then
+    /// call [`sync_end`](SyncEngine::sync_end). Calling `sync_begin` again
+    /// first is a purely local `Illegal` (raised before any barrier, so it
+    /// cannot deadlock peers).
+    pub fn sync_begin<E: Exchange>(
         &self,
         ex: &E,
         pid: Pid,
@@ -193,19 +251,44 @@ impl SyncEngine {
 
         // ---- fault injection (adversarial testing only; `None` in
         // production). A scheduled mid-job abort fires here, at superstep
-        // entry and before any barrier: this process fails with a clean
-        // error while peers observe PeerAborted at their next collective —
-        // the same propagation path a panicking SPMD function takes.
+        // entry and before any barrier: peers are aborted immediately (so
+        // they observe PeerAborted at their next collective instead of
+        // hanging) and the error is latched to surface from `sync_end` —
+        // the split superstep's single completion point.
+        let mut injected: Option<LpfError> = None;
         if let Some(faults) = self.fault_plan() {
             let step = plan.stats.lock().expect("stats poisoned").syncs;
             if let Some(e) = faults.abort_injection(pid, step) {
                 ex.abort_peers(pid);
-                return Err(e);
+                injected = Some(e);
             }
         }
 
         let mut guard = plan.scratch.lock().expect("scratch poisoned");
         let s = &mut *guard;
+
+        // ---- misuse: begin while a split superstep is in flight. Purely
+        // local (no barrier has been entered for the new superstep), so
+        // peers are unaffected and the caller can recover.
+        if s.split.is_some() {
+            return Err(LpfError::Illegal(
+                "sync_begin while a split-phase superstep is already in flight".into(),
+            ));
+        }
+
+        if let Some(e) = injected {
+            // Peers are already aborting; run no phase, park the error for
+            // sync_end so begin/end stay paired from the caller's view.
+            s.split = Some(SplitState {
+                sent: 0,
+                desc_bytes: 0,
+                seg_bytes: 0,
+                began_at: Instant::now(),
+                inflight_ns: 0,
+                pending_err: Some(e),
+            });
+            return Ok(());
+        }
 
         // ---- phase 0: coalesce + group the drained queue into the outbox.
         // A validation failure here happens before any barrier: abort so
@@ -305,8 +388,51 @@ impl SyncEngine {
             seg_bytes = segs.iter().map(|g| g.len as u64).sum::<u64>();
         }
 
-        // ---- phase 3: data exchange (backend).
-        let bytes_in = match ex.exchange_data(pid, self, s) {
+        // ---- phase 3a: launch the data exchange (backend); its simulated
+        // in-flight cost is the budget the overlap credit is capped by.
+        let inflight_ns = match ex.exchange_data_begin(pid, self, s) {
+            Ok(ns) => ns,
+            Err(e) => {
+                ex.abort_peers(pid);
+                return Err(e);
+            }
+        };
+
+        s.split = Some(SplitState {
+            sent,
+            desc_bytes,
+            seg_bytes,
+            began_at: Instant::now(),
+            inflight_ns,
+            pending_err: None,
+        });
+        Ok(())
+    }
+
+    /// Second half of a split-phase superstep: complete delivery of the
+    /// in-flight bytes, account statistics (including the overlap credit),
+    /// and run the final barrier. Returns a purely local `Illegal` if no
+    /// split superstep is in flight.
+    pub fn sync_end<E: Exchange>(&self, ex: &E, pid: Pid) -> Result<()> {
+        let plan = &self.plans[pid as usize];
+        let mut guard = plan.scratch.lock().expect("scratch poisoned");
+        let s = &mut *guard;
+
+        let Some(split) = s.split.take() else {
+            return Err(LpfError::Illegal("sync_end without a matching sync_begin".into()));
+        };
+
+        // An error latched at sync_begin (injected abort): peers were
+        // aborted there; this is where it surfaces, on every backend.
+        if let Some(e) = split.pending_err {
+            return Err(e);
+        }
+
+        // The compute window closes now; measure it before delivery work.
+        let compute_ns = u64::try_from(split.began_at.elapsed().as_nanos()).unwrap_or(u64::MAX);
+
+        // ---- phase 3b: complete delivery (backend).
+        let bytes_in = match ex.exchange_data_end(pid, self, s) {
             Ok(b) => b,
             Err(e) => {
                 ex.abort_peers(pid);
@@ -348,8 +474,14 @@ impl SyncEngine {
             let mut st = plan.stats.lock().expect("stats poisoned");
             st.syncs += 1;
             st.bytes_in += bytes_in;
-            st.msgs_out += sent as u64;
-            st.bytes_trimmed += desc_bytes - seg_bytes;
+            st.msgs_out += split.sent as u64;
+            st.bytes_trimmed += split.desc_bytes - split.seg_bytes;
+            // Overlap credit: communication cost genuinely hidden behind
+            // the caller's compute window. Capped by the in-flight cost so
+            // a long compute window never inflates it, and ~0 on the bulk
+            // path (empty window). Wall-clock-derived, hence excluded from
+            // SyncStats equality.
+            st.overlap_ns += compute_ns.min(split.inflight_ns);
         }
 
         // ---- phase 4: final barrier.

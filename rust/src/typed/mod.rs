@@ -238,6 +238,53 @@ impl Context {
         self.sync(attr)?;
         Ok(out)
     }
+
+    /// Run one *split-phase* superstep: stage communication through the
+    /// [`Epoch`] in `stage`, then run `compute` while the data exchange is
+    /// in flight, completing the fence when it returns. The communication
+    /// cost hidden behind `compute` is credited to
+    /// [`SyncStats::overlap_ns`](crate::fabric::SyncStats::overlap_ns).
+    ///
+    /// Slot-quiescence is enforced *statically*: `compute` is a plain
+    /// closure with no epoch or context access, so it cannot read or write
+    /// a registered slot, enqueue, or sync while bytes are in flight — the
+    /// borrow checker keeps the context (and through it every slot handle's
+    /// storage) untouchable until `sync_end` has fenced. Compute on
+    /// *unregistered* local data (the FFT's next block, a partial
+    /// reduction) is exactly what fits here.
+    ///
+    /// If `stage` fails, the error propagates without beginning the
+    /// exchange (staged requests stay queued, as with
+    /// [`superstep`](Context::superstep)); a failure of the fence itself
+    /// surfaces after `compute` ran.
+    pub fn superstep_overlapped<R, C, F, G>(&mut self, stage: F, compute: G) -> Result<(R, C)>
+    where
+        F: FnOnce(&mut Epoch<'_>) -> Result<R>,
+        G: FnOnce() -> C,
+    {
+        self.superstep_overlapped_with(SYNC_DEFAULT, stage, compute)
+    }
+
+    /// [`superstep_overlapped`](Context::superstep_overlapped) with
+    /// explicit sync attributes, threaded to `sync_begin` exactly as
+    /// [`superstep_with`](Context::superstep_with) threads them to `sync`.
+    pub fn superstep_overlapped_with<R, C, F, G>(
+        &mut self,
+        attr: SyncAttr,
+        stage: F,
+        compute: G,
+    ) -> Result<(R, C)>
+    where
+        F: FnOnce(&mut Epoch<'_>) -> Result<R>,
+        G: FnOnce() -> C,
+    {
+        let mut ep = Epoch { ctx: &mut *self };
+        let staged = stage(&mut ep)?;
+        self.sync_begin(attr)?;
+        let computed = compute();
+        self.sync_end()?;
+        Ok((staged, computed))
+    }
 }
 
 /// One superstep's staging handle: the only way to issue typed one-sided

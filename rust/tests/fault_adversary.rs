@@ -11,7 +11,7 @@
 //! * an injected allocation failure honours the mitigable
 //!   no-side-effects contract and is one-shot.
 
-use lpf::check::{classify, differential, run_case, ExecMode};
+use lpf::check::{classify, differential, run_case, run_case_in, ExecMode, SyncMode};
 use lpf::core::{Args, LpfError, SYNC_DEFAULT};
 use lpf::ctx::Platform;
 use lpf::netsim::faults::{FaultPlan, FaultSpec};
@@ -21,7 +21,7 @@ use lpf::pool::Pool;
 fn no_fault_differential_matrix_is_clean() {
     let r = differential(4, 1, None);
     assert!(r.ok(), "violations: {:#?}", r.violations);
-    assert_eq!(r.cases.len(), 8, "4 backends x cold/warm");
+    assert_eq!(r.cases.len(), 16, "4 backends x cold/warm x bulk/split");
     assert!(r.cases.iter().all(|c| c.class() == "ok" && c.recovered));
 }
 
@@ -40,15 +40,19 @@ fn injected_abort_is_clean_cold_rebuilds_and_recovers() {
     for (name, plat) in
         [("shared", Platform::shared().checked(true)), ("rdma", Platform::rdma().checked(true))]
     {
-        let plan = FaultPlan::one(FaultSpec::AbortAtSuperstep { pid: 1, step: 1 });
-        let case = run_case(name, &plat, 3, 2, ExecMode::Warm, Some(plan.clone()));
-        let err = case.result.expect_err("the abort must surface");
-        // pid 0 observes its peer's abort; the injected error itself lives
-        // on pid 1 — both classes are clean, deterministic outcomes
-        assert_eq!(classify(&err), "peer-aborted", "{err:?}");
-        assert_eq!(case.cold_resets, 1, "{name}: failed job must cold-rebuild the team");
-        assert!(case.recovered, "{name}: team must serve the next job");
-        assert_eq!(plan.injections(), 1);
+        // split-phase parks the injected abort at `sync_begin` and must
+        // surface it at `sync_end` with the same class as the bulk path
+        for sync in [SyncMode::Bulk, SyncMode::Split] {
+            let plan = FaultPlan::one(FaultSpec::AbortAtSuperstep { pid: 1, step: 1 });
+            let case = run_case_in(name, &plat, 3, 2, ExecMode::Warm, sync, Some(plan.clone()));
+            let err = case.result.expect_err("the abort must surface");
+            // pid 0 observes its peer's abort; the injected error itself
+            // lives on pid 1 — both classes are clean, deterministic
+            assert_eq!(classify(&err), "peer-aborted", "{name}/{}: {err:?}", sync.name());
+            assert_eq!(case.cold_resets, 1, "{name}: failed job must cold-rebuild the team");
+            assert!(case.recovered, "{name}: team must serve the next job");
+            assert_eq!(plan.injections(), 1);
+        }
     }
 }
 
@@ -89,15 +93,23 @@ fn absorbed_wire_faults_leave_observations_bit_identical() {
             FaultSpec::DelayRendezvous { pid: 2, step: 1, ns: 300_000.0 },
             FaultSpec::DelayMeta { pid: 0, step: 2, ns: 150_000.0 },
         ] {
-            let plan = FaultPlan::one(spec);
-            let case = run_case(name, &plat, 4, 7, ExecMode::Cold, Some(plan.clone()));
-            let observed = case.result.expect("absorbed faults must not fail");
-            assert_eq!(
-                observed, reference,
-                "{name}: {spec:?} changed memory or stats (must be model-legal)"
-            );
-            assert!(plan.injections() > 0, "{name}: {spec:?} never fired");
-            assert_eq!(case.cold_resets, 0);
+            // bulk, and split-phase — where the fault lands inside the
+            // begin→end window while the process is busy computing. Both
+            // must match the *bulk* clean reference bit for bit.
+            for sync in [SyncMode::Bulk, SyncMode::Split] {
+                let plan = FaultPlan::one(spec);
+                let case =
+                    run_case_in(name, &plat, 4, 7, ExecMode::Cold, sync, Some(plan.clone()));
+                let observed = case.result.expect("absorbed faults must not fail");
+                assert_eq!(
+                    observed,
+                    reference,
+                    "{name}/{}: {spec:?} changed memory or stats (must be model-legal)",
+                    sync.name()
+                );
+                assert!(plan.injections() > 0, "{name}: {spec:?} never fired");
+                assert_eq!(case.cold_resets, 0);
+            }
         }
     }
 }

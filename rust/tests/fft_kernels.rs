@@ -210,6 +210,117 @@ fn all_kernels_reject_length_mismatch_as_illegal() {
     assert!(local::fft_in_place_post_mul(&plan, &mut ok, &mut ok.clone(), &tw, &tw).is_err());
 }
 
+/// The SIMD satellite: every lane width must reproduce the scalar
+/// kernel **bit for bit** (same per-element expression tree, no
+/// reassociation), across both radix parities, the cache-block boundary
+/// (2^12 even / 2^13 odd), and the fused-twiddle epilogue. The scalar
+/// kernel stays the correctness oracle against the naive DFT (small n)
+/// and the radix-2 baseline (large n).
+#[test]
+fn lane_sweeps_match_scalar_bitwise_from_2_to_2p16() {
+    use lpf::simd::Lane;
+    for bits in [1u32, 2, 3, 4, 5, 8, 11, 12, 13, 14, 16] {
+        let n = 1usize << bits;
+        let plan = FftPlan::new(n).unwrap();
+        let (re, im) = rand_planes(n, 400 + bits as u64);
+        let run = |lane| {
+            let mut r = re.clone();
+            let mut i = im.clone();
+            local::fft_in_place_with_lane(&plan, &mut r, &mut i, lane).unwrap();
+            (r, i)
+        };
+        let (sr, si) = run(Lane::Scalar);
+        for lane in [Lane::X4, Lane::X8] {
+            let (lr, li) = run(lane);
+            for k in 0..n {
+                assert_eq!(sr[k].to_bits(), lr[k].to_bits(), "{lane:?} re[{k}] n={n}");
+                assert_eq!(si[k].to_bits(), li[k].to_bits(), "{lane:?} im[{k}] n={n}");
+            }
+        }
+        // the scalar oracle itself is checked against an independent
+        // implementation: naive DFT while O(n²) is affordable, the
+        // retained radix-2 baseline beyond
+        if bits <= 10 {
+            let (dr, di) = local::dft_naive(&re, &im);
+            assert!(max_err(&sr, &si, &dr, &di) < 1e-2 * (n as f32).sqrt(), "oracle n={n}");
+        } else {
+            let (br, bi) = baseline::fft_radix2(&plan, &re, &im).unwrap();
+            assert!(max_err(&sr, &si, &br, &bi) < tol(n), "oracle n={n}");
+        }
+    }
+}
+
+/// Lane/scalar bit-identity for the fused post-twiddle epilogue and the
+/// batched/strided kernels, including counts that are not a multiple of
+/// any lane width (scalar-tail coverage) and the transposed-output form.
+#[test]
+fn lane_fused_and_batched_kernels_match_scalar_bitwise() {
+    use lpf::simd::Lane;
+    for bits in [2u32, 5, 10, 13, 14] {
+        let n = 1usize << bits;
+        let plan = FftPlan::new(n).unwrap();
+        let (re, im) = rand_planes(n, 500 + bits as u64);
+        let mut rng = XorShift64::new(9 + bits as u64);
+        let tw_re: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        let tw_im: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+        let fused = |lane| {
+            let mut r = re.clone();
+            let mut i = im.clone();
+            local::fft_in_place_post_mul_with_lane(&plan, &mut r, &mut i, &tw_re, &tw_im, lane)
+                .unwrap();
+            (r, i)
+        };
+        let (sr, si) = fused(Lane::Scalar);
+        for lane in [Lane::X4, Lane::X8] {
+            let (lr, li) = fused(lane);
+            assert!(
+                sr.iter().zip(&lr).all(|(a, b)| a.to_bits() == b.to_bits())
+                    && si.iter().zip(&li).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "fused {lane:?} diverged at n={n}"
+            );
+        }
+    }
+    // batched shapes: counts 1..17 cross every tail residue of both widths
+    for &(n, count, stride) in
+        &[(8usize, 1usize, 3usize), (8, 3, 3), (16, 5, 6), (16, 7, 7), (32, 9, 12), (64, 17, 17)]
+    {
+        let plan = FftPlan::new(n).unwrap();
+        let len = (n - 1) * stride + count;
+        let (re0, im0) = rand_planes(len, (n * 13 + count) as u64);
+        let in_place = |lane| {
+            let mut r = re0.clone();
+            let mut i = im0.clone();
+            local::fft_batch_strided_with_lane(&plan, &mut r, &mut i, count, stride, lane)
+                .unwrap();
+            (r, i)
+        };
+        let transposed = |lane| {
+            let mut r = re0.clone();
+            let mut i = im0.clone();
+            let mut or = vec![0f32; count * n];
+            let mut oi = vec![0f32; count * n];
+            local::fft_batch_strided_out_with_lane(
+                &plan, &mut r, &mut i, count, stride, &mut or, &mut oi, lane,
+            )
+            .unwrap();
+            (or, oi)
+        };
+        let scalar_ip = in_place(Lane::Scalar);
+        let scalar_tr = transposed(Lane::Scalar);
+        for lane in [Lane::X4, Lane::X8] {
+            for (scalar, got, kind) in
+                [(&scalar_ip, in_place(lane), "in-place"), (&scalar_tr, transposed(lane), "out")]
+            {
+                assert!(
+                    scalar.0.iter().zip(&got.0).all(|(a, b)| a.to_bits() == b.to_bits())
+                        && scalar.1.iter().zip(&got.1).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "batch {kind} {lane:?} diverged at n={n} count={count} stride={stride}"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn plan_cache_is_shared_and_kernels_agree_through_it() {
     let a = FftPlan::cached(256).unwrap();

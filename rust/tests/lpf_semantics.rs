@@ -5,7 +5,7 @@
 //! shared / rdma / msg / hybrid fabrics and require byte-identical
 //! results, including the deterministic CRCW conflict-resolution order.
 
-use lpf::core::{Args, LpfError, MSG_DEFAULT, SYNC_DEFAULT};
+use lpf::core::{Args, LpfError, SyncAttr, MSG_DEFAULT, SYNC_DEFAULT};
 use lpf::ctx::{exec, Context, Platform, Root};
 
 fn all_platforms() -> Vec<(&'static str, Platform)> {
@@ -137,6 +137,120 @@ fn multi_superstep_pipeline_identical() {
     }
     for (name, got) in &results {
         assert_eq!(got, &reference, "backend {name} diverged");
+    }
+}
+
+#[test]
+fn split_phase_misuse_is_clean_illegal_on_all_backends() {
+    // Every misuse of the split-phase pair must be a *purely local*
+    // `Illegal` — returned before any barrier, so it can never deadlock
+    // the team or corrupt the in-flight exchange — and the context must
+    // stay fully usable afterwards.
+    for (name, plat) in all_platforms() {
+        let root = Root::new(plat).with_max_procs(2);
+        exec(
+            &root,
+            2,
+            |ctx, _| {
+                ctx.resize_memory_register(2).unwrap();
+                ctx.resize_message_queue(4).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                let src = ctx.register_global(8).unwrap();
+                let dst = ctx.register_global(8).unwrap();
+                // end without begin: local Illegal, nothing in flight
+                assert!(matches!(ctx.sync_end(), Err(LpfError::Illegal(_))));
+                let peer = (ctx.pid() + 1) % 2;
+                ctx.write_typed(src, 0, &[ctx.pid() as u64 + 1]).unwrap();
+                ctx.put(src, 0, peer, dst, 0, 8, MSG_DEFAULT).unwrap();
+                ctx.sync_begin(SYNC_DEFAULT).unwrap();
+                // inside the window: begin again, bulk sync, put, get —
+                // each a clean Illegal that leaves the exchange untouched
+                assert!(matches!(ctx.sync_begin(SYNC_DEFAULT), Err(LpfError::Illegal(_))));
+                assert!(matches!(ctx.sync(SYNC_DEFAULT), Err(LpfError::Illegal(_))));
+                assert!(matches!(
+                    ctx.put(src, 0, peer, dst, 0, 8, MSG_DEFAULT),
+                    Err(LpfError::Illegal(_))
+                ));
+                assert!(matches!(
+                    ctx.get(peer, src, 0, dst, 0, 8, MSG_DEFAULT),
+                    Err(LpfError::Illegal(_))
+                ));
+                ctx.sync_end().unwrap();
+                // the exchange delivered despite the misuse attempts
+                let mut v = [0u64];
+                ctx.read_typed(dst, 0, &mut v).unwrap();
+                assert_eq!(v[0], peer as u64 + 1);
+                // a second end is Illegal again once quiescent
+                assert!(matches!(ctx.sync_end(), Err(LpfError::Illegal(_))));
+                // and an ordinary bulk superstep still works
+                ctx.sync(SYNC_DEFAULT).unwrap();
+            },
+            Args::none(),
+        )
+        .unwrap_or_else(|e| panic!("backend {name}: {e}"));
+    }
+}
+
+#[test]
+fn dangling_sync_begin_at_exit_fails_clean_not_deadlock() {
+    // Returning from the SPMD function with a split superstep still in
+    // flight is misuse; the never-deadlock rule says it must surface as
+    // a clean error on every backend, not wedge the team at a barrier.
+    for (name, plat) in all_platforms() {
+        let root = Root::new(plat).with_max_procs(2);
+        let res = exec(
+            &root,
+            2,
+            |ctx, _| {
+                ctx.resize_memory_register(1).unwrap();
+                ctx.resize_message_queue(2).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                ctx.sync_begin(SYNC_DEFAULT).unwrap();
+                // no sync_end: the harness must refuse the dangling begin
+            },
+            Args::none(),
+        );
+        let err = res.expect_err("dangling begin must fail");
+        assert!(!err.is_mitigable(), "backend {name}: {err:?}");
+    }
+}
+
+#[test]
+fn sync_attr_threads_through_both_entry_points() {
+    // `assume_no_conflicts` is a contract, not a hint the engine may
+    // drop: a conflict-free exchange must deliver identical bytes with
+    // the attribute asserted through the bulk entry point and through
+    // the split-phase pair.
+    let nc = SyncAttr { assume_no_conflicts: true };
+    for split in [false, true] {
+        let results = on_all_backends(4, move |ctx, _| {
+            let p = ctx.p();
+            ctx.resize_memory_register(2).unwrap();
+            ctx.resize_message_queue(2 * p as usize).unwrap();
+            ctx.sync(SYNC_DEFAULT).unwrap();
+            let mine = ctx.register_global(8).unwrap();
+            let all = ctx.register_global(8 * p as usize).unwrap();
+            ctx.write_typed(mine, 0, &[0xC0DEu64 + ctx.pid() as u64]).unwrap();
+            // disjoint destinations: genuinely conflict-free
+            for k in 0..p {
+                ctx.put(mine, 0, k, all, 8 * ctx.pid() as usize, 8, MSG_DEFAULT).unwrap();
+            }
+            if split {
+                ctx.sync_begin(nc).unwrap();
+                ctx.sync_end().unwrap();
+            } else {
+                ctx.sync(nc).unwrap();
+            }
+            let mut v = vec![0u64; p as usize];
+            ctx.read_typed(all, 0, &mut v).unwrap();
+            v
+        });
+        let want: Vec<u64> = (0..4).map(|k| 0xC0DEu64 + k).collect();
+        for (name, got) in &results {
+            for (pid, v) in got.iter().enumerate() {
+                assert_eq!(v, &want, "backend {name} pid {pid} split={split}");
+            }
+        }
     }
 }
 
