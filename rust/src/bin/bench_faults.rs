@@ -3,9 +3,10 @@
 //! Sweeps seeds through the cross-backend differential oracle
 //! ([`lpf::check::differential`]): for each seed a deterministic fault is
 //! derived ([`lpf::netsim::faults::FaultPlan::from_seed`]) and the
-//! adversary workload runs on `{shared, rdma, msg, hybrid} × {cold,
-//! warm}` against a fault-free reference. The sweep pins the paper's §3
-//! guarantees adversarially:
+//! adversary workload runs on `{shared, rdma, msg, hybrid, hybrid-fat}
+//! × {cold, warm}` (the hybrids routed over the NUMA-pair and fat-tree
+//! topologies) against a fault-free reference. The sweep pins the
+//! paper's §3 guarantees adversarially:
 //!
 //! * **absorbed** (model-legal delay / reorder / late rendezvous) faults
 //!   leave destination memory and `SyncStats` bit-identical to the

@@ -13,10 +13,13 @@
 //! * **bsp**: cold (construct + first transform) vs warm (steady-state)
 //!   `BspFft::run_into` latency on a worker pool, across process counts
 //!   and backends;
-//! * **overlap**: split-phase efficiency on netsim-rdma — priced
-//!   communication of the bulk redistribution vs the overlapped
+//! * **overlap**: split-phase efficiency on the priced backends — the
+//!   bulk redistribution's simulated communication vs the overlapped
 //!   pipeline's *unhidden* remainder (simulated wire ns minus the
 //!   `overlap_ns` credit), i.e. how much of g·h the compute window hid.
+//!   Each row records the fabric's route topology (flat rdma and the
+//!   two-level NumaPair hybrid), so the trajectory tracks how the
+//!   topology-aware redistribution schedule prices per topology.
 //!
 //! `--smoke` runs a reduced sweep (CI) and additionally asserts the
 //! steady-state guarantees: warm native-path `BspFft::run_into` *and*
@@ -290,6 +293,10 @@ fn count_steady_state_allocs(p: u32, n: usize, runs: u32, overlapped: bool) -> u
 // ----------------------------------------------------------------- overlap
 
 struct OverlapRow {
+    backend: &'static str,
+    /// Route topology the fabric priced the runs over (from the
+    /// fabric's own `TopologyView`, not assumed from the platform).
+    topology: &'static str,
     p: u32,
     n: usize,
     /// Simulated wire ns one bulk `run_into` prices (per run).
@@ -307,15 +314,22 @@ struct OverlapRow {
     comm_speedup: f64,
 }
 
-/// Priced-communication head-to-head on netsim-rdma: how much of the
-/// redistribution's g·h does the overlapped pipeline hide behind the
+/// Priced-communication head-to-head on a simulated backend: how much of
+/// the redistribution's g·h does the overlapped pipeline hide behind the
 /// step-4 compute? Wire time is simulated (deterministic), the credit is
 /// `min(compute window, in-flight cost)` per chunk superstep.
-fn bench_overlap(p: u32, n: usize, reps: u32) -> OverlapRow {
-    let pool = Pool::new(Platform::rdma(), p);
+fn bench_overlap(
+    backend: &'static str,
+    platform: Platform,
+    p: u32,
+    n: usize,
+    reps: u32,
+) -> OverlapRow {
+    let pool = Pool::new(platform, p);
     let outs = pool
         .exec(
             move |ctx, _| {
+                let topology = ctx.topology().name;
                 let m = n / ctx.p() as usize;
                 let mut bsp =
                     Bsp::begin_with_staging(ctx, 8, 4 * ctx.p() as usize + 8, 64).unwrap();
@@ -327,7 +341,7 @@ fn bench_overlap(p: u32, n: usize, reps: u32) -> OverlapRow {
                 let mut o_im = vec![0f32; m];
                 fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
                 fft.run_into_overlapped(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
-                let sim0 = bsp.lpf().sim_time_ns().expect("rdma is simulated");
+                let sim0 = bsp.lpf().sim_time_ns().expect("priced backend is simulated");
                 for _ in 0..reps {
                     fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
                 }
@@ -341,7 +355,7 @@ fn bench_overlap(p: u32, n: usize, reps: u32) -> OverlapRow {
                 std::hint::black_box((&o_re, &o_im));
                 bsp.end().unwrap();
                 let r = reps as f64;
-                ((sim1 - sim0) / r, (sim2 - sim1) / r, (hid1 - hid0) as f64 / r)
+                ((sim1 - sim0) / r, (sim2 - sim1) / r, (hid1 - hid0) as f64 / r, topology)
             },
             Args::none(),
         )
@@ -351,8 +365,11 @@ fn bench_overlap(p: u32, n: usize, reps: u32) -> OverlapRow {
     let bulk = outs.iter().map(|o| o.0).fold(0.0, f64::max);
     let split = outs.iter().map(|o| o.1).fold(0.0, f64::max);
     let hidden = outs.iter().map(|o| o.2).fold(f64::INFINITY, f64::min);
+    let topology = outs[0].3;
     let effective = (split - hidden).max(1.0);
     let row = OverlapRow {
+        backend,
+        topology,
         p,
         n,
         bulk_comm_ns: bulk,
@@ -362,7 +379,9 @@ fn bench_overlap(p: u32, n: usize, reps: u32) -> OverlapRow {
         comm_speedup: bulk / effective,
     };
     eprintln!(
-        "overlap rdma p={} n=2^{:<2} bulk {:>12}  split {:>12}  hidden {:>12}  -> {:.2}x",
+        "overlap {:>6}/{} p={} n=2^{:<2} bulk {:>12}  split {:>12}  hidden {:>12}  -> {:.2}x",
+        backend,
+        row.topology,
         p,
         n.trailing_zeros(),
         fmt_ns(row.bulk_comm_ns),
@@ -384,7 +403,7 @@ fn write_json(
     overlap: &[OverlapRow],
 ) {
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"bench_fft/v2\",\n");
+    s.push_str("{\n  \"schema\": \"bench_fft/v3\",\n");
     if let Some((p, runs, allocs, allocs_ovl)) = alloc_check {
         s.push_str(&format!(
             "  \"alloc_check\": {{ \"backend\": \"shared\", \"p\": {p}, \"runs\": {runs}, \
@@ -438,9 +457,11 @@ fn write_json(
     s.push_str("  ],\n  \"overlap\": [\n");
     for (i, r) in overlap.iter().enumerate() {
         s.push_str(&format!(
-            "    {{ \"backend\": \"rdma\", \"p\": {}, \"n\": {}, \"bulk_comm_ns\": {}, \
-             \"split_comm_ns\": {}, \"hidden_ns\": {}, \"effective_ns\": {}, \
-             \"comm_speedup\": {} }}{}\n",
+            "    {{ \"backend\": \"{}\", \"topology\": \"{}\", \"p\": {}, \"n\": {}, \
+             \"bulk_comm_ns\": {}, \"split_comm_ns\": {}, \"hidden_ns\": {}, \
+             \"effective_ns\": {}, \"comm_speedup\": {} }}{}\n",
+            r.backend,
+            r.topology,
             r.p,
             r.n,
             json_f64(r.bulk_comm_ns),
@@ -478,9 +499,15 @@ fn main() {
     }
 
     // the overlap headline is at the acceptance size 2^20 in both modes;
-    // wire time is simulated so few reps suffice
-    let overlap: Vec<OverlapRow> =
-        [2u32, 4].iter().map(|&p| bench_overlap(p, 1 << 20, if smoke { 2 } else { 5 })).collect();
+    // wire time is simulated so few reps suffice. The hybrid rows price
+    // the same pipeline over the two-level NumaPair topology (where the
+    // redistribution schedule walks nodes) — recorded, not gated.
+    let overlap_reps = if smoke { 2 } else { 5 };
+    let mut overlap: Vec<OverlapRow> = Vec::new();
+    for p in [2u32, 4] {
+        overlap.push(bench_overlap("rdma", Platform::rdma(), p, 1 << 20, overlap_reps));
+        overlap.push(bench_overlap("hybrid", Platform::hybrid(2), p, 1 << 20, overlap_reps));
+    }
 
     let alloc_check = if smoke {
         const RUNS: u32 = 20;
@@ -542,7 +569,9 @@ fn main() {
                 top_simd.speedup, top_simd.k
             );
         }
-        for r in &overlap {
+        // the pinned acceptance gate is the flat-rdma pricing; hybrid
+        // rows track the topology-aware schedule but are not gated here
+        for r in overlap.iter().filter(|r| r.backend == "rdma") {
             if r.comm_speedup < 1.15 {
                 eprintln!(
                     "FAIL: overlapped pipeline priced {:.2}x at p={} (expected >= 1.15x \

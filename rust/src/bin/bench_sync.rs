@@ -7,11 +7,20 @@
 //! simulated-NIC backends report simulated nanoseconds (their clocks
 //! advance by the costs of the transport operations actually executed).
 //!
+//! Since schema v4 each case also records the fabric's route topology
+//! and the per-link peak utilisation (max bytes over any single link per
+//! superstep), the hybrid backends appear twice (NumaPair and FatTree
+//! wirings), and two extra sections land in the artifact: per-level
+//! `(g, ℓ)` fits on the hybrid topology (`level_fits`) and the
+//! two-level-vs-flat allreduce comparison (`two_level_allreduce`).
+//!
 //! `--smoke` runs a reduced sweep (CI) and additionally asserts the
-//! engine's zero-allocation guarantee: after warmup, a window of
+//! engine's zero-allocation guarantee — after warmup, a window of
 //! steady-state shared-backend supersteps must perform **zero** heap
-//! allocations, counted by a global allocator wrapper. A violation exits
-//! non-zero and fails the CI job.
+//! allocations, counted by a global allocator wrapper — and the
+//! hierarchical-collectives gate: the model-priced two-level allreduce
+//! must beat the flat Bruck baseline by ≥ 1.3× on the FatTree cluster at
+//! p = 8. A violation exits non-zero and fails the CI job.
 //!
 //! Usage: `bench_sync [--smoke] [--out PATH]`
 
@@ -19,9 +28,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use lpf::benchkit::{alloc_counter, fit_affine, json_f64, r_squared, Samples};
+use lpf::collectives::{Coll, CollPolicy};
 use lpf::core::{Args, Pid, MSG_DEFAULT, SYNC_DEFAULT};
 use lpf::ctx::{exec, Platform, Root};
 use lpf::fabric::net::{DEFAULT_BRUCK_SEED, MetaAlgo, NetFabric, Topology};
+use lpf::probe::bench::{run_level_probe, ProbeConfig, ProbeRow};
+use lpf::probe::ProbeTable;
 use lpf::fabric::shared::SharedFabric;
 use lpf::fabric::Fabric;
 use lpf::memory::SlotStorage;
@@ -324,6 +336,9 @@ fn measure_dispatch(p: Pid, cold_iters: u32, warm_iters: u32) -> DispatchSummary
 
 struct CaseResult {
     backend: &'static str,
+    /// Name of the route topology the fabric prices over ("flat",
+    /// "numa_pair", "fat_tree", …).
+    topology: &'static str,
     p: Pid,
     coalesce: bool,
     simulated: bool,
@@ -332,6 +347,9 @@ struct CaseResult {
     g_ns_per_byte: f64,
     l_ns: f64,
     r2: f64,
+    /// Max bytes any single link carried in one superstep, across the
+    /// sweep (0 on the shared backend, which has no simulated links).
+    peak_link_bytes: u64,
 }
 
 fn backend_fabric(backend: &'static str, p: Pid, coalesce: bool) -> Arc<dyn Fabric> {
@@ -377,6 +395,18 @@ fn backend_fabric(backend: &'static str, p: Pid, coalesce: bool) -> Arc<dyn Fabr
             f.set_coalescing(coalesce);
             f
         }
+        "hybrid-fat" => {
+            let f = NetFabric::with_config(
+                p,
+                "hybrid-fat",
+                Personality::ibverbs(),
+                Topology::fat_tree(2),
+                MetaAlgo::RandomisedBruck { seed: DEFAULT_BRUCK_SEED },
+                false,
+            );
+            f.set_coalescing(coalesce);
+            f
+        }
         other => panic!("unknown backend {other}"),
     }
 }
@@ -392,10 +422,14 @@ fn run_case(
 ) -> CaseResult {
     let mut points = Vec::new();
     let mut simulated = false;
+    let mut topology = "flat";
+    let mut peak_link_bytes = 0u64;
     for &msgs in msg_counts {
         let fab = backend_fabric(backend, p, coalesce);
         simulated = fab.sim_time_ns(0).is_some();
-        let s = time_supersteps(fab, p, msgs, bytes, warmup, iters);
+        topology = fab.topology().name;
+        let s = time_supersteps(fab.clone(), p, msgs, bytes, warmup, iters);
+        peak_link_bytes = peak_link_bytes.max(fab.stats(0).peak_link_bytes);
         let h = ((p - 1) as usize * msgs * bytes) as f64;
         points.push((h, s.mean(), s.ci95()));
     }
@@ -403,7 +437,75 @@ fn run_case(
     let ys: Vec<f64> = points.iter().map(|&(_, m, _)| m).collect();
     let (g, l) = fit_affine(&xs, &ys);
     let r2 = r_squared(&xs, &ys, g, l);
-    CaseResult { backend, p, coalesce, simulated, points, g_ns_per_byte: g, l_ns: l, r2 }
+    CaseResult {
+        backend,
+        topology,
+        p,
+        coalesce,
+        simulated,
+        points,
+        g_ns_per_byte: g,
+        l_ns: l,
+        r2,
+        peak_link_bytes,
+    }
+}
+
+// ------------------------------------------------- two-level collectives
+
+/// The hierarchical-collectives gate: model-priced `allreduce` of a
+/// large payload on the FatTree hybrid platform, comparing the plan the
+/// topology selects (two-level: intra fold → leader Bruck → intra
+/// fan-out) against the flat baseline forced via [`CollPolicy::Flat`] on
+/// the **same** fabric — same topology, same route pricing, only the
+/// algorithm differs. Flat pays `p − 1` full routes per process (most of
+/// them multi-hop wire); two-level sends each payload over the wire
+/// `O(log nodes)` times and keeps the rest on intra links.
+struct TwoLevelGate {
+    p: Pid,
+    payload_bytes: usize,
+    flat_ns: f64,
+    two_level_ns: f64,
+    speedup: f64,
+}
+
+fn measure_two_level_allreduce(p: Pid, elems: usize) -> TwoLevelGate {
+    let time_policy = |policy: CollPolicy| -> f64 {
+        let pool = Pool::new(Platform::hybrid_fat_tree(2), p);
+        let outs = pool
+            .exec(
+                move |ctx: &mut lpf::Context, _| {
+                    ctx.bootstrap(8, 4 * ctx.p() as usize).unwrap();
+                    let coll = Coll::with_policy(ctx, elems * 8, policy).unwrap();
+                    ctx.sync(SYNC_DEFAULT).unwrap();
+                    let me = ctx.pid() as u64;
+                    let mine: Vec<u64> =
+                        (0..elems).map(|i| me.wrapping_mul(0x9E37) ^ i as u64).collect();
+                    let mut out = vec![0u64; elems];
+                    // warm (first run may touch lazy paths), then timed
+                    coll.allreduce(ctx, &mine, &mut out, u64::wrapping_add).unwrap();
+                    const ITERS: u32 = 3;
+                    let t0 = ctx.sim_time_ns().unwrap();
+                    for _ in 0..ITERS {
+                        coll.allreduce(ctx, &mine, &mut out, u64::wrapping_add).unwrap();
+                    }
+                    (ctx.sim_time_ns().unwrap() - t0) / f64::from(ITERS)
+                },
+                Args::none(),
+            )
+            .unwrap();
+        // BSP time: the slowest process bounds the collective
+        outs.into_iter().fold(0.0f64, f64::max)
+    };
+    let flat_ns = time_policy(CollPolicy::Flat);
+    let two_level_ns = time_policy(CollPolicy::Auto);
+    TwoLevelGate {
+        p,
+        payload_bytes: elems * 8,
+        flat_ns,
+        two_level_ns,
+        speedup: if two_level_ns > 0.0 { flat_ns / two_level_ns } else { 0.0 },
+    }
 }
 
 // ---------------------------------------------------------------- output
@@ -414,15 +516,42 @@ fn write_json(
     alloc_check: Option<(u32, u64)>,
     dispatch: &DispatchSummary,
     overlap: &[OverlapCase],
+    gate: &TwoLevelGate,
+    level_fits: &[(String, Vec<ProbeRow>)],
+    level_p: Pid,
 ) {
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"bench_sync/v3\",\n");
+    s.push_str("{\n  \"schema\": \"bench_sync/v4\",\n");
     if let Some((steps, allocs)) = alloc_check {
         s.push_str(&format!(
             "  \"alloc_check\": {{ \"backend\": \"shared\", \"supersteps\": {steps}, \
              \"allocations\": {allocs} }},\n"
         ));
     }
+    s.push_str(&format!(
+        "  \"two_level_allreduce\": {{ \"topology\": \"fat_tree\", \"p\": {}, \
+         \"payload_bytes\": {}, \"flat_ns\": {}, \"two_level_ns\": {}, \"speedup\": {} }},\n",
+        gate.p,
+        gate.payload_bytes,
+        json_f64(gate.flat_ns),
+        json_f64(gate.two_level_ns),
+        json_f64(gate.speedup)
+    ));
+    s.push_str("  \"level_fits\": [\n");
+    for (i, (key, rows)) in level_fits.iter().enumerate() {
+        s.push_str(&format!("    {{ \"backend\": \"{key}\", \"p\": {level_p}, \"rows\": ["));
+        for (j, r) in rows.iter().enumerate() {
+            s.push_str(&format!(
+                "{}{{ \"word_bytes\": {}, \"g_ns\": {}, \"l_ns\": {} }}",
+                if j > 0 { ", " } else { "" },
+                r.word_bytes,
+                json_f64(r.g_ns),
+                json_f64(r.l_ns)
+            ));
+        }
+        s.push_str(&format!("] }}{}\n", if i + 1 < level_fits.len() { "," } else { "" }));
+    }
+    s.push_str("  ],\n");
     s.push_str(&format!(
         "  \"job_dispatch\": {{ \"job\": \"empty\", \"p\": {}, \"cold_iters\": {}, \
          \"warm_iters\": {}, \"cold_jobs_per_sec\": {}, \"warm_jobs_per_sec\": {}, \
@@ -437,10 +566,13 @@ fn write_json(
     s.push_str("  \"cases\": [\n");
     for (i, c) in cases.iter().enumerate() {
         s.push_str(&format!(
-            "    {{ \"backend\": \"{}\", \"p\": {}, \"coalesce\": {}, \"time_base\": \"{}\",\n",
+            "    {{ \"backend\": \"{}\", \"topology\": \"{}\", \"p\": {}, \"coalesce\": {}, \
+             \"peak_link_bytes\": {}, \"time_base\": \"{}\",\n",
             c.backend,
+            c.topology,
             c.p,
             c.coalesce,
+            c.peak_link_bytes,
             if c.simulated { "simulated_ns" } else { "wall_ns" }
         ));
         s.push_str(&format!(
@@ -498,7 +630,7 @@ fn main() {
         .cloned()
         .unwrap_or_else(|| "BENCH_sync.json".to_string());
 
-    let backends: &[&'static str] = &["shared", "rdma", "msg", "hybrid"];
+    let backends: &[&'static str] = &["shared", "rdma", "msg", "hybrid", "hybrid-fat"];
     let (ps, msg_counts, bytes, warmup, iters): (&[Pid], &[usize], usize, u32, u32) = if smoke {
         (&[4], &[1, 4, 16], 64, 5, 10)
     } else {
@@ -549,7 +681,42 @@ fn main() {
         dispatch.warm_over_cold
     );
 
-    write_json(&out, &cases, alloc_check, &dispatch, &overlap);
+    // hierarchical collectives: model-priced two-level vs flat allreduce
+    // on the FatTree cluster (large payload — the regime the paper's
+    // per-link design targets)
+    let gate = measure_two_level_allreduce(8, 1 << 16);
+    eprintln!(
+        "two-level allreduce (fat_tree p={}, {} KiB): flat {:.0} ns, two-level {:.0} ns \
+         ({:.2}x)",
+        gate.p,
+        gate.payload_bytes >> 10,
+        gate.flat_ns,
+        gate.two_level_ns,
+        gate.speedup
+    );
+
+    // per-level (g, ℓ) fits on the hybrid topology — the probe's view of
+    // what each link class costs
+    let level_p: Pid = 4;
+    let level_cfg = ProbeConfig {
+        p: level_p,
+        word_sizes: if smoke { vec![8] } else { vec![8, 1024] },
+        max_bytes: 1 << 16,
+        reps: 1,
+        samples: if smoke { 2 } else { 5 },
+    };
+    let level_fits =
+        run_level_probe(&Platform::hybrid(2), &level_cfg, &Arc::new(ProbeTable::default()))
+            .expect("level probe");
+    for (key, rows) in &level_fits {
+        eprintln!(
+            "level fit {key} p={level_p}: g={} ns/word  l={} ns",
+            json_f64(rows[0].g_ns),
+            json_f64(rows[0].l_ns)
+        );
+    }
+
+    write_json(&out, &cases, alloc_check, &dispatch, &overlap, &gate, &level_fits, level_p);
     eprintln!("wrote {out}");
 
     let mut failed = false;
@@ -564,6 +731,22 @@ fn main() {
         }
     }
     if smoke {
+        // the hierarchical-collectives gate: the topology-selected plan
+        // must beat the flat baseline by a healthy margin on the machine
+        // it was designed for
+        if gate.speedup < 1.3 {
+            eprintln!(
+                "FAIL: two-level allreduce is only {:.2}x the flat baseline on fat_tree \
+                 p={} (expected >= 1.3x)",
+                gate.speedup, gate.p
+            );
+            failed = true;
+        } else {
+            eprintln!(
+                "OK: two-level allreduce beats flat Bruck {:.2}x on fat_tree p={}",
+                gate.speedup, gate.p
+            );
+        }
         // an ample compute window (2x the wire time) must hide nearly all
         // of the in-flight cost — the credit is min(compute, inflight)
         for c in &overlap {

@@ -15,9 +15,11 @@
 //!   workload on a [`Pool`], with optional fault injection, recording the
 //!   outcome, the pool's cold-rebuild count, and whether the team
 //!   recovered;
-//! * [`differential`] — the full matrix: `{shared, rdma, msg, hybrid} ×
-//!   {cold, warm} × {bulk, split-phase}` against one reference run
-//!   (shared / cold / bulk), asserting
+//! * [`differential`] — the full matrix: `{shared, rdma, msg, hybrid,
+//!   hybrid-fat} × {cold, warm} × {bulk, split-phase}` against one
+//!   reference run (shared / cold / bulk) — the last two backends route
+//!   over the NumaPair and FatTree topologies, making topology a fourth
+//!   implicit axis — asserting
 //!   - absorbed (model-legal) faults are invisible: memory and stats
 //!     bit-identical to the unperturbed reference;
 //!   - reportable faults surface as a clean [`LpfError`] of the *same
@@ -57,14 +59,21 @@ pub fn classify(e: &LpfError) -> &'static str {
     }
 }
 
-/// The four platforms of the differential matrix, checked mode on (the
-/// oracle should also exercise the legality verification paths).
+/// The platforms of the differential matrix, checked mode on (the
+/// oracle should also exercise the legality verification paths). The
+/// last two rows are the **topology axis**: `hybrid` routes over the
+/// NumaPair cluster topology and `hybrid-fat` over the two-level
+/// FatTree, so every compliance property (absorbed faults invisible,
+/// abort classes identical, stats uniform) is asserted against the flat
+/// backends *and* across routed topologies — routing changes what bytes
+/// cost and which links they cross, never what lands.
 pub fn all_backends() -> Vec<(&'static str, Platform)> {
     vec![
         ("shared", Platform::shared().checked(true)),
         ("rdma", Platform::rdma().checked(true)),
         ("msg", Platform::msg().checked(true)),
         ("hybrid", Platform::hybrid(2).checked(true)),
+        ("hybrid-fat", Platform::hybrid_fat_tree(2).checked(true)),
     ]
 }
 
@@ -458,6 +467,25 @@ mod tests {
         let cold = run_case("rdma", &plat, 4, 5, ExecMode::Cold, None);
         let warm = run_case("rdma", &plat, 4, 5, ExecMode::Warm, None);
         assert_eq!(cold.result.unwrap(), warm.result.unwrap());
+    }
+
+    /// The topology axis in isolation: the same workload on a flat wire,
+    /// a NumaPair cluster, and a FatTree cluster must produce
+    /// bit-identical memory and uniform stats. Route-aware pricing
+    /// changes *where* bytes flow and what they cost (sim time, which
+    /// `Observation` deliberately excludes) — never what lands or how
+    /// much is counted.
+    #[test]
+    fn topology_axis_is_observationally_flat() {
+        let flat = run_case("rdma", &Platform::rdma().checked(true), 4, 9, ExecMode::Cold, None);
+        let want = flat.result.unwrap();
+        for (name, plat) in [
+            ("hybrid", Platform::hybrid(2).checked(true)),
+            ("hybrid-fat", Platform::hybrid_fat_tree(2).checked(true)),
+        ] {
+            let got = run_case(name, &plat, 4, 9, ExecMode::Cold, None).result.unwrap();
+            assert_eq!(got, want, "{name}: topology changed an observation");
+        }
     }
 
     /// The heart of the split-phase compliance claim: running every

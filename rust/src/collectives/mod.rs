@@ -14,10 +14,51 @@
 //! byte arena ([`TypedSlot<u8>`]); each call [`cast`](TypedSlot::cast)s it
 //! to the caller's element type and works in element offsets throughout —
 //! there is no hand-computed byte arithmetic anywhere in this layer.
+//!
+//! ## Topology-aware two-level decomposition
+//!
+//! On hierarchical machines (the context's [`Context::topology`] reports
+//! ≥ 2 levels, e.g. the hybrid fabric's NumaPair/FatTree shapes),
+//! `broadcast`/`reduce`/`allreduce`/`scan` decompose into an intra-node
+//! shared phase plus an inter-node exchange among node *leaders* (pid
+//! `k·q` of each node): contributions travel the cheap intra links once,
+//! and only one process per node touches the wire — a Bruck-style
+//! log-round allgather of node partials (binomial doubling for the
+//! broadcast), pMR's per-link design. The choice is made at *plan time*
+//! ([`Coll::new`] / [`Coll::with_policy`]); on single-level topologies
+//! the pre-topology flat algorithms run byte-for-byte unchanged. The
+//! two-level fold groups contributions per node (same left-to-right pid
+//! order inside each node, node partials combined in node order), so
+//! integer results are identical to flat, while non-associative float
+//! folds are deterministic but may round differently from the flat
+//! grouping.
 
 use crate::core::{LpfError, Result};
 use crate::ctx::{Context, Pod, TypedSlot};
 use crate::simd::{fold_f32, FloatOp};
+
+/// How collectives decompose over the machine topology, decided at
+/// workspace-construction ("plan") time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollPolicy {
+    /// Two-level iff the context's topology reports ≥ 2 levels and the
+    /// job's `p` factors exactly into `nodes · procs_per_node`.
+    Auto,
+    /// Force the single-level algorithms (the pre-topology baseline),
+    /// regardless of topology.
+    Flat,
+    /// Request the two-level decomposition; falls back to flat when the
+    /// topology is single-level (there are no nodes to decompose over).
+    TwoLevel,
+}
+
+/// The node grid a two-level plan decomposes over.
+#[derive(Debug, Clone, Copy)]
+struct NodeShape {
+    /// Processes per node; node `k` owns pids `[k·q, (k+1)·q)`.
+    q: usize,
+    nodes: usize,
+}
 
 /// Pre-registered workspace for collectives over elements of up to
 /// `max_bytes` per process.
@@ -27,6 +68,8 @@ pub struct Coll {
     /// Scratch holding this process's outgoing block.
     send: TypedSlot<u8>,
     max_bytes: usize,
+    /// `Some` when the plan chose the two-level decomposition.
+    shape: Option<NodeShape>,
 }
 
 impl Coll {
@@ -41,6 +84,13 @@ impl Coll {
     /// every process must observe the same outcome (and mitigate
     /// identically) for global slot ids to stay aligned.
     pub fn new(ctx: &mut Context, max_bytes: usize) -> Result<Coll> {
+        Self::with_policy(ctx, max_bytes, CollPolicy::Auto)
+    }
+
+    /// [`Coll::new`] with an explicit decomposition policy (benchmarks
+    /// force [`CollPolicy::Flat`] to measure the single-level baseline on
+    /// a hierarchical machine).
+    pub fn with_policy(ctx: &mut Context, max_bytes: usize, policy: CollPolicy) -> Result<Coll> {
         let p = ctx.p() as usize;
         let gather_bytes = max_bytes.checked_mul(p).ok_or_else(|| {
             LpfError::OutOfMemory(format!(
@@ -57,7 +107,21 @@ impl Coll {
                 return Err(e);
             }
         };
-        Ok(Coll { gather, send, max_bytes })
+        let shape = match policy {
+            CollPolicy::Flat => None,
+            CollPolicy::Auto | CollPolicy::TwoLevel => {
+                let t = ctx.topology();
+                let (q, nodes) = (t.procs_per_node as usize, t.nodes as usize);
+                (t.levels >= 2 && q > 1 && nodes > 1 && nodes * q == p)
+                    .then_some(NodeShape { q, nodes })
+            }
+        };
+        Ok(Coll { gather, send, max_bytes, shape })
+    }
+
+    /// Whether the plan chose the two-level (node-decomposed) algorithms.
+    pub fn two_level(&self) -> bool {
+        self.shape.is_some()
     }
 
     /// Free the workspace slots.
@@ -98,6 +162,9 @@ impl Coll {
         let p = ctx.p();
         if p == 1 {
             return Ok(());
+        }
+        if let Some(shape) = self.shape {
+            return self.two_level_broadcast(ctx, shape, root, data);
         }
         let (send, gather) = self.windows::<T>();
         let machine = ctx.probe();
@@ -296,6 +363,9 @@ impl Coll {
         let Some(&head) = mine.first() else {
             return self.gather(ctx, root, mine, &mut []);
         };
+        if let Some(shape) = self.shape {
+            return self.two_level_reduce(ctx, shape, root, mine, out, op);
+        }
         let mut all = vec![head; mine.len() * p];
         self.gather(ctx, root, mine, if ctx.pid() == root { &mut all } else { &mut [] })?;
         if ctx.pid() == root {
@@ -323,6 +393,9 @@ impl Coll {
         let Some(&head) = mine.first() else {
             return self.allgather(ctx, mine, out);
         };
+        if let Some(shape) = self.shape {
+            return self.two_level_allreduce(ctx, shape, mine, out, op);
+        }
         let mut all = vec![head; mine.len() * p];
         self.allgather(ctx, mine, &mut all)?;
         out.copy_from_slice(&all[..mine.len()]);
@@ -352,6 +425,11 @@ impl Coll {
         let Some(&head) = mine.first() else {
             return self.gather(ctx, root, mine, &mut []);
         };
+        if let Some(shape) = self.shape {
+            // fold_f32 is elementwise, so the matching scalar fold is
+            // bit-identical — the two-level path needs no lane variant
+            return self.two_level_reduce(ctx, shape, root, mine, out, scalar_f32(op));
+        }
         let mut all = vec![head; mine.len() * p];
         self.gather(ctx, root, mine, if ctx.pid() == root { &mut all } else { &mut [] })?;
         if ctx.pid() == root {
@@ -376,6 +454,9 @@ impl Coll {
         let Some(&head) = mine.first() else {
             return self.allgather(ctx, mine, out);
         };
+        if let Some(shape) = self.shape {
+            return self.two_level_allreduce(ctx, shape, mine, out, scalar_f32(op));
+        }
         let mut all = vec![head; mine.len() * p];
         self.allgather(ctx, mine, &mut all)?;
         out.copy_from_slice(&all[..mine.len()]);
@@ -398,6 +479,9 @@ impl Coll {
         let Some(&head) = mine.first() else {
             return self.allgather(ctx, mine, out);
         };
+        if let Some(shape) = self.shape {
+            return self.two_level_scan(ctx, shape, mine, out, scalar_f32(op));
+        }
         let mut all = vec![head; mine.len() * p];
         self.allgather(ctx, mine, &mut all)?;
         out.copy_from_slice(&all[..mine.len()]);
@@ -421,6 +505,9 @@ impl Coll {
         let Some(&head) = mine.first() else {
             return self.allgather(ctx, mine, out);
         };
+        if let Some(shape) = self.shape {
+            return self.two_level_scan(ctx, shape, mine, out, op);
+        }
         let mut all = vec![head; mine.len() * p];
         self.allgather(ctx, mine, &mut all)?;
         out.copy_from_slice(&all[..mine.len()]);
@@ -430,6 +517,340 @@ impl Coll {
             }
         }
         Ok(())
+    }
+
+    // ------------------------------------------- two-level decomposition
+
+    /// Elementwise fold `acc[i] = op(acc[i], src[i])`.
+    fn fold_into<T: Pod>(acc: &mut [T], src: &[T], op: &impl Fn(T, T) -> T) {
+        for (o, v) in acc.iter_mut().zip(src) {
+            *o = op(*o, *v);
+        }
+    }
+
+    /// Intra-node shared phase: every non-leader puts its contribution to
+    /// its node leader's gather window at `rank · n`; leaders fold their
+    /// node's contributions in pid order and return the node partial.
+    /// One superstep over intra links only.
+    fn intra_gather_fold<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        shape: NodeShape,
+        mine: &[T],
+        op: &impl Fn(T, T) -> T,
+    ) -> Result<Option<Vec<T>>> {
+        let n = mine.len();
+        let (send, gather) = self.windows::<T>();
+        let me = ctx.pid() as usize;
+        let (node, rank) = (me / shape.q, me % shape.q);
+        let leader = (node * shape.q) as u32;
+        if rank == 0 {
+            ctx.write(gather, 0, mine)?;
+        } else {
+            ctx.write(send, 0, mine)?;
+        }
+        ctx.superstep(|ep| {
+            if rank != 0 {
+                ep.put_slice(send, 0, leader, gather, rank * n, n)?;
+            }
+            Ok(())
+        })?;
+        if rank != 0 {
+            return Ok(None);
+        }
+        let mut all = vec![mine[0]; shape.q * n];
+        ctx.read(gather, 0, &mut all)?;
+        let mut partial = all[..n].to_vec();
+        for r in 1..shape.q {
+            Self::fold_into(&mut partial, &all[r * n..(r + 1) * n], op);
+        }
+        Ok(Some(partial))
+    }
+
+    /// Bruck allgather of one `n`-element block per node among the node
+    /// leaders: ⌈log₂ nodes⌉ supersteps, each leader sending one
+    /// contiguous message per round. On return (leaders only) block `j`
+    /// of the gather window holds node `(node + j) % nodes`'s block.
+    fn leader_bruck_allgather<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        shape: NodeShape,
+        n: usize,
+    ) -> Result<()> {
+        let gather = self.windows::<T>().1;
+        let me = ctx.pid() as usize;
+        let (node, rank) = (me / shape.q, me % shape.q);
+        let nodes = shape.nodes;
+        let mut step = 1;
+        while step < nodes {
+            let cnt = step.min(nodes - step);
+            ctx.superstep(|ep| {
+                if rank == 0 {
+                    let dst = ((node + nodes - step) % nodes * shape.q) as u32;
+                    ep.put_slice(gather, 0, dst, gather, step * n, cnt * n)?;
+                }
+                Ok(())
+            })?;
+            step <<= 1;
+        }
+        Ok(())
+    }
+
+    /// Two-level allreduce: intra gather + fold, Bruck allgather of node
+    /// partials among leaders, leaders fold in node order and fan the
+    /// result out to their members. `2 + ⌈log₂ nodes⌉` supersteps; only
+    /// leaders touch the wire.
+    fn two_level_allreduce<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        shape: NodeShape,
+        mine: &[T],
+        out: &mut [T],
+        op: impl Fn(T, T) -> T,
+    ) -> Result<()> {
+        let n = mine.len();
+        let (send, gather) = self.windows::<T>();
+        let me = ctx.pid() as usize;
+        let (node, rank) = (me / shape.q, me % shape.q);
+        let partial = self.intra_gather_fold(ctx, shape, mine, &op)?;
+        if let Some(p) = &partial {
+            // seed the Bruck buffer: block 0 = my node's partial
+            ctx.write(gather, 0, p)?;
+        }
+        self.leader_bruck_allgather::<T>(ctx, shape, n)?;
+        if rank == 0 {
+            let mut blocks = vec![mine[0]; shape.nodes * n];
+            ctx.read(gather, 0, &mut blocks)?;
+            // Bruck leaves block j = node (node + j) % nodes; fold the
+            // partials in *node* order so every leader folds the same
+            // sequence and results agree bitwise across the machine
+            let at = |k: usize| (k + shape.nodes - node) % shape.nodes * n;
+            out.copy_from_slice(&blocks[at(0)..at(0) + n]);
+            for k in 1..shape.nodes {
+                Self::fold_into(out, &blocks[at(k)..at(k) + n], &op);
+            }
+            ctx.write(send, 0, out)?;
+        }
+        ctx.superstep(|ep| {
+            if rank == 0 {
+                for r in 1..shape.q {
+                    ep.put_slice(send, 0, (node * shape.q + r) as u32, gather, 0, n)?;
+                }
+            }
+            Ok(())
+        })?;
+        if rank != 0 {
+            ctx.read(gather, 0, out)?;
+        }
+        Ok(())
+    }
+
+    /// Two-level broadcast: the root hands the payload to its node leader
+    /// (when it isn't one), binomial doubling spreads it among node
+    /// leaders over the inter links, and leaders fan out to their members
+    /// over the intra links.
+    fn two_level_broadcast<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        shape: NodeShape,
+        root: u32,
+        data: &mut [T],
+    ) -> Result<()> {
+        let n = data.len();
+        let (send, gather) = self.windows::<T>();
+        let me = ctx.pid() as usize;
+        let (node, rank) = (me / shape.q, me % shape.q);
+        let root_node = root as usize / shape.q;
+        if me == root as usize {
+            ctx.write(send, 0, data)?;
+        }
+        // phase 0 (only when the root is not its node's leader): hand the
+        // payload to the leader over an intra link
+        if root as usize % shape.q != 0 {
+            ctx.superstep(|ep| {
+                if ep.pid() == root {
+                    ep.put_slice(send, 0, (root_node * shape.q) as u32, send, 0, n)?;
+                }
+                Ok(())
+            })?;
+        }
+        // phase 1: binomial doubling among node leaders — after the round
+        // with the given step, leaders within node distance 2·step of the
+        // root's node hold the payload
+        let d = (node + shape.nodes - root_node) % shape.nodes;
+        let mut step = 1;
+        while step < shape.nodes {
+            ctx.superstep(|ep| {
+                if rank == 0 && d < step && d + step < shape.nodes {
+                    let dst = ((root_node + d + step) % shape.nodes * shape.q) as u32;
+                    ep.put_slice(send, 0, dst, send, 0, n)?;
+                }
+                Ok(())
+            })?;
+            step <<= 1;
+        }
+        // phase 2: leaders fan out to their members over intra links
+        ctx.superstep(|ep| {
+            if rank == 0 {
+                for r in 1..shape.q {
+                    ep.put_slice(send, 0, (node * shape.q + r) as u32, gather, 0, n)?;
+                }
+            }
+            Ok(())
+        })?;
+        if me == root as usize {
+            // already holds the payload
+        } else if rank == 0 {
+            ctx.read(send, 0, data)?;
+        } else {
+            ctx.read(gather, 0, data)?;
+        }
+        Ok(())
+    }
+
+    /// Two-level reduce: intra gather + fold, then every node leader puts
+    /// its partial straight to the root (block = node index); the root
+    /// folds in node order. Two supersteps.
+    fn two_level_reduce<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        shape: NodeShape,
+        root: u32,
+        mine: &[T],
+        out: &mut [T],
+        op: impl Fn(T, T) -> T,
+    ) -> Result<()> {
+        let n = mine.len();
+        let (send, gather) = self.windows::<T>();
+        let me = ctx.pid() as usize;
+        let rank = me % shape.q;
+        let node = me / shape.q;
+        let partial = self.intra_gather_fold(ctx, shape, mine, &op)?;
+        if let Some(p) = &partial {
+            if me == root as usize {
+                ctx.write(gather, node * n, p)?;
+            } else {
+                ctx.write(send, 0, p)?;
+            }
+        }
+        ctx.superstep(|ep| {
+            if rank == 0 && ep.pid() != root {
+                ep.put_slice(send, 0, root, gather, node * n, n)?;
+            }
+            Ok(())
+        })?;
+        if ctx.pid() == root {
+            let mut blocks = vec![mine[0]; shape.nodes * n];
+            ctx.read(gather, 0, &mut blocks)?;
+            out.copy_from_slice(&blocks[..n]);
+            for k in 1..shape.nodes {
+                Self::fold_into(out, &blocks[k * n..(k + 1) * n], &op);
+            }
+        }
+        Ok(())
+    }
+
+    /// Two-level inclusive scan: intra gather, leaders compute per-member
+    /// intra prefixes and the node total, Bruck allgather of node totals,
+    /// leaders prepend the exclusive prefix of earlier nodes' totals and
+    /// hand each member its result. `2 + ⌈log₂ nodes⌉` supersteps.
+    fn two_level_scan<T: Pod>(
+        &self,
+        ctx: &mut Context,
+        shape: NodeShape,
+        mine: &[T],
+        out: &mut [T],
+        op: impl Fn(T, T) -> T,
+    ) -> Result<()> {
+        let n = mine.len();
+        let (send, gather) = self.windows::<T>();
+        let me = ctx.pid() as usize;
+        let (node, rank) = (me / shape.q, me % shape.q);
+        let leader = (node * shape.q) as u32;
+        // phase 1: intra gather of raw contributions to the node leader
+        if rank == 0 {
+            ctx.write(gather, 0, mine)?;
+        } else {
+            ctx.write(send, 0, mine)?;
+        }
+        ctx.superstep(|ep| {
+            if rank != 0 {
+                ep.put_slice(send, 0, leader, gather, rank * n, n)?;
+            }
+            Ok(())
+        })?;
+        // leaders: inclusive intra prefix P_r per member; total = P_{q−1}
+        let mut prefixes = vec![mine[0]; shape.q * n];
+        if rank == 0 {
+            let mut all = vec![mine[0]; shape.q * n];
+            ctx.read(gather, 0, &mut all)?;
+            prefixes[..n].copy_from_slice(&all[..n]);
+            for r in 1..shape.q {
+                let (prev, cur) = prefixes.split_at_mut(r * n);
+                cur[..n].copy_from_slice(&prev[(r - 1) * n..]);
+                Self::fold_into(&mut cur[..n], &all[r * n..(r + 1) * n], &op);
+            }
+            // seed Bruck block 0 with the node total
+            ctx.write(gather, 0, &prefixes[(shape.q - 1) * n..])?;
+        }
+        // phase 2: Bruck allgather of node totals among leaders
+        self.leader_bruck_allgather::<T>(ctx, shape, n)?;
+        // leaders: result for member r = (T_0 op … op T_{node−1}) op P_r,
+        // staged into the (already consumed) gather blocks for delivery
+        if rank == 0 {
+            let mut totals = vec![mine[0]; shape.nodes * n];
+            ctx.read(gather, 0, &mut totals)?;
+            // Bruck leaves block j = node (node + j) % nodes
+            let at = |k: usize| (k + shape.nodes - node) % shape.nodes * n;
+            // exclusive prefix of earlier nodes' totals, folded in node
+            // order (node 0 has none — no identity element is assumed)
+            let mut excl: Option<Vec<T>> = None;
+            for k in 0..node {
+                match &mut excl {
+                    None => excl = Some(totals[at(k)..at(k) + n].to_vec()),
+                    Some(e) => Self::fold_into(e, &totals[at(k)..at(k) + n], &op),
+                }
+            }
+            for r in 0..shape.q {
+                let res = match &excl {
+                    Some(e) => {
+                        let mut v = e.clone();
+                        Self::fold_into(&mut v, &prefixes[r * n..(r + 1) * n], &op);
+                        v
+                    }
+                    None => prefixes[r * n..(r + 1) * n].to_vec(),
+                };
+                if r == 0 {
+                    out.copy_from_slice(&res);
+                } else {
+                    ctx.write(gather, r * n, &res)?;
+                }
+            }
+        }
+        // phase 3: leaders hand each member its result over intra links
+        ctx.superstep(|ep| {
+            if rank == 0 {
+                for r in 1..shape.q {
+                    ep.put_slice(gather, r * n, (node * shape.q + r) as u32, gather, 0, n)?;
+                }
+            }
+            Ok(())
+        })?;
+        if rank != 0 {
+            ctx.read(gather, 0, out)?;
+        }
+        Ok(())
+    }
+}
+
+/// The scalar fold matching a [`FloatOp`] lane fold. `fold_f32` is
+/// elementwise, so the scalar and lane folds are bit-identical — the
+/// two-level `_f32` paths reuse the generic algorithms with this.
+fn scalar_f32(op: FloatOp) -> fn(f32, f32) -> f32 {
+    match op {
+        FloatOp::Sum => |a, b| a + b,
+        FloatOp::Max => f32::max,
+        FloatOp::Min => f32::min,
     }
 }
 
@@ -593,6 +1014,115 @@ mod tests {
                 }
             });
         }
+    }
+
+    /// Like [`with_coll`] but on an arbitrary platform (the two-level
+    /// tests run on hybrid machines).
+    fn with_coll_on(
+        platform: Platform,
+        p: u32,
+        max_bytes: usize,
+        f: impl Fn(&mut Context, &Coll) + Sync,
+    ) {
+        let root = Root::new(platform.checked(true)).with_max_procs(p);
+        exec(
+            &root,
+            p,
+            move |ctx, _| {
+                ctx.bootstrap(8, 4 * ctx.p() as usize).unwrap();
+                let coll = Coll::new(ctx, max_bytes).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                f(ctx, &coll);
+            },
+            Args::none(),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn two_level_collectives_match_flat_oracles_on_integers() {
+        // Integer folds are associative, so the two-level node grouping
+        // must reproduce the flat results exactly — including non-leader
+        // roots and a partial-free odd node count (p = 6 → 3 nodes).
+        for p in [4u32, 6, 8] {
+            with_coll_on(Platform::hybrid(2), p, 64, move |ctx, coll| {
+                assert!(coll.two_level(), "hybrid q=2 must plan two-level");
+                let me = ctx.pid() as u64;
+                let p64 = ctx.p() as u64;
+                let mut out = [0u64; 2];
+                coll.allreduce(ctx, &[me + 1, 2 * me], &mut out, |a, b| a + b).unwrap();
+                assert_eq!(out[0], p64 * (p64 + 1) / 2);
+                assert_eq!(out[1], p64 * (p64 - 1));
+                // reduce to a non-leader root (exercises the intra hop)
+                let mut red = [0u64];
+                coll.reduce(ctx, 1, &[me * me], &mut red, |a, b| a + b).unwrap();
+                if ctx.pid() == 1 {
+                    assert_eq!(red[0], (0..p64).map(|k| k * k).sum::<u64>());
+                }
+                // inclusive scan over pid order
+                let mut sc = [0u64];
+                coll.scan(ctx, &[me + 1], &mut sc, |a, b| a + b).unwrap();
+                assert_eq!(sc[0], (me + 1) * (me + 2) / 2);
+                // broadcast from a non-leader root (exercises phase 0)
+                let mut data = if me == 3 { [7u64, 9] } else { [0u64; 2] };
+                coll.broadcast(ctx, 3, &mut data).unwrap();
+                assert_eq!(data, [7, 9]);
+            });
+        }
+    }
+
+    #[test]
+    fn two_level_float_folds_are_identical_across_pids() {
+        // Non-associative float folds may round differently from the
+        // flat grouping, but every process must agree bitwise.
+        with_coll_on(Platform::hybrid(2), 6, 64, |ctx, coll| {
+            let mine = [(ctx.pid() as f32 + 0.1).sin(), 1.0e-3 * ctx.pid() as f32];
+            let mut out = [0f32; 2];
+            coll.allreduce_f32(ctx, &mine, &mut out, FloatOp::Sum).unwrap();
+            // allgather has no two-level variant: flat cross-check lane
+            let mut all = vec![0f32; 2 * ctx.p() as usize];
+            coll.allgather(ctx, &out, &mut all).unwrap();
+            for k in 0..ctx.p() as usize {
+                assert_eq!(all[2 * k].to_bits(), out[0].to_bits(), "pid {k}");
+                assert_eq!(all[2 * k + 1].to_bits(), out[1].to_bits(), "pid {k}");
+            }
+        });
+    }
+
+    #[test]
+    fn coll_policy_overrides_plan_selection() {
+        // forced flat on a hierarchical machine
+        let root = Root::new(Platform::hybrid(2).checked(true)).with_max_procs(4);
+        exec(
+            &root,
+            4,
+            |ctx, _| {
+                ctx.bootstrap(8, 16).unwrap();
+                let flat = Coll::with_policy(ctx, 32, CollPolicy::Flat).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                assert!(!flat.two_level());
+                let mine = [ctx.pid() as u64];
+                let mut out = [0u64];
+                flat.allreduce(ctx, &mine, &mut out, |a, b| a + b).unwrap();
+                assert_eq!(out[0], 6);
+            },
+            Args::none(),
+        )
+        .unwrap();
+        // two-level requested on a single-level machine falls back flat
+        let root = Root::new(Platform::shared().checked(true)).with_max_procs(2);
+        exec(
+            &root,
+            2,
+            |ctx, _| {
+                ctx.bootstrap(8, 8).unwrap();
+                let coll = Coll::with_policy(ctx, 32, CollPolicy::TwoLevel).unwrap();
+                ctx.sync(SYNC_DEFAULT).unwrap();
+                assert!(!coll.two_level());
+            },
+            Args::none(),
+        )
+        .unwrap();
     }
 
     #[test]

@@ -459,6 +459,14 @@ impl Context {
     pub fn backend(&self) -> &'static str {
         self.group.fabric().name()
     }
+
+    /// The machine topology underneath this context: shape name, level
+    /// count, and `{nodes, procs_per_node}`. Flat single-level on
+    /// backends without a hierarchical topology. The collectives planner
+    /// keys its two-level decomposition on `levels ≥ 2`.
+    pub fn topology(&self) -> crate::fabric::TopologyView {
+        self.group.fabric().topology()
+    }
 }
 
 impl Drop for Context {
@@ -505,6 +513,11 @@ pub(crate) fn run_spmd_recycled<O, F>(
 where
     F: Fn(&mut Context, Args) -> O,
 {
+    // Fabric constructors are infallible; a job whose p doesn't fit the
+    // platform's declared shape (e.g. hybrid `{nodes, procs_per_node}`
+    // with non-divisible p) fails here, before any process enters the
+    // fabric — a clean, purely local `Illegal`, never a panic.
+    group.platform().validate(group.fabric().p())?;
     slab.reset_for_job();
     let mut ctx = Context::new(group, pid);
     ctx.queue = std::mem::take(slab);
@@ -834,6 +847,33 @@ mod tests {
         )
         .unwrap();
         assert_eq!(outs[0], 2);
+    }
+
+    #[test]
+    fn hybrid_shape_mismatch_is_a_clean_illegal_job_error() {
+        let root = Root::new(Platform::hybrid_shaped(2, 2)).with_max_procs(8);
+        // p = 5 doesn't fit the declared 2×2 shape: the job fails before
+        // any process enters the fabric — no panic, no hang
+        match exec(&root, 5, |ctx, _| ctx.pid(), Args::none()) {
+            Err(LpfError::Illegal(msg)) => assert!(msg.contains("divisible"), "{msg}"),
+            other => panic!("expected Illegal, got {other:?}"),
+        }
+        // a fitting p on the same platform works
+        let ok = exec(&root, 4, |ctx, _| ctx.p(), Args::none()).unwrap();
+        assert_eq!(ok, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn context_reports_its_topology() {
+        let shared = exec(&root(), 2, |ctx, _| ctx.topology(), Args::none()).unwrap();
+        assert_eq!(shared[0].name, "flat");
+        assert_eq!(shared[0].levels, 1);
+        let root = Root::new(Platform::hybrid(2)).with_max_procs(8);
+        let hy = exec(&root, 4, |ctx, _| ctx.topology(), Args::none()).unwrap();
+        assert_eq!(hy[0].name, "numa_pair");
+        assert_eq!(hy[0].levels, 2);
+        assert_eq!(hy[0].nodes, 2);
+        assert_eq!(hy[0].procs_per_node, 2);
     }
 
     #[test]

@@ -3,11 +3,22 @@
 
 use std::sync::Arc;
 
-use crate::core::Pid;
-use crate::fabric::net::DEFAULT_BRUCK_SEED;
+use crate::core::{LpfError, Pid, Result};
+use crate::fabric::net::{Topology, DEFAULT_BRUCK_SEED};
 use crate::fabric::shared::SharedFabric;
 use crate::fabric::Fabric;
 use crate::netsim::Personality;
+
+/// Which inter-node wiring a hybrid platform's nodes hang off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HybridShape {
+    /// All nodes on one crossbar: any inter-node route is one wire hop
+    /// (the [`Topology::numa_pair`] shape).
+    NumaPair,
+    /// Node pairs under leaf switches under a root: one or two wire
+    /// hops depending on the leaf (the [`Topology::fat_tree`] shape).
+    FatTree,
+}
 
 /// Which fabric `exec`/`hook` build a context on.
 ///
@@ -27,8 +38,22 @@ pub enum Platform {
     /// implementation), on the simulated NIC.
     Rdma { personality: Personality, checked: bool, seed: u64 },
     /// Clusters of multicores: intra-node shared + inter-node distributed
-    /// (the paper's hybrid implementation). `q` = processes per node.
-    Hybrid { q: Pid, personality: Personality, checked: bool, seed: u64 },
+    /// (the paper's hybrid implementation). The explicit shape is
+    /// `{nodes, procs_per_node}`: `nodes == 0` means "infer from p", and
+    /// a job whose `p` doesn't factor into the shape fails with a clean
+    /// `Illegal` (see [`Platform::validate`]) rather than silently
+    /// leaving a partial node.
+    Hybrid {
+        /// Number of simulated nodes; 0 = infer as `p / procs_per_node`.
+        nodes: Pid,
+        /// Processes per simulated node (the paper's `q`).
+        procs_per_node: Pid,
+        /// Inter-node wiring the shape routes onto.
+        shape: HybridShape,
+        personality: Personality,
+        checked: bool,
+        seed: u64,
+    },
 }
 
 impl Platform {
@@ -55,14 +80,77 @@ impl Platform {
         }
     }
 
-    /// Hybrid platform with `q` processes per simulated node.
+    /// Hybrid platform with `q` processes per simulated node on the
+    /// NumaPair (crossbar) wiring; the node count is inferred from `p`.
     pub fn hybrid(q: Pid) -> Self {
         Platform::Hybrid {
-            q,
+            nodes: 0,
+            procs_per_node: q,
+            shape: HybridShape::NumaPair,
             personality: Personality::ibverbs(),
             checked: false,
             seed: DEFAULT_BRUCK_SEED,
         }
+    }
+
+    /// Hybrid platform with an explicit `{nodes, procs_per_node}` shape:
+    /// jobs must launch exactly `nodes · procs_per_node` processes.
+    pub fn hybrid_shaped(nodes: Pid, procs_per_node: Pid) -> Self {
+        match Self::hybrid(procs_per_node) {
+            Platform::Hybrid { procs_per_node, shape, personality, checked, seed, .. } => {
+                Platform::Hybrid { nodes, procs_per_node, shape, personality, checked, seed }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Hybrid platform on the two-level FatTree wiring (`q` processes
+    /// per node, node pairs under leaf switches under a root).
+    pub fn hybrid_fat_tree(q: Pid) -> Self {
+        match Self::hybrid(q) {
+            Platform::Hybrid { nodes, procs_per_node, personality, checked, seed, .. } => {
+                Platform::Hybrid {
+                    nodes,
+                    procs_per_node,
+                    shape: HybridShape::FatTree,
+                    personality,
+                    checked,
+                    seed,
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Check that a job of `p` processes fits this platform's shape.
+    /// Only an **explicit** `Hybrid` shape constrains `p`: the inferred
+    /// form (`nodes == 0`, the [`Platform::hybrid`] builder) tolerates a
+    /// ragged last node — the topology layer places `p.div_ceil(q)`
+    /// nodes and simply under-fills the last one — but a declared node
+    /// count must factor `p` exactly, and `procs_per_node` must be ≥ 1
+    /// either way.
+    pub fn validate(&self, p: Pid) -> Result<()> {
+        if let Platform::Hybrid { nodes, procs_per_node, .. } = self {
+            let q = *procs_per_node;
+            if q == 0 {
+                return Err(LpfError::Illegal(
+                    "hybrid shape: procs_per_node must be >= 1".into(),
+                ));
+            }
+            if *nodes != 0 {
+                if p % q != 0 {
+                    return Err(LpfError::Illegal(format!(
+                        "hybrid shape: p = {p} is not divisible by procs_per_node = {q}"
+                    )));
+                }
+                if *nodes * q != p {
+                    return Err(LpfError::Illegal(format!(
+                        "hybrid shape: {nodes} nodes x {q} procs_per_node != p = {p}"
+                    )));
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Toggle per-superstep legality checking.
@@ -122,10 +210,17 @@ impl Platform {
             Platform::Rdma { personality, checked, .. } => {
                 crate::fabric::rdma::RdmaFabric::new(p, personality.clone(), *checked)
             }
-            Platform::Hybrid { q, personality, checked, seed } => {
-                crate::fabric::hybrid::HybridFabric::with_seed(
+            Platform::Hybrid { procs_per_node, shape, personality, checked, seed, .. } => {
+                let q = *procs_per_node;
+                let topo = match shape {
+                    // q ≤ 1 degenerates to Flat either way
+                    HybridShape::NumaPair => Topology::clustered(q),
+                    HybridShape::FatTree if q > 1 => Topology::fat_tree(q),
+                    HybridShape::FatTree => Topology::flat(),
+                };
+                crate::fabric::hybrid::HybridFabric::with_topology(
                     p,
-                    *q,
+                    topo,
                     personality.clone(),
                     *checked,
                     *seed,
@@ -171,5 +266,34 @@ mod tests {
         );
         assert_eq!(net.meta_seed(), Some(0xABCD));
         assert_eq!(fab.name(), "hybrid");
+    }
+
+    #[test]
+    fn hybrid_shape_validation_is_clean_illegal() {
+        assert!(Platform::hybrid(2).validate(4).is_ok());
+        // the inferred shape tolerates a ragged last node (legacy q
+        // semantics; the topology layer under-fills node p.div_ceil(q)−1)
+        assert!(Platform::hybrid(2).validate(5).is_ok(), "inferred shape allows ragged p");
+        assert!(Platform::hybrid(0).validate(4).is_err(), "zero procs_per_node");
+        assert!(Platform::hybrid_shaped(2, 2).validate(4).is_ok());
+        assert!(Platform::hybrid_shaped(3, 2).validate(4).is_err(), "wrong node count");
+        assert!(Platform::shared().validate(7).is_ok(), "only hybrid constrains p");
+        match Platform::hybrid_shaped(2, 2).validate(5) {
+            Err(LpfError::Illegal(msg)) => assert!(msg.contains("divisible")),
+            other => panic!("expected Illegal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hybrid_shapes_route_onto_their_topologies() {
+        let numa = Platform::hybrid(2).make_fabric(4);
+        assert_eq!(numa.topology().name, "numa_pair");
+        let fat = Platform::hybrid_fat_tree(2).make_fabric(8);
+        assert_eq!(fat.topology().name, "fat_tree");
+        assert_eq!(fat.topology().levels, 2);
+        assert_eq!(fat.topology().nodes, 4);
+        assert_eq!(fat.topology().procs_per_node, 2);
+        // q = 1 degenerates to flat regardless of the requested wiring
+        assert_eq!(Platform::hybrid_fat_tree(1).make_fabric(4).topology().name, "flat");
     }
 }

@@ -1,12 +1,13 @@
 //! The hybrid LPF implementation (paper §3, Table 1 row "Hybrid RB"):
 //! clusters of networked multicores. Intra-node communication takes the
-//! shared-memory (memcpy-cost) path, inter-node the distributed NIC path;
-//! each memory registration conceptually exists on both levels, and a
-//! put/get decides locally from the remote pid which route to take —
-//! reproduced here by the per-pair personality selection inside
-//! [`NetFabric`] (whose superstep pipeline is the shared engine's,
-//! [`crate::sync::engine::SyncEngine`]). `g = O(q + log(p/q))`,
-//! `ℓ = O(log p)`.
+//! shared-memory (memcpy-cost) path, inter-node the distributed NIC path.
+//! Since the route-aware refactor this is genuinely hierarchical: the
+//! fabric's [`crate::netsim::topology::RouteTable`] prices every message
+//! along its per-link sequence (intra links at shared-memory g/ℓ, node
+//! uplinks/downlinks at wire cost), and per-link byte counters feed the
+//! peak-utilisation report in `SyncStats`. The superstep pipeline is the
+//! shared engine's, [`crate::sync::engine::SyncEngine`].
+//! `g = O(q + log(p/q))`, `ℓ = O(log p)`.
 
 use std::sync::Arc;
 
@@ -35,11 +36,25 @@ impl HybridFabric {
         checked: bool,
         seed: u64,
     ) -> Arc<NetFabric> {
+        Self::with_topology(p, Topology::clustered(q), personality, checked, seed)
+    }
+
+    /// Build over an explicit topology (NumaPair, FatTree, Line, …).
+    /// This is the route taken by `Platform::Hybrid`'s shape: the
+    /// topology decides which pairs share a node (shared-memory links)
+    /// and how inter-node traffic is staged through uplinks.
+    pub fn with_topology(
+        p: Pid,
+        topo: Topology,
+        personality: Personality,
+        checked: bool,
+        seed: u64,
+    ) -> Arc<NetFabric> {
         NetFabric::with_config(
             p,
             "hybrid",
             personality,
-            Topology::clustered(q),
+            topo,
             MetaAlgo::RandomisedBruck { seed },
             checked,
         )

@@ -28,6 +28,14 @@
 //! legality, statistics — is engine code shared by every backend. See
 //! `docs/sync-engine.md` for the phase diagram and buffer-ownership map.
 //!
+//! Pricing on the netsim backends is **route-aware**, not uniform: a
+//! [`crate::netsim::topology::Topology`] (flat / NUMA-pair / fat-tree /
+//! line) assigns every ordered process pair a directed link sequence, each
+//! link with its own per-byte `g` and latency `ℓ`; messages are charged
+//! along their routes and per-link byte counters feed
+//! [`SyncStats::peak_link_bytes`]. The flat topology reproduces the old
+//! global-`(g, ℓ)` pricing bit-identically. See `docs/topology.md`.
+//!
 //! This module defines the [`Fabric`] trait those backends implement, plus
 //! the wire-level descriptor types. Backends: [`shared`], [`msg`], [`rdma`],
 //! [`hybrid`] (the latter three parameterise [`net`]).
@@ -107,12 +115,19 @@ pub struct SyncStats {
     /// data phase runs inside `sync_end`), so this is a *credit* against
     /// g·h, never an invented saving.
     pub overlap_ns: u64,
+    /// Peak link utilisation: the max payload+descriptor bytes any single
+    /// directed link of the fabric's topology carried in one superstep
+    /// (job-wide max). Zero on the real shared-memory backend, which has
+    /// no modelled links.
+    pub peak_link_bytes: u64,
 }
 
 /// `overlap_ns` is wall-clock-dependent (the compute window is measured
-/// with `Instant`), so it is excluded from equality: the differential
-/// checker compares stats across backends and runs, and must stay
-/// bit-stable while still recording the overlap credit.
+/// with `Instant`) and `peak_link_bytes` is topology-dependent (the same
+/// h-relation loads a fat tree and a flat network differently), so both
+/// are excluded from equality: the differential checker compares stats
+/// across backends, topologies, and runs, and must stay bit-stable while
+/// still recording those reports.
 impl PartialEq for SyncStats {
     fn eq(&self, other: &Self) -> bool {
         self.syncs == other.syncs
@@ -121,6 +136,24 @@ impl PartialEq for SyncStats {
             && self.msgs_out == other.msgs_out
             && self.bytes_trimmed == other.bytes_trimmed
     }
+}
+
+/// Plan-time view of a fabric's topology, consumed by algorithm selection
+/// (hierarchical collectives, the FFT redistribution schedule) without
+/// exposing the route table itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopologyView {
+    /// Shape name as recorded in bench artifacts ("flat", "numa_pair",
+    /// "fat_tree", "line").
+    pub name: &'static str,
+    /// Hierarchy depth: 2 when multiple processes share a node *and*
+    /// there are at least two nodes (a two-level decomposition can win),
+    /// else 1.
+    pub levels: u32,
+    /// Number of nodes.
+    pub nodes: Pid,
+    /// Processes per node (`node of pid` = `pid / procs_per_node`).
+    pub procs_per_node: Pid,
 }
 
 /// A communication fabric connecting the `p` processes of one context.
@@ -195,6 +228,13 @@ pub trait Fabric: Send + Sync {
 
     /// Human-readable backend name (probe/table output).
     fn name(&self) -> &'static str;
+
+    /// The fabric's topology as seen by plan-time algorithm selection.
+    /// Defaults to a flat machine (every process its own node); netsim
+    /// backends override from their [`crate::netsim::topology::Topology`].
+    fn topology(&self) -> TopologyView {
+        TopologyView { name: "flat", levels: 1, nodes: self.p(), procs_per_node: 1 }
+    }
 }
 
 /// Split a drained request queue into wire descriptors: puts grouped by

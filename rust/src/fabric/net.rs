@@ -2,8 +2,14 @@
 //! rows "RDMA Direct", "Mesg. RB", and "Hybrid RB").
 //!
 //! One engine backend, [`NetFabric`], parameterised by:
-//! * a node [`Topology`] (`q` processes per node; intra-node traffic uses a
-//!   shared-memory cost profile, inter-node traffic the NIC personality);
+//! * a node [`Topology`] (flat / NUMA-pair / fat-tree / line; intra-node
+//!   traffic uses a shared-memory cost profile, inter-node traffic the NIC
+//!   personality) from which a [`RouteTable`] is built: every ordered pair
+//!   gets a directed link sequence, and every message is priced along its
+//!   route — `Σ g_link` per byte, `Σ ℓ_link` per dependent round — with
+//!   per-link byte counters feeding a per-superstep peak-link-demand
+//!   report (`SyncStats::peak_link_bytes`). The flat topology's one-link
+//!   routes reproduce the old global-`(g, ℓ)` pricing bit-identically;
 //! * a [`MetaAlgo`] — direct all-to-all or randomised Bruck (Valiant
 //!   two-phase + Bruck index algorithm) for the first meta-data exchange;
 //! * a [`Personality`] — the executed transport mechanics (one-sided vs
@@ -31,45 +37,17 @@ use crate::fabric::{Fabric, GetMeta, PutMeta, SyncStats};
 use crate::memory::SharedRegister;
 #[cfg(test)]
 use crate::memory::SlotStorage;
+use crate::fabric::TopologyView;
 use crate::netsim::faults::FaultPlan;
 use crate::netsim::matching::MatchEngine;
+use crate::netsim::topology::{LinkClass, RouteModel, RouteTable};
+pub use crate::netsim::topology::Topology;
 use crate::netsim::{PendingOps, Personality, ProgressModel, SimClocks, WireMode};
 use crate::queue::Request;
 use crate::sync::engine::{Exchange, SyncEngine};
 use crate::sync::metadata::{bruck_forward, bruck_rounds, valiant_intermediate};
 use crate::util::rng::XorShift64;
 use crate::util::CachePadded;
-
-/// Node topology: processes `[k·q, (k+1)·q)` share node `k`.
-#[derive(Debug, Clone)]
-pub struct Topology {
-    /// Processes per node (1 = fully distributed).
-    pub q: Pid,
-    /// Cost profile for intra-node (shared-memory) traffic.
-    pub intra: Personality,
-}
-
-impl Topology {
-    /// Fully distributed: every process its own node.
-    pub fn distributed() -> Self {
-        Topology { q: 1, intra: Personality::shm() }
-    }
-
-    /// Clustered: `q` processes per node.
-    pub fn clustered(q: Pid) -> Self {
-        Topology { q: q.max(1), intra: Personality::shm() }
-    }
-
-    #[inline]
-    fn node(&self, pid: Pid) -> Pid {
-        pid / self.q
-    }
-
-    #[inline]
-    fn same_node(&self, a: Pid, b: Pid) -> bool {
-        self.node(a) == self.node(b)
-    }
-}
 
 impl Personality {
     /// Intra-node (shared-memory) cost profile used by the hybrid fabric:
@@ -164,6 +142,9 @@ pub struct NetFabric {
     name: &'static str,
     personality: Personality,
     topo: Topology,
+    /// Per-pair link routes with per-route cost sums, built once from
+    /// `(topo, personality)`.
+    routes: RouteTable,
     meta_algo: MetaAlgo,
     checked: bool,
     barrier: AutoBarrier,
@@ -186,6 +167,16 @@ pub struct NetFabric {
     // per-process transport mechanics (executed for real)
     matchers: Vec<Mutex<MatchEngine>>,
     pendings: Vec<Mutex<PendingOps>>,
+    /// Per-link byte counters for the current superstep, parity-indexed
+    /// by the superstep number: charges for step `k` land in slot
+    /// `(k+1) & 1` while slot `k & 1` (folded at step `k−1`'s final
+    /// barrier) sits zeroed — no reset race between adjacent supersteps.
+    link_bytes: [Vec<AtomicU64>; 2],
+    /// Cumulative per-link bytes over the job (bench reports).
+    link_total: Vec<AtomicU64>,
+    /// Max bytes any single link carried in one superstep (the
+    /// peak-utilisation headline merged into `SyncStats`).
+    peak_link_bytes: AtomicU64,
 }
 
 impl NetFabric {
@@ -200,12 +191,15 @@ impl NetFabric {
     ) -> Arc<Self> {
         assert!(p > 0);
         let cells = (p * p) as usize;
+        let routes = RouteTable::build(&topo, p, &personality);
+        let n_links = routes.n_links();
         Arc::new(NetFabric {
             engine: SyncEngine::new(p),
             p,
             name,
             personality,
             topo,
+            routes,
             meta_algo,
             checked,
             barrier: AutoBarrier::tuned(p),
@@ -219,6 +213,12 @@ impl NetFabric {
             route_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
             matchers: (0..p).map(|_| Mutex::new(MatchEngine::new())).collect(),
             pendings: (0..p).map(|_| Mutex::new(PendingOps::default())).collect(),
+            link_bytes: [
+                (0..n_links).map(|_| AtomicU64::new(0)).collect(),
+                (0..n_links).map(|_| AtomicU64::new(0)).collect(),
+            ],
+            link_total: (0..n_links).map(|_| AtomicU64::new(0)).collect(),
+            peak_link_bytes: AtomicU64::new(0),
         })
     }
 
@@ -255,25 +255,74 @@ impl NetFabric {
         (src * self.p + dst) as usize
     }
 
+    /// Personality governing the *mechanics* of a pair (post cost,
+    /// matching, progress model): intra-node pairs take the shared-memory
+    /// profile, inter-node pairs the NIC's. Per-byte and latency pricing
+    /// is route-aware and lives in [`RouteTable`].
     fn pers(&self, a: Pid, b: Pid) -> &Personality {
         if self.topo.same_node(a, b) {
-            &self.topo.intra
+            self.topo.intra()
         } else {
             &self.personality
         }
     }
 
-    /// Charge `pid` for posting one message of `bytes` to `dst`, executing
-    /// the progress-engine mechanics if the transport has them. (Pure cost
-    /// accounting: the engine owns the uniform `SyncStats`.)
+    /// Charge `pid` for posting one message of `bytes` to `dst`: the
+    /// personality's post cost plus the byte transit summed over the
+    /// route's links (`Σ g_link` — for single-link flat routes exactly
+    /// the personality's `per_byte_ns`), executing the progress-engine
+    /// mechanics if the transport has them; the bytes are recorded on
+    /// every link of the route for the peak-demand report. (Cost
+    /// accounting only: the engine owns the uniform `SyncStats`
+    /// counters.)
     fn charge_send(&self, pid: Pid, dst: Pid, bytes: u64) {
         let pers = self.pers(pid, dst);
-        let mut cost = pers.post_ns + bytes as f64 * pers.per_byte_ns;
+        let mut cost = pers.post_ns + bytes as f64 * self.routes.g_ns_per_byte(pid, dst);
         if pers.progress == ProgressModel::ScanPending && !self.topo.same_node(pid, dst) {
             let scanned = self.pendings[pid as usize].lock().unwrap().post();
             cost += scanned as f64 * pers.progress_scan_ns;
         }
         self.clocks.advance(pid, cost);
+        let slot = (self.supersteps[pid as usize].load(Ordering::Relaxed) & 1) as usize;
+        for &l in self.routes.route(pid, dst) {
+            self.link_bytes[slot][l as usize].fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold the finished superstep's per-link window: record the busiest
+    /// link into the job-wide peak, accumulate per-link totals, zero the
+    /// window for its next (parity-separated) reuse. Called by one
+    /// process after the superstep's final barrier, while every other
+    /// process can at most be charging into the *other* parity slot.
+    fn fold_link_window(&self, pid: Pid) {
+        let slot = (self.supersteps[pid as usize].load(Ordering::Relaxed) & 1) as usize;
+        let mut step_peak = 0u64;
+        for (l, c) in self.link_bytes[slot].iter().enumerate() {
+            let v = c.swap(0, Ordering::Relaxed);
+            if v > 0 {
+                self.link_total[l].fetch_add(v, Ordering::Relaxed);
+                step_peak = step_peak.max(v);
+            }
+        }
+        self.peak_link_bytes.fetch_max(step_peak, Ordering::Relaxed);
+    }
+
+    /// Max bytes any single link carried in one superstep of this job.
+    pub fn peak_link_bytes(&self) -> u64 {
+        self.peak_link_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative per-link byte report for the job: `(link id, class,
+    /// total bytes)` for every link that carried traffic.
+    pub fn link_report(&self) -> Vec<(u32, LinkClass, u64)> {
+        self.link_total
+            .iter()
+            .enumerate()
+            .filter_map(|(l, c)| {
+                let v = c.load(Ordering::Relaxed);
+                (v > 0).then(|| (l as u32, self.routes.link(l as u32).class, v))
+            })
+            .collect()
     }
 
     /// Barrier that (a) aborts cleanly, (b) max-combines simulated clocks,
@@ -393,7 +442,7 @@ impl NetFabric {
                         RoutedWrapper { tgt: t, item: i }.into_item()
                     }));
                 }
-                self.clocks.advance(pid, self.pers(pid, partner).latency_ns);
+                self.clocks.advance(pid, self.routes.l_ns(pid, partner));
                 self.barrier_combine(pid, false)?;
                 // collect what arrived for me this round
                 for src in 0..self.p {
@@ -547,7 +596,7 @@ impl Exchange for NetFabric {
                 if m.src_pid != pid {
                     // self-puts take no wire round trip
                     self.charge_send(pid, m.src_pid, 16);
-                    inflight += seg.len as f64 * self.pers(m.src_pid, pid).per_byte_ns;
+                    inflight += seg.len as f64 * self.routes.g_ns_per_byte(m.src_pid, pid);
                 }
                 self.trim_mail[self.cell(pid, m.src_pid)].lock().unwrap().push(notice);
                 expected.push((m.src_pid, ((m.seq as u64) << 32) | seg.src_delta as u64));
@@ -565,7 +614,7 @@ impl Exchange for NetFabric {
                 };
                 if g.server != pid {
                     self.charge_send(pid, g.server, 48);
-                    inflight += seg.len as f64 * self.pers(g.server, pid).per_byte_ns;
+                    inflight += seg.len as f64 * self.routes.g_ns_per_byte(g.server, pid);
                 }
                 self.getreq_mail[self.cell(pid, g.server)].lock().unwrap().push(req);
                 expected.push((g.server, ((g.seq as u64) << 32) | seg.src_delta as u64));
@@ -747,7 +796,16 @@ impl Exchange for NetFabric {
     }
 
     fn finish(&self, pid: Pid) -> Result<()> {
-        self.barrier_combine(pid, true)
+        self.barrier_combine(pid, true)?;
+        // One process folds the finished superstep's link window after
+        // everyone passed the final barrier; peers racing ahead charge
+        // into the other parity slot (see `link_bytes`), and nobody can
+        // reuse *this* slot before pid 0 joins the next rendezvous
+        // barrier — which it does only after folding.
+        if pid == 0 {
+            self.fold_link_window(pid);
+        }
+        Ok(())
     }
 
     fn abort_peers(&self, _pid: Pid) {
@@ -823,6 +881,15 @@ impl Fabric for NetFabric {
         for pd in &self.pendings {
             pd.lock().expect("pending poisoned").reset_for_job();
         }
+        for slot in &self.link_bytes {
+            for c in slot {
+                c.store(0, Ordering::Relaxed);
+            }
+        }
+        for c in &self.link_total {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.peak_link_bytes.store(0, Ordering::Relaxed);
         self.aborted.store(false, Ordering::Release);
     }
 
@@ -839,11 +906,25 @@ impl Fabric for NetFabric {
     }
 
     fn stats(&self, pid: Pid) -> SyncStats {
-        self.engine.stats(pid)
+        let mut s = self.engine.stats(pid);
+        s.peak_link_bytes = self.peak_link_bytes();
+        s
     }
 
     fn name(&self) -> &'static str {
         self.name
+    }
+
+    fn topology(&self) -> TopologyView {
+        let q = self.topo.q();
+        let nodes = self.topo.nodes(self.p);
+        TopologyView {
+            name: self.topo.name(),
+            // a single node (or q = 1) has nothing to decompose over
+            levels: if q > 1 && nodes > 1 { 2 } else { 1 },
+            nodes,
+            procs_per_node: q,
+        }
     }
 }
 
@@ -946,6 +1027,176 @@ mod tests {
             MetaAlgo::Direct,
             true,
         ));
+    }
+
+    #[test]
+    fn hybrid_topology_with_partial_last_node() {
+        // clustered(q) imposes no divisibility constraint: p = 5, q = 2
+        // leaves node 2 with one process; routes must still cover every
+        // pair (the Platform-level hybrid *shape* is what validates).
+        ring_put_test(NetFabric::with_config(
+            5,
+            "hybrid",
+            Personality::ibverbs(),
+            Topology::clustered(2),
+            MetaAlgo::Direct,
+            true,
+        ));
+    }
+
+    #[test]
+    fn fat_tree_and_line_fabrics_complete_supersteps() {
+        for topo in [Topology::fat_tree(2), Topology::line(1)] {
+            ring_put_test(NetFabric::with_config(
+                8,
+                "rdma",
+                Personality::ibverbs(),
+                topo,
+                MetaAlgo::Direct,
+                true,
+            ));
+        }
+    }
+
+    #[test]
+    fn flat_pricing_is_the_personality_bit_identical() {
+        // The tentpole's compatibility pin: under `Topology::flat()` every
+        // route is one link whose cost constants are the personality's
+        // values verbatim, so `charge_send`'s f64 expression — post +
+        // bytes·g — performs exactly the operations the pre-topology code
+        // performed. Pinned here at the fabric level for every stock wire
+        // personality.
+        for pers in Personality::fig2_set() {
+            let fab = NetFabric::with_config(
+                4,
+                "rdma",
+                pers.clone(),
+                Topology::flat(),
+                MetaAlgo::Direct,
+                false,
+            );
+            for a in 0..4 {
+                for b in 0..4 {
+                    let (g, l) = if a == b {
+                        (fab.topo.intra().per_byte_ns, fab.topo.intra().latency_ns)
+                    } else {
+                        (pers.per_byte_ns, pers.latency_ns)
+                    };
+                    assert_eq!(fab.routes.g_ns_per_byte(a, b).to_bits(), g.to_bits());
+                    assert_eq!(fab.routes.l_ns(a, b).to_bits(), l.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_sim_clocks_are_deterministic_across_identical_fabrics() {
+        let run = || {
+            let fab = NetFabric::with_config(
+                4,
+                "rdma",
+                Personality::ibverbs(),
+                Topology::flat(),
+                MetaAlgo::Direct,
+                false,
+            );
+            let clocks: Mutex<Vec<u64>> = Mutex::new(vec![0; 4]);
+            run_spmd(fab.clone(), |fab, pid| {
+                let p = fab.p();
+                let slot = setup_slot(fab, pid, 4, pid as u8 + 1);
+                let reqs = vec![Request::Put(PutReq {
+                    src_slot: slot,
+                    src_off: 2,
+                    dst_pid: (pid + 1) % p,
+                    dst_slot: slot,
+                    dst_off: 0,
+                    len: 2,
+                    attr: MSG_DEFAULT,
+                })];
+                for _ in 0..3 {
+                    fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+                }
+                clocks.lock().unwrap()[pid as usize] = fab.sim_time_ns(pid).unwrap() as u64;
+            });
+            clocks.into_inner().unwrap()
+        };
+        assert_eq!(run(), run(), "identical flat fabrics price bit-identically");
+    }
+
+    #[test]
+    fn peak_link_demand_is_reported_per_superstep() {
+        // Flat ring put at p = 4, one superstep: the pid→successor link
+        // carries one meta descriptor (48B) plus the 2 trimmed payload
+        // bytes; the pid→predecessor link carries one 16B trim notice.
+        // Peak over links = 50.
+        let fab = NetFabric::with_config(
+            4,
+            "rdma",
+            Personality::ibverbs(),
+            Topology::flat(),
+            MetaAlgo::Direct,
+            false,
+        );
+        assert_eq!(fab.stats(0).peak_link_bytes, 0, "no traffic yet");
+        ring_put_test(fab.clone());
+        assert_eq!(fab.peak_link_bytes(), 50, "48B meta + 2B payload on the busiest link");
+        assert_eq!(fab.stats(0).peak_link_bytes, 50, "merged into SyncStats");
+        let report = fab.link_report();
+        assert!(!report.is_empty());
+        assert!(report.iter().all(|(_, class, _)| *class == LinkClass::Inter));
+        // NumaPair at p = 4, q = 2 (ring 0→1→2→3→0): each node uplink
+        // aggregates its two processes' inter-node traffic — one
+        // meta+payload (50B) and one trim notice (16B) = 66.
+        let fab = NetFabric::with_config(
+            4,
+            "hybrid",
+            Personality::ibverbs(),
+            Topology::numa_pair(2),
+            MetaAlgo::Direct,
+            false,
+        );
+        ring_put_test(fab.clone());
+        assert_eq!(fab.peak_link_bytes(), 66, "node uplink aggregates its processes");
+        let report = fab.link_report();
+        assert!(report.iter().any(|(_, class, _)| *class == LinkClass::Intra));
+        assert!(report.iter().any(|(_, class, _)| *class == LinkClass::Inter));
+        fab.reset_for_job();
+        assert_eq!(fab.peak_link_bytes(), 0, "job reset clears the report");
+        assert!(fab.link_report().is_empty());
+    }
+
+    #[test]
+    fn topology_view_reflects_the_shape() {
+        let flat = NetFabric::with_config(
+            4,
+            "rdma",
+            Personality::ibverbs(),
+            Topology::flat(),
+            MetaAlgo::Direct,
+            false,
+        );
+        let v = Fabric::topology(flat.as_ref());
+        assert_eq!((v.name, v.levels, v.nodes, v.procs_per_node), ("flat", 1, 4, 1));
+        let hybrid = NetFabric::with_config(
+            6,
+            "hybrid",
+            Personality::ibverbs(),
+            Topology::numa_pair(2),
+            MetaAlgo::Direct,
+            false,
+        );
+        let v = Fabric::topology(hybrid.as_ref());
+        assert_eq!((v.name, v.levels, v.nodes, v.procs_per_node), ("numa_pair", 2, 3, 2));
+        // one node is nothing to decompose over
+        let mono = NetFabric::with_config(
+            2,
+            "hybrid",
+            Personality::ibverbs(),
+            Topology::numa_pair(4),
+            MetaAlgo::Direct,
+            false,
+        );
+        assert_eq!(Fabric::topology(mono.as_ref()).levels, 1);
     }
 
     #[test]

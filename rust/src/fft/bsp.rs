@@ -171,6 +171,22 @@ pub struct BspFft {
     /// coalescible by the sync engine.
     src_reg: TypedReg<f32>,
     dst_reg: TypedReg<f32>,
+    /// Destination visit order for the step-3 all-to-all and its chunked
+    /// variant, fixed at construction from the fabric's topology. On a
+    /// flat fabric this is the classic rotation `r, r+1, …` (every
+    /// destination is hit by exactly one sender per position, instead of
+    /// all p senders queueing on process 0 first). On a ≥2-level
+    /// topology the rotation is node-aware: process `r` walks nodes
+    /// starting from its own (intra links first, then each remote node's
+    /// downlink in a staggered order), so at every schedule position the
+    /// p in-flight transfers spread over p distinct node links rather
+    /// than converging on one node's downlink. Destinations are a
+    /// permutation of `0..p` either way, each visited once, with the
+    /// `(re, im)` pair puts adjacent — output and aggregate pricing are
+    /// bit-identical to the identity order (puts are destination-
+    /// disjoint and per-link byte sums are commutative), which the
+    /// pinned bulk-vs-overlapped and coalescing tests enforce.
+    sched: Vec<u32>,
     /// Reusable scratch planes (`m` each): FFT workspace before staging,
     /// then landing area for the gathered rows. No run allocates.
     sc_re: Vec<f32>,
@@ -181,6 +197,45 @@ pub struct BspFft {
     /// never touches a registered window during a begin→end gap.
     ga_re: Vec<f32>,
     ga_im: Vec<f32>,
+}
+
+/// Destination order for the step-3 all-to-all of process `r` among `p`.
+///
+/// Flat topology (or a shape the view can't factor): the rotation
+/// `r, r+1, …, r+p−1 (mod p)` — at schedule position `i` the p senders
+/// target p *distinct* destinations, instead of everyone queueing their
+/// first transfer on process 0.
+///
+/// Two-level topology (`levels ≥ 2`, `nodes · q == p`): the same idea
+/// lifted to links. Process `r` in node `b` at intra rank `k` visits
+/// nodes in the order `b, b+1, …` (own node first — pure intra links,
+/// no wire traffic) and within each node rotates members starting from
+/// its own rank `k`. At any schedule position the `q` senders of one
+/// node are addressing `q` distinct members of the same target node,
+/// and different nodes are addressing different target nodes — so the
+/// in-flight set at each position spreads over all node up/downlinks
+/// instead of piling `p` transfers onto node 0's downlink. Peak *per-
+/// superstep* link bytes are unchanged (the superstep ships everything
+/// regardless of order); what this buys is wire-order fairness inside
+/// the superstep and, for the chunked overlapped variant, a uniform
+/// link spread in every chunk.
+fn redistribution_schedule(p: u32, r: u32, topo: &crate::fabric::TopologyView) -> Vec<u32> {
+    let pu = p as usize;
+    let q = topo.procs_per_node as usize;
+    let nodes = topo.nodes as usize;
+    if topo.levels >= 2 && q > 1 && nodes > 1 && nodes * q == pu {
+        let (my_node, my_rank) = (r as usize / q, r as usize % q);
+        let mut order = Vec::with_capacity(pu);
+        for node_step in 0..nodes {
+            let dn = (my_node + node_step) % nodes;
+            for member in 0..q {
+                order.push((dn * q + (my_rank + member) % q) as u32);
+            }
+        }
+        order
+    } else {
+        (0..p).map(|i| (r + i) % p).collect()
+    }
 }
 
 /// Pipeline depth of [`BspFft::run_into_overlapped`]: the redistribution
@@ -229,6 +284,7 @@ impl BspFft {
                 return Err(e);
             }
         };
+        let sched = redistribution_schedule(p, r, &bsp.lpf().topology());
         Ok(BspFft {
             n_global,
             p,
@@ -242,6 +298,7 @@ impl BspFft {
             keys,
             src_reg,
             dst_reg,
+            sched,
             sc_re: vec![0f32; if p == 1 { 0 } else { m }],
             sc_im: vec![0f32; if p == 1 { 0 } else { m }],
             ga_re: vec![0f32; if p == 1 { 0 } else { m }],
@@ -417,11 +474,12 @@ impl BspFft {
             )?;
         }
         // step 3: redistribute — block pair d → process d, landing at row
-        // r. The two puts of each pair cover contiguous source and
+        // r, destinations visited in the topology-aware `sched` order.
+        // The two puts of each pair cover contiguous source and
         // destination ranges, so the engine coalesces them to one wire
         // descriptor per destination.
         let home = 2 * self.r as usize * blk;
-        for d in 0..self.p {
+        for &d in &self.sched {
             let s = 2 * d as usize * blk;
             bsp.hpput_at(d, self.src_reg, s, self.dst_reg, home, blk)?;
             bsp.hpput_at(d, self.src_reg, s + blk, self.dst_reg, home + blk, blk)?;
@@ -572,11 +630,13 @@ impl BspFft {
     }
 
     /// Queue chunk `c`'s redistribution puts: pair `d` → process `d`,
-    /// landing in row `r` at the chunk offset. Contiguous pair on both
-    /// sides ⇒ one wire descriptor per destination after coalescing.
+    /// landing in row `r` at the chunk offset, destinations in the
+    /// topology-aware `sched` order (same permutation every chunk).
+    /// Contiguous pair on both sides ⇒ one wire descriptor per
+    /// destination after coalescing.
     fn queue_chunk_puts(&self, bsp: &mut Bsp, c: usize, csz: usize, blk: usize) -> Result<()> {
         let home = self.r as usize * 2 * blk + 2 * c * csz;
-        for d in 0..self.p {
+        for &d in &self.sched {
             let s = d as usize * 2 * blk + 2 * c * csz;
             bsp.hpput_at(d, self.src_reg, s, self.dst_reg, home, csz)?;
             bsp.hpput_at(d, self.src_reg, s + csz, self.dst_reg, home + csz, csz)?;
@@ -920,6 +980,90 @@ mod tests {
             Args::none(),
         )
         .unwrap();
+    }
+
+    /// The destination schedule is a permutation that (a) degrades to
+    /// the classic rotation on flat fabrics, (b) opens with the pure-
+    /// intra own-node block on two-level shapes, and (c) forms a perfect
+    /// matching at every position: the p senders always address p
+    /// distinct destinations.
+    #[test]
+    fn redistribution_schedule_shapes() {
+        use crate::fabric::TopologyView;
+        let flat = TopologyView { name: "flat", levels: 1, nodes: 4, procs_per_node: 1 };
+        assert_eq!(redistribution_schedule(4, 1, &flat), vec![1, 2, 3, 0]);
+        let numa = TopologyView { name: "numa_pair", levels: 2, nodes: 4, procs_per_node: 2 };
+        for r in 0..8u32 {
+            let s = redistribution_schedule(8, r, &numa);
+            let mut seen = s.clone();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..8).collect::<Vec<_>>(), "permutation for r={r}");
+            assert_eq!(s[0], r, "schedule opens with self");
+            assert_eq!(s[1] / 2, r / 2, "own node (intra links) first");
+        }
+        for pos in 0..8 {
+            let mut at: Vec<u32> =
+                (0..8).map(|r| redistribution_schedule(8, r, &numa)[pos]).collect();
+            at.sort_unstable();
+            assert_eq!(at, (0..8).collect::<Vec<_>>(), "position {pos} is a matching");
+        }
+        // a view the schedule can't factor (nodes·q ≠ p) falls back flat
+        let ragged = TopologyView { name: "numa_pair", levels: 2, nodes: 3, procs_per_node: 2 };
+        assert_eq!(redistribution_schedule(4, 0, &ragged), vec![0, 1, 2, 3]);
+    }
+
+    /// The FFT runs unchanged on a hybrid two-node fabric: both the bulk
+    /// and the overlapped path produce output bit-identical to the flat
+    /// RDMA fabric (the node-aware schedule permutes destination order
+    /// only — puts are destination-disjoint), and the route-aware engine
+    /// reports nonzero per-link peak utilisation for the all-to-all.
+    #[test]
+    fn hybrid_redistribution_is_bit_identical_with_link_report() {
+        let p: u32 = 4;
+        let n: usize = 256;
+        let runs: Vec<Vec<(Vec<u32>, Vec<u32>)>> = [Platform::rdma(), Platform::hybrid(2)]
+            .into_iter()
+            .map(|platform| {
+                let root = Root::new(platform).with_max_procs(p);
+                exec(
+                    &root,
+                    p,
+                    move |ctx, _| {
+                        let two_level = ctx.topology().levels >= 2;
+                        let pp = ctx.p();
+                        let m = n / pp as usize;
+                        let mut bsp = Bsp::begin(ctx, 8, 4 * pp as usize + 8).unwrap();
+                        bsp.sync().unwrap();
+                        let mut fft = BspFft::new(&mut bsp, n, Backend::Native).unwrap();
+                        bsp.sync().unwrap();
+                        let (re, im) = rand_planes(m, 0x70B0 + pp as u64);
+                        let (mut o_re, mut o_im) = (vec![0f32; m], vec![0f32; m]);
+                        fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
+                        let (mut v_re, mut v_im) = (vec![0f32; m], vec![0f32; m]);
+                        fft.run_into_overlapped(&mut bsp, &re, &im, &mut v_re, &mut v_im)
+                            .unwrap();
+                        for k in 0..m {
+                            assert_eq!(o_re[k].to_bits(), v_re[k].to_bits(), "re[{k}]");
+                            assert_eq!(o_im[k].to_bits(), v_im[k].to_bits(), "im[{k}]");
+                        }
+                        if two_level {
+                            assert!(
+                                bsp.lpf().stats().peak_link_bytes > 0,
+                                "route-aware engine must report link peaks"
+                            );
+                        }
+                        bsp.end().unwrap();
+                        (
+                            o_re.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            o_im.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        )
+                    },
+                    Args::none(),
+                )
+                .unwrap()
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "hybrid output must match flat bit-for-bit");
     }
 
     #[test]

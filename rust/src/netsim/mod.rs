@@ -14,6 +14,7 @@
 
 pub mod faults;
 pub mod matching;
+pub mod topology;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

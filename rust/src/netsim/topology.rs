@@ -1,0 +1,503 @@
+//! Pluggable node topologies for the simulated NIC (ROADMAP item 1).
+//!
+//! The paper prices every superstep with one machine-wide `(g, ℓ)`; real
+//! machines are NUMA domains inside racks inside clusters, where each
+//! *link* has its own bandwidth and latency. This module gives netsim a
+//! [`Topology`] — the shape of the machine — and a [`RouteTable`] built
+//! from it: for every ordered process pair, the directed sequence of
+//! [`Link`]s a message traverses, each with its own per-byte cost
+//! `g_link` and latency `ℓ_link`. A route's price is the sum over its
+//! links; per-link byte counters (owned by the fabric) make contention
+//! visible as *peak link demand* instead of disappearing into a global
+//! average.
+//!
+//! Built-in shapes:
+//!
+//! * **Flat** — one directed link per ordered pair, `g_link`/`ℓ_link`
+//!   equal to the wire personality's constants. Sums over these
+//!   single-link routes reproduce the global-`(g, ℓ)` pricing
+//!   **bit-identically** (a one-element IEEE-754 sum is exact), so flat
+//!   fabrics are unchanged observables.
+//! * **NumaPair** — nodes of `q` processes (NUMA domains); intra-node
+//!   pairs get direct shared-memory links, every node hangs off a
+//!   crossbar via one uplink and one downlink at half the wire cost
+//!   each (so an inter-node route still prices exactly one wire hop,
+//!   while all of a node's traffic aggregates on its two links).
+//! * **FatTree** — NumaPair nodes grouped in pairs under leaf switches
+//!   under one root; routes within a leaf pair cost one wire hop,
+//!   routes across the root cost two (four half-cost links).
+//! * **Line** — nodes on a chain; a route traverses every segment
+//!   between the endpoints, one full wire hop per segment.
+//!
+//! Follows the route-aware fabric refactor of hwgc-soft (SNIPPETS №2–3)
+//! and pMR's per-link design (PAPERS.md).
+
+use crate::core::Pid;
+
+use super::Personality;
+
+/// Index of a directed link in a [`RouteTable`].
+pub type LinkId = u32;
+
+/// Which level of the machine a link belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Shared-memory traffic inside one node (including self-messages).
+    Intra,
+    /// Network traffic between nodes (NIC, switch, or chain segment).
+    Inter,
+}
+
+/// One directed link with its own cost constants.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub class: LinkClass,
+    /// Per-byte transit cost over this link (the link's `g`).
+    pub g_ns_per_byte: f64,
+    /// Per-message latency over this link (the link's `ℓ`).
+    pub l_ns: f64,
+}
+
+/// Route lookup: the contract a topology-aware fabric prices against.
+pub trait RouteModel {
+    /// The directed link sequence a message from `from` to `to` traverses.
+    fn route(&self, from: Pid, to: Pid) -> &[LinkId];
+    /// The link behind an id returned by [`RouteModel::route`].
+    fn link(&self, id: LinkId) -> &Link;
+    /// Total number of directed links in the machine.
+    fn n_links(&self) -> usize;
+}
+
+/// The built-in machine shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    Flat,
+    NumaPair,
+    FatTree,
+    Line,
+}
+
+/// Node topology: processes `[k·q, (k+1)·q)` share node `k`, and the
+/// nodes are wired together according to [`Shape`].
+#[derive(Debug, Clone)]
+pub struct Topology {
+    shape: Shape,
+    /// Processes per node (1 = fully distributed).
+    q: Pid,
+    /// Cost profile for intra-node (shared-memory) traffic.
+    intra: Personality,
+}
+
+impl Topology {
+    /// Fully distributed: every process its own node, one direct link
+    /// per ordered pair (today's global-`(g, ℓ)` pricing, bit-identical).
+    pub fn flat() -> Self {
+        Topology { shape: Shape::Flat, q: 1, intra: Personality::shm() }
+    }
+
+    /// Compat alias for [`Topology::flat`] (the pre-topology name).
+    pub fn distributed() -> Self {
+        Self::flat()
+    }
+
+    /// Compat constructor: `q` processes per node. `q ≤ 1` is flat;
+    /// otherwise the NumaPair (cluster-of-SMP-nodes) shape.
+    pub fn clustered(q: Pid) -> Self {
+        if q <= 1 {
+            Self::flat()
+        } else {
+            Self::numa_pair(q)
+        }
+    }
+
+    /// NUMA nodes of `q` processes on a crossbar (one uplink + one
+    /// downlink per node).
+    pub fn numa_pair(q: Pid) -> Self {
+        Topology { shape: Shape::NumaPair, q: q.max(1), intra: Personality::shm() }
+    }
+
+    /// Two-level switch tree over NUMA nodes of `q` processes: node
+    /// pairs share a leaf switch, leaf switches share a root.
+    pub fn fat_tree(q: Pid) -> Self {
+        Topology { shape: Shape::FatTree, q: q.max(1), intra: Personality::shm() }
+    }
+
+    /// Nodes of `q` processes on a chain; cost grows with node distance.
+    pub fn line(q: Pid) -> Self {
+        Topology { shape: Shape::Line, q: q.max(1), intra: Personality::shm() }
+    }
+
+    /// Replace the intra-node cost profile.
+    pub fn with_intra(mut self, intra: Personality) -> Self {
+        self.intra = intra;
+        self
+    }
+
+    pub fn shape(&self) -> Shape {
+        self.shape
+    }
+
+    /// Short stable name, recorded in bench artifacts.
+    pub fn name(&self) -> &'static str {
+        match self.shape {
+            Shape::Flat => "flat",
+            Shape::NumaPair => "numa_pair",
+            Shape::FatTree => "fat_tree",
+            Shape::Line => "line",
+        }
+    }
+
+    /// Processes per node.
+    pub fn q(&self) -> Pid {
+        self.q
+    }
+
+    /// Intra-node cost profile.
+    pub fn intra(&self) -> &Personality {
+        &self.intra
+    }
+
+    /// Hierarchy depth the collectives planner keys on: 2 when the
+    /// topology groups multiple processes per node, else 1.
+    pub fn levels(&self) -> u32 {
+        if self.q > 1 {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Number of nodes for a machine of `p` processes.
+    pub fn nodes(&self, p: Pid) -> Pid {
+        p.div_ceil(self.q)
+    }
+
+    #[inline]
+    pub fn node_of(&self, pid: Pid) -> Pid {
+        pid / self.q
+    }
+
+    #[inline]
+    pub fn same_node(&self, a: Pid, b: Pid) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+/// Precomputed per-pair routes with per-route cost sums, built once per
+/// fabric from a [`Topology`] and the fabric's wire [`Personality`].
+#[derive(Debug)]
+pub struct RouteTable {
+    p: Pid,
+    links: Vec<Link>,
+    /// Concatenated link sequences; `spans[from·p + to]` indexes in.
+    route_ids: Vec<LinkId>,
+    spans: Vec<(u32, u32)>,
+    /// Per ordered pair: `Σ g_link` over the route (for Flat this is the
+    /// personality's `per_byte_ns` verbatim — bit-identical pricing).
+    g_sum: Vec<f64>,
+    /// Per ordered pair: `Σ ℓ_link` over the route.
+    l_sum: Vec<f64>,
+}
+
+impl RouteTable {
+    /// Build the route table for `p` processes: `wire` prices inter-node
+    /// links, `topo.intra()` prices intra-node ones.
+    pub fn build(topo: &Topology, p: Pid, wire: &Personality) -> Self {
+        assert!(p > 0);
+        let q = topo.q();
+        let intra = topo.intra();
+        let nodes = topo.nodes(p);
+        let mut links: Vec<Link> = Vec::new();
+        let mut push = |class: LinkClass, g: f64, l: f64| -> LinkId {
+            links.push(Link { class, g_ns_per_byte: g, l_ns: l });
+            (links.len() - 1) as LinkId
+        };
+
+        // direct links for every same-node ordered pair (self included);
+        // under Flat every pair is "same node or wire-direct", so the
+        // whole table is direct links
+        let pairs = (p * p) as usize;
+        let mut direct = vec![LinkId::MAX; pairs];
+        for a in 0..p {
+            for b in 0..p {
+                let idx = (a * p + b) as usize;
+                if topo.same_node(a, b) {
+                    direct[idx] =
+                        push(LinkClass::Intra, intra.per_byte_ns, intra.latency_ns);
+                } else if topo.shape() == Shape::Flat {
+                    direct[idx] = push(LinkClass::Inter, wire.per_byte_ns, wire.latency_ns);
+                }
+            }
+        }
+
+        // per-node uplink/downlink at half the wire cost each, so one
+        // inter-node route (up + down) prices exactly one wire hop while
+        // the counters aggregate the node's whole traffic
+        let half_g = wire.per_byte_ns / 2.0;
+        let half_l = wire.latency_ns / 2.0;
+        let (mut node_up, mut node_down) = (Vec::new(), Vec::new());
+        if matches!(topo.shape(), Shape::NumaPair | Shape::FatTree) {
+            for _ in 0..nodes {
+                node_up.push(push(LinkClass::Inter, half_g, half_l));
+                node_down.push(push(LinkClass::Inter, half_g, half_l));
+            }
+        }
+        // fat tree: leaf switches over node pairs, each with an
+        // uplink/downlink to the root at the same half cost
+        let leaves = nodes.div_ceil(2);
+        let (mut leaf_up, mut leaf_down) = (Vec::new(), Vec::new());
+        if topo.shape() == Shape::FatTree && leaves > 1 {
+            for _ in 0..leaves {
+                leaf_up.push(push(LinkClass::Inter, half_g, half_l));
+                leaf_down.push(push(LinkClass::Inter, half_g, half_l));
+            }
+        }
+        // line: one full-cost wire link per chain segment and direction
+        let (mut right, mut left) = (Vec::new(), Vec::new());
+        if topo.shape() == Shape::Line {
+            for _ in 1..nodes {
+                right.push(push(LinkClass::Inter, wire.per_byte_ns, wire.latency_ns));
+                left.push(push(LinkClass::Inter, wire.per_byte_ns, wire.latency_ns));
+            }
+        }
+
+        let mut route_ids: Vec<LinkId> = Vec::new();
+        let mut spans = Vec::with_capacity(pairs);
+        let mut g_sum = Vec::with_capacity(pairs);
+        let mut l_sum = Vec::with_capacity(pairs);
+        for a in 0..p {
+            for b in 0..p {
+                let start = route_ids.len() as u32;
+                let idx = (a * p + b) as usize;
+                if direct[idx] != LinkId::MAX {
+                    route_ids.push(direct[idx]);
+                } else {
+                    let (na, nb) = (topo.node_of(a), topo.node_of(b));
+                    match topo.shape() {
+                        Shape::Flat => unreachable!("flat pairs are all direct"),
+                        Shape::NumaPair => {
+                            route_ids.push(node_up[na as usize]);
+                            route_ids.push(node_down[nb as usize]);
+                        }
+                        Shape::FatTree => {
+                            route_ids.push(node_up[na as usize]);
+                            let (la, lb) = (na / 2, nb / 2);
+                            if la != lb {
+                                route_ids.push(leaf_up[la as usize]);
+                                route_ids.push(leaf_down[lb as usize]);
+                            }
+                            route_ids.push(node_down[nb as usize]);
+                        }
+                        Shape::Line => {
+                            if na < nb {
+                                for k in na..nb {
+                                    route_ids.push(right[k as usize]);
+                                }
+                            } else {
+                                for k in (nb..na).rev() {
+                                    route_ids.push(left[k as usize]);
+                                }
+                            }
+                        }
+                    }
+                }
+                let end = route_ids.len() as u32;
+                spans.push((start, end - start));
+                let (mut g, mut l) = (0.0f64, 0.0f64);
+                for &id in &route_ids[start as usize..end as usize] {
+                    g += links[id as usize].g_ns_per_byte;
+                    l += links[id as usize].l_ns;
+                }
+                g_sum.push(g);
+                l_sum.push(l);
+            }
+        }
+        RouteTable { p, links, route_ids, spans, g_sum, l_sum }
+    }
+
+    #[inline]
+    fn pair(&self, from: Pid, to: Pid) -> usize {
+        (from * self.p + to) as usize
+    }
+
+    /// `Σ g_link` over the route — the per-byte price of the pair.
+    #[inline]
+    pub fn g_ns_per_byte(&self, from: Pid, to: Pid) -> f64 {
+        self.g_sum[self.pair(from, to)]
+    }
+
+    /// `Σ ℓ_link` over the route — the latency price of the pair.
+    #[inline]
+    pub fn l_ns(&self, from: Pid, to: Pid) -> f64 {
+        self.l_sum[self.pair(from, to)]
+    }
+
+    /// All links (for reports).
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+}
+
+impl RouteModel for RouteTable {
+    #[inline]
+    fn route(&self, from: Pid, to: Pid) -> &[LinkId] {
+        let (start, len) = self.spans[self.pair(from, to)];
+        &self.route_ids[start as usize..(start + len) as usize]
+    }
+
+    #[inline]
+    fn link(&self, id: LinkId) -> &Link {
+        &self.links[id as usize]
+    }
+
+    fn n_links(&self) -> usize {
+        self.links.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wire() -> Personality {
+        Personality::ibverbs()
+    }
+
+    /// Every ordered pair must have a non-empty route whose links exist.
+    fn assert_full_coverage(topo: &Topology, p: Pid) {
+        let rt = RouteTable::build(topo, p, &wire());
+        for a in 0..p {
+            for b in 0..p {
+                let r = rt.route(a, b);
+                assert!(!r.is_empty(), "{}: no route {a}->{b}", topo.name());
+                for &id in r {
+                    assert!((id as usize) < rt.n_links());
+                }
+                let inter = !topo.same_node(a, b);
+                assert_eq!(
+                    r.iter().any(|&id| rt.link(id).class == LinkClass::Inter),
+                    inter,
+                    "{}: route {a}->{b} crosses nodes iff the pids do",
+                    topo.name()
+                );
+            }
+        }
+    }
+
+    /// Forward and reverse routes must have the same length and the same
+    /// per-pair cost sums (all built-ins are symmetric machines).
+    fn assert_route_symmetry(topo: &Topology, p: Pid) {
+        let rt = RouteTable::build(topo, p, &wire());
+        for a in 0..p {
+            for b in 0..p {
+                assert_eq!(
+                    rt.route(a, b).len(),
+                    rt.route(b, a).len(),
+                    "{}: asymmetric hop count {a}<->{b}",
+                    topo.name()
+                );
+                assert_eq!(
+                    rt.g_ns_per_byte(a, b).to_bits(),
+                    rt.g_ns_per_byte(b, a).to_bits(),
+                    "{}: asymmetric g {a}<->{b}",
+                    topo.name()
+                );
+                assert_eq!(
+                    rt.l_ns(a, b).to_bits(),
+                    rt.l_ns(b, a).to_bits(),
+                    "{}: asymmetric l {a}<->{b}",
+                    topo.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn builtin_topologies_cover_and_mirror_every_pair() {
+        for topo in [
+            Topology::flat(),
+            Topology::numa_pair(2),
+            Topology::fat_tree(2),
+            Topology::line(2),
+            Topology::numa_pair(3), // partial last node
+        ] {
+            for p in [1, 2, 5, 8] {
+                assert_full_coverage(&topo, p);
+                assert_route_symmetry(&topo, p);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_routes_price_the_personality_bit_identically() {
+        let w = wire();
+        let topo = Topology::flat();
+        let rt = RouteTable::build(&topo, 5, &w);
+        for a in 0..5 {
+            for b in 0..5 {
+                assert_eq!(rt.route(a, b).len(), 1, "flat = one link per pair");
+                let (g, l) = if a == b {
+                    (topo.intra().per_byte_ns, topo.intra().latency_ns)
+                } else {
+                    (w.per_byte_ns, w.latency_ns)
+                };
+                assert_eq!(rt.g_ns_per_byte(a, b).to_bits(), g.to_bits());
+                assert_eq!(rt.l_ns(a, b).to_bits(), l.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn numa_pair_inter_routes_price_one_wire_hop_exactly() {
+        let w = wire();
+        let topo = Topology::numa_pair(2);
+        let rt = RouteTable::build(&topo, 6, &w);
+        // intra: direct shm link; inter: up + down = one full wire hop
+        assert_eq!(rt.route(0, 1).len(), 1);
+        assert_eq!(rt.g_ns_per_byte(0, 1).to_bits(), topo.intra().per_byte_ns.to_bits());
+        assert_eq!(rt.route(0, 2).len(), 2);
+        assert_eq!(rt.g_ns_per_byte(0, 2).to_bits(), w.per_byte_ns.to_bits());
+        assert_eq!(rt.l_ns(0, 2).to_bits(), w.latency_ns.to_bits());
+        // a node's two pids share its uplink (the contention point)
+        assert_eq!(rt.route(0, 2)[0], rt.route(1, 3)[0], "shared uplink");
+    }
+
+    #[test]
+    fn fat_tree_distances_are_one_or_two_wire_hops() {
+        let w = wire();
+        let topo = Topology::fat_tree(2);
+        let rt = RouteTable::build(&topo, 8, &w);
+        // nodes {0,1} under leaf 0, {2,3} under leaf 1
+        assert_eq!(rt.route(0, 2).len(), 2, "same leaf: up + down");
+        assert_eq!(rt.g_ns_per_byte(0, 2).to_bits(), w.per_byte_ns.to_bits());
+        assert_eq!(rt.route(0, 4).len(), 4, "across the root: four half links");
+        assert_eq!(rt.g_ns_per_byte(0, 4).to_bits(), (2.0 * w.per_byte_ns).to_bits());
+        assert_eq!(rt.l_ns(0, 4).to_bits(), (2.0 * w.latency_ns).to_bits());
+    }
+
+    #[test]
+    fn line_cost_grows_with_node_distance() {
+        let w = wire();
+        let topo = Topology::line(1);
+        let rt = RouteTable::build(&topo, 4, &w);
+        assert_eq!(rt.route(0, 1).len(), 1);
+        assert_eq!(rt.route(0, 3).len(), 3, "three chain segments");
+        assert_eq!(rt.g_ns_per_byte(0, 3).to_bits(), (3.0 * w.per_byte_ns).to_bits());
+        // direction matters for the link ids but not the cost
+        assert_ne!(rt.route(0, 3), rt.route(3, 0));
+    }
+
+    #[test]
+    fn levels_and_node_mapping() {
+        assert_eq!(Topology::flat().levels(), 1);
+        assert_eq!(Topology::clustered(1).shape(), Shape::Flat);
+        assert_eq!(Topology::clustered(2).shape(), Shape::NumaPair);
+        let t = Topology::numa_pair(2);
+        assert_eq!(t.levels(), 2);
+        assert_eq!(t.nodes(6), 3);
+        assert_eq!(t.nodes(5), 3);
+        assert_eq!(t.node_of(3), 1);
+        assert!(t.same_node(2, 3));
+        assert!(!t.same_node(1, 2));
+    }
+}

@@ -65,8 +65,34 @@ pub fn measure_exchange(
     measure_exchange_on(&pool, word_bytes, h, reps)
 }
 
+/// Which peers a probe exchange addresses — the lever behind the
+/// per-level `(g, ℓ)` fits on hierarchical topologies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerClass {
+    /// Every other process (the paper's flat total exchange).
+    All,
+    /// Only peers on the same topology node (shared-memory links).
+    Intra,
+    /// Only peers on other nodes (wire links).
+    Inter,
+}
+
 /// [`measure_exchange`] as one warm job on a shared pool.
 pub fn measure_exchange_on(pool: &Pool, word_bytes: usize, h: usize, reps: u32) -> Result<f64> {
+    measure_exchange_classed(pool, word_bytes, h, reps, PeerClass::All)
+}
+
+/// [`measure_exchange_on`] restricted to one [`PeerClass`]: the h words
+/// split evenly over the eligible peers only (node membership read from
+/// the fabric's topology view). With no eligible peer the exchange is
+/// empty and the measurement reduces to the superstep fixed cost.
+pub fn measure_exchange_classed(
+    pool: &Pool,
+    word_bytes: usize,
+    h: usize,
+    reps: u32,
+    class: PeerClass,
+) -> Result<f64> {
     let outs = pool.exec(
         move |ctx: &mut Context, _| -> Result<f64> {
             let p = ctx.p();
@@ -77,22 +103,27 @@ pub fn measure_exchange_on(pool: &Pool, word_bytes: usize, h: usize, reps: u32) 
             let src = ctx.register_global(bytes.max(1))?;
             let dst = ctx.register_global(bytes.max(1))?;
             ctx.sync(SYNC_DEFAULT)?;
-            // balanced total exchange: my h words split evenly over peers
-            let issue = |ctx: &mut Context| -> Result<()> {
-                if p == 1 || h == 0 {
+            let q = ctx.topology().procs_per_node.max(1);
+            // balanced exchange: my h words split evenly over the
+            // eligible peers of the requested class
+            let issue = move |ctx: &mut Context| -> Result<()> {
+                let me = ctx.pid();
+                let eligible: Vec<u32> = (0..p)
+                    .filter(|&d| d != me)
+                    .filter(|&d| match class {
+                        PeerClass::All => true,
+                        PeerClass::Intra => d / q == me / q,
+                        PeerClass::Inter => d / q != me / q,
+                    })
+                    .collect();
+                if eligible.is_empty() || h == 0 {
                     return Ok(());
                 }
-                let peers = p - 1;
-                let per_peer = h / peers as usize;
-                let rem = h % peers as usize;
+                let per_peer = h / eligible.len();
+                let rem = h % eligible.len();
                 let mut off = 0usize;
-                let mut k = 0u32;
-                for d in 0..p {
-                    if d == ctx.pid() {
-                        continue;
-                    }
-                    let words = per_peer + usize::from((k as usize) < rem);
-                    k += 1;
+                for (k, &d) in eligible.iter().enumerate() {
+                    let words = per_peer + usize::from(k < rem);
                     if words == 0 {
                         continue;
                     }
@@ -148,6 +179,35 @@ pub struct ProbeRow {
     pub l_ci: f64,
 }
 
+/// The paper's Table-3 fit for one word size and one peer class:
+/// `g` from the asymptotic slope, `ℓ` from the small-h intercept,
+/// `samples` independent estimates each.
+fn fit_row(pool: &Pool, cfg: &ProbeConfig, w: usize, class: PeerClass) -> Result<ProbeRow> {
+    let p = cfg.p;
+    let n_max = (cfg.max_bytes / w).max(4 * p as usize);
+    let mut gs = Vec::new();
+    let mut ls = Vec::new();
+    for _ in 0..cfg.samples {
+        let t0 = measure_exchange_classed(pool, w, 0, cfg.reps, class)?;
+        let tp = measure_exchange_classed(pool, w, p as usize, cfg.reps, class)?;
+        let t2p = measure_exchange_classed(pool, w, 2 * p as usize, cfg.reps, class)?;
+        let tmax = measure_exchange_classed(pool, w, n_max, cfg.reps, class)?;
+        let g = (tmax - t2p) / (n_max - 2 * p as usize) as f64;
+        let l = f64::max(t0, 2.0 * tp - t2p);
+        gs.push(g.max(0.0));
+        ls.push(l.max(0.0));
+    }
+    let gs = Samples::from(gs);
+    let ls = Samples::from(ls);
+    Ok(ProbeRow {
+        word_bytes: w,
+        g_ns: gs.mean(),
+        g_ci: gs.ci95(),
+        l_ns: ls.mean(),
+        l_ci: ls.ci95(),
+    })
+}
+
 /// Run the full offline probe for one platform; records the rows into
 /// `table` (keyed by the backend name) and returns them with the measured
 /// memcpy speed `r` (ns/byte).
@@ -164,28 +224,7 @@ pub fn run_offline_probe(
     let pool = Pool::new(platform.clone(), p);
     let mut rows = Vec::new();
     for &w in &cfg.word_sizes {
-        let n_max = (cfg.max_bytes / w).max(4 * p as usize);
-        let mut gs = Vec::new();
-        let mut ls = Vec::new();
-        for _ in 0..cfg.samples {
-            let t0 = measure_exchange_on(&pool, w, 0, cfg.reps)?;
-            let tp = measure_exchange_on(&pool, w, p as usize, cfg.reps)?;
-            let t2p = measure_exchange_on(&pool, w, 2 * p as usize, cfg.reps)?;
-            let tmax = measure_exchange_on(&pool, w, n_max, cfg.reps)?;
-            let g = (tmax - t2p) / (n_max - 2 * p as usize) as f64;
-            let l = f64::max(t0, 2.0 * tp - t2p);
-            gs.push(g.max(0.0));
-            ls.push(l.max(0.0));
-        }
-        let gs = Samples::from(gs);
-        let ls = Samples::from(ls);
-        let row = ProbeRow {
-            word_bytes: w,
-            g_ns: gs.mean(),
-            g_ci: gs.ci95(),
-            l_ns: ls.mean(),
-            l_ci: ls.ci95(),
-        };
+        let row = fit_row(&pool, cfg, w, PeerClass::All)?;
         table.record(
             backend,
             p,
@@ -195,6 +234,46 @@ pub fn run_offline_probe(
         rows.push(row);
     }
     Ok((rows, r))
+}
+
+/// Per-level `(g, ℓ)` fits for a hierarchical platform (tentpole: the
+/// probe learns what each topology *level* costs, not one blended
+/// number). Runs the Table-3 estimators twice with the exchange
+/// restricted to [`PeerClass::Intra`] and [`PeerClass::Inter`] peers,
+/// recording the fits under `"<backend>/intra"` and `"<backend>/inter"`.
+/// On a flat (single-level) platform there is nothing to separate and
+/// the result is empty.
+pub fn run_level_probe(
+    platform: &Platform,
+    cfg: &ProbeConfig,
+    table: &Arc<ProbeTable>,
+) -> Result<Vec<(String, Vec<ProbeRow>)>> {
+    let p = cfg.p;
+    let fabric = platform.make_fabric(p);
+    let topo = fabric.topology();
+    if topo.levels < 2 || topo.procs_per_node < 2 {
+        return Ok(Vec::new());
+    }
+    let backend = fabric.name();
+    let r = measure_memcpy_r(cfg.max_bytes.min(8 << 20), 5);
+    let pool = Pool::new(platform.clone(), p);
+    let mut out = Vec::new();
+    for (level, class) in [("intra", PeerClass::Intra), ("inter", PeerClass::Inter)] {
+        let key = format!("{backend}/{level}");
+        let mut rows = Vec::new();
+        for &w in &cfg.word_sizes {
+            let row = fit_row(&pool, cfg, w, class)?;
+            table.record(
+                &key,
+                p,
+                BspParams { word_bytes: w, g_ns: row.g_ns, l_ns: row.l_ns },
+                r,
+            );
+            rows.push(row);
+        }
+        out.push((key, rows));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -230,6 +309,38 @@ mod tests {
         let t2 = measure_exchange(&plat, 4, 8, 256, 1).unwrap();
         assert!(t > 0.0);
         assert_eq!(t, t2, "netsim must be deterministic");
+    }
+
+    /// The per-level probe separates what the blended flat fit mixes:
+    /// on the hybrid fabric intra-node links price at the shared-memory
+    /// personality (expensive per byte, cheap latency) and inter-node
+    /// at the wire personality — the simulated clock is deterministic,
+    /// so the ordering of the fitted slopes is exact, not statistical.
+    #[test]
+    fn level_probe_fits_each_level() {
+        let table = Arc::new(ProbeTable::default());
+        let cfg = ProbeConfig {
+            p: 4,
+            word_sizes: vec![8],
+            max_bytes: 1 << 16,
+            reps: 1,
+            samples: 1,
+        };
+        let levels = run_level_probe(&Platform::hybrid(2), &cfg, &table).unwrap();
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[0].0, "hybrid/intra");
+        assert_eq!(levels[1].0, "hybrid/inter");
+        let g_intra = levels[0].1[0].g_ns;
+        let g_inter = levels[1].1[0].g_ns;
+        assert!(g_intra > 0.0 && g_inter > 0.0, "{g_intra} / {g_inter}");
+        // shm memcpy per byte (0.35 ns) > one wire hop (0.143 ns): the
+        // intra slope must come out strictly steeper
+        assert!(g_intra > g_inter, "intra {g_intra} vs inter {g_inter}");
+        // both levels landed in the table under their own keys
+        assert_eq!(table.lookup("hybrid/intra", 4).params.len(), 1);
+        assert_eq!(table.lookup("hybrid/inter", 4).params.len(), 1);
+        // a flat platform has no levels to separate
+        assert!(run_level_probe(&Platform::rdma(), &cfg, &table).unwrap().is_empty());
     }
 
     #[test]

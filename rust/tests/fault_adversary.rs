@@ -4,7 +4,9 @@
 //! runs in CI via `bench_faults --smoke`):
 //!
 //! * the fault-free differential matrix is clean — one SPMD program is
-//!   bit-identical on shared / rdma / msg / hybrid, cold and warm;
+//!   bit-identical on shared / rdma / msg / hybrid / hybrid-fat (the
+//!   last two routed over NumaPair and FatTree topologies), cold and
+//!   warm;
 //! * injected reportable faults end in a clean `LpfError` of the same
 //!   class everywhere, one pool cold-rebuild, and a recovered team;
 //! * injected absorbed faults are invisible in memory and statistics;
@@ -21,7 +23,7 @@ use lpf::pool::Pool;
 fn no_fault_differential_matrix_is_clean() {
     let r = differential(4, 1, None);
     assert!(r.ok(), "violations: {:#?}", r.violations);
-    assert_eq!(r.cases.len(), 16, "4 backends x cold/warm x bulk/split");
+    assert_eq!(r.cases.len(), 20, "5 backends x cold/warm x bulk/split");
     assert!(r.cases.iter().all(|c| c.class() == "ok" && c.recovered));
 }
 
