@@ -1,0 +1,399 @@
+//! bench_graph — graphs at scale: the 2D GraphBLAS grid, superstep-lowered
+//! RDD pipelines, and the warm PageRank engine.
+//!
+//! Measures edges/sec across `p` × backend × partition scheme on streamed
+//! R-MAT inputs (2^20+ vertices in full mode — the edge list is never
+//! materialised), plus the fused-vs-staged throughput of the sparksim
+//! lowering. Writes `BENCH_graph.json`.
+//!
+//! `--smoke` (CI) additionally asserts the tentpole's guarantees:
+//!
+//! * the 2D grid SpMV moves **≥ 1.2× less effective communication** than
+//!   the 1-D row-block SpMV at p = 9 on the fat-tree netsim (measured as
+//!   post-trim `SyncStats::bytes_in`, a deterministic byte count — not a
+//!   wall-clock race);
+//! * the fused map→shuffle→reduceByKey lowering sustains **≥ 1.5×** the
+//!   staged engine's throughput;
+//! * the warm PageRank loop performs **zero steady-state heap
+//!   allocations** (counted by the global-allocator wrapper across all
+//!   pool threads, fenced inside the job).
+//!
+//! Any violation exits non-zero and fails the CI job.
+//!
+//! Usage: `bench_graph [--smoke] [--out PATH]`
+
+use std::time::Instant;
+
+use lpf::benchkit::{alloc_counter, json_f64};
+use lpf::collectives::Coll;
+use lpf::core::{Args, Result, SYNC_DEFAULT};
+use lpf::ctx::{exec, Platform, Root};
+use lpf::graphblas::grid::{partition_grid, spmv_rows_1d, GridSpmv, Scheme};
+use lpf::graphblas::{partition, partition_streamed, pool_pagerank_runs, Compute, DistPageRank};
+use lpf::graphgen::{rmat, rmat_edges, RmatConfig};
+use lpf::pool::Pool;
+use lpf::sparksim::{fused_map_reduce, Spark};
+use lpf::util::rng::XorShift64;
+
+#[global_allocator]
+static GLOBAL: alloc_counter::CountingAlloc = alloc_counter::CountingAlloc;
+
+struct Row {
+    workload: &'static str,
+    backend: &'static str,
+    scheme: &'static str,
+    p: u32,
+    edges: u64,
+    secs: f64,
+    edges_per_sec: f64,
+}
+
+fn row(
+    workload: &'static str,
+    backend: &'static str,
+    scheme: &'static str,
+    p: u32,
+    edges: u64,
+    secs: f64,
+) -> Row {
+    Row { workload, backend, scheme, p, edges, secs, edges_per_sec: edges as f64 / secs }
+}
+
+// ---------------------------------------------------- 2D vs 1-D comm gate
+
+struct CommGate {
+    p: u32,
+    n: usize,
+    reps: u32,
+    grid_bytes_in: u64,
+    rows1d_bytes_in: u64,
+    ratio: f64,
+    grid_secs: f64,
+    rows1d_secs: f64,
+}
+
+/// Run `reps` SpMVs through the grid pipeline and the 1-D row-block
+/// baseline on one fat-tree context at p = q², summing post-trim
+/// `bytes_in` per path — the effective-communication volume the 2D
+/// decomposition exists to shrink (`Θ(n/√p)` vs `n − n/p` per process).
+fn comm_gate(q: u32, reps: u32) -> CommGate {
+    let p = q * q;
+    let cfg = RmatConfig::new(12, 8, 9);
+    let g = rmat(&cfg);
+    let n = g.n;
+    let mut rng = XorShift64::new(0x2D);
+    let x: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32).collect();
+    let pad = (g.edges.len() + n).next_power_of_two();
+    let gblocks = partition_grid(&g, q).unwrap();
+    let blocks1d = partition(&g, p, pad).unwrap();
+    let root = Root::new(Platform::hybrid_fat_tree(q).checked(false)).with_max_procs(p);
+    let outs = exec(
+        &root,
+        p,
+        |ctx, _| -> Result<(u64, u64, f64, f64)> {
+            let me = ctx.pid() as usize;
+            let pp = ctx.p() as usize;
+            ctx.bootstrap(16, 8 * pp + 8)?;
+            let mut sp = GridSpmv::new(ctx, gblocks[me].clone())?;
+            let coll = Coll::new(ctx, 4 * n)?;
+            ctx.sync(SYNC_DEFAULT)?;
+            let qq = q as usize;
+            let diag = me / qq == me % qq;
+            let (x_mine, mut y_grid) = if diag {
+                let blk = &sp.block;
+                (x[blk.col_begin..blk.col_end].to_vec(), vec![0f32; blk.rows_len()])
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            let s0 = ctx.stats();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                sp.spmv(ctx, &x_mine, &mut y_grid)?;
+            }
+            let grid_secs = t0.elapsed().as_secs_f64();
+            let s1 = ctx.stats();
+            let rows_per = n.div_ceil(pp);
+            let (lo, hi) = ((me * rows_per).min(n), ((me + 1) * rows_per).min(n));
+            let t1 = Instant::now();
+            for _ in 0..reps {
+                let y = spmv_rows_1d(ctx, &coll, &blocks1d[me], &x[lo..hi])?;
+                std::hint::black_box(&y);
+            }
+            let rows1d_secs = t1.elapsed().as_secs_f64();
+            let s2 = ctx.stats();
+            sp.free(ctx)?;
+            coll.free(ctx)?;
+            ctx.sync(SYNC_DEFAULT)?;
+            Ok((
+                s1.bytes_in - s0.bytes_in,
+                s2.bytes_in - s1.bytes_in,
+                grid_secs,
+                rows1d_secs,
+            ))
+        },
+        Args::none(),
+    )
+    .unwrap();
+    let mut grid_bytes_in = 0u64;
+    let mut rows1d_bytes_in = 0u64;
+    let mut grid_secs = 0f64;
+    let mut rows1d_secs = 0f64;
+    for o in outs {
+        let (gb, ob, gs, os) = o.unwrap();
+        grid_bytes_in += gb;
+        rows1d_bytes_in += ob;
+        grid_secs = grid_secs.max(gs);
+        rows1d_secs = rows1d_secs.max(os);
+    }
+    CommGate {
+        p,
+        n,
+        reps,
+        grid_bytes_in,
+        rows1d_bytes_in,
+        ratio: rows1d_bytes_in as f64 / grid_bytes_in as f64,
+        grid_secs,
+        rows1d_secs,
+    }
+}
+
+// ---------------------------------------------------- fused vs staged gate
+
+struct FusedGate {
+    records: usize,
+    reps: u32,
+    staged_secs: f64,
+    fused_secs: f64,
+    speedup: f64,
+}
+
+fn fused_gate(records: usize, reps: u32) -> FusedGate {
+    let p = 4;
+    let parts = 16;
+    let sc = Spark::new(p, parts);
+    let pool = Pool::new(Platform::shared().checked(false), p as u32);
+    let mut rng = XorShift64::new(0xF05E);
+    let data: Vec<u64> = (0..records).map(|_| rng.below(1 << 16)).collect();
+    let kv = |x: &u64| (x % 97, (x / 7) as f64);
+    let add = |a: f64, b: f64| a + b;
+    // one correctness pass before timing: both engines must agree (values
+    // are integral f64, so + is exact in any merge order)
+    let base = sc.parallelize(data.clone(), parts);
+    let mut staged = base.map(|&x| (x % 97, (x / 7) as f64)).reduce_by_key(add).collect();
+    let mut fused = fused_map_reduce(&base, &pool, kv, add).unwrap();
+    staged.sort_by_key(|&(k, _)| k);
+    fused.sort_by_key(|&(k, _)| k);
+    assert_eq!(staged, fused, "fused lowering diverged from the staged engine");
+    // best-of-reps; each rep rebuilds its lineage so the staged path pays
+    // its real shuffle materialisation every time (as every action does)
+    let mut staged_secs = f64::INFINITY;
+    for _ in 0..reps {
+        let base = sc.parallelize(data.clone(), parts);
+        let t = Instant::now();
+        let out = base.map(|&x| (x % 97, (x / 7) as f64)).reduce_by_key(add).collect();
+        staged_secs = staged_secs.min(t.elapsed().as_secs_f64());
+        std::hint::black_box(&out);
+    }
+    let mut fused_secs = f64::INFINITY;
+    for _ in 0..reps {
+        let base = sc.parallelize(data.clone(), parts);
+        let t = Instant::now();
+        let out = fused_map_reduce(&base, &pool, kv, add).unwrap();
+        fused_secs = fused_secs.min(t.elapsed().as_secs_f64());
+        std::hint::black_box(&out);
+    }
+    FusedGate { records, reps, staged_secs, fused_secs, speedup: staged_secs / fused_secs }
+}
+
+// ---------------------------------------------------- warm-loop alloc gate
+
+/// Count heap allocations (all threads) inside the steady-state warm
+/// PageRank loop: plan + windows built and warmed first, then the counter
+/// brackets `iters` full iterations, fenced on every pid.
+fn alloc_gate(iters: u32) -> u64 {
+    let p = 4u32;
+    let cfg = RmatConfig::new(10, 8, 3);
+    let n = 1usize << cfg.scale;
+    let blocks = partition_streamed(n, p, || rmat_edges(&cfg)).unwrap();
+    let pool = Pool::new(Platform::shared().checked(false), p);
+    let counts = pool
+        .exec(
+            |ctx, _| -> Result<u64> {
+                ctx.bootstrap(8, 4 * ctx.p() as usize + 8)?;
+                let block = blocks[ctx.pid() as usize].clone();
+                let mut pr = DistPageRank::new(ctx, block, Compute::Native, 0.85)?;
+                ctx.sync(SYNC_DEFAULT)?;
+                pr.run_warm(ctx, 0.0, 3)?; // warm every buffer and plan
+                ctx.sync(SYNC_DEFAULT)?;
+                if ctx.pid() == 0 {
+                    alloc_counter::start();
+                }
+                ctx.sync(SYNC_DEFAULT)?; // every pid enters after start
+                pr.run_warm(ctx, 0.0, iters)?;
+                ctx.sync(SYNC_DEFAULT)?; // every pid done before stop
+                Ok(if ctx.pid() == 0 {
+                    alloc_counter::stop();
+                    alloc_counter::count()
+                } else {
+                    0
+                })
+            },
+            Args::none(),
+        )
+        .unwrap();
+    counts.into_iter().map(|c| c.unwrap()).sum()
+}
+
+// ---------------------------------------------------------------- output
+
+fn write_json(path: &str, gate: &CommGate, fg: &FusedGate, allocs: (u32, u64), rows: &[Row]) {
+    let mut s = String::new();
+    s.push_str("{\n  \"schema\": \"bench_graph/v1\",\n");
+    s.push_str(&format!(
+        "  \"comm_gate\": {{ \"p\": {}, \"n\": {}, \"reps\": {}, \"grid_bytes_in\": {}, \
+         \"rows1d_bytes_in\": {}, \"ratio\": {} }},\n",
+        gate.p,
+        gate.n,
+        gate.reps,
+        gate.grid_bytes_in,
+        gate.rows1d_bytes_in,
+        json_f64(gate.ratio)
+    ));
+    s.push_str(&format!(
+        "  \"fused_gate\": {{ \"records\": {}, \"reps\": {}, \"staged_secs\": {}, \
+         \"fused_secs\": {}, \"speedup\": {} }},\n",
+        fg.records,
+        fg.reps,
+        json_f64(fg.staged_secs),
+        json_f64(fg.fused_secs),
+        json_f64(fg.speedup)
+    ));
+    s.push_str(&format!(
+        "  \"alloc_gate\": {{ \"warm_iters\": {}, \"allocations\": {} }},\n",
+        allocs.0, allocs.1
+    ));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{ \"workload\": \"{}\", \"backend\": \"{}\", \"scheme\": \"{}\", \"p\": {}, \
+             \"edges\": {}, \"secs\": {}, \"edges_per_sec\": {} }}{}\n",
+            r.workload,
+            r.backend,
+            r.scheme,
+            r.p,
+            r.edges,
+            json_f64(r.secs),
+            json_f64(r.edges_per_sec),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).expect("write BENCH_graph.json");
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let out = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_graph.json".to_string());
+
+    let (spmv_reps, pr_scale, pr_iters, fused_records, fused_reps, alloc_iters) =
+        if smoke { (5u32, 14u32, 5u32, 200_000usize, 3u32, 20u32) } else {
+            (20, 20, 10, 1_000_000, 5, 50)
+        };
+    let grid_label = Scheme::Grid { q: 3 }.label();
+    let rows_label = Scheme::Rows.label();
+    let mut rows: Vec<Row> = Vec::new();
+
+    // streaming R-MAT generation at 2^20 vertices: the edge stream is
+    // consumed, never materialised (full mode also partitions at this
+    // scale below)
+    let cfg_gen = RmatConfig::new(20, 8, 1);
+    let t = Instant::now();
+    let gen_edges = rmat_edges(&cfg_gen).map(std::hint::black_box).count() as u64;
+    rows.push(row("rmat_stream_gen", "local", "stream", 1, gen_edges, t.elapsed().as_secs_f64()));
+
+    // warm multi-run PageRank over streamed partitions: p × backend
+    let cfg_pr = RmatConfig::new(pr_scale, 8, 7);
+    let n_pr = 1usize << cfg_pr.scale;
+    let e_pr = rmat_edges(&cfg_pr).count() as u64;
+    for (backend, plat, p) in [
+        ("shared", Platform::shared().checked(false), 4u32),
+        ("shared", Platform::shared().checked(false), 9),
+        ("hybrid-fat", Platform::hybrid_fat_tree(3).checked(false), 9),
+    ] {
+        let blocks = partition_streamed(n_pr, p, || rmat_edges(&cfg_pr)).unwrap();
+        let pool = Pool::new(plat, p);
+        let t = Instant::now();
+        let outs = pool_pagerank_runs(&pool, &blocks, 0.85, &[(0.0, pr_iters)]).unwrap();
+        let secs = t.elapsed().as_secs_f64();
+        std::hint::black_box(&outs);
+        rows.push(row("pagerank_warm", backend, rows_label, p, e_pr * pr_iters as u64, secs));
+    }
+
+    // 2D grid vs 1-D row SpMV on the fat-tree netsim at p = 9
+    let gate = comm_gate(3, spmv_reps);
+    let e_spmv = rmat(&RmatConfig::new(12, 8, 9)).edges.len() as u64 * spmv_reps as u64;
+    rows.push(row("spmv", "hybrid-fat", grid_label, gate.p, e_spmv, gate.grid_secs));
+    rows.push(row("spmv", "hybrid-fat", rows_label, gate.p, e_spmv, gate.rows1d_secs));
+    eprintln!(
+        "comm gate: grid {} B in, rows-1d {} B in over {} SpMVs at p={} — ratio {:.2}x",
+        gate.grid_bytes_in, gate.rows1d_bytes_in, gate.reps, gate.p, gate.ratio
+    );
+
+    // fused vs staged RDD pipeline
+    let fg = fused_gate(fused_records, fused_reps);
+    let frecs = fg.records as u64;
+    rows.push(row("rdd_reduce_by_key", "shared", "staged", 4, frecs, fg.staged_secs));
+    rows.push(row("rdd_reduce_by_key", "shared", "fused", 4, frecs, fg.fused_secs));
+    eprintln!(
+        "fused gate: staged {:.4}s vs fused {:.4}s over {} records — {:.2}x",
+        fg.staged_secs, fg.fused_secs, fg.records, fg.speedup
+    );
+
+    // zero-allocation warm loop
+    let allocs = alloc_gate(alloc_iters);
+    eprintln!("alloc gate: {allocs} allocations over {alloc_iters} warm PageRank iterations");
+
+    for r in &rows {
+        eprintln!(
+            "{:>18} {:>10} {:>8} p={}  {:>12.0} edges/s  ({:.4}s)",
+            r.workload, r.backend, r.scheme, r.p, r.edges_per_sec, r.secs
+        );
+    }
+    write_json(&out, &gate, &fg, (alloc_iters, allocs), &rows);
+    eprintln!("wrote {out}");
+
+    if smoke {
+        let mut failed = false;
+        if gate.ratio.is_nan() || gate.ratio < 1.2 {
+            eprintln!(
+                "FAIL: 2D SpMV effective communication only {:.2}x below 1-D (need >= 1.2x)",
+                gate.ratio
+            );
+            failed = true;
+        }
+        if fg.speedup.is_nan() || fg.speedup < 1.5 {
+            eprintln!(
+                "FAIL: fused pipeline only {:.2}x staged throughput (need >= 1.5x)",
+                fg.speedup
+            );
+            failed = true;
+        }
+        if allocs != 0 {
+            eprintln!("FAIL: warm PageRank loop allocated {allocs} times (expected 0)");
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        eprintln!(
+            "OK: comm ratio {:.2}x >= 1.2x, fused {:.2}x >= 1.5x, zero warm-loop allocations",
+            gate.ratio, fg.speedup
+        );
+    }
+}

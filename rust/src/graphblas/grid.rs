@@ -1,0 +1,405 @@
+//! 2D (√p × √p) grid partition and SpMV.
+//!
+//! The FooPar line of work gets near-optimal distributed matrix ops from
+//! exactly this decomposition: process `(i, j)` of a `q × q` grid owns
+//! block `A[i][j]`, the input vector lives block-distributed on the
+//! diagonal, and one SpMV costs a column broadcast (`h = n/q` words) plus
+//! a column reduce (`h = n/q`) instead of the 1-D row-block allgather
+//! (`h = n − n/p`). At `p = q²` the per-process communication volume drops
+//! from `Θ(n)` to `Θ(n/√p)`.
+//!
+//! **Bit-consistency.** Floating-point addition is not associative, so a
+//! naive tree reduce over per-column partials would drift from the 1-D
+//! result. The column reduce here is a *sequential pipeline* in ascending
+//! column order: process `(i, 0)` computes its partial from zero, passes
+//! it to `(i, 1)` which accumulates its own entries on top, and so on to
+//! `(i, q−1)`. Since [`super::partition`] sorts entries by (row, col),
+//! this reproduces the exact left-associated accumulation chain of the
+//! 1-D kernel — the two schemes agree **bit-for-bit** on every backend
+//! (pinned by `tests/graph_workloads.rs`). The pipeline serialises the
+//! reduce across `q` supersteps, but each carries only `n/q` words and on
+//! a fat tree (`hybrid_fat_tree(q)`, `p = q²`, node = grid row) every hop
+//! stays intra-node.
+
+use crate::collectives::Coll;
+use crate::core::{LpfError, Result};
+use crate::ctx::Context;
+use crate::fabric::TopologyView;
+use crate::graphgen::Coo;
+use crate::typed::TypedSlot;
+
+use super::{Compute, LocalBlock};
+
+/// Partition scheme for the distributed SpMV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// 1-D row blocks (the seed layout; always valid).
+    Rows,
+    /// 2D `q × q` grid blocks, `p = q²`.
+    Grid { q: u32 },
+}
+
+fn isqrt(p: u32) -> u32 {
+    let mut q = (p as f64).sqrt() as u32;
+    while (q + 1) * (q + 1) <= p {
+        q += 1;
+    }
+    while q * q > p {
+        q -= 1;
+    }
+    q
+}
+
+impl Scheme {
+    /// Pick a scheme for `p` processes on the given topology: the grid
+    /// needs `p` to be a perfect square (`q ≥ 2`) and a hierarchical
+    /// topology for the intra-node pipeline to pay off — otherwise fall
+    /// back to 1-D rows. Flat-backend tests force `Grid` explicitly.
+    pub fn auto(p: u32, topo: &TopologyView) -> Scheme {
+        let q = isqrt(p);
+        if q >= 2 && q * q == p && topo.levels >= 2 {
+            Scheme::Grid { q }
+        } else {
+            Scheme::Rows
+        }
+    }
+
+    /// Label for bench artifacts.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::Rows => "rows-1d",
+            Scheme::Grid { .. } => "grid-2d",
+        }
+    }
+}
+
+/// Process `(gi, gj)`'s grid block: rows `[row_begin, row_end)`, columns
+/// `[col_begin, col_end)` of the column-stochastic PageRank matrix.
+/// Entries sorted by (local row, global col); unpadded (Native compute).
+#[derive(Debug, Clone)]
+pub struct GridBlock {
+    pub n: usize,
+    pub q: u32,
+    pub gi: u32,
+    pub gj: u32,
+    pub row_begin: usize,
+    pub row_end: usize,
+    pub col_begin: usize,
+    pub col_end: usize,
+    pub vals: Vec<f32>,
+    /// Global column index per entry.
+    pub cols: Vec<i32>,
+    /// Local row index per entry.
+    pub rows: Vec<i32>,
+    pub row_starts: Vec<i32>,
+    pub row_ends: Vec<i32>,
+}
+
+impl GridBlock {
+    /// Number of local rows.
+    pub fn rows_len(&self) -> usize {
+        self.row_end - self.row_begin
+    }
+
+    /// Width of this block's column range.
+    pub fn cols_len(&self) -> usize {
+        self.col_end - self.col_begin
+    }
+
+    /// Accumulate this block's entries on top of `y` (ascending column
+    /// within each row), reading the x block `x_blk` indexed by
+    /// `col − col_begin`. Continuing the accumulation chain from the
+    /// received pipeline partial is what keeps the 2D result bit-identical
+    /// to the 1-D kernel.
+    pub fn accumulate(&self, x_blk: &[f32], y: &mut [f32]) {
+        for (row, yv) in y.iter_mut().enumerate() {
+            let (s, e) = (self.row_starts[row] as usize, self.row_ends[row] as usize);
+            let mut acc = *yv;
+            for k in s..e {
+                acc += self.vals[k] * x_blk[self.cols[k] as usize - self.col_begin];
+            }
+            *yv = acc;
+        }
+    }
+}
+
+/// Partition a graph into `q² ` grid blocks (pid `= gi·q + gj`) with the
+/// same PageRank normalisation as [`super::partition`]: entry `(d, s)` has
+/// value `1/outdeg(s)` and lands in block `(d/b, s/b)`, `b = ⌈n/q⌉`.
+pub fn partition_grid(coo: &Coo, q: u32) -> Result<Vec<GridBlock>> {
+    if q == 0 {
+        return Err(LpfError::Illegal("grid needs q >= 1".into()));
+    }
+    let n = coo.n;
+    let qq = q as usize;
+    let b = n.div_ceil(qq);
+    let degs = coo.out_degrees();
+    let mut blocks: Vec<GridBlock> = (0..qq * qq)
+        .map(|pid| {
+            let (gi, gj) = (pid / qq, pid % qq);
+            GridBlock {
+                n,
+                q,
+                gi: gi as u32,
+                gj: gj as u32,
+                row_begin: (gi * b).min(n),
+                row_end: ((gi + 1) * b).min(n),
+                col_begin: (gj * b).min(n),
+                col_end: ((gj + 1) * b).min(n),
+                vals: Vec::new(),
+                cols: Vec::new(),
+                rows: Vec::new(),
+                row_starts: Vec::new(),
+                row_ends: Vec::new(),
+            }
+        })
+        .collect();
+    for &(s, d) in &coo.edges {
+        let (gi, gj) = (d as usize / b, s as usize / b);
+        let blk = &mut blocks[gi * qq + gj];
+        blk.vals.push(1.0 / degs[s as usize] as f32);
+        blk.cols.push(s as i32);
+        blk.rows.push((d as usize - blk.row_begin) as i32);
+    }
+    for blk in &mut blocks {
+        let mut order: Vec<usize> = (0..blk.vals.len()).collect();
+        order.sort_by_key(|&e| (blk.rows[e], blk.cols[e]));
+        blk.vals = order.iter().map(|&e| blk.vals[e]).collect();
+        blk.cols = order.iter().map(|&e| blk.cols[e]).collect();
+        blk.rows = order.iter().map(|&e| blk.rows[e]).collect();
+        let rows_len = blk.rows_len();
+        blk.row_starts = vec![0; rows_len];
+        blk.row_ends = vec![0; rows_len];
+        let mut e = 0usize;
+        for row in 0..rows_len {
+            blk.row_starts[row] = e as i32;
+            while e < blk.vals.len() && blk.rows[e] as usize == row {
+                e += 1;
+            }
+            blk.row_ends[row] = e as i32;
+        }
+    }
+    Ok(blocks)
+}
+
+/// Planned 2D SpMV state over one LPF context: registered windows for the
+/// column broadcast, the pipeline partial, and the final result, reused
+/// across calls. Collective constructor; registrations activate at the
+/// caller's next fence.
+pub struct GridSpmv {
+    pub block: GridBlock,
+    q: usize,
+    /// Block dimension `⌈n/q⌉` (window size).
+    b: usize,
+    /// Landing zone for the column broadcast (x block of grid column gj).
+    win_x: TypedSlot<f32>,
+    /// Landing zone for the pipeline partial from grid column gj−1.
+    win_pipe: TypedSlot<f32>,
+    /// Landing zone for the finished y block (diagonal processes).
+    win_y: TypedSlot<f32>,
+    /// Staging slot the active column puts its partial from.
+    loc_y: TypedSlot<f32>,
+    xbuf: Vec<f32>,
+    ybuf: Vec<f32>,
+}
+
+impl GridSpmv {
+    pub fn new(ctx: &mut Context, block: GridBlock) -> Result<Self> {
+        let q = block.q as usize;
+        if ctx.p() as usize != q * q {
+            return Err(LpfError::Illegal(format!(
+                "grid q = {q} needs p = {}, context has p = {}",
+                q * q,
+                ctx.p()
+            )));
+        }
+        let b = block.n.div_ceil(q);
+        let win_x = ctx.alloc_global::<f32>(b.max(1))?;
+        let win_pipe = ctx.alloc_global::<f32>(b.max(1))?;
+        let win_y = ctx.alloc_global::<f32>(b.max(1))?;
+        let loc_y = ctx.alloc_local::<f32>(b.max(1))?;
+        Ok(GridSpmv {
+            q,
+            b,
+            win_x,
+            win_pipe,
+            win_y,
+            loc_y,
+            xbuf: vec![0f32; b],
+            ybuf: vec![0f32; b],
+            block,
+        })
+    }
+
+    /// One collective SpMV. Diagonal process `(j, j)` supplies its x block
+    /// in `x_mine` and receives its y block in `y_out` (sized
+    /// `cols_len()`/`rows_len()`); off-diagonal processes pass empty
+    /// slices. `q + 1` supersteps: broadcast, then the q-stage pipeline
+    /// reduce (stage `t` active on grid column `t`).
+    pub fn spmv(&mut self, ctx: &mut Context, x_mine: &[f32], y_out: &mut [f32]) -> Result<()> {
+        let q = self.q;
+        let me = ctx.pid() as usize;
+        let (gi, gj) = (me / q, me % q);
+        let diag = gi == gj;
+        let h = self.block.rows_len();
+        let w = self.block.cols_len();
+        let (win_x, win_pipe, win_y, loc_y) =
+            (self.win_x, self.win_pipe, self.win_y, self.loc_y);
+        if diag {
+            if x_mine.len() != w {
+                return Err(LpfError::Illegal(format!(
+                    "diagonal x block must have {w} elements, got {}",
+                    x_mine.len()
+                )));
+            }
+            ctx.write(win_x, 0, x_mine)?;
+        }
+        // superstep 0: column broadcast — diag (j, j) feeds grid column j
+        ctx.superstep(|ep| {
+            if diag {
+                for k in 0..q {
+                    if k != gi {
+                        ep.put_slice(win_x, 0, (k * q + gj) as u32, win_x, 0, w)?;
+                    }
+                }
+            }
+            Ok(())
+        })?;
+        // supersteps 1..=q: pipeline reduce along each grid row, ascending
+        // column order — the bit-exact left-associated chain
+        for t in 0..q {
+            if gj == t {
+                ctx.read(win_x, 0, &mut self.xbuf)?;
+                if t == 0 {
+                    self.ybuf[..h].fill(0.0);
+                } else {
+                    ctx.read(win_pipe, 0, &mut self.ybuf)?;
+                }
+                self.block.accumulate(&self.xbuf[..w], &mut self.ybuf[..h]);
+                if h > 0 {
+                    ctx.write(loc_y, 0, &self.ybuf[..h])?;
+                }
+            }
+            ctx.superstep(|ep| {
+                if gj == t {
+                    if t + 1 < q {
+                        ep.put_slice(loc_y, 0, (gi * q + t + 1) as u32, win_pipe, 0, h)?;
+                    } else {
+                        ep.put_slice(loc_y, 0, (gi * q + gi) as u32, win_y, 0, h)?;
+                    }
+                }
+                Ok(())
+            })?;
+        }
+        if diag {
+            if y_out.len() != h {
+                return Err(LpfError::Illegal(format!(
+                    "diagonal y block must have {h} elements, got {}",
+                    y_out.len()
+                )));
+            }
+            ctx.read(win_y, 0, y_out)?;
+        }
+        Ok(())
+    }
+
+    /// Collective teardown (deregisters the windows; fence at the caller's
+    /// next sync).
+    pub fn free(self, ctx: &mut Context) -> Result<()> {
+        ctx.dealloc(self.win_x)?;
+        ctx.dealloc(self.win_pipe)?;
+        ctx.dealloc(self.win_y)?;
+        ctx.dealloc(self.loc_y)
+    }
+}
+
+/// Reference 1-D SpMV over a context: allgather the block-distributed x
+/// into the replicated vector through `coll`, then run the Native kernel.
+/// The bench's effective-communication baseline (`h = n − n/p` in-words
+/// per process vs the grid's `Θ(n/√p)`).
+pub fn spmv_rows_1d(
+    ctx: &mut Context,
+    coll: &Coll,
+    block: &LocalBlock,
+    x_mine: &[f32],
+) -> Result<Vec<f32>> {
+    let p = ctx.p() as usize;
+    let rows_per = block.n.div_ceil(p);
+    let mut mine = vec![0f32; rows_per];
+    mine[..x_mine.len()].copy_from_slice(x_mine);
+    let mut x_full = vec![0f32; rows_per * p];
+    coll.allgather(ctx, &mine, &mut x_full)?;
+    Compute::Native.spmv(block, &x_full[..block.n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::{cage_like, rmat, RmatConfig};
+
+    #[test]
+    fn scheme_auto_picks_grid_only_on_square_p_and_hierarchy() {
+        let fat = TopologyView { name: "fat_tree", levels: 2, nodes: 3, procs_per_node: 3 };
+        let flat = TopologyView { name: "flat", levels: 1, nodes: 1, procs_per_node: 9 };
+        assert_eq!(Scheme::auto(9, &fat), Scheme::Grid { q: 3 });
+        assert_eq!(Scheme::auto(4, &fat), Scheme::Grid { q: 2 });
+        assert_eq!(Scheme::auto(8, &fat), Scheme::Rows, "8 is not square");
+        assert_eq!(Scheme::auto(9, &flat), Scheme::Rows, "flat topology");
+        assert_eq!(Scheme::auto(1, &fat), Scheme::Rows, "q >= 2 required");
+    }
+
+    #[test]
+    fn grid_partition_covers_matrix_exactly() {
+        let g = rmat(&RmatConfig::new(7, 6, 29));
+        let blocks = partition_grid(&g, 3).unwrap();
+        assert_eq!(blocks.len(), 9);
+        let total: usize = blocks.iter().map(|b| b.vals.len()).sum();
+        assert_eq!(total, g.edges.len());
+        // column sums over all blocks are 1 for non-dangling vertices
+        let degs = g.out_degrees();
+        let mut colsum = vec![0f64; g.n];
+        for blk in &blocks {
+            for e in 0..blk.vals.len() {
+                assert!(blk.cols[e] as usize >= blk.col_begin);
+                assert!((blk.cols[e] as usize) < blk.col_end);
+                colsum[blk.cols[e] as usize] += blk.vals[e] as f64;
+            }
+        }
+        for v in 0..g.n {
+            if degs[v] > 0 {
+                assert!((colsum[v] - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_accumulate_chain_matches_1d_kernel_bitwise() {
+        // serial emulation of the pipeline: ascending-column accumulate
+        // across the q blocks of each grid row must equal the single-block
+        // 1-D kernel bit-for-bit
+        let g = cage_like(100, 3, 13);
+        let x: Vec<f32> = (0..g.n).map(|v| ((v * 53 + 11) % 97) as f32 / 97.0).collect();
+        let one = super::super::partition(&g, 1, g.edges.len().next_power_of_two()).unwrap();
+        let want = Compute::Native.spmv(&one[0], &x).unwrap();
+        for q in [2u32, 3, 4] {
+            let blocks = partition_grid(&g, q).unwrap();
+            let b = g.n.div_ceil(q as usize);
+            let mut got = vec![0f32; g.n];
+            for gi in 0..q as usize {
+                let (rb, re) = (gi * b, ((gi + 1) * b).min(g.n));
+                let mut y = vec![0f32; re - rb];
+                for gj in 0..q as usize {
+                    let blk = &blocks[gi * q as usize + gj];
+                    let (cb, ce) = (blk.col_begin, blk.col_end);
+                    blk.accumulate(&x[cb..ce], &mut y);
+                }
+                got[rb..re].copy_from_slice(&y);
+            }
+            assert_eq!(
+                got.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                "q = {q} bit-exact"
+            );
+        }
+    }
+}

@@ -58,36 +58,93 @@ impl RmatConfig {
     }
 }
 
+/// Streaming R-MAT edge generator: yields the same quadrant-descent edge
+/// sequence `rmat` consumes, one edge at a time, without materialising the
+/// edge list. Self-loops are skipped; duplicates are **kept** (multigraph
+/// semantics — when out-degrees are counted over the same stream, column
+/// sums of the PageRank matrix remain exactly 1, so iterating on the
+/// multigraph is well-defined and needs no global dedup pass).
+///
+/// Cloning the iterator restarts the stream from the seed, which is how
+/// two-pass consumers (degree count, then partition fill) re-read 2^20+
+/// vertex graphs for free.
+#[derive(Debug, Clone)]
+pub struct RmatEdges {
+    n: u32,
+    remaining: usize,
+    rng: XorShift64,
+    a: f64,
+    b: f64,
+    c: f64,
+}
+
+impl RmatEdges {
+    /// Number of vertices (`2^scale`).
+    pub fn num_vertices(&self) -> usize {
+        self.n as usize
+    }
+}
+
+impl Iterator for RmatEdges {
+    type Item = (u32, u32);
+
+    fn next(&mut self) -> Option<(u32, u32)> {
+        while self.remaining > 0 {
+            self.remaining -= 1;
+            let (mut lo_s, mut lo_d) = (0u32, 0u32);
+            let mut span = self.n;
+            while span > 1 {
+                span /= 2;
+                let r = self.rng.unit_f64();
+                if r < self.a {
+                    // top-left
+                } else if r < self.a + self.b {
+                    lo_d += span;
+                } else if r < self.a + self.b + self.c {
+                    lo_s += span;
+                } else {
+                    lo_s += span;
+                    lo_d += span;
+                }
+            }
+            if lo_s != lo_d {
+                return Some((lo_s, lo_d));
+            }
+        }
+        None
+    }
+}
+
+/// Start a streaming R-MAT edge generator for `cfg`. Yields at most
+/// `edge_factor · 2^scale` edges (self-loop draws are dropped).
+pub fn rmat_edges(cfg: &RmatConfig) -> RmatEdges {
+    RmatEdges {
+        n: 1u32 << cfg.scale,
+        remaining: cfg.edge_factor << cfg.scale,
+        rng: XorShift64::new(cfg.seed),
+        a: cfg.a,
+        b: cfg.b,
+        c: cfg.c,
+    }
+}
+
+/// One streaming pass over `rmat_edges(cfg)`: per-vertex out-degrees and the
+/// total edge count, without holding the edge list.
+pub fn rmat_degrees(cfg: &RmatConfig) -> (Vec<u32>, usize) {
+    let mut degs = vec![0u32; 1usize << cfg.scale];
+    let mut m = 0usize;
+    for (s, _) in rmat_edges(cfg) {
+        degs[s as usize] += 1;
+        m += 1;
+    }
+    (degs, m)
+}
+
 /// Generate an R-MAT graph: `2^scale` vertices, ~`edge_factor · n` edges
 /// (deduplicated, self-loops removed).
 pub fn rmat(cfg: &RmatConfig) -> Coo {
     let n = 1usize << cfg.scale;
-    let target = cfg.edge_factor * n;
-    let mut rng = XorShift64::new(cfg.seed);
-    let mut edges = Vec::with_capacity(target);
-    for _ in 0..target {
-        let (mut lo_s, mut lo_d) = (0u32, 0u32);
-        let mut span = n as u32;
-        while span > 1 {
-            span /= 2;
-            let r = rng.unit_f64();
-            // noise per level keeps the fractal from being too regular
-            let (a, b, c) = (cfg.a, cfg.b, cfg.c);
-            if r < a {
-                // top-left
-            } else if r < a + b {
-                lo_d += span;
-            } else if r < a + b + c {
-                lo_s += span;
-            } else {
-                lo_s += span;
-                lo_d += span;
-            }
-        }
-        if lo_s != lo_d {
-            edges.push((lo_s, lo_d));
-        }
-    }
+    let mut edges: Vec<(u32, u32)> = rmat_edges(cfg).collect();
     edges.sort_unstable();
     edges.dedup();
     // deterministic shuffle so partitions are not degree-sorted
@@ -139,6 +196,16 @@ pub fn write_matrix_market(coo: &Coo, path: &Path) -> Result<()> {
 
 /// Read a MatrixMarket coordinate file (pattern or real; weights dropped —
 /// PageRank normalises anyway).
+///
+/// Real-world MatrixMarket dumps routinely carry duplicate entries and
+/// self-loops; both would inflate `out_degrees` and skew the PageRank
+/// column normalisation. The reader therefore canonicalises to what the
+/// generators already produce: entries are deduplicated and self-loops
+/// dropped. A vertex whose entries are *exclusively* self-loops is a
+/// degenerate row — dropping its loops would silently convert it into a
+/// dangling vertex the input never declared — so it is rejected with a
+/// clean [`LpfError::Illegal`]. Indices are validated to be 1-based and in
+/// range before conversion (a raw 0 index would wrap on `u32` subtraction).
 pub fn read_matrix_market(path: &Path) -> Result<Coo> {
     let io_err = |e: std::io::Error| LpfError::Fatal(format!("mmio read: {e}"));
     let f = std::fs::File::open(path).map_err(io_err)?;
@@ -153,6 +220,7 @@ pub fn read_matrix_market(path: &Path) -> Result<Coo> {
     }
     let mut dims: Option<(usize, usize)> = None;
     let mut edges = Vec::new();
+    let mut loop_rows: Vec<u32> = Vec::new();
     for line in lines {
         let line = line.map_err(io_err)?;
         let line = line.trim();
@@ -170,18 +238,41 @@ pub fn read_matrix_market(path: &Path) -> Result<Coo> {
                 })?;
                 dims = Some((r, c));
             }
-            Some(_) => {
+            Some((r, c)) => {
                 let s: u32 = it.next().and_then(|x| x.parse().ok()).ok_or_else(|| {
                     LpfError::Fatal("bad MatrixMarket entry".into())
                 })?;
                 let d: u32 = it.next().and_then(|x| x.parse().ok()).ok_or_else(|| {
                     LpfError::Fatal("bad MatrixMarket entry".into())
                 })?;
-                edges.push((s - 1, d - 1));
+                if s == 0 || d == 0 || s as usize > r || d as usize > c {
+                    return Err(LpfError::Illegal(format!(
+                        "MatrixMarket entry ({s}, {d}) outside 1-based {r}x{c} bounds"
+                    )));
+                }
+                if s == d {
+                    // self-loop: drop, but remember the row so a loop-only
+                    // row can be rejected instead of silently going dangling
+                    loop_rows.push(s - 1);
+                } else {
+                    edges.push((s - 1, d - 1));
+                }
             }
         }
     }
     let (r, c) = dims.ok_or_else(|| LpfError::Fatal("MatrixMarket file has no size line".into()))?;
+    edges.sort_unstable();
+    edges.dedup();
+    for &v in &loop_rows {
+        let i = edges.partition_point(|&(s, _)| s < v);
+        let has_real_out = i < edges.len() && edges[i].0 == v;
+        if !has_real_out {
+            return Err(LpfError::Illegal(format!(
+                "vertex {} has only self-loop entries (degenerate row)",
+                v + 1
+            )));
+        }
+    }
     Ok(Coo { n: r.max(c), edges })
 }
 
@@ -246,6 +337,81 @@ mod tests {
         let path = std::env::temp_dir().join("lpf_mm_bad.mtx");
         std::fs::write(&path, "hello\n1 2 3\n").unwrap();
         assert!(read_matrix_market(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn streaming_edges_match_batch_rmat() {
+        let cfg = RmatConfig::new(9, 8, 11);
+        let mut streamed: Vec<(u32, u32)> = rmat_edges(&cfg).collect();
+        streamed.sort_unstable();
+        streamed.dedup();
+        let mut batch = rmat(&cfg).edges;
+        batch.sort_unstable();
+        assert_eq!(streamed, batch, "stream is rmat() before dedup+shuffle");
+        // degrees from the stream count the multigraph, so they dominate
+        // the deduplicated Coo degrees and sum to the stream length
+        let (degs, m) = rmat_degrees(&cfg);
+        assert_eq!(degs.iter().map(|&d| d as usize).sum::<usize>(), m);
+        let coo_degs = rmat(&cfg).out_degrees();
+        for v in 0..degs.len() {
+            assert!(degs[v] >= coo_degs[v]);
+        }
+    }
+
+    #[test]
+    fn streaming_iterator_restarts_on_clone() {
+        let cfg = RmatConfig::new(8, 4, 5);
+        let it = rmat_edges(&cfg);
+        let a: Vec<_> = it.clone().collect();
+        let b: Vec<_> = it.collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reader_dedups_and_drops_self_loops() {
+        let path = std::env::temp_dir().join("lpf_mm_dups.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate pattern general\n3 3 5\n1 2\n1 2\n2 2\n2 3\n3 1\n",
+        )
+        .unwrap();
+        let g = read_matrix_market(&path).unwrap();
+        let mut e = g.edges.clone();
+        e.sort_unstable();
+        assert_eq!(e, vec![(0, 1), (1, 2), (2, 0)]);
+        assert_eq!(g.out_degrees(), vec![1, 1, 1], "dups and loops not counted");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn reader_rejects_self_loop_only_row() {
+        let path = std::env::temp_dir().join("lpf_mm_loop_only.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate pattern general\n3 3 3\n1 2\n2 2\n3 1\n",
+        )
+        .unwrap();
+        let err = read_matrix_market(&path).unwrap_err();
+        assert!(matches!(err, LpfError::Illegal(_)), "got {err:?}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn reader_rejects_out_of_range_indices() {
+        let path = std::env::temp_dir().join("lpf_mm_oob.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate pattern general\n3 3 1\n0 2\n",
+        )
+        .unwrap();
+        assert!(matches!(read_matrix_market(&path).unwrap_err(), LpfError::Illegal(_)));
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate pattern general\n3 3 1\n1 4\n",
+        )
+        .unwrap();
+        assert!(matches!(read_matrix_market(&path).unwrap_err(), LpfError::Illegal(_)));
         std::fs::remove_file(path).ok();
     }
 }

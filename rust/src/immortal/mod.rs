@@ -14,7 +14,9 @@
 //!   `⌈log₂ n⌉` supersteps of `h = n/p` gets.
 
 pub mod list_rank;
+pub mod pool;
 pub mod sort;
 
 pub use list_rank::list_rank;
+pub use pool::{pool_list_rank, pool_sample_sort};
 pub use sort::sample_sort;

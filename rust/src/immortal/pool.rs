@@ -1,0 +1,61 @@
+//! The immortal suite on warm pools.
+//!
+//! `sample_sort` and `list_rank` are collective SPMD functions over a raw
+//! [`Context`]; these wrappers bind them to a persistent [`Pool`] — the
+//! workers, fabrics, arenas, and barrier calibration are reused across
+//! calls, so repeated invocations (the "immortal algorithm as a service"
+//! shape) pay no spawn or registration-arena cost after the first. Each
+//! wrapper owns the capacity bootstrap its algorithm documents.
+
+use crate::core::{LpfError, Result, SYNC_DEFAULT};
+use crate::pool::Pool;
+
+use super::list_rank::list_rank;
+use super::sort::sample_sort;
+
+/// Distributed sample sort on a warm pool: `inputs[pid]` is process
+/// `pid`'s (arbitrary-length, possibly empty) key slice; returns the
+/// sorted partition per pid (concatenation is the global sorted order).
+pub fn pool_sample_sort(pool: &Pool, inputs: &[Vec<u64>]) -> Result<Vec<Vec<u64>>> {
+    let p = pool.p() as usize;
+    if inputs.len() != p {
+        return Err(LpfError::Illegal(format!(
+            "{} input slices for a pool of p = {p}",
+            inputs.len()
+        )));
+    }
+    let outs = pool.exec(
+        |ctx, _| -> Result<Vec<u64>> {
+            ctx.bootstrap(8, 8 * ctx.p() as usize + 8)?;
+            sample_sort(ctx, &inputs[ctx.pid() as usize])
+        },
+        crate::core::Args::none(),
+    )?;
+    outs.into_iter().collect()
+}
+
+/// Distributed list ranking on a warm pool: `succ` is the full successor
+/// array (global ids, [`super::list_rank::NIL`] terminates); returns every
+/// node's distance to the tail. Blocks are dealt `⌈n/p⌉` per process.
+pub fn pool_list_rank(pool: &Pool, succ: &[u64]) -> Result<Vec<u64>> {
+    let n = succ.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let p = pool.p() as usize;
+    let b = n.div_ceil(p);
+    let outs = pool.exec(
+        |ctx, _| -> Result<Vec<u64>> {
+            ctx.resize_memory_register(8)?;
+            ctx.resize_message_queue(4 * b + 8)?;
+            ctx.sync(SYNC_DEFAULT)?;
+            let me = ctx.pid() as usize;
+            let lo = (me * b).min(n);
+            let hi = ((me + 1) * b).min(n);
+            list_rank(ctx, n, &succ[lo..hi])
+        },
+        crate::core::Args::none(),
+    )?;
+    let outs: Vec<Vec<u64>> = outs.into_iter().collect::<Result<_>>()?;
+    Ok(outs.into_iter().flatten().collect())
+}

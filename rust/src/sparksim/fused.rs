@@ -1,0 +1,204 @@
+//! Superstep lowering for RDD pipelines: run a fused narrow chain plus one
+//! wide op (map → shuffle → reduceByKey) as a **single superstep plan** on
+//! a warm LPF [`Pool`], instead of materialising a hash shuffle per stage.
+//!
+//! The staged engine ([`super::rdd`]) clones every record through map-side
+//! bucket vectors, a driver-held shuffle table, and reduce-side tasks. The
+//! lowered plan follows the group-communication-patterns observation
+//! (shuffle-shaped exchanges belong on structured collectives): each pool
+//! process computes its partitions through the narrow lineage, **combines
+//! map-side** (the optimisation the staged path lacks), and routes the
+//! combined records in **one coalesced total-exchange** — the same
+//! sizes-alltoall + put-at-prefix-offset plan as the immortal sample sort —
+//! before a final local merge. One superstep of payload traffic per
+//! pipeline, `SparkStats::fused_*` counters make the collapse observable.
+//!
+//! Keys/values travel as parallel `u64`/`f64` Pod arrays (tuples are not
+//! Pod). Values merge with a caller-supplied associative op; merge order
+//! within a key is unspecified (both engines share this property — use
+//! exactly-representable values when asserting equality).
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+
+use crate::collectives::Coll;
+use crate::core::{Args, Result, SYNC_DEFAULT};
+use crate::pool::Pool;
+
+use super::rdd::{fx_hash, Rdd};
+
+/// Lower `rdd.map(map).reduce_by_key(reduce).collect()` onto one pool-run
+/// superstep plan. Wide dependencies *upstream* of `rdd` are prepared
+/// through the staged engine first (the lowering fuses the final narrow
+/// chain + one wide op); the fused stage itself touches no shuffle
+/// machinery. Returns the reduced pairs (unordered).
+pub fn fused_map_reduce<T, M, R>(
+    rdd: &Rdd<T>,
+    pool: &Pool,
+    map: M,
+    reduce: R,
+) -> Result<Vec<(u64, f64)>>
+where
+    T: Clone + Send + Sync + 'static,
+    M: Fn(&T) -> (u64, f64) + Sync,
+    R: Fn(f64, f64) -> f64 + Sync,
+{
+    // upstream wide deps still run staged — the fusion boundary is the
+    // last narrow chain + the closing reduceByKey
+    rdd.node().prepare(rdd.spark());
+    let node = rdd.node().clone();
+    let nparts = node.parts();
+    let per_pid = pool.exec(
+        |ctx, _| -> Result<(Vec<(u64, f64)>, u64)> {
+            let p = ctx.p() as usize;
+            let me = ctx.pid() as usize;
+            ctx.bootstrap(8, 4 * p + 8)?;
+            // narrow chain, fused by lineage composition + map-side combine
+            let mut agg: HashMap<u64, f64> = HashMap::new();
+            let mut part = me;
+            while part < nparts {
+                for rec in node.compute(part) {
+                    let (k, v) = map(&rec);
+                    match agg.remove(&k) {
+                        Some(old) => agg.insert(k, reduce(old, v)),
+                        None => agg.insert(k, v),
+                    };
+                }
+                part += p;
+            }
+            // route combined records by key hash (same placement rule as
+            // the staged shuffle)
+            let mut buckets: Vec<Vec<(u64, f64)>> = vec![Vec::new(); p];
+            for (k, v) in agg {
+                buckets[(fx_hash(&k) as usize) % p].push((k, v));
+            }
+            let sizes: Vec<u64> = buckets.iter().map(|b| b.len() as u64).collect();
+            let sent: u64 = sizes.iter().sum::<u64>() - sizes[me];
+            let coll = Coll::new(ctx, 8 * p)?;
+            ctx.sync(SYNC_DEFAULT)?;
+            let mut size_matrix = vec![0u64; p * p]; // [sender][receiver]
+            coll.allgather(ctx, &sizes, &mut size_matrix)?;
+            let total_in: usize =
+                (0..p).map(|s| size_matrix[s * p + me] as usize).sum();
+            let total_out: usize = buckets.iter().map(|b| b.len()).sum();
+            // one coalesced total-exchange: keys + values side by side
+            let send_k = ctx.alloc_local::<u64>(total_out.max(1))?;
+            let send_v = ctx.alloc_local::<f64>(total_out.max(1))?;
+            let recv_k = ctx.alloc_global::<u64>(total_in.max(1))?;
+            let recv_v = ctx.alloc_global::<f64>(total_in.max(1))?;
+            ctx.sync(SYNC_DEFAULT)?;
+            let flat_k: Vec<u64> = buckets.iter().flatten().map(|&(k, _)| k).collect();
+            let flat_v: Vec<f64> = buckets.iter().flatten().map(|&(_, v)| v).collect();
+            ctx.write(send_k, 0, &flat_k)?;
+            ctx.write(send_v, 0, &flat_v)?;
+            ctx.superstep(|ep| {
+                let mut my_off = 0usize;
+                for (dst, b) in buckets.iter().enumerate() {
+                    if !b.is_empty() {
+                        let dst_off: usize = (0..me)
+                            .map(|s| size_matrix[s * p + dst] as usize)
+                            .sum();
+                        // local bucket routes as a self-put: one uniform plan
+                        ep.put_slice(send_k, my_off, dst as u32, recv_k, dst_off, b.len())?;
+                        ep.put_slice(send_v, my_off, dst as u32, recv_v, dst_off, b.len())?;
+                        my_off += b.len();
+                    }
+                }
+                Ok(())
+            })?;
+            let mut keys = vec![0u64; total_in];
+            let mut vals = vec![0f64; total_in];
+            ctx.read(recv_k, 0, &mut keys)?;
+            ctx.read(recv_v, 0, &mut vals)?;
+            let mut merged: HashMap<u64, f64> = HashMap::with_capacity(total_in);
+            for (k, v) in keys.into_iter().zip(vals) {
+                match merged.remove(&k) {
+                    Some(old) => merged.insert(k, reduce(old, v)),
+                    None => merged.insert(k, v),
+                };
+            }
+            ctx.dealloc(send_k)?;
+            ctx.dealloc(send_v)?;
+            ctx.dealloc(recv_k)?;
+            ctx.dealloc(recv_v)?;
+            coll.free(ctx)?;
+            ctx.sync(SYNC_DEFAULT)?;
+            Ok((merged.into_iter().collect(), sent))
+        },
+        Args::none(),
+    )?;
+    let stats = rdd.spark().stats();
+    stats.fused_stages.fetch_add(1, Ordering::Relaxed);
+    let mut out = Vec::new();
+    for r in per_pid {
+        let (pairs, sent) = r?;
+        stats.fused_exchange_records.fetch_add(sent, Ordering::Relaxed);
+        out.extend(pairs);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ctx::Platform;
+    use crate::sparksim::Spark;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn fused_matches_staged_reduce_by_key() {
+        let sc = Spark::new(4, 8);
+        let pool = Pool::new(Platform::shared().checked(true), 4);
+        let mut rng = XorShift64::new(42);
+        let data: Vec<u64> = (0..20_000).map(|_| rng.below(512)).collect();
+        let rdd = sc.parallelize(data, 16).map(|&x| x);
+        // staged: materialised hash shuffle
+        let mut staged = rdd
+            .map(|&x| (x % 97, (x / 7) as f64))
+            .reduce_by_key(|a, b| a + b)
+            .collect();
+        staged.sort_by_key(|&(k, _)| k);
+        let shuffles_after_staged = sc.stats().shuffles.load(Ordering::Relaxed);
+        // fused: one superstep plan (values are integral f64 → + is exact
+        // in any merge order)
+        let mut fused =
+            fused_map_reduce(&rdd, &pool, |&x| (x % 97, (x / 7) as f64), |a, b| a + b).unwrap();
+        fused.sort_by_key(|&(k, _)| k);
+        assert_eq!(staged, fused);
+        // the fused path never touched the shuffle machinery
+        assert_eq!(sc.stats().shuffles.load(Ordering::Relaxed), shuffles_after_staged);
+        assert_eq!(sc.stats().fused_stages.load(Ordering::Relaxed), 1);
+        assert!(sc.stats().fused_exchange_records.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn fused_handles_empty_and_tiny_inputs() {
+        let sc = Spark::new(2, 4);
+        let pool = Pool::new(Platform::shared().checked(true), 2);
+        let empty = sc.parallelize(Vec::<u64>::new(), 4);
+        let out = fused_map_reduce(&empty, &pool, |&x| (x, 1.0), |a, b| a + b).unwrap();
+        assert!(out.is_empty());
+        let tiny = sc.parallelize(vec![5u64], 4);
+        let out = fused_map_reduce(&tiny, &pool, |&x| (x, 2.0), |a, b| a + b).unwrap();
+        assert_eq!(out, vec![(5, 2.0)]);
+    }
+
+    #[test]
+    fn fused_runs_after_upstream_wide_dep() {
+        // upstream reduceByKey runs staged; the fused stage consumes it
+        let sc = Spark::new(3, 6);
+        let pool = Pool::new(Platform::shared().checked(true), 3);
+        let pairs: Vec<(u64, u64)> = (0..3000).map(|i| (i % 50, 1u64)).collect();
+        let upstream = sc.parallelize(pairs, 6).reduce_by_key(|a, b| a + b);
+        let got = fused_map_reduce(
+            &upstream,
+            &pool,
+            |&(k, c)| (k % 5, c as f64),
+            |a, b| a + b,
+        )
+        .unwrap();
+        let total: f64 = got.iter().map(|&(_, v)| v).sum();
+        assert_eq!(total, 3000.0);
+        assert_eq!(got.len(), 5);
+    }
+}

@@ -16,9 +16,11 @@
 //!   processes that the interop experiment "repurposes as LPF processes"
 //!   via `hook` (paper §4.3 / §5 vs. Alchemist).
 
+pub mod fused;
 pub mod pagerank;
 pub mod rdd;
 
+pub use fused::fused_map_reduce;
 pub use rdd::{Rdd, Spark};
 
 use std::sync::mpsc::{channel, Sender};

@@ -23,6 +23,13 @@ pub struct SparkStats {
     pub tasks: AtomicU64,
     /// Checkpoints taken.
     pub checkpoints: AtomicU64,
+    /// Superstep-lowered fused stages executed ([`super::fused`]): whole
+    /// map → shuffle → reduceByKey pipelines that ran as one pool job
+    /// instead of materialised stages.
+    pub fused_stages: AtomicU64,
+    /// Records that crossed the fused path's one coalesced total-exchange
+    /// (post map-side combine — compare against `shuffle_records`).
+    pub fused_exchange_records: AtomicU64,
 }
 
 /// The driver handle.
@@ -61,10 +68,11 @@ impl Spark {
         parts: usize,
     ) -> Rdd<T> {
         let parts = parts.max(1);
-        let chunk = data.len().div_ceil(parts);
-        let partitions: Vec<Vec<T>> = (0..parts)
-            .map(|i| data.iter().skip(i * chunk).take(chunk).cloned().collect())
-            .collect();
+        // one-pass slicing: the old `skip(i·chunk).take(chunk)` per
+        // partition walked the prefix again for every partition — O(n·parts)
+        let chunk = data.len().div_ceil(parts).max(1);
+        let mut partitions: Vec<Vec<T>> = data.chunks(chunk).map(|c| c.to_vec()).collect();
+        partitions.resize_with(parts, Vec::new);
         Rdd {
             spark: self.clone(),
             node: Arc::new(Materialized { parts: Arc::new(partitions) }),
@@ -97,7 +105,19 @@ impl<T: Send + 'static> Clone for Rdd<T> {
     }
 }
 
-fn fx_hash<K: Hash>(k: &K) -> u64 {
+impl<T: Send + 'static> Rdd<T> {
+    /// Lineage root, for the fused superstep lowering ([`super::fused`]).
+    pub(crate) fn node(&self) -> &Arc<dyn RddNode<T>> {
+        &self.node
+    }
+
+    /// Owning driver handle.
+    pub(crate) fn spark(&self) -> &Spark {
+        &self.spark
+    }
+}
+
+pub(crate) fn fx_hash<K: Hash>(k: &K) -> u64 {
     // FxHash-style multiply hash via std DefaultHasher is fine here.
     let mut h = std::collections::hash_map::DefaultHasher::new();
     k.hash(&mut h);
@@ -477,6 +497,23 @@ mod tests {
         got.sort_unstable();
         want.sort_unstable();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallelize_slices_evenly_including_edge_cases() {
+        let sc = Spark::new(2, 4);
+        // round-trip order preserved partition by partition
+        let r = sc.parallelize((0..10u32).collect(), 4);
+        assert_eq!(r.num_partitions(), 4);
+        assert_eq!(r.collect(), (0..10u32).collect::<Vec<_>>());
+        // empty data still yields `parts` (empty) partitions
+        let e = sc.parallelize(Vec::<u32>::new(), 3);
+        assert_eq!(e.num_partitions(), 3);
+        assert_eq!(e.count(), 0);
+        // fewer elements than partitions
+        let s = sc.parallelize(vec![7u32], 5);
+        assert_eq!(s.num_partitions(), 5);
+        assert_eq!(s.collect(), vec![7]);
     }
 
     #[test]

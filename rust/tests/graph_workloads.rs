@@ -1,0 +1,209 @@
+//! Graphs at scale (ISSUE 9): end-to-end workloads pinning the tentpole's
+//! guarantees in `cargo test` (throughput gates run in CI via
+//! `bench_graph --smoke`):
+//!
+//! * **rank parity** — the pure-Spark PageRank and the LPF PageRank follow
+//!   the same trajectory on a dangling-patched R-MAT graph (the canonical
+//!   Spark formulation scales ranks by `n` and has no dangling handling,
+//!   so sinks are patched before comparing);
+//! * **2D ≡ 1D** — the grid SpMV's sequential pipeline reduce is
+//!   bit-identical to the 1-D row-block kernel and the serial oracle on
+//!   every backend of the sweep, flat and routed;
+//! * **fault adversary** — an injected abort mid-PageRank surfaces as a
+//!   clean error, cold-rebuilds the pool once, and the warm retry on the
+//!   same pool is bit-identical to a clean-pool run.
+
+use lpf::check::classify;
+use lpf::collectives::Coll;
+use lpf::core::{Args, Result, SYNC_DEFAULT};
+use lpf::ctx::{exec, Platform, Root};
+use lpf::graphblas::grid::{partition_grid, spmv_rows_1d, GridSpmv, Scheme};
+use lpf::graphblas::{partition, pool_pagerank_runs, Compute};
+use lpf::graphgen::{rmat, Coo, RmatConfig};
+use lpf::netsim::faults::{FaultPlan, FaultSpec};
+use lpf::pool::Pool;
+use lpf::sparksim::pagerank::{accelerated_pagerank, pure_spark_pagerank};
+use lpf::sparksim::Spark;
+use lpf::util::rng::XorShift64;
+
+/// Give every sink one out-edge so the canonical Spark formulation (no
+/// dangling handling) and the LPF PageRank share one trajectory.
+fn patch_dangling(g: &Coo) -> Coo {
+    let mut edges = g.edges.clone();
+    for (v, &d) in g.out_degrees().iter().enumerate() {
+        if d == 0 {
+            edges.push((v as u32, ((v + 1) % g.n) as u32));
+        }
+    }
+    Coo { n: g.n, edges }
+}
+
+#[test]
+fn spark_and_lpf_pagerank_agree_on_seeded_rmat() {
+    let g = patch_dangling(&rmat(&RmatConfig::new(8, 8, 99)));
+    assert_eq!(g.dangling_count(), 0);
+    let n = g.n;
+    let iters = 30u32;
+    let sc = Spark::new(4, 8);
+    let spark = pure_spark_pagerank(&sc, &g.edges, iters, 10);
+    // eps = 0 pins the LPF side to exactly `iters` iterations
+    let nnz_pad = (g.edges.len() + n).next_power_of_two();
+    let lpf = accelerated_pagerank(
+        &sc,
+        &g,
+        Compute::Native,
+        0.85,
+        0.0,
+        iters,
+        nnz_pad,
+        "t-parity",
+    )
+    .unwrap();
+    assert_eq!(lpf.iters, iters);
+    // every vertex has out-degree ≥ 1 after patching, so the Spark side
+    // ranks all n vertices
+    assert_eq!(spark.len(), n);
+    let mut spark_by_v = vec![0f64; n];
+    for (v, r) in spark {
+        spark_by_v[v as usize] = r;
+    }
+    // with zero dangling mass, spark_rank = n · lpf_rank exactly in real
+    // arithmetic; tolerance covers f64-vs-f32 roundoff over 30 iterations
+    for v in 0..n {
+        let want = spark_by_v[v];
+        let got = n as f64 * lpf.ranks[v] as f64;
+        assert!(
+            (want - got).abs() < 2e-3 * want.max(1.0),
+            "vertex {v}: spark {want} vs n·lpf {got}"
+        );
+    }
+}
+
+#[test]
+fn grid_spmv_bit_consistent_with_1d_across_backends_and_p() {
+    let g = rmat(&RmatConfig::new(7, 8, 5));
+    let n = g.n;
+    let mut rng = XorShift64::new(77);
+    let x: Vec<f32> = (0..n).map(|_| rng.unit_f64() as f32).collect();
+    // serial oracle: the 1-D Native kernel over the whole matrix
+    let pad = (g.edges.len() + n).next_power_of_two();
+    let serial = Compute::Native.spmv(&partition(&g, 1, pad).unwrap()[0], &x).unwrap();
+    for p in [4u32, 9] {
+        let q = (p as f64).sqrt() as u32;
+        let backends: [(&str, Platform); 3] = [
+            ("shared", Platform::shared()),
+            ("rdma", Platform::rdma()),
+            ("hybrid-fat", Platform::hybrid_fat_tree(q)),
+        ];
+        let gblocks = partition_grid(&g, q).unwrap();
+        let blocks1d = partition(&g, p, pad).unwrap();
+        for (name, plat) in backends {
+            let root = Root::new(plat.checked(true)).with_max_procs(p);
+            let outs = exec(
+                &root,
+                p,
+                |ctx, _| -> Result<(Vec<f32>, Vec<f32>)> {
+                    let me = ctx.pid() as usize;
+                    let pp = ctx.p() as usize;
+                    ctx.bootstrap(16, 8 * pp + 8)?;
+                    // grid auto-selection is topology-driven; this sweep
+                    // forces Grid{q} on the flat backends as well
+                    let scheme = Scheme::Grid { q };
+                    assert_eq!(scheme.label(), "grid-2d");
+                    let mut sp = GridSpmv::new(ctx, gblocks[me].clone())?;
+                    let coll = Coll::new(ctx, 4 * n)?;
+                    ctx.sync(SYNC_DEFAULT)?;
+                    // 2D path: diagonal (j, j) owns x block j and y block j
+                    let qq = q as usize;
+                    let diag = me / qq == me % qq;
+                    let (x_mine, mut y_grid) = if diag {
+                        let blk = &sp.block;
+                        (x[blk.col_begin..blk.col_end].to_vec(), vec![0f32; blk.rows_len()])
+                    } else {
+                        (Vec::new(), Vec::new())
+                    };
+                    sp.spmv(ctx, &x_mine, &mut y_grid)?;
+                    // 1-D path on the same context: row blocks + allgather
+                    let rows_per = n.div_ceil(pp);
+                    let (lo, hi) = ((me * rows_per).min(n), ((me + 1) * rows_per).min(n));
+                    let y_1d = spmv_rows_1d(ctx, &coll, &blocks1d[me], &x[lo..hi])?;
+                    sp.free(ctx)?;
+                    coll.free(ctx)?;
+                    ctx.sync(SYNC_DEFAULT)?;
+                    Ok((y_grid, y_1d))
+                },
+                Args::none(),
+            )
+            .unwrap();
+            let b = n.div_ceil(q as usize);
+            let mut y_grid_full = vec![0f32; n];
+            let mut y_1d_full = Vec::with_capacity(n);
+            for (me, out) in outs.into_iter().enumerate() {
+                let (yg, y1) = out.unwrap_or_else(|e| panic!("{name} p={p} pid {me}: {e:?}"));
+                let (gi, gj) = (me / q as usize, me % q as usize);
+                if gi == gj {
+                    y_grid_full[gi * b..gi * b + yg.len()].copy_from_slice(&yg);
+                } else {
+                    assert!(yg.is_empty());
+                }
+                y_1d_full.extend(y1);
+            }
+            y_1d_full.truncate(n);
+            for v in 0..n {
+                assert_eq!(
+                    y_grid_full[v].to_bits(),
+                    serial[v].to_bits(),
+                    "{name} p={p}: grid y[{v}] = {} vs serial {}",
+                    y_grid_full[v],
+                    serial[v]
+                );
+                assert_eq!(
+                    y_1d_full[v].to_bits(),
+                    serial[v].to_bits(),
+                    "{name} p={p}: 1-D y[{v}] = {} vs serial {}",
+                    y_1d_full[v],
+                    serial[v]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn abort_mid_pagerank_is_clean_and_warm_retry_is_bit_identical() {
+    let g = rmat(&RmatConfig::new(7, 8, 42));
+    let p = 4u32;
+    let pad = (g.edges.len() + g.n).next_power_of_two();
+    let blocks = partition(&g, p, pad).unwrap();
+    let runs = [(1e-6f32, 60u32)];
+    // clean reference on a fresh pool
+    let clean = pool_pagerank_runs(
+        &Pool::new(Platform::shared().checked(true), p),
+        &blocks,
+        0.85,
+        &runs,
+    )
+    .unwrap();
+    // inject an abort mid-iteration (fences 0–1 are setup; step 5 lands
+    // inside the warm loop)
+    let pool = Pool::new(Platform::shared().checked(true), p);
+    let plan = FaultPlan::one(FaultSpec::AbortAtSuperstep { pid: 1, step: 5 });
+    pool.set_fault_plan(Some(plan.clone()));
+    let err = pool_pagerank_runs(&pool, &blocks, 0.85, &runs).unwrap_err();
+    // pid 0 observes its peer's abort; the injected error lives on pid 1 —
+    // either way the failure is a clean, classified LpfError
+    let class = classify(&err);
+    assert!(
+        class == "peer-aborted" || class == "injected",
+        "unexpected class {class}: {err:?}"
+    );
+    assert_eq!(plan.injections(), 1, "the abort must have fired exactly once");
+    assert!(pool.stats().cold_resets >= 1, "failed job must cold-rebuild the team");
+    // warm retry on the same pool: the one-shot fault stays exhausted and
+    // the result is bit-identical to the clean-pool run
+    let retry = pool_pagerank_runs(&pool, &blocks, 0.85, &runs).unwrap();
+    assert_eq!(retry.len(), 1);
+    assert_eq!(retry[0].iters, clean[0].iters);
+    assert_eq!(retry[0].ranks, clean[0].ranks, "warm retry must be bit-identical");
+    assert_eq!(plan.injections(), 1, "one-shot fault must not re-fire");
+}

@@ -1,0 +1,93 @@
+//! Property tests for the immortal suite on warm pools (ISSUE 9): typed
+//! `pool_sample_sort` / `pool_list_rank` wrappers exercised over seeded
+//! random shapes — empty slices, skewed loads, duplicate-heavy keys —
+//! against serial oracles, with every round sharing one persistent pool
+//! so warm reuse (no cold rebuilds) is itself part of the property.
+
+use lpf::ctx::Platform;
+use lpf::immortal::list_rank::NIL;
+use lpf::immortal::sort::verify_sorted;
+use lpf::immortal::{pool_list_rank, pool_sample_sort};
+use lpf::pool::Pool;
+use lpf::util::rng::XorShift64;
+
+#[test]
+fn pool_sample_sort_random_shapes_property() {
+    let p = 4u32;
+    let pool = Pool::new(Platform::shared().checked(true), p);
+    let mut rng = XorShift64::new(0x50D7_50D7);
+    for round in 0..6usize {
+        // random per-pid lengths; every round forces one empty slice and
+        // one skewed slice carrying most of the data with heavy duplicates
+        let mut inputs: Vec<Vec<u64>> = (0..p)
+            .map(|_| {
+                let len = rng.below_usize(200);
+                (0..len).map(|_| rng.below(1 << 20)).collect()
+            })
+            .collect();
+        inputs[round % p as usize].clear();
+        inputs[(round + 1) % p as usize] = (0..2_000).map(|_| rng.below(64)).collect();
+        let all: Vec<u64> = inputs.iter().flatten().copied().collect();
+        let parts = pool_sample_sort(&pool, &inputs).unwrap();
+        assert_eq!(parts.len(), p as usize);
+        verify_sorted(&parts, &all).unwrap_or_else(|e| panic!("round {round}: {e:?}"));
+    }
+    assert_eq!(pool.stats().cold_resets, 0, "warm service must never rebuild");
+}
+
+#[test]
+fn pool_sample_sort_handles_all_empty_input() {
+    let pool = Pool::new(Platform::shared().checked(true), 3);
+    let empties: Vec<Vec<u64>> = vec![Vec::new(); 3];
+    let parts = pool_sample_sort(&pool, &empties).unwrap();
+    assert_eq!(parts.len(), 3);
+    assert!(parts.iter().all(|s| s.is_empty()));
+}
+
+#[test]
+fn pool_sample_sort_rejects_wrong_slice_count() {
+    let pool = Pool::new(Platform::shared().checked(true), 3);
+    let two: Vec<Vec<u64>> = vec![Vec::new(); 2];
+    assert!(pool_sample_sort(&pool, &two).is_err());
+}
+
+/// Serial oracle: a random chain over `n` nodes. Returns `(succ, rank)`
+/// where `rank[v]` is v's distance to the tail.
+fn random_chain(n: usize, rng: &mut XorShift64) -> (Vec<u64>, Vec<u64>) {
+    let mut order: Vec<u64> = (0..n as u64).collect();
+    rng.shuffle(&mut order);
+    let mut succ = vec![NIL; n];
+    let mut rank = vec![0u64; n];
+    for i in 0..n {
+        rank[order[i] as usize] = (n - 1 - i) as u64;
+        if i + 1 < n {
+            succ[order[i] as usize] = order[i + 1];
+        }
+    }
+    (succ, rank)
+}
+
+#[test]
+fn pool_list_rank_matches_oracle_across_sizes() {
+    // n spans: empty, single node, n < p, n ≁ p, power of two
+    let pool = Pool::new(Platform::shared().checked(true), 4);
+    let mut rng = XorShift64::new(0x11C4);
+    for n in [0usize, 1, 5, 37, 256] {
+        let (succ, want) = random_chain(n, &mut rng);
+        let got = pool_list_rank(&pool, &succ).unwrap();
+        assert_eq!(got, want, "n = {n}");
+    }
+    assert_eq!(pool.stats().cold_resets, 0, "warm service must never rebuild");
+}
+
+#[test]
+fn pool_list_rank_repeated_queries_are_deterministic() {
+    let pool = Pool::new(Platform::shared().checked(true), 3);
+    let mut rng = XorShift64::new(7);
+    let (succ, want) = random_chain(100, &mut rng);
+    let first = pool_list_rank(&pool, &succ).unwrap();
+    assert_eq!(first, want);
+    for _ in 0..3 {
+        assert_eq!(pool_list_rank(&pool, &succ).unwrap(), first);
+    }
+}
