@@ -4,9 +4,10 @@
 //! ([`lpf::check::differential`]): for each seed a deterministic fault is
 //! derived ([`lpf::netsim::faults::FaultPlan::from_seed`]) and the
 //! adversary workload runs on `{shared, rdma, msg, hybrid, hybrid-fat}
-//! × {cold, warm}` (the hybrids routed over the NUMA-pair and fat-tree
-//! topologies) against a fault-free reference. The sweep pins the
-//! paper's §3 guarantees adversarially:
+//! × {cold, warm} × {bulk, split} × {rdv, eager, auto}` (the hybrids
+//! routed over the NUMA-pair and fat-tree topologies; the last axis
+//! forces the protocol tier) against a fault-free reference. The sweep
+//! pins the paper's §3 guarantees adversarially:
 //!
 //! * **absorbed** (model-legal delay / reorder / late rendezvous) faults
 //!   leave destination memory and `SyncStats` bit-identical to the
@@ -53,10 +54,13 @@ fn report_json(r: &DiffReport, indent: &str) -> String {
     s.push_str(&format!("{indent}  \"cases\": [\n"));
     for (i, c) in r.cases.iter().enumerate() {
         s.push_str(&format!(
-            "{indent}    {{ \"backend\": \"{}\", \"mode\": \"{}\", \"class\": \"{}\", \
+            "{indent}    {{ \"backend\": \"{}\", \"mode\": \"{}\", \"sync\": \"{}\", \
+             \"protocol\": \"{}\", \"class\": \"{}\", \
              \"cold_resets\": {}, \"recovered\": {}, \"injections\": {} }}{}\n",
             c.backend,
             c.mode.name(),
+            c.sync.name(),
+            c.protocol,
             c.class(),
             c.cold_resets,
             c.recovered,
@@ -134,7 +138,7 @@ fn main() {
 
     // ---- BENCH_faults.json
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"bench_faults/v1\",\n");
+    s.push_str("{\n  \"schema\": \"bench_faults/v2\",\n");
     s.push_str(&format!("  \"p\": {p},\n  \"workload_seed\": {WORKLOAD_SEED},\n"));
     s.push_str(&format!("  \"seeds\": {n_seeds},\n"));
     s.push_str(&format!("  \"elapsed_ms\": {},\n", t0.elapsed().as_millis()));

@@ -346,12 +346,12 @@ fn bench_overlap(
                     fft.run_into(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
                 }
                 let sim1 = bsp.lpf().sim_time_ns().unwrap();
-                let hid0 = bsp.lpf().stats().overlap_ns;
+                let hid0 = bsp.lpf().stats().diag.overlap_ns;
                 for _ in 0..reps {
                     fft.run_into_overlapped(&mut bsp, &re, &im, &mut o_re, &mut o_im).unwrap();
                 }
                 let sim2 = bsp.lpf().sim_time_ns().unwrap();
-                let hid1 = bsp.lpf().stats().overlap_ns;
+                let hid1 = bsp.lpf().stats().diag.overlap_ns;
                 std::hint::black_box((&o_re, &o_im));
                 bsp.end().unwrap();
                 let r = reps as f64;

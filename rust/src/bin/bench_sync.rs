@@ -14,13 +14,23 @@
 //! `(g, ℓ)` fits on the hybrid topology (`level_fits`) and the
 //! two-level-vs-flat allreduce comparison (`two_level_allreduce`).
 //!
+//! Schema v5 adds the `protocol_tiers` section (ISSUE 10): per-tier
+//! `T(b)` fits of the same h-relation forced eager and forced
+//! rendezvous on netsim-rdma, the measured crossover versus the
+//! probe-predicted one ([`fitted_protocol`]), and the registration-cache
+//! hit rate of a warm repeat-read loop; the `alloc_check` now runs under
+//! both forced tier policies.
+//!
 //! `--smoke` runs a reduced sweep (CI) and additionally asserts the
 //! engine's zero-allocation guarantee — after warmup, a window of
 //! steady-state shared-backend supersteps must perform **zero** heap
-//! allocations, counted by a global allocator wrapper — and the
-//! hierarchical-collectives gate: the model-priced two-level allreduce
-//! must beat the flat Bruck baseline by ≥ 1.3× on the FatTree cluster at
-//! p = 8. A violation exits non-zero and fails the CI job.
+//! allocations under both forced tier policies, counted by a global
+//! allocator wrapper — the hierarchical-collectives gate (the
+//! model-priced two-level allreduce must beat the flat Bruck baseline by
+//! ≥ 1.3× on the FatTree cluster at p = 8), and the protocol-tier gates:
+//! eager must beat rendezvous below the fitted crossover and lose above
+//! it, and the warm repeat-read loop must hit the registration cache
+//! ≥ 90% of the time. A violation exits non-zero and fails the CI job.
 //!
 //! Usage: `bench_sync [--smoke] [--out PATH]`
 
@@ -32,10 +42,10 @@ use lpf::collectives::{Coll, CollPolicy};
 use lpf::core::{Args, Pid, MSG_DEFAULT, SYNC_DEFAULT};
 use lpf::ctx::{exec, Platform, Root};
 use lpf::fabric::net::{DEFAULT_BRUCK_SEED, MetaAlgo, NetFabric, Topology};
-use lpf::probe::bench::{run_level_probe, ProbeConfig, ProbeRow};
+use lpf::probe::bench::{fitted_protocol, run_level_probe, ProbeConfig, ProbeRow};
 use lpf::probe::ProbeTable;
 use lpf::fabric::shared::SharedFabric;
-use lpf::fabric::Fabric;
+use lpf::fabric::{Fabric, ProtocolConfig, ProtocolTier};
 use lpf::memory::SlotStorage;
 use lpf::netsim::Personality;
 use lpf::pool::Pool;
@@ -150,9 +160,13 @@ fn time_supersteps(
 }
 
 /// Steady-state allocation count over `iters` supersteps on the shared
-/// backend (the engine's zero-allocation guarantee).
-fn count_steady_state_allocs(p: Pid, msgs: usize, bytes: usize, iters: u32) -> u64 {
+/// backend (the engine's zero-allocation guarantee), under an explicit
+/// protocol policy — the tier classification, tallying, and
+/// registration-cache paths all run per superstep and must stay off the
+/// heap once warm.
+fn count_steady_state_allocs(p: Pid, msgs: usize, bytes: usize, iters: u32, proto: ProtocolConfig) -> u64 {
     let fab = SharedFabric::new(p, false);
+    fab.set_protocol(proto);
     std::thread::scope(|s| {
         for pid in 0..p {
             let fab = fab.clone();
@@ -245,7 +259,7 @@ fn overlap_credit_per_step(
             });
         }
     });
-    fab.stats(0).overlap_ns as f64 / iters as f64
+    fab.stats(0).diag.overlap_ns as f64 / iters as f64
 }
 
 /// Sweep compute widths against one h-relation per netsim backend: the
@@ -429,7 +443,7 @@ fn run_case(
         simulated = fab.sim_time_ns(0).is_some();
         topology = fab.topology().name;
         let s = time_supersteps(fab.clone(), p, msgs, bytes, warmup, iters);
-        peak_link_bytes = peak_link_bytes.max(fab.stats(0).peak_link_bytes);
+        peak_link_bytes = peak_link_bytes.max(fab.stats(0).diag.peak_link_bytes);
         let h = ((p - 1) as usize * msgs * bytes) as f64;
         points.push((h, s.mean(), s.ci95()));
     }
@@ -508,26 +522,144 @@ fn measure_two_level_allreduce(p: Pid, elems: usize) -> TwoLevelGate {
     }
 }
 
+// ------------------------------------------------------------ protocol tiers
+
+/// One point of the per-tier sweep: the same 1-descriptor-per-peer
+/// h-relation, timed under both forced protocol policies on the
+/// deterministic netsim clock.
+struct TierPoint {
+    /// Payload bytes per descriptor.
+    bytes: usize,
+    eager_ns: f64,
+    rdv_ns: f64,
+}
+
+/// The `protocol_tiers` artifact section (schema v5): measured per-tier
+/// `T(b)`, the crossover the probe predicts vs the one the sweep
+/// observes, and the registration-cache hit rate of a warm repeat-read
+/// loop.
+struct TierSection {
+    backend: &'static str,
+    p: Pid,
+    /// Probe-predicted eager/rendezvous crossover (bytes per descriptor),
+    /// from [`fitted_protocol`]'s measured `(g, ℓ)` per tier.
+    predicted_crossover: u64,
+    /// Smallest swept size where the rendezvous run is no slower.
+    measured_crossover: Option<usize>,
+    points: Vec<TierPoint>,
+    /// Affine fits of the sweep itself, per tier (ns/byte, ns).
+    eager_g: f64,
+    eager_l: f64,
+    rdv_g: f64,
+    rdv_l: f64,
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_hit_rate: f64,
+}
+
+fn measure_protocol_tiers(p: Pid, sizes: &[usize], warmup: u32, iters: u32) -> TierSection {
+    let backend = "rdma";
+    let time_tier = |bytes: usize, tier: ProtocolTier| -> f64 {
+        let fab = backend_fabric(backend, p, true);
+        fab.set_protocol(ProtocolConfig::forced(tier));
+        time_supersteps(fab, p, 1, bytes, warmup, iters).mean()
+    };
+    let points: Vec<TierPoint> = sizes
+        .iter()
+        .map(|&b| TierPoint {
+            bytes: b,
+            eager_ns: time_tier(b, ProtocolTier::Eager),
+            rdv_ns: time_tier(b, ProtocolTier::Rendezvous),
+        })
+        .collect();
+    let measured_crossover =
+        points.iter().find(|pt| pt.rdv_ns <= pt.eager_ns).map(|pt| pt.bytes);
+    // what the probe would install: fitted, not magic
+    let probe_cfg =
+        ProbeConfig { p, word_sizes: vec![8], max_bytes: 1 << 16, reps: 1, samples: 1 };
+    let fitted = fitted_protocol(&Platform::rdma(), &probe_cfg, &Arc::new(ProbeTable::default()))
+        .expect("tier probe");
+    let xs: Vec<f64> = points.iter().map(|pt| pt.bytes as f64).collect();
+    let eager_ys: Vec<f64> = points.iter().map(|pt| pt.eager_ns).collect();
+    let rdv_ys: Vec<f64> = points.iter().map(|pt| pt.rdv_ns).collect();
+    let (eager_g, eager_l) = fit_affine(&xs, &eager_ys);
+    let (rdv_g, rdv_l) = fit_affine(&xs, &rdv_ys);
+    // warm repeat-read loop: the same slots put every superstep; after the
+    // first touch every remote-region validation must come from the cache
+    let fab = backend_fabric(backend, p, true);
+    time_supersteps(fab.clone(), p, 1, 64, 0, 50);
+    let d = fab.stats(0).diag;
+    let (hits, misses) = (d.reg_cache_hits, d.reg_cache_misses);
+    TierSection {
+        backend,
+        p,
+        predicted_crossover: fitted.eager_max_inter,
+        measured_crossover,
+        points,
+        eager_g,
+        eager_l,
+        rdv_g,
+        rdv_l,
+        cache_hits: hits,
+        cache_misses: misses,
+        cache_hit_rate: if hits + misses > 0 { hits as f64 / (hits + misses) as f64 } else { 0.0 },
+    }
+}
+
 // ---------------------------------------------------------------- output
 
 fn write_json(
     path: &str,
     cases: &[CaseResult],
-    alloc_check: Option<(u32, u64)>,
+    alloc_check: Option<(u32, u64, u64)>,
     dispatch: &DispatchSummary,
     overlap: &[OverlapCase],
     gate: &TwoLevelGate,
     level_fits: &[(String, Vec<ProbeRow>)],
     level_p: Pid,
+    tiers: &TierSection,
 ) {
     let mut s = String::new();
-    s.push_str("{\n  \"schema\": \"bench_sync/v4\",\n");
-    if let Some((steps, allocs)) = alloc_check {
+    s.push_str("{\n  \"schema\": \"bench_sync/v5\",\n");
+    if let Some((steps, rdv_allocs, eager_allocs)) = alloc_check {
         s.push_str(&format!(
             "  \"alloc_check\": {{ \"backend\": \"shared\", \"supersteps\": {steps}, \
-             \"allocations\": {allocs} }},\n"
+             \"allocations\": {{ \"rdv\": {rdv_allocs}, \"eager\": {eager_allocs} }} }},\n"
         ));
     }
+    s.push_str(&format!(
+        "  \"protocol_tiers\": {{ \"backend\": \"{}\", \"p\": {}, \
+         \"predicted_crossover_bytes\": {}, \"measured_crossover_bytes\": {},\n",
+        tiers.backend,
+        tiers.p,
+        tiers.predicted_crossover,
+        tiers.measured_crossover.map_or("null".to_string(), |b| b.to_string())
+    ));
+    s.push_str(&format!(
+        "    \"eager_fit\": {{ \"g_ns_per_byte\": {}, \"l_ns\": {} }}, \
+         \"rdv_fit\": {{ \"g_ns_per_byte\": {}, \"l_ns\": {} }},\n",
+        json_f64(tiers.eager_g),
+        json_f64(tiers.eager_l),
+        json_f64(tiers.rdv_g),
+        json_f64(tiers.rdv_l)
+    ));
+    s.push_str(&format!(
+        "    \"reg_cache\": {{ \"hits\": {}, \"misses\": {}, \"hit_rate\": {} }},\n",
+        tiers.cache_hits,
+        tiers.cache_misses,
+        json_f64(tiers.cache_hit_rate)
+    ));
+    s.push_str("    \"points\": [");
+    for (j, pt) in tiers.points.iter().enumerate() {
+        s.push_str(&format!(
+            "{}{{ \"bytes\": {}, \"eager_ns\": {}, \"rdv_ns\": {} }}",
+            if j > 0 { ", " } else { "" },
+            pt.bytes,
+            json_f64(pt.eager_ns),
+            json_f64(pt.rdv_ns)
+        ));
+    }
+    s.push_str("] },\n");
     s.push_str(&format!(
         "  \"two_level_allreduce\": {{ \"topology\": \"fat_tree\", \"p\": {}, \
          \"payload_bytes\": {}, \"flat_ns\": {}, \"two_level_ns\": {}, \"speedup\": {} }},\n",
@@ -658,9 +790,20 @@ fn main() {
 
     let alloc_check = if smoke {
         const STEPS: u32 = 100;
-        let allocs = count_steady_state_allocs(4, 8, 64, STEPS);
-        eprintln!("alloc check: {allocs} allocations over {STEPS} steady-state supersteps");
-        Some((STEPS, allocs))
+        let rdv = count_steady_state_allocs(
+            4,
+            8,
+            64,
+            STEPS,
+            ProtocolConfig::forced(ProtocolTier::Rendezvous),
+        );
+        let eager =
+            count_steady_state_allocs(4, 8, 64, STEPS, ProtocolConfig::forced(ProtocolTier::Eager));
+        eprintln!(
+            "alloc check: rdv {rdv} / eager {eager} allocations over {STEPS} \
+             steady-state supersteps"
+        );
+        Some((STEPS, rdv, eager))
     } else {
         None
     };
@@ -716,18 +859,44 @@ fn main() {
         );
     }
 
-    write_json(&out, &cases, alloc_check, &dispatch, &overlap, &gate, &level_fits, level_p);
+    // protocol tiers: T(b) per forced tier around the fitted crossover on
+    // the deterministic rdma wire (ibverbs: ~2.8 KB/descriptor at p=4)
+    let tier_sizes: &[usize] =
+        if smoke { &[64, 256, 1024, 8192, 32768] } else { &[16, 64, 256, 1024, 4096, 8192, 32768] };
+    let tiers = measure_protocol_tiers(4, tier_sizes, 3, 5);
+    eprintln!(
+        "protocol tiers (rdma p={}): predicted crossover {} B, measured {} B, \
+         reg-cache hit rate {:.0}%",
+        tiers.p,
+        tiers.predicted_crossover,
+        tiers.measured_crossover.map_or("none".to_string(), |b| b.to_string()),
+        tiers.cache_hit_rate * 100.0
+    );
+    for pt in &tiers.points {
+        eprintln!(
+            "  b={:>6}: eager {:>9.0} ns  rdv {:>9.0} ns  ({})",
+            pt.bytes,
+            pt.eager_ns,
+            pt.rdv_ns,
+            if pt.eager_ns < pt.rdv_ns { "eager wins" } else { "rdv wins" }
+        );
+    }
+
+    write_json(
+        &out, &cases, alloc_check, &dispatch, &overlap, &gate, &level_fits, level_p, &tiers,
+    );
     eprintln!("wrote {out}");
 
     let mut failed = false;
-    if let Some((_, allocs)) = alloc_check {
-        if allocs != 0 {
+    if let Some((_, rdv_allocs, eager_allocs)) = alloc_check {
+        if rdv_allocs != 0 || eager_allocs != 0 {
             eprintln!(
-                "FAIL: steady-state shared-backend supersteps allocated {allocs} times (expected 0)"
+                "FAIL: steady-state shared-backend supersteps allocated (rdv {rdv_allocs}, \
+                 eager {eager_allocs}; expected 0 on both tiers)"
             );
             failed = true;
         } else {
-            eprintln!("OK: steady state is allocation-free");
+            eprintln!("OK: steady state is allocation-free on both tiers");
         }
     }
     if smoke {
@@ -745,6 +914,59 @@ fn main() {
             eprintln!(
                 "OK: two-level allreduce beats flat Bruck {:.2}x on fat_tree p={}",
                 gate.speedup, gate.p
+            );
+        }
+        // protocol-tier gate: the fitted crossover must be real — eager
+        // strictly cheaper well below it, rendezvous no worse well above
+        // it (a 2x guard band keeps the gate off the fit's knife edge)
+        let pc = tiers.predicted_crossover;
+        if pc == 0 || pc == u64::MAX {
+            eprintln!("FAIL: fitted crossover {pc} is degenerate on netsim-rdma");
+            failed = true;
+        } else {
+            let below: Vec<_> =
+                tiers.points.iter().filter(|pt| (pt.bytes as u64) * 2 <= pc).collect();
+            let above: Vec<_> =
+                tiers.points.iter().filter(|pt| pt.bytes as u64 >= pc * 2).collect();
+            if below.is_empty() || above.is_empty() {
+                eprintln!("FAIL: tier sweep does not straddle the fitted crossover ({pc} B)");
+                failed = true;
+            } else if let Some(pt) = below.iter().find(|pt| pt.eager_ns >= pt.rdv_ns) {
+                eprintln!(
+                    "FAIL: eager ({:.0} ns) does not beat rendezvous ({:.0} ns) at {} B, \
+                     below the fitted crossover ({pc} B)",
+                    pt.eager_ns, pt.rdv_ns, pt.bytes
+                );
+                failed = true;
+            } else if let Some(pt) = above.iter().find(|pt| pt.rdv_ns > pt.eager_ns) {
+                eprintln!(
+                    "FAIL: rendezvous ({:.0} ns) loses to eager ({:.0} ns) at {} B, \
+                     above the fitted crossover ({pc} B)",
+                    pt.rdv_ns, pt.eager_ns, pt.bytes
+                );
+                failed = true;
+            } else {
+                eprintln!(
+                    "OK: eager wins below and rendezvous wins above the fitted \
+                     crossover ({pc} B) on netsim-rdma"
+                );
+            }
+        }
+        // registration-cache gate: a warm repeat-read loop must stop
+        // re-validating after the first touch
+        if tiers.cache_hit_rate < 0.9 {
+            eprintln!(
+                "FAIL: warm repeat-read loop hit the registration cache only {:.0}% \
+                 of the time (expected >= 90%; {} hits / {} misses)",
+                tiers.cache_hit_rate * 100.0,
+                tiers.cache_hits,
+                tiers.cache_misses
+            );
+            failed = true;
+        } else {
+            eprintln!(
+                "OK: registration cache served {:.0}% of warm repeat-read validations",
+                tiers.cache_hit_rate * 100.0
             );
         }
         // an ample compute window (2x the wire time) must hide nearly all

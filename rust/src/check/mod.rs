@@ -16,10 +16,14 @@
 //!   outcome, the pool's cold-rebuild count, and whether the team
 //!   recovered;
 //! * [`differential`] — the full matrix: `{shared, rdma, msg, hybrid,
-//!   hybrid-fat} × {cold, warm} × {bulk, split-phase}` against one
-//!   reference run (shared / cold / bulk) — the last two backends route
-//!   over the NumaPair and FatTree topologies, making topology a fourth
-//!   implicit axis — asserting
+//!   hybrid-fat} × {cold, warm} × {bulk, split-phase} × {rdv, eager,
+//!   auto}` against one reference run (shared / cold / bulk / default
+//!   protocol) — the last two backends route over the NumaPair and
+//!   FatTree topologies, making topology an implicit fifth axis, and the
+//!   protocol axis forces every descriptor onto the rendezvous tier, the
+//!   eager tier, and a mixed `Auto` split (256-byte crossover), pinning
+//!   the tentpole claim that tier choice is observationally invisible —
+//!   asserting
 //!   - absorbed (model-legal) faults are invisible: memory and stats
 //!     bit-identical to the unperturbed reference;
 //!   - reportable faults surface as a clean [`LpfError`] of the *same
@@ -34,7 +38,7 @@ use std::sync::Arc;
 
 use crate::core::{Args, LpfError, Pid, MSG_DEFAULT, SYNC_DEFAULT};
 use crate::ctx::{Context, Platform};
-use crate::fabric::SyncStats;
+use crate::fabric::{ProtocolConfig, ProtocolTier, SyncStats};
 use crate::netsim::faults::FaultPlan;
 use crate::pool::Pool;
 
@@ -74,6 +78,23 @@ pub fn all_backends() -> Vec<(&'static str, Platform)> {
         ("msg", Platform::msg().checked(true)),
         ("hybrid", Platform::hybrid(2).checked(true)),
         ("hybrid-fat", Platform::hybrid_fat_tree(2).checked(true)),
+    ]
+}
+
+/// The protocol axis of the differential matrix: every descriptor forced
+/// onto the rendezvous tier (the pre-tier behaviour, and what the default
+/// config selects), every descriptor forced eager, and `Auto` with a
+/// 16-byte crossover — chosen to genuinely split the adversary workload
+/// across both tiers (the 16-byte storm put, the coalesced 16-byte run
+/// and the 8-byte get ride eager; the 32-byte allgather puts stay
+/// rendezvous), so the mixed selection paths all execute in one case.
+/// Tier choice is a pricing/transport decision; none of these may change
+/// a single observed byte or semantic statistic.
+pub fn protocol_policies() -> Vec<(&'static str, ProtocolConfig)> {
+    vec![
+        ("rdv", ProtocolConfig::forced(ProtocolTier::Rendezvous)),
+        ("eager", ProtocolConfig::forced(ProtocolTier::Eager)),
+        ("auto", ProtocolConfig::auto(16, 16)),
     ]
 }
 
@@ -225,6 +246,9 @@ pub struct CaseOutcome {
     pub backend: &'static str,
     pub mode: ExecMode,
     pub sync: SyncMode,
+    /// Protocol-policy label (see [`protocol_policies`]); `"rdv"` for the
+    /// default config, which selects rendezvous for everything.
+    pub protocol: &'static str,
     /// Per-pid observations, or the job's first error in pid order.
     pub result: Result<Vec<Observation>, LpfError>,
     /// Cold rebuilds the measured job caused (0 clean, 1 after a fault).
@@ -259,7 +283,8 @@ pub fn run_case(
     run_case_in(backend, platform, p, seed, mode, SyncMode::Bulk, plan)
 }
 
-/// [`run_case`] with the superstep style as an explicit axis.
+/// [`run_case`] with the superstep style as an explicit axis; default
+/// protocol config (all-rendezvous).
 pub fn run_case_in(
     backend: &'static str,
     platform: &Platform,
@@ -269,7 +294,26 @@ pub fn run_case_in(
     sync: SyncMode,
     plan: Option<Arc<FaultPlan>>,
 ) -> CaseOutcome {
+    run_case_proto(backend, platform, p, seed, mode, sync, ("rdv", ProtocolConfig::default()), plan)
+}
+
+/// [`run_case_in`] with the protocol tier policy as an explicit axis. The
+/// config is installed on the pool (so it survives warm resets and is
+/// re-applied after fault-triggered cold rebuilds) before the warm-up job,
+/// making the entire measured job — including its bootstrap fences — run
+/// under the requested policy.
+pub fn run_case_proto(
+    backend: &'static str,
+    platform: &Platform,
+    p: Pid,
+    seed: u32,
+    mode: ExecMode,
+    sync: SyncMode,
+    proto: (&'static str, ProtocolConfig),
+    plan: Option<Arc<FaultPlan>>,
+) -> CaseOutcome {
     let pool = Pool::new(platform.clone(), p);
+    pool.set_protocol(proto.1);
     if mode == ExecMode::Warm {
         // a throwaway job, so the measured one rides a warm (job-reset)
         // team — the state the persistent executor serves in production
@@ -286,6 +330,7 @@ pub fn run_case_in(
         backend,
         mode,
         sync,
+        protocol: proto.0,
         result,
         cold_resets: after.cold_resets - before.cold_resets,
         recovered,
@@ -317,8 +362,10 @@ impl DiffReport {
 }
 
 /// Run the differential matrix: the adversary workload on every backend,
-/// cold and warm, **bulk and split-phase**, against a fault-free
-/// shared/cold/bulk reference, optionally under a fault derived from
+/// cold and warm, **bulk and split-phase**, **under every protocol
+/// policy** ([`protocol_policies`]: forced rendezvous, forced eager, and
+/// a mixed `Auto` split), against a fault-free shared/cold/bulk reference
+/// on the default protocol, optionally under a fault derived from
 /// `fault_seed` (a fresh plan instance per case, so the fault fires in
 /// each). Returns the full report; violations are collected, not
 /// panicked, so sweeps can report every failure.
@@ -348,16 +395,32 @@ pub fn differential(p: Pid, workload_seed: u32, fault_seed: Option<u64>) -> Diff
     for (name, platform) in &backends {
         for mode in [ExecMode::Cold, ExecMode::Warm] {
             for sync in [SyncMode::Bulk, SyncMode::Split] {
-                let plan = fault_seed.map(|s| FaultPlan::from_seed(s, p));
-                cases.push(run_case_in(*name, platform, p, workload_seed, mode, sync, plan));
+                for proto in protocol_policies() {
+                    let plan = fault_seed.map(|s| FaultPlan::from_seed(s, p));
+                    cases.push(run_case_proto(
+                        *name,
+                        platform,
+                        p,
+                        workload_seed,
+                        mode,
+                        sync,
+                        proto,
+                        plan,
+                    ));
+                }
             }
         }
     }
 
     if !ref_obs.is_empty() {
         for case in &cases {
-            let tag =
-                format!("{}/{}/{}", case.backend, case.mode.name(), case.sync.name());
+            let tag = format!(
+                "{}/{}/{}/{}",
+                case.backend,
+                case.mode.name(),
+                case.sync.name(),
+                case.protocol
+            );
             match absorbed {
                 // no fault, or a model-legal one: the run must succeed and
                 // match the reference bit for bit (memory AND stats)
@@ -419,7 +482,14 @@ pub fn differential(p: Pid, workload_seed: u32, fault_seed: Option<u64>) -> Diff
                 let detail: Vec<String> = cases
                     .iter()
                     .map(|c| {
-                        format!("{}/{}/{}={}", c.backend, c.mode.name(), c.sync.name(), c.class())
+                        format!(
+                            "{}/{}/{}/{}={}",
+                            c.backend,
+                            c.mode.name(),
+                            c.sync.name(),
+                            c.protocol,
+                            c.class()
+                        )
                     })
                     .collect();
                 violations.push(format!(
@@ -485,6 +555,40 @@ mod tests {
         ] {
             let got = run_case(name, &plat, 4, 9, ExecMode::Cold, None).result.unwrap();
             assert_eq!(got, want, "{name}: topology changed an observation");
+        }
+    }
+
+    /// The protocol axis in isolation (ISSUE 10 tentpole): forcing every
+    /// descriptor eager, forcing every descriptor rendezvous, and a mixed
+    /// `Auto` split must all produce memory and uniform stats
+    /// bit-identical to the default-config run — on a flat wire fabric
+    /// and across a routed topology, where eager payloads ride multi-hop
+    /// meta links. Tier choice moves bytes between phases and reprices
+    /// them (sim time, which `Observation` excludes); it never changes
+    /// what lands or how much is counted.
+    #[test]
+    fn protocol_axis_is_observationally_invisible() {
+        for (name, plat) in [
+            ("rdma", Platform::rdma().checked(true)),
+            ("hybrid-fat", Platform::hybrid_fat_tree(2).checked(true)),
+        ] {
+            let base = run_case(name, &plat, 4, 11, ExecMode::Cold, None);
+            let want = base.result.unwrap();
+            for proto in protocol_policies() {
+                let got = run_case_proto(
+                    name,
+                    &plat,
+                    4,
+                    11,
+                    ExecMode::Cold,
+                    SyncMode::Bulk,
+                    proto,
+                    None,
+                )
+                .result
+                .unwrap();
+                assert_eq!(got, want, "{name}/{}: protocol tier changed an observation", proto.0);
+            }
         }
     }
 

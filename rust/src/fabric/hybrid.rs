@@ -5,9 +5,22 @@
 //! fabric's [`crate::netsim::topology::RouteTable`] prices every message
 //! along its per-link sequence (intra links at shared-memory g/ℓ, node
 //! uplinks/downlinks at wire cost), and per-link byte counters feed the
-//! peak-utilisation report in `SyncStats`. The superstep pipeline is the
-//! shared engine's, [`crate::sync::engine::SyncEngine`].
+//! peak-utilisation report in
+//! [`SyncDiagnostics`](crate::fabric::SyncDiagnostics). The superstep
+//! pipeline is the shared engine's, [`crate::sync::engine::SyncEngine`].
 //! `g = O(q + log(p/q))`, `ℓ = O(log p)`.
+//!
+//! **Protocol-tier pricing (ISSUE 10).** Tier economics are per *route*
+//! here, not per fabric: an eager payload rides the meta exchange over
+//! the descriptor's full link sequence — every uplink, switch hop, and
+//! downlink records the inlined bytes, so eager traffic shows up in the
+//! per-link peaks exactly like data-phase traffic — while a rendezvous
+//! descriptor's 16-byte notice crosses those same links and its latency
+//! is the route's end-to-end `ℓ`. Intra-node routes therefore fit a
+//! different eager/rendezvous crossover than inter-node ones (cheap
+//! latency makes the handshake nearly free on-node), which is why
+//! [`ProtocolConfig`](crate::fabric::ProtocolConfig) carries separate
+//! `intra`/`inter` thresholds and `probe` fits them per topology level.
 
 use std::sync::Arc;
 

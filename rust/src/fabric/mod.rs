@@ -33,8 +33,16 @@
 //! line) assigns every ordered process pair a directed link sequence, each
 //! link with its own per-byte `g` and latency `ℓ`; messages are charged
 //! along their routes and per-link byte counters feed
-//! [`SyncStats::peak_link_bytes`]. The flat topology reproduces the old
-//! global-`(g, ℓ)` pricing bit-identically. See `docs/topology.md`.
+//! [`SyncDiagnostics::peak_link_bytes`]. The flat topology reproduces the
+//! old global-`(g, ℓ)` pricing bit-identically. See `docs/topology.md`.
+//!
+//! Since the size-tiered protocol refactor the netsim backends also split
+//! traffic into an **eager** tier (payload inlined into the phase-1 meta
+//! exchange) and a **rendezvous** tier (priced handshake + zero-copy data
+//! phase), selected per descriptor against probe-fitted crossover
+//! thresholds ([`ProtocolConfig`]). Tier choice is observationally
+//! invisible — same memory, same semantic stats — and shows up only in
+//! pricing and the [`SyncDiagnostics`] tier counters.
 //!
 //! This module defines the [`Fabric`] trait those backends implement, plus
 //! the wire-level descriptor types. Backends: [`shared`], [`msg`], [`rdma`],
@@ -54,6 +62,75 @@ use crate::memory::SharedRegister;
 use crate::netsim::faults::FaultPlan;
 use crate::queue::Request;
 
+/// Which transport protocol a wire descriptor's payload moves under.
+///
+/// The tier is a **pricing/transport decision, never a semantic one**: the
+/// differential matrix pins that memory and the semantic [`SyncStats`]
+/// fields are bit-identical whichever tier a descriptor lands in. Eager
+/// inlines the (pre-trim) payload into the phase-1 meta exchange, saving
+/// the rendezvous handshake and the explicit data round at the price of a
+/// receiver-side bounce copy; rendezvous keeps today's trim-notice /
+/// get-request handshake and a zero-copy post-trim data phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ProtocolTier {
+    /// Payload rides the meta exchange inline (small messages).
+    Eager,
+    /// Priced handshake + zero-copy data phase (large messages). The
+    /// default: a fabric with no protocol config behaves exactly like the
+    /// pre-tier code.
+    #[default]
+    Rendezvous,
+}
+
+/// Tier-selection override for ablation runs (`Auto` consults the fitted
+/// per-fabric crossover thresholds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProtocolPolicy {
+    /// Size-based selection against [`ProtocolConfig`] thresholds.
+    #[default]
+    Auto,
+    /// Every descriptor goes eager (ablation).
+    ForceEager,
+    /// Every descriptor goes rendezvous (ablation; also the effective
+    /// behaviour of `Auto` with zero thresholds — the default).
+    ForceRendezvous,
+}
+
+/// Per-fabric protocol-tier configuration. The thresholds are *fitted*,
+/// not magic: [`crate::probe::bench::fitted_protocol`] computes the
+/// eager/rendezvous crossover per topology level from measured `(g, ℓ)`
+/// and writes it here. The default (`Auto` with zero thresholds) selects
+/// rendezvous for every descriptor — bit-and-price-identical to the
+/// pre-tier fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ProtocolConfig {
+    pub policy: ProtocolPolicy,
+    /// Largest payload (bytes) sent eagerly on intra-node routes under
+    /// `Auto`; 0 disables the eager tier there.
+    pub eager_max_intra: u64,
+    /// Largest payload (bytes) sent eagerly on inter-node (wire) routes
+    /// under `Auto`; 0 disables the eager tier there.
+    pub eager_max_inter: u64,
+}
+
+impl ProtocolConfig {
+    /// Force every descriptor onto one tier (ablation sweeps).
+    pub fn forced(tier: ProtocolTier) -> ProtocolConfig {
+        ProtocolConfig {
+            policy: match tier {
+                ProtocolTier::Eager => ProtocolPolicy::ForceEager,
+                ProtocolTier::Rendezvous => ProtocolPolicy::ForceRendezvous,
+            },
+            ..ProtocolConfig::default()
+        }
+    }
+
+    /// `Auto` with explicit crossover thresholds.
+    pub fn auto(eager_max_intra: u64, eager_max_inter: u64) -> ProtocolConfig {
+        ProtocolConfig { policy: ProtocolPolicy::Auto, eager_max_intra, eager_max_inter }
+    }
+}
+
 /// A put descriptor on the wire (first meta-data exchange), in destination
 /// coordinates plus enough source information for the return trip.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -67,6 +144,10 @@ pub struct PutMeta {
     pub dst_off: usize,
     pub len: usize,
     pub attr: MsgAttr,
+    /// Transport tier the source classified this descriptor into at
+    /// queue-drain (both sides see the same value: it travels with the
+    /// descriptor, so source and destination never disagree).
+    pub tier: ProtocolTier,
 }
 
 /// A get descriptor routed to the *source* process (which will serve it by
@@ -86,6 +167,49 @@ pub struct GetMeta {
     pub dst_off: usize,
     pub len: usize,
     pub attr: MsgAttr,
+    /// Transport tier the requester classified this get into at
+    /// queue-drain; the server reads it off the routed descriptor.
+    pub tier: ProtocolTier,
+}
+
+/// Diagnostic counters that ride along with [`SyncStats`] but are
+/// **excluded from stats equality** by construction: everything in here
+/// is wall-clock-, topology-, or protocol-tier-dependent — the same
+/// h-relation legitimately produces different values across backends,
+/// wirings, and tier policies. The differential checker compares
+/// `SyncStats` (semantic fields only); new diagnostics land here, where
+/// they cannot accidentally break a bit-identity pin.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SyncDiagnostics {
+    /// Communication cost hidden behind compute by split-phase supersteps:
+    /// per `sync_begin`/`sync_end` pair, `min(compute window, data-phase
+    /// cost)` in ns. The data-phase cost is the simulated wire time on
+    /// netsim backends and zero on the real shared-memory backend (its
+    /// data phase runs inside `sync_end`), so this is a *credit* against
+    /// g·h, never an invented saving.
+    pub overlap_ns: u64,
+    /// Peak link utilisation: the max payload+descriptor bytes any single
+    /// directed link of the fabric's topology carried in one superstep
+    /// (job-wide max). Zero on the real shared-memory backend, which has
+    /// no modelled links.
+    pub peak_link_bytes: u64,
+    /// Wire descriptors this process sent on the eager tier (payload
+    /// inlined into the meta exchange).
+    pub eager_msgs: u64,
+    /// Pre-trim payload bytes this process inlined into meta exchanges.
+    pub eager_bytes: u64,
+    /// Rendezvous handshakes this process's outgoing descriptors commit
+    /// it to: each rendezvous-classified put or get costs exactly one
+    /// handshake message (a trim notice or a get-request). Counted
+    /// engine-side at classification, so every backend reports identical
+    /// values for identical workloads and policies.
+    pub rendezvous_handshakes: u64,
+    /// Remote-region validations the registration cache answered without
+    /// re-resolving the owner's register (per-job cumulative).
+    pub reg_cache_hits: u64,
+    /// Registration-cache misses: full resolves through the owner's
+    /// register (first touch, or after an invalidating mutation).
+    pub reg_cache_misses: u64,
 }
 
 /// Statistics the sync engine keeps per process, read by benches and
@@ -108,26 +232,28 @@ pub struct SyncStats {
     /// Bytes the destination-side CRCW resolution trimmed off this
     /// process's *incoming* writes — overlap bytes that never travel.
     pub bytes_trimmed: u64,
-    /// Communication cost hidden behind compute by split-phase supersteps:
-    /// per `sync_begin`/`sync_end` pair, `min(compute window, data-phase
-    /// cost)` in ns. The data-phase cost is the simulated wire time on
-    /// netsim backends and zero on the real shared-memory backend (its
-    /// data phase runs inside `sync_end`), so this is a *credit* against
-    /// g·h, never an invented saving.
-    pub overlap_ns: u64,
-    /// Peak link utilisation: the max payload+descriptor bytes any single
-    /// directed link of the fabric's topology carried in one superstep
-    /// (job-wide max). Zero on the real shared-memory backend, which has
-    /// no modelled links.
-    pub peak_link_bytes: u64,
+    /// Non-semantic diagnostics (overlap credit, link peaks, protocol-tier
+    /// counters, registration-cache counters). See [`SyncStats::diagnostics`].
+    pub diag: SyncDiagnostics,
 }
 
-/// `overlap_ns` is wall-clock-dependent (the compute window is measured
-/// with `Instant`) and `peak_link_bytes` is topology-dependent (the same
-/// h-relation loads a fat tree and a flat network differently), so both
-/// are excluded from equality: the differential checker compares stats
-/// across backends, topologies, and runs, and must stay bit-stable while
-/// still recording those reports.
+impl SyncStats {
+    /// The diagnostic sub-struct: every field that is deliberately outside
+    /// stats equality. Kept behind one accessor (and one struct) so the
+    /// boundary between "semantic, compared bit-for-bit by the differential
+    /// checker" and "diagnostic, backend/topology/tier-dependent" is a type
+    /// boundary, not an ad-hoc field list.
+    pub fn diagnostics(&self) -> &SyncDiagnostics {
+        &self.diag
+    }
+}
+
+/// Equality covers the **semantic** fields only — the uniform accounting
+/// every backend must agree on. Everything wall-clock-, topology-, or
+/// tier-dependent lives in [`SyncDiagnostics`] and is excluded wholesale:
+/// the differential checker compares stats across backends, topologies,
+/// tier policies, and runs, and must stay bit-stable while still recording
+/// those reports.
 impl PartialEq for SyncStats {
     fn eq(&self, other: &Self) -> bool {
         self.syncs == other.syncs
@@ -219,6 +345,20 @@ pub trait Fabric: Send + Sync {
     /// The installed fault-injection plan, if any.
     fn fault_plan(&self) -> Option<Arc<FaultPlan>>;
 
+    /// Install the protocol-tier configuration (policy + eager/rendezvous
+    /// crossover thresholds). Like the fault plan it survives warm job
+    /// resets; callers that rebuild a fabric re-install it (the pool
+    /// does). Default: ignored — a backend with one transport path (the
+    /// real shared-memory fabric) has no tier split to configure.
+    fn set_protocol(&self, _cfg: ProtocolConfig) {}
+
+    /// The active protocol-tier configuration. The default config selects
+    /// rendezvous for everything, which is also what backends without a
+    /// tier split effectively run.
+    fn protocol(&self) -> ProtocolConfig {
+        ProtocolConfig::default()
+    }
+
     /// Simulated time in ns for `pid`, if this fabric runs on the network
     /// simulator (`None` for the real shared-memory backend).
     fn sim_time_ns(&self, pid: Pid) -> Option<f64>;
@@ -267,6 +407,7 @@ pub fn split_requests(
                     dst_off: q.dst_off,
                     len: q.len,
                     attr: q.attr,
+                    tier: ProtocolTier::Rendezvous,
                 });
             }
             Request::Get(g) => {
@@ -283,6 +424,7 @@ pub fn split_requests(
                     dst_off: g.dst_off,
                     len: g.len,
                     attr: g.attr,
+                    tier: ProtocolTier::Rendezvous,
                 });
             }
         }

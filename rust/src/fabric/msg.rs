@@ -3,6 +3,18 @@
 //! meta-data exchange. `g = O(log p)`, `ℓ = O(log p)`. A parameterisation
 //! of [`NetFabric`] — the superstep pipeline itself is the shared engine's
 //! ([`crate::sync::engine::SyncEngine`]).
+//!
+//! **Protocol-tier pricing (ISSUE 10).** Eager payloads ride the meta
+//! exchange, and on this backend "the meta exchange" is the randomised
+//! Bruck schedule: the inlined bytes are priced as per-byte transit on
+//! the same source→destination route the descriptor takes (delivery
+//! stays direct in the simulation; the Bruck rounds shape latency, not
+//! the byte count), plus the receiver bounce copy at apply time.
+//! Rendezvous descriptors keep the two-sided shape the personality
+//! models — a 16-byte trim notice / 48-byte get request handshake with
+//! one conditional latency per superstep, then post-trim data — so the
+//! eager tier saves a full matching round on exactly the small messages
+//! where matching dominates.
 
 use std::sync::Arc;
 

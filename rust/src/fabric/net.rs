@@ -8,7 +8,7 @@
 //!   gets a directed link sequence, and every message is priced along its
 //!   route — `Σ g_link` per byte, `Σ ℓ_link` per dependent round — with
 //!   per-link byte counters feeding a per-superstep peak-link-demand
-//!   report (`SyncStats::peak_link_bytes`). The flat topology's one-link
+//!   report (`SyncDiagnostics::peak_link_bytes`). The flat topology's one-link
 //!   routes reproduce the old global-`(g, ℓ)` pricing bit-identically;
 //! * a [`MetaAlgo`] — direct all-to-all or randomised Bruck (Valiant
 //!   two-phase + Bruck index algorithm) for the first meta-data exchange;
@@ -26,14 +26,30 @@
 //! simulated clocks advance by the costs of the *operations actually
 //! executed* (messages posted, queue entries scanned, bytes copied), and
 //! max-combine at each barrier — the BSP composition rule.
+//!
+//! **Protocol tiers.** Each coalesced descriptor is classified at
+//! queue-drain into the **eager** tier — the full pre-trim payload is
+//! checksummed and rides the meta exchange inline, skipping the handshake
+//! round entirely; the receiver trims it against the winning segments and
+//! pays a bounce-copy per applied byte — or the **rendezvous** tier — the
+//! priced trim-notice/get-request handshake (16 B / 48 B plus a latency
+//! leg) that earns a zero-copy post-trim data phase. Selection is
+//! [`ProtocolConfig`]-driven (`Auto` thresholds fitted per topology level
+//! by `probe`, or forced for ablation); the default config selects
+//! rendezvous for everything, which is exactly the pre-tier code path.
+//! Tier choice is observationally invisible: destination memory and the
+//! semantic [`SyncStats`] fields are bit-identical across policies — only
+//! pricing and the [`SyncDiagnostics`](crate::fabric::SyncDiagnostics)
+//! counters move. The differential checker pins this along its protocol
+//! axis.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::barrier::{AutoBarrier, Barrier};
 use crate::core::{LpfError, Memslot, Pid, Result, SyncAttr};
 use crate::fabric::plan::Scratch;
-use crate::fabric::{Fabric, GetMeta, PutMeta, SyncStats};
+use crate::fabric::{Fabric, GetMeta, ProtocolConfig, ProtocolPolicy, ProtocolTier, PutMeta, SyncStats};
 use crate::memory::SharedRegister;
 #[cfg(test)]
 use crate::memory::SlotStorage;
@@ -120,6 +136,35 @@ struct DataMsg {
     key: (u32, u64),
 }
 
+/// An eager-tier payload: the FULL pre-trim byte range of one descriptor,
+/// inlined into the meta exchange (puts) or pushed unprompted by the
+/// serving side (gets), trimmed *receiver-side* against the winning
+/// segments. Carries a checksum validated before any byte becomes
+/// visible, plus the source address the receiver falls back to when the
+/// inline copy arrives corrupted (`CorruptEagerInline`).
+#[derive(Debug)]
+struct EagerMsg {
+    /// The classifying process's queue sequence number (unique per
+    /// source, shared across puts and gets).
+    seq: u32,
+    /// Refetch address at the sending process.
+    src_slot: Memslot,
+    src_off: usize,
+    /// FNV-1a of `bytes` at send time.
+    sum: u64,
+    bytes: Vec<u8>,
+}
+
+/// FNV-1a over an eager payload — the cheap integrity gate that keeps a
+/// corrupted inline copy from ever becoming visible.
+fn eager_sum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// An item travelling through the Bruck/Valiant meta router.
 #[derive(Debug, Clone)]
 enum MetaItem {
@@ -163,6 +208,17 @@ pub struct NetFabric {
     trim_mail: Vec<Mutex<Vec<TrimNotice>>>,
     getreq_mail: Vec<Mutex<Vec<GetReqWire>>>,
     data_mail: Vec<Mutex<Vec<DataMsg>>>,
+    eager_mail: Vec<Mutex<Vec<EagerMsg>>>,
+    /// Protocol-tier configuration ([`ProtocolConfig`]), stored as
+    /// atomics so the per-descriptor `tier_for` consult on the
+    /// queue-drain hot path is three relaxed loads, no lock. Policy
+    /// encoding: 0 = Auto, 1 = ForceEager, 2 = ForceRendezvous. The
+    /// defaults (Auto, 0, 0) select rendezvous for everything — the
+    /// pre-tier behaviour. Survives warm job resets, like the topology
+    /// it was fitted for.
+    proto_policy: AtomicU8,
+    proto_eager_max_intra: AtomicU64,
+    proto_eager_max_inter: AtomicU64,
     route_mail: Vec<Mutex<Vec<MetaItem>>>, // Bruck round buffers
     // per-process transport mechanics (executed for real)
     matchers: Vec<Mutex<MatchEngine>>,
@@ -210,6 +266,10 @@ impl NetFabric {
             trim_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
             getreq_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
             data_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
+            eager_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
+            proto_policy: AtomicU8::new(0),
+            proto_eager_max_intra: AtomicU64::new(0),
+            proto_eager_max_inter: AtomicU64::new(0),
             route_mail: (0..cells).map(|_| Mutex::new(Vec::new())).collect(),
             matchers: (0..p).map(|_| Mutex::new(MatchEngine::new())).collect(),
             pendings: (0..p).map(|_| Mutex::new(PendingOps::default())).collect(),
@@ -283,6 +343,19 @@ impl NetFabric {
             cost += scanned as f64 * pers.progress_scan_ns;
         }
         self.clocks.advance(pid, cost);
+        let slot = (self.supersteps[pid as usize].load(Ordering::Relaxed) & 1) as usize;
+        for &l in self.routes.route(pid, dst) {
+            self.link_bytes[slot][l as usize].fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Charge `pid` for `bytes` of eager payload riding an
+    /// already-posted meta descriptor to `dst`: pure per-byte transit
+    /// along the route (`Σ g_link`) plus the link recording — no post
+    /// cost and no progress mechanics, those were paid with the
+    /// descriptor the payload rides.
+    fn charge_ride_along(&self, pid: Pid, dst: Pid, bytes: u64) {
+        self.clocks.advance(pid, bytes as f64 * self.routes.g_ns_per_byte(pid, dst));
         let slot = (self.supersteps[pid as usize].load(Ordering::Relaxed) & 1) as usize;
         for &l in self.routes.route(pid, dst) {
             self.link_bytes[slot][l as usize].fetch_add(bytes, Ordering::Relaxed);
@@ -529,6 +602,35 @@ impl Exchange for NetFabric {
         self.checked
     }
 
+    fn tier_for(&self, src: Pid, dst: Pid, len: usize) -> ProtocolTier {
+        match self.proto_policy.load(Ordering::Relaxed) {
+            1 => {
+                // ForceEager; zero-length descriptors carry nothing worth
+                // inlining and stay on the rendezvous path everywhere
+                if len > 0 {
+                    ProtocolTier::Eager
+                } else {
+                    ProtocolTier::Rendezvous
+                }
+            }
+            2 => ProtocolTier::Rendezvous,
+            _ => {
+                let max = if self.topo.same_node(src, dst) {
+                    self.proto_eager_max_intra.load(Ordering::Relaxed)
+                } else {
+                    self.proto_eager_max_inter.load(Ordering::Relaxed)
+                };
+                // strict: len 0 and threshold 0 both select rendezvous,
+                // so the default config is exactly the pre-tier fabric
+                if (1..=max).contains(&(len as u64)) {
+                    ProtocolTier::Eager
+                } else {
+                    ProtocolTier::Rendezvous
+                }
+            }
+        }
+    }
+
     fn exchange_meta(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<()> {
         let step = self.supersteps[pid as usize].load(Ordering::Relaxed);
         let faults = engine.fault_plan();
@@ -555,6 +657,46 @@ impl Exchange for NetFabric {
                 self.barrier_combine(pid, false)?;
             }
         }
+        // ---- eager tier: the full pre-trim payload of every
+        // eager-classified put rides the meta exchange — no handshake, no
+        // data round. Priced as pure per-byte transit on the descriptor's
+        // route (the post was charged with the descriptor above). The
+        // receiver trims at apply time, so the payload stays invisible
+        // until the superstep's data phase regardless of how early it
+        // lands in the mailbox.
+        let eager_result: Result<()> = (|| {
+            let ob = engine.outbox(pid).read().expect("outbox poisoned");
+            for dst in 0..self.p {
+                for m in ob.puts_to(dst) {
+                    if m.tier != ProtocolTier::Eager {
+                        continue;
+                    }
+                    let st = s.reg_cache.resolve(pid, engine.register_of(pid), m.src_slot)?;
+                    if m.src_off + m.len > st.len() {
+                        return Err(LpfError::Illegal("put source out of bounds".into()));
+                    }
+                    // SAFETY: superstep discipline (source range unwritten).
+                    let bytes = unsafe { st.bytes()[m.src_off..m.src_off + m.len].to_vec() };
+                    if dst != pid {
+                        self.charge_ride_along(pid, dst, m.len as u64);
+                    }
+                    self.eager_mail[self.cell(pid, dst)].lock().unwrap().push(EagerMsg {
+                        seq: m.seq,
+                        src_slot: m.src_slot,
+                        src_off: m.src_off,
+                        sum: eager_sum(&bytes),
+                        bytes,
+                    });
+                }
+            }
+            Ok(())
+        })();
+        if let Err(e) = eager_result {
+            // an error here is past the phase-A barrier: abort peers so
+            // they fail at their next collective instead of hanging
+            self.abort_peers(pid);
+            return Err(e);
+        }
         if let Some(f) = &faults {
             // Injected slow wire: the meta exchange took longer. Pure
             // simulated time; the next barrier max-combines it.
@@ -575,33 +717,54 @@ impl Exchange for NetFabric {
     /// for delivery, i.e. the most the overlap credit may claim. The
     /// simulated clocks are NOT credited (bulk and split charge identical
     /// sim time), so split-phase stays observationally equivalent;
-    /// `SyncStats::overlap_ns` alone records the hidden cost.
+    /// `SyncDiagnostics::overlap_ns` alone records the hidden cost.
     fn exchange_data_begin(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
         let p = self.p;
         // ---- second meta-data exchange: trim notices to put sources,
         // trimmed get requests to servers; also my expected-arrival list
         // (persisted in the scratch arena: consumed by `exchange_data_end`
         // after control returned to the caller in between).
-        let Scratch { expected, segs, descs, incoming_puts, my_gets, put_count, .. } = s;
+        let Scratch {
+            expected, segs, descs, incoming_puts, my_gets, put_count, serve_gets, reg_cache, ..
+        } = s;
         expected.clear();
         // Priced in-flight cost: the per-byte transit of my non-self
         // arrivals (accumulated below) plus one wire latency — what a bulk
         // superstep spends waiting for delivery.
         let mut inflight = 0.0f64;
+        // Whether this process actually put a handshake on the wire: an
+        // all-eager (or all-self) superstep skips the handshake latency
+        // leg — the round the eager tier exists to save.
+        let mut sent_handshake = false;
         for seg in segs.iter() {
             let d = &descs[seg.desc];
             if (d.tag as usize) < *put_count {
                 let m = &incoming_puts[d.tag as usize];
+                if m.tier == ProtocolTier::Eager {
+                    // payload already arrived inline with the meta
+                    // exchange: no trim notice, nothing left in flight
+                    continue;
+                }
                 let notice = TrimNotice { seq: m.seq, src_delta: seg.src_delta, len: seg.len };
                 if m.src_pid != pid {
                     // self-puts take no wire round trip
                     self.charge_send(pid, m.src_pid, 16);
+                    sent_handshake = true;
                     inflight += seg.len as f64 * self.routes.g_ns_per_byte(m.src_pid, pid);
                 }
                 self.trim_mail[self.cell(pid, m.src_pid)].lock().unwrap().push(notice);
                 expected.push((m.src_pid, ((m.seq as u64) << 32) | seg.src_delta as u64));
             } else {
                 let g = &my_gets[d.tag as usize - *put_count];
+                if g.tier == ProtocolTier::Eager {
+                    // the server pushes the full pre-trim range unprompted
+                    // (phase C): no get-request handshake, but the bytes
+                    // are genuinely in flight during the data round
+                    if g.server != pid {
+                        inflight += seg.len as f64 * self.routes.g_ns_per_byte(g.server, pid);
+                    }
+                    continue;
+                }
                 let req = GetReqWire {
                     requester: pid,
                     seq: g.seq,
@@ -614,13 +777,19 @@ impl Exchange for NetFabric {
                 };
                 if g.server != pid {
                     self.charge_send(pid, g.server, 48);
+                    sent_handshake = true;
                     inflight += seg.len as f64 * self.routes.g_ns_per_byte(g.server, pid);
                 }
                 self.getreq_mail[self.cell(pid, g.server)].lock().unwrap().push(req);
                 expected.push((g.server, ((g.seq as u64) << 32) | seg.src_delta as u64));
             }
         }
-        self.clocks.advance(pid, self.personality.latency_ns);
+        // The handshake latency leg is paid only by processes that put a
+        // handshake on the wire; the barrier max-combine folds it into
+        // the superstep's critical path exactly when someone did.
+        if sent_handshake {
+            self.clocks.advance(pid, self.personality.latency_ns);
+        }
         self.barrier_combine(pid, false)?;
 
         // ---- phase C: data exchange (sources send)
@@ -640,7 +809,7 @@ impl Exchange for NetFabric {
                         return Err(LpfError::Fatal("trim notice for unknown put".into()));
                     };
                     let m = &mine[i];
-                    let st = engine.register_of(pid).resolve(m.src_slot)?;
+                    let st = reg_cache.resolve(pid, engine.register_of(pid), m.src_slot)?;
                     if m.src_off + n.src_delta + n.len > st.len() {
                         return Err(LpfError::Illegal("put source out of bounds".into()));
                     }
@@ -666,7 +835,7 @@ impl Exchange for NetFabric {
                     .drain(..)
                     .collect();
                 for g in reqs_in {
-                    let st = engine.register_of(pid).resolve(g.src_slot)?;
+                    let st = reg_cache.resolve(pid, engine.register_of(pid), g.src_slot)?;
                     if g.src_off + g.len > st.len() {
                         return Err(LpfError::Illegal("get source out of bounds".into()));
                     }
@@ -682,6 +851,30 @@ impl Exchange for NetFabric {
                         key: (pid, ((g.seq as u64) << 32) | g.delta as u64),
                     });
                 }
+            }
+            // serve the *eager* gets that read my memory: the full
+            // pre-trim range, pushed unprompted — no get-request arrived
+            // and none was needed; the requester trims receiver-side
+            for g in serve_gets.iter() {
+                if g.tier != ProtocolTier::Eager {
+                    continue;
+                }
+                let st = reg_cache.resolve(pid, engine.register_of(pid), g.src_slot)?;
+                if g.src_off + g.len > st.len() {
+                    return Err(LpfError::Illegal("get source out of bounds".into()));
+                }
+                // SAFETY: superstep discipline.
+                let bytes = unsafe { st.bytes()[g.src_off..g.src_off + g.len].to_vec() };
+                if g.requester != pid {
+                    self.charge_send(pid, g.requester, g.len as u64);
+                }
+                self.eager_mail[self.cell(pid, g.requester)].lock().unwrap().push(EagerMsg {
+                    seq: g.seq,
+                    src_slot: g.src_slot,
+                    src_off: g.src_off,
+                    sum: eager_sum(&bytes),
+                    bytes,
+                });
             }
             Ok(())
         })();
@@ -700,13 +893,20 @@ impl Exchange for NetFabric {
     /// caller computed in between (split-phase) or not (bulk).
     fn exchange_data_end(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
         let p = self.p;
-        let expected = &s.expected;
+        let Scratch {
+            expected, segs, descs, incoming_puts, my_gets, put_count, reg_cache, ..
+        } = s;
         // ---- phase D: apply arrivals (receiver side)
         // Gather arrivals; interleave across sources round-robin — the
         // arrival order a NIC would produce with concurrent senders, and
         // the one that exposes two-sided matching costs.
         let mut per_src: Vec<Vec<DataMsg>> = (0..p)
             .map(|src| self.data_mail[self.cell(src, pid)].lock().unwrap().drain(..).collect())
+            .collect();
+        // Eager-tier arrivals travel their own mailboxes (they bypass the
+        // two-sided matcher: no receive was ever posted for them).
+        let mut eager_src: Vec<Vec<EagerMsg>> = (0..p)
+            .map(|src| self.eager_mail[self.cell(src, pid)].lock().unwrap().drain(..).collect())
             .collect();
         // Injected arrival reorder (model-legal): reverse the source
         // interleaving and each source's batch. CRCW resolution made the
@@ -720,6 +920,29 @@ impl Exchange for NetFabric {
         if reversed {
             for batch in per_src.iter_mut() {
                 batch.reverse();
+            }
+            for batch in eager_src.iter_mut() {
+                batch.reverse();
+            }
+        }
+        // Injected eager-tier corruption (model-legal because the
+        // checksum gate recovers it): flip a byte of the first inline
+        // payload that arrived. Consulted only when one exists, so a
+        // counted injection means bytes were really corrupted — and a
+        // rendezvous-only run (no eager mail) is untouched by
+        // construction, the tier-isolation half of the fault sweep.
+        if eager_src.iter().any(|b| b.iter().any(|m| !m.bytes.is_empty())) {
+            if let Some(f) = engine.fault_plan() {
+                if f.corrupt_eager_inline(pid, step) {
+                    'corrupt: for batch in eager_src.iter_mut() {
+                        for m in batch.iter_mut() {
+                            if !m.bytes.is_empty() {
+                                m.bytes[0] ^= 0xA5;
+                                break 'corrupt;
+                            }
+                        }
+                    }
+                }
             }
         }
         let two_sided = self.personality.mode == WireMode::TwoSided;
@@ -770,7 +993,7 @@ impl Exchange for NetFabric {
             for rank in 0..p {
                 let src = src_at(rank);
                 for m in per_src[src as usize].drain(..) {
-                    let st = engine.register_of(pid).resolve(m.dst_slot)?;
+                    let st = reg_cache.resolve(pid, engine.register_of(pid), m.dst_slot)?;
                     if m.dst_off + m.bytes.len() > st.len() {
                         return Err(LpfError::Illegal("write beyond destination slot".into()));
                     }
@@ -781,12 +1004,82 @@ impl Exchange for NetFabric {
                             .copy_from_slice(&m.bytes);
                     }
                     if two_sided {
-                        // eager-protocol receiver copy
+                        // two-sided transports bounce every arrival
+                        // through a receive buffer
                         self.clocks
                             .advance(pid, m.bytes.len() as f64 * self.personality.per_byte_ns);
                     }
                     bytes_in += m.bytes.len() as u64;
                 }
+            }
+            // Eager-tier arrivals: full pre-trim payloads, trimmed HERE
+            // against the winning segments — the receiver-side work (and
+            // the per-byte bounce copy below) is what the tier trades for
+            // the saved handshake round. Applying after the rendezvous
+            // loop is order-indifferent for memory: CRCW resolution made
+            // all winning segments destination-disjoint.
+            for seg in segs.iter() {
+                let d = &descs[seg.desc];
+                let (src, seq, dst_slot) = if (d.tag as usize) < *put_count {
+                    let m = &incoming_puts[d.tag as usize];
+                    if m.tier != ProtocolTier::Eager {
+                        continue;
+                    }
+                    (m.src_pid, m.seq, m.dst_slot)
+                } else {
+                    let g = &my_gets[d.tag as usize - *put_count];
+                    if g.tier != ProtocolTier::Eager {
+                        continue;
+                    }
+                    (g.server, g.seq, g.dst_slot)
+                };
+                let Some(msg) = eager_src[src as usize].iter().find(|m| m.seq == seq) else {
+                    return Err(LpfError::Fatal(
+                        "eager payload missing for a winning segment".into(),
+                    ));
+                };
+                if seg.src_delta + seg.len > msg.bytes.len() {
+                    return Err(LpfError::Fatal(
+                        "eager payload shorter than its winning segment".into(),
+                    ));
+                }
+                let st = reg_cache.resolve(pid, engine.register_of(pid), dst_slot)?;
+                if seg.dst_off + seg.len > st.len() {
+                    return Err(LpfError::Illegal("write beyond destination slot".into()));
+                }
+                if eager_sum(&msg.bytes) == msg.sum {
+                    // SAFETY: destination-disjoint winning segments; only
+                    // this process writes its own memory.
+                    unsafe {
+                        st.bytes_mut()[seg.dst_off..seg.dst_off + seg.len].copy_from_slice(
+                            &msg.bytes[seg.src_delta..seg.src_delta + seg.len],
+                        );
+                    }
+                } else {
+                    // The inline copy was corrupted on the wire. The
+                    // checksum gate kept it invisible; recover by
+                    // re-reading the source range, still quiescent under
+                    // superstep discipline — the fault is absorbed and
+                    // destination memory stays bit-identical.
+                    let fresh = {
+                        let src_st = engine.register_of(src).resolve(msg.src_slot)?;
+                        let lo = msg.src_off + seg.src_delta;
+                        if lo + seg.len > src_st.len() {
+                            return Err(LpfError::Illegal("eager refetch out of bounds".into()));
+                        }
+                        // SAFETY: superstep discipline (source unwritten).
+                        unsafe { src_st.bytes()[lo..lo + seg.len].to_vec() }
+                    };
+                    // SAFETY: as above.
+                    unsafe {
+                        st.bytes_mut()[seg.dst_off..seg.dst_off + seg.len]
+                            .copy_from_slice(&fresh);
+                    }
+                }
+                // the eager bounce copy: every applied byte pays the
+                // pair's receiver-side per-byte cost, on every transport
+                self.clocks.advance(pid, seg.len as f64 * self.pers(src, pid).per_byte_ns);
+                bytes_in += seg.len as u64;
             }
             Ok(())
         })();
@@ -875,6 +1168,11 @@ impl Fabric for NetFabric {
         for cell in &self.data_mail {
             cell.lock().expect("mailbox poisoned").clear();
         }
+        for cell in &self.eager_mail {
+            cell.lock().expect("mailbox poisoned").clear();
+        }
+        // The protocol config deliberately survives, like the fault plan:
+        // it was fitted for this fabric's topology, not for one job.
         for m in &self.matchers {
             m.lock().expect("matcher poisoned").reset();
         }
@@ -905,9 +1203,32 @@ impl Fabric for NetFabric {
         Some(self.clocks.read(pid) as f64)
     }
 
+    fn set_protocol(&self, cfg: ProtocolConfig) {
+        let code = match cfg.policy {
+            ProtocolPolicy::Auto => 0,
+            ProtocolPolicy::ForceEager => 1,
+            ProtocolPolicy::ForceRendezvous => 2,
+        };
+        self.proto_policy.store(code, Ordering::Relaxed);
+        self.proto_eager_max_intra.store(cfg.eager_max_intra, Ordering::Relaxed);
+        self.proto_eager_max_inter.store(cfg.eager_max_inter, Ordering::Relaxed);
+    }
+
+    fn protocol(&self) -> ProtocolConfig {
+        ProtocolConfig {
+            policy: match self.proto_policy.load(Ordering::Relaxed) {
+                1 => ProtocolPolicy::ForceEager,
+                2 => ProtocolPolicy::ForceRendezvous,
+                _ => ProtocolPolicy::Auto,
+            },
+            eager_max_intra: self.proto_eager_max_intra.load(Ordering::Relaxed),
+            eager_max_inter: self.proto_eager_max_inter.load(Ordering::Relaxed),
+        }
+    }
+
     fn stats(&self, pid: Pid) -> SyncStats {
         let mut s = self.engine.stats(pid);
-        s.peak_link_bytes = self.peak_link_bytes();
+        s.diag.peak_link_bytes = self.peak_link_bytes();
         s
     }
 
@@ -1137,10 +1458,10 @@ mod tests {
             MetaAlgo::Direct,
             false,
         );
-        assert_eq!(fab.stats(0).peak_link_bytes, 0, "no traffic yet");
+        assert_eq!(fab.stats(0).diag.peak_link_bytes, 0, "no traffic yet");
         ring_put_test(fab.clone());
         assert_eq!(fab.peak_link_bytes(), 50, "48B meta + 2B payload on the busiest link");
-        assert_eq!(fab.stats(0).peak_link_bytes, 50, "merged into SyncStats");
+        assert_eq!(fab.stats(0).diag.peak_link_bytes, 50, "merged into SyncStats");
         let report = fab.link_report();
         assert!(!report.is_empty());
         assert!(report.iter().all(|(_, class, _)| *class == LinkClass::Inter));
@@ -1339,6 +1660,159 @@ mod tests {
             ring_put_test(fab);
             assert!(plan.injections() > 0, "{spec:?} never fired");
         }
+    }
+
+    #[test]
+    fn protocol_tiers_are_observationally_invisible_and_counted() {
+        let mk = |cfg: ProtocolConfig| {
+            let fab = NetFabric::with_config(
+                4,
+                "rdma",
+                Personality::ibverbs(),
+                Topology::distributed(),
+                MetaAlgo::Direct,
+                true,
+            );
+            fab.set_protocol(cfg);
+            assert_eq!(fab.protocol(), cfg, "config round-trips");
+            // ring_put_test itself pins the destination bytes
+            ring_put_test(fab.clone());
+            fab
+        };
+        let rdv = mk(ProtocolConfig::forced(ProtocolTier::Rendezvous));
+        let eag = mk(ProtocolConfig::forced(ProtocolTier::Eager));
+        // auto with a threshold above the 2-byte payloads → eager
+        let auto = mk(ProtocolConfig::auto(8, 8));
+        for pid in 0..4 {
+            assert_eq!(rdv.stats(pid), eag.stats(pid), "semantic stats identical");
+            assert_eq!(rdv.stats(pid), auto.stats(pid));
+        }
+        let (r, e, a) = (rdv.stats(0).diag, eag.stats(0).diag, auto.stats(0).diag);
+        assert!(r.rendezvous_handshakes > 0 && r.eager_msgs == 0 && r.eager_bytes == 0);
+        assert!(e.eager_msgs > 0 && e.eager_bytes > 0 && e.rendezvous_handshakes == 0);
+        assert!(a.eager_msgs > 0, "auto under-threshold selects eager");
+        // auto with a threshold below the payload → rendezvous
+        let low = mk(ProtocolConfig::auto(1, 1));
+        assert_eq!(low.stats(0).diag.eager_msgs, 0);
+        assert!(low.stats(0).diag.rendezvous_handshakes > 0);
+        // a config survives the warm job reset (it is per-fabric, fitted)
+        eag.reset_for_job();
+        assert_eq!(eag.protocol(), ProtocolConfig::forced(ProtocolTier::Eager));
+    }
+
+    #[test]
+    fn eager_gets_work_over_the_wire() {
+        let fab = NetFabric::with_config(
+            3,
+            "rdma",
+            Personality::ibverbs(),
+            Topology::distributed(),
+            MetaAlgo::Direct,
+            true,
+        );
+        fab.set_protocol(ProtocolConfig::forced(ProtocolTier::Eager));
+        run_spmd(fab, |fab, pid| {
+            let slot = setup_slot(fab, pid, 4, (pid as u8 + 1) * 10);
+            let reqs = if pid == 2 {
+                vec![Request::Get(crate::queue::GetReq {
+                    src_pid: 0,
+                    src_slot: slot,
+                    src_off: 0,
+                    dst_slot: slot,
+                    dst_off: 0,
+                    len: 4,
+                    attr: MSG_DEFAULT,
+                })]
+            } else {
+                vec![]
+            };
+            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+            if pid == 2 {
+                let st = fab.register_of(2).resolve(slot).unwrap();
+                assert_eq!(unsafe { st.bytes().to_vec() }, vec![10, 10, 10, 10]);
+                let d = fab.stats(2).diag;
+                assert_eq!((d.eager_msgs, d.rendezvous_handshakes), (1, 0));
+            }
+        });
+    }
+
+    #[test]
+    fn eager_tier_trims_overlaps_receiver_side() {
+        // the rendezvous `overlapping_puts_trim_wire_bytes` scenario under
+        // ForceEager: full pre-trim payloads travel, but the winning bytes
+        // and the semantic stats must be identical — trimming moved to the
+        // receiver, it didn't disappear
+        let fab = NetFabric::with_config(
+            3,
+            "rdma",
+            Personality::ibverbs(),
+            Topology::distributed(),
+            MetaAlgo::Direct,
+            false,
+        );
+        fab.set_protocol(ProtocolConfig::forced(ProtocolTier::Eager));
+        run_spmd(fab, |fab, pid| {
+            let slot = setup_slot(fab, pid, 8, pid as u8);
+            let reqs = if pid > 0 {
+                vec![Request::Put(PutReq {
+                    src_slot: slot,
+                    src_off: 0,
+                    dst_pid: 0,
+                    dst_slot: slot,
+                    dst_off: 2 * (pid as usize - 1),
+                    len: 6,
+                    attr: MSG_DEFAULT,
+                })]
+            } else {
+                vec![]
+            };
+            fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+            if pid == 0 {
+                let st = fab.register_of(0).resolve(slot).unwrap();
+                assert_eq!(unsafe { st.bytes().to_vec() }, vec![1, 1, 2, 2, 2, 2, 2, 2]);
+                let stats = fab.stats(0);
+                assert_eq!(stats.bytes_in, 8, "trimmed h-relation");
+                assert_eq!(stats.bytes_trimmed, 4, "overlap bytes never applied");
+            }
+        });
+    }
+
+    #[test]
+    fn corrupt_eager_inline_is_absorbed_and_tier_isolated() {
+        use crate::netsim::faults::{FaultPlan, FaultSpec};
+        // Under ForceEager the corruption fires and must be invisible in
+        // memory (ring_put_test pins the bytes): the checksum gate
+        // refetches from the source.
+        let mk = |tier| {
+            let fab = NetFabric::with_config(
+                3,
+                "rdma",
+                Personality::ibverbs(),
+                Topology::distributed(),
+                MetaAlgo::Direct,
+                true,
+            );
+            fab.set_protocol(ProtocolConfig::forced(tier));
+            fab
+        };
+        let fab = mk(ProtocolTier::Eager);
+        let plan = FaultPlan::one(FaultSpec::CorruptEagerInline { pid: 1, step: 0 });
+        fab.set_fault_plan(Some(plan.clone()));
+        ring_put_test(fab);
+        assert!(plan.injections() > 0, "eager fault fired on eager traffic");
+        // Tier isolation: the same fault on a rendezvous-only run never
+        // fires — there is no inline payload to corrupt.
+        let fab = mk(ProtocolTier::Rendezvous);
+        let plan = FaultPlan::one(FaultSpec::CorruptEagerInline { pid: 1, step: 0 });
+        fab.set_fault_plan(Some(plan.clone()));
+        ring_put_test(fab);
+        assert_eq!(plan.injections(), 0, "eager fault leaves rendezvous untouched");
+        // ...and the rendezvous-tier faults stay absorbed under ForceEager.
+        let fab = mk(ProtocolTier::Eager);
+        let plan = FaultPlan::one(FaultSpec::DelayRendezvous { pid: 1, step: 0, ns: 250_000.0 });
+        fab.set_fault_plan(Some(plan.clone()));
+        ring_put_test(fab);
+        assert!(plan.injections() > 0);
     }
 
     #[test]

@@ -28,7 +28,8 @@ use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
 use crate::core::{LpfError, Pid, Result};
-use crate::fabric::{GetMeta, PutMeta, SyncStats};
+use crate::fabric::{GetMeta, ProtocolTier, PutMeta, SyncStats};
+use crate::memory::RegCache;
 use crate::queue::Request;
 use crate::sync::conflict::{Interval, OverlapScratch, ResolveScratch, WriteDesc, WriteSeg};
 use crate::util::CachePadded;
@@ -132,6 +133,21 @@ pub struct Scratch {
     /// Built during the data-begin half, consumed at data-end; a standing
     /// field (not part of [`SplitState`]) so its capacity is retained.
     pub(crate) expected: Vec<(Pid, u64)>,
+    /// Registration cache for remote slot resolutions (see
+    /// [`RegCache`]): repeatedly-read remote regions skip the owner's
+    /// register lock across supersteps. Cleared at job boundaries — both
+    /// for epoch hygiene and so the cached storage `Arc`s never block
+    /// [`crate::memory::Register::take_recycled`] in the next job.
+    pub reg_cache: RegCache,
+    /// Outgoing descriptors classified [`ProtocolTier::Eager`] by the
+    /// latest queue drain (this superstep only; folded into the stats
+    /// diagnostics at superstep end).
+    pub(crate) tier_eager_msgs: u64,
+    /// Pre-trim payload bytes of this superstep's eager descriptors.
+    pub(crate) tier_eager_bytes: u64,
+    /// Outgoing descriptors classified [`ProtocolTier::Rendezvous`] this
+    /// superstep (each pays the handshake round on the netsim backends).
+    pub(crate) tier_rdv_msgs: u64,
 }
 
 /// Everything `sync_end` needs that `sync_begin` computed: the engine's
@@ -155,6 +171,11 @@ pub(crate) struct SplitState {
     /// An error latched at `sync_begin` (e.g. an injected abort) that must
     /// surface from `sync_end` — the begin half already aborted peers.
     pub(crate) pending_err: Option<LpfError>,
+    /// Tier tallies of this superstep's queue drain, carried from
+    /// `sync_begin` to the stats fold in `sync_end`.
+    pub(crate) eager_msgs: u64,
+    pub(crate) eager_bytes: u64,
+    pub(crate) rdv_handshakes: u64,
 }
 
 /// One process's plan: published outbox + private scratch + stats, each
@@ -184,6 +205,10 @@ impl Scratch {
         self.bytes_out_by_src.clear();
         self.split = None;
         self.expected.clear();
+        self.reg_cache.clear();
+        self.tier_eager_msgs = 0;
+        self.tier_eager_bytes = 0;
+        self.tier_rdv_msgs = 0;
     }
 }
 
@@ -210,6 +235,15 @@ impl SyncPlan {
 /// coalescing, then grouping by remote pid. Returns the number of wire
 /// descriptors (puts + gets) after coalescing.
 ///
+/// `tier_for(remote, len)` classifies each **post-coalescing** descriptor
+/// into its protocol tier (eager payloads must be sized after merging, or
+/// a coalesced `put_slice` run would be misclassified by its first
+/// fragment); the chosen tier is stamped on the wire descriptor — both
+/// endpoints read the same value — and tallied into the scratch tier
+/// counters. The backend supplies the classifier
+/// ([`crate::sync::engine::Exchange::tier_for`]); backends without a tier
+/// split classify everything rendezvous, reproducing pre-tier behaviour.
+///
 /// Coalescing rule: a request merges into the immediately preceding queue
 /// entry when both are the same kind, address the same remote pid and the
 /// same `(src_slot, dst_slot, attr)`, and both its source and destination
@@ -225,14 +259,28 @@ pub(crate) fn fill_outbox(
     me: Pid,
     reqs: &[Request],
     coalesce: bool,
+    tier_for: &dyn Fn(Pid, usize) -> ProtocolTier,
     s: &mut Scratch,
     outbox: &RwLock<OutTables>,
 ) -> Result<usize> {
-    let Scratch { cputs, cput_dst, cgets, order, my_gets, .. } = s;
+    let Scratch {
+        cputs,
+        cput_dst,
+        cgets,
+        order,
+        my_gets,
+        tier_eager_msgs,
+        tier_eager_bytes,
+        tier_rdv_msgs,
+        ..
+    } = s;
     cputs.clear();
     cput_dst.clear();
     cgets.clear();
     my_gets.clear();
+    *tier_eager_msgs = 0;
+    *tier_eager_bytes = 0;
+    *tier_rdv_msgs = 0;
 
     // Which table absorbed the previous queue entry (merge candidates must
     // be queue-adjacent so no foreign seq can fall inside a merged run).
@@ -272,6 +320,8 @@ pub(crate) fn fill_outbox(
                     dst_off: q.dst_off,
                     len: q.len,
                     attr: q.attr,
+                    // placeholder: classified post-coalescing, below
+                    tier: ProtocolTier::Rendezvous,
                 });
                 cput_dst.push(q.dst_pid);
                 prev = Prev::Put;
@@ -303,6 +353,8 @@ pub(crate) fn fill_outbox(
                     dst_off: g.dst_off,
                     len: g.len,
                     attr: g.attr,
+                    // placeholder: classified post-coalescing, below
+                    tier: ProtocolTier::Rendezvous,
                 });
                 prev = Prev::Get;
             }
@@ -328,7 +380,18 @@ pub(crate) fn fill_outbox(
     for i in 0..p as usize {
         ob.put_ranges[i + 1] += ob.put_ranges[i];
     }
-    ob.puts.extend(order.iter().map(|&i| cputs[i as usize].clone()));
+    ob.puts.extend(order.iter().map(|&i| {
+        let mut m = cputs[i as usize].clone();
+        m.tier = tier_for(cput_dst[i as usize], m.len);
+        match m.tier {
+            ProtocolTier::Eager => {
+                *tier_eager_msgs += 1;
+                *tier_eager_bytes += m.len as u64;
+            }
+            ProtocolTier::Rendezvous => *tier_rdv_msgs += 1,
+        }
+        m
+    }));
 
     ob.gets.clear();
     order.clear();
@@ -344,7 +407,18 @@ pub(crate) fn fill_outbox(
     for i in 0..p as usize {
         ob.get_ranges[i + 1] += ob.get_ranges[i];
     }
-    ob.gets.extend(order.iter().map(|&i| cgets[i as usize].clone()));
+    ob.gets.extend(order.iter().map(|&i| {
+        let mut g = cgets[i as usize].clone();
+        g.tier = tier_for(g.server, g.len);
+        match g.tier {
+            ProtocolTier::Eager => {
+                *tier_eager_msgs += 1;
+                *tier_eager_bytes += g.len as u64;
+            }
+            ProtocolTier::Rendezvous => *tier_rdv_msgs += 1,
+        }
+        g
+    }));
     my_gets.extend_from_slice(&ob.gets);
 
     Ok(ob.descriptor_count())
@@ -384,10 +458,14 @@ mod tests {
         })
     }
 
+    fn rdv_only(_remote: Pid, _len: usize) -> ProtocolTier {
+        ProtocolTier::Rendezvous
+    }
+
     fn fill(p: Pid, reqs: &[Request], coalesce: bool) -> (OutTables, Scratch, usize) {
         let mut s = Scratch::default();
         let outbox = RwLock::new(OutTables::new(p));
-        let n = fill_outbox(p, 0, reqs, coalesce, &mut s, &outbox).unwrap();
+        let n = fill_outbox(p, 0, reqs, coalesce, &rdv_only, &mut s, &outbox).unwrap();
         (outbox.into_inner().unwrap(), s, n)
     }
 
@@ -459,16 +537,46 @@ mod tests {
     fn out_of_range_pid_is_illegal() {
         let mut s = Scratch::default();
         let outbox = RwLock::new(OutTables::new(2));
-        assert!(fill_outbox(2, 0, &[put(2, 0, 0, 4)], true, &mut s, &outbox).is_err());
-        assert!(fill_outbox(2, 0, &[get(5, 0, 0, 4)], true, &mut s, &outbox).is_err());
+        assert!(fill_outbox(2, 0, &[put(2, 0, 0, 4)], true, &rdv_only, &mut s, &outbox).is_err());
+        assert!(fill_outbox(2, 0, &[get(5, 0, 0, 4)], true, &rdv_only, &mut s, &outbox).is_err());
+    }
+
+    #[test]
+    fn tier_classified_post_coalescing_and_tallied() {
+        let small_eager = |_d: Pid, len: usize| {
+            if len <= 16 {
+                ProtocolTier::Eager
+            } else {
+                ProtocolTier::Rendezvous
+            }
+        };
+        // 4 contiguous 8 B puts coalesce into one 32 B descriptor: with a
+        // 16 B eager threshold the merged descriptor must classify
+        // rendezvous — classifying by the first fragment would go eager
+        let reqs: Vec<Request> = (0..4).map(|i| put(1, i * 8, i * 8, 8)).collect();
+        let mut s = Scratch::default();
+        let outbox = RwLock::new(OutTables::new(2));
+        fill_outbox(2, 0, &reqs, true, &small_eager, &mut s, &outbox).unwrap();
+        assert_eq!(outbox.read().unwrap().puts_to(1)[0].tier, ProtocolTier::Rendezvous);
+        assert_eq!((s.tier_eager_msgs, s.tier_rdv_msgs), (0, 1));
+        // uncoalesced, the same queue is 4 eager descriptors of 8 B each
+        fill_outbox(2, 0, &reqs, false, &small_eager, &mut s, &outbox).unwrap();
+        assert_eq!((s.tier_eager_msgs, s.tier_eager_bytes, s.tier_rdv_msgs), (4, 32, 0));
+        // gets classify by the merged requested length, and the tier rides
+        // along to the requester's own my_gets view
+        let gr = vec![get(1, 0, 0, 8), get(1, 8, 8, 8)];
+        fill_outbox(2, 0, &gr, true, &small_eager, &mut s, &outbox).unwrap();
+        assert_eq!((s.my_gets[0].tier, s.my_gets[0].len), (ProtocolTier::Eager, 16));
+        assert_eq!((s.tier_eager_msgs, s.tier_eager_bytes), (1, 16));
     }
 
     #[test]
     fn refill_replaces_previous_superstep() {
         let mut s = Scratch::default();
         let outbox = RwLock::new(OutTables::new(2));
-        fill_outbox(2, 0, &[put(1, 0, 0, 4), put(1, 8, 8, 4)], false, &mut s, &outbox).unwrap();
-        fill_outbox(2, 0, &[put(1, 0, 0, 4)], false, &mut s, &outbox).unwrap();
+        fill_outbox(2, 0, &[put(1, 0, 0, 4), put(1, 8, 8, 4)], false, &rdv_only, &mut s, &outbox)
+            .unwrap();
+        fill_outbox(2, 0, &[put(1, 0, 0, 4)], false, &rdv_only, &mut s, &outbox).unwrap();
         let ob = outbox.read().unwrap();
         assert_eq!(ob.puts_to(1).len(), 1);
         assert_eq!(ob.descriptor_count(), 1);

@@ -4,6 +4,19 @@
 //! flavour of this backend (its Fig. 2 baseline). A parameterisation of
 //! [`NetFabric`] — the superstep pipeline itself is the shared engine's
 //! ([`crate::sync::engine::SyncEngine`]).
+//!
+//! **Protocol-tier pricing (ISSUE 10).** An eager-classified descriptor
+//! inlines its full pre-trim payload into the direct meta exchange: the
+//! bytes pay per-byte wire transit alongside the 48-byte descriptor and
+//! a receiver-side bounce copy at apply time, and the descriptor skips
+//! the rendezvous handshake entirely. A rendezvous descriptor pays the
+//! explicit handshake — a 16-byte trim notice (or 48-byte get request)
+//! at per-byte cost plus one conditional wire latency `ℓ` per superstep
+//! that sent any — and then moves its post-trim bytes zero-copy in the
+//! data phase. On this flat wire the crossover sits where the bounce of
+//! `b` bytes outweighs the saved handshake,
+//! `b·g ≈ 16·g + ℓ/descriptors`; `probe` fits it from measured `(g, ℓ)`
+//! rather than hard-coding it.
 
 use std::sync::Arc;
 

@@ -80,20 +80,14 @@ impl SharedFabric {
         }
     }
 
-    fn bounds_check(
-        reg: &SharedRegister,
-        slot: crate::core::Memslot,
-        off: usize,
-        len: usize,
-    ) -> Result<Arc<SlotStorage>> {
-        let st = reg.resolve(slot)?;
+    fn check_range(st: &SlotStorage, off: usize, len: usize) -> Result<()> {
         if off + len > st.len() {
             return Err(LpfError::Illegal(format!(
                 "range {off}+{len} exceeds slot of {} bytes",
                 st.len()
             )));
         }
-        Ok(st)
+        Ok(())
     }
 }
 
@@ -125,24 +119,29 @@ impl Exchange for SharedFabric {
     // stays 0 here — the model charges nothing hideable).
     fn exchange_data_end(&self, pid: Pid, engine: &SyncEngine, s: &mut Scratch) -> Result<u64> {
         // Executed at the destination (me): memcpy each winning segment.
+        // Slot resolves route through the per-process registration cache:
+        // a repeatedly-read region (warm-pool PageRank vectors, FFT plan
+        // windows) validates against the owner's lock-free mutation epoch
+        // instead of re-taking the register lock every superstep — the
+        // warm steady state performs zero re-validations after the first
+        // touch (pinned by `bench_sync`'s cache-hit gate).
         let mut bytes_in = 0u64;
-        for seg in &s.segs {
-            let d = &s.descs[seg.desc];
-            let (src_pid, src_slot, src_off, dst_slot, dst_off) = if (d.tag as usize) < s.put_count
+        let Scratch { segs, descs, incoming_puts, my_gets, put_count, reg_cache, .. } = s;
+        for seg in segs.iter() {
+            let d = &descs[seg.desc];
+            let (src_pid, src_slot, src_off, dst_slot, dst_off) = if (d.tag as usize)
+                < *put_count
             {
-                let m = &s.incoming_puts[d.tag as usize];
+                let m = &incoming_puts[d.tag as usize];
                 (m.src_pid, m.src_slot, m.src_off, m.dst_slot, m.dst_off)
             } else {
-                let g = &s.my_gets[d.tag as usize - s.put_count];
+                let g = &my_gets[d.tag as usize - *put_count];
                 (g.server, g.src_slot, g.src_off, g.dst_slot, g.dst_off)
             };
-            let src_st = Self::bounds_check(
-                engine.register_of(src_pid),
-                src_slot,
-                src_off + seg.src_delta,
-                seg.len,
-            )?;
-            let dst_st = Self::bounds_check(engine.register_of(pid), dst_slot, dst_off, d.len)?;
+            let src_st = reg_cache.resolve(src_pid, engine.register_of(src_pid), src_slot)?;
+            Self::check_range(&src_st, src_off + seg.src_delta, seg.len)?;
+            let dst_st = reg_cache.resolve(pid, engine.register_of(pid), dst_slot)?;
+            Self::check_range(&dst_st, dst_off, d.len)?;
             Self::copy(&src_st, src_off + seg.src_delta, &dst_st, seg.dst_off, seg.len);
             debug_assert_eq!(seg.dst_off - d.dst_off, seg.src_delta);
             bytes_in += seg.len as u64;
@@ -353,6 +352,38 @@ mod tests {
                 assert_eq!(fab.stats(1).bytes_out, 2);
                 assert_eq!(fab.stats(2).bytes_out, 6);
                 assert_eq!(fab.stats(1).msgs_out, 1);
+            }
+        });
+    }
+
+    #[test]
+    fn warm_repeat_reads_stop_revalidating_after_first_touch() {
+        // the registration-cache steady-state pin (run_into / PageRank
+        // shape): iterating the same put over the same slots validates
+        // each region exactly once — every later superstep is a pure
+        // epoch-checked cache hit, zero re-validations
+        run_spmd(2, false, |fab, pid| {
+            let slot = setup_slot(fab, pid, 8, pid as u8 + 1);
+            let reqs = if pid == 0 {
+                vec![Request::Put(PutReq {
+                    src_slot: slot,
+                    src_off: 0,
+                    dst_pid: 1,
+                    dst_slot: slot,
+                    dst_off: 0,
+                    len: 4,
+                    attr: MSG_DEFAULT,
+                })]
+            } else {
+                vec![]
+            };
+            for _ in 0..10 {
+                fab.sync(pid, &reqs, SYNC_DEFAULT).unwrap();
+            }
+            if pid == 1 {
+                let d = fab.stats(1).diag;
+                assert_eq!(d.reg_cache_misses, 2, "src + dst validate once, first iteration");
+                assert_eq!(d.reg_cache_hits, 18, "9 warm iterations × 2 resolves, all hits");
             }
         });
     }

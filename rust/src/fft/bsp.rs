@@ -30,7 +30,7 @@
 //! phase**: step 3 is chunked into up to `OVERLAP_CHUNKS` supersteps
 //! and step 4's batched FFTs of each landed chunk run inside the next
 //! chunk's `sync_begin`→`sync_end` window, hiding the all-to-all behind
-//! local compute (credited as `SyncStats::overlap_ns`). Results are
+//! local compute (credited as `SyncDiagnostics::overlap_ns`). Results are
 //! bit-identical to the bulk path and the per-destination pair
 //! coalescing still holds — `p` wire descriptors per chunk superstep.
 //!
@@ -549,7 +549,7 @@ impl BspFft {
     /// on both sides, so the engine still coalesces to exactly `p` wire
     /// descriptors per chunk superstep (the PR-2 invariant, now per
     /// chunk). The hidden communication is credited to
-    /// [`SyncStats::overlap_ns`](crate::fabric::SyncStats::overlap_ns).
+    /// [`SyncDiagnostics::overlap_ns`](crate::fabric::SyncDiagnostics::overlap_ns).
     ///
     /// Results are **bit-identical** to the bulk [`run_into`]: the same
     /// kernels run on the same values, only the superstep structure
@@ -1048,7 +1048,7 @@ mod tests {
                         }
                         if two_level {
                             assert!(
-                                bsp.lpf().stats().peak_link_bytes > 0,
+                                bsp.lpf().stats().diag.peak_link_bytes > 0,
                                 "route-aware engine must report link peaks"
                             );
                         }

@@ -19,10 +19,11 @@
 //! read/write overlap legality per superstep (see [`crate::sync::conflict`]).
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::core::{LpfError, Memslot, Result, SlotKind};
+use crate::core::{LpfError, Memslot, Pid, Result, SlotKind};
 
 /// Fixed-size byte storage backing one memory slot.
 ///
@@ -122,6 +123,16 @@ pub struct Register {
     /// serve layer's steady state — allocation-free. Bounded; never handed
     /// out while any stale `Arc` still aliases the block.
     recycle: Vec<Arc<SlotStorage>>,
+    /// Monotone counter bumped by every mutation that can invalidate a
+    /// remotely cached `resolve` result: `deregister`, `resize`, and
+    /// `reset_for_job` (which also covers the pool's warm job boundary;
+    /// a cold rebuild replaces the register object outright). Deliberately
+    /// *not* bumped by `activate_pending` (it runs at every fence and
+    /// changes no slot binding) or by fresh registrations (a new slot has a
+    /// new generation, so it can never alias a cached key). Shared as an
+    /// `Arc` so [`SharedRegister::mutation_epoch`] reads it without taking
+    /// the register lock — the [`RegCache`] hit path is lock-free.
+    mutation_epoch: Arc<AtomicU64>,
 }
 
 /// Upper bound on recycled storage blocks kept per register. Generous for
@@ -149,7 +160,18 @@ impl Register {
             gen_counter: AtomicU32::new(1),
             epoch_floor: 1,
             recycle: Vec::with_capacity(RECYCLE_CAP),
+            mutation_epoch: Arc::new(AtomicU64::new(0)),
         }
+    }
+
+    /// Current mutation epoch (see the field docs). Remote caches compare
+    /// this against the epoch they captured at fill time.
+    pub fn mutation_epoch(&self) -> u64 {
+        self.mutation_epoch.load(Ordering::Acquire)
+    }
+
+    fn bump_mutation_epoch(&self) {
+        self.mutation_epoch.fetch_add(1, Ordering::Release);
     }
 
     /// Park a freed storage block for reuse. Bounded: beyond
@@ -197,6 +219,7 @@ impl Register {
         self.pending_capacity = DEFAULT_SLOT_CAPACITY;
         self.in_use = 0;
         self.epoch_floor = self.gen_counter.load(Ordering::Relaxed);
+        self.bump_mutation_epoch();
     }
 
     /// `lpf_resize_memory_register`: O(N) in the requested capacity, takes
@@ -216,6 +239,7 @@ impl Register {
             .and_then(|()| self.global.try_reserve(want))
             .map_err(|_| LpfError::OutOfMemory(format!("register of {capacity} slots")))?;
         self.pending_capacity = capacity;
+        self.bump_mutation_epoch();
         Ok(())
     }
 
@@ -282,6 +306,7 @@ impl Register {
                 Self::recycle_push(&mut self.recycle, taken.storage);
                 free.push(slot.index);
                 self.in_use -= 1;
+                self.bump_mutation_epoch();
                 Ok(())
             }
             _ => Err(LpfError::Illegal(format!("deregister of unknown slot {slot:?}"))),
@@ -331,12 +356,23 @@ impl Default for Register {
 #[derive(Debug)]
 pub struct SharedRegister {
     inner: RwLock<Register>,
+    /// Handle on the inner register's mutation epoch, kept outside the
+    /// lock so cache-validity checks never contend with the owner.
+    mutation_epoch: Arc<AtomicU64>,
 }
 
 impl SharedRegister {
     /// Fresh empty register.
     pub fn new() -> Arc<Self> {
-        Arc::new(SharedRegister { inner: RwLock::new(Register::new()) })
+        let reg = Register::new();
+        let mutation_epoch = reg.mutation_epoch.clone();
+        Arc::new(SharedRegister { inner: RwLock::new(reg), mutation_epoch })
+    }
+
+    /// Lock-free read of the register's mutation epoch (see
+    /// [`Register::mutation_epoch`]).
+    pub fn mutation_epoch(&self) -> u64 {
+        self.mutation_epoch.load(Ordering::Acquire)
     }
 
     /// Owner-side mutable access.
@@ -357,6 +393,95 @@ impl SharedRegister {
     /// Convenience: a slot's byte length (no `Arc` clone).
     pub fn len_of(&self, slot: Memslot) -> Result<usize> {
         self.with(|r| r.len_of(slot))
+    }
+}
+
+/// A per-process cache of remote slot resolutions: `(owner pid, slot)` →
+/// storage, validated against the owner register's
+/// [`mutation epoch`](Register::mutation_epoch) instead of re-taking the
+/// register lock and re-walking its table. Repeatedly-read remote regions
+/// (warm-pool PageRank vectors, FFT plan windows, serve KV windows) hit
+/// this cache on every superstep after the first.
+///
+/// # Invalidation contract
+///
+/// A hit requires the epoch captured at fill time to equal the owner's
+/// current epoch, so a cached entry **cannot** survive:
+/// * a `deregister` of *any* slot in the owner's register (epoch bump);
+/// * a `resize` of the owner's register (epoch bump);
+/// * a warm job boundary (`reset_for_job` bumps the epoch, and the engine
+///   additionally clears the cache outright — dropping the cached `Arc`s
+///   is what lets [`Register::take_recycled`] reuse their blocks);
+/// * a cold rebuild (new register object, and the cache is cleared with
+///   the rest of the fabric scratch).
+///
+/// The epoch is read **before** the fallback resolve on a miss, so a
+/// mutation racing the fill can only make the entry *stale-looking*
+/// (pre-mutation epoch against a post-mutation register) — a conservative
+/// extra miss, never a false hit.
+#[derive(Debug, Default)]
+pub struct RegCache {
+    map: HashMap<(Pid, Memslot), RegCacheEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+#[derive(Debug)]
+struct RegCacheEntry {
+    storage: Arc<SlotStorage>,
+    epoch: u64,
+}
+
+impl RegCache {
+    /// Resolve `slot` in `owner`'s register through the cache. The hit
+    /// path performs one atomic load and a hash probe — no register lock,
+    /// no allocation.
+    pub fn resolve(
+        &mut self,
+        owner: Pid,
+        reg: &SharedRegister,
+        slot: Memslot,
+    ) -> Result<Arc<SlotStorage>> {
+        let epoch = reg.mutation_epoch();
+        if let Some(e) = self.map.get(&(owner, slot)) {
+            if e.epoch == epoch {
+                self.hits += 1;
+                return Ok(e.storage.clone());
+            }
+        }
+        self.misses += 1;
+        let storage = reg.resolve(slot)?;
+        self.map.insert((owner, slot), RegCacheEntry { storage: storage.clone(), epoch });
+        Ok(storage)
+    }
+
+    /// Drop every cached entry (and its storage `Arc`), keeping the map's
+    /// capacity. Called at job boundaries so cached aliases never block
+    /// storage recycling in the next job.
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Validations answered from the cache since the last [`clear`](RegCache::clear).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Full resolves performed since the last [`clear`](RegCache::clear).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
     }
 }
 
@@ -531,5 +656,148 @@ mod tests {
         });
         let slot = sr.with_mut(|r| r.register_global(SlotStorage::new(4).unwrap())).unwrap();
         assert_eq!(sr.resolve(slot).unwrap().len(), 4);
+    }
+
+    fn shared_with_slot(bytes: usize) -> (Arc<SharedRegister>, Memslot) {
+        let sr = SharedRegister::new();
+        let slot = sr
+            .with_mut(|r| {
+                r.resize(4).unwrap();
+                r.activate_pending();
+                r.register_global(SlotStorage::new(bytes).unwrap())
+            })
+            .unwrap();
+        (sr, slot)
+    }
+
+    #[test]
+    fn reg_cache_hits_repeat_reads_without_locking() {
+        let (sr, slot) = shared_with_slot(16);
+        let mut cache = RegCache::default();
+        let first = cache.resolve(1, &sr, slot).unwrap();
+        for _ in 0..9 {
+            let again = cache.resolve(1, &sr, slot).unwrap();
+            assert!(Arc::ptr_eq(&first, &again), "hit returns the cached storage");
+        }
+        assert_eq!((cache.misses(), cache.hits()), (1, 9));
+        // fences (activate_pending) do NOT invalidate: the warm steady
+        // state must keep hitting across supersteps
+        sr.with_mut(|r| r.activate_pending());
+        cache.resolve(1, &sr, slot).unwrap();
+        assert_eq!(cache.hits(), 10, "a fence must not cost a re-validation");
+    }
+
+    /// The invalidation contract, mutation by mutation: a cache hit never
+    /// survives a deregister, a register resize, a job-epoch bump
+    /// (`reset_for_job`), or a cold rebuild (fresh register object).
+    #[test]
+    fn reg_cache_hits_never_survive_invalidating_mutations() {
+        // deregister of ANY slot in the owner register invalidates
+        let (sr, slot) = shared_with_slot(16);
+        let other = sr.with_mut(|r| r.register_global(SlotStorage::new(8).unwrap())).unwrap();
+        let mut cache = RegCache::default();
+        cache.resolve(0, &sr, slot).unwrap();
+        sr.with_mut(|r| r.deregister(other)).unwrap();
+        cache.resolve(0, &sr, slot).unwrap();
+        assert_eq!((cache.misses(), cache.hits()), (2, 0), "deregister must re-validate");
+
+        // dealloc of the cached slot itself: the stale handle must fail
+        // exactly as an uncached resolve would
+        let (sr, slot) = shared_with_slot(16);
+        let mut cache = RegCache::default();
+        cache.resolve(0, &sr, slot).unwrap();
+        sr.with_mut(|r| r.deregister(slot)).unwrap();
+        assert!(cache.resolve(0, &sr, slot).is_err(), "no false hit on a dead slot");
+
+        // resize invalidates
+        let (sr, slot) = shared_with_slot(16);
+        let mut cache = RegCache::default();
+        cache.resolve(0, &sr, slot).unwrap();
+        sr.with_mut(|r| r.resize(8)).unwrap();
+        cache.resolve(0, &sr, slot).unwrap();
+        assert_eq!((cache.misses(), cache.hits()), (2, 0), "resize must re-validate");
+
+        // job-epoch bump (warm reset): the old handle is rejected, never
+        // served from cache
+        let (sr, slot) = shared_with_slot(16);
+        let mut cache = RegCache::default();
+        cache.resolve(0, &sr, slot).unwrap();
+        sr.with_mut(|r| r.reset_for_job());
+        let err = cache.resolve(0, &sr, slot).unwrap_err();
+        assert!(format!("{err:?}").contains("earlier job epoch"), "{err:?}");
+
+        // cold rebuild: a fresh register object starts at epoch 0, the
+        // same value a fresh cache fill captured — the cache must still
+        // not serve the old storage because the engine clears it with the
+        // fabric scratch; model that clear here and pin the behaviour
+        let (sr, slot) = shared_with_slot(16);
+        let mut cache = RegCache::default();
+        let old = cache.resolve(0, &sr, slot).unwrap();
+        cache.clear();
+        assert!(cache.is_empty());
+        let (sr2, slot2) = shared_with_slot(16);
+        let new = cache.resolve(0, &sr2, slot2).unwrap();
+        assert!(!Arc::ptr_eq(&old, &new));
+        assert_eq!((cache.misses(), cache.hits()), (1, 0));
+    }
+
+    /// Seeded property sweep: interleave random invalidating and benign
+    /// operations; after every invalidating mutation the next resolve must
+    /// be a miss, and after every benign one it must be a hit.
+    #[test]
+    fn reg_cache_property_sweep() {
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut rng = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..50 {
+            let (sr, slot) = shared_with_slot(32);
+            let mut cache = RegCache::default();
+            cache.resolve(0, &sr, slot).unwrap();
+            let mut spare: Option<Memslot> = None;
+            for _ in 0..20 {
+                let invalidating = match rng() % 4 {
+                    0 => {
+                        // benign: fence activation
+                        sr.with_mut(|r| r.activate_pending());
+                        false
+                    }
+                    1 => {
+                        // benign: fresh registration (new gen, no aliasing)
+                        if spare.is_none() {
+                            spare = sr
+                                .with_mut(|r| r.register_global(SlotStorage::new(8).unwrap()))
+                                .ok();
+                        }
+                        false
+                    }
+                    2 => {
+                        // invalidating: deregister an unrelated slot
+                        match spare.take() {
+                            Some(s) => {
+                                sr.with_mut(|r| r.deregister(s)).unwrap();
+                                true
+                            }
+                            None => false,
+                        }
+                    }
+                    _ => {
+                        // invalidating: capacity resize
+                        sr.with_mut(|r| r.resize(4)).unwrap();
+                        true
+                    }
+                };
+                let (h, m) = (cache.hits(), cache.misses());
+                cache.resolve(0, &sr, slot).unwrap();
+                if invalidating {
+                    assert_eq!(cache.misses(), m + 1, "mutation must force re-validation");
+                } else {
+                    assert_eq!(cache.hits(), h + 1, "benign op must not evict");
+                }
+            }
+        }
     }
 }

@@ -66,6 +66,20 @@ pub enum FaultSpec {
     /// destination-disjoint, so any arrival order must produce identical
     /// memory — this fault proves it.
     ReorderArrivals { step: u64 },
+    /// Model-legal: the inline payloads the eager tier delivers to `pid`
+    /// at superstep `step` arrive corrupted on the wire. The eager
+    /// protocol checksums every inline payload and validates it *before*
+    /// any byte becomes visible — the legality contract that an eager
+    /// payload is never observable ahead of its superstep boundary — and
+    /// recovers by re-reading the still-quiescent source range, so
+    /// destination memory and statistics stay bit-identical. Fires only
+    /// when eager traffic actually reaches the trigger: a
+    /// rendezvous-only run is untouched (and conversely,
+    /// [`DelayRendezvous`](FaultSpec::DelayRendezvous) perturbs only
+    /// simulated time, leaving eager payloads alone). Not drawn by
+    /// [`FaultPlan::from_seed`] — the seed sweep must stay reproducible
+    /// across releases — so it is exercised via explicitly built plans.
+    CorruptEagerInline { pid: Pid, step: u64 },
     /// Reportable: `pid` aborts cleanly at the entry of superstep `step`
     /// (before any barrier). `pid`'s `sync` returns
     /// [`LpfError::Fatal`]; peers observe [`LpfError::PeerAborted`] at
@@ -88,6 +102,7 @@ impl FaultSpec {
             FaultSpec::DelayRendezvous { .. }
                 | FaultSpec::DelayMeta { .. }
                 | FaultSpec::ReorderArrivals { .. }
+                | FaultSpec::CorruptEagerInline { .. }
         )
     }
 
@@ -240,6 +255,21 @@ impl FaultPlan {
         0.0
     }
 
+    /// Whether the eager payloads `pid` drains at superstep `step` must
+    /// be corrupted in flight. Consulted by the receiver at drain time
+    /// and only when at least one inline payload actually arrived, so a
+    /// counted injection means bytes were really corrupted (and must
+    /// have been recovered). Absorbed, hence not one-shot.
+    pub fn corrupt_eager_inline(&self, pid: Pid, step: u64) -> bool {
+        if let FaultSpec::CorruptEagerInline { pid: fp, step: fs } = self.spec {
+            if pid == fp && step == fs {
+                self.mark();
+                return true;
+            }
+        }
+        false
+    }
+
     /// Whether the data phase of superstep `step` must apply arrivals in
     /// reversed order.
     pub fn reorder_arrivals(&self, step: u64) -> bool {
@@ -278,6 +308,10 @@ mod tests {
                     assert!(pid < 4 && step < FAULT_SWEEP_SUPERSTEPS && ns > 0.0);
                 }
                 FaultSpec::ReorderArrivals { step } => assert!(step < FAULT_SWEEP_SUPERSTEPS),
+                FaultSpec::CorruptEagerInline { .. } => {
+                    unreachable!("from_seed must not draw the eager-only fault: the seed \
+                                  sweep's spec sequence is pinned across releases")
+                }
                 FaultSpec::AbortAtSuperstep { pid, step } => {
                     assert!(pid < 4 && step < FAULT_SWEEP_SUPERSTEPS);
                 }
@@ -338,5 +372,21 @@ mod tests {
         let m = FaultPlan::one(FaultSpec::DelayMeta { pid: 1, step: 2, ns: 7.5 });
         assert_eq!(m.meta_delay_ns(1, 2), 7.5);
         assert_eq!(m.meta_delay_ns(0, 2), 0.0);
+    }
+
+    #[test]
+    fn corrupt_eager_inline_is_absorbed_targeted_and_tier_isolated() {
+        let plan = FaultPlan::one(FaultSpec::CorruptEagerInline { pid: 1, step: 2 });
+        assert!(plan.spec().absorbed() && plan.spec().wire_only());
+        assert!(!plan.corrupt_eager_inline(0, 2), "wrong pid");
+        assert!(!plan.corrupt_eager_inline(1, 0), "wrong step");
+        assert!(plan.corrupt_eager_inline(1, 2));
+        assert!(plan.corrupt_eager_inline(1, 2), "absorbed faults are not one-shot");
+        assert_eq!(plan.injections(), 2);
+        // tier isolation: a rendezvous-tier fault plan never answers the
+        // eager consult point, and vice versa
+        let rdv = FaultPlan::one(FaultSpec::DelayRendezvous { pid: 1, step: 2, ns: 5.0 });
+        assert!(!rdv.corrupt_eager_inline(1, 2));
+        assert_eq!(plan.rendezvous_delay_ns(1, 2), 0.0);
     }
 }

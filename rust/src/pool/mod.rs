@@ -356,6 +356,11 @@ struct PoolState {
     /// Installed fault-injection plan, re-installed on every cold rebuild
     /// so one-shot faults stay exhausted after the failure they caused.
     fault_plan: Option<Arc<FaultPlan>>,
+    /// Protocol-tier configuration, re-applied on every cold rebuild: the
+    /// fitted eager/rendezvous crossover belongs to the machine, not to
+    /// one team incarnation. `None` keeps the fabric's default
+    /// (all-rendezvous).
+    protocol: Option<crate::fabric::ProtocolConfig>,
 }
 
 struct Shared {
@@ -403,6 +408,7 @@ impl Pool {
                 stats: PoolStats::default(),
                 shutdown: false,
                 fault_plan: None,
+                protocol: None,
             }),
             worker_cv: Condvar::new(),
         });
@@ -445,6 +451,18 @@ impl Pool {
         let mut st = self.shared.state.lock().expect("pool poisoned");
         st.group.fabric().set_fault_plan(plan.clone());
         st.fault_plan = plan;
+    }
+
+    /// Install the protocol-tier configuration this pool's fabric (and
+    /// any fabric a cold rebuild constructs) classifies descriptors with:
+    /// the `probe`-fitted eager/rendezvous crossover, or a forced policy
+    /// for ablation. Survives warm resets (the fabric keeps it) and cold
+    /// rebuilds (re-applied here, like the fault plan). Call between
+    /// jobs.
+    pub fn set_protocol(&self, cfg: crate::fabric::ProtocolConfig) {
+        let mut st = self.shared.state.lock().expect("pool poisoned");
+        st.group.fabric().set_protocol(cfg);
+        st.protocol = Some(cfg);
     }
 
     fn enqueue(&self, job: QueuedJob) {
@@ -606,6 +624,9 @@ fn worker_loop(shared: &Shared, pid: Pid) {
             // worker threads themselves stay.
             st.group = ContextGroup::new(shared.platform.clone(), shared.p);
             st.group.fabric().set_fault_plan(st.fault_plan.clone());
+            if let Some(cfg) = st.protocol {
+                st.group.fabric().set_protocol(cfg);
+            }
             st.stats.cold_resets += 1;
         } else {
             group.reset_for_job();

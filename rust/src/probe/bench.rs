@@ -15,6 +15,7 @@ use crate::benchkit::Samples;
 use crate::core::machine::BspParams;
 use crate::core::{Args, Result, MSG_DEFAULT, SYNC_DEFAULT};
 use crate::ctx::{Context, Platform};
+use crate::fabric::{ProtocolConfig, ProtocolTier};
 use crate::pool::Pool;
 use crate::probe::ProbeTable;
 
@@ -236,13 +237,21 @@ pub fn run_offline_probe(
     Ok((rows, r))
 }
 
-/// Per-level `(g, ℓ)` fits for a hierarchical platform (tentpole: the
-/// probe learns what each topology *level* costs, not one blended
-/// number). Runs the Table-3 estimators twice with the exchange
-/// restricted to [`PeerClass::Intra`] and [`PeerClass::Inter`] peers,
-/// recording the fits under `"<backend>/intra"` and `"<backend>/inter"`.
+/// Per-level `(g, ℓ)` fits for a hierarchical platform (the probe learns
+/// what each topology *level* costs, not one blended number). Runs the
+/// Table-3 estimators twice with the exchange restricted to
+/// [`PeerClass::Intra`] and [`PeerClass::Inter`] peers, recording the
+/// fits under `"<backend>/intra"` and `"<backend>/inter"`.
 /// On a flat (single-level) platform there is nothing to separate and
 /// the result is empty.
+///
+/// **Deprecation note (ISSUE 10):** these un-tiered keys are the
+/// *rendezvous*-tier fits (the pool runs the default protocol config,
+/// which selects rendezvous for every descriptor). [`fitted_protocol`]
+/// records tier-resolved fits under `"<backend>/{intra,inter}/{eager,
+/// rdv}"`; the old keys remain written for one release so existing
+/// table readers keep working, then consumers should move to the
+/// `/rdv`-suffixed keys.
 pub fn run_level_probe(
     platform: &Platform,
     cfg: &ProbeConfig,
@@ -274,6 +283,103 @@ pub fn run_level_probe(
         out.push((key, rows));
     }
     Ok(out)
+}
+
+/// The fitted eager/rendezvous crossover, in payload bytes per
+/// descriptor, from one rendezvous-tier and one eager-tier probe fit of
+/// the same exchange shape (`descs` = descriptors per process in that
+/// shape, i.e. eligible peers — the balanced exchange coalesces each
+/// peer's run into one descriptor).
+///
+/// Both tiers pay the route's per-byte transit, so the lines differ by
+/// * what eager *saves*: the handshake fixed costs, which the Table-3
+///   intercept `ℓ` absorbs (`descs` handshake messages + one conditional
+///   handshake latency per superstep) — `Δℓ = ℓ_rdv − ℓ_eager`, divided
+///   by `descs` to land per descriptor;
+/// * what eager *pays*: the receiver-side bounce copy (and pre-trim
+///   transit of bytes the CRCW resolution would have trimmed — zero in
+///   the probe's disjoint exchange), which the slope `g` absorbs —
+///   `Δg = g_eager − g_rdv` per byte.
+///
+/// The crossover is `Δℓ / (descs · Δg)`: below it an eager descriptor is
+/// cheaper, above it rendezvous wins. Degenerate fits degrade safely:
+/// no measured saving (`Δℓ ≤ 0`) disables the eager tier (0); no
+/// measured penalty (`Δg ≤ 0`) means eager won at every size the fit
+/// saw, and the crossover is unbounded (`u64::MAX`).
+pub fn crossover_bytes(rdv: &ProbeRow, eager: &ProbeRow, descs: u64) -> u64 {
+    let dl = (rdv.l_ns - eager.l_ns) / descs.max(1) as f64;
+    let dg = eager.g_ns / eager.word_bytes as f64 - rdv.g_ns / rdv.word_bytes as f64;
+    if dl <= 0.0 {
+        0
+    } else if dg <= 0.0 {
+        u64::MAX
+    } else {
+        (dl / dg) as u64
+    }
+}
+
+/// Fit the per-fabric (and, on hierarchical topologies, per-level)
+/// eager/rendezvous crossover from measured `(g, ℓ)` and return the
+/// [`ProtocolConfig`] the probe would install — the tentpole's "tier
+/// thresholds are fitted, not magic" contract. Runs the Table-3
+/// estimators at the smallest configured word size once per `{peer
+/// class} × {forced tier}` cell (the pool pinned to
+/// [`ProtocolConfig::forced`] for each), records every cell into `table`
+/// under the tier-resolved keys `"<backend>/{intra,inter}/{eager,rdv}"`
+/// (flat fabrics: `"<backend>/{eager,rdv}"`), and folds the crossovers
+/// into an `Auto` config via [`crossover_bytes`].
+pub fn fitted_protocol(
+    platform: &Platform,
+    cfg: &ProbeConfig,
+    table: &Arc<ProbeTable>,
+) -> Result<ProtocolConfig> {
+    let p = cfg.p;
+    let fabric = platform.make_fabric(p);
+    let backend = fabric.name();
+    let topo = fabric.topology();
+    let hier = topo.levels >= 2 && topo.procs_per_node >= 2;
+    let q = topo.procs_per_node.max(1);
+    let r = measure_memcpy_r(cfg.max_bytes.min(8 << 20), 5);
+    let pool = Pool::new(platform.clone(), p);
+    let w = cfg.word_sizes.iter().copied().min().unwrap_or(8);
+    // (level label or "" for flat, peer class, descriptors per process)
+    let levels: Vec<(&str, PeerClass, u64)> = if hier {
+        vec![
+            ("intra", PeerClass::Intra, (q - 1) as u64),
+            ("inter", PeerClass::Inter, (p - q) as u64),
+        ]
+    } else {
+        vec![("", PeerClass::All, (p - 1) as u64)]
+    };
+    let mut cross = [0u64; 2]; // [intra, inter]
+    for (i, (level, class, descs)) in levels.iter().enumerate() {
+        let mut per_tier = Vec::with_capacity(2);
+        for (tname, tier) in
+            [("rdv", ProtocolTier::Rendezvous), ("eager", ProtocolTier::Eager)]
+        {
+            pool.set_protocol(ProtocolConfig::forced(tier));
+            let row = fit_row(&pool, cfg, w, *class)?;
+            let key = if level.is_empty() {
+                format!("{backend}/{tname}")
+            } else {
+                format!("{backend}/{level}/{tname}")
+            };
+            table.record(
+                &key,
+                p,
+                BspParams { word_bytes: w, g_ns: row.g_ns, l_ns: row.l_ns },
+                r,
+            );
+            per_tier.push(row);
+        }
+        let c = crossover_bytes(&per_tier[0], &per_tier[1], *descs);
+        if hier {
+            cross[i] = c;
+        } else {
+            cross = [c, c];
+        }
+    }
+    Ok(ProtocolConfig::auto(cross[0], cross[1]))
 }
 
 #[cfg(test)]
@@ -341,6 +447,65 @@ mod tests {
         assert_eq!(table.lookup("hybrid/inter", 4).params.len(), 1);
         // a flat platform has no levels to separate
         assert!(run_level_probe(&Platform::rdma(), &cfg, &table).unwrap().is_empty());
+    }
+
+    /// The fitted protocol config (ISSUE 10): per-tier probe fits land
+    /// under the tier-resolved keys, the old un-tiered keys keep being
+    /// written by `run_level_probe` (deprecated, one release), and the
+    /// crossover comes out of the measured costs with the right sign —
+    /// on the simulated RDMA wire an eager descriptor saves the 16-byte
+    /// handshake and its latency but pays the receiver bounce copy, so
+    /// the fitted crossover is finite and strictly positive.
+    #[test]
+    fn fitted_protocol_fits_tier_crossover() {
+        let table = Arc::new(ProbeTable::default());
+        let cfg = ProbeConfig {
+            p: 4,
+            word_sizes: vec![8],
+            max_bytes: 1 << 16,
+            reps: 1,
+            samples: 1,
+        };
+        // flat fabric: one crossover, both thresholds
+        let proto = fitted_protocol(&Platform::rdma(), &cfg, &table).unwrap();
+        assert_eq!(proto.policy, crate::fabric::ProtocolPolicy::Auto);
+        assert_eq!(proto.eager_max_intra, proto.eager_max_inter);
+        assert!(
+            proto.eager_max_inter > 0 && proto.eager_max_inter < u64::MAX,
+            "crossover {} must be finite and positive",
+            proto.eager_max_inter
+        );
+        assert_eq!(table.lookup("rdma/rdv", 4).params.len(), 1);
+        assert_eq!(table.lookup("rdma/eager", 4).params.len(), 1);
+        // hierarchical fabric: per-level tier keys
+        let proto = fitted_protocol(&Platform::hybrid(2), &cfg, &table).unwrap();
+        assert_eq!(proto.policy, crate::fabric::ProtocolPolicy::Auto);
+        for key in ["hybrid/intra/rdv", "hybrid/intra/eager", "hybrid/inter/rdv", "hybrid/inter/eager"]
+        {
+            assert_eq!(table.lookup(key, 4).params.len(), 1, "missing tier fit {key}");
+        }
+        // the deprecated un-tiered level keys are still written
+        run_level_probe(&Platform::hybrid(2), &cfg, &table).unwrap();
+        assert_eq!(table.lookup("hybrid/intra", 4).params.len(), 1);
+    }
+
+    /// The crossover arithmetic on hand-built fits: Δℓ pays for Δg.
+    #[test]
+    fn crossover_bytes_handles_degenerate_fits() {
+        let row = |g_ns: f64, l_ns: f64| ProbeRow {
+            word_bytes: 1,
+            g_ns,
+            g_ci: 0.0,
+            l_ns,
+            l_ci: 0.0,
+        };
+        // eager saves 300 ns of fixed cost over 3 descriptors, pays an
+        // extra 0.5 ns/byte: crossover = (300/3) / 0.5 = 200 bytes
+        assert_eq!(crossover_bytes(&row(1.0, 500.0), &row(1.5, 200.0), 3), 200);
+        // no fixed saving: the eager tier is disabled
+        assert_eq!(crossover_bytes(&row(1.0, 200.0), &row(1.5, 200.0), 3), 0);
+        // no per-byte penalty either way: eager always wins
+        assert_eq!(crossover_bytes(&row(1.0, 500.0), &row(1.0, 200.0), 3), u64::MAX);
     }
 
     #[test]

@@ -35,7 +35,8 @@
 //! returns control to the caller, [`SyncEngine::sync_end`] completes
 //! delivery and the final barrier. Compute performed between the two
 //! overlaps the in-flight exchange; the engine credits
-//! `min(compute window, in-flight cost)` to [`SyncStats::overlap_ns`]. The
+//! `min(compute window, in-flight cost)` to
+//! [`SyncDiagnostics::overlap_ns`](crate::fabric::SyncDiagnostics::overlap_ns). The
 //! monolithic [`SyncEngine::superstep`] is literally `sync_begin` followed
 //! by `sync_end`, so the bulk and split paths cannot drift apart: same
 //! phases, same barriers, same accounting. Between begin and end the
@@ -54,7 +55,7 @@ use std::time::Instant;
 
 use crate::core::{LpfError, Pid, Result, SyncAttr};
 use crate::fabric::plan::{fill_outbox, OutTables, Scratch, SplitState, SyncPlan};
-use crate::fabric::SyncStats;
+use crate::fabric::{ProtocolTier, SyncStats};
 use crate::memory::SharedRegister;
 use crate::netsim::faults::FaultPlan;
 use crate::queue::Request;
@@ -67,6 +68,17 @@ use crate::sync::conflict::{
 pub trait Exchange: Send + Sync {
     /// Per-superstep read/write legality verification on/off.
     fn checked(&self) -> bool;
+
+    /// Protocol tier for one coalesced descriptor of `len` payload bytes
+    /// from `src` to `dst`, decided at queue-drain time (phase 0). The
+    /// engine stamps the result on the descriptor before it is published;
+    /// backends that price tiers distinctly override this with their
+    /// configured [`ProtocolConfig`](crate::fabric::ProtocolConfig). The
+    /// default — everything rendezvous — is the pre-tier behaviour and
+    /// remains correct for any backend.
+    fn tier_for(&self, _src: Pid, _dst: Pid, _len: usize) -> ProtocolTier {
+        ProtocolTier::Rendezvous
+    }
 
     /// Phase 1: the first meta-data exchange, *including* the barrier after
     /// which every process's outbox is published.
@@ -286,6 +298,9 @@ impl SyncEngine {
                 began_at: Instant::now(),
                 inflight_ns: 0,
                 pending_err: Some(e),
+                eager_msgs: 0,
+                eager_bytes: 0,
+                rdv_handshakes: 0,
             });
             return Ok(());
         }
@@ -294,7 +309,9 @@ impl SyncEngine {
         // A validation failure here happens before any barrier: abort so
         // peers observe PeerAborted instead of hanging at the meta barrier
         // (matters for direct Fabric users; Context pre-validates pids).
-        let sent = match fill_outbox(self.p, pid, reqs, self.coalescing(), s, &plan.outbox) {
+        let tier_for = |dst: Pid, len: usize| ex.tier_for(pid, dst, len);
+        let sent = match fill_outbox(self.p, pid, reqs, self.coalescing(), &tier_for, s, &plan.outbox)
+        {
             Ok(n) => n,
             Err(e) => {
                 ex.abort_peers(pid);
@@ -405,6 +422,9 @@ impl SyncEngine {
             began_at: Instant::now(),
             inflight_ns,
             pending_err: None,
+            eager_msgs: s.tier_eager_msgs,
+            eager_bytes: s.tier_eager_bytes,
+            rdv_handshakes: s.tier_rdv_msgs,
         });
         Ok(())
     }
@@ -479,9 +499,21 @@ impl SyncEngine {
             // Overlap credit: communication cost genuinely hidden behind
             // the caller's compute window. Capped by the in-flight cost so
             // a long compute window never inflates it, and ~0 on the bulk
-            // path (empty window). Wall-clock-derived, hence excluded from
-            // SyncStats equality.
-            st.overlap_ns += compute_ns.min(split.inflight_ns);
+            // path (empty window). Wall-clock-derived, hence diagnostic
+            // (excluded from SyncStats equality).
+            st.diag.overlap_ns += compute_ns.min(split.inflight_ns);
+            // Tier accounting is uniform and engine-side: outgoing
+            // coalesced descriptors tallied at classification (phase 0),
+            // so every backend reports identical counters for identical
+            // workloads. A rendezvous-classified descriptor costs exactly
+            // one handshake (trim notice for a put, get-request for a get).
+            st.diag.eager_msgs += split.eager_msgs;
+            st.diag.eager_bytes += split.eager_bytes;
+            st.diag.rendezvous_handshakes += split.rdv_handshakes;
+            // Registration-cache counters are cumulative over the scratch
+            // lifetime (a job); mirror, don't accumulate.
+            st.diag.reg_cache_hits = s.reg_cache.hits();
+            st.diag.reg_cache_misses = s.reg_cache.misses();
         }
 
         // ---- phase 4: final barrier.

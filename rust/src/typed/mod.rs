@@ -243,7 +243,7 @@ impl Context {
     /// [`Epoch`] in `stage`, then run `compute` while the data exchange is
     /// in flight, completing the fence when it returns. The communication
     /// cost hidden behind `compute` is credited to
-    /// [`SyncStats::overlap_ns`](crate::fabric::SyncStats::overlap_ns).
+    /// [`SyncDiagnostics::overlap_ns`](crate::fabric::SyncDiagnostics::overlap_ns).
     ///
     /// Slot-quiescence is enforced *statically*: `compute` is a plain
     /// closure with no epoch or context access, so it cannot read or write

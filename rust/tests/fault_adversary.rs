@@ -6,7 +6,8 @@
 //! * the fault-free differential matrix is clean — one SPMD program is
 //!   bit-identical on shared / rdma / msg / hybrid / hybrid-fat (the
 //!   last two routed over NumaPair and FatTree topologies), cold and
-//!   warm;
+//!   warm, under every protocol-tier policy (forced rendezvous, forced
+//!   eager, mixed auto);
 //! * injected reportable faults end in a clean `LpfError` of the same
 //!   class everywhere, one pool cold-rebuild, and a recovered team;
 //! * injected absorbed faults are invisible in memory and statistics;
@@ -23,7 +24,7 @@ use lpf::pool::Pool;
 fn no_fault_differential_matrix_is_clean() {
     let r = differential(4, 1, None);
     assert!(r.ok(), "violations: {:#?}", r.violations);
-    assert_eq!(r.cases.len(), 20, "5 backends x cold/warm x bulk/split");
+    assert_eq!(r.cases.len(), 60, "5 backends x cold/warm x bulk/split x rdv/eager/auto");
     assert!(r.cases.iter().all(|c| c.class() == "ok" && c.recovered));
 }
 
